@@ -1,0 +1,30 @@
+//! End-to-end "regenerate the paper" bench: times each experiment
+//! harness at smoke scale (one sample per table/figure family).  This is
+//! the `cargo bench` entry point mapping DESIGN.md §4's experiment index
+//! to executable code; full-scale regeneration uses
+//! `mutransfer exp <id> --preset ci|paper`.
+
+use std::time::Instant;
+
+use mutransfer::exp::{self, Scale};
+use mutransfer::report::Reporter;
+use mutransfer::runtime::Runtime;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&mutransfer::artifacts_dir())?;
+    let dir = std::env::temp_dir().join("mutransfer_bench_results");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut rep = Reporter::new(dir);
+    rep.quiet = true;
+    let scale = Scale::smoke();
+    // one representative per experiment family (full list: exp::ALL)
+    let ids = ["tab8", "fig5", "fig1", "fig3", "fig7", "tab4", "tab12", "fig21"];
+    println!("== fig_tables: experiment harness end-to-end (smoke scale) ==");
+    for id in ids {
+        let t0 = Instant::now();
+        exp::run(id, &rt, &rep, &scale)?;
+        println!("{id:<8} {:.2} s", t0.elapsed().as_secs_f64());
+    }
+    println!("all harnesses OK");
+    Ok(())
+}

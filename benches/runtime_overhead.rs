@@ -1,0 +1,70 @@
+//! Runtime overhead breakdown: what fraction of a training step is the
+//! coordinator (literal marshalling, tuple decompose, batch synthesis)
+//! vs PJRT execution?  The L3 perf target (DESIGN.md §7) is coordinator
+//! share < 5% — i.e. the paper's contribution never bottlenecks the math.
+
+use std::time::{Duration, Instant};
+
+use mutransfer::data::{source_for, Split};
+use mutransfer::init;
+use mutransfer::model::BaseShape;
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::runtime::session::StepInputs;
+use mutransfer::runtime::{Runtime, TrainSession};
+use mutransfer::util::bench::{bench_print, fmt_ns};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&mutransfer::artifacts_dir())?;
+    let variant = "tfm_post_w128_d2";
+    let v = rt.manifest().get(variant)?.clone();
+    let par = Parametrization::mup(Optimizer::Adam);
+    let hp = HyperParams::default();
+    let base = BaseShape::SameAsTarget;
+
+    // 1. executable compile time (amortized across a whole sweep)
+    let t0 = Instant::now();
+    let rt2 = Runtime::new(&mutransfer::artifacts_dir())?;
+    let _ = rt2.executable(variant)?;
+    println!("pjrt_compile/{variant}: {}", fmt_ns(t0.elapsed().as_nanos() as f64));
+
+    // 2. session init (param gen + upload)
+    let s = bench_print("init_params+upload", Duration::from_secs(2), || {
+        let params = init::init_params(&v, &par, &hp, &base, 0);
+        let _ = TrainSession::new(&rt, variant, params).unwrap();
+    });
+    let _ = s;
+
+    // 3. full step vs its host-only parts
+    let params = init::init_params(&v, &par, &hp, &base, 0);
+    let lr_vec = init::lr_vec(&v, &par, &hp, &base);
+    let mut session = TrainSession::new(&rt, variant, params)?;
+    let data = source_for(&v, 0);
+    let inputs = StepInputs {
+        lr_vec,
+        hp_vec: [0.0625, 1.0, 1.0, 0.9, 0.999, 1e-8, 0.0, 1.0],
+    };
+    let mut i = 0usize;
+    let full = bench_print("full_step", Duration::from_secs(4), || {
+        let b = data.batch(Split::Train, i);
+        i += 1;
+        session.step(&b, &inputs).unwrap();
+    });
+    let mut j = 0usize;
+    let host = bench_print("host_only(batch_gen)", Duration::from_millis(400), || {
+        let _ = data.batch(Split::Train, j);
+        j += 1;
+    });
+    // literal round-trip estimate: copy all params to host and back
+    let n_tensors = v.n_params();
+    let lit = bench_print("state_readback(all params)", Duration::from_secs(1), || {
+        for k in 0..n_tensors {
+            let _ = session.param(k).unwrap();
+        }
+    });
+    let coord_share = (host.median_ns + lit.median_ns) / full.median_ns * 100.0;
+    println!(
+        "\ncoordinator share of step (batch gen + full state readback bound): {coord_share:.1}%"
+    );
+    println!("(the in-step literal marshalling is bounded above by the readback number)");
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Per-step latency across widths — the L3 perf-pass workhorse
+//! (EXPERIMENTS.md §Perf).  Breaks a train step into its host-side
+//! components (batch gen, literal marshalling) vs PJRT execution so the
+//! coordinator's overhead is directly visible.
+
+use std::time::Duration;
+
+use mutransfer::data::{source_for, Split};
+use mutransfer::init;
+use mutransfer::model::BaseShape;
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::runtime::session::StepInputs;
+use mutransfer::runtime::{Runtime, TrainSession};
+use mutransfer::util::bench::bench_print;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&mutransfer::artifacts_dir())?;
+    let budget = Duration::from_secs(3);
+    println!("== step_latency: end-to-end train step by width ==");
+    let mut results = Vec::new();
+    for w in [32usize, 64, 128, 256] {
+        let variant = format!("tfm_post_w{w}_d2");
+        let v = rt.manifest().get(&variant)?.clone();
+        let par = Parametrization::mup(Optimizer::Adam);
+        let hp = HyperParams {
+            lr: 1e-3,
+            ..HyperParams::default()
+        };
+        let base = BaseShape::SameAsTarget;
+        let params = init::init_params(&v, &par, &hp, &base, 0);
+        let lr_vec = init::lr_vec(&v, &par, &hp, &base);
+        let mut session = TrainSession::new(&rt, &variant, params)?;
+        let data = source_for(&v, 0);
+        let inputs = StepInputs {
+            lr_vec,
+            hp_vec: [0.125, 1.0, 1.0, 0.9, 0.999, 1e-8, 0.0, 1.0],
+        };
+        let mut step = 0usize;
+        let s = bench_print(&format!("train_step/{variant}"), budget, || {
+            let batch = data.batch(Split::Train, step);
+            step += 1;
+            session.step(&batch, &inputs).unwrap();
+        });
+        let gflops = v.flops_per_step() / s.median_ns;
+        println!("    -> {:.2} effective GFLOP/s", gflops);
+        results.push((w, s.median_ns, gflops));
+
+        // host-side component: batch generation only
+        let mut step2 = 0usize;
+        bench_print(&format!("batch_gen/{variant}"), Duration::from_millis(300), || {
+            let _ = data.batch(Split::Train, step2);
+            step2 += 1;
+        });
+    }
+    println!("\nwidth, median_step_ms, effective_gflops");
+    for (w, ns, g) in results {
+        println!("{w}, {:.2}, {:.2}", ns / 1e6, g);
+    }
+    Ok(())
+}

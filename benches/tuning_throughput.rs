@@ -1,0 +1,71 @@
+//! Tuning-throughput bench (Tables 4-7 operational core): trials/minute
+//! of the sweep scheduler on the proxy model, plus journal-resume
+//! overhead — the numbers that determine how long a 256-sample BERT-style
+//! search (App. F.3) takes on given hardware.
+
+use std::time::Instant;
+
+use mutransfer::init::rng::Rng;
+use mutransfer::model::BaseShape;
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::report::Reporter;
+use mutransfer::runtime::Runtime;
+use mutransfer::sweep::{Job, Sweep};
+use mutransfer::train::{RunSpec, Schedule};
+use mutransfer::tuner::SearchSpace;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&mutransfer::artifacts_dir())?;
+    let dir = std::env::temp_dir().join("mutransfer_bench_tuning");
+    let _ = std::fs::remove_dir_all(&dir);
+    let rep = Reporter::new(dir);
+    let journal = rep.path("bench.journal");
+
+    let space = SearchSpace::iwslt_like();
+    let mut rng = Rng::new(1);
+    let base = BaseShape::Tfm {
+        d_model: 32,
+        n_head: 4,
+        d_head: 8,
+        d_ffn: 128,
+    };
+    let jobs: Vec<Job> = (0..6)
+        .map(|i| {
+            let a = space.sample(&mut rng);
+            let mut spec = RunSpec::new(
+                "tfm_post_w32_d2",
+                Parametrization::mup(Optimizer::Adam),
+                a.apply(HyperParams::default()),
+                base.clone(),
+            );
+            spec.steps = 10;
+            spec.eval_every = 5;
+            Job {
+                key: format!("bench/{i}"),
+                spec,
+                assignment: a,
+                data_seed: 1,
+            }
+        })
+        .collect();
+
+    let t0 = Instant::now();
+    let mut sweep = Sweep::new(&rt).with_journal(&journal)?;
+    let r1 = sweep.run(&jobs)?;
+    let cold = t0.elapsed().as_secs_f64();
+    println!(
+        "cold sweep: {} trials x 10 steps in {cold:.2}s -> {:.1} trials/min (w32 proxy)",
+        r1.len(),
+        r1.len() as f64 / cold * 60.0
+    );
+
+    // journal resume: everything cached, should be ~instant
+    let t1 = Instant::now();
+    let mut sweep2 = Sweep::new(&rt).with_journal(&journal)?;
+    let r2 = sweep2.run(&jobs)?;
+    let warm = t1.elapsed().as_secs_f64();
+    assert_eq!(r1.len(), r2.len());
+    println!("journal resume: {warm:.3}s (cold/warm speedup {:.0}x)", cold / warm.max(1e-9));
+    assert!(warm < cold / 5.0, "journal resume should be much faster");
+    Ok(())
+}

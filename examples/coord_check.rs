@@ -1,0 +1,81 @@
+//! Coordinate-checking demo (Appendix D.1): how to *debug* a μP
+//! implementation, plus the reverse-μTransfer trick (Appendix I) for
+//! replicating large-model instability on a small model.
+//!
+//!     cargo run --release --example coord_check
+
+use mutransfer::coordcheck::{coord_check, growth_exponents, passes_mup_check};
+use mutransfer::data::source_for;
+use mutransfer::model::BaseShape;
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::runtime::Runtime;
+use mutransfer::train::{run, RunSpec};
+use mutransfer::transfer::reverse_spec;
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&mutransfer::artifacts_dir())?;
+    let widths = [32usize, 64, 128];
+
+    for (label, mup) in [("SP", false), ("μP", true)] {
+        let mut records = Vec::new();
+        for &w in &widths {
+            let variant = format!("tfm_post_w{w}_d2__coord");
+            let par = if mup {
+                Parametrization::mup(Optimizer::Adam)
+            } else {
+                Parametrization::standard(Optimizer::Adam)
+            };
+            let base = if mup {
+                BaseShape::Tfm {
+                    d_model: 32,
+                    n_head: 4,
+                    d_head: 8,
+                    d_ffn: 128,
+                }
+            } else {
+                BaseShape::SameAsTarget
+            };
+            let hp = HyperParams {
+                lr: 2f64.powi(-7),
+                ..HyperParams::default()
+            };
+            let mut spec = RunSpec::new(&variant, par, hp, base);
+            spec.seed = 1;
+            let v = rt.manifest().get(&variant)?;
+            let data = source_for(v, 5);
+            records.push(coord_check(&rt, &spec, data.as_ref(), 4)?);
+        }
+        let exps = growth_exponents(&records);
+        println!("\n{label}: Δ-coordinate growth exponents over widths {widths:?}:");
+        for (probe, e) in &exps {
+            println!("  {probe:<16} {e:+.3} {}", if *e >= 0.2 { "← BLOWS UP with width" } else { "" });
+        }
+        let pass = passes_mup_check(&exps, 0.2);
+        println!("  verdict: {}", if pass { "PASSES the μP check" } else { "FAILS the μP check" });
+        assert_eq!(pass, mup, "SP must fail and μP must pass");
+    }
+
+    // Reverse-μTransfer: replicate a wide model's instability cheaply.
+    println!("\nreverse-μTransfer: running w32 with simulated width 128 at an aggressive LR");
+    let hp = HyperParams {
+        lr: 2f64.powi(-4),
+        ..HyperParams::default()
+    };
+    let sim = BaseShape::Tfm {
+        d_model: 128,
+        n_head: 4,
+        d_head: 32,
+        d_ffn: 512,
+    };
+    let spec = reverse_spec("tfm_post_w32_d2", sim, Optimizer::Adam, hp.clone(), 30, 1);
+    let v = rt.manifest().get("tfm_post_w32_d2")?;
+    let data = source_for(v, 5);
+    let r = run(&rt, &spec, data.as_ref())?;
+    println!(
+        "  simulated-width run: diverged={} final={:.4} (compare a real SP w128 run at the same LR)",
+        r.diverged,
+        r.final_train_loss()
+    );
+    println!("coord_check OK");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! Quickstart: train a small μP Transformer LM through the full stack
+//! (Rust coordinator → PJRT → AOT-compiled JAX/Pallas artifact).
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! What it demonstrates:
+//!  1. loading the artifact manifest,
+//!  2. μP initialization + per-tensor learning rates from the rule engine,
+//!  3. a training loop on the synthetic corpus with validation evals.
+
+use mutransfer::data::source_for;
+use mutransfer::model::BaseShape;
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::runtime::Runtime;
+use mutransfer::train::{run, RunSpec, Schedule};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&mutransfer::artifacts_dir())?;
+
+    // A width-64 Transformer in μP with base width 32: HPs tuned at w32
+    // would transfer here unchanged (and to w512, and beyond).
+    let variant = "tfm_post_w64_d2";
+    let par = Parametrization::mup(Optimizer::Adam);
+    let hp = HyperParams {
+        lr: 2e-3,
+        ..HyperParams::default()
+    };
+    let base = BaseShape::Tfm {
+        d_model: 32,
+        n_head: 4,
+        d_head: 8,
+        d_ffn: 128,
+    };
+    let mut spec = RunSpec::new(variant, par, hp, base);
+    spec.steps = 60;
+    spec.eval_every = 15;
+    spec.schedule = Schedule::Cosine;
+
+    let v = rt.manifest().get(variant)?;
+    println!(
+        "training {variant}: {} params, {:.2} GFLOPs/step, μP base w32",
+        v.total_numel(),
+        v.flops_per_step() / 1e9
+    );
+    let data = source_for(v, 42);
+    let r = run(&rt, &spec, data.as_ref())?;
+
+    println!("\nstep   train-loss");
+    for (i, l) in r.train_losses.iter().enumerate() {
+        if i % 10 == 0 || i + 1 == r.train_losses.len() {
+            println!("{i:>4}   {l:.4}");
+        }
+    }
+    println!("\nvalidation curve:");
+    for (s, l) in &r.val_losses {
+        println!("  step {s:>4}: {l:.4}");
+    }
+    println!(
+        "\nfinal train {:.4} | best val {:.4} | {:.1}s | {:.2} GFLOPs total",
+        r.final_train_loss(),
+        r.best_val_loss(),
+        r.wall_secs,
+        r.flops / 1e9
+    );
+    assert!(!r.diverged, "quickstart diverged — check artifacts");
+    assert!(
+        r.final_train_loss() < r.train_losses[0],
+        "loss did not improve"
+    );
+    println!("quickstart OK");
+    Ok(())
+}

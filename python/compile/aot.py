@@ -1,0 +1,345 @@
+"""AOT compiler: lower every model variant to HLO text + manifest.json.
+
+This is the *only* place Python touches the lifecycle: ``make artifacts``
+runs it once, producing ``artifacts/<variant>.hlo.txt`` files plus a
+``manifest.json`` describing each variant's calling convention (parameter
+layout, μP roles, fan-in/out, data inputs, probe outputs and golden
+values).  The Rust coordinator loads the manifest and never imports Python.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Usage (from ``python/``):
+    python -m compile.aot --out-dir ../artifacts [--only REGEX] [--list]
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+
+# ---------------------------------------------------------------------------
+# variant registry
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Variant:
+    name: str
+    arch: str  # transformer | mlp | resmlp
+    kind: str  # train | eval | coord
+    cfg: object
+    golden_seed: int = 0  # >0: embed golden loss values in the manifest
+
+
+def _tfm(name, golden=0, **kw):
+    cfg = M.TransformerConfig(**kw)
+    out = [
+        Variant(name, "transformer", "train", cfg, golden_seed=golden),
+        Variant(name + "__eval", "transformer", "eval", cfg),
+    ]
+    return out
+
+
+def _tfm_coord(name, **kw):
+    return [Variant(name + "__coord", "transformer", "coord", M.TransformerConfig(**kw))]
+
+
+def _mlp(name, golden=0, **kw):
+    cfg = M.MlpConfig(**kw)
+    return [
+        Variant(name, "mlp", "train", cfg, golden_seed=golden),
+        Variant(name + "__eval", "mlp", "eval", cfg),
+    ]
+
+
+def _resmlp(name, **kw):
+    cfg = M.ResMlpConfig(**kw)
+    return [
+        Variant(name, "resmlp", "train", cfg),
+        Variant(name + "__eval", "resmlp", "eval", cfg),
+    ]
+
+
+def build_registry() -> list:
+    """The full artifact set, keyed to DESIGN.md §4's experiment index.
+
+    Width sweeps keep n_head fixed and scale d_head (the paper's default
+    width definition), except the `nh` family which fixes d_head and scales
+    n_head (Fig. 13).  d_ffn = 4·d_model unless overridden (Fig. 12).
+    """
+    v: list = []
+
+    def tfm_dims(w):
+        return dict(d_model=w, n_head=4, d_head=w // 4, d_ffn=4 * w)
+
+    # Post-LN width family (Fig. 1 / Fig. 5 / Fig. 7 / Tab. 4 style)
+    for w in [32, 64, 128, 256, 512]:
+        v += _tfm(f"tfm_post_w{w}_d2", ln="post", n_layer=2, golden=(7 if w == 32 else 0), **tfm_dims(w))
+        v += _tfm_coord(f"tfm_post_w{w}_d2", ln="post", n_layer=2, **tfm_dims(w))
+    # Pre-LN width family (Fig. 4 / Fig. 6 / Fig. 19 / Tab. 7 proxy)
+    for w in [32, 64, 128, 256, 512]:
+        v += _tfm(f"tfm_pre_w{w}_d2", ln="pre", n_layer=2, **tfm_dims(w))
+    v += _tfm_coord("tfm_pre_w128_d2", ln="pre", n_layer=2, **tfm_dims(128))
+    # Depth family at w128 (Fig. 4 depth transfer; pre-LN only — §6.1)
+    for d in [4, 8]:
+        v += _tfm(f"tfm_pre_w128_d{d}", ln="pre", n_layer=d, **tfm_dims(128))
+    # Sequence-length / batch-size transfer (Fig. 19)
+    for s in [16, 64]:
+        v += _tfm(f"tfm_pre_w128_d2_s{s}", ln="pre", n_layer=2, seq=s, **tfm_dims(128))
+    for b in [8, 32]:
+        v += _tfm(f"tfm_pre_w128_d2_b{b}", ln="pre", n_layer=2, batch=b, **tfm_dims(128))
+    # d_head ablation (Fig. 10): tiny d_head at fixed width
+    v += _tfm("tfm_pre_w128_d2_hd4", ln="pre", n_layer=2, d_model=128, n_head=4, d_head=4, d_ffn=512)
+    # n_head-as-width family (Fig. 13): fix d_head=16, scale n_head
+    for nh in [2, 4, 8, 16]:
+        v += _tfm(
+            f"tfm_pre_nh{nh}_hd16",
+            ln="pre",
+            n_layer=2,
+            d_model=16 * nh,
+            n_head=nh,
+            d_head=16,
+            d_ffn=64 * nh,
+        )
+    # d_ffn-ratio family (Fig. 12): vary width ratio at fixed d_model
+    for f in [128, 256, 1024, 2048]:
+        v += _tfm(f"tfm_pre_w128_d2_f{f}", ln="pre", n_layer=2, d_model=128, n_head=4, d_head=32, d_ffn=f)
+    # Tab. 6 (BERT-style) targets: scale width AND depth from the w64_d2 proxy
+    v += _tfm("tfm_pre_w256_d4", ln="pre", n_layer=4, **tfm_dims(256))
+    v += _tfm("tfm_pre_w512_d6", ln="pre", n_layer=6, **tfm_dims(512))
+    # Tab. 7 (GPT-3-style) target + the end-to-end example model
+    v += _tfm("tfm_pre_w512_d4", ln="pre", n_layer=4, **tfm_dims(512))
+
+    # MLP family (Fig. 3 / Fig. 9)
+    for w in [64, 128, 256, 512, 1024, 2048]:
+        v += _mlp(f"mlp_w{w}", width=w, golden=(11 if w == 64 else 0))
+    for w in [64, 256, 1024]:
+        v += _mlp(f"mlp_tanh_w{w}", width=w, act="tanh")
+        v += _mlp(f"mlp_tanhmse_w{w}", width=w, act="tanh", loss="mse")
+
+    # ResMLP family (Tab. 12 ResNet substitute)
+    for w in [32, 64, 128, 256]:
+        v += _resmlp(f"resmlp_w{w}", width=w)
+
+    names = [x.name for x in v]
+    assert len(names) == len(set(names)), "duplicate variant names"
+    return v
+
+
+# ---------------------------------------------------------------------------
+# lowering
+# ---------------------------------------------------------------------------
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(int(x) for x in shape), dtype)
+
+
+def variant_io(var: Variant):
+    """(step_fn, input_specs, param_specs, data_inputs, n_state, probes)."""
+    cfg = var.cfg
+    if var.arch == "transformer":
+        pspecs = M.transformer_param_specs(cfg)
+        train, evl, coord = M.make_transformer_steps(cfg)
+        data = [("tokens", "i32", (cfg.batch, cfg.seq + 1))]
+        dspecs = [_spec((cfg.batch, cfg.seq + 1), jnp.int32)]
+        n_state = 2
+        fn = {"train": train, "eval": evl, "coord": coord}[var.kind]
+        probes = (
+            ["embed_out", "attn_logits_l0", "block_out", "logits"]
+            if var.kind == "coord"
+            else []
+        )
+    else:
+        if var.arch == "mlp":
+            pspecs = M.mlp_param_specs(cfg)
+            train, evl = M.make_mlp_steps(cfg)
+        else:
+            pspecs = M.resmlp_param_specs(cfg)
+            train, evl = M.make_resmlp_steps(cfg)
+        data = [
+            ("x", "f32", (cfg.batch, cfg.d_in)),
+            ("y", "i32", (cfg.batch,)),
+        ]
+        dspecs = [
+            _spec((cfg.batch, cfg.d_in)),
+            _spec((cfg.batch,), jnp.int32),
+        ]
+        n_state = 1
+        fn = {"train": train, "eval": evl}[var.kind]
+        probes = []
+
+    p = len(pspecs)
+    arg_specs = list(dspecs) + [_spec(s.shape) for s in pspecs]
+    if var.kind in ("train", "coord"):
+        for _ in range(n_state):
+            arg_specs += [_spec(s.shape) for s in pspecs]
+        arg_specs += [_spec((p,)), _spec((M.HP_LEN,))]
+    else:
+        arg_specs += [_spec((M.HP_LEN,))]
+    return fn, arg_specs, pspecs, data, n_state, probes
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def compute_golden(var: Variant, pspecs, n_state):
+    """Run two train steps with deterministically-filled inputs and record
+    the losses; the Rust integration tests replicate this exactly through
+    the PJRT path (rust/tests/golden.rs)."""
+    cfg = var.cfg
+    seed = var.golden_seed
+    params = [M.det_fill(s.shape, seed + i, 0.02) for i, s in enumerate(pspecs)]
+    states = [jnp.zeros(s.shape, jnp.float32) for _ in range(n_state) for s in pspecs]
+    p = len(pspecs)
+    lr_vec = jnp.full((p,), 1e-2 if n_state == 1 else 1e-3, jnp.float32)
+    if var.arch == "transformer":
+        hp = jnp.array([0.125, 1.0, 1.0, 0.9, 0.999, 1e-8, 0.0, 1.0], jnp.float32)
+        data = [M.det_tokens(cfg.batch, cfg.seq + 1, cfg.vocab, seed + 100)]
+        fn = M.make_transformer_steps(cfg)[0]
+    else:
+        hp = jnp.array([1.0, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0], jnp.float32)
+        x = M.det_fill((cfg.batch, cfg.d_in), seed + 100, 1.0)
+        y = M.det_tokens(cfg.batch, 1, cfg.d_out, seed + 200).reshape(cfg.batch)
+        data = [x, y]
+        fn = (M.make_mlp_steps(cfg) if var.arch == "mlp" else M.make_resmlp_steps(cfg))[0]
+
+    fn = jax.jit(fn)
+    losses = []
+    for step in range(2):
+        if var.arch == "transformer":
+            hp = hp.at[M.HP_STEP].set(float(step + 1))
+        out = fn(*data, *params, *states, lr_vec, hp)
+        losses.append(float(out[0]))
+        params = list(out[1 : 1 + p])
+        states = list(out[1 + p : 1 + p + n_state * p])
+    return {"seed": seed, "losses": losses, "lr": float(lr_vec[0])}
+
+
+def variant_manifest(var: Variant, pspecs, data, n_state, probes, hlo_file, golden):
+    cfg = dataclasses.asdict(var.cfg)
+    return {
+        "name": var.name,
+        "arch": var.arch,
+        "kind": var.kind,
+        "opt": "adam" if var.arch == "transformer" else "sgd",
+        "hlo": hlo_file,
+        "config": cfg,
+        "data_inputs": [
+            {"name": n, "dtype": d, "shape": list(s)} for n, d, s in data
+        ],
+        "n_state": n_state,
+        "probes": probes,
+        "params": [
+            {
+                "name": s.name,
+                "shape": list(s.shape),
+                "role": s.role,
+                "fan_in": s.fan_in,
+                "fan_out": s.fan_out,
+                "init": s.init,
+            }
+            for s in pspecs
+        ],
+        "golden": golden,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="regex filter on variant names")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--force", action="store_true", help="re-lower even if fresh")
+    args = ap.parse_args(argv)
+
+    registry = build_registry()
+    rx = re.compile(args.only) if args.only else None
+    if args.list:
+        for v in registry:
+            if rx is None or rx.search(v.name):
+                print(f"{v.name:40s} {v.arch:12s} {v.kind}")
+        return 0
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    # Incrementality: reuse existing manifest entries whose HLO file is
+    # newer than every compile/ source file.
+    src_mtime = max(
+        os.path.getmtime(os.path.join(root, f))
+        for root, _, files in os.walk(os.path.dirname(__file__))
+        for f in files
+        if f.endswith(".py")
+    )
+    old = {}
+    if os.path.exists(manifest_path) and not args.force:
+        with open(manifest_path) as fh:
+            old = {e["name"]: e for e in json.load(fh)["variants"]}
+
+    entries = []
+    t_total = time.time()
+    for var in registry:
+        hlo_file = f"{var.name}.hlo.txt"
+        hlo_path = os.path.join(args.out_dir, hlo_file)
+        requested = rx is None or rx.search(var.name)
+        fresh = (
+            var.name in old
+            and os.path.exists(hlo_path)
+            and os.path.getmtime(hlo_path) >= src_mtime
+        )
+        if not requested:
+            # Keep whatever we already have for unrequested variants so a
+            # filtered run never shrinks the manifest.
+            if var.name in old and os.path.exists(hlo_path):
+                entries.append(old[var.name])
+            continue
+        if fresh and not args.force:
+            entries.append(old[var.name])
+            continue
+        t0 = time.time()
+        fn, arg_specs, pspecs, data, n_state, probes = variant_io(var)
+        lowered = jax.jit(fn).lower(*arg_specs)
+        text = to_hlo_text(lowered)
+        with open(hlo_path, "w") as fh:
+            fh.write(text)
+        golden = None
+        if var.golden_seed and var.kind == "train":
+            golden = compute_golden(var, pspecs, n_state)
+        entries.append(
+            variant_manifest(var, pspecs, data, n_state, probes, hlo_file, golden)
+        )
+        print(
+            f"lowered {var.name:40s} {len(text) / 1e6:6.2f} MB  "
+            f"{time.time() - t0:5.1f}s",
+            flush=True,
+        )
+
+    with open(manifest_path, "w") as fh:
+        json.dump({"version": 1, "variants": entries}, fh, indent=1)
+    print(f"manifest: {manifest_path} ({len(entries)} variants, "
+          f"{time.time() - t_total:.0f}s total)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+"""L1: Pallas kernels for the μTransfer reproduction.
+
+Public surface used by the L2 graphs (``compile.model``):
+
+- :func:`matmul.linear` / :func:`matmul.matmul` — tiled MXU matmul (custom VJP)
+- :func:`attention.attention` — fused causal attention with runtime logit
+  scale (the μP 1/d vs SP 1/sqrt(d) switch of Definition 4.1)
+- :func:`layernorm.layernorm` — row-blocked layernorm (custom VJP)
+- :func:`optim.adam_update` / :func:`optim.sgd_update` — fused per-tensor-LR
+  optimizer steps
+
+All kernels lower with ``interpret=True`` (CPU PJRT has no Mosaic); see
+``common.INTERPRET``.
+"""
+
+from .attention import attention, attention_core  # noqa: F401
+from .layernorm import layernorm  # noqa: F401
+from .matmul import linear, matmul  # noqa: F401
+from .optim import adam_update, sgd_update  # noqa: F401

@@ -1,0 +1,174 @@
+"""Fused causal self-attention as Pallas kernels, with custom VJP.
+
+The μP-critical piece of the whole model: Definition 4.1 replaces the
+standard 1/sqrt(d) attention-logit scaling with 1/d (times the tunable
+α_attn and the base-width compatibility factor sqrt(d_head,0)).  The scale
+is a *runtime scalar input* to the lowered graph — the same compiled
+artifact serves SP (1/sqrt(d)) and μP (1/d) by feeding a different value —
+so here the kernel takes pre-scaled queries and is parametrization-agnostic.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid over (batch*heads); each
+step stages the whole (S, d_head) q/k/v tiles plus the (S, S) logit tile in
+VMEM and runs two MXU matmuls around a row softmax.  At our sizes
+(S <= 128, d_head <= 192) that is <= 0.4 MiB resident — a flash-style
+S-blocked online softmax is unnecessary (documented VMEM check in
+tests/test_kernels.py::test_attention_vmem_budget).
+
+Forward returns the (masked, pre-softmax) attention logits as a secondary
+output: the coordinate-checking experiments (Fig. 5) probe exactly this
+tensor, and the backward kernel consumes the saved probabilities.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+NEG_INF = -1e30
+
+
+def _attn_fwd_kernel(q_ref, k_ref, v_ref, o_ref, p_ref, l_ref):
+    # Block carries G heads at once: (G, S, dh).  Batched MXU contractions
+    # via dot_general keep each grid step coarse (perf iter 2 in
+    # EXPERIMENTS.md §Perf: one head per step left the interpret-mode grid
+    # dominated by dispatch).
+    q = q_ref[...]  # (G, S, dh) — queries arrive pre-scaled
+    k = k_ref[...]
+    v = v_ref[...]
+    s = q.shape[1]
+    logits = jax.lax.dot_general(
+        q, k, (((2,), (2,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )  # (G, S, S)
+    row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    causal = (col <= row)[None]
+    masked = jnp.where(causal, logits, NEG_INF)
+    m = jnp.max(masked, axis=-1, keepdims=True)
+    e = jnp.exp(masked - m)
+    p = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jax.lax.dot_general(
+        p, v, (((2,), (1,)), ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    p_ref[...] = p
+    # Emit 0 (not -inf) on masked entries so coordinate statistics over the
+    # logit tensor are finite; Fig. 5 measures the causal (live) entries'
+    # scale and the zeros dilute uniformly across widths.
+    l_ref[...] = jnp.where(causal, logits, 0.0)
+
+
+def _attn_bwd_kernel(q_ref, k_ref, v_ref, p_ref, do_ref, dl_ref, dq_ref, dk_ref, dv_ref):
+    q = q_ref[...]
+    k = k_ref[...]
+    v = v_ref[...]
+    p = p_ref[...]
+    do = do_ref[...]
+    dl_direct = dl_ref[...]  # cotangent of the emitted logits output (usually 0)
+    s = q.shape[1]
+
+    bmm = lambda a, b, dims: jax.lax.dot_general(
+        a, b, (dims, ((0,), (0,))), preferred_element_type=jnp.float32
+    )
+    # dv = p^T @ do per head: contract over the query axis
+    dv_ref[...] = bmm(p, do, ((1,), (1,)))
+    dp = bmm(do, v, ((2,), (2,)))
+    # softmax jacobian: dlogits = p * (dp - sum(dp * p, axis=-1))
+    dl = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    causal = (col <= row)[None]
+    dl = dl + jnp.where(causal, dl_direct, 0.0)
+    dq_ref[...] = bmm(dl, k, ((2,), (1,)))
+    dk_ref[...] = bmm(dl, q, ((1,), (1,)))
+
+
+def _flatten(q):
+    b, h, s, dh = q.shape
+    return q.reshape(b * h, s, dh), (b, h, s, dh)
+
+
+def _attn_call_fwd(qs, k, v):
+    q2, (b, h, s, dh) = _flatten(qs)
+    k2, _ = _flatten(k)
+    v2, _ = _flatten(v)
+    bh = b * h
+    g = pick_block(bh, 16)
+    spec_qkv = pl.BlockSpec((g, s, dh), lambda i: (i, 0, 0))
+    spec_ss = pl.BlockSpec((g, s, s), lambda i: (i, 0, 0))
+    out, p, logits = pl.pallas_call(
+        _attn_fwd_kernel,
+        in_specs=[spec_qkv, spec_qkv, spec_qkv],
+        out_specs=[spec_qkv, spec_ss, spec_ss],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s, s), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s, s), jnp.float32),
+        ],
+        interpret=INTERPRET,
+        grid=(bh // g,),
+    )(q2, k2, v2)
+    shape4 = (b, h, s, dh)
+    return out.reshape(shape4), p.reshape(b, h, s, s), logits.reshape(b, h, s, s)
+
+
+@jax.custom_vjp
+def attention_core(qs, k, v):
+    """Causal attention on pre-scaled queries.
+
+    Returns (context, attn_logits).  ``attn_logits`` is the masked
+    pre-softmax logit tensor used by coordinate checking; it participates
+    in autodiff (zero cotangent when unused).
+    """
+    out, _p, logits = _attn_call_fwd(qs, k, v)
+    return out, logits
+
+
+def _attention_fwd(qs, k, v):
+    out, p, logits = _attn_call_fwd(qs, k, v)
+    return (out, logits), (qs, k, v, p)
+
+
+def _attention_bwd(res, cts):
+    do, dlogits = cts
+    qs, k, v, p = res
+    b, h, s, dh = qs.shape
+    bh = b * h
+    g = pick_block(bh, 16)
+    spec_qkv = pl.BlockSpec((g, s, dh), lambda i: (i, 0, 0))
+    spec_ss = pl.BlockSpec((g, s, s), lambda i: (i, 0, 0))
+    dq, dk, dv = pl.pallas_call(
+        _attn_bwd_kernel,
+        grid=(bh // g,),
+        in_specs=[spec_qkv, spec_qkv, spec_qkv, spec_ss, spec_qkv, spec_ss],
+        out_specs=[spec_qkv, spec_qkv, spec_qkv],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, s, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s, dh), jnp.float32),
+            jax.ShapeDtypeStruct((bh, s, dh), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(
+        qs.reshape(bh, s, dh),
+        k.reshape(bh, s, dh),
+        v.reshape(bh, s, dh),
+        p.reshape(bh, s, s),
+        do.reshape(bh, s, dh),
+        dlogits.reshape(bh, s, s),
+    )
+    shape4 = (b, h, s, dh)
+    return dq.reshape(shape4), dk.reshape(shape4), dv.reshape(shape4)
+
+
+attention_core.defvjp(_attention_fwd, _attention_bwd)
+
+
+def attention(q, k, v, scale):
+    """Causal multi-head attention with runtime logit scale.
+
+    q, k, v: (B, H, S, d_head); ``scale`` is a traced scalar — α_attn·√d₀/d
+    under μP (Definition 4.1) or 1/√d under SP, computed host-side by the
+    Rust coordinator and fed as part of the hp vector.
+    """
+    return attention_core(q * scale, k, v)

@@ -1,0 +1,82 @@
+"""Shared helpers for the Pallas kernels (L1).
+
+All kernels in this package are written for the TPU mental model (VMEM
+tiles, MXU-shaped matmuls) but are lowered with ``interpret=True`` so they
+execute as plain HLO on the CPU PJRT backend (see /opt/xla-example/README.md:
+real-TPU lowering emits a Mosaic custom-call the CPU plugin cannot run).
+
+Because of that, the *structure* (BlockSpecs, grids, accumulation pattern)
+is what we optimize; wall-clock on CPU is not a TPU proxy.  The VMEM
+footprint estimators at the bottom feed DESIGN.md / EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Every pallas_call in this repo goes through this flag so the whole stack
+# can be flipped to compiled mode on a real TPU by changing one constant.
+INTERPRET = True
+
+# Preferred MXU-friendly tile edge.  The TPU MXU is a 128x128 systolic
+# array; the lane dimension of VMEM tiles is 128 wide.  We tile down to
+# smaller powers of two when a dimension is smaller than 128 (common in the
+# proxy models: d_head can be as small as 4 in the fig10 ablation).
+MXU_TILE = 128
+
+# VMEM budget per core in bytes (v4/v5-class part); used only for the
+# static footprint checks, never at runtime.
+VMEM_BYTES = 16 * 1024 * 1024
+
+
+def pick_block(dim: int, preferred: int = MXU_TILE) -> int:
+    """Largest power-of-two tile <= ``preferred`` that divides ``dim``.
+
+    Falls back to ``dim`` itself when no power of two divides it (e.g. the
+    10-class readout of the vision MLP).  All model dimensions in this repo
+    are chosen to be powers of two or small, so this keeps every grid exact
+    (no masking needed) while still producing real multi-tile grids for the
+    large widths.
+    """
+    if dim <= 0:
+        raise ValueError(f"dim must be positive, got {dim}")
+    b = preferred
+    while b > 1:
+        if dim % b == 0:
+            return b
+        b //= 2
+    return dim if dim % 1 == 0 and dim < preferred else 1
+
+
+def grid_dims(m: int, bm: int) -> int:
+    """Number of grid steps for a dimension tiled by ``bm`` (must divide)."""
+    if m % bm != 0:
+        raise ValueError(f"block {bm} does not divide dim {m}")
+    return m // bm
+
+
+def vmem_bytes(*shapes_dtypes) -> int:
+    """Static VMEM footprint estimate for a set of resident tiles.
+
+    ``shapes_dtypes`` is a sequence of (shape_tuple, dtype) pairs; returns
+    total bytes.  Used by tests to assert each kernel's working set fits the
+    16 MiB VMEM budget at every model size we ship artifacts for.
+    """
+    total = 0
+    for shape, dtype in shapes_dtypes:
+        n = 1
+        for d in shape:
+            n *= int(d)
+        total += n * jnp.dtype(dtype).itemsize
+    return total
+
+
+def mxu_utilization(bm: int, bn: int, bk: int) -> float:
+    """Fraction of the 128x128x8 MXU pass actually filled by a (bm,bk)x(bk,bn)
+    tile matmul.  1.0 means perfectly MXU-shaped tiles.  This is the static
+    efficiency estimate recorded in DESIGN.md §Perf (interpret=True gives no
+    hardware counters)."""
+    eff_m = min(bm, MXU_TILE) / MXU_TILE
+    eff_n = min(bn, MXU_TILE) / MXU_TILE
+    eff_k = min(bk, MXU_TILE) / MXU_TILE
+    return eff_m * eff_n * eff_k

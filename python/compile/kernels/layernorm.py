@@ -1,0 +1,137 @@
+"""Pallas layernorm with custom VJP.
+
+Row-blocked: the grid walks blocks of rows; each block's (bm, D) tile is
+normalized entirely in VMEM.  The feature dimension is kept whole inside
+the kernel (layernorm is a row reduction; splitting D would need a
+two-pass scheme for no benefit at our widths: D <= 1024 -> a (8, 1024) f32
+tile is 32 KiB, far under the VMEM budget).
+
+Backward uses the standard closed-form layernorm gradient, also as a
+Pallas kernel, recomputing mean/var from the residual x (cheaper than
+storing normalized activations at our sizes; rematerialization choice
+recorded in DESIGN.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+EPS = 1e-5
+
+
+def _ln_fwd_kernel(x_ref, g_ref, b_ref, o_ref):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mu
+    var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + EPS)
+    o_ref[...] = xc * inv * g_ref[...] + b_ref[...]
+
+
+def _ln_bwd_kernel(x_ref, g_ref, dy_ref, dx_ref, dg_ref, db_ref, *, nrows: int):
+    """Gradient tile for a row block.
+
+    dg/db are reductions over *all* rows; each grid step owns a disjoint
+    row block, and the (1, D) dg/db output tiles are revisited by every
+    step (index map is constant), so we initialize at step 0 and
+    accumulate — the same revisit pattern as the matmul K loop.
+    """
+    i = pl.program_id(0)
+    x = x_ref[...]
+    g = g_ref[...]
+    dy = dy_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    xc = x - mu
+    var = jnp.mean(xc * xc, axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + EPS)
+    xhat = xc * inv
+
+    dxhat = dy * g
+    d = x.shape[-1]
+    # dx = inv/D * (D*dxhat - sum(dxhat) - xhat * sum(dxhat*xhat))
+    s1 = jnp.sum(dxhat, axis=-1, keepdims=True)
+    s2 = jnp.sum(dxhat * xhat, axis=-1, keepdims=True)
+    dx_ref[...] = (inv / d) * (d * dxhat - s1 - xhat * s2)
+
+    @pl.when(i == 0)
+    def _init():
+        dg_ref[...] = jnp.zeros_like(dg_ref)
+        db_ref[...] = jnp.zeros_like(db_ref)
+
+    dg_ref[...] += jnp.sum(dy * xhat, axis=0, keepdims=True)
+    db_ref[...] += jnp.sum(dy, axis=0, keepdims=True)
+
+
+def _rows(x):
+    lead = x.shape[:-1]
+    m = 1
+    for s in lead:
+        m *= s
+    return m, x.shape[-1]
+
+
+def layernorm_fwd_pallas(x, g, b):
+    m, d = _rows(x)
+    x2 = x.reshape(m, d)
+    bm = pick_block(m, 128)
+    y = pl.pallas_call(
+        _ln_fwd_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), jnp.float32),
+        interpret=INTERPRET,
+    )(x2, g.reshape(1, d), b.reshape(1, d))
+    return y.reshape(x.shape)
+
+
+@jax.custom_vjp
+def layernorm(x, g, b):
+    """y = (x - mean) / sqrt(var + eps) * g + b over the last axis."""
+    return layernorm_fwd_pallas(x, g, b)
+
+
+def _layernorm_fwd(x, g, b):
+    return layernorm_fwd_pallas(x, g, b), (x, g)
+
+
+def _layernorm_bwd(res, dy):
+    x, g = res
+    m, d = _rows(x)
+    x2 = x.reshape(m, d)
+    dy2 = dy.reshape(m, d)
+    bm = pick_block(m, 128)
+    import functools
+
+    dx, dg, db = pl.pallas_call(
+        functools.partial(_ln_bwd_kernel, nrows=m // bm),
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+            jax.ShapeDtypeStruct((1, d), jnp.float32),
+        ],
+        interpret=INTERPRET,
+    )(x2, g.reshape(1, d), dy2)
+    return dx.reshape(x.shape), dg.reshape(g.shape), db.reshape(g.shape)
+
+
+layernorm.defvjp(_layernorm_fwd, _layernorm_bwd)

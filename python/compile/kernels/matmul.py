@@ -1,0 +1,100 @@
+"""Pallas tiled matmul with custom VJP.
+
+This is the workhorse of every linear layer in the L2 graphs.  Forward and
+backward are both Pallas kernels: the backward pass reuses the same tiled
+kernel on the transposed operands (dx = dy @ w^T, dw = x^T @ dy), so the
+whole train-step graph lowers through Pallas.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is (M/bm, N/bn,
+K/bk) with the K dimension innermost; each (i, j) output tile stays
+resident in VMEM across the K loop and accumulates partial MXU products —
+the same schedule a CUDA kernel expresses with a threadblock looping over
+K-tiles staged through shared memory.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, *, nk: int):
+    """One (bm, bn) output tile; accumulates over the K grid dimension.
+
+    The output BlockSpec index map ignores k, so the same VMEM tile is
+    revisited for every k step ("arbitrary" grid semantics): initialize at
+    k == 0, accumulate afterwards.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def matmul_fwd_pallas(x: jax.Array, w: jax.Array) -> jax.Array:
+    """(M, K) @ (K, N) -> (M, N) tiled Pallas matmul (no autodiff rule)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {x.shape} @ {w.shape}"
+    # Interpret-mode profile: coarser tiles amortize per-grid-step
+    # dispatch (perf iter 3, EXPERIMENTS.md §Perf).  On a real TPU set the
+    # caps back to MXU_TILE=128; the schedule is unchanged.
+    bm, bk, bn = pick_block(m, 256), pick_block(k, 512), pick_block(n, 256)
+    nk = k // bk
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=INTERPRET,
+    )(x, w)
+
+
+@jax.custom_vjp
+def matmul(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Differentiable tiled matmul; both passes are Pallas kernels."""
+    return matmul_fwd_pallas(x, w)
+
+
+def _matmul_fwd(x, w):
+    return matmul_fwd_pallas(x, w), (x, w)
+
+
+def _matmul_bwd(res, dy):
+    x, w = res
+    # dx = dy @ w^T ; dw = x^T @ dy.  Transposes are layout changes XLA
+    # fuses into the kernel's operand reads.
+    dx = matmul_fwd_pallas(dy, w.T)
+    dw = matmul_fwd_pallas(x.T, dy)
+    return dx, dw
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def linear(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Apply a weight of shape (fan_in, fan_out) to x of shape (..., fan_in).
+
+    Collapses leading dims to a single M so the 2-D tiled kernel serves
+    every call site (token matrices, flattened images, ...).
+    """
+    lead = x.shape[:-1]
+    m = 1
+    for d in lead:
+        m *= d
+    y = matmul(x.reshape(m, x.shape[-1]), w)
+    return y.reshape(*lead, w.shape[1])

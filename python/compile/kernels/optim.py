@@ -1,0 +1,123 @@
+"""Fused optimizer-update Pallas kernels (Adam/AdamW and SGD+momentum).
+
+μP lives or dies on *per-tensor* learning rates (Table 3/8: hidden weights
+get η/fan_in-style scaling under Adam while vector-like tensors get η).
+The per-tensor effective LR is computed host-side (Rust) / graph-side and
+arrives here as a scalar operand, so a single compiled artifact serves any
+point of the HP search space, any LR schedule, and both parametrizations.
+
+Layout: every parameter tensor is viewed as a 2-D (rows, cols) plane and
+the grid walks row blocks; param/grad/moment tiles stream through VMEM
+exactly once (the update is bandwidth-bound, so blocks are sized for full
+VMEM lines, not MXU occupancy — see DESIGN.md §Hardware-Adaptation).
+Scalars ride in a tiny (1, 8) VMEM tile broadcast to every grid step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import INTERPRET, pick_block
+
+# scalar-pack layout shared by both kernels (slot meanings differ per opt)
+N_SCAL = 8
+
+
+def _adam_kernel(p_ref, g_ref, m_ref, v_ref, s_ref, po_ref, mo_ref, vo_ref):
+    s = s_ref[0]
+    lr, b1, b2, eps, wd, c1, c2 = s[0], s[1], s[2], s[3], s[4], s[5], s[6]
+    g = g_ref[...]
+    m = b1 * m_ref[...] + (1.0 - b1) * g
+    v = b2 * v_ref[...] + (1.0 - b2) * g * g
+    mhat = m * c1
+    vhat = v * c2
+    upd = mhat / (jnp.sqrt(vhat) + eps)
+    # AdamW-style decoupled weight decay (App. B.3: wd must NOT be scaled
+    # with width; it is compatible with μP only in decoupled form).
+    po_ref[...] = p_ref[...] - lr * upd - lr * wd * p_ref[...]
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+def _sgd_kernel(p_ref, g_ref, m_ref, s_ref, po_ref, mo_ref):
+    s = s_ref[0]
+    lr, mu, wd = s[0], s[1], s[2]
+    mom = mu * m_ref[...] + g_ref[...]
+    po_ref[...] = p_ref[...] - lr * (mom + wd * p_ref[...])
+    mo_ref[...] = mom
+
+
+def _as2d(a):
+    if a.ndim == 2:
+        return a, a.shape
+    n = a.size
+    return a.reshape(1, n), a.shape
+
+
+def _rowspec(br, c):
+    return pl.BlockSpec((br, c), lambda i: (i, 0))
+
+
+def _scalspec():
+    return pl.BlockSpec((1, N_SCAL), lambda i: (0, 0))
+
+
+def adam_update(p, g, m, v, lr, beta1, beta2, eps, wd, count):
+    """One fused Adam/AdamW step for a single tensor.
+
+    ``lr`` is the *effective per-tensor* LR (master LR x μP scale x
+    schedule), a traced scalar.  ``count`` is the 1-based step number used
+    for bias correction, also traced so one artifact serves every step.
+    Returns (p', m', v').
+    """
+    c1 = 1.0 / (1.0 - beta1**count)
+    c2 = 1.0 / (1.0 - beta2**count)
+    scal = jnp.stack(
+        [lr, beta1, beta2, eps, wd, c1, c2, jnp.zeros_like(lr)]
+    ).reshape(1, N_SCAL)
+    p2, shape = _as2d(p)
+    g2, _ = _as2d(g)
+    m2, _ = _as2d(m)
+    v2, _ = _as2d(v)
+    r, c = p2.shape
+    br = pick_block(r, 1024)
+    out_shape = jax.ShapeDtypeStruct((r, c), jnp.float32)
+    po, mo, vo = pl.pallas_call(
+        _adam_kernel,
+        grid=(r // br,),
+        in_specs=[_rowspec(br, c)] * 4 + [_scalspec()],
+        out_specs=[_rowspec(br, c)] * 3,
+        out_shape=[out_shape] * 3,
+        interpret=INTERPRET,
+    )(p2, g2, m2, v2, scal)
+    return po.reshape(shape), mo.reshape(shape), vo.reshape(shape)
+
+
+def sgd_update(p, g, m, lr, momentum, wd):
+    """One fused SGD(+momentum, +wd) step for a single tensor.
+
+    Returns (p', momentum_buf').  Matches PyTorch SGD semantics
+    (buf = mu*buf + grad; p -= lr*(buf + wd*p)) — the convention the
+    paper's MLP/ResNet experiments (Fig. 3, Tab. 12/13) assume.
+    """
+    zero = jnp.zeros_like(lr)
+    scal = jnp.stack([lr, momentum, wd, zero, zero, zero, zero, zero]).reshape(
+        1, N_SCAL
+    )
+    p2, shape = _as2d(p)
+    g2, _ = _as2d(g)
+    m2, _ = _as2d(m)
+    r, c = p2.shape
+    br = pick_block(r, 1024)
+    out_shape = jax.ShapeDtypeStruct((r, c), jnp.float32)
+    po, mo = pl.pallas_call(
+        _sgd_kernel,
+        grid=(r // br,),
+        in_specs=[_rowspec(br, c)] * 3 + [_scalspec()],
+        out_specs=[_rowspec(br, c)] * 2,
+        out_shape=[out_shape] * 2,
+        interpret=INTERPRET,
+    )(p2, g2, m2, scal)
+    return po.reshape(shape), mo.reshape(shape)

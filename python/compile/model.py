@@ -1,0 +1,482 @@
+"""L2: the paper's model family as JAX graphs calling the L1 Pallas kernels.
+
+Three architectures, matching the paper's experimental surface:
+
+- ``transformer`` — decoder-only LM, pre- or post-layernorm (Sections 3-8);
+  Adam with fused per-tensor-LR updates.
+- ``mlp`` — the 2-hidden-layer MLP of Section 3/Fig. 3 (SGD, relu/tanh,
+  xent/mse) on the synthetic vision task.
+- ``resmlp`` — deep residual MLP standing in for the ResNet experiments
+  (Appendix G.1; substitution documented in DESIGN.md §2), SGD+momentum.
+
+Every hyperparameter the paper transfers is a *runtime input* to the
+lowered graph — per-tensor effective learning rates (``lr_vec``), the
+attention logit scale, output/embedding multipliers, Adam betas/eps, weight
+decay and the step counter ride in ``hp_vec`` — so a single HLO artifact per
+shape serves the entire HP search space and both SP and μP.  The Rust
+coordinator (L3) owns the μP rules that decide what values to feed.
+
+Input/output calling convention (mirrored in artifacts/manifest.json and
+rust/src/runtime/manifest.rs):
+
+  train:  (data..., params[P], opt_state[S*P], lr_vec[P], hp_vec[8])
+          -> (loss, params'[P], opt_state'[S*P])
+  eval:   (data..., params[P], hp_vec[8]) -> (loss,)
+  coord:  train inputs -> train outputs + probe tensors (Fig. 5)
+
+where S = 2 moment buffers for Adam, 1 momentum buffer for SGD.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import adam_update, attention, layernorm, linear, sgd_update
+
+HP_LEN = 8
+
+# hp_vec slots (transformer / adam)
+HP_ATTN_SCALE = 0
+HP_OUTPUT_SCALE = 1
+HP_EMBED_SCALE = 2
+HP_BETA1 = 3
+HP_BETA2 = 4
+HP_EPS = 5
+HP_WD = 6
+HP_STEP = 7
+
+# hp_vec slots (mlp, resmlp / sgd)
+HP_SGD_OUTPUT_SCALE = 0
+HP_SGD_MOMENTUM = 1
+HP_SGD_WD = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    """One parameter tensor: canonical name, shape, and μP role.
+
+    ``role`` is one of:
+      - ``input``  — maps a finite dim to an infinite one (embeddings, first
+        layer); Table 8 column 1
+      - ``hidden`` — infinite -> infinite; Table 8 column 3
+      - ``output`` — infinite -> finite (readout); Table 8 column 2
+      - ``vector`` — biases / layernorm gains: fan_in is 1, treated like
+        input weights (Table 8 caption)
+    ``fan_in``/``fan_out`` follow Table 3's convention (bias fan_in = 1,
+    fan_out = its dimension).
+    """
+
+    name: str
+    shape: tuple
+    role: str
+    fan_in: int
+    fan_out: int
+    init: str = "normal"  # "normal" | "zeros" | "ones"
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 64
+    seq: int = 32
+    batch: int = 16
+    d_model: int = 128
+    n_layer: int = 2
+    n_head: int = 4
+    d_head: int = 32  # decoupled from d_model (App. D.4 / E.2)
+    d_ffn: int = 512
+    ln: str = "pre"  # "pre" | "post"
+
+    @property
+    def d_attn(self) -> int:
+        return self.n_head * self.d_head
+
+
+@dataclasses.dataclass(frozen=True)
+class MlpConfig:
+    d_in: int = 256
+    width: int = 128
+    d_out: int = 10
+    batch: int = 64
+    act: str = "relu"  # "relu" | "tanh"
+    loss: str = "xent"  # "xent" | "mse"
+
+
+@dataclasses.dataclass(frozen=True)
+class ResMlpConfig:
+    d_in: int = 256
+    width: int = 128
+    n_block: int = 4
+    d_out: int = 10
+    batch: int = 64
+
+
+# ---------------------------------------------------------------------------
+# parameter layouts (the canonical ordering every layer of the stack shares)
+# ---------------------------------------------------------------------------
+
+
+def transformer_param_specs(cfg: TransformerConfig) -> list:
+    d, da, f, v, s = cfg.d_model, cfg.d_attn, cfg.d_ffn, cfg.vocab, cfg.seq
+    specs = [
+        ParamSpec("embed", (v, d), "input", v, d),
+        ParamSpec("pos_embed", (s, d), "input", s, d),
+    ]
+    for i in range(cfg.n_layer):
+        p = f"block{i}."
+        specs += [
+            ParamSpec(p + "ln1_g", (d,), "vector", 1, d, init="ones"),
+            ParamSpec(p + "ln1_b", (d,), "vector", 1, d, init="zeros"),
+            # wq is zero-initialized per App. D.2 (attention logits are then
+            # exactly 0 at init at every width, removing the initial-GP
+            # mismatch between proxy and target).
+            ParamSpec(p + "wq", (d, da), "hidden", d, da, init="zeros"),
+            ParamSpec(p + "wk", (d, da), "hidden", d, da),
+            ParamSpec(p + "wv", (d, da), "hidden", d, da),
+            ParamSpec(p + "wo", (da, d), "hidden", da, d),
+            ParamSpec(p + "ln2_g", (d,), "vector", 1, d, init="ones"),
+            ParamSpec(p + "ln2_b", (d,), "vector", 1, d, init="zeros"),
+            ParamSpec(p + "w1", (d, f), "hidden", d, f),
+            ParamSpec(p + "w2", (f, d), "hidden", f, d),
+        ]
+    if cfg.ln == "pre":
+        specs += [
+            ParamSpec("lnf_g", (d,), "vector", 1, d, init="ones"),
+            ParamSpec("lnf_b", (d,), "vector", 1, d, init="zeros"),
+        ]
+    # Output layer zero-init per App. D.2 (also enables the §8
+    # wider-is-better check from step 0).
+    specs.append(ParamSpec("unembed", (d, v), "output", d, v, init="zeros"))
+    return specs
+
+
+def mlp_param_specs(cfg: MlpConfig) -> list:
+    n = cfg.width
+    return [
+        ParamSpec("w1", (cfg.d_in, n), "input", cfg.d_in, n),
+        ParamSpec("b1", (n,), "vector", 1, n, init="zeros"),
+        ParamSpec("w2", (n, n), "hidden", n, n),
+        ParamSpec("b2", (n,), "vector", 1, n, init="zeros"),
+        ParamSpec("w3", (n, cfg.d_out), "output", n, cfg.d_out, init="zeros"),
+    ]
+
+
+def resmlp_param_specs(cfg: ResMlpConfig) -> list:
+    n = cfg.width
+    specs = [ParamSpec("w_in", (cfg.d_in, n), "input", cfg.d_in, n)]
+    for i in range(cfg.n_block):
+        p = f"block{i}."
+        specs += [
+            ParamSpec(p + "ln_g", (n,), "vector", 1, n, init="ones"),
+            ParamSpec(p + "ln_b", (n,), "vector", 1, n, init="zeros"),
+            ParamSpec(p + "w1", (n, n), "hidden", n, n),
+            ParamSpec(p + "w2", (n, n), "hidden", n, n),
+        ]
+    specs += [
+        ParamSpec("ln_f_g", (n,), "vector", 1, n, init="ones"),
+        ParamSpec("ln_f_b", (n,), "vector", 1, n, init="zeros"),
+        ParamSpec("w_out", (n, cfg.d_out), "output", n, cfg.d_out, init="zeros"),
+    ]
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+def _split_heads(x, n_head, d_head):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_head, d_head).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def transformer_fwd(cfg: TransformerConfig, params: dict, tokens, hp_vec):
+    """Token logits + coordinate-check probes.
+
+    ``tokens``: int32 (B, S).  Probes mirror Fig. 5's three measured
+    quantities (word embedding, attention logits, output logits) plus the
+    final block output.
+    """
+    attn_scale = hp_vec[HP_ATTN_SCALE]
+    output_scale = hp_vec[HP_OUTPUT_SCALE]
+    embed_scale = hp_vec[HP_EMBED_SCALE]
+
+    emb = jnp.take(params["embed"], tokens, axis=0)  # (B, S, D)
+    pos = params["pos_embed"][None, : tokens.shape[1]]
+    x = (emb + pos) * embed_scale
+    probes = {"embed_out": x}
+
+    for i in range(cfg.n_layer):
+        p = f"block{i}."
+
+        def attn_sublayer(h):
+            q = linear(h, params[p + "wq"])
+            k = linear(h, params[p + "wk"])
+            v = linear(h, params[p + "wv"])
+            ctx, attn_logits = attention(
+                _split_heads(q, cfg.n_head, cfg.d_head),
+                _split_heads(k, cfg.n_head, cfg.d_head),
+                _split_heads(v, cfg.n_head, cfg.d_head),
+                attn_scale,
+            )
+            return linear(_merge_heads(ctx), params[p + "wo"]), attn_logits
+
+        def ffn_sublayer(h):
+            return linear(jax.nn.relu(linear(h, params[p + "w1"])), params[p + "w2"])
+
+        if cfg.ln == "pre":
+            a, attn_logits = attn_sublayer(
+                layernorm(x, params[p + "ln1_g"], params[p + "ln1_b"])
+            )
+            x = x + a
+            x = x + ffn_sublayer(layernorm(x, params[p + "ln2_g"], params[p + "ln2_b"]))
+        else:  # post-LN (original Transformer; Fig. 1 uses this)
+            a, attn_logits = attn_sublayer(x)
+            x = layernorm(x + a, params[p + "ln1_g"], params[p + "ln1_b"])
+            x = layernorm(
+                x + ffn_sublayer(x), params[p + "ln2_g"], params[p + "ln2_b"]
+            )
+        if i == 0:
+            probes["attn_logits_l0"] = attn_logits
+
+    if cfg.ln == "pre":
+        x = layernorm(x, params["lnf_g"], params["lnf_b"])
+    probes["block_out"] = x
+    logits = linear(x, params["unembed"]) * output_scale
+    probes["logits"] = logits
+    return logits, probes
+
+
+def lm_loss(logits, targets):
+    """Mean next-token cross-entropy; targets int32 (B, S)."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def mlp_fwd(cfg: MlpConfig, params: dict, x, hp_vec):
+    act = jax.nn.relu if cfg.act == "relu" else jnp.tanh
+    h = act(linear(x, params["w1"]) + params["b1"])
+    h = act(linear(h, params["w2"]) + params["b2"])
+    logits = linear(h, params["w3"]) * hp_vec[HP_SGD_OUTPUT_SCALE]
+    return logits, {"hidden": h, "logits": logits}
+
+
+def mlp_loss(cfg: MlpConfig, logits, y):
+    if cfg.loss == "xent":
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+    onehot = jax.nn.one_hot(y, cfg.d_out, dtype=jnp.float32)
+    return jnp.mean((logits - onehot) ** 2)
+
+
+def resmlp_fwd(cfg: ResMlpConfig, params: dict, x, hp_vec):
+    h = linear(x, params["w_in"])
+    for i in range(cfg.n_block):
+        p = f"block{i}."
+        z = layernorm(h, params[p + "ln_g"], params[p + "ln_b"])
+        h = h + linear(jax.nn.relu(linear(z, params[p + "w1"])), params[p + "w2"])
+    h = layernorm(h, params["ln_f_g"], params["ln_f_b"])
+    logits = linear(h, params["w_out"]) * hp_vec[HP_SGD_OUTPUT_SCALE]
+    return logits, {"hidden": h, "logits": logits}
+
+
+# ---------------------------------------------------------------------------
+# train / eval / coord-check step builders (flat-argument calling convention)
+# ---------------------------------------------------------------------------
+
+
+def _pack(specs, flat):
+    return {spec.name: t for spec, t in zip(specs, flat)}
+
+
+def make_transformer_steps(cfg: TransformerConfig):
+    """Returns (train_step, eval_step, coord_step) with flat signatures."""
+    specs = transformer_param_specs(cfg)
+    n = len(specs)
+
+    def fwd_loss(plist, tokens_in, targets, hp_vec):
+        logits, probes = transformer_fwd(cfg, _pack(specs, plist), tokens_in, hp_vec)
+        return lm_loss(logits, targets), probes
+
+    def _train(tokens, *rest, with_probes: bool):
+        plist = list(rest[:n])
+        ms = list(rest[n : 2 * n])
+        vs = list(rest[2 * n : 3 * n])
+        lr_vec = rest[3 * n]
+        hp_vec = rest[3 * n + 1]
+        tokens_in = tokens[:, : cfg.seq]
+        targets = tokens[:, 1 : cfg.seq + 1]
+        (loss, probes), grads = jax.value_and_grad(
+            lambda pl_: fwd_loss(pl_, tokens_in, targets, hp_vec), has_aux=True
+        )(plist)
+        new_p, new_m, new_v = [], [], []
+        for i in range(n):
+            p2, m2, v2 = adam_update(
+                plist[i],
+                grads[i],
+                ms[i],
+                vs[i],
+                lr_vec[i],
+                hp_vec[HP_BETA1],
+                hp_vec[HP_BETA2],
+                hp_vec[HP_EPS],
+                hp_vec[HP_WD],
+                hp_vec[HP_STEP],
+            )
+            new_p.append(p2)
+            new_m.append(m2)
+            new_v.append(v2)
+        outs = [loss] + new_p + new_m + new_v
+        if with_probes:
+            outs += [
+                probes["embed_out"],
+                probes["attn_logits_l0"],
+                probes["block_out"],
+                probes["logits"],
+            ]
+        return tuple(outs)
+
+    def train_step(tokens, *rest):
+        return _train(tokens, *rest, with_probes=False)
+
+    def coord_step(tokens, *rest):
+        return _train(tokens, *rest, with_probes=True)
+
+    def eval_step(tokens, *rest):
+        plist = list(rest[:n])
+        hp_vec = rest[n]
+        loss, _ = fwd_loss(plist, tokens[:, : cfg.seq], tokens[:, 1 : cfg.seq + 1], hp_vec)
+        return (loss,)
+
+    return train_step, eval_step, coord_step
+
+
+def _make_sgd_steps(specs, fwd, loss_fn):
+    n = len(specs)
+
+    def fwd_loss(plist, x, y, hp_vec):
+        logits, probes = fwd(_pack(specs, plist), x, hp_vec)
+        return loss_fn(logits, y), probes
+
+    def train_step(x, y, *rest):
+        plist = list(rest[:n])
+        ms = list(rest[n : 2 * n])
+        lr_vec = rest[2 * n]
+        hp_vec = rest[2 * n + 1]
+        (loss, _), grads = jax.value_and_grad(
+            lambda pl_: fwd_loss(pl_, x, y, hp_vec), has_aux=True
+        )(plist)
+        new_p, new_m = [], []
+        for i in range(n):
+            p2, m2 = sgd_update(
+                plist[i],
+                grads[i],
+                ms[i],
+                lr_vec[i],
+                hp_vec[HP_SGD_MOMENTUM],
+                hp_vec[HP_SGD_WD],
+            )
+            new_p.append(p2)
+            new_m.append(m2)
+        return tuple([loss] + new_p + new_m)
+
+    def eval_step(x, y, *rest):
+        plist = list(rest[:n])
+        hp_vec = rest[n]
+        loss, _ = fwd_loss(plist, x, y, hp_vec)
+        return (loss,)
+
+    return train_step, eval_step
+
+
+def make_mlp_steps(cfg: MlpConfig):
+    specs = mlp_param_specs(cfg)
+    return _make_sgd_steps(
+        specs,
+        lambda p, x, hp: mlp_fwd(cfg, p, x, hp),
+        lambda logits, y: mlp_loss(cfg, logits, y),
+    )
+
+
+def make_resmlp_steps(cfg: ResMlpConfig):
+    specs = resmlp_param_specs(cfg)
+
+    def loss_fn(logits, y):
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+
+    return _make_sgd_steps(
+        specs,
+        lambda p, x, hp: resmlp_fwd(cfg, p, x, hp),
+        loss_fn,
+    )
+
+
+# ---------------------------------------------------------------------------
+# deterministic fill — shared golden-value scheme with the Rust side
+# ---------------------------------------------------------------------------
+
+_M64 = (1 << 64) - 1
+
+
+def splitmix64(x: int) -> int:
+    """The exact splitmix64 used by rust/src/init/rng.rs; goldens depend on
+    bit-for-bit agreement between the two implementations."""
+    x = (x + 0x9E3779B97F4A7C15) & _M64
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & _M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & _M64
+    return (z ^ (z >> 31)) & _M64
+
+
+def _splitmix64_vec(x):
+    """Vectorized splitmix64 over a numpy uint64 array (same bits as the
+    scalar version above)."""
+    import numpy as np
+
+    with np.errstate(over="ignore"):
+        x = (x + np.uint64(0x9E3779B97F4A7C15)).astype(np.uint64)
+        z = x
+        z = ((z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)).astype(np.uint64)
+        z = ((z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)).astype(np.uint64)
+        return z ^ (z >> np.uint64(31))
+
+
+def det_fill(shape, seed: int, scale: float = 0.02):
+    """Deterministic pseudo-random tensor both sides can reproduce exactly:
+    elem[i] = (splitmix64(seed*2^32 + i) -> uniform [0,1) - 0.5) * 2 * scale."""
+    import numpy as np
+
+    n = 1
+    for d in shape:
+        n *= int(d)
+    base = np.uint64((seed << 32) & _M64)
+    idx = np.arange(n, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        z = _splitmix64_vec(base + idx)
+    u = (z >> np.uint64(11)).astype(np.float64) * (2.0**-53)
+    out = (u - 0.5) * 2.0 * scale
+    return jnp.asarray(out.reshape(shape), dtype=jnp.float32)
+
+
+def det_tokens(batch: int, seq: int, vocab: int, seed: int):
+    import numpy as np
+
+    n = batch * seq
+    base = np.uint64((seed << 32) & _M64)
+    idx = np.arange(n, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        z = _splitmix64_vec(base + idx)
+    out = (z % np.uint64(vocab)).astype(np.int64)
+    return jnp.asarray(out.reshape(batch, seq), dtype=jnp.int32)

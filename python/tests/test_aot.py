@@ -1,0 +1,89 @@
+"""AOT pipeline tests: registry sanity, calling-convention arithmetic,
+manifest schema, and HLO-text lowering of a tiny variant."""
+
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_registry_unique_and_complete():
+    reg = aot.build_registry()
+    names = [v.name for v in reg]
+    assert len(names) == len(set(names))
+    # every train variant ships an eval twin
+    trains = {v.name for v in reg if v.kind == "train"}
+    evals = {v.name for v in reg if v.kind == "eval"}
+    for t in trains:
+        assert f"{t}__eval" in evals, t
+    # the experiment index needs these
+    for required in [
+        "tfm_post_w32_d2",
+        "tfm_post_w128_d2__coord",
+        "tfm_pre_w128_d2_f1024",
+        "tfm_pre_nh8_hd16",
+        "tfm_pre_w256_d4",
+        "mlp_w1024",
+        "mlp_tanhmse_w256",
+        "resmlp_w128",
+    ]:
+        assert any(v.name == required for v in reg), required
+
+
+@pytest.mark.parametrize("kind", ["train", "eval", "coord"])
+def test_variant_io_arity(kind):
+    cfg = M.TransformerConfig(vocab=8, seq=4, batch=2, d_model=8, n_layer=1, n_head=2, d_head=4, d_ffn=16)
+    var = aot.Variant("t", "transformer", kind, cfg)
+    fn, arg_specs, pspecs, data, n_state, probes = aot.variant_io(var)
+    p = len(pspecs)
+    if kind == "eval":
+        assert len(arg_specs) == 1 + p + 1
+        assert probes == []
+    else:
+        assert len(arg_specs) == 1 + p * (1 + n_state) + 2
+    if kind == "coord":
+        assert probes == ["embed_out", "attn_logits_l0", "block_out", "logits"]
+    # specs must actually be consumable by the step function
+    out = fn(*[jnp.zeros(s.shape, s.dtype) for s in arg_specs])
+    n_out = {"train": 1 + 3 * p, "coord": 1 + 3 * p + 4, "eval": 1}[kind]
+    assert len(out) == n_out
+
+
+def test_hlo_text_lowering_tiny():
+    import jax
+
+    cfg = M.MlpConfig(d_in=4, width=8, d_out=3, batch=2)
+    var = aot.Variant("m", "mlp", "train", cfg)
+    fn, arg_specs, *_ = aot.variant_io(var)
+    text = aot.to_hlo_text(jax.jit(fn).lower(*arg_specs))
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+
+
+def test_manifest_entry_schema():
+    cfg = M.TransformerConfig(vocab=8, seq=4, batch=2, d_model=8, n_layer=1, n_head=2, d_head=4, d_ffn=16)
+    var = aot.Variant("t", "transformer", "train", cfg)
+    _, _, pspecs, data, n_state, probes = aot.variant_io(var)
+    entry = aot.variant_manifest(var, pspecs, data, n_state, probes, "t.hlo.txt", None)
+    # round-trips through json and has the fields the Rust loader requires
+    entry = json.loads(json.dumps(entry))
+    for key in ["name", "arch", "kind", "opt", "hlo", "config", "data_inputs", "n_state", "probes", "params", "golden"]:
+        assert key in entry, key
+    p0 = entry["params"][0]
+    for key in ["name", "shape", "role", "fan_in", "fan_out", "init"]:
+        assert key in p0, key
+    assert entry["config"]["ln"] in ("pre", "post")
+
+
+def test_golden_reproducible():
+    cfg = M.MlpConfig(d_in=4, width=8, d_out=3, batch=2)
+    var = aot.Variant("m", "mlp", "train", cfg, golden_seed=5)
+    _, _, pspecs, _, n_state, _ = aot.variant_io(var)
+    g1 = aot.compute_golden(var, pspecs, n_state)
+    g2 = aot.compute_golden(var, pspecs, n_state)
+    assert g1["losses"] == g2["losses"]
+    assert len(g1["losses"]) == 2
+    assert all(abs(x) < 100 for x in g1["losses"])

@@ -1,0 +1,280 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes (and scalar HPs for the optimizer kernels); each
+comparison covers both the forward value and the custom-VJP gradients.
+Shapes are kept modest because interpret-mode Pallas executes eagerly here,
+but they cross tile boundaries (dims both below and above the 128 MXU tile
+and the 8/256-row blocks) so the grid logic is genuinely exercised.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    adam_update,
+    attention,
+    layernorm,
+    matmul,
+    sgd_update,
+)
+from compile.kernels import ref
+from compile.kernels.common import MXU_TILE, VMEM_BYTES, mxu_utilization, pick_block, vmem_bytes
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# tiling helpers
+# ---------------------------------------------------------------------------
+
+
+@given(dim=st.integers(min_value=1, max_value=4096))
+@settings(max_examples=60, deadline=None)
+def test_pick_block_divides(dim):
+    b = pick_block(dim)
+    assert dim % b == 0
+    assert b <= max(dim, MXU_TILE)
+
+
+@pytest.mark.parametrize("dim,expect", [(128, 128), (256, 128), (96, 32), (10, 2), (1, 1), (384, 128)])
+def test_pick_block_values(dim, expect):
+    assert pick_block(dim) == expect
+
+
+def test_mxu_utilization_full_tile():
+    assert mxu_utilization(128, 128, 128) == 1.0
+    assert mxu_utilization(64, 128, 128) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+DIMS = st.sampled_from([1, 2, 4, 8, 10, 16, 32, 48, 64, 96, 128, 160, 256])
+
+
+@given(m=DIMS, k=DIMS, n=DIMS)
+@settings(**SETTINGS)
+def test_matmul_matches_ref(m, k, n):
+    x = _rand(m * 1000 + k, (m, k))
+    w = _rand(n, (k, n))
+    np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+@given(m=st.sampled_from([4, 16, 48]), k=st.sampled_from([8, 32, 96]), n=st.sampled_from([8, 24, 64]))
+@settings(**SETTINGS)
+def test_matmul_grads_match_ref(m, k, n):
+    x = _rand(1, (m, k))
+    w = _rand(2, (k, n))
+
+    def f(mm):
+        return lambda a, b: jnp.sum(jnp.sin(mm(a, b)))
+
+    gx, gw = jax.grad(f(matmul), (0, 1))(x, w)
+    rx, rw = jax.grad(f(ref.matmul_ref), (0, 1))(x, w)
+    np.testing.assert_allclose(gx, rx, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, rw, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_large_tiled_grid():
+    # 256x256x256 -> 2x2x2 grid of 128-tiles: exercises k-accumulation.
+    x = _rand(3, (256, 256))
+    w = _rand(4, (256, 256))
+    np.testing.assert_allclose(matmul(x, w), ref.matmul_ref(x, w), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# layernorm
+# ---------------------------------------------------------------------------
+
+
+@given(rows=st.sampled_from([1, 4, 8, 24, 64]), d=st.sampled_from([8, 32, 128, 512]))
+@settings(**SETTINGS)
+def test_layernorm_matches_ref(rows, d):
+    x = _rand(rows, (rows, d))
+    g = _rand(d, (d,)) * 0.1 + 1.0
+    b = _rand(d + 1, (d,)) * 0.1
+    np.testing.assert_allclose(
+        layernorm(x, g, b), ref.layernorm_ref(x, g, b), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(rows=st.sampled_from([4, 16]), d=st.sampled_from([16, 64]))
+@settings(**SETTINGS)
+def test_layernorm_grads_match_ref(rows, d):
+    x = _rand(rows * 7, (rows, d))
+    g = _rand(d, (d,)) * 0.1 + 1.0
+    b = jnp.zeros((d,))
+
+    def f(ln):
+        return lambda x_, g_, b_: jnp.sum(jnp.cos(ln(x_, g_, b_)))
+
+    got = jax.grad(f(layernorm), (0, 1, 2))(x, g, b)
+    want = jax.grad(f(ref.layernorm_ref), (0, 1, 2))(x, g, b)
+    for a, e in zip(got, want):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+
+def test_layernorm_3d_input():
+    x = _rand(9, (2, 8, 32))
+    g = jnp.ones((32,))
+    b = jnp.zeros((32,))
+    np.testing.assert_allclose(
+        layernorm(x, g, b), ref.layernorm_ref(x, g, b), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+@given(
+    b=st.sampled_from([1, 2]),
+    h=st.sampled_from([1, 2, 4]),
+    s=st.sampled_from([4, 8, 16, 32]),
+    dh=st.sampled_from([4, 8, 16, 32]),
+    scale=st.sampled_from([1.0, 0.25, 0.03125]),
+)
+@settings(**SETTINGS)
+def test_attention_matches_ref(b, h, s, dh, scale):
+    q = _rand(1, (b, h, s, dh))
+    k = _rand(2, (b, h, s, dh))
+    v = _rand(3, (b, h, s, dh))
+    o, lg = attention(q, k, v, scale)
+    ro, rlg = ref.attention_ref(q, k, v, scale)
+    np.testing.assert_allclose(o, ro, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(lg, rlg, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_is_causal():
+    """Output at position t must not depend on tokens after t."""
+    b, h, s, dh = 1, 1, 8, 4
+    q = _rand(1, (b, h, s, dh))
+    k = _rand(2, (b, h, s, dh))
+    v = _rand(3, (b, h, s, dh))
+    o1, _ = attention(q, k, v, 0.5)
+    # perturb the last key/value: earlier outputs must be identical
+    k2 = k.at[..., -1, :].add(100.0)
+    v2 = v.at[..., -1, :].add(-50.0)
+    o2, _ = attention(q, k2, v2, 0.5)
+    np.testing.assert_allclose(o1[..., :-1, :], o2[..., :-1, :], rtol=1e-6, atol=1e-6)
+    assert not np.allclose(o1[..., -1, :], o2[..., -1, :])
+
+
+@given(s=st.sampled_from([4, 16]), dh=st.sampled_from([4, 16]))
+@settings(**SETTINGS)
+def test_attention_grads_match_ref(s, dh):
+    q = _rand(11, (1, 2, s, dh))
+    k = _rand(12, (1, 2, s, dh))
+    v = _rand(13, (1, 2, s, dh))
+
+    def f(attn):
+        return lambda q_, k_, v_: jnp.sum(jnp.tanh(attn(q_, k_, v_, 0.2)[0]))
+
+    got = jax.grad(f(attention), (0, 1, 2))(q, k, v)
+    want = jax.grad(f(ref.attention_ref), (0, 1, 2))(q, k, v)
+    for a, e in zip(got, want):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_logit_probe_grads():
+    """Gradients flow correctly when the logits output itself is used."""
+    q = _rand(21, (1, 1, 8, 8))
+    k = _rand(22, (1, 1, 8, 8))
+    v = _rand(23, (1, 1, 8, 8))
+
+    def f(attn):
+        def g(q_, k_, v_):
+            o, lg = attn(q_, k_, v_, 0.3)
+            return jnp.sum(o) + jnp.sum(lg**2)
+
+        return g
+
+    got = jax.grad(f(attention), (0, 1, 2))(q, k, v)
+    want = jax.grad(f(ref.attention_ref), (0, 1, 2))(q, k, v)
+    for a, e in zip(got, want):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-4)
+
+
+def test_attention_vmem_budget():
+    """The fused attention working set fits VMEM at every shipped shape
+    (DESIGN.md §Hardware-Adaptation)."""
+    for s, dh in [(32, 8), (32, 128), (64, 32), (128, 192)]:
+        resident = vmem_bytes(
+            ((s, dh), jnp.float32),  # q
+            ((s, dh), jnp.float32),  # k
+            ((s, dh), jnp.float32),  # v
+            ((s, s), jnp.float32),  # logits
+            ((s, s), jnp.float32),  # probs
+            ((s, dh), jnp.float32),  # out
+        )
+        assert resident < VMEM_BYTES, (s, dh, resident)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+
+@given(
+    shape=st.sampled_from([(8, 16), (64,), (256, 8), (3, 3)]),
+    lr=st.sampled_from([1e-4, 1e-2, 0.5]),
+    wd=st.sampled_from([0.0, 0.01]),
+    count=st.sampled_from([1.0, 2.0, 100.0]),
+)
+@settings(**SETTINGS)
+def test_adam_matches_ref(shape, lr, wd, count):
+    p = _rand(1, shape)
+    g = _rand(2, shape)
+    m = _rand(3, shape) * 0.1
+    v = jnp.abs(_rand(4, shape)) * 0.01
+    args = (jnp.float32(lr), jnp.float32(0.9), jnp.float32(0.999), jnp.float32(1e-8), jnp.float32(wd), jnp.float32(count))
+    got = adam_update(p, g, m, v, *args)
+    want = ref.adam_update_ref(p, g, m, v, lr, 0.9, 0.999, 1e-8, wd, count)
+    for a, e in zip(got, want):
+        np.testing.assert_allclose(a, e, rtol=1e-4, atol=1e-5)
+
+
+@given(
+    shape=st.sampled_from([(8, 16), (64,), (10,)]),
+    lr=st.sampled_from([1e-3, 0.1, 1.0]),
+    mu=st.sampled_from([0.0, 0.9]),
+    wd=st.sampled_from([0.0, 1e-4]),
+)
+@settings(**SETTINGS)
+def test_sgd_matches_ref(shape, lr, mu, wd):
+    p = _rand(5, shape)
+    g = _rand(6, shape)
+    m = _rand(7, shape) * 0.1
+    got = sgd_update(p, g, m, jnp.float32(lr), jnp.float32(mu), jnp.float32(wd))
+    want = ref.sgd_update_ref(p, g, m, lr, mu, wd)
+    for a, e in zip(got, want):
+        np.testing.assert_allclose(a, e, rtol=1e-5, atol=1e-6)
+
+
+def test_adam_zero_state_first_step():
+    """First step from zero moments must equal signed-gradient-ish update."""
+    p = jnp.zeros((4, 4))
+    g = jnp.ones((4, 4))
+    out = adam_update(
+        p, g, jnp.zeros_like(p), jnp.zeros_like(p),
+        jnp.float32(1e-3), jnp.float32(0.9), jnp.float32(0.999),
+        jnp.float32(1e-8), jnp.float32(0.0), jnp.float32(1.0),
+    )
+    # mhat = g, vhat = g^2 -> update = g/|g| = 1 -> p' = -lr
+    np.testing.assert_allclose(out[0], -1e-3 * jnp.ones((4, 4)), rtol=1e-4)
+
+
+def test_sgd_is_pure_gd_without_momentum():
+    p = _rand(8, (16,))
+    g = _rand(9, (16,))
+    got = sgd_update(p, g, jnp.zeros_like(p), jnp.float32(0.1), jnp.float32(0.0), jnp.float32(0.0))
+    np.testing.assert_allclose(got[0], p - 0.1 * g, rtol=1e-6, atol=1e-7)

@@ -1,0 +1,273 @@
+"""L2 correctness: whole train/eval steps against an independent pure-jnp
+reference implementation (built only from ref.py oracles + jnp), plus
+μP-relevant behavioural checks."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+CFG = M.TransformerConfig(vocab=16, seq=8, batch=2, d_model=16, n_layer=2, n_head=2, d_head=8, d_ffn=32)
+
+
+# ---------------------------------------------------------------------------
+# independent reference transformer (no Pallas anywhere)
+# ---------------------------------------------------------------------------
+
+
+def ref_transformer_fwd(cfg, params, tokens, hp):
+    attn_scale, output_scale, embed_scale = hp[0], hp[1], hp[2]
+    x = (jnp.take(params["embed"], tokens, axis=0) + params["pos_embed"][None, : tokens.shape[1]]) * embed_scale
+
+    def split(t):
+        b, s, _ = t.shape
+        return t.reshape(b, s, cfg.n_head, cfg.d_head).transpose(0, 2, 1, 3)
+
+    for i in range(cfg.n_layer):
+        p = f"block{i}."
+
+        def attn(h):
+            q, k, v = (h @ params[p + w] for w in ("wq", "wk", "wv"))
+            ctx, _ = ref.attention_ref(split(q), split(k), split(v), attn_scale)
+            b, nh, s, dh = ctx.shape
+            return ctx.transpose(0, 2, 1, 3).reshape(b, s, nh * dh) @ params[p + "wo"]
+
+        def ffn(h):
+            return jax.nn.relu(h @ params[p + "w1"]) @ params[p + "w2"]
+
+        if cfg.ln == "pre":
+            x = x + attn(ref.layernorm_ref(x, params[p + "ln1_g"], params[p + "ln1_b"]))
+            x = x + ffn(ref.layernorm_ref(x, params[p + "ln2_g"], params[p + "ln2_b"]))
+        else:
+            x = ref.layernorm_ref(x + attn(x), params[p + "ln1_g"], params[p + "ln1_b"])
+            x = ref.layernorm_ref(x + ffn(x), params[p + "ln2_g"], params[p + "ln2_b"])
+    if cfg.ln == "pre":
+        x = ref.layernorm_ref(x, params["lnf_g"], params["lnf_b"])
+    return (x @ params["unembed"]) * output_scale
+
+
+def ref_train_step(cfg, specs, data, params, ms, vs, lr_vec, hp):
+    tokens = data[0]
+    x_in, y = tokens[:, : cfg.seq], tokens[:, 1 : cfg.seq + 1]
+
+    def loss_fn(plist):
+        logits = ref_transformer_fwd(cfg, {s.name: t for s, t in zip(specs, plist)}, x_in, hp)
+        return M.lm_loss(logits, y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new = [
+        ref.adam_update_ref(p, g, m, v, lr_vec[i], hp[3], hp[4], hp[5], hp[6], hp[7])
+        for i, (p, g, m, v) in enumerate(zip(params, grads, ms, vs))
+    ]
+    return loss, [t[0] for t in new], [t[1] for t in new], [t[2] for t in new]
+
+
+def _init(cfg, seed=3):
+    specs = M.transformer_param_specs(cfg)
+    params = []
+    for i, s in enumerate(specs):
+        if s.init == "ones":
+            params.append(jnp.ones(s.shape, jnp.float32))
+        elif s.init == "zeros":
+            # use nonzero values anyway so gradients flow through every path
+            params.append(M.det_fill(s.shape, seed + i, 0.05))
+        else:
+            params.append(M.det_fill(s.shape, seed + i, 0.1))
+    return specs, params
+
+
+HP = jnp.array([0.2, 1.0, 1.0, 0.9, 0.999, 1e-8, 0.01, 1.0], jnp.float32)
+
+
+@pytest.mark.parametrize("ln", ["pre", "post"])
+def test_transformer_train_step_matches_reference(ln):
+    cfg = dataclasses.replace(CFG, ln=ln)
+    specs, params = _init(cfg)
+    n = len(specs)
+    ms = [jnp.zeros(s.shape, jnp.float32) for s in specs]
+    vs = [jnp.zeros(s.shape, jnp.float32) for s in specs]
+    lr_vec = jnp.full((n,), 1e-3, jnp.float32)
+    tokens = M.det_tokens(cfg.batch, cfg.seq + 1, cfg.vocab, 77)
+
+    train, _, _ = M.make_transformer_steps(cfg)
+    out = jax.jit(train)(tokens, *params, *ms, *vs, lr_vec, HP)
+    loss = out[0]
+    new_p = out[1 : 1 + n]
+
+    rloss, rp, _, _ = ref_train_step(cfg, specs, [tokens], params, ms, vs, lr_vec, HP)
+    np.testing.assert_allclose(loss, rloss, rtol=1e-4, atol=1e-5)
+    for a, e in zip(new_p, rp):
+        np.testing.assert_allclose(a, e, rtol=1e-3, atol=1e-5)
+
+
+def test_transformer_eval_matches_fwd_loss():
+    cfg = CFG
+    specs, params = _init(cfg)
+    tokens = M.det_tokens(cfg.batch, cfg.seq + 1, cfg.vocab, 5)
+    _, evl, _ = M.make_transformer_steps(cfg)
+    loss = jax.jit(evl)(tokens, *params, HP)[0]
+    rlogits = ref_transformer_fwd(
+        cfg, {s.name: t for s, t in zip(specs, params)}, tokens[:, : cfg.seq], HP
+    )
+    rloss = M.lm_loss(rlogits, tokens[:, 1 : cfg.seq + 1])
+    np.testing.assert_allclose(loss, rloss, rtol=1e-4, atol=1e-5)
+
+
+def test_transformer_loss_decreases_over_steps():
+    cfg = CFG
+    specs, params = _init(cfg)
+    n = len(specs)
+    ms = [jnp.zeros(s.shape) for s in specs]
+    vs = [jnp.zeros(s.shape) for s in specs]
+    lr_vec = jnp.full((n,), 3e-3, jnp.float32)
+    train, _, _ = M.make_transformer_steps(cfg)
+    train = jax.jit(train)
+    tokens = M.det_tokens(cfg.batch, cfg.seq + 1, cfg.vocab, 9)
+    losses = []
+    hp = HP
+    for t in range(8):
+        hp = hp.at[M.HP_STEP].set(float(t + 1))
+        out = train(tokens, *params, *ms, *vs, lr_vec, hp)
+        losses.append(float(out[0]))
+        params = list(out[1 : 1 + n])
+        ms = list(out[1 + n : 1 + 2 * n])
+        vs = list(out[1 + 2 * n : 1 + 3 * n])
+    assert losses[-1] < losses[0], losses
+
+
+def test_coord_step_probe_shapes():
+    cfg = CFG
+    specs, params = _init(cfg)
+    n = len(specs)
+    ms = [jnp.zeros(s.shape) for s in specs]
+    vs = [jnp.zeros(s.shape) for s in specs]
+    _, _, coord = M.make_transformer_steps(cfg)
+    tokens = M.det_tokens(cfg.batch, cfg.seq + 1, cfg.vocab, 1)
+    out = jax.jit(coord)(tokens, *params, *ms, *vs, jnp.full((n,), 1e-3), HP)
+    assert len(out) == 1 + 3 * n + 4
+    embed_out, attn_logits, block_out, logits = out[-4:]
+    assert embed_out.shape == (cfg.batch, cfg.seq, cfg.d_model)
+    assert attn_logits.shape == (cfg.batch, cfg.n_head, cfg.seq, cfg.seq)
+    assert block_out.shape == (cfg.batch, cfg.seq, cfg.d_model)
+    assert logits.shape == (cfg.batch, cfg.seq, cfg.vocab)
+
+
+def test_output_zero_init_gives_uniform_loss():
+    """With the App. D.2 zero-initialized readout the initial loss is
+    exactly log(vocab) at every width — the basis of the §8 check."""
+    for w in [16, 32]:
+        cfg = dataclasses.replace(CFG, d_model=w, d_head=w // 2, d_ffn=2 * w)
+        specs = M.transformer_param_specs(cfg)
+        params = [
+            jnp.ones(s.shape) if s.init == "ones"
+            else jnp.zeros(s.shape) if s.init == "zeros"
+            else M.det_fill(s.shape, 3, 0.1)
+            for s in specs
+        ]
+        _, evl, _ = M.make_transformer_steps(cfg)
+        tokens = M.det_tokens(cfg.batch, cfg.seq + 1, cfg.vocab, 2)
+        loss = jax.jit(evl)(tokens, *params, HP)[0]
+        np.testing.assert_allclose(loss, np.log(cfg.vocab), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# MLP / ResMLP
+# ---------------------------------------------------------------------------
+
+
+def _mlp_ref_step(cfg, specs, x, y, params, ms, lr_vec, hp):
+    def loss_fn(plist):
+        d = {s.name: t for s, t in zip(specs, plist)}
+        act = jax.nn.relu if cfg.act == "relu" else jnp.tanh
+        h = act(x @ d["w1"] + d["b1"])
+        h = act(h @ d["w2"] + d["b2"])
+        logits = (h @ d["w3"]) * hp[0]
+        if cfg.loss == "xent":
+            logz = jax.scipy.special.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+            return jnp.mean(logz - gold)
+        onehot = jax.nn.one_hot(y, cfg.d_out, dtype=jnp.float32)
+        return jnp.mean((logits - onehot) ** 2)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new = [
+        ref.sgd_update_ref(p, g, m, lr_vec[i], hp[1], hp[2])
+        for i, (p, g, m) in enumerate(zip(params, grads, ms))
+    ]
+    return loss, [t[0] for t in new]
+
+
+@pytest.mark.parametrize("act,loss", [("relu", "xent"), ("tanh", "xent"), ("tanh", "mse")])
+def test_mlp_train_step_matches_reference(act, loss):
+    cfg = M.MlpConfig(d_in=12, width=16, d_out=4, batch=6, act=act, loss=loss)
+    specs = M.mlp_param_specs(cfg)
+    params = [M.det_fill(s.shape, 50 + i, 0.2) for i, s in enumerate(specs)]
+    ms = [jnp.zeros(s.shape) for s in specs]
+    lr_vec = jnp.full((len(specs),), 0.05, jnp.float32)
+    hp = jnp.array([1.5, 0.9, 0.01, 0, 0, 0, 0, 0], jnp.float32)
+    x = M.det_fill((cfg.batch, cfg.d_in), 99, 1.0)
+    y = M.det_tokens(cfg.batch, 1, cfg.d_out, 98).reshape(cfg.batch)
+
+    train, _ = M.make_mlp_steps(cfg)
+    out = jax.jit(train)(x, y, *params, *ms, lr_vec, hp)
+    rloss, rp = _mlp_ref_step(cfg, specs, x, y, params, ms, lr_vec, hp)
+    np.testing.assert_allclose(out[0], rloss, rtol=1e-4, atol=1e-5)
+    for a, e in zip(out[1 : 1 + len(specs)], rp):
+        np.testing.assert_allclose(a, e, rtol=1e-3, atol=1e-5)
+
+
+def test_resmlp_learns():
+    cfg = M.ResMlpConfig(d_in=12, width=16, n_block=2, d_out=4, batch=8)
+    specs = M.resmlp_param_specs(cfg)
+    params = [
+        jnp.ones(s.shape) if s.init == "ones"
+        else jnp.zeros(s.shape) if s.init == "zeros"
+        else M.det_fill(s.shape, 60 + i, 0.2)
+        for i, s in enumerate(specs)
+    ]
+    ms = [jnp.zeros(s.shape) for s in specs]
+    lr_vec = jnp.full((len(specs),), 0.05, jnp.float32)
+    hp = jnp.array([1.0, 0.9, 0.0, 0, 0, 0, 0, 0], jnp.float32)
+    x = M.det_fill((cfg.batch, cfg.d_in), 1, 1.0)
+    y = M.det_tokens(cfg.batch, 1, cfg.d_out, 2).reshape(cfg.batch)
+    train, _ = M.make_resmlp_steps(cfg)
+    train = jax.jit(train)
+    losses = []
+    for _ in range(6):
+        out = train(x, y, *params, *ms, lr_vec, hp)
+        losses.append(float(out[0]))
+        params = list(out[1 : 1 + len(specs)])
+        ms = list(out[1 + len(specs) :])
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# deterministic-fill golden stability (cross-language contract)
+# ---------------------------------------------------------------------------
+
+
+def test_splitmix64_known_values():
+    # Anchors for the Rust implementation (rust/src/init/rng.rs tests use
+    # the same constants).
+    assert M.splitmix64(0) == 0xE220A8397B1DCDAF
+    assert M.splitmix64(1) == 0x910A2DEC89025CC1
+    assert M.splitmix64(0xDEADBEEF) == 0x4ADFB90F68C9EB9B
+
+
+def test_det_fill_deterministic_and_scaled():
+    a = M.det_fill((4, 8), 7, 0.02)
+    b = M.det_fill((4, 8), 7, 0.02)
+    np.testing.assert_array_equal(a, b)
+    assert float(jnp.max(jnp.abs(a))) <= 0.02
+    c = M.det_fill((4, 8), 8, 0.02)
+    assert not np.allclose(a, c)
+
+
+def test_det_tokens_in_range():
+    t = M.det_tokens(4, 16, 11, 3)
+    assert int(t.min()) >= 0 and int(t.max()) < 11

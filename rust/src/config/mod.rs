@@ -1,0 +1,241 @@
+//! Experiment configuration files: a TOML-subset parser + typed run
+//! configs, so sweeps are reproducible from checked-in files rather than
+//! CLI flags (the "real config system" a framework needs).
+//!
+//! Supported TOML subset: `[section]` and `[section.sub]` headers,
+//! `key = value` with string/float/int/bool/array-of-scalars values, `#`
+//! comments.  That covers every config this repo ships; exotic TOML
+//! (dates, inline tables, multi-line strings) is intentionally rejected.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::mup::HyperParams;
+use crate::train::Schedule;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// section -> key -> value
+#[derive(Debug, Default, Clone)]
+pub struct Config {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Config {
+    pub fn parse(src: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in src.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    bail!("line {}: unterminated section header", lineno + 1);
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let val = parse_value(v.trim())
+                .with_context(|| format!("line {}: bad value {v:?}", lineno + 1))?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), val);
+        }
+        Ok(cfg)
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Config> {
+        Config::parse(&std::fs::read_to_string(path)?)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    pub fn f64_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, section: &str, key: &str, default: usize) -> usize {
+        self.f64_or(section, key, default as f64) as usize
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    /// Materialize the `[hyperparams]` section onto defaults.
+    pub fn hyperparams(&self) -> HyperParams {
+        let mut hp = HyperParams::default();
+        if let Some(s) = self.sections.get("hyperparams") {
+            for (k, v) in s {
+                if let Some(x) = v.as_f64() {
+                    match k.as_str() {
+                        "lr" => hp.lr = x,
+                        "sigma" => hp.sigma = x,
+                        "alpha_output" => hp.alpha_output = x,
+                        "alpha_attn" => hp.alpha_attn = x,
+                        "alpha_embed" => hp.alpha_embed = x,
+                        "lr_emb_ratio" => hp.lr_emb_ratio = x,
+                        "beta1" => hp.beta1 = x,
+                        "beta2" => hp.beta2 = x,
+                        "eps" => hp.eps = x,
+                        "weight_decay" => hp.weight_decay = x,
+                        "momentum" => hp.momentum = x,
+                        _ => {}
+                    }
+                }
+            }
+        }
+        hp
+    }
+
+    /// `[train] schedule = "..."`.
+    pub fn schedule(&self) -> Schedule {
+        Schedule::named(&self.str_or("train", "schedule", "constant"))
+            .unwrap_or(Schedule::Constant)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect '#' inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if s.starts_with('"') && s.ends_with('"') && s.len() >= 2 {
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if s.starts_with('[') && s.ends_with(']') {
+        let inner = &s[1..s.len() - 1];
+        let mut vals = Vec::new();
+        if !inner.trim().is_empty() {
+            for part in inner.split(',') {
+                vals.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(Value::Arr(vals));
+    }
+    if let Ok(n) = s.parse::<f64>() {
+        return Ok(Value::Num(n));
+    }
+    bail!("unparseable value {s:?}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# a run config
+[run]
+variant = "tfm_post_w128_d2"
+steps = 100          # comment after value
+seeds = [0, 1, 2]
+
+[train]
+schedule = "cosine"
+
+[hyperparams]
+lr = 2e-3
+alpha_output = 4.0
+weight_decay = 0.01
+"#;
+
+    #[test]
+    fn parses_sections_and_values() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("run", "variant", ""), "tfm_post_w128_d2");
+        assert_eq!(c.usize_or("run", "steps", 0), 100);
+        match c.get("run", "seeds").unwrap() {
+            Value::Arr(a) => assert_eq!(a.len(), 3),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn hyperparams_overlay() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let hp = c.hyperparams();
+        assert_eq!(hp.lr, 2e-3);
+        assert_eq!(hp.alpha_output, 4.0);
+        assert_eq!(hp.weight_decay, 0.01);
+        assert_eq!(hp.beta1, 0.9); // default preserved
+    }
+
+    #[test]
+    fn schedule_lookup() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.schedule(), Schedule::Cosine);
+        let d = Config::parse("").unwrap();
+        assert_eq!(d.schedule(), Schedule::Constant);
+    }
+
+    #[test]
+    fn string_with_hash_kept() {
+        let c = Config::parse("[a]\nk = \"x # y\"\n").unwrap();
+        assert_eq!(c.str_or("a", "k", ""), "x # y");
+    }
+
+    #[test]
+    fn errors() {
+        assert!(Config::parse("[oops\n").is_err());
+        assert!(Config::parse("[a]\nnovalue\n").is_err());
+        assert!(Config::parse("[a]\nk = @bogus\n").is_err());
+    }
+
+    #[test]
+    fn defaults_for_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.f64_or("x", "y", 1.5), 1.5);
+        assert_eq!(c.str_or("x", "y", "z"), "z");
+    }
+}

@@ -1,0 +1,160 @@
+//! Coordinate checking (Appendix D.1, Fig. 5).
+//!
+//! Trains each width for a few Adam/SGD steps on a *fixed probe batch*
+//! (coord variants emit the raw activation probes), records the
+//! coordinate RMS of `x_t − x_0` for each probed activation, and fits the
+//! growth exponent of that RMS against width.  A correct μP
+//! implementation shows exponents ≈ 0 everywhere; SP shows Θ(width^a),
+//! a > 0, for logits and attention logits (the paper's "incorrect
+//! implementations blow up or shrink with width" debugging story).
+
+use anyhow::Result;
+use std::collections::BTreeMap;
+
+use crate::data::{DataSource, Split};
+use crate::init;
+use crate::model::BaseShape;
+use crate::runtime::session::StepInputs;
+use crate::runtime::{Runtime, TrainSession};
+use crate::stats;
+use crate::train::{hp_vec, RunSpec};
+
+/// RMS of coordinate deltas per probe per step: `deltas[probe][t]` is the
+/// coordinate RMS of x_t − x_0 (t = 1..steps), mirroring Fig. 5's y-axis.
+#[derive(Debug, Clone)]
+pub struct CoordRecord {
+    pub width: usize,
+    pub deltas: BTreeMap<String, Vec<f64>>,
+    /// RMS of the activations themselves at t = 0 (initial scale check)
+    pub init_rms: BTreeMap<String, f64>,
+}
+
+/// Run a coordinate check on one coord-variant for `steps` update steps.
+pub fn coord_check(
+    rt: &Runtime,
+    spec: &RunSpec,
+    data: &dyn DataSource,
+    steps: usize,
+) -> Result<CoordRecord> {
+    let variant = rt.manifest().get(&spec.variant)?.clone();
+    assert_eq!(
+        variant.kind,
+        crate::runtime::Kind::Coord,
+        "coord_check needs a __coord variant"
+    );
+    let params = init::init_params(&variant, &spec.par, &spec.hp, &spec.base, spec.seed);
+    let base_lr = init::lr_vec(&variant, &spec.par, &spec.hp, &spec.base);
+    let hp_v = hp_vec(spec, rt)?;
+    let mut session = TrainSession::new(rt, &spec.variant, params)?;
+
+    // fixed probe batch: same tokens every step, like Fig. 5
+    let batch = data.batch(Split::Train, 0);
+    let inputs = StepInputs {
+        lr_vec: base_lr.clone(),
+        hp_vec: hp_v,
+    };
+
+    let mut baseline: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    let mut deltas: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let mut init_rms = BTreeMap::new();
+    for t in 0..=steps {
+        let (_loss, probes) = session.step_with_probes(&batch, &inputs)?;
+        for p in probes {
+            if t == 0 {
+                init_rms.insert(p.name.clone(), stats::rms(&p.data));
+                baseline.insert(p.name, p.data);
+            } else {
+                let base = &baseline[&p.name];
+                let diff: Vec<f32> = p
+                    .data
+                    .iter()
+                    .zip(base)
+                    .map(|(&a, &b)| a - b)
+                    .collect();
+                deltas
+                    .entry(p.name)
+                    .or_default()
+                    .push(stats::rms(&diff));
+            }
+        }
+    }
+    Ok(CoordRecord {
+        width: variant.config.get("d_model").unwrap_or(0),
+        deltas,
+        init_rms,
+    })
+}
+
+/// Growth exponents across widths for each probe at the last recorded
+/// step: slope of log(rms Δ) vs log(width).
+pub fn growth_exponents(records: &[CoordRecord]) -> BTreeMap<String, f64> {
+    let mut out = BTreeMap::new();
+    if records.len() < 2 {
+        return out;
+    }
+    let probe_names: Vec<String> = records[0].deltas.keys().cloned().collect();
+    for name in probe_names {
+        let mut widths = Vec::new();
+        let mut vals = Vec::new();
+        for r in records {
+            if let Some(d) = r.deltas.get(&name) {
+                if let Some(&last) = d.last() {
+                    if last.is_finite() && last > 0.0 {
+                        widths.push(r.width as f64);
+                        vals.push(last);
+                    }
+                }
+            }
+        }
+        if widths.len() >= 2 {
+            out.insert(name, stats::growth_exponent(&widths, &vals));
+        }
+    }
+    out
+}
+
+/// The §8 / App. D.1 verdict: a μP implementation passes when no probe's
+/// update size grows faster than `tol` with width.
+pub fn passes_mup_check(exponents: &BTreeMap<String, f64>, tol: f64) -> bool {
+    exponents.values().all(|&e| e < tol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(width: usize, val: f64) -> CoordRecord {
+        let mut deltas = BTreeMap::new();
+        deltas.insert("logits".to_string(), vec![val / 2.0, val]);
+        CoordRecord {
+            width,
+            deltas,
+            init_rms: BTreeMap::new(),
+        }
+    }
+
+    #[test]
+    fn exponents_from_powerlaw() {
+        // Δrms = 0.1·sqrt(width) -> exponent 0.5
+        let recs: Vec<CoordRecord> = [64, 128, 256, 512]
+            .iter()
+            .map(|&w| rec(w, 0.1 * (w as f64).sqrt()))
+            .collect();
+        let e = growth_exponents(&recs);
+        assert!((e["logits"] - 0.5).abs() < 1e-9);
+        assert!(!passes_mup_check(&e, 0.2));
+    }
+
+    #[test]
+    fn flat_deltas_pass() {
+        let recs: Vec<CoordRecord> = [64, 128, 256].iter().map(|&w| rec(w, 0.3)).collect();
+        let e = growth_exponents(&recs);
+        assert!(e["logits"].abs() < 1e-9);
+        assert!(passes_mup_check(&e, 0.2));
+    }
+
+    #[test]
+    fn too_few_records_empty() {
+        assert!(growth_exponents(&[rec(64, 1.0)]).is_empty());
+    }
+}

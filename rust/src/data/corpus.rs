@@ -1,0 +1,186 @@
+//! Zipf-Markov synthetic language corpus.
+//!
+//! A token stream with genuine sequential structure: each next token is,
+//! with probability `copy_p`, a deterministic affine function of the
+//! previous token (a learnable "bigram grammar"), with probability
+//! `induct_p` a *copy of the token that followed the previous occurrence
+//! of the current token* earlier in the window (an induction-head
+//! pattern, so attention — not just embeddings — carries signal), and
+//! otherwise a Zipf-distributed "unigram noise" draw.
+//!
+//! A 2-layer Transformer reduces loss well below the unigram entropy by
+//! learning all three components, and the loss is sensitive to LR over
+//! ~3 orders of magnitude — the property the μTransfer experiments need.
+//! Validation uses a disjoint seed stream.
+
+use super::{DataSource, Split};
+use crate::init::rng::{zipf_cdf, Rng};
+use crate::runtime::DataBatch;
+
+#[derive(Debug, Clone)]
+pub struct CorpusSpec {
+    pub vocab: usize,
+    /// P(bigram rule)
+    pub copy_p: f64,
+    /// P(induction copy)
+    pub induct_p: f64,
+    /// Zipf exponent of the noise component
+    pub zipf_s: f64,
+    /// bigram rule: next = (a·prev + b) mod vocab
+    pub a: usize,
+    pub b: usize,
+}
+
+impl CorpusSpec {
+    pub fn default_for_vocab(vocab: usize) -> CorpusSpec {
+        CorpusSpec {
+            vocab,
+            copy_p: 0.55,
+            induct_p: 0.2,
+            zipf_s: 1.1,
+            a: 5,
+            b: 3,
+        }
+    }
+
+    /// Per-token entropy lower bound if only the bigram rule is learned
+    /// (nats) — used by tests to check the task is actually learnable.
+    pub fn structured_fraction(&self) -> f64 {
+        self.copy_p + self.induct_p
+    }
+}
+
+pub struct LmSource {
+    spec: CorpusSpec,
+    batch: usize,
+    seq: usize,
+    seed: u64,
+    cdf: Vec<f64>,
+}
+
+impl LmSource {
+    pub fn new(spec: CorpusSpec, batch: usize, seq: usize, seed: u64) -> LmSource {
+        let cdf = zipf_cdf(spec.vocab, spec.zipf_s);
+        LmSource {
+            spec,
+            batch,
+            seq,
+            seed,
+            cdf,
+        }
+    }
+
+    /// Generate one row of `len` tokens from its own RNG stream.
+    fn row(&self, rng: &mut Rng, len: usize) -> Vec<i32> {
+        let v = self.spec.vocab;
+        let mut out = Vec::with_capacity(len);
+        let mut prev = rng.below(v);
+        out.push(prev as i32);
+        // successor memory for the induction pattern
+        let mut succ: Vec<Option<usize>> = vec![None; v];
+        for _ in 1..len {
+            let u = rng.uniform();
+            let next = if u < self.spec.copy_p {
+                (self.spec.a * prev + self.spec.b) % v
+            } else if u < self.spec.copy_p + self.spec.induct_p {
+                succ[prev].unwrap_or_else(|| rng.zipf(v, self.spec.zipf_s, &self.cdf))
+            } else {
+                rng.zipf(v, self.spec.zipf_s, &self.cdf)
+            };
+            succ[prev] = Some(next);
+            out.push(next as i32);
+            prev = next;
+        }
+        out
+    }
+}
+
+impl DataSource for LmSource {
+    fn batch(&self, split: Split, step: usize) -> Vec<DataBatch> {
+        // disjoint stream ids: even = train, odd = val
+        let stream = (step as u64) * 2 + if split == Split::Val { 1 } else { 0 };
+        let base = Rng::new(self.seed ^ 0xC0FFEE).fork(stream);
+        let len = self.seq + 1; // model slices x = [:, :S], y = [:, 1:]
+        let mut tokens = Vec::with_capacity(self.batch * len);
+        for row_i in 0..self.batch {
+            let mut rng = base.fork(row_i as u64);
+            tokens.extend(self.row(&mut rng, len));
+        }
+        vec![DataBatch::I32(tokens, vec![self.batch, len])]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn get(src: &LmSource, split: Split, step: usize) -> Vec<i32> {
+        match &src.batch(split, step)[0] {
+            DataBatch::I32(v, shape) => {
+                assert_eq!(shape, &vec![src.batch, src.seq + 1]);
+                v.clone()
+            }
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn deterministic_and_split_disjoint() {
+        let s = LmSource::new(CorpusSpec::default_for_vocab(64), 4, 16, 9);
+        let a = get(&s, Split::Train, 0);
+        let b = get(&s, Split::Train, 0);
+        assert_eq!(a, b);
+        let c = get(&s, Split::Train, 1);
+        assert_ne!(a, c);
+        let v = get(&s, Split::Val, 0);
+        assert_ne!(a, v);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let s = LmSource::new(CorpusSpec::default_for_vocab(64), 8, 32, 1);
+        for step in 0..4 {
+            let t = get(&s, Split::Train, step);
+            assert!(t.iter().all(|&x| (0..64).contains(&x)));
+        }
+    }
+
+    #[test]
+    fn bigram_structure_present() {
+        // the (a·prev+b) rule should hold for roughly copy_p of transitions
+        let spec = CorpusSpec::default_for_vocab(64);
+        let s = LmSource::new(spec.clone(), 16, 64, 5);
+        let t = get(&s, Split::Train, 0);
+        let len = 65;
+        let mut hits = 0;
+        let mut total = 0;
+        for row in 0..16 {
+            for i in 0..len - 1 {
+                let prev = t[row * len + i] as usize;
+                let next = t[row * len + i + 1] as usize;
+                total += 1;
+                if next == (spec.a * prev + spec.b) % spec.vocab {
+                    hits += 1;
+                }
+            }
+        }
+        let frac = hits as f64 / total as f64;
+        assert!(
+            frac > spec.copy_p - 0.1 && frac < spec.copy_p + 0.2,
+            "bigram fraction {frac}"
+        );
+    }
+
+    #[test]
+    fn zipf_noise_skews_low_tokens() {
+        let spec = CorpusSpec {
+            copy_p: 0.0,
+            induct_p: 0.0,
+            ..CorpusSpec::default_for_vocab(64)
+        };
+        let s = LmSource::new(spec, 16, 128, 2);
+        let t = get(&s, Split::Train, 0);
+        let low = t.iter().filter(|&&x| x < 8).count();
+        assert!(low as f64 / t.len() as f64 > 0.3);
+    }
+}

@@ -1,0 +1,47 @@
+//! Synthetic data substrates (DESIGN.md §2 substitutions).
+//!
+//! The paper's corpora (Wikitext-2, IWSLT, the BERT/GPT-3 pretraining
+//! sets, CIFAR-10) are hardware/data-gated; these generators produce
+//! deterministic, *learnable* workloads that exercise the same code paths
+//! and — crucially for this paper — have a non-trivial HP landscape whose
+//! stability across width is what every experiment measures.
+
+pub mod corpus;
+pub mod vision;
+
+use crate::runtime::{DataBatch, Variant};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Val,
+}
+
+/// A source of batches for a variant.  `step` indexes the batch stream:
+/// the same (seed, split, step) always yields the same batch, so every
+/// trial of a sweep is reproducible and SP/μP comparisons see identical
+/// data order.
+pub trait DataSource {
+    fn batch(&self, split: Split, step: usize) -> Vec<DataBatch>;
+}
+
+/// Build the default data source for a manifest variant.
+pub fn source_for(variant: &Variant, seed: u64) -> Box<dyn DataSource> {
+    match variant.arch {
+        crate::runtime::Arch::Transformer => Box::new(corpus::LmSource::new(
+            corpus::CorpusSpec::default_for_vocab(variant.config.req("vocab")),
+            variant.config.req("batch"),
+            variant.config.req("seq"),
+            seed,
+        )),
+        _ => Box::new(vision::VisionSource::new(
+            vision::VisionSpec {
+                d_in: variant.config.req("d_in"),
+                n_class: variant.config.req("d_out"),
+                ..vision::VisionSpec::default()
+            },
+            variant.config.req("batch"),
+            seed,
+        )),
+    }
+}

@@ -1,0 +1,286 @@
+//! Shared experiment machinery: scale presets and the LR-sweep-across-
+//! widths primitive that half the paper's figures are built from.
+
+use anyhow::Result;
+
+use crate::model::BaseShape;
+use crate::mup::{HyperParams, Optimizer, Parametrization, Scheme};
+use crate::runtime::Runtime;
+use crate::sweep::{Job, JobResult, Sweep};
+use crate::train::{RunSpec, Schedule};
+use crate::tuner::Assignment;
+
+/// Experiment sizing.  `ci` finishes the full suite on a single CPU core;
+/// `paper` mirrors the paper's widths/steps (for real hardware).  All
+/// recorded numbers in EXPERIMENTS.md state which preset produced them.
+#[derive(Debug, Clone)]
+pub struct Scale {
+    pub name: String,
+    /// transformer width ladder (d_model)
+    pub widths: Vec<usize>,
+    /// MLP width ladder
+    pub mlp_widths: Vec<usize>,
+    /// training steps per run
+    pub steps: usize,
+    /// seeds averaged per point
+    pub seeds: usize,
+    /// log2-LR grid: (lo, hi, step) over powers of two
+    pub lr_grid: (f64, f64, f64),
+    /// samples per random search
+    pub search_samples: usize,
+    /// independent tuning trials for percentile rows
+    pub trials: usize,
+    pub target_steps: usize,
+}
+
+impl Scale {
+    pub fn ci() -> Scale {
+        Scale {
+            name: "ci".into(),
+            widths: vec![32, 64, 128],
+            mlp_widths: vec![64, 128, 256, 512, 1024],
+            steps: 30,
+            seeds: 1,
+            lr_grid: (-11.0, -5.0, 1.0),
+            search_samples: 8,
+            trials: 3,
+            target_steps: 60,
+        }
+    }
+
+    /// quick smoke sizing for tests
+    pub fn smoke() -> Scale {
+        Scale {
+            name: "smoke".into(),
+            widths: vec![32, 64],
+            mlp_widths: vec![64, 128],
+            steps: 8,
+            seeds: 1,
+            lr_grid: (-9.0, -7.0, 1.0),
+            search_samples: 3,
+            trials: 2,
+            target_steps: 12,
+        }
+    }
+
+    pub fn paper() -> Scale {
+        Scale {
+            name: "paper".into(),
+            widths: vec![32, 64, 128, 256, 512],
+            mlp_widths: vec![64, 128, 256, 512, 1024, 2048],
+            steps: 300,
+            seeds: 5,
+            lr_grid: (-14.0, -4.0, 0.5),
+            search_samples: 64,
+            trials: 25,
+            target_steps: 1000,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Scale> {
+        match name {
+            "ci" => Some(Scale::ci()),
+            "paper" => Some(Scale::paper()),
+            "smoke" => Some(Scale::smoke()),
+            _ => None,
+        }
+    }
+
+    /// The log2 LR ladder.
+    pub fn lrs(&self) -> Vec<f64> {
+        let (lo, hi, step) = self.lr_grid;
+        let mut out = Vec::new();
+        let mut z = lo;
+        while z <= hi + 1e-9 {
+            out.push(2f64.powf(z));
+            z += step;
+        }
+        out
+    }
+}
+
+/// Name of the post/pre-LN transformer train variant at width `w`, depth 2.
+pub fn tfm_variant(pre_ln: bool, w: usize) -> String {
+    format!("tfm_{}_w{w}_d2", if pre_ln { "pre" } else { "post" })
+}
+
+/// The μP base shape used throughout: the narrowest ladder width.
+pub fn tfm_base(base_w: usize) -> BaseShape {
+    BaseShape::Tfm {
+        d_model: base_w,
+        n_head: 4,
+        d_head: base_w / 4,
+        d_ffn: 4 * base_w,
+    }
+}
+
+/// One (scheme, width, lr, seed) training job for an LR sweep.
+#[allow(clippy::too_many_arguments)]
+pub fn lr_job(
+    label: &str,
+    variant: &str,
+    scheme: Scheme,
+    opt: Optimizer,
+    base: BaseShape,
+    lr: f64,
+    seed: u64,
+    steps: usize,
+    hp0: &HyperParams,
+) -> Job {
+    let par = match scheme {
+        Scheme::Mup => Parametrization::mup(opt),
+        Scheme::Sp => Parametrization::standard(opt),
+    };
+    let base = match scheme {
+        Scheme::Mup => base,
+        Scheme::Sp => BaseShape::SameAsTarget,
+    };
+    let hp = HyperParams { lr, ..hp0.clone() };
+    let mut spec = RunSpec::new(variant, par, hp, base);
+    spec.steps = steps;
+    spec.seed = seed;
+    spec.schedule = Schedule::Constant;
+    Job {
+        key: format!("{label}/{variant}/{scheme:?}/lr{lr:.3e}/s{seed}"),
+        spec,
+        assignment: Assignment::single("lr", lr),
+        data_seed: 7,
+    }
+}
+
+/// The Fig. 1/3 primitive: for each width and LR (and seed), train and
+/// record the final training loss.  Returns rows of
+/// (width, lr, mean final loss over seeds, any_diverged) per scheme.
+pub struct LrSweepResult {
+    pub scheme: Scheme,
+    /// (width, lr, loss, diverged)
+    pub points: Vec<(usize, f64, f64, bool)>,
+    pub curves: Vec<((usize, f64, u64), Vec<f64>)>,
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn lr_sweep(
+    rt: &Runtime,
+    sweep: &mut Sweep,
+    label: &str,
+    variant_for_width: &dyn Fn(usize) -> String,
+    widths: &[usize],
+    scheme: Scheme,
+    opt: Optimizer,
+    base_for_width: &dyn Fn(usize) -> BaseShape,
+    lrs: &[f64],
+    scale: &Scale,
+    hp0: &HyperParams,
+) -> Result<LrSweepResult> {
+    let mut jobs = Vec::new();
+    for &w in widths {
+        for &lr in lrs {
+            for s in 0..scale.seeds {
+                jobs.push(lr_job(
+                    label,
+                    &variant_for_width(w),
+                    scheme,
+                    opt,
+                    base_for_width(w),
+                    lr,
+                    s as u64,
+                    scale.steps,
+                    hp0,
+                ));
+            }
+        }
+    }
+    let results = sweep.run(&jobs)?;
+    let mut points = Vec::new();
+    let mut curves = Vec::new();
+    let mut idx = 0;
+    for &w in widths {
+        for &lr in lrs {
+            let mut losses = Vec::new();
+            let mut diverged = false;
+            for s in 0..scale.seeds {
+                let r: &JobResult = &results[idx];
+                idx += 1;
+                diverged |= r.trial.diverged;
+                losses.push(r.trial.train_loss);
+                curves.push(((w, lr, s as u64), r.train_curve.clone()));
+            }
+            let finite: Vec<f64> = losses.iter().cloned().filter(|l| l.is_finite()).collect();
+            let mean = if diverged || finite.is_empty() {
+                f64::NAN
+            } else {
+                crate::stats::mean(&finite)
+            };
+            points.push((w, lr, mean, diverged));
+        }
+    }
+    Ok(LrSweepResult {
+        scheme,
+        points,
+        curves,
+    })
+}
+
+/// Optimal LR per width from sweep points: (width, argmin-lr, best loss).
+pub fn optima(points: &[(usize, f64, f64, bool)]) -> Vec<(usize, f64, f64)> {
+    let mut widths: Vec<usize> = points.iter().map(|p| p.0).collect();
+    widths.dedup();
+    widths
+        .into_iter()
+        .map(|w| {
+            let mut best = (f64::NAN, f64::NAN);
+            for &(pw, lr, loss, div) in points {
+                if pw == w && !div && loss.is_finite() && (best.1.is_nan() || loss < best.1) {
+                    best = (lr, loss);
+                }
+            }
+            (w, best.0, best.1)
+        })
+        .collect()
+}
+
+/// log2 shift of the optimal LR between the narrowest and widest model —
+/// the headline "stability" number (≈0 under μP, ≥2-3 under SP in Fig. 1).
+pub fn optimum_shift_log2(opts: &[(usize, f64, f64)]) -> f64 {
+    let valid: Vec<&(usize, f64, f64)> = opts.iter().filter(|o| o.1.is_finite()).collect();
+    if valid.len() < 2 {
+        return f64::NAN;
+    }
+    (valid.last().unwrap().1 / valid[0].1).log2()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scale_lr_ladder() {
+        let s = Scale::ci();
+        let lrs = s.lrs();
+        assert_eq!(lrs.len(), 7);
+        assert!((lrs[0] - 2f64.powi(-11)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn optima_picks_argmin_per_width() {
+        let pts = vec![
+            (64, 0.1, 2.0, false),
+            (64, 0.2, 1.5, false),
+            (64, 0.4, f64::NAN, true),
+            (128, 0.1, 1.8, false),
+            (128, 0.2, 1.9, false),
+        ];
+        let o = optima(&pts);
+        assert_eq!(o.len(), 2);
+        assert_eq!(o[0], (64, 0.2, 1.5));
+        assert_eq!(o[1], (128, 0.1, 1.8));
+        // optimum halved from 0.2 to 0.1 -> shift -1 in log2
+        assert!((optimum_shift_log2(&o) + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn variant_names() {
+        assert_eq!(tfm_variant(true, 128), "tfm_pre_w128_d2");
+        assert_eq!(tfm_variant(false, 64), "tfm_post_w64_d2");
+    }
+}

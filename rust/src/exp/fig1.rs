@@ -1,0 +1,106 @@
+//! Figure 1: training loss vs learning rate across widths, SP vs μP, on
+//! post-LN Transformers trained with Adam.  The paper's headline plot:
+//! under SP the optimal LR drifts left with width and wide models can
+//! underperform; under μP the optimum is stable and wider is better.
+
+use anyhow::Result;
+
+use crate::mup::{HyperParams, Optimizer, Scheme};
+use crate::report::Reporter;
+use crate::runtime::Runtime;
+use crate::sweep::Sweep;
+use crate::util::json::{jnum, Json};
+use crate::util::table::{fmt_loss, Table};
+
+use super::common::{self, Scale};
+
+pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    run_inner(rt, rep, scale, false, "fig1")
+}
+
+pub(crate) fn run_inner(
+    rt: &Runtime,
+    rep: &Reporter,
+    scale: &Scale,
+    pre_ln: bool,
+    name: &str,
+) -> Result<()> {
+    let mut sweep = Sweep::new(rt).with_journal(&rep.path(&format!("{name}.journal")))?;
+    sweep.verbose = true;
+    let hp0 = HyperParams::default();
+    let lrs = scale.lrs();
+    let base_w = scale.widths[0];
+    let mut series = Json::obj();
+
+    let mut summary = Table::new(
+        &format!("{name}: optimal LR and best loss per width (post-LN={})", !pre_ln),
+        &["scheme", "width", "opt log2(lr)", "best loss"],
+    );
+    for scheme in [Scheme::Sp, Scheme::Mup] {
+        let res = common::lr_sweep(
+            rt,
+            &mut sweep,
+            name,
+            &|w| common::tfm_variant(pre_ln, w),
+            &scale.widths,
+            scheme,
+            Optimizer::Adam,
+            &|_w| common::tfm_base(base_w),
+            &lrs,
+            scale,
+            &hp0,
+        )?;
+        let mut t = Table::new(
+            &format!("{name} ({scheme:?}): final train loss vs LR x width"),
+            &["width", "log2(lr)", "loss"],
+        );
+        for &(w, lr, loss, div) in &res.points {
+            t.row(vec![
+                w.to_string(),
+                format!("{:.2}", lr.log2()),
+                if div { "diverged".into() } else { fmt_loss(loss) },
+            ]);
+        }
+        rep.table(&format!("{name}_{scheme:?}"), &t)?;
+        let opts = common::optima(&res.points);
+        for &(w, lr, loss) in &opts {
+            summary.row(vec![
+                format!("{scheme:?}"),
+                w.to_string(),
+                if lr.is_nan() {
+                    "all diverged".into()
+                } else {
+                    format!("{:.2}", lr.log2())
+                },
+                fmt_loss(loss),
+            ]);
+        }
+        let shift = common::optimum_shift_log2(&opts);
+        rep.note(&format!(
+            "{name} {scheme:?}: optimal-LR shift from w{} to w{}: {:+.2} doublings",
+            scale.widths[0],
+            scale.widths.last().unwrap(),
+            shift
+        ));
+        series.set(
+            &format!("{scheme:?}"),
+            Json::Arr(
+                res.points
+                    .iter()
+                    .map(|&(w, lr, loss, div)| {
+                        Json::from_pairs(vec![
+                            ("width", jnum(w as f64)),
+                            ("lr", jnum(lr)),
+                            ("loss", jnum(loss)),
+                            ("diverged", Json::Bool(div)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        series.set(&format!("{scheme:?}_shift_log2"), jnum(shift));
+    }
+    rep.table(&format!("{name}_summary"), &summary)?;
+    rep.json(name, &series)?;
+    Ok(())
+}

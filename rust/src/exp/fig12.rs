@@ -1,0 +1,94 @@
+//! Figure 12 (App. E.2): varying the width *ratio* — sweeping d_ffn by
+//! 16x at fixed d_model — keeps the μP LR landscape stable.  Under Adam,
+//! any layer widths going to infinity give the same limit, so the optimum
+//! should not move.
+
+use anyhow::Result;
+
+use crate::model::BaseShape;
+use crate::mup::{HyperParams, Optimizer, Scheme};
+use crate::report::Reporter;
+use crate::runtime::Runtime;
+use crate::sweep::Sweep;
+use crate::util::json::{jnum, Json};
+use crate::util::table::{fmt_loss, Table};
+
+use super::common::{self, Scale};
+
+pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    let mut sweep = Sweep::new(rt).with_journal(&rep.path("fig12.journal"))?;
+    sweep.verbose = true;
+    let ffns: Vec<usize> = if scale.name == "smoke" {
+        vec![128, 512]
+    } else {
+        vec![128, 256, 512, 1024, 2048]
+    };
+    let variant_for = |f: usize| {
+        if f == 512 {
+            "tfm_pre_w128_d2".to_string() // d_ffn = 4·128 is the default build
+        } else {
+            format!("tfm_pre_w128_d2_f{f}")
+        }
+    };
+    // μP base: smallest ffn (so ffn ratio is the transferred-across axis)
+    let base = BaseShape::Tfm {
+        d_model: 128,
+        n_head: 4,
+        d_head: 32,
+        d_ffn: ffns[0],
+    };
+    let lrs = scale.lrs();
+    let hp0 = HyperParams::default();
+    let res = common::lr_sweep(
+        rt,
+        &mut sweep,
+        "fig12",
+        &variant_for,
+        &ffns, // "widths" axis = d_ffn here
+        Scheme::Mup,
+        Optimizer::Adam,
+        &|_| base.clone(),
+        &lrs,
+        scale,
+        &hp0,
+    )?;
+    let opts = common::optima(&res.points);
+    let mut t = Table::new(
+        "fig12: μP optimal LR vs d_ffn at fixed d_model=128",
+        &["d_ffn", "ratio", "opt log2(lr)", "best loss"],
+    );
+    for &(f, lr, loss) in &opts {
+        t.row(vec![
+            f.to_string(),
+            format!("{}x", f / 128),
+            if lr.is_nan() { "-".into() } else { format!("{:.2}", lr.log2()) },
+            fmt_loss(loss),
+        ]);
+    }
+    let shift = common::optimum_shift_log2(&opts);
+    rep.note(&format!("fig12: optimum shift over 16x ffn ratio: {shift:+.2} doublings"));
+    rep.table("fig12_summary", &t)?;
+    rep.json(
+        "fig12",
+        &Json::from_pairs(vec![
+            ("shift_log2", jnum(shift)),
+            (
+                "points",
+                Json::Arr(
+                    res.points
+                        .iter()
+                        .map(|&(f, lr, loss, div)| {
+                            Json::from_pairs(vec![
+                                ("d_ffn", jnum(f as f64)),
+                                ("lr", jnum(lr)),
+                                ("loss", jnum(loss)),
+                                ("diverged", Json::Bool(div)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ]),
+    )?;
+    Ok(())
+}

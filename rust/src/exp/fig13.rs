@@ -1,0 +1,156 @@
+//! Figure 13 (App. E.2): μTransfer handles n_head-as-width — fix d_head,
+//! scale n_head (the GPT-3 scaling pattern) — and Figure 10 (App. D.4):
+//! a too-small d_head makes the attention-multiplier landscape noisy;
+//! enlarging d_head denoises it.
+
+use anyhow::Result;
+
+use crate::model::BaseShape;
+use crate::mup::{HyperParams, Optimizer, Parametrization, Scheme};
+use crate::report::Reporter;
+use crate::runtime::Runtime;
+use crate::sweep::{Job, Sweep};
+use crate::train::RunSpec;
+use crate::tuner::Assignment;
+use crate::util::json::{jnum, Json};
+use crate::util::table::{fmt_loss, Table};
+
+use super::common::{self, Scale};
+
+pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    let mut sweep = Sweep::new(rt).with_journal(&rep.path("fig13.journal"))?;
+    sweep.verbose = true;
+    let heads: Vec<usize> = if scale.name == "smoke" {
+        vec![2, 4]
+    } else {
+        vec![2, 4, 8, 16]
+    };
+    let base = BaseShape::Tfm {
+        d_model: 16 * heads[0],
+        n_head: heads[0],
+        d_head: 16,
+        d_ffn: 64 * heads[0],
+    };
+    let lrs = scale.lrs();
+    let hp0 = HyperParams::default();
+    let res = common::lr_sweep(
+        rt,
+        &mut sweep,
+        "fig13",
+        &|nh| format!("tfm_pre_nh{nh}_hd16"),
+        &heads,
+        Scheme::Mup,
+        Optimizer::Adam,
+        &|_| base.clone(),
+        &lrs,
+        scale,
+        &hp0,
+    )?;
+    let opts = common::optima(&res.points);
+    let mut t = Table::new(
+        "fig13: μP optimal LR when scaling n_head at fixed d_head=16",
+        &["n_head", "d_model", "opt log2(lr)", "best loss"],
+    );
+    for &(nh, lr, loss) in &opts {
+        t.row(vec![
+            nh.to_string(),
+            (16 * nh).to_string(),
+            if lr.is_nan() { "-".into() } else { format!("{:.2}", lr.log2()) },
+            fmt_loss(loss),
+        ]);
+    }
+    let shift = common::optimum_shift_log2(&opts);
+    rep.note(&format!("fig13: optimum shift scaling n_head 8x: {shift:+.2} doublings"));
+    rep.table("fig13_summary", &t)?;
+    rep.json(
+        "fig13",
+        &Json::from_pairs(vec![("shift_log2", jnum(shift))]),
+    )?;
+    Ok(())
+}
+
+/// Figure 10: α_attn landscape roughness at d_head = 4 vs 32.
+pub fn run_dk(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    let mut sweep = Sweep::new(rt).with_journal(&rep.path("fig10.journal"))?;
+    sweep.verbose = true;
+    let par = Parametrization::mup(Optimizer::Adam);
+    let alphas: Vec<f64> = (-3..=3).map(|z| 2f64.powi(z)).collect();
+    let mut t = Table::new(
+        "fig10: α_attn landscape vs d_head (roughness = mean |Δloss| between adjacent grid points)",
+        &["d_head", "roughness", "losses across α_attn grid"],
+    );
+    let mut series = Json::obj();
+    for (d_head, variant) in [(4usize, "tfm_pre_w128_d2_hd4"), (32, "tfm_pre_w128_d2")] {
+        let base = BaseShape::Tfm {
+            d_model: 128,
+            n_head: 4,
+            d_head,
+            d_ffn: 512,
+        };
+        let mut losses = Vec::new();
+        for &a in &alphas {
+            // average over seeds to isolate landscape (not batch) noise
+            let mut vals = Vec::new();
+            for s in 0..scale.seeds.max(2) {
+                let hp = HyperParams {
+                    lr: 2f64.powi(-8),
+                    alpha_attn: a,
+                    ..HyperParams::default()
+                };
+                let mut spec = RunSpec::new(variant, par, hp, base.clone());
+                spec.steps = scale.steps;
+                spec.seed = s as u64;
+                let job = Job {
+                    key: format!("fig10/hd{d_head}/a{a}/s{s}"),
+                    spec,
+                    assignment: Assignment::single("alpha_attn", a),
+                    data_seed: 7,
+                };
+                let r = sweep.run(&[job])?.remove(0);
+                if r.trial.train_loss.is_finite() {
+                    vals.push(r.trial.train_loss);
+                }
+            }
+            losses.push(if vals.is_empty() { f64::NAN } else { crate::stats::mean(&vals) });
+        }
+        let rough = roughness(&losses);
+        t.row(vec![
+            d_head.to_string(),
+            format!("{rough:.4}"),
+            losses.iter().map(|l| fmt_loss(*l)).collect::<Vec<_>>().join(" "),
+        ]);
+        series.set(
+            &format!("hd{d_head}"),
+            Json::Arr(losses.iter().map(|&l| jnum(l)).collect()),
+        );
+        series.set(&format!("hd{d_head}_roughness"), jnum(rough));
+    }
+    rep.table("fig10_summary", &t)?;
+    rep.json("fig10", &series)?;
+    Ok(())
+}
+
+/// Second-difference roughness of a 1-D loss landscape (0 for a smooth
+/// convex bowl sampled on a log grid).
+pub fn roughness(losses: &[f64]) -> f64 {
+    let finite: Vec<f64> = losses.iter().cloned().filter(|l| l.is_finite()).collect();
+    if finite.len() < 3 {
+        return f64::NAN;
+    }
+    let second: Vec<f64> = finite
+        .windows(3)
+        .map(|w| (w[0] - 2.0 * w[1] + w[2]).abs())
+        .collect();
+    crate::stats::mean(&second)
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn roughness_zero_for_linear() {
+        let xs: Vec<f64> = (0..10).map(|i| 2.0 + 0.1 * i as f64).collect();
+        assert!(super::roughness(&xs) < 1e-12);
+        let noisy: Vec<f64> = (0..10).map(|i| 2.0 + if i % 2 == 0 { 0.2 } else { 0.0 }).collect();
+        assert!(super::roughness(&noisy) > 0.1);
+    }
+}

@@ -1,0 +1,98 @@
+//! Figure 19 (App. G.2.1): μP HPs transfer across batch size, sequence
+//! length and training time.  For each scale axis we sweep LR at several
+//! settings and report the argmin drift.
+
+use anyhow::Result;
+
+use crate::mup::{HyperParams, Optimizer, Scheme};
+use crate::report::Reporter;
+use crate::runtime::Runtime;
+use crate::sweep::Sweep;
+use crate::util::json::{jnum, Json};
+use crate::util::table::{fmt_loss, Table};
+
+use super::common::{self, Scale};
+
+pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    let mut sweep = Sweep::new(rt).with_journal(&rep.path("fig19.journal"))?;
+    sweep.verbose = true;
+    let hp0 = HyperParams::default();
+    let lrs = scale.lrs();
+    let base = common::tfm_base(128); // base == target width: isolate scale axes
+    let mut t = Table::new(
+        "fig19: μP optimal LR across batch size / seq length / training steps (w128 d2)",
+        &["axis", "setting", "opt log2(lr)", "best loss"],
+    );
+    let mut series = Json::obj();
+
+    // --- batch size axis (variants differ) -----------------------------
+    let batches: Vec<(usize, String)> = vec![
+        (8, "tfm_pre_w128_d2_b8".into()),
+        (16, "tfm_pre_w128_d2".into()),
+        (32, "tfm_pre_w128_d2_b32".into()),
+    ];
+    let axis_rows = |sweep: &mut Sweep,
+                     settings: &[(usize, String)],
+                     steps_for: &dyn Fn(usize) -> usize,
+                     label: &str|
+     -> Result<Vec<(usize, f64, f64)>> {
+        let mut opts = Vec::new();
+        for (setting, variant) in settings {
+            let mut s2 = scale.clone();
+            s2.steps = steps_for(*setting);
+            let res = common::lr_sweep(
+                rt,
+                sweep,
+                &format!("fig19/{label}/{setting}"),
+                &|_| variant.clone(),
+                &[*setting],
+                Scheme::Mup,
+                Optimizer::Adam,
+                &|_| base.clone(),
+                &lrs,
+                &s2,
+                &hp0,
+            )?;
+            let o = common::optima(&res.points);
+            opts.push(o[0]);
+        }
+        Ok(opts)
+    };
+
+    let mut record = |label: &str, opts: &[(usize, f64, f64)], t: &mut Table, series: &mut Json| {
+        for &(s, lr, loss) in opts {
+            t.row(vec![
+                label.to_string(),
+                s.to_string(),
+                if lr.is_nan() { "-".into() } else { format!("{:.2}", lr.log2()) },
+                fmt_loss(loss),
+            ]);
+        }
+        let shift = common::optimum_shift_log2(opts);
+        series.set(&format!("{label}_shift_log2"), jnum(shift));
+    };
+
+    let b = axis_rows(&mut sweep, &batches, &|_| scale.steps, "batch")?;
+    record("batch", &b, &mut t, &mut series);
+
+    // --- sequence length axis -------------------------------------------
+    let seqs: Vec<(usize, String)> = vec![
+        (16, "tfm_pre_w128_d2_s16".into()),
+        (32, "tfm_pre_w128_d2".into()),
+        (64, "tfm_pre_w128_d2_s64".into()),
+    ];
+    let s = axis_rows(&mut sweep, &seqs, &|_| scale.steps, "seq")?;
+    record("seq_len", &s, &mut t, &mut series);
+
+    // --- training time axis (same variant, different step budgets) ------
+    let step_settings: Vec<(usize, String)> = [scale.steps / 2, scale.steps, scale.steps * 2]
+        .iter()
+        .map(|&n| (n.max(4), "tfm_pre_w128_d2".to_string()))
+        .collect();
+    let st = axis_rows(&mut sweep, &step_settings, &|n| n, "steps")?;
+    record("train_steps", &st, &mut t, &mut series);
+
+    rep.table("fig19_summary", &t)?;
+    rep.json("fig19", &series)?;
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! Figure 3: the Section-3 MLP — LR-vs-loss across hidden sizes under SP
+//! (optimum drifts ~an order of magnitude from width 256→8192) and μP
+//! (optimum stable), trained with SGD on the vision task.
+
+use anyhow::Result;
+
+use crate::model::BaseShape;
+use crate::mup::{HyperParams, Optimizer, Scheme};
+use crate::report::Reporter;
+use crate::runtime::Runtime;
+use crate::sweep::Sweep;
+use crate::util::json::{jnum, Json};
+use crate::util::table::{fmt_loss, Table};
+
+use super::common::{self, Scale};
+
+pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    run_mlp(rt, rep, scale, "mlp_w", "fig3")
+}
+
+pub(crate) fn run_mlp(
+    rt: &Runtime,
+    rep: &Reporter,
+    scale: &Scale,
+    prefix: &str,
+    name: &str,
+) -> Result<()> {
+    let mut sweep = Sweep::new(rt).with_journal(&rep.path(&format!("{name}.journal")))?;
+    sweep.verbose = true;
+    let hp0 = HyperParams::default();
+    // SGD wants larger LRs than Adam: shift the ladder up.
+    let lrs: Vec<f64> = scale.lrs().iter().map(|l| l * 2f64.powi(7)).collect();
+    let base_w = scale.mlp_widths[0];
+    let mut series = Json::obj();
+    let mut summary = Table::new(
+        &format!("{name}: MLP optimal LR per width (SGD)"),
+        &["scheme", "width", "opt log2(lr)", "best loss"],
+    );
+    for scheme in [Scheme::Sp, Scheme::Mup] {
+        let res = common::lr_sweep(
+            rt,
+            &mut sweep,
+            name,
+            &|w| format!("{prefix}{w}"),
+            &scale.mlp_widths,
+            scheme,
+            Optimizer::Sgd,
+            &|_w| BaseShape::Width(base_w),
+            &lrs,
+            scale,
+            &hp0,
+        )?;
+        let opts = common::optima(&res.points);
+        for &(w, lr, loss) in &opts {
+            summary.row(vec![
+                format!("{scheme:?}"),
+                w.to_string(),
+                if lr.is_nan() { "-".into() } else { format!("{:.2}", lr.log2()) },
+                fmt_loss(loss),
+            ]);
+        }
+        let shift = common::optimum_shift_log2(&opts);
+        rep.note(&format!("{name} {scheme:?}: optimum shift {shift:+.2} doublings"));
+        series.set(
+            &format!("{scheme:?}"),
+            Json::Arr(
+                res.points
+                    .iter()
+                    .map(|&(w, lr, loss, div)| {
+                        Json::from_pairs(vec![
+                            ("width", jnum(w as f64)),
+                            ("lr", jnum(lr)),
+                            ("loss", jnum(loss)),
+                            ("diverged", Json::Bool(div)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        );
+        series.set(&format!("{scheme:?}_shift_log2"), jnum(shift));
+    }
+    rep.table(&format!("{name}_summary"), &summary)?;
+    rep.json(name, &series)?;
+    Ok(())
+}

@@ -1,0 +1,188 @@
+//! Figure 4 (and Fig. 17 for post-LN): stability of four representative
+//! HPs under μP across width and depth — learning rate, output multiplier
+//! α_output, init std σ, and LR schedule.  For each HP we sweep its grid
+//! at several widths/depths with everything else fixed and report the
+//! argmin per setting; μP's claim is that the argmin column barely moves.
+
+use anyhow::Result;
+
+use crate::model::BaseShape;
+use crate::mup::{HyperParams, Optimizer, Parametrization};
+use crate::report::Reporter;
+use crate::runtime::Runtime;
+use crate::sweep::{Job, Sweep};
+use crate::train::{RunSpec, Schedule};
+use crate::tuner::Assignment;
+use crate::util::json::{jnum, jstr, Json};
+use crate::util::table::{fmt_loss, Table};
+
+use super::common::{self, Scale};
+
+pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    run_inner(rt, rep, scale, true, "fig4")
+}
+
+pub fn run_postln(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    run_inner(rt, rep, scale, false, "fig17")
+}
+
+fn settings(scale: &Scale, pre_ln: bool) -> Vec<(String, String)> {
+    // (label, variant): width ladder at depth 2, plus depth ladder at w128
+    // (depth transfer is pre-LN only, §6.1).
+    let mut v: Vec<(String, String)> = scale
+        .widths
+        .iter()
+        .map(|&w| (format!("w{w}"), common::tfm_variant(pre_ln, w)))
+        .collect();
+    if pre_ln {
+        // depth ladder (depth transfer is the §6.1 claim); ci keeps one
+        // depth point to fit the single-core budget
+        let depths: &[usize] = if scale.name == "paper" { &[4, 8] } else { &[4] };
+        for &d in depths {
+            v.push((format!("d{d}"), format!("tfm_pre_w128_d{d}")));
+        }
+    }
+    v
+}
+
+pub(crate) fn run_inner(
+    rt: &Runtime,
+    rep: &Reporter,
+    scale: &Scale,
+    pre_ln: bool,
+    name: &str,
+) -> Result<()> {
+    let mut sweep = Sweep::new(rt).with_journal(&rep.path(&format!("{name}.journal")))?;
+    sweep.verbose = true;
+    let par = Parametrization::mup(Optimizer::Adam);
+    let base = common::tfm_base(scale.widths[0]);
+    let lr0 = 2f64.powi(-8);
+    let settings = settings(scale, pre_ln);
+
+    // HP sweeps: (hp name, grid values); schedule handled separately.
+    let hp_grids: Vec<(&str, Vec<f64>)> = vec![
+        ("lr", scale.lrs()),
+        ("alpha_output", vec![0.25, 0.5, 1.0, 2.0, 4.0, 8.0]),
+        ("sigma", vec![0.25, 0.5, 1.0, 2.0, 4.0]),
+    ];
+
+    let mut summary = Table::new(
+        &format!("{name}: μP argmin per HP per setting ({} LN)", if pre_ln { "pre" } else { "post" }),
+        &["hp", "setting", "argmin", "loss at argmin"],
+    );
+    let mut series = Json::obj();
+    for (hp_name, grid) in &hp_grids {
+        let mut hj = Json::obj();
+        for (label, variant) in &settings {
+            let base = &base;
+            let jobs: Vec<Job> = grid
+                .iter()
+                .flat_map(|&v| {
+                    (0..scale.seeds).map(move |s| {
+                        let mut hp = HyperParams {
+                            lr: lr0,
+                            ..HyperParams::default()
+                        };
+                        hp = Assignment::single(hp_name, v).apply(hp);
+                        let mut spec = RunSpec::new(variant, par, hp, base.clone());
+                        spec.steps = scale.steps;
+                        spec.seed = s as u64;
+                        Job {
+                            key: format!("{name}/{hp_name}/{label}/{v:.4e}/s{s}"),
+                            spec,
+                            assignment: Assignment::single(hp_name, v),
+                            data_seed: 7,
+                        }
+                    })
+                })
+                .collect();
+            let results = sweep.run(&jobs)?;
+            // mean over seeds per grid value
+            let mut pts = Vec::new();
+            for (gi, &v) in grid.iter().enumerate() {
+                let rs = &results[gi * scale.seeds..(gi + 1) * scale.seeds];
+                let div = rs.iter().any(|r| r.trial.diverged);
+                let losses: Vec<f64> = rs
+                    .iter()
+                    .map(|r| r.trial.train_loss)
+                    .filter(|l| l.is_finite())
+                    .collect();
+                let loss = if div || losses.is_empty() {
+                    f64::NAN
+                } else {
+                    crate::stats::mean(&losses)
+                };
+                pts.push((v, loss));
+            }
+            let best = pts
+                .iter()
+                .filter(|(_, l)| l.is_finite())
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            if let Some(&(v, l)) = best {
+                summary.row(vec![
+                    hp_name.to_string(),
+                    label.clone(),
+                    format!("{v:.4}"),
+                    fmt_loss(l),
+                ]);
+            } else {
+                summary.row(vec![hp_name.to_string(), label.clone(), "-".into(), "all diverged".into()]);
+            }
+            hj.set(
+                label,
+                Json::Arr(
+                    pts.iter()
+                        .map(|&(v, l)| Json::Arr(vec![jnum(v), jnum(l)]))
+                        .collect(),
+                ),
+            );
+        }
+        series.set(hp_name, hj);
+    }
+
+    // LR schedule panel: rank the six named schedules per setting.
+    let mut sj = Json::obj();
+    for (label, variant) in &settings {
+        let mut rows = Vec::new();
+        for sched_name in Schedule::all_named() {
+            let sched = Schedule::named(sched_name).unwrap();
+            let hp = HyperParams {
+                lr: lr0,
+                ..HyperParams::default()
+            };
+            let mut spec = RunSpec::new(variant, par, hp, base.clone());
+            spec.steps = scale.steps;
+            spec.schedule = sched;
+            let job = Job {
+                key: format!("{name}/sched/{label}/{sched_name}"),
+                spec,
+                assignment: Assignment::default(),
+                data_seed: 7,
+            };
+            let r = sweep.run(&[job])?.remove(0);
+            rows.push((sched_name.to_string(), r.trial.train_loss));
+        }
+        let best = rows
+            .iter()
+            .filter(|(_, l)| l.is_finite())
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .cloned();
+        if let Some((s, l)) = best {
+            summary.row(vec!["schedule".into(), label.clone(), s.clone(), fmt_loss(l)]);
+        }
+        sj.set(
+            label,
+            Json::Arr(
+                rows.iter()
+                    .map(|(s, l)| Json::Arr(vec![jstr(s), jnum(*l)]))
+                    .collect(),
+            ),
+        );
+    }
+    series.set("schedule", sj);
+
+    rep.table(&format!("{name}_summary"), &summary)?;
+    rep.json(name, &series)?;
+    let _ = BaseShape::SameAsTarget; // (SP comparison lives in fig1/fig18)
+    Ok(())
+}

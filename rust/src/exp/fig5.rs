@@ -1,0 +1,94 @@
+//! Figure 5: coordinate checking.  Logits and attention logits blow up
+//! with width in SP after a few Adam steps, while word embeddings stay
+//! put; under μP all probed activations update at a width-independent
+//! rate.  We report the Δ-RMS per probe per width and the fitted growth
+//! exponents (SP: >0 for logits/attn-logits, ≈0 for embeddings;
+//! μP: ≈0 everywhere).
+
+use anyhow::Result;
+
+use crate::coordcheck::{coord_check, growth_exponents, passes_mup_check};
+use crate::data::source_for;
+use crate::mup::{HyperParams, Optimizer, Parametrization, Scheme};
+use crate::report::Reporter;
+use crate::runtime::Runtime;
+use crate::train::RunSpec;
+use crate::util::json::{jnum, jnums, Json};
+use crate::util::table::Table;
+
+use super::common::{self, Scale};
+
+const STEPS: usize = 4; // t = 0..4 like the paper
+
+pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    let base_w = scale.widths[0];
+    let mut series = Json::obj();
+    let mut summary = Table::new(
+        "fig5: coordinate Δ-RMS growth exponents vs width (t=4 Adam steps)",
+        &["scheme", "probe", "exponent", "verdict"],
+    );
+    for scheme in [Scheme::Sp, Scheme::Mup] {
+        let par = match scheme {
+            Scheme::Mup => Parametrization::mup(Optimizer::Adam),
+            Scheme::Sp => Parametrization::standard(Optimizer::Adam),
+        };
+        let mut records = Vec::new();
+        for &w in &scale.widths {
+            let variant = format!("{}__coord", common::tfm_variant(false, w));
+            let hp = HyperParams {
+                lr: 2f64.powi(-7),
+                ..HyperParams::default()
+            };
+            let base = match scheme {
+                Scheme::Mup => common::tfm_base(base_w),
+                Scheme::Sp => crate::model::BaseShape::SameAsTarget,
+            };
+            let mut spec = RunSpec::new(&variant, par, hp, base);
+            spec.seed = 3;
+            let v = rt.manifest().get(&variant)?;
+            let data = source_for(v, 11);
+            let rec = coord_check(rt, &spec, data.as_ref(), STEPS)?;
+            rep.note(&format!(
+                "fig5 {scheme:?} w{w}: Δrms(t=4) {}",
+                rec.deltas
+                    .iter()
+                    .map(|(k, v)| format!("{k}={:.3e}", v.last().copied().unwrap_or(f64::NAN)))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            ));
+            records.push(rec);
+        }
+        let exps = growth_exponents(&records);
+        let pass = passes_mup_check(&exps, 0.2);
+        for (probe, e) in &exps {
+            summary.row(vec![
+                format!("{scheme:?}"),
+                probe.clone(),
+                format!("{e:+.3}"),
+                if *e >= 0.2 { "BLOWS UP".into() } else { "stable".into() },
+            ]);
+        }
+        rep.note(&format!(
+            "fig5 {scheme:?}: μP coordinate check {}",
+            if pass { "PASSES" } else { "FAILS (as expected for SP)" }
+        ));
+        let mut sj = Json::obj();
+        for r in &records {
+            let mut rj = Json::obj();
+            for (k, v) in &r.deltas {
+                rj.set(k, jnums(v));
+            }
+            sj.set(&format!("w{}", r.width), rj);
+        }
+        let mut ej = Json::obj();
+        for (k, v) in &exps {
+            ej.set(k, jnum(*v));
+        }
+        sj.set("exponents", ej);
+        sj.set("passes", Json::Bool(pass));
+        series.set(&format!("{scheme:?}"), sj);
+    }
+    rep.table("fig5_summary", &summary)?;
+    rep.json("fig5", &series)?;
+    Ok(())
+}

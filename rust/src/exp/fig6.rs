@@ -1,0 +1,126 @@
+//! Figure 6: the efficiency-performance Pareto frontier.  At several
+//! compute budgets, compare the median (over trials) best-achieved target
+//! loss of μTransfer vs conventional target-model tuning; and at equal
+//! *sample* counts, the best-so-far curves.
+
+use anyhow::Result;
+
+use crate::model::BaseShape;
+use crate::mup::Optimizer;
+use crate::report::Reporter;
+use crate::runtime::Runtime;
+use crate::stats;
+use crate::sweep::Sweep;
+use crate::train::Schedule;
+use crate::transfer::{direct_tuning, mu_transfer, TransferSetup};
+use crate::tuner::{best_so_far, SearchSpace};
+use crate::util::json::{jnum, jnums, Json};
+use crate::util::table::{fmt_loss, Table};
+
+use super::common::Scale;
+
+pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    let mut sweep = Sweep::new(rt).with_journal(&rep.path("fig6.journal"))?;
+    sweep.verbose = true;
+    let (pw, tw) = if scale.name == "paper" { (64usize, 256usize) } else { (32, 128) };
+    let proxy = &format!("tfm_post_w{pw}_d2");
+    let target = &format!("tfm_post_w{tw}_d2");
+    let base = BaseShape::Tfm {
+        d_model: pw,
+        n_head: 4,
+        d_head: pw / 4,
+        d_ffn: 4 * pw,
+    };
+    let vp = rt.manifest().get(proxy)?;
+    let vt = rt.manifest().get(target)?;
+    let step_ratio = vp.flops_per_step() / vt.flops_per_step();
+
+    // budgets measured in proxy-sample units
+    let budgets: Vec<usize> = match scale.name.as_str() {
+        "smoke" => vec![2, 4],
+        "ci" => vec![2, 4, 8],
+        _ => vec![4, 8, 16, 32],
+    };
+    let trials = scale.trials.max(3);
+    let mut t = Table::new(
+        "fig6 (left): median target loss vs tuning budget (budget = N proxy samples' FLOPs)",
+        &["budget (proxy samples)", "μTransfer median", "conventional median", "conventional #samples"],
+    );
+    let mut series = Json::obj();
+    let mut mu_sofar_all: Vec<Vec<f64>> = Vec::new();
+    for &budget in &budgets {
+        let mut mu_meds = Vec::new();
+        let mut dt_meds = Vec::new();
+        let n_direct = ((budget as f64 * step_ratio * scale.steps as f64
+            / scale.target_steps as f64)
+            .round() as usize)
+            .max(1);
+        for trial in 0..trials {
+            let setup = TransferSetup {
+                proxy_variant: proxy.into(),
+                target_variant: target.into(),
+                base: base.clone(),
+                optimizer: Optimizer::Adam,
+                space: SearchSpace::iwslt_like(),
+                proxy_steps: scale.steps,
+                target_steps: scale.target_steps,
+                n_samples: budget,
+                seed: 700 + trial as u64,
+                eval_every: (scale.steps / 2).max(2),
+                schedule: Schedule::Constant,
+            };
+            let mu = mu_transfer(rt, &mut sweep, &setup, &format!("fig6/b{budget}/t{trial}"))?;
+            mu_meds.push(
+                mu.target
+                    .as_ref()
+                    .map(|r| r.trial.val_loss)
+                    .unwrap_or(f64::NAN),
+            );
+            if budget == *budgets.last().unwrap() {
+                mu_sofar_all.push(best_so_far(&mu.proxy_trials));
+            }
+            let dt = direct_tuning(
+                rt,
+                &mut sweep,
+                &setup,
+                n_direct,
+                &format!("fig6/b{budget}/t{trial}"),
+            )?;
+            dt_meds.push(
+                dt.target
+                    .as_ref()
+                    .map(|r| r.trial.val_loss)
+                    .unwrap_or(f64::NAN),
+            );
+        }
+        let med = |xs: &[f64]| {
+            let f: Vec<f64> = xs.iter().cloned().filter(|x| x.is_finite()).collect();
+            if f.is_empty() {
+                f64::NAN
+            } else {
+                stats::percentile(&f, 50.0)
+            }
+        };
+        t.row(vec![
+            budget.to_string(),
+            fmt_loss(med(&mu_meds)),
+            fmt_loss(med(&dt_meds)),
+            n_direct.to_string(),
+        ]);
+        series.set(
+            &format!("budget{budget}"),
+            Json::from_pairs(vec![
+                ("mu", jnums(&mu_meds)),
+                ("direct", jnums(&dt_meds)),
+                ("n_direct", jnum(n_direct as f64)),
+            ]),
+        );
+    }
+    rep.table("fig6_summary", &t)?;
+    if let Some(first) = mu_sofar_all.first() {
+        series.set("fig6_right_best_so_far", jnums(first));
+    }
+    rep.json("fig6", &series)?;
+    rep.note("fig6: μTransfer should dominate at every budget (same or lower median loss for the same FLOPs)");
+    Ok(())
+}

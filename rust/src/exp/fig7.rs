@@ -1,0 +1,142 @@
+//! Figures 7 & 8: "wider is better throughout training" under μP; under
+//! SP the curves cross (small LR: fails past some width; large LR:
+//! strictly worse with width).  We train the width ladder at a small and
+//! a large fixed LR under both schemes and count checkpoint violations of
+//! wider-is-better.
+
+use anyhow::Result;
+
+use crate::mup::{HyperParams, Optimizer, Scheme};
+use crate::report::Reporter;
+use crate::runtime::Runtime;
+use crate::sweep::{Job, Sweep};
+use crate::train::RunSpec;
+use crate::tuner::Assignment;
+use crate::util::json::{jnum, jnums, Json};
+use crate::util::table::Table;
+
+use super::common::{self, Scale};
+
+pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    let mut sweep = Sweep::new(rt).with_journal(&rep.path("fig7.journal"))?;
+    sweep.verbose = true;
+    let base_w = scale.widths[0];
+    let lrs = [("small-lr", 2f64.powi(-10)), ("large-lr", 2f64.powi(-6))];
+    let mut t = Table::new(
+        "fig7/fig8: wider-is-better violations (fraction of checkpoints where a wider model has higher smoothed loss)",
+        &["scheme", "lr", "violations", "final losses by width"],
+    );
+    let mut series = Json::obj();
+    for scheme in [Scheme::Mup, Scheme::Sp] {
+        for (lr_label, lr) in lrs {
+            let mut curves: Vec<(usize, Vec<f64>)> = Vec::new();
+            for &w in &scale.widths {
+                let par = match scheme {
+                    Scheme::Mup => crate::mup::Parametrization::mup(Optimizer::Adam),
+                    Scheme::Sp => crate::mup::Parametrization::standard(Optimizer::Adam),
+                };
+                let base = match scheme {
+                    Scheme::Mup => common::tfm_base(base_w),
+                    Scheme::Sp => crate::model::BaseShape::SameAsTarget,
+                };
+                let hp = HyperParams {
+                    lr,
+                    ..HyperParams::default()
+                };
+                let mut spec = RunSpec::new(&common::tfm_variant(false, w), par, hp, base);
+                spec.steps = scale.steps;
+                let job = Job {
+                    key: format!("fig7/{scheme:?}/{lr_label}/w{w}"),
+                    spec,
+                    assignment: Assignment::single("lr", lr),
+                    data_seed: 7,
+                };
+                let r = sweep.run(&[job])?.remove(0);
+                curves.push((w, r.train_curve.clone()));
+            }
+            let (violations, finals) = wider_is_better_violations(&curves);
+            t.row(vec![
+                format!("{scheme:?}"),
+                lr_label.to_string(),
+                format!("{:.1}%", violations * 100.0),
+                finals
+                    .iter()
+                    .map(|(w, l)| format!("w{w}={l:.3}"))
+                    .collect::<Vec<_>>()
+                    .join(" "),
+            ]);
+            let mut cj = Json::obj();
+            for (w, c) in &curves {
+                cj.set(&format!("w{w}"), jnums(c));
+            }
+            cj.set("violations", jnum(violations));
+            series.set(&format!("{scheme:?}/{lr_label}"), cj);
+        }
+    }
+    rep.table("fig7_summary", &t)?;
+    rep.json("fig7", &series)?;
+    Ok(())
+}
+
+/// Fraction of (checkpoint, adjacent-width-pair) comparisons violating
+/// wider-is-better, on smoothed curves; also returns final losses.
+/// Diverged/truncated curves count every remaining checkpoint as a
+/// violation for the pairs they participate in.
+pub fn wider_is_better_violations(curves: &[(usize, Vec<f64>)]) -> (f64, Vec<(usize, f64)>) {
+    let window = 8usize;
+    let smooth = |c: &Vec<f64>| -> Vec<f64> {
+        (0..c.len())
+            .map(|i| {
+                let lo = i.saturating_sub(window - 1);
+                let s = &c[lo..=i];
+                s.iter().sum::<f64>() / s.len() as f64
+            })
+            .collect()
+    };
+    let smoothed: Vec<(usize, Vec<f64>)> = curves.iter().map(|(w, c)| (*w, smooth(c))).collect();
+    let horizon = curves.iter().map(|(_, c)| c.len()).max().unwrap_or(0);
+    let mut total = 0usize;
+    let mut bad = 0usize;
+    // compare each adjacent width pair at each 10%-of-training checkpoint
+    let checkpoints: Vec<usize> = (1..=10).map(|k| (k * horizon / 10).saturating_sub(1)).collect();
+    for pair in smoothed.windows(2) {
+        let (_, narrow) = &pair[0];
+        let (_, wide) = &pair[1];
+        for &cp in &checkpoints {
+            total += 1;
+            let n = narrow.get(cp).copied().unwrap_or(f64::INFINITY);
+            let w = wide.get(cp).copied().unwrap_or(f64::INFINITY);
+            // tolerance for batch noise
+            if w > n + 0.02 || !w.is_finite() && n.is_finite() {
+                bad += 1;
+            }
+        }
+    }
+    let finals = curves
+        .iter()
+        .map(|(w, c)| (*w, c.last().copied().unwrap_or(f64::NAN)))
+        .collect();
+    (bad as f64 / total.max(1) as f64, finals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_violations_when_wider_always_better() {
+        let mk = |off: f64| (0..50).map(|i| 3.0 - i as f64 * 0.01 - off).collect::<Vec<_>>();
+        let curves = vec![(64, mk(0.0)), (128, mk(0.3)), (256, mk(0.6))];
+        let (v, finals) = wider_is_better_violations(&curves);
+        assert_eq!(v, 0.0);
+        assert_eq!(finals.len(), 3);
+    }
+
+    #[test]
+    fn crossing_curves_flagged() {
+        let narrow: Vec<f64> = (0..50).map(|i| 3.0 - i as f64 * 0.01).collect();
+        let wide: Vec<f64> = (0..50).map(|i| 2.0 + i as f64 * 0.02).collect(); // gets worse
+        let (v, _) = wider_is_better_violations(&[(64, narrow), (128, wide)]);
+        assert!(v >= 0.25, "v={v}");
+    }
+}

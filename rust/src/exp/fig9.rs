@@ -1,0 +1,29 @@
+//! Figure 9 (App. D.3): squashing activations (tanh) reduce transfer
+//! quality relative to ReLU, under both xent and MSE losses — but μP
+//! still beats SP as width grows.  Reuses the Fig. 3 LR-sweep machinery
+//! on the tanh MLP variants.
+
+use anyhow::Result;
+
+use crate::report::Reporter;
+use crate::runtime::Runtime;
+
+use super::common::Scale;
+use super::fig3;
+
+pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    // tanh variants exist at widths {64, 256, 1024}
+    let cap = scale.mlp_widths.last().copied().unwrap_or(1024);
+    let mut s = scale.clone();
+    s.mlp_widths = [64usize, 256, 1024]
+        .into_iter()
+        .filter(|&w| w <= cap)
+        .collect();
+    if s.mlp_widths.len() < 2 {
+        s.mlp_widths = vec![64, 256];
+    }
+    fig3::run_mlp(rt, rep, &s, "mlp_tanh_w", "fig9_tanh_xent")?;
+    fig3::run_mlp(rt, rep, &s, "mlp_tanhmse_w", "fig9_tanh_mse")?;
+    rep.note("fig9: compare shift_log2 values against fig3 (ReLU) — tanh optima drift more but μP still dominates SP");
+    Ok(())
+}

@@ -1,0 +1,67 @@
+//! The experiment harness: one module per paper table/figure
+//! (DESIGN.md §4 maps IDs to modules).  Each experiment takes a
+//! [`Scale`] preset so the same code runs in CI-sized and paper-sized
+//! configurations, prints the paper-style rows, and persists CSV/JSON
+//! via [`crate::report::Reporter`].
+
+pub mod common;
+pub mod fig1;
+pub mod fig12;
+pub mod fig13;
+pub mod fig19;
+pub mod fig3;
+pub mod fig4;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig9;
+pub mod tab12;
+pub mod tab4;
+pub mod tab6;
+pub mod tab7;
+pub mod tab8;
+
+use anyhow::{bail, Result};
+
+use crate::report::Reporter;
+use crate::runtime::Runtime;
+pub use common::Scale;
+
+/// Experiment registry: id → (description, runner).
+pub fn run(id: &str, rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    match id {
+        "fig1" => fig1::run(rt, rep, scale),
+        "fig3" => fig3::run(rt, rep, scale),
+        "fig4" => fig4::run(rt, rep, scale),
+        "fig5" => fig5::run(rt, rep, scale),
+        "fig6" => fig6::run(rt, rep, scale),
+        "fig7" | "fig8" => fig7::run(rt, rep, scale),
+        "fig9" => fig9::run(rt, rep, scale),
+        "fig10" => fig13::run_dk(rt, rep, scale),
+        "fig12" => fig12::run(rt, rep, scale),
+        "fig13" => fig13::run(rt, rep, scale),
+        "fig17" | "fig18" => fig4::run_postln(rt, rep, scale),
+        "fig19" => fig19::run(rt, rep, scale),
+        "fig14" | "fig15" | "tab7" => tab7::run(rt, rep, scale),
+        "fig21" => tab7::run_reverse(rt, rep, scale),
+        "tab4" | "fig20" => tab4::run(rt, rep, scale),
+        "tab5" => tab4::run_tab5(rt, rep, scale),
+        "tab6" => tab6::run(rt, rep, scale),
+        "tab8" | "tab9" => tab8::run(rt, rep, scale),
+        "tab12" | "fig16" | "tab13" => tab12::run(rt, rep, scale),
+        "all" => {
+            for id in ALL {
+                println!("\n################ {id} ################");
+                run(id, rt, rep, scale)?;
+            }
+            Ok(())
+        }
+        other => bail!("unknown experiment id {other}; known: {}", ALL.join(", ")),
+    }
+}
+
+/// Canonical experiment order for `exp all` (roughly cheap → expensive).
+pub const ALL: &[&str] = &[
+    "tab8", "fig5", "fig3", "fig9", "fig1", "fig7", "fig4", "fig17", "fig12", "fig13", "fig10",
+    "fig19", "tab12", "tab4", "tab5", "fig6", "tab6", "tab7", "fig21",
+];

@@ -1,0 +1,115 @@
+//! Table 12 / Fig. 16 / Tab. 13: the ResNet experiments, on the residual
+//! MLP substitute (DESIGN.md §2).  Grid-search (η, α_output) on a narrow
+//! proxy under both SP and μP, transfer each winner to the wide target
+//! with the same grid: μP's transferred loss should beat SP's.
+
+use anyhow::Result;
+
+use crate::model::BaseShape;
+use crate::mup::{HyperParams, Optimizer, Parametrization, Scheme};
+use crate::report::Reporter;
+use crate::runtime::Runtime;
+use crate::sweep::{Job, Sweep};
+use crate::train::RunSpec;
+use crate::tuner::{select_best, Assignment, Dim, SearchSpace, Trial};
+use crate::util::json::{jnum, Json};
+use crate::util::table::{fmt_loss, Table};
+
+use super::common::Scale;
+
+pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    let mut sweep = Sweep::new(rt).with_journal(&rep.path("tab12.journal"))?;
+    sweep.verbose = true;
+    let proxy_w = 32usize;
+    let target_w = if scale.name == "smoke" { 64 } else { 256 };
+    let space = SearchSpace::new()
+        .with("lr", Dim::pow2_grid(0.25, -3.0, 1.0, 1.0))
+        .with("alpha_output", Dim::pow2_grid(1.0, -2.0, 2.0, 2.0));
+    let grid = space.grid();
+
+    let mut t = Table::new(
+        &format!("tab12: ResMLP transfer w{proxy_w} → w{target_w} (val loss; lower better)"),
+        &["setup", "best η", "best α_out", "proxy loss", "target loss"],
+    );
+    let mut series = Json::obj();
+    for scheme in [Scheme::Sp, Scheme::Mup] {
+        let par = match scheme {
+            Scheme::Mup => Parametrization::mup(Optimizer::Sgd),
+            Scheme::Sp => Parametrization::standard(Optimizer::Sgd),
+        };
+        let base = match scheme {
+            Scheme::Mup => BaseShape::Width(proxy_w),
+            Scheme::Sp => BaseShape::SameAsTarget,
+        };
+        // grid search on the proxy
+        let jobs: Vec<Job> = grid
+            .iter()
+            .enumerate()
+            .map(|(i, a)| {
+                let mut spec = RunSpec::new(
+                    &format!("resmlp_w{proxy_w}"),
+                    par,
+                    a.apply(HyperParams::default()),
+                    base.clone(),
+                );
+                spec.steps = scale.steps;
+                spec.eval_every = (scale.steps / 2).max(2);
+                Job {
+                    key: format!("tab12/{scheme:?}/proxy/{i}"),
+                    spec,
+                    assignment: a.clone(),
+                    data_seed: 11,
+                }
+            })
+            .collect();
+        let results = sweep.run(&jobs)?;
+        let trials: Vec<Trial> = results.iter().map(|r| r.trial.clone()).collect();
+        let best = select_best(&trials);
+        let (best_a, proxy_loss) = match best {
+            Some(b) => (b.assignment.clone(), b.val_loss),
+            None => (Assignment::default(), f64::NAN),
+        };
+        // transfer to the target
+        let mut spec = RunSpec::new(
+            &format!("resmlp_w{target_w}"),
+            par,
+            best_a.apply(HyperParams::default()),
+            base.clone(),
+        );
+        spec.steps = scale.target_steps;
+        spec.eval_every = (scale.target_steps / 2).max(2);
+        let target_run = sweep
+            .run(&[Job {
+                key: format!("tab12/{scheme:?}/target"),
+                spec,
+                assignment: best_a.clone(),
+                data_seed: 11,
+            }])?
+            .remove(0);
+        t.row(vec![
+            format!("{scheme:?}"),
+            best_a
+                .values
+                .get("lr")
+                .map(|v| format!("{v:.3}"))
+                .unwrap_or("-".into()),
+            best_a
+                .values
+                .get("alpha_output")
+                .map(|v| format!("{v:.2}"))
+                .unwrap_or("-".into()),
+            fmt_loss(proxy_loss),
+            fmt_loss(target_run.trial.val_loss),
+        ]);
+        series.set(
+            &format!("{scheme:?}"),
+            Json::from_pairs(vec![
+                ("proxy_loss", jnum(proxy_loss)),
+                ("target_loss", jnum(target_run.trial.val_loss)),
+            ]),
+        );
+    }
+    rep.table("tab12_summary", &t)?;
+    rep.json("tab12", &series)?;
+    Ok(())
+}

@@ -1,0 +1,178 @@
+//! Tables 4 & 5 (+Fig. 20): FLOPs-matched tuning comparison on the
+//! machine-translation-style workload, substituted with LM validation
+//! loss percentiles (DESIGN.md §2).
+//!
+//! For each of `trials` independent random searches:
+//!   - "Tuning on 1x": random-search directly on the target with a small
+//!     FLOPs-matched sample budget;
+//!   - "μTransfer from 0.25x": search on the proxy with a large budget
+//!     costing the same FLOPs, transfer the winner;
+//!   - "Naive transfer": same search on an SP proxy, copied to the SP
+//!     target (expected to diverge).
+//! Reported: 25/50/75/100th percentiles of target val loss (lower =
+//! better; the paper reports BLEU where higher = better).
+
+use anyhow::Result;
+
+use crate::model::BaseShape;
+use crate::mup::Optimizer;
+use crate::report::Reporter;
+use crate::runtime::Runtime;
+use crate::stats::quartile_row;
+use crate::sweep::Sweep;
+use crate::train::Schedule;
+use crate::transfer::{direct_tuning, mu_transfer, naive_transfer, TransferSetup};
+use crate::tuner::SearchSpace;
+use crate::util::json::{jnum, jnums, Json};
+use crate::util::table::{fmt_loss, Table};
+
+use super::common::Scale;
+
+pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    // proxy = 0.25x width of the target, like IWSLT's 4M vs 40M models
+    let (proxy_w, target_w) = if scale.name == "paper" { (64, 256) } else { (32, 128) };
+    run_mt(
+        rt,
+        rep,
+        scale,
+        "tab4",
+        &format!("tfm_post_w{proxy_w}_d2"),
+        &format!("tfm_post_w{target_w}_d2"),
+        BaseShape::Tfm {
+            d_model: proxy_w,
+            n_head: 4,
+            d_head: proxy_w / 4,
+            d_ffn: 4 * proxy_w,
+        },
+        scale.trials,
+    )
+}
+
+/// Table 5: bigger target, tiny direct-search budget (3 samples in the
+/// paper — enough FLOPs for nothing, hence "training diverged").
+pub fn run_tab5(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    let (proxy_w, target_w) = if scale.name == "paper" { (128, 512) } else { (64, 256) };
+    run_mt(
+        rt,
+        rep,
+        scale,
+        "tab5",
+        &format!("tfm_post_w{proxy_w}_d2"),
+        &format!("tfm_post_w{target_w}_d2"),
+        BaseShape::Tfm {
+            d_model: proxy_w,
+            n_head: 4,
+            d_head: proxy_w / 4,
+            d_ffn: 4 * proxy_w,
+        },
+        scale.trials.min(2),
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_mt(
+    rt: &Runtime,
+    rep: &Reporter,
+    scale: &Scale,
+    name: &str,
+    proxy: &str,
+    target: &str,
+    base: BaseShape,
+    trials: usize,
+) -> Result<()> {
+    let mut sweep = Sweep::new(rt).with_journal(&rep.path(&format!("{name}.journal")))?;
+    sweep.verbose = true;
+
+    // FLOPs matching: the proxy search budget defines the total compute;
+    // direct tuning gets however many target-model samples that buys.
+    let vp = rt.manifest().get(proxy)?;
+    let vt = rt.manifest().get(target)?;
+    let flops_ratio = vp.flops_per_step() / vt.flops_per_step();
+    let n_proxy = scale.search_samples;
+    let n_direct = ((n_proxy as f64 * flops_ratio * scale.steps as f64
+        / scale.target_steps as f64)
+        .round() as usize)
+        .max(1);
+    rep.note(&format!(
+        "{name}: FLOPs-matched budgets — μTransfer {n_proxy} proxy samples ≙ direct {n_direct} target samples (per-step ratio {flops_ratio:.4})"
+    ));
+
+    let mut mu_losses = Vec::new();
+    let mut direct_losses = Vec::new();
+    let mut naive_losses = Vec::new();
+    let mut naive_div = 0usize;
+    for trial in 0..trials {
+        let setup = TransferSetup {
+            proxy_variant: proxy.to_string(),
+            target_variant: target.to_string(),
+            base: base.clone(),
+            optimizer: Optimizer::Adam,
+            space: SearchSpace::iwslt_like(),
+            proxy_steps: scale.steps,
+            target_steps: scale.target_steps,
+            n_samples: n_proxy,
+            seed: 500 + trial as u64,
+            eval_every: scale.steps.max(4) / 2,
+            schedule: Schedule::Constant,
+        };
+        let mu = mu_transfer(rt, &mut sweep, &setup, &format!("{name}/t{trial}"))?;
+        mu_losses.push(
+            mu.target
+                .as_ref()
+                .map(|t| t.trial.val_loss)
+                .unwrap_or(f64::NAN),
+        );
+        let dt = direct_tuning(rt, &mut sweep, &setup, n_direct, &format!("{name}/t{trial}"))?;
+        direct_losses.push(
+            dt.target
+                .as_ref()
+                .map(|t| t.trial.val_loss)
+                .unwrap_or(f64::NAN),
+        );
+        let nv = naive_transfer(rt, &mut sweep, &setup, &format!("{name}/t{trial}"))?;
+        match nv.target.as_ref() {
+            Some(t) if !t.trial.diverged => naive_losses.push(t.trial.val_loss),
+            _ => naive_div += 1,
+        }
+    }
+
+    let mut t = Table::new(
+        &format!("{name}: target val-loss percentiles over {trials} independent tuning trials (lower is better)"),
+        &["setup", "#samples", "p25", "p50", "p75", "p100(worst→best order: p100 is max loss)"],
+    );
+    let row = |label: &str, n: usize, xs: &[f64]| -> Vec<String> {
+        let finite: Vec<f64> = xs.iter().cloned().filter(|x| x.is_finite()).collect();
+        if finite.is_empty() {
+            return vec![label.into(), n.to_string(), "-".into(), "-".into(), "-".into(), "training diverged".into()];
+        }
+        let q = quartile_row(&finite);
+        vec![
+            label.into(),
+            n.to_string(),
+            fmt_loss(q[0]),
+            fmt_loss(q[1]),
+            fmt_loss(q[2]),
+            fmt_loss(q[3]),
+        ]
+    };
+    t.row(row("Tuning on 1x (direct)", n_direct, &direct_losses));
+    t.row(row(
+        &format!("Naive transfer ({naive_div}/{trials} trials diverged)"),
+        n_proxy,
+        &naive_losses,
+    ));
+    t.row(row("μTransfer from 0.25x (ours)", n_proxy, &mu_losses));
+    rep.table(&format!("{name}_summary"), &t)?;
+    rep.json(
+        name,
+        &Json::from_pairs(vec![
+            ("mu", jnums(&mu_losses)),
+            ("direct", jnums(&direct_losses)),
+            ("naive", jnums(&naive_losses)),
+            ("naive_diverged", jnum(naive_div as f64)),
+            ("n_proxy", jnum(n_proxy as f64)),
+            ("n_direct", jnum(n_direct as f64)),
+        ]),
+    )?;
+    Ok(())
+}

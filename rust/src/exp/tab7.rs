@@ -1,0 +1,260 @@
+//! Table 7 / Figs. 14-15: GPT-3-style transfer — random search on a
+//! width-shrunk proxy at TWO training horizons (App. F.4 checks the
+//! horizons agree), transfer to the target, compare against an
+//! HP-default re-run; report the tuning-cost ratio (7% in the paper).
+//! Also Fig. 21 (`run_reverse`): reverse-μTransfer replicates wide-model
+//! instability on a narrow model.
+
+use anyhow::Result;
+
+use crate::init::rng::Rng;
+use crate::model::BaseShape;
+use crate::mup::{HyperParams, Optimizer, Parametrization};
+use crate::report::Reporter;
+use crate::runtime::Runtime;
+use crate::sweep::{Job, Sweep};
+use crate::train::{RunSpec, Schedule};
+use crate::transfer::reverse_spec;
+use crate::tuner::{select_best, SearchSpace, Trial};
+use crate::util::json::{jnum, Json};
+use crate::util::table::{fmt_loss, Table};
+
+use super::common::Scale;
+
+const PROXY: &str = "tfm_pre_w128_d4";
+
+fn target_for(scale: &Scale) -> &'static str {
+    // paper: 4x width shrink at depth 4 (GPT-3 shrank 16x); ci: 2x
+    if scale.name == "paper" {
+        "tfm_pre_w512_d4"
+    } else {
+        "tfm_pre_w256_d4"
+    }
+}
+
+fn base() -> BaseShape {
+    BaseShape::Tfm {
+        d_model: 128,
+        n_head: 4,
+        d_head: 32,
+        d_ffn: 512,
+    }
+}
+
+pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    let target = target_for(scale);
+    let mut sweep = Sweep::new(rt).with_journal(&rep.path("tab7.journal"))?;
+    sweep.verbose = true;
+    let par = Parametrization::mup(Optimizer::Adam);
+    let space = SearchSpace::gpt3_like();
+    let mut rng = Rng::new(0x69B);
+
+    // Two search horizons (App. F.4: 4B vs 16B tokens ≙ short vs long).
+    let horizons = [
+        ("short", scale.steps / 2, (scale.search_samples * 2) / 3),
+        ("long", scale.steps, scale.search_samples / 3),
+    ];
+    let mut all_trials: Vec<(String, Trial)> = Vec::new();
+    let mut search_flops = 0.0;
+    let mut series = Json::obj();
+    for (hname, steps, n) in horizons {
+        let jobs: Vec<Job> = (0..n.max(2))
+            .map(|i| {
+                let a = space.sample(&mut rng);
+                let mut spec = RunSpec::new(
+                    PROXY,
+                    par,
+                    a.apply(HyperParams::default()),
+                    base(),
+                );
+                spec.steps = steps.max(4);
+                spec.seed = i as u64;
+                spec.eval_every = (steps / 2).max(2);
+                spec.schedule = Schedule::Linear; // App. F.4: linear beat cosine on the proxy
+                Job {
+                    key: format!("tab7/{hname}/{i}"),
+                    spec,
+                    assignment: a,
+                    data_seed: 0x69B,
+                }
+            })
+            .collect();
+        let results = sweep.run(&jobs)?;
+        search_flops += results.iter().map(|r| r.trial.flops).sum::<f64>();
+        // horizons agree? compare each horizon's own argmin LR
+        let trials: Vec<Trial> = results.iter().map(|r| r.trial.clone()).collect();
+        if let Some(best) = select_best(&trials) {
+            rep.note(&format!(
+                "tab7 fig14[{hname}]: best val {:.4} at lr={:.3e} sigma={:.3}",
+                best.val_loss,
+                best.assignment.values.get("lr").copied().unwrap_or(f64::NAN),
+                best.assignment.values.get("sigma").copied().unwrap_or(f64::NAN),
+            ));
+            series.set(
+                &format!("fig14_{hname}_best_lr"),
+                jnum(best.assignment.values.get("lr").copied().unwrap_or(f64::NAN)),
+            );
+        }
+        all_trials.extend(trials.into_iter().map(|t| (hname.to_string(), t)));
+    }
+    let trials_only: Vec<Trial> = all_trials.iter().map(|(_, t)| t.clone()).collect();
+    let best = select_best(&trials_only)
+        .map(|t| t.assignment.clone())
+        .unwrap_or_default();
+
+    // target with transferred HPs (μP) vs HP-default re-run (SP)
+    let mut mu_spec = RunSpec::new(target, par, best.apply(HyperParams::default()), base());
+    mu_spec.steps = scale.target_steps;
+    mu_spec.eval_every = (scale.target_steps / 4).max(2);
+    mu_spec.schedule = Schedule::Linear;
+    let mu_run = sweep
+        .run(&[Job {
+            key: "tab7/target-mu".into(),
+            spec: mu_spec,
+            assignment: best.clone(),
+            data_seed: 0x69B,
+        }])?
+        .remove(0);
+    let default_hp = HyperParams {
+        lr: 2f64.powi(-9),
+        ..HyperParams::default()
+    };
+    let mut sp_spec = RunSpec::new(
+        target,
+        Parametrization::standard(Optimizer::Adam),
+        default_hp,
+        BaseShape::SameAsTarget,
+    );
+    sp_spec.steps = scale.target_steps;
+    sp_spec.eval_every = (scale.target_steps / 4).max(2);
+    sp_spec.schedule = Schedule::Cosine; // the original run's schedule
+    let sp_run = sweep
+        .run(&[Job {
+            key: "tab7/target-rerun".into(),
+            spec: sp_spec,
+            assignment: Default::default(),
+            data_seed: 0x69B,
+        }])?
+        .remove(0);
+
+    let ratio = search_flops / mu_run.trial.flops.max(1.0);
+    let mut t = Table::new(
+        "tab7: GPT-3-style pretraining (proxy w128_d4 → target w512_d4)",
+        &["run", "val loss", "train loss", "tuning cost / pretraining cost"],
+    );
+    t.row(vec![
+        "target + μTransfer (ours)".into(),
+        fmt_loss(mu_run.trial.val_loss),
+        fmt_loss(mu_run.trial.train_loss),
+        format!("{:.1}%", 100.0 * ratio),
+    ]);
+    t.row(vec![
+        "target re-run (default HPs, SP)".into(),
+        fmt_loss(sp_run.trial.val_loss),
+        fmt_loss(sp_run.trial.train_loss),
+        "0% (untuned)".into(),
+    ]);
+    rep.table("tab7_summary", &t)?;
+    series.set("mu_val", jnum(mu_run.trial.val_loss));
+    series.set("rerun_val", jnum(sp_run.trial.val_loss));
+    series.set("cost_ratio", jnum(ratio));
+    // Fig. 15: the two target training curves
+    series.set(
+        "fig15_mu_curve",
+        crate::util::json::jnums(&mu_run.train_curve),
+    );
+    series.set(
+        "fig15_rerun_curve",
+        crate::util::json::jnums(&sp_run.train_curve),
+    );
+    rep.json("tab7", &series)?;
+    Ok(())
+}
+
+/// Fig. 21: LR-vs-loss for (a) wide SP models and (b) a narrow model with
+/// *simulated width* via reverse-μTransfer; the divergence thresholds
+/// must line up.
+pub fn run_reverse(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    let mut sweep = Sweep::new(rt).with_journal(&rep.path("fig21.journal"))?;
+    sweep.verbose = true;
+    let lrs = scale.lrs();
+    let narrow_w = scale.widths[0];
+    let wide_w = *scale.widths.last().unwrap();
+    let narrow = super::common::tfm_variant(false, narrow_w);
+    let wide = super::common::tfm_variant(false, wide_w);
+
+    let mut t = Table::new(
+        "fig21: divergence threshold, real wide SP vs simulated width on the narrow model",
+        &["model", "log2(lr)", "loss"],
+    );
+    let mut series = Json::obj();
+    for (label, variant, spec_fn) in [
+        (
+            format!("SP w{narrow_w} (real)"),
+            narrow.clone(),
+            None::<BaseShape>,
+        ),
+        (format!("SP w{wide_w} (real)"), wide.clone(), None),
+        (
+            format!("w{narrow_w} simulating w{wide_w} (reverse-μT)"),
+            narrow.clone(),
+            Some(BaseShape::Tfm {
+                d_model: wide_w,
+                n_head: 4,
+                d_head: wide_w / 4,
+                d_ffn: 4 * wide_w,
+            }),
+        ),
+    ] {
+        let mut pts = Vec::new();
+        for &lr in &lrs {
+            let hp = HyperParams {
+                lr,
+                ..HyperParams::default()
+            };
+            let spec = match &spec_fn {
+                None => {
+                    let mut s = RunSpec::new(
+                        &variant,
+                        Parametrization::standard(Optimizer::Adam),
+                        hp,
+                        BaseShape::SameAsTarget,
+                    );
+                    s.steps = scale.steps;
+                    s
+                }
+                Some(simulated) => {
+                    let mut s = reverse_spec(
+                        &variant,
+                        simulated.clone(),
+                        Optimizer::Adam,
+                        hp,
+                        scale.steps,
+                        0,
+                    );
+                    s.steps = scale.steps;
+                    s
+                }
+            };
+            let r = sweep
+                .run(&[Job {
+                    key: format!("fig21/{label}/lr{lr:.3e}"),
+                    spec,
+                    assignment: crate::tuner::Assignment::single("lr", lr),
+                    data_seed: 7,
+                }])?
+                .remove(0);
+            t.row(vec![
+                label.clone(),
+                format!("{:.1}", lr.log2()),
+                fmt_loss(r.trial.train_loss),
+            ]);
+            pts.push(r.trial.train_loss);
+        }
+        series.set(&label, crate::util::json::jnums(&pts));
+    }
+    rep.table("fig21_summary", &t)?;
+    rep.json("fig21", &series)?;
+    rep.note("fig21: the simulated-width curve should track the real wide-SP curve's divergence point, not the narrow one's");
+    Ok(())
+}

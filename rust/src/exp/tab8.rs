@@ -1,0 +1,117 @@
+//! Tables 8 & 9: the equivalent μP formulations.  Prints the abc triples
+//! at several width ratios (the tables themselves), asserts the pairwise
+//! Lemma J.1 equivalences, and then verifies the Eq. (4) consistency
+//! property *end-to-end through PJRT*: at the base shape, an SP run and a
+//! μP run with identical seeds produce identical loss curves.
+
+use anyhow::Result;
+
+use crate::data::source_for;
+use crate::model::BaseShape;
+use crate::mup::formulations::{abc, Formulation};
+use crate::mup::{HyperParams, Optimizer, Parametrization, Role, TensorDims};
+use crate::report::Reporter;
+use crate::runtime::Runtime;
+use crate::train::{run as train_run, RunSpec};
+use crate::util::json::{jnum, Json};
+use crate::util::table::Table;
+
+use super::common::{self, Scale};
+
+pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
+    // --- the tables themselves ------------------------------------------
+    for f in [Formulation::Table3, Formulation::Table8, Formulation::Table9] {
+        let mut t = Table::new(
+            &format!("{f:?} abc triples at width ratio 8 (relative to base)"),
+            &["role", "multiplier a", "init-std b", "SGD lr c", "Adam lr c"],
+        );
+        let dims = TensorDims {
+            fan_in: 1024,
+            fan_out: 1024,
+            base_fan_in: 128,
+            base_fan_out: 128,
+        };
+        for role in [Role::Input, Role::Hidden, Role::Output, Role::Vector] {
+            let s = abc(f, role, Optimizer::Sgd, dims);
+            let a = abc(f, role, Optimizer::Adam, dims);
+            t.row(vec![
+                format!("{role:?}"),
+                format!("{:.5}", s.a),
+                format!("{:.5}", s.b),
+                format!("{:.5}", s.c),
+                format!("{:.5}", a.c),
+            ]);
+        }
+        rep.table(&format!("tab8_{f:?}"), &t)?;
+    }
+
+    // --- pairwise equivalence (Lemma J.1) --------------------------------
+    let mut ok = true;
+    for ri in [2usize, 8, 64] {
+        let dims = TensorDims {
+            fan_in: 128 * ri,
+            fan_out: 128 * ri,
+            base_fan_in: 128,
+            base_fan_out: 128,
+        };
+        for opt in [Optimizer::Sgd, Optimizer::Adam] {
+            for role in [Role::Input, Role::Hidden, Role::Output, Role::Vector] {
+                let x = abc(Formulation::Table3, role, opt, dims);
+                let y = abc(Formulation::Table8, role, opt, dims);
+                let z = abc(Formulation::Table9, role, opt, dims);
+                ok &= x.equivalent(&y, opt, 1e-9).is_some();
+                ok &= x.equivalent(&z, opt, 1e-9).is_some();
+                ok &= y.equivalent(&z, opt, 1e-9).is_some();
+            }
+        }
+    }
+    rep.note(&format!(
+        "tab8: Lemma J.1 pairwise equivalence across ratios {{2,8,64}}: {}",
+        if ok { "ALL HOLD" } else { "VIOLATION" }
+    ));
+
+    // --- Eq. (4) end-to-end: SP == μP at the base shape -------------------
+    let base_w = scale.widths[0];
+    let variant = common::tfm_variant(false, base_w);
+    let hp = HyperParams {
+        lr: 2f64.powi(-8),
+        ..HyperParams::default()
+    };
+    let v = rt.manifest().get(&variant)?;
+    let data = source_for(v, 3);
+    let mut max_dev: f64 = 0.0;
+    let mut curves = Vec::new();
+    for par in [
+        Parametrization::standard(Optimizer::Adam),
+        Parametrization::mup(Optimizer::Adam),
+    ] {
+        let base = match par.scheme {
+            crate::mup::Scheme::Mup => common::tfm_base(base_w),
+            crate::mup::Scheme::Sp => BaseShape::SameAsTarget,
+        };
+        let mut spec = RunSpec::new(&variant, par, hp.clone(), base);
+        spec.steps = scale.steps.min(12);
+        spec.seed = 5;
+        let r = train_run(rt, &spec, data.as_ref())?;
+        curves.push(r.train_losses);
+    }
+    for (a, b) in curves[0].iter().zip(&curves[1]) {
+        max_dev = max_dev.max((a - b).abs());
+    }
+    rep.note(&format!(
+        "tab8 Eq.(4) check: |SP − μP| at base width w{base_w} over {} steps: max {:.3e} (must be ~0)",
+        curves[0].len(),
+        max_dev
+    ));
+    rep.json(
+        "tab8",
+        &Json::from_pairs(vec![
+            ("lemma_j1_holds", Json::Bool(ok)),
+            ("eq4_max_deviation", jnum(max_dev)),
+        ]),
+    )?;
+    if !ok || max_dev > 1e-5 {
+        anyhow::bail!("tab8 equivalence checks failed (dev={max_dev:.3e})");
+    }
+    Ok(())
+}

@@ -1,0 +1,171 @@
+//! Parameter initialization under a chosen parametrization.
+//!
+//! Combines the manifest's per-tensor spec (shape, role, init kind) with
+//! the μP/SP scaling rules to produce the host-side initial tensors fed to
+//! a [`crate::runtime::TrainSession`].  Gaussian init only (App. D.5:
+//! non-Gaussian init converges to the infinite-width limit more slowly and
+//! can break wider-is-better).
+
+pub mod rng;
+
+use crate::model::{tensor_dims, BaseShape};
+use crate::mup::{HyperParams, Parametrization};
+use crate::runtime::Variant;
+use rng::Rng;
+
+/// Initial tensors for `variant` under `par` with base shape `base`,
+/// master init std `hp.sigma`, seeded deterministically.
+pub fn init_params(
+    variant: &Variant,
+    par: &Parametrization,
+    hp: &HyperParams,
+    base: &BaseShape,
+    seed: u64,
+) -> Vec<Vec<f32>> {
+    let dims = tensor_dims(variant, base);
+    let root = Rng::new(seed);
+    variant
+        .params
+        .iter()
+        .zip(dims)
+        .enumerate()
+        .map(|(i, (p, d))| match p.init.as_str() {
+            "ones" => vec![1.0; p.numel()],
+            "zeros" => vec![0.0; p.numel()],
+            _ => {
+                let std = hp.sigma * par.scaling(p.role, d).init_std;
+                root.fork(i as u64).gaussian_vec(p.numel(), std)
+            }
+        })
+        .collect()
+}
+
+/// Per-tensor effective LR vector (before schedule) for `variant`.
+pub fn lr_vec(
+    variant: &Variant,
+    par: &Parametrization,
+    hp: &HyperParams,
+    base: &BaseShape,
+) -> Vec<f32> {
+    tensor_dims(variant, base)
+        .into_iter()
+        .zip(&variant.params)
+        .map(|(d, p)| par.effective_lr(hp, p.role, d) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{transformer_specs, TfmConfig};
+    use crate::mup::Optimizer;
+    use crate::runtime::manifest::Kind;
+    use crate::stats;
+
+    fn variant(d_model: usize) -> Variant {
+        let c = TfmConfig {
+            vocab: 64,
+            seq: 32,
+            batch: 16,
+            d_model,
+            n_layer: 1,
+            n_head: 4,
+            d_head: d_model / 4,
+            d_ffn: 2 * d_model,
+            pre_ln: true,
+        };
+        let mut v = Variant {
+            name: format!("w{d_model}"),
+            arch: crate::runtime::Arch::Transformer,
+            kind: Kind::Train,
+            opt: "adam".into(),
+            hlo_path: "/dev/null".into(),
+            config: Default::default(),
+            config_str: Default::default(),
+            data_inputs: vec![],
+            n_state: 2,
+            probes: vec![],
+            params: transformer_specs(&c),
+            golden: None,
+        };
+        for (k, val) in [
+            ("vocab", 64.0),
+            ("seq", 32.0),
+            ("batch", 16.0),
+            ("d_model", d_model as f64),
+            ("n_layer", 1.0),
+            ("n_head", 4.0),
+            ("d_head", (d_model / 4) as f64),
+            ("d_ffn", (2 * d_model) as f64),
+        ] {
+            v.config.fields.insert(k.into(), val);
+        }
+        v.config_str.insert("ln".into(), "pre".into());
+        v
+    }
+
+    #[test]
+    fn deterministic_and_respects_init_kind() {
+        let v = variant(64);
+        let par = Parametrization::mup(Optimizer::Adam);
+        let hp = HyperParams::default();
+        let a = init_params(&v, &par, &hp, &BaseShape::SameAsTarget, 7);
+        let b = init_params(&v, &par, &hp, &BaseShape::SameAsTarget, 7);
+        assert_eq!(a, b);
+        for (p, t) in v.params.iter().zip(&a) {
+            match p.init.as_str() {
+                "ones" => assert!(t.iter().all(|&x| x == 1.0), "{}", p.name),
+                "zeros" => assert!(t.iter().all(|&x| x == 0.0), "{}", p.name),
+                _ => assert!(t.iter().any(|&x| x != 0.0), "{}", p.name),
+            }
+        }
+    }
+
+    #[test]
+    fn mup_output_std_pinned_to_base() {
+        // make unembed "normal" to measure it
+        let mut v = variant(256);
+        v.params.last_mut().unwrap().init = "normal".into();
+        let par = Parametrization::mup(Optimizer::Adam);
+        let hp = HyperParams::default();
+        let base = BaseShape::Tfm {
+            d_model: 64,
+            n_head: 4,
+            d_head: 16,
+            d_ffn: 128,
+        };
+        let params = init_params(&v, &par, &hp, &base, 3);
+        let un = params.last().unwrap();
+        let measured = stats::rms(un);
+        // Table 8: output std = 1/sqrt(base_fan_in) = 1/8
+        assert!((measured - 1.0 / 8.0).abs() < 0.01, "measured={measured}");
+        // SP at the same width would give 1/16
+        let sp = Parametrization::standard(Optimizer::Adam);
+        let sp_params = init_params(&v, &sp, &hp, &BaseShape::SameAsTarget, 3);
+        let sp_rms = stats::rms(sp_params.last().unwrap());
+        assert!((sp_rms - 1.0 / 16.0).abs() < 0.01, "sp={sp_rms}");
+    }
+
+    #[test]
+    fn lr_vec_shapes_and_hidden_scaling() {
+        let v = variant(256);
+        let par = Parametrization::mup(Optimizer::Adam);
+        let hp = HyperParams {
+            lr: 1e-3,
+            ..Default::default()
+        };
+        let base = BaseShape::Tfm {
+            d_model: 64,
+            n_head: 4,
+            d_head: 16,
+            d_ffn: 128,
+        };
+        let lrs = lr_vec(&v, &par, &hp, &base);
+        assert_eq!(lrs.len(), v.params.len());
+        // embed (input role): full LR; wk (hidden): LR / 4
+        let idx_embed = 0;
+        let idx_wk = v.params.iter().position(|p| p.name == "block0.wk").unwrap();
+        assert!((lrs[idx_embed] - 1e-3).abs() < 1e-9);
+        assert!((lrs[idx_wk] - 0.25e-3).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,247 @@
+//! Deterministic RNG substrate.
+//!
+//! `SplitMix64` is the cross-language contract with the Python build path
+//! (`compile/model.py::splitmix64`) — the golden-value integration tests
+//! depend on bit-for-bit agreement.  `Pcg64` (a splitmix-seeded xoshiro256++)
+//! drives everything stochastic on the Rust side: initialization, data
+//! generation, and HP random search.  Everything is seeded explicitly; no
+//! global state, so every trial/run in a sweep is exactly reproducible.
+
+/// The canonical splitmix64 step (public-domain reference constants).
+#[inline]
+pub fn splitmix64(x: u64) -> u64 {
+    let x = x.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = x;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// u64 -> f64 uniform in [0, 1) using the top 53 bits (same mapping as the
+/// Python side).
+#[inline]
+pub fn u64_to_unit_f64(z: u64) -> f64 {
+    (z >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// Deterministic tensor fill matching `compile.model.det_fill` exactly:
+/// elem\[i\] = (U(splitmix64(seed<<32 + i)) - 0.5) * 2 * scale.
+pub fn det_fill(n: usize, seed: u64, scale: f32) -> Vec<f32> {
+    let base = seed << 32;
+    (0..n as u64)
+        .map(|i| {
+            let u = u64_to_unit_f64(splitmix64(base.wrapping_add(i)));
+            ((u - 0.5) * 2.0 * scale as f64) as f32
+        })
+        .collect()
+}
+
+/// Deterministic token fill matching `compile.model.det_tokens`.
+pub fn det_tokens(n: usize, vocab: u32, seed: u64) -> Vec<i32> {
+    let base = seed << 32;
+    (0..n as u64)
+        .map(|i| (splitmix64(base.wrapping_add(i)) % vocab as u64) as i32)
+        .collect()
+}
+
+/// xoshiro256++ — fast, high-quality, tiny; seeded via splitmix64 per the
+/// reference recommendation.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+    /// Box-Muller spare
+    gauss_spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        let mut s = [0u64; 4];
+        let mut x = seed;
+        for slot in s.iter_mut() {
+            x = x.wrapping_add(0x9E3779B97F4A7C15);
+            *slot = splitmix64(x);
+        }
+        Rng {
+            s,
+            gauss_spare: None,
+        }
+    }
+
+    /// Derive an independent stream; used to give each (trial, run, step)
+    /// its own reproducible generator.
+    pub fn fork(&self, stream: u64) -> Rng {
+        let mix = splitmix64(self.s[0] ^ splitmix64(stream.wrapping_mul(0x9E3779B97F4A7C15)));
+        Rng::new(mix)
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = (s[0].wrapping_add(s[3]))
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        u64_to_unit_f64(self.next_u64())
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.uniform() * (hi - lo)
+    }
+
+    /// Log-uniform in [lo, hi) (both must be positive) — the standard HP
+    /// search distribution (App. F.4 samples LRs from 10^U(-4,-1)).
+    pub fn log_uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        assert!(lo > 0.0 && hi > lo);
+        (self.range(lo.ln(), hi.ln())).exp()
+    }
+
+    /// Integer in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        // rejection-free modulo bias is negligible for our n << 2^64
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller (exact, no tables).
+    pub fn gaussian(&mut self) -> f64 {
+        if let Some(z) = self.gauss_spare.take() {
+            return z;
+        }
+        loop {
+            let u1 = self.uniform();
+            let u2 = self.uniform();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let r = (-2.0 * u1.ln()).sqrt();
+            let (s, c) = (2.0 * std::f64::consts::PI * u2).sin_cos();
+            self.gauss_spare = Some(r * s);
+            return r * c;
+        }
+    }
+
+    /// N(0, std^2) f32 vector.
+    pub fn gaussian_vec(&mut self, n: usize, std: f64) -> Vec<f32> {
+        (0..n).map(|_| (self.gaussian() * std) as f32).collect()
+    }
+
+    /// Zipf-distributed index in [0, n) with exponent `s` via inverse-CDF
+    /// on a precomputed table would be overkill; this uses rejection-free
+    /// cumulative search acceptable for n <= a few hundred (our vocab).
+    pub fn zipf(&mut self, n: usize, s: f64, cdf: &[f64]) -> usize {
+        debug_assert_eq!(cdf.len(), n);
+        let u = self.uniform() * cdf[n - 1];
+        match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(n - 1),
+        }
+    }
+}
+
+/// Precompute an (unnormalized) Zipf CDF for `Rng::zipf`.
+pub fn zipf_cdf(n: usize, s: f64) -> Vec<f64> {
+    let mut acc = 0.0;
+    (1..=n)
+        .map(|k| {
+            acc += 1.0 / (k as f64).powf(s);
+            acc
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vectors() {
+        // Anchors shared with python/tests/test_model.py
+        assert_eq!(splitmix64(0), 0xE220A8397B1DCDAF);
+        assert_eq!(splitmix64(1), 0x910A2DEC89025CC1);
+        assert_eq!(splitmix64(0xDEADBEEF), 0x4ADFB90F68C9EB9B);
+    }
+
+    #[test]
+    fn det_fill_bounded_and_deterministic() {
+        let a = det_fill(256, 7, 0.02);
+        let b = det_fill(256, 7, 0.02);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.abs() <= 0.02));
+        let c = det_fill(256, 8, 0.02);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn det_tokens_in_range() {
+        let t = det_tokens(1000, 64, 3);
+        assert!(t.iter().all(|&v| (0..64).contains(&v)));
+        // should hit most of the vocab over 1000 draws
+        let distinct: std::collections::HashSet<_> = t.iter().collect();
+        assert!(distinct.len() > 32);
+    }
+
+    #[test]
+    fn rng_uniform_moments() {
+        let mut r = Rng::new(42);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.uniform()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn rng_gaussian_moments() {
+        let mut r = Rng::new(7);
+        let n = 40_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn rng_streams_independent() {
+        let base = Rng::new(1);
+        let mut a = base.fork(0);
+        let mut b = base.fork(1);
+        let xa: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let xb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        assert_ne!(xa, xb);
+        // re-fork reproduces
+        let mut a2 = base.fork(0);
+        let xa2: Vec<u64> = (0..8).map(|_| a2.next_u64()).collect();
+        assert_eq!(xa, xa2);
+    }
+
+    #[test]
+    fn log_uniform_in_range() {
+        let mut r = Rng::new(3);
+        for _ in 0..100 {
+            let v = r.log_uniform(1e-4, 1e-1);
+            assert!((1e-4..1e-1).contains(&v));
+        }
+    }
+
+    #[test]
+    fn zipf_prefers_small_indices() {
+        let cdf = zipf_cdf(64, 1.2);
+        let mut r = Rng::new(9);
+        let draws: Vec<usize> = (0..5000).map(|_| r.zipf(64, 1.2, &cdf)).collect();
+        let low = draws.iter().filter(|&&i| i < 8).count();
+        assert!(low > draws.len() / 3, "low-rank mass {low}");
+        assert!(draws.iter().all(|&i| i < 64));
+    }
+}

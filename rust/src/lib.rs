@@ -1,0 +1,65 @@
+//! # mutransfer — zero-shot hyperparameter transfer via μP
+//!
+//! A Rust + JAX + Pallas reproduction of *"Tensor Programs V: Tuning Large
+//! Neural Networks via Zero-Shot Hyperparameter Transfer"* (μTransfer).
+//!
+//! The stack has three layers (see DESIGN.md):
+//!
+//! 1. **Pallas kernels** (`python/compile/kernels/`) — matmul, fused 1/d
+//!    attention, layernorm, fused per-tensor-LR optimizer steps.
+//! 2. **JAX model graphs** (`python/compile/model.py`) — Transformer/MLP
+//!    train-eval-coord steps, AOT-lowered once to HLO text artifacts.
+//! 3. **This crate** — the coordinator: μP rule engine ([`mup`]), PJRT
+//!    runtime ([`runtime`]), data substrates ([`data`]), training driver
+//!    ([`train`]), HP search ([`tuner`]), sweep scheduler ([`sweep`]),
+//!    μTransfer workflow ([`transfer`]), coordinate checking
+//!    ([`coordcheck`]), and the experiment harness ([`exp`]) that
+//!    regenerates every table and figure of the paper.
+//!
+//! Python never runs at run time: `make artifacts` is the only build-time
+//! Python entry point, after which the `mutransfer` binary is
+//! self-contained.
+
+pub mod config;
+pub mod coordcheck;
+pub mod data;
+pub mod exp;
+pub mod init;
+pub mod model;
+pub mod mup;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod sweep;
+pub mod train;
+pub mod transfer;
+pub mod tuner;
+pub mod util;
+
+/// Default artifacts directory, overridable with `MUTRANSFER_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("MUTRANSFER_ARTIFACTS") {
+        return p.into();
+    }
+    // Walk up from cwd so examples/tests work from any subdirectory.
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join("artifacts");
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return "artifacts".into();
+        }
+    }
+}
+
+/// Default results directory for experiment outputs.
+pub fn results_dir() -> std::path::PathBuf {
+    let d = artifacts_dir()
+        .parent()
+        .map(|p| p.join("results"))
+        .unwrap_or_else(|| "results".into());
+    let _ = std::fs::create_dir_all(&d);
+    d
+}

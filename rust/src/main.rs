@@ -1,0 +1,221 @@
+//! `mutransfer` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   exp <id>            regenerate a paper table/figure (DESIGN.md §4)
+//!   train               one training run with explicit HPs
+//!   transfer            Algorithm 1 end-to-end (tune proxy → run target)
+//!   coord-check         verify a μP implementation (App. D.1)
+//!   list-artifacts      show compiled-artifact inventory
+//!
+//! Common flags: --artifacts DIR --results DIR --preset ci|paper|smoke
+
+use anyhow::{bail, Context, Result};
+
+use mutransfer::exp::{self, Scale};
+use mutransfer::model::BaseShape;
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::report::Reporter;
+use mutransfer::runtime::Runtime;
+use mutransfer::train::{run as train_run, RunSpec, Schedule};
+use mutransfer::util::cli::Args;
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+const USAGE: &str = "usage: mutransfer <exp|train|transfer|coord-check|list-artifacts> [flags]
+  exp <id>|all        --preset ci|paper|smoke
+  train               --variant NAME --scheme mup|sp --lr F --steps N [--base-width W]
+  transfer            --proxy NAME --target NAME --base-width W --samples N --steps N --target-steps N
+  coord-check         --variant NAME(__coord) --scheme mup|sp [--base-width W] [--steps N]
+  list-artifacts
+common: --artifacts DIR  --results DIR";
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
+    let cmd = args.positional.first().cloned().unwrap_or_default();
+    let artifacts = args
+        .get("artifacts")
+        .map(Into::into)
+        .unwrap_or_else(mutransfer::artifacts_dir);
+    let results = args
+        .get("results")
+        .map(Into::into)
+        .unwrap_or_else(mutransfer::results_dir);
+    let preset = args.str_or("preset", "ci");
+
+    match cmd.as_str() {
+        "exp" => {
+            let id = args
+                .positional
+                .get(1)
+                .context("exp needs an id (e.g. fig1); see DESIGN.md §4")?
+                .clone();
+            let scale = Scale::by_name(&preset)
+                .with_context(|| format!("unknown preset {preset}"))?;
+            let rt = Runtime::new(&artifacts)?;
+            let rep = Reporter::new(results);
+            exp::run(&id, &rt, &rep, &scale)?;
+        }
+        "train" => {
+            // Flags, optionally seeded from a TOML config (--config FILE;
+            // explicit flags win).
+            let cfg = match args.get("config") {
+                Some(p) => mutransfer::config::Config::load(std::path::Path::new(p))?,
+                None => mutransfer::config::Config::default(),
+            };
+            let variant = args.str_or("variant", &cfg.str_or("run", "variant", "tfm_post_w64_d2"));
+            let scheme = args.str_or("scheme", "mup");
+            let steps = args.usize_or("steps", cfg.usize_or("run", "steps", 100));
+            let seed = args.u64_or("seed", cfg.usize_or("run", "seed", 0) as u64);
+            let base_width = args.usize_or("base-width", cfg.usize_or("mup", "base_d_model", 0));
+            let mut hp = cfg.hyperparams();
+            hp.lr = args.f64_or("lr", hp.lr);
+            hp.sigma = args.f64_or("sigma", hp.sigma);
+            let lr = hp.lr;
+            args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let rt = Runtime::new(&artifacts)?;
+            let v = rt.manifest().get(&variant)?;
+            let opt = if v.opt == "adam" { Optimizer::Adam } else { Optimizer::Sgd };
+            let (par, base) = parse_scheme(&scheme, opt, v, base_width)?;
+            let mut spec = RunSpec::new(&variant, par, hp, base);
+            spec.steps = steps;
+            spec.seed = seed;
+            spec.eval_every = (steps / 4).max(1);
+            spec.schedule = cfg.schedule();
+            let data = mutransfer::data::source_for(v, seed);
+            let r = train_run(&rt, &spec, data.as_ref())?;
+            println!(
+                "variant={variant} scheme={scheme} lr={lr:.3e} steps={} diverged={} final_train={:.4} best_val={:.4} ({:.2}s, {:.2} GFLOPs)",
+                r.steps_done,
+                r.diverged,
+                r.final_train_loss(),
+                r.best_val_loss(),
+                r.wall_secs,
+                r.flops / 1e9,
+            );
+            for (s, l) in &r.val_losses {
+                println!("  val @ step {s}: {l:.4}");
+            }
+        }
+        "transfer" => {
+            let proxy = args.str_or("proxy", "tfm_post_w64_d2");
+            let target = args.str_or("target", "tfm_post_w256_d2");
+            let base_width = args.usize_or("base-width", 64);
+            let samples = args.usize_or("samples", 12);
+            let steps = args.usize_or("steps", 40);
+            let target_steps = args.usize_or("target-steps", 120);
+            let seed = args.u64_or("seed", 0);
+            args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let rt = Runtime::new(&artifacts)?;
+            let rep = Reporter::new(results);
+            let mut sweep = mutransfer::sweep::Sweep::new(&rt)
+                .with_journal(&rep.path("transfer-cli.journal"))?;
+            sweep.verbose = true;
+            let setup = mutransfer::transfer::TransferSetup {
+                proxy_variant: proxy.clone(),
+                target_variant: target.clone(),
+                base: BaseShape::Tfm {
+                    d_model: base_width,
+                    n_head: 4,
+                    d_head: base_width / 4,
+                    d_ffn: 4 * base_width,
+                },
+                optimizer: Optimizer::Adam,
+                space: mutransfer::tuner::SearchSpace::iwslt_like(),
+                proxy_steps: steps,
+                target_steps,
+                n_samples: samples,
+                seed,
+                eval_every: (steps / 2).max(2),
+                schedule: Schedule::Constant,
+            };
+            let out = mutransfer::transfer::mu_transfer(&rt, &mut sweep, &setup, "cli")?;
+            match (&out.best, &out.target) {
+                (Some(best), Some(t)) => println!(
+                    "best proxy HPs: {:?}\ntarget val loss: {:.4} (diverged={})\ntuning cost ratio: {:.1}%",
+                    best.values,
+                    t.trial.val_loss,
+                    t.trial.diverged,
+                    100.0 * out.tuning_cost_ratio(),
+                ),
+                _ => println!("all proxy trials diverged — widen the search space"),
+            }
+        }
+        "coord-check" => {
+            let variant = args.str_or("variant", "tfm_post_w64_d2__coord");
+            let scheme = args.str_or("scheme", "mup");
+            let steps = args.usize_or("steps", 4);
+            let base_width = args.usize_or("base-width", 0);
+            let lr = args.f64_or("lr", 2f64.powi(-7));
+            args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let rt = Runtime::new(&artifacts)?;
+            let v = rt.manifest().get(&variant)?;
+            let (par, base) = parse_scheme(&scheme, Optimizer::Adam, v, base_width)?;
+            let hp = HyperParams { lr, ..HyperParams::default() };
+            let mut spec = RunSpec::new(&variant, par, hp, base);
+            spec.seed = 1;
+            let data = mutransfer::data::source_for(v, 1);
+            let rec = mutransfer::coordcheck::coord_check(&rt, &spec, data.as_ref(), steps)?;
+            println!("width {}:", rec.width);
+            for (probe, deltas) in &rec.deltas {
+                println!(
+                    "  {probe:<16} init_rms={:.3e}  Δrms(t)={}",
+                    rec.init_rms.get(probe).copied().unwrap_or(f64::NAN),
+                    deltas
+                        .iter()
+                        .map(|d| format!("{d:.3e}"))
+                        .collect::<Vec<_>>()
+                        .join(" ")
+                );
+            }
+        }
+        "list-artifacts" => {
+            let rt = Runtime::new(&artifacts)?;
+            println!("{:<42} {:<12} {:<6} {:>10} {:>14}", "variant", "arch", "kind", "params", "GFLOPs/step");
+            for name in rt.manifest().names() {
+                let v = rt.manifest().get(name)?;
+                println!(
+                    "{:<42} {:<12} {:<6} {:>10} {:>14.3}",
+                    v.name,
+                    format!("{:?}", v.arch),
+                    format!("{:?}", v.kind),
+                    v.total_numel(),
+                    v.flops_per_step() / 1e9,
+                );
+            }
+        }
+        _ => bail!("{USAGE}"),
+    }
+    Ok(())
+}
+
+fn parse_scheme(
+    scheme: &str,
+    opt: Optimizer,
+    v: &mutransfer::runtime::Variant,
+    base_width: usize,
+) -> Result<(Parametrization, BaseShape)> {
+    let par = match scheme {
+        "mup" => Parametrization::mup(opt),
+        "sp" => Parametrization::standard(opt),
+        other => bail!("scheme must be mup|sp, got {other}"),
+    };
+    let base = if scheme == "sp" || base_width == 0 {
+        BaseShape::SameAsTarget
+    } else {
+        match v.arch {
+            mutransfer::runtime::Arch::Transformer => BaseShape::Tfm {
+                d_model: base_width,
+                n_head: v.config.get("n_head").unwrap_or(4),
+                d_head: base_width / v.config.get("n_head").unwrap_or(4).max(1),
+                d_ffn: 4 * base_width,
+            },
+            _ => BaseShape::Width(base_width),
+        }
+    };
+    Ok((par, base))
+}

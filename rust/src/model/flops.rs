@@ -1,0 +1,94 @@
+//! FLOPs accounting — the currency of every tuning-budget comparison in
+//! the paper (§7.1 "controlling the total tuning budget in FLOPs",
+//! Appendix F.4's 7% tuning-cost ratio).
+//!
+//! Uses the standard 6·N·D estimate (fwd 2ND + bwd 4ND) for token models;
+//! the optimizer update adds O(N) per step, negligible at our D.
+
+use crate::runtime::Variant;
+
+/// FLOPs for `steps` optimizer steps on a variant.
+pub fn training_flops(v: &Variant, steps: usize) -> f64 {
+    v.flops_per_step() * steps as f64
+}
+
+/// The Appendix F.4 cost ratio:
+/// (proxy params · Σ_i tokens_i·trials_i) / (target params · target tokens).
+/// Expressed here directly in FLOPs of the actual runs.
+pub fn tuning_cost_ratio(search_flops: f64, target_training_flops: f64) -> f64 {
+    search_flops / target_training_flops
+}
+
+/// Model/total speedup factors reported in Table 6:
+/// *model speedup* = target step FLOPs / proxy step FLOPs,
+/// *total speedup* additionally counts the step-count saving.
+pub fn speedups(
+    proxy: &Variant,
+    target: &Variant,
+    proxy_steps: usize,
+    target_steps: usize,
+) -> (f64, f64) {
+    let model = target.flops_per_step() / proxy.flops_per_step();
+    let total = model * target_steps as f64 / proxy_steps.max(1) as f64;
+    (model, total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{transformer_specs, TfmConfig};
+    use crate::runtime::manifest::Kind;
+
+    fn variant(d_model: usize) -> Variant {
+        let c = TfmConfig {
+            vocab: 64,
+            seq: 32,
+            batch: 16,
+            d_model,
+            n_layer: 2,
+            n_head: 4,
+            d_head: d_model / 4,
+            d_ffn: 4 * d_model,
+            pre_ln: true,
+        };
+        let mut v = Variant {
+            name: format!("w{d_model}"),
+            arch: crate::runtime::Arch::Transformer,
+            kind: Kind::Train,
+            opt: "adam".into(),
+            hlo_path: "/dev/null".into(),
+            config: Default::default(),
+            config_str: Default::default(),
+            data_inputs: vec![],
+            n_state: 2,
+            probes: vec![],
+            params: transformer_specs(&c),
+            golden: None,
+        };
+        v.config.fields.insert("batch".into(), 16.0);
+        v.config.fields.insert("seq".into(), 32.0);
+        v
+    }
+
+    #[test]
+    fn flops_scale_with_width_squared_ish() {
+        let small = variant(64);
+        let big = variant(256);
+        let ratio = big.flops_per_step() / small.flops_per_step();
+        // hidden params dominate -> ~16x at 4x width (embeddings dilute it)
+        assert!(ratio > 8.0 && ratio < 16.5, "ratio={ratio}");
+    }
+
+    #[test]
+    fn cost_ratio_and_speedups() {
+        let proxy = variant(64);
+        let target = variant(256);
+        let (model, total) = speedups(&proxy, &target, 100, 1000);
+        assert!(model > 8.0);
+        assert!((total / model - 10.0).abs() < 1e-9);
+        let search = training_flops(&proxy, 100) * 64.0; // 64 samples
+        let train = training_flops(&target, 1000);
+        let r = tuning_cost_ratio(search, train);
+        assert!(r > 0.0 && r < 1.5, "r={r}");
+    }
+}

@@ -1,0 +1,381 @@
+//! Architecture specs on the Rust side.
+//!
+//! Mirrors `python/compile/model.py`'s parameter layouts exactly (same
+//! names, shapes, roles, order) — integration tests assert the mirror
+//! against every manifest entry.  Having the layout natively lets the
+//! coordinator construct the *base shape* of any model analytically (the
+//! μP base can be a shape we never lowered, e.g. the proxy width at the
+//! target depth, per Appendix H's "recreate the base model shape at new
+//! depths").
+
+pub mod flops;
+
+use crate::mup::{Role, TensorDims};
+use crate::runtime::manifest::{ModelConfig, ParamInfo, Variant};
+
+use std::collections::BTreeMap;
+
+/// Transformer shape (decoder-only LM).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TfmConfig {
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_head: usize,
+    pub d_ffn: usize,
+    /// true = pre-LN
+    pub pre_ln: bool,
+}
+
+impl TfmConfig {
+    pub fn d_attn(&self) -> usize {
+        self.n_head * self.d_head
+    }
+
+    pub fn from_variant(v: &Variant) -> TfmConfig {
+        let c: &ModelConfig = &v.config;
+        TfmConfig {
+            vocab: c.req("vocab"),
+            seq: c.req("seq"),
+            batch: c.req("batch"),
+            d_model: c.req("d_model"),
+            n_layer: c.req("n_layer"),
+            n_head: c.req("n_head"),
+            d_head: c.req("d_head"),
+            d_ffn: c.req("d_ffn"),
+            pre_ln: v.config_str.get("ln").map(|s| s == "pre").unwrap_or(true),
+        }
+    }
+
+    /// The μP base: shrink width-like dims to the proxy's, keep
+    /// everything scale-like (depth, seq, batch, vocab) at the target's.
+    pub fn with_widths(&self, d_model: usize, n_head: usize, d_head: usize, d_ffn: usize) -> TfmConfig {
+        TfmConfig {
+            d_model,
+            n_head,
+            d_head,
+            d_ffn,
+            ..*self
+        }
+    }
+}
+
+fn p(name: &str, shape: &[usize], role: Role, fan_in: usize, fan_out: usize, init: &str) -> ParamInfo {
+    ParamInfo {
+        name: name.to_string(),
+        shape: shape.to_vec(),
+        role,
+        fan_in,
+        fan_out,
+        init: init.to_string(),
+    }
+}
+
+/// Exact mirror of `compile.model.transformer_param_specs`.
+pub fn transformer_specs(c: &TfmConfig) -> Vec<ParamInfo> {
+    let (d, da, f, v, s) = (c.d_model, c.d_attn(), c.d_ffn, c.vocab, c.seq);
+    let mut out = vec![
+        p("embed", &[v, d], Role::Input, v, d, "normal"),
+        p("pos_embed", &[s, d], Role::Input, s, d, "normal"),
+    ];
+    for i in 0..c.n_layer {
+        let pre = format!("block{i}.");
+        out.push(p(&format!("{pre}ln1_g"), &[d], Role::Vector, 1, d, "ones"));
+        out.push(p(&format!("{pre}ln1_b"), &[d], Role::Vector, 1, d, "zeros"));
+        out.push(p(&format!("{pre}wq"), &[d, da], Role::Hidden, d, da, "zeros"));
+        out.push(p(&format!("{pre}wk"), &[d, da], Role::Hidden, d, da, "normal"));
+        out.push(p(&format!("{pre}wv"), &[d, da], Role::Hidden, d, da, "normal"));
+        out.push(p(&format!("{pre}wo"), &[da, d], Role::Hidden, da, d, "normal"));
+        out.push(p(&format!("{pre}ln2_g"), &[d], Role::Vector, 1, d, "ones"));
+        out.push(p(&format!("{pre}ln2_b"), &[d], Role::Vector, 1, d, "zeros"));
+        out.push(p(&format!("{pre}w1"), &[d, f], Role::Hidden, d, f, "normal"));
+        out.push(p(&format!("{pre}w2"), &[f, d], Role::Hidden, f, d, "normal"));
+    }
+    if c.pre_ln {
+        out.push(p("lnf_g", &[d], Role::Vector, 1, d, "ones"));
+        out.push(p("lnf_b", &[d], Role::Vector, 1, d, "zeros"));
+    }
+    out.push(p("unembed", &[d, v], Role::Output, d, v, "zeros"));
+    out
+}
+
+/// MLP (Section 3 / Fig. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MlpConfig {
+    pub d_in: usize,
+    pub width: usize,
+    pub d_out: usize,
+    pub batch: usize,
+}
+
+impl MlpConfig {
+    pub fn from_variant(v: &Variant) -> MlpConfig {
+        MlpConfig {
+            d_in: v.config.req("d_in"),
+            width: v.config.req("width"),
+            d_out: v.config.req("d_out"),
+            batch: v.config.req("batch"),
+        }
+    }
+
+    pub fn with_width(&self, width: usize) -> MlpConfig {
+        MlpConfig { width, ..*self }
+    }
+}
+
+pub fn mlp_specs(c: &MlpConfig) -> Vec<ParamInfo> {
+    let n = c.width;
+    vec![
+        p("w1", &[c.d_in, n], Role::Input, c.d_in, n, "normal"),
+        p("b1", &[n], Role::Vector, 1, n, "zeros"),
+        p("w2", &[n, n], Role::Hidden, n, n, "normal"),
+        p("b2", &[n], Role::Vector, 1, n, "zeros"),
+        p("w3", &[n, c.d_out], Role::Output, n, c.d_out, "zeros"),
+    ]
+}
+
+/// Residual MLP (ResNet stand-in, Tab. 12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ResMlpConfig {
+    pub d_in: usize,
+    pub width: usize,
+    pub n_block: usize,
+    pub d_out: usize,
+    pub batch: usize,
+}
+
+impl ResMlpConfig {
+    pub fn from_variant(v: &Variant) -> ResMlpConfig {
+        ResMlpConfig {
+            d_in: v.config.req("d_in"),
+            width: v.config.req("width"),
+            n_block: v.config.req("n_block"),
+            d_out: v.config.req("d_out"),
+            batch: v.config.req("batch"),
+        }
+    }
+
+    pub fn with_width(&self, width: usize) -> ResMlpConfig {
+        ResMlpConfig { width, ..*self }
+    }
+}
+
+pub fn resmlp_specs(c: &ResMlpConfig) -> Vec<ParamInfo> {
+    let n = c.width;
+    let mut out = vec![p("w_in", &[c.d_in, n], Role::Input, c.d_in, n, "normal")];
+    for i in 0..c.n_block {
+        let pre = format!("block{i}.");
+        out.push(p(&format!("{pre}ln_g"), &[n], Role::Vector, 1, n, "ones"));
+        out.push(p(&format!("{pre}ln_b"), &[n], Role::Vector, 1, n, "zeros"));
+        out.push(p(&format!("{pre}w1"), &[n, n], Role::Hidden, n, n, "normal"));
+        out.push(p(&format!("{pre}w2"), &[n, n], Role::Hidden, n, n, "normal"));
+    }
+    out.push(p("ln_f_g", &[n], Role::Vector, 1, n, "ones"));
+    out.push(p("ln_f_b", &[n], Role::Vector, 1, n, "zeros"));
+    out.push(p("w_out", &[n, c.d_out], Role::Output, n, c.d_out, "zeros"));
+    out
+}
+
+/// Rebuild the param layout for any manifest variant from its config —
+/// must equal `variant.params` exactly (tested in rust/tests/).
+pub fn specs_for_variant(v: &Variant) -> Vec<ParamInfo> {
+    match v.arch {
+        crate::runtime::Arch::Transformer => transformer_specs(&TfmConfig::from_variant(v)),
+        crate::runtime::Arch::Mlp => mlp_specs(&MlpConfig::from_variant(v)),
+        crate::runtime::Arch::ResMlp => resmlp_specs(&ResMlpConfig::from_variant(v)),
+    }
+}
+
+/// The μP base shape for a target variant: a (possibly never-lowered)
+/// spec list at proxy widths but target depth/seq/batch.
+#[derive(Debug, Clone)]
+pub enum BaseShape {
+    /// base == target (makes μP degenerate to SP-at-this-width; used for
+    /// SP baselines and the identity checks)
+    SameAsTarget,
+    /// transformer base widths
+    Tfm {
+        d_model: usize,
+        n_head: usize,
+        d_head: usize,
+        d_ffn: usize,
+    },
+    /// mlp/resmlp base hidden width
+    Width(usize),
+}
+
+/// Per-tensor dims (current + base fan in/out) for a variant under a base
+/// shape; panics if the layouts diverge (they cannot, by construction).
+pub fn tensor_dims(v: &Variant, base: &BaseShape) -> Vec<TensorDims> {
+    let base_specs: Vec<ParamInfo> = match (v.arch, base) {
+        (_, BaseShape::SameAsTarget) => v.params.clone(),
+        (crate::runtime::Arch::Transformer, BaseShape::Tfm { d_model, n_head, d_head, d_ffn }) => {
+            let c = TfmConfig::from_variant(v).with_widths(*d_model, *n_head, *d_head, *d_ffn);
+            transformer_specs(&c)
+        }
+        (crate::runtime::Arch::Mlp, BaseShape::Width(n)) => {
+            mlp_specs(&MlpConfig::from_variant(v).with_width(*n))
+        }
+        (crate::runtime::Arch::ResMlp, BaseShape::Width(n)) => {
+            resmlp_specs(&ResMlpConfig::from_variant(v).with_width(*n))
+        }
+        (a, b) => panic!("base shape {b:?} does not apply to arch {a:?}"),
+    };
+    let by_name: BTreeMap<&str, &ParamInfo> =
+        base_specs.iter().map(|s| (s.name.as_str(), s)).collect();
+    v.params
+        .iter()
+        .map(|t| {
+            let b = by_name
+                .get(t.name.as_str())
+                .unwrap_or_else(|| panic!("base shape missing tensor {}", t.name));
+            TensorDims {
+                fan_in: t.fan_in,
+                fan_out: t.fan_out,
+                base_fan_in: b.fan_in,
+                base_fan_out: b.fan_out,
+            }
+        })
+        .collect()
+}
+
+/// d_head of the base shape (for the attention-scale multiplier).
+pub fn base_d_head(v: &Variant, base: &BaseShape) -> usize {
+    match base {
+        BaseShape::SameAsTarget => v.config.get("d_head").unwrap_or(1),
+        BaseShape::Tfm { d_head, .. } => *d_head,
+        BaseShape::Width(_) => 1,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> TfmConfig {
+        TfmConfig {
+            vocab: 64,
+            seq: 32,
+            batch: 16,
+            d_model: 128,
+            n_layer: 2,
+            n_head: 4,
+            d_head: 32,
+            d_ffn: 512,
+            pre_ln: true,
+        }
+    }
+
+    #[test]
+    fn transformer_layout_counts() {
+        let specs = transformer_specs(&cfg());
+        // 2 emb + 2 layers * 10 + 2 final LN + unembed
+        assert_eq!(specs.len(), 2 + 20 + 2 + 1);
+        assert_eq!(specs[0].name, "embed");
+        assert_eq!(specs.last().unwrap().name, "unembed");
+        assert_eq!(specs.last().unwrap().role, Role::Output);
+        // post-LN drops the final LN pair
+        let mut c = cfg();
+        c.pre_ln = false;
+        assert_eq!(transformer_specs(&c).len(), 2 + 20 + 1);
+    }
+
+    #[test]
+    fn wq_and_unembed_zero_init() {
+        let specs = transformer_specs(&cfg());
+        for s in &specs {
+            if s.name.ends_with("wq") || s.name == "unembed" {
+                assert_eq!(s.init, "zeros", "{}", s.name);
+            }
+        }
+    }
+
+    #[test]
+    fn mlp_layout() {
+        let c = MlpConfig {
+            d_in: 256,
+            width: 128,
+            d_out: 10,
+            batch: 64,
+        };
+        let specs = mlp_specs(&c);
+        assert_eq!(specs.len(), 5);
+        assert_eq!(specs[0].fan_in, 256);
+        assert_eq!(specs[2].role, Role::Hidden);
+        assert_eq!(specs[4].role, Role::Output);
+    }
+
+    #[test]
+    fn base_dims_width_ratio() {
+        // emulate a manifest variant at 4x width with a base at 1x
+        let c4 = cfg();
+        let mut v = Variant {
+            name: "t".into(),
+            arch: crate::runtime::Arch::Transformer,
+            kind: crate::runtime::manifest::Kind::Train,
+            opt: "adam".into(),
+            hlo_path: "/dev/null".into(),
+            config: Default::default(),
+            config_str: Default::default(),
+            data_inputs: vec![],
+            n_state: 2,
+            probes: vec![],
+            params: transformer_specs(&c4),
+            golden: None,
+        };
+        v.config.fields.insert("vocab".into(), 64.0);
+        v.config.fields.insert("seq".into(), 32.0);
+        v.config.fields.insert("batch".into(), 16.0);
+        v.config.fields.insert("d_model".into(), 128.0);
+        v.config.fields.insert("n_layer".into(), 2.0);
+        v.config.fields.insert("n_head".into(), 4.0);
+        v.config.fields.insert("d_head".into(), 32.0);
+        v.config.fields.insert("d_ffn".into(), 512.0);
+        v.config_str.insert("ln".into(), "pre".into());
+        let base = BaseShape::Tfm {
+            d_model: 32,
+            n_head: 4,
+            d_head: 8,
+            d_ffn: 128,
+        };
+        let dims = tensor_dims(&v, &base);
+        // embed: fan_in vocab (finite), fan_out width (ratio 4)
+        assert_eq!(dims[0].fan_in, 64);
+        assert_eq!(dims[0].base_fan_in, 64);
+        assert!((dims[0].r_out() - 4.0).abs() < 1e-12);
+        // hidden wk: both ratios 4
+        let wk = &dims[4];
+        assert!((wk.r_in() - 4.0).abs() < 1e-12);
+        // unembed: fan_in ratio 4, fan_out vocab
+        let un = dims.last().unwrap();
+        assert!((un.r_in() - 4.0).abs() < 1e-12);
+        assert_eq!(un.fan_out, 64);
+        assert_eq!(base_d_head(&v, &base), 8);
+    }
+
+    #[test]
+    fn same_as_target_is_identity() {
+        let specs = transformer_specs(&cfg());
+        let v = Variant {
+            name: "t".into(),
+            arch: crate::runtime::Arch::Transformer,
+            kind: crate::runtime::manifest::Kind::Train,
+            opt: "adam".into(),
+            hlo_path: "/dev/null".into(),
+            config: Default::default(),
+            config_str: Default::default(),
+            data_inputs: vec![],
+            n_state: 2,
+            probes: vec![],
+            params: specs,
+            golden: None,
+        };
+        for d in tensor_dims(&v, &BaseShape::SameAsTarget) {
+            assert!((d.r_in() - 1.0).abs() < 1e-12);
+            assert!((d.r_out() - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,281 @@
+//! The three equivalent μP formulations (paper Tables 3, 8, 9) and the
+//! Lemma J.1 transform relating them.
+//!
+//! Each formulation assigns every tensor an *abc triple* — parameter
+//! multiplier `a`, init std `b`, learning rate `c` — expressed here
+//! *relative to the base shape* (so every triple is (1, 1-ish, η) at the
+//! base width, matching SP there).  Lemma J.1: for any θ > 0, the network
+//! function trajectory f_t is invariant under
+//!
+//!   SGD:  a ← aθ,  b ← b/θ,  c ← c/θ²
+//!   Adam: a ← aθ,  b ← b/θ,  c ← c/θ
+//!
+//! The unit tests verify (i) each pair of tables is related by a Lemma J.1
+//! transform with the θ predicted in Appendix J.2.1, and (ii) *numerically*
+//! that training a toy model under any formulation yields the same
+//! function values step by step — a simulation of the lemma itself.
+
+use super::rules::{Optimizer, Role, TensorDims};
+
+/// abc triple, relative to base shape.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Abc {
+    /// parameter multiplier (graph-level constant in front of W)
+    pub a: f64,
+    /// initialization standard deviation factor
+    pub b: f64,
+    /// learning-rate factor
+    pub c: f64,
+}
+
+impl Abc {
+    /// Lemma J.1 transform by θ.
+    pub fn transform(&self, theta: f64, opt: Optimizer) -> Abc {
+        let c = match opt {
+            Optimizer::Sgd => self.c / (theta * theta),
+            Optimizer::Adam => self.c / theta,
+        };
+        Abc {
+            a: self.a * theta,
+            b: self.b / theta,
+            c,
+        }
+    }
+
+    /// Do two triples describe the same training trajectory, i.e. is there
+    /// a θ with `other == self.transform(θ)`?  Returns the witnessing θ.
+    pub fn equivalent(&self, other: &Abc, opt: Optimizer, tol: f64) -> Option<f64> {
+        let theta = other.a / self.a;
+        if theta <= 0.0 {
+            return None;
+        }
+        let t = self.transform(theta, opt);
+        let close = |x: f64, y: f64| (x - y).abs() <= tol * (1.0 + x.abs().max(y.abs()));
+        if close(t.b, other.b) && close(t.c, other.c) {
+            Some(theta)
+        } else {
+            None
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Formulation {
+    /// Table 3: no multipliers; the width scaling lives entirely in init
+    /// variance + LR.
+    Table3,
+    /// Table 8: "easier to implement" — output multiplier 1/fan_in, all
+    /// vector-like tensors share one rule, embeddings tieable.  This is
+    /// what the runtime uses.
+    Table8,
+    /// Table 9: the original arXiv-v1 style with sqrt multipliers.
+    Table9,
+}
+
+/// abc triple for (formulation, role, optimizer) at relative dims.
+/// `r_in = fan_in/base_fan_in`, `r_out = fan_out/base_fan_out`.
+pub fn abc(f: Formulation, role: Role, opt: Optimizer, dims: TensorDims) -> Abc {
+    let ri = dims.r_in();
+    let ro = dims.r_out();
+    use Formulation::*;
+    use Optimizer::*;
+    use Role::*;
+    match (f, role) {
+        // ---- input weights & biases ------------------------------------
+        (Table3, Input | Vector) | (Table8, Input | Vector) => Abc {
+            a: 1.0,
+            b: 1.0, // fan_in is finite: init var Θ(1) in width
+            c: match opt {
+                Sgd => ro,
+                Adam => 1.0,
+            },
+        },
+        (Table9, Input | Vector) => Abc {
+            a: ro.sqrt(),
+            b: 1.0 / ro.sqrt(),
+            c: match opt {
+                Sgd => 1.0,
+                Adam => 1.0 / ro.sqrt(),
+            },
+        },
+        // ---- output weights --------------------------------------------
+        (Table3, Output) => Abc {
+            a: 1.0,
+            // var 1/fan_in² (relative: base-SP std × 1/ñ — Eq. (4)'s
+            // N(0, 1/(n·ñ)))
+            b: 1.0 / ri,
+            c: 1.0 / ri, // both SGD and Adam: LR 1/fan_in
+        },
+        (Table8, Output) => Abc {
+            a: 1.0 / ri,
+            b: 1.0, // var Θ(1): pinned to base fan_in
+            c: match opt {
+                Sgd => ri,
+                Adam => 1.0,
+            },
+        },
+        (Table9, Output) => Abc {
+            a: 1.0 / ri.sqrt(),
+            b: 1.0 / ri.sqrt(), // var 1/fan_in, same as SP
+            c: match opt {
+                Sgd => 1.0,
+                Adam => 1.0 / ri.sqrt(),
+            },
+        },
+        // ---- hidden weights ---------------------------------------------
+        (Table3 | Table8 | Table9, Hidden) => Abc {
+            a: 1.0,
+            b: 1.0 / ri.sqrt(), // var 1/fan_in (same as SP)
+            c: match opt {
+                Sgd => 1.0,
+                Adam => 1.0 / ri,
+            },
+        },
+    }
+}
+
+/// Appendix J.2.1's predicted witnesses for the pairwise equivalences.
+pub fn predicted_theta(from: Formulation, to: Formulation, role: Role, dims: TensorDims) -> f64 {
+    let ri = dims.r_in();
+    let ro = dims.r_out();
+    use Formulation::*;
+    use Role::*;
+    match (from, to, role) {
+        (x, y, _) if x == y => 1.0,
+        (Table3, Table8, Output) => 1.0 / ri,
+        (Table3, Table9, Output) => 1.0 / ri.sqrt(),
+        (Table8, Table9, Output) => ri.sqrt(),
+        (Table3, Table9, Input | Vector) | (Table8, Table9, Input | Vector) => ro.sqrt(),
+        (Table3, Table8, Input | Vector) => 1.0,
+        (_, _, Hidden) => 1.0,
+        (a, b, r) => 1.0 / predicted_theta(b, a, r, dims),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::init::rng::Rng;
+
+    const DIM_CASES: &[(usize, usize, usize, usize)] = &[
+        (128, 128, 128, 128),
+        (256, 256, 128, 128),
+        (1024, 1024, 128, 128),
+        (4096, 10, 512, 10),
+        (64, 8192, 64, 256),
+        (96, 384, 32, 128),
+    ];
+
+    fn dims(c: (usize, usize, usize, usize)) -> TensorDims {
+        TensorDims {
+            fan_in: c.0,
+            fan_out: c.1,
+            base_fan_in: c.2,
+            base_fan_out: c.3,
+        }
+    }
+
+    #[test]
+    fn all_formulations_pairwise_equivalent() {
+        for &c in DIM_CASES {
+            let d = dims(c);
+            for opt in [Optimizer::Sgd, Optimizer::Adam] {
+                for role in [Role::Input, Role::Hidden, Role::Output, Role::Vector] {
+                    for from in [Formulation::Table3, Formulation::Table8, Formulation::Table9] {
+                        for to in [Formulation::Table3, Formulation::Table8, Formulation::Table9] {
+                            let x = abc(from, role, opt, d);
+                            let y = abc(to, role, opt, d);
+                            let theta = x.equivalent(&y, opt, 1e-9).unwrap_or_else(|| {
+                                panic!("{from:?}->{to:?} {role:?} {opt:?} {d:?} not equivalent: {x:?} vs {y:?}")
+                            });
+                            let want = predicted_theta(from, to, role, d);
+                            assert!(
+                                (theta / want - 1.0).abs() < 1e-9,
+                                "θ mismatch {from:?}->{to:?} {role:?}: got {theta}, predicted {want}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn transform_roundtrip_identity() {
+        let x = Abc { a: 0.5, b: 2.0, c: 3e-4 };
+        for opt in [Optimizer::Sgd, Optimizer::Adam] {
+            let y = x.transform(7.5, opt).transform(1.0 / 7.5, opt);
+            assert!((y.a - x.a).abs() < 1e-12);
+            assert!((y.b - x.b).abs() < 1e-12);
+            assert!((y.c - x.c).abs() < 1e-12);
+        }
+    }
+
+    /// Numerical Lemma J.1: train a toy readout layer f(x) = a·(w·x) with a
+    /// nonlinear loss under each formulation's (a, b, c); all three must
+    /// produce the same f_t at every step, for both SGD and Adam.
+    #[test]
+    fn trajectories_identical_across_formulations() {
+        let d = dims((1024, 10, 128, 10));
+        let n = 32; // toy width
+        for opt in [Optimizer::Sgd, Optimizer::Adam] {
+            let mut trajectories: Vec<Vec<f64>> = Vec::new();
+            for f in [Formulation::Table3, Formulation::Table8, Formulation::Table9] {
+                let t = abc(f, Role::Output, opt, d);
+                trajectories.push(simulate(t, opt, n));
+            }
+            for step in 0..trajectories[0].len() {
+                let f0 = trajectories[0][step];
+                for traj in &trajectories[1..] {
+                    assert!(
+                        (traj[step] - f0).abs() < 1e-7 * (1.0 + f0.abs()),
+                        "{opt:?} step {step}: {} vs {f0}",
+                        traj[step]
+                    );
+                }
+            }
+        }
+    }
+
+    /// Toy trainer: params w (len n) init b·w0 with shared unit noise w0;
+    /// f = a·Σ w_i x_i; loss = (f − target)²; η = c·lr0.
+    fn simulate(t: Abc, opt: Optimizer, n: usize) -> Vec<f64> {
+        let mut rng = Rng::new(99);
+        let w0: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let x: Vec<f64> = (0..n).map(|_| rng.gaussian() * 0.3).collect();
+        let target = 1.7;
+        let lr0 = 0.05;
+        let mut w: Vec<f64> = w0.iter().map(|v| v * t.b).collect();
+        let (mut m, mut v) = (vec![0.0; n], vec![0.0; n]);
+        let (b1, b2, eps) = (0.9, 0.999, 1e-12);
+        let mut out = Vec::new();
+        for step in 1..=12 {
+            let f: f64 = t.a * w.iter().zip(&x).map(|(wi, xi)| wi * xi).sum::<f64>();
+            out.push(f);
+            let dfd = 2.0 * (f - target); // dL/df
+            for i in 0..n {
+                let g = dfd * t.a * x[i]; // dL/dw_i
+                let upd = match opt {
+                    Optimizer::Sgd => g,
+                    Optimizer::Adam => {
+                        m[i] = b1 * m[i] + (1.0 - b1) * g;
+                        v[i] = b2 * v[i] + (1.0 - b2) * g * g;
+                        let mh = m[i] / (1.0 - b1f64(step));
+                        let vh = v[i] / (1.0 - b2f64(step));
+                        mh / (vh.sqrt() + eps)
+                    }
+                };
+                w[i] -= t.c * lr0 * upd;
+            }
+        }
+        out
+    }
+
+    fn b1f64(step: usize) -> f64 {
+        0.9f64.powi(step as i32)
+    }
+
+    fn b2f64(step: usize) -> f64 {
+        0.999f64.powi(step as i32)
+    }
+}

@@ -1,0 +1,30 @@
+//! The μP rule engine — the paper's core contribution as an executable
+//! library (the Rust analogue of the `mup` PyTorch package, Appendix H).
+//!
+//! A [`Parametrization`] answers, for every parameter tensor of a model
+//! (identified by its [`Role`] and fan-in/out relative to a *base shape*):
+//!
+//! * what initialization standard deviation to use,
+//! * what per-tensor learning-rate scale to apply (per optimizer), and
+//! * what graph-level multipliers to feed (output scale, attention logit
+//!   scale, embedding scale).
+//!
+//! Three equivalent μP formulations are implemented (Tables 3, 8 and 9 of
+//! the paper) together with the Lemma J.1 transform that maps between
+//! them; property tests in [`formulations`] verify the equivalences.  The
+//! runtime always uses the Table 8 formulation because it is the one whose
+//! parameter multipliers our lowered graphs expose (a single output-logit
+//! multiplier), and it is symmetric enough to allow tied embeddings.
+//!
+//! Standard parametrization ([`Parametrization::standard`]) is the paper's
+//! baseline: LeCun init, flat learning rate, 1/sqrt(d) attention, no
+//! multipliers.  `mup_at_base_width_equals_sp` (tests) checks the paper's
+//! Eq. (4) property: at the base shape, μP and SP coincide exactly.
+
+pub mod formulations;
+pub mod rules;
+
+pub use rules::{
+    GraphMultipliers, HyperParams, Optimizer, Parametrization, ParamScaling, Role, Scheme,
+    TensorDims,
+};

@@ -1,0 +1,369 @@
+//! μP / SP scaling rules (paper Tables 3 and 8, Definition 4.1).
+
+/// How a parameter tensor's dimensions relate to width (Appendix B's
+/// matrix-like / vector-like classification, specialized to the roles our
+/// models contain).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Role {
+    /// finite -> infinite (embeddings, first layer). Table 3/8 column 1.
+    Input,
+    /// infinite -> infinite (all interior matrices). Column 3.
+    Hidden,
+    /// infinite -> finite (readout). Column 2.
+    Output,
+    /// biases & layernorm gains: fan_in == 1, fan_out infinite. Treated
+    /// with the "input weights & all biases" column.
+    Vector,
+}
+
+impl Role {
+    pub fn parse(s: &str) -> Option<Role> {
+        Some(match s {
+            "input" => Role::Input,
+            "hidden" => Role::Hidden,
+            "output" => Role::Output,
+            "vector" => Role::Vector,
+            _ => return None,
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Optimizer {
+    Sgd,
+    Adam,
+}
+
+/// Which parametrization to apply.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheme {
+    /// Standard parametrization: what you get from PyTorch defaults
+    /// (LeCun/He-style 1/fan_in init variance, one global LR, 1/sqrt(d)
+    /// attention, no multipliers).
+    Sp,
+    /// Maximal Update Parametrization, Table 8 formulation.
+    Mup,
+}
+
+/// Fan-in/out of a tensor at the current width and at the base width.
+/// "Base" is the width at which μP coincides with SP (paper Eq. (4)); the
+/// μTransfer workflow sets the base to the *proxy* model's shape so the HP
+/// search runs in familiar SP-like coordinates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TensorDims {
+    pub fan_in: usize,
+    pub fan_out: usize,
+    pub base_fan_in: usize,
+    pub base_fan_out: usize,
+}
+
+impl TensorDims {
+    pub fn square(n: usize, n0: usize) -> TensorDims {
+        TensorDims {
+            fan_in: n,
+            fan_out: n,
+            base_fan_in: n0,
+            base_fan_out: n0,
+        }
+    }
+
+    /// fan_in ratio vs base (the paper's tilde-n for this tensor).
+    pub fn r_in(&self) -> f64 {
+        self.fan_in as f64 / self.base_fan_in as f64
+    }
+
+    pub fn r_out(&self) -> f64 {
+        self.fan_out as f64 / self.base_fan_out as f64
+    }
+}
+
+/// Per-tensor scaling decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParamScaling {
+    /// Multiply the tuned master init std by this to get the tensor's
+    /// init std (0-init tensors ignore it).
+    pub init_std: f64,
+    /// Multiply the tuned master LR by this to get the tensor's LR.
+    pub lr_scale: f64,
+}
+
+/// Values for the graph-level multiplier inputs our lowered artifacts
+/// expose (model.py hp_vec slots 0..2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GraphMultipliers {
+    /// attention logit scale: α_attn·sqrt(d_head0)/d_head under μP
+    /// (Definition 4.1 with the base-compat factor of App. B.1),
+    /// 1/sqrt(d_head) under SP.
+    pub attn_scale: f64,
+    /// output-logit multiplier: α_output·(fan_in0/fan_in) under μP
+    /// (Table 8's 1/fan_in output multiplier), 1 under SP.
+    pub output_scale: f64,
+    /// embedding multiplier: α_embed under μP (App. F.4 tunes it), 1
+    /// under SP.
+    pub embed_scale: f64,
+}
+
+/// Tunable hyperparameters that μTransfer carries from proxy to target
+/// (Table 2: optimization HPs, init scale, parameter multipliers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HyperParams {
+    /// master learning rate η
+    pub lr: f64,
+    /// master init std σ (for tensors whose spec says "normal")
+    pub sigma: f64,
+    pub alpha_output: f64,
+    pub alpha_attn: f64,
+    pub alpha_embed: f64,
+    /// multiplier on the master LR for Input/Vector tensors (the separate
+    /// embedding LR the BERT experiment tunes, App. F.3)
+    pub lr_emb_ratio: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+    pub weight_decay: f64,
+    pub momentum: f64,
+}
+
+impl Default for HyperParams {
+    fn default() -> Self {
+        HyperParams {
+            lr: 1e-3,
+            sigma: 1.0,
+            alpha_output: 1.0,
+            alpha_attn: 1.0,
+            alpha_embed: 1.0,
+            lr_emb_ratio: 1.0,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 0.0,
+            momentum: 0.9,
+        }
+    }
+}
+
+/// A parametrization: scheme + optimizer (the rules differ between SGD and
+/// Adam — the heart of Table 3).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Parametrization {
+    pub scheme: Scheme,
+    pub optimizer: Optimizer,
+}
+
+impl Parametrization {
+    pub fn mup(optimizer: Optimizer) -> Parametrization {
+        Parametrization {
+            scheme: Scheme::Mup,
+            optimizer,
+        }
+    }
+
+    pub fn standard(optimizer: Optimizer) -> Parametrization {
+        Parametrization {
+            scheme: Scheme::Sp,
+            optimizer,
+        }
+    }
+
+    /// Table 8 rules (μP) / LeCun+flat-LR (SP), as *relative* factors:
+    /// `init_std` multiplies the tuned σ, `lr_scale` multiplies the tuned
+    /// η.  At `dims.r_in() == dims.r_out() == 1` the μP factors equal the
+    /// SP factors exactly (the Eq. (4) consistency property).
+    pub fn scaling(&self, role: Role, dims: TensorDims) -> ParamScaling {
+        let sp_std = match role {
+            // LeCun: var = 1/fan_in.  Vector-like params (biases, LN) are
+            // usually 0/1-initialized; std factor 1 lets a tuned σ_vec
+            // scale them if the spec asks for a normal init.
+            Role::Input | Role::Hidden | Role::Output => 1.0 / (dims.fan_in as f64).sqrt(),
+            Role::Vector => 1.0,
+        };
+        match self.scheme {
+            Scheme::Sp => ParamScaling {
+                init_std: sp_std,
+                lr_scale: 1.0,
+            },
+            Scheme::Mup => {
+                // Table 8: init var — input/biases 1/fan_in, hidden
+                // 1/fan_in, output Θ(1) in width (pinned to the base
+                // fan_in for SP-compat at base).
+                let init_std = match role {
+                    Role::Input | Role::Hidden => 1.0 / (dims.fan_in as f64).sqrt(),
+                    Role::Output => 1.0 / (dims.base_fan_in as f64).sqrt(),
+                    Role::Vector => 1.0,
+                };
+                let lr_scale = match (self.optimizer, role) {
+                    // Table 8 Adam LR: 1 for vector-like, 1/fan_in
+                    // (relative: 1/r_in) for hidden.
+                    (Optimizer::Adam, Role::Hidden) => 1.0 / dims.r_in(),
+                    (Optimizer::Adam, _) => 1.0,
+                    // Table 8 SGD LR: fan_out for input/biases, fan_in for
+                    // output (relative ratios), 1 for hidden.
+                    (Optimizer::Sgd, Role::Input | Role::Vector) => dims.r_out(),
+                    (Optimizer::Sgd, Role::Output) => dims.r_in(),
+                    (Optimizer::Sgd, Role::Hidden) => 1.0,
+                };
+                ParamScaling { init_std, lr_scale }
+            }
+        }
+    }
+
+    /// Graph multiplier values (Definition 4.1 + Table 8 output
+    /// multiplier) for a model whose readout fan-in ratio is
+    /// `out_dims.r_in()` and whose attention head size is `d_head`
+    /// (base `d_head0`).
+    pub fn multipliers(
+        &self,
+        hp: &HyperParams,
+        out_dims: TensorDims,
+        d_head: usize,
+        d_head0: usize,
+    ) -> GraphMultipliers {
+        match self.scheme {
+            Scheme::Sp => GraphMultipliers {
+                attn_scale: 1.0 / (d_head as f64).sqrt(),
+                output_scale: 1.0,
+                embed_scale: 1.0,
+            },
+            Scheme::Mup => GraphMultipliers {
+                // 1/d attention with the sqrt(d_head,0) compatibility
+                // factor (App. B.1 "Attention Logit Scaling").
+                attn_scale: hp.alpha_attn * (d_head0 as f64).sqrt() / d_head as f64,
+                output_scale: hp.alpha_output / out_dims.r_in(),
+                embed_scale: hp.alpha_embed,
+            },
+        }
+    }
+
+    /// Per-tensor effective LR (before any schedule): master η times the
+    /// μP scale, times the per-group ratio for embedding-like tensors.
+    pub fn effective_lr(&self, hp: &HyperParams, role: Role, dims: TensorDims) -> f64 {
+        let base = hp.lr * self.scaling(role, dims).lr_scale;
+        match role {
+            Role::Input | Role::Vector => base * hp.lr_emb_ratio,
+            _ => base,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims(fan_in: usize, fan_out: usize, b_in: usize, b_out: usize) -> TensorDims {
+        TensorDims {
+            fan_in,
+            fan_out,
+            base_fan_in: b_in,
+            base_fan_out: b_out,
+        }
+    }
+
+    #[test]
+    fn mup_equals_sp_at_base_shape() {
+        // Paper Eq. (4): all purple factors are 1 at n == n0.
+        for opt in [Optimizer::Sgd, Optimizer::Adam] {
+            let mup = Parametrization::mup(opt);
+            let sp = Parametrization::standard(opt);
+            for role in [Role::Input, Role::Hidden, Role::Output, Role::Vector] {
+                let d = dims(128, 128, 128, 128);
+                assert_eq!(mup.scaling(role, d), sp.scaling(role, d), "{role:?} {opt:?}");
+            }
+            let hp = HyperParams::default();
+            let gm = mup.multipliers(&hp, dims(128, 64, 128, 64), 32, 32);
+            let gs = sp.multipliers(&hp, dims(128, 64, 128, 64), 32, 32);
+            assert!((gm.attn_scale - gs.attn_scale).abs() < 1e-12);
+            assert!((gm.output_scale - gs.output_scale).abs() < 1e-12);
+            assert!((gm.embed_scale - gs.embed_scale).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn adam_hidden_lr_scales_inverse_width() {
+        let p = Parametrization::mup(Optimizer::Adam);
+        let s1 = p.scaling(Role::Hidden, dims(128, 128, 128, 128));
+        let s8 = p.scaling(Role::Hidden, dims(1024, 1024, 128, 128));
+        assert!((s8.lr_scale / s1.lr_scale - 1.0 / 8.0).abs() < 1e-12);
+        // vector-like LR does NOT shrink (the word-embedding lesson of
+        // Fig. 5: scaling the global LR down 8x would freeze these).
+        let v8 = p.scaling(Role::Input, dims(64, 1024, 64, 128));
+        assert_eq!(v8.lr_scale, 1.0);
+    }
+
+    #[test]
+    fn sgd_mlp_matches_eq3_basic_form() {
+        // Eq. (3): η_W1 = η·ñ, η_W2 = η, η_W3 = η/ñ... in the Table-3
+        // formulation.  In the Table-8 formulation the output multiplier
+        // absorbs two powers of ñ so the output *LR* becomes η·ñ; the
+        // trajectory equivalence is checked in formulations.rs.  Here we
+        // check the Table-8 factors directly.
+        let p = Parametrization::mup(Optimizer::Sgd);
+        let n0 = 128;
+        let n = 1024; // ñ = 8
+        let w1 = p.scaling(Role::Input, dims(256, n, 256, n0));
+        let w2 = p.scaling(Role::Hidden, dims(n, n, n0, n0));
+        let w3 = p.scaling(Role::Output, dims(n, 10, n0, 10));
+        assert!((w1.lr_scale - 8.0).abs() < 1e-12);
+        assert!((w2.lr_scale - 1.0).abs() < 1e-12);
+        assert!((w3.lr_scale - 8.0).abs() < 1e-12);
+        // and the output multiplier shrinks by ñ
+        let hp = HyperParams::default();
+        let g = p.multipliers(&hp, dims(n, 10, n0, 10), 32, 32);
+        assert!((g.output_scale - 1.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn init_variance_follows_table8() {
+        let p = Parametrization::mup(Optimizer::Adam);
+        // hidden: var 1/fan_in -> std halves when width quadruples
+        let h1 = p.scaling(Role::Hidden, dims(256, 256, 64, 64));
+        assert!((h1.init_std - 1.0 / 16.0).abs() < 1e-12);
+        // output: Θ(1) (pinned to base fan_in), independent of width
+        let o1 = p.scaling(Role::Output, dims(256, 10, 64, 10));
+        let o2 = p.scaling(Role::Output, dims(4096, 10, 64, 10));
+        assert_eq!(o1.init_std, o2.init_std);
+        assert!((o1.init_std - 1.0 / 8.0).abs() < 1e-12);
+        // SP output: std keeps shrinking with width (the defect)
+        let sp = Parametrization::standard(Optimizer::Adam);
+        let so = sp.scaling(Role::Output, dims(4096, 10, 64, 10));
+        assert!(so.init_std < o2.init_std);
+    }
+
+    #[test]
+    fn attention_scale_one_over_d_vs_one_over_sqrt_d() {
+        let hp = HyperParams::default();
+        let out = dims(128, 64, 128, 64);
+        let mup = Parametrization::mup(Optimizer::Adam);
+        let sp = Parametrization::standard(Optimizer::Adam);
+        // at base width both give 1/sqrt(d0)
+        let m0 = mup.multipliers(&hp, out, 32, 32);
+        let s0 = sp.multipliers(&hp, out, 32, 32);
+        assert!((m0.attn_scale - s0.attn_scale).abs() < 1e-12);
+        // at 4x width μP shrinks by 4 (1/d), SP only by 2 (1/sqrt(d))
+        let m4 = mup.multipliers(&hp, out, 128, 32);
+        let s4 = sp.multipliers(&hp, out, 128, 32);
+        assert!((m0.attn_scale / m4.attn_scale - 4.0).abs() < 1e-9);
+        assert!((s0.attn_scale / s4.attn_scale - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn effective_lr_applies_group_ratio() {
+        let p = Parametrization::mup(Optimizer::Adam);
+        let hp = HyperParams {
+            lr: 1e-3,
+            lr_emb_ratio: 0.5,
+            ..HyperParams::default()
+        };
+        let d = dims(64, 256, 64, 128);
+        assert!((p.effective_lr(&hp, Role::Input, d) - 0.5e-3).abs() < 1e-15);
+        assert!((p.effective_lr(&hp, Role::Output, TensorDims::square(256, 128)) - 1e-3).abs() < 1e-15);
+    }
+
+    #[test]
+    fn roles_parse() {
+        assert_eq!(Role::parse("input"), Some(Role::Input));
+        assert_eq!(Role::parse("hidden"), Some(Role::Hidden));
+        assert_eq!(Role::parse("output"), Some(Role::Output));
+        assert_eq!(Role::parse("vector"), Some(Role::Vector));
+        assert_eq!(Role::parse("bogus"), None);
+    }
+}

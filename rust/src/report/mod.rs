@@ -1,0 +1,72 @@
+//! Result persistence: every experiment writes (a) a paper-style text
+//! table to stdout, (b) CSV series under `results/`, and (c) a JSON blob
+//! with the raw numbers, so EXPERIMENTS.md entries are regenerable.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+pub struct Reporter {
+    dir: PathBuf,
+    pub quiet: bool,
+}
+
+impl Reporter {
+    pub fn new(dir: PathBuf) -> Reporter {
+        let _ = std::fs::create_dir_all(&dir);
+        Reporter { dir, quiet: false }
+    }
+
+    pub fn default_results() -> Reporter {
+        Reporter::new(crate::results_dir())
+    }
+
+    /// Print a table and persist its CSV twin.
+    pub fn table(&self, name: &str, t: &Table) -> Result<()> {
+        if !self.quiet {
+            println!("{}", t.render());
+        }
+        std::fs::write(self.dir.join(format!("{name}.csv")), t.to_csv())?;
+        Ok(())
+    }
+
+    /// Persist raw JSON (figure series, trial dumps).
+    pub fn json(&self, name: &str, j: &Json) -> Result<()> {
+        std::fs::write(self.dir.join(format!("{name}.json")), j.to_string())?;
+        Ok(())
+    }
+
+    pub fn note(&self, msg: &str) {
+        if !self.quiet {
+            println!("{msg}");
+        }
+    }
+
+    pub fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::jnum;
+
+    #[test]
+    fn writes_csv_and_json() {
+        let dir = std::env::temp_dir().join("mutransfer_report_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut r = Reporter::new(dir.clone());
+        r.quiet = true;
+        let mut t = Table::new("x", &["a"]);
+        t.row(vec!["1".into()]);
+        r.table("tab", &t).unwrap();
+        r.json("blob", &Json::from_pairs(vec![("v", jnum(3.0))])).unwrap();
+        assert!(dir.join("tab.csv").exists());
+        let s = std::fs::read_to_string(dir.join("blob.json")).unwrap();
+        assert!(s.contains("\"v\""));
+    }
+}

@@ -1,0 +1,353 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.  Parses `artifacts/manifest.json` into typed structs and
+//! knows each variant's flat input/output calling convention.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::mup::Role;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Transformer,
+    Mlp,
+    ResMlp,
+}
+
+impl Arch {
+    fn parse(s: &str) -> Result<Arch> {
+        Ok(match s {
+            "transformer" => Arch::Transformer,
+            "mlp" => Arch::Mlp,
+            "resmlp" => Arch::ResMlp,
+            other => bail!("unknown arch {other}"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Train,
+    Eval,
+    Coord,
+}
+
+impl Kind {
+    fn parse(s: &str) -> Result<Kind> {
+        Ok(match s {
+            "train" => Kind::Train,
+            "eval" => Kind::Eval,
+            "coord" => Kind::Coord,
+            other => bail!("unknown kind {other}"),
+        })
+    }
+}
+
+/// One parameter tensor as described by the manifest.
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub role: Role,
+    pub fan_in: usize,
+    pub fan_out: usize,
+    /// "normal" | "zeros" | "ones"
+    pub init: String,
+}
+
+impl ParamInfo {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct DataInput {
+    pub name: String,
+    /// "f32" | "i32"
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+/// Golden values recorded at AOT time for cross-language verification.
+#[derive(Debug, Clone)]
+pub struct Golden {
+    pub seed: u64,
+    pub losses: Vec<f64>,
+    pub lr: f64,
+}
+
+/// Model-shape fields shared by the experiment drivers; arch-specific
+/// fields are optional.
+#[derive(Debug, Clone, Default)]
+pub struct ModelConfig {
+    pub fields: BTreeMap<String, f64>,
+}
+
+impl ModelConfig {
+    pub fn get(&self, key: &str) -> Option<usize> {
+        self.fields.get(key).map(|v| *v as usize)
+    }
+
+    pub fn req(&self, key: &str) -> usize {
+        self.get(key)
+            .unwrap_or_else(|| panic!("config missing {key}"))
+    }
+
+    pub fn str_fields(&self) -> &BTreeMap<String, f64> {
+        &self.fields
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub arch: Arch,
+    pub kind: Kind,
+    /// "adam" | "sgd"
+    pub opt: String,
+    pub hlo_path: PathBuf,
+    pub config: ModelConfig,
+    /// string-valued config fields (e.g. ln = pre|post, act, loss)
+    pub config_str: BTreeMap<String, String>,
+    pub data_inputs: Vec<DataInput>,
+    pub n_state: usize,
+    pub probes: Vec<String>,
+    pub params: Vec<ParamInfo>,
+    pub golden: Option<Golden>,
+}
+
+impl Variant {
+    pub fn n_params(&self) -> usize {
+        self.params.len()
+    }
+
+    pub fn total_numel(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Flat input count for this variant's executable.
+    pub fn n_inputs(&self) -> usize {
+        let p = self.n_params();
+        match self.kind {
+            Kind::Train | Kind::Coord => self.data_inputs.len() + p * (1 + self.n_state) + 2,
+            Kind::Eval => self.data_inputs.len() + p + 1,
+        }
+    }
+
+    /// Flat output count (loss + new params/state [+ probes]).
+    pub fn n_outputs(&self) -> usize {
+        let p = self.n_params();
+        match self.kind {
+            Kind::Train => 1 + p * (1 + self.n_state),
+            Kind::Coord => 1 + p * (1 + self.n_state) + self.probes.len(),
+            Kind::Eval => 1,
+        }
+    }
+
+    /// Estimated training FLOPs per step (fwd+bwd ≈ 6·params·tokens for
+    /// token models, 6·params·batch for vector models) — the currency of
+    /// the paper's tuning-budget comparisons (§7.1, App. F.4).
+    pub fn flops_per_step(&self) -> f64 {
+        let params = self.total_numel() as f64;
+        let items = match self.arch {
+            Arch::Transformer => (self.config.req("batch") * self.config.req("seq")) as f64,
+            _ => self.config.req("batch") as f64,
+        };
+        6.0 * params * items
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub variants: BTreeMap<String, Variant>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let json = crate::util::json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        let mut variants = BTreeMap::new();
+        for v in json.req("variants").as_arr().context("variants not array")? {
+            let var = parse_variant(v, dir)?;
+            variants.insert(var.name.clone(), var);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            variants,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Variant> {
+        self.variants.get(name).with_context(|| {
+            format!(
+                "variant {name} not in manifest ({} known); run `make artifacts`",
+                self.variants.len()
+            )
+        })
+    }
+
+    /// Names matching a predicate (used by `list-artifacts`).
+    pub fn names(&self) -> Vec<&str> {
+        self.variants.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+fn parse_variant(v: &Json, dir: &Path) -> Result<Variant> {
+    let name = v.req("name").as_str().context("name")?.to_string();
+    let mut config = ModelConfig::default();
+    let mut config_str = BTreeMap::new();
+    if let Json::Obj(m) = v.req("config") {
+        for (k, val) in m {
+            match val {
+                Json::Num(n) => {
+                    config.fields.insert(k.clone(), *n);
+                }
+                Json::Str(s) => {
+                    config_str.insert(k.clone(), s.clone());
+                }
+                _ => {}
+            }
+        }
+    }
+    let params = v
+        .req("params")
+        .as_arr()
+        .context("params")?
+        .iter()
+        .map(|p| {
+            let role_s = p.req("role").as_str().context("role")?;
+            Ok(ParamInfo {
+                name: p.req("name").as_str().context("pname")?.to_string(),
+                shape: p
+                    .req("shape")
+                    .as_arr()
+                    .context("shape")?
+                    .iter()
+                    .map(|d| d.as_usize().unwrap())
+                    .collect(),
+                role: Role::parse(role_s)
+                    .with_context(|| format!("bad role {role_s}"))?,
+                fan_in: p.req("fan_in").as_usize().context("fan_in")?,
+                fan_out: p.req("fan_out").as_usize().context("fan_out")?,
+                init: p.req("init").as_str().context("init")?.to_string(),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let data_inputs = v
+        .req("data_inputs")
+        .as_arr()
+        .context("data_inputs")?
+        .iter()
+        .map(|d| DataInput {
+            name: d.req("name").as_str().unwrap().to_string(),
+            dtype: d.req("dtype").as_str().unwrap().to_string(),
+            shape: d
+                .req("shape")
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|x| x.as_usize().unwrap())
+                .collect(),
+        })
+        .collect();
+    let golden = match v.get("golden") {
+        Some(g) if !g.is_null() => Some(Golden {
+            seed: g.req("seed").as_f64().context("gseed")? as u64,
+            losses: g
+                .req("losses")
+                .as_arr()
+                .context("glosses")?
+                .iter()
+                .map(|x| x.as_f64().unwrap())
+                .collect(),
+            lr: g.req("lr").as_f64().context("glr")?,
+        }),
+        _ => None,
+    };
+    Ok(Variant {
+        arch: Arch::parse(v.req("arch").as_str().context("arch")?)?,
+        kind: Kind::parse(v.req("kind").as_str().context("kind")?)?,
+        opt: v.req("opt").as_str().context("opt")?.to_string(),
+        hlo_path: dir.join(v.req("hlo").as_str().context("hlo")?),
+        config,
+        config_str,
+        data_inputs,
+        n_state: v.req("n_state").as_usize().context("n_state")?,
+        probes: v
+            .req("probes")
+            .as_arr()
+            .context("probes")?
+            .iter()
+            .map(|p| p.as_str().unwrap().to_string())
+            .collect(),
+        params,
+        golden,
+        name,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_json() -> String {
+        r#"{"version": 1, "variants": [
+            {"name": "t1", "arch": "transformer", "kind": "train", "opt": "adam",
+             "hlo": "t1.hlo.txt",
+             "config": {"vocab": 64, "seq": 32, "batch": 16, "d_model": 128,
+                        "n_layer": 2, "n_head": 4, "d_head": 32, "d_ffn": 512,
+                        "ln": "pre"},
+             "data_inputs": [{"name": "tokens", "dtype": "i32", "shape": [16, 33]}],
+             "n_state": 2, "probes": [],
+             "params": [
+               {"name": "embed", "shape": [64, 128], "role": "input",
+                "fan_in": 64, "fan_out": 128, "init": "normal"},
+               {"name": "unembed", "shape": [128, 64], "role": "output",
+                "fan_in": 128, "fan_out": 64, "init": "zeros"}],
+             "golden": {"seed": 7, "losses": [4.1, 4.0], "lr": 0.001}}
+        ]}"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let dir = std::env::temp_dir().join("mutransfer_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.get("t1").unwrap();
+        assert_eq!(v.arch, Arch::Transformer);
+        assert_eq!(v.kind, Kind::Train);
+        assert_eq!(v.n_params(), 2);
+        assert_eq!(v.config.req("d_model"), 128);
+        assert_eq!(v.config_str.get("ln").unwrap(), "pre");
+        assert_eq!(v.params[0].role, Role::Input);
+        assert_eq!(v.params[1].init, "zeros");
+        let g = v.golden.as_ref().unwrap();
+        assert_eq!(g.seed, 7);
+        assert_eq!(g.losses, vec![4.1, 4.0]);
+        // calling convention: tokens + 2p + 2*2p... n_inputs = 1 + 2*(1+2) + 2 = 9
+        assert_eq!(v.n_inputs(), 1 + 2 * 3 + 2);
+        assert_eq!(v.n_outputs(), 1 + 2 * 3);
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn flops_estimate() {
+        let dir = std::env::temp_dir().join("mutransfer_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample_manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let v = m.get("t1").unwrap();
+        let numel = (64 * 128 + 128 * 64) as f64;
+        assert_eq!(v.flops_per_step(), 6.0 * numel * (16.0 * 32.0));
+    }
+}

@@ -1,0 +1,82 @@
+//! PJRT runtime: load AOT artifacts (HLO text), compile once per variant,
+//! and drive training/eval loops with host-resident state.
+//!
+//! Layering (DESIGN.md §1): Python lowers each model variant once at build
+//! time; at run time this module is the *only* code that talks to XLA.
+//! The tuner/sweep/experiment layers above deal purely in losses and HP
+//! assignments.
+//!
+//! State handling: PJRT (via the `xla` crate 0.1.6) returns a computation's
+//! outputs as a single tuple buffer, so params/opt-state round-trip through
+//! host `Literal`s each step (`decompose_tuple` is a move, the dominant
+//! cost is one memcpy each way).  On this CPU backend that is a few
+//! percent of step time at our sizes — measured in EXPERIMENTS.md §Perf —
+//! and it buys a dependency-free runtime.  Executables are cached per
+//! variant and shared by every trial in a sweep.
+
+pub mod manifest;
+pub mod session;
+
+pub use manifest::{Arch, Kind, Manifest, ParamInfo, Variant};
+pub use session::{DataBatch, TrainSession};
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+/// Owns the PJRT client, the manifest, and the executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Compile (or fetch from cache) the executable for a variant.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let var = self.manifest.get(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            var.hlo_path
+                .to_str()
+                .context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("loading HLO text for {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {name}"))?;
+        let exe = Rc::new(exe);
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached (telemetry).
+    pub fn cache_size(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

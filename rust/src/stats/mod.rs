@@ -1,0 +1,191 @@
+//! Statistics substrate: percentiles, moments, regression, bootstrap.
+//!
+//! Every table in the paper's §7 reports percentiles over repeated tuning
+//! trials (Table 4: 25th/50th/75th/100th over 25 trials); Fig. 5 needs
+//! coordinate standard deviations and log-log growth-exponent fits.  No
+//! stats crate is vendored, so this is built from scratch and unit-tested
+//! against hand-computed values.
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Coordinate-size statistic used by coordinate checking (App. D.1):
+/// sqrt(mean(x_i^2)) — the "typical size" of Definition J.1.
+pub fn rms(xs: &[f32]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    (xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Linear-interpolated percentile, p in [0, 100].  Matches numpy's
+/// default ("linear") method.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = p / 100.0 * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// The Table-4-style percentile row (25/50/75/100).
+pub fn quartile_row(xs: &[f64]) -> [f64; 4] {
+    [
+        percentile(xs, 25.0),
+        percentile(xs, 50.0),
+        percentile(xs, 75.0),
+        percentile(xs, 100.0),
+    ]
+}
+
+/// Least-squares fit y = a + b·x; returns (a, b).
+pub fn linfit(x: &[f64], y: &[f64]) -> (f64, f64) {
+    assert_eq!(x.len(), y.len());
+    assert!(x.len() >= 2);
+    let mx = mean(x);
+    let my = mean(y);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (xi, yi) in x.iter().zip(y) {
+        num += (xi - mx) * (yi - my);
+        den += (xi - mx) * (xi - mx);
+    }
+    let b = if den == 0.0 { 0.0 } else { num / den };
+    (my - b * mx, b)
+}
+
+/// Growth exponent α in y ≈ C·widthᵅ via log-log regression — the
+/// quantitative form of Fig. 5's blow-up claim (α ≈ 0.5 for SP logits,
+/// α ≈ 0 under μP).
+pub fn growth_exponent(widths: &[f64], values: &[f64]) -> f64 {
+    let lx: Vec<f64> = widths.iter().map(|w| w.ln()).collect();
+    let ly: Vec<f64> = values.iter().map(|v| v.max(1e-300).ln()).collect();
+    linfit(&lx, &ly).1
+}
+
+/// Percentile bootstrap confidence interval for the mean.
+pub fn bootstrap_mean_ci(
+    xs: &[f64],
+    iters: usize,
+    alpha: f64,
+    rng: &mut crate::init::rng::Rng,
+) -> (f64, f64) {
+    assert!(!xs.is_empty());
+    let mut means: Vec<f64> = (0..iters)
+        .map(|_| {
+            let s: f64 = (0..xs.len()).map(|_| xs[rng.below(xs.len())]).sum();
+            s / xs.len() as f64
+        })
+        .collect();
+    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        percentile(&means, 100.0 * alpha / 2.0),
+        percentile(&means, 100.0 * (1.0 - alpha / 2.0)),
+    )
+}
+
+/// argmin over (value, index); None for empty or all-NaN.
+pub fn argmin(xs: &[f64]) -> Option<usize> {
+    let mut best: Option<(usize, f64)> = None;
+    for (i, &x) in xs.iter().enumerate() {
+        if x.is_nan() {
+            continue;
+        }
+        if best.map(|(_, b)| x < b).unwrap_or(true) {
+            best = Some((i, x));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_std_known() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((std(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_matches_numpy_linear() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 75.0) - 3.25).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        // unsorted input
+        let ys = [4.0, 1.0, 3.0, 2.0];
+        assert!((percentile(&ys, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quartiles() {
+        let xs: Vec<f64> = (1..=25).map(|i| i as f64).collect();
+        let q = quartile_row(&xs);
+        assert_eq!(q, [7.0, 13.0, 19.0, 25.0]);
+    }
+
+    #[test]
+    fn linfit_exact_line() {
+        let x = [0.0, 1.0, 2.0, 3.0];
+        let y = [1.0, 3.0, 5.0, 7.0];
+        let (a, b) = linfit(&x, &y);
+        assert!((a - 1.0).abs() < 1e-12);
+        assert!((b - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn growth_exponent_recovers_power_law() {
+        let widths = [64.0, 128.0, 256.0, 512.0, 1024.0];
+        let values: Vec<f64> = widths.iter().map(|&w: &f64| 3.0 * w.powf(0.5)).collect();
+        assert!((growth_exponent(&widths, &values) - 0.5).abs() < 1e-9);
+        let flat: Vec<f64> = widths.iter().map(|_| 2.5).collect();
+        assert!(growth_exponent(&widths, &flat).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rms_known() {
+        assert!((rms(&[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-6);
+        assert_eq!(rms(&[]), 0.0);
+    }
+
+    #[test]
+    fn argmin_skips_nan() {
+        assert_eq!(argmin(&[3.0, f64::NAN, 1.0, 2.0]), Some(2));
+        assert_eq!(argmin(&[f64::NAN]), None);
+        assert_eq!(argmin(&[]), None);
+    }
+
+    #[test]
+    fn bootstrap_ci_brackets_mean() {
+        let mut rng = crate::init::rng::Rng::new(5);
+        let xs: Vec<f64> = (0..200).map(|_| rng.gaussian() + 10.0).collect();
+        let (lo, hi) = bootstrap_mean_ci(&xs, 500, 0.05, &mut rng);
+        let m = mean(&xs);
+        assert!(lo < m && m < hi, "({lo}, {hi}) vs {m}");
+        assert!(hi - lo < 1.0);
+    }
+}

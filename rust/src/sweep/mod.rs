@@ -1,0 +1,250 @@
+//! Sweep scheduler: run a batch of training trials with journaling.
+//!
+//! A sweep = a list of [`crate::train::RunSpec`]-producing jobs executed
+//! through a shared [`crate::runtime::Runtime`] (executables cached across
+//! trials).  Results stream to a JSON-lines journal so an interrupted
+//! sweep resumes where it left off — the sweep is the "cluster scheduler"
+//! of the paper's benefit #4, scaled to one box.
+//!
+//! Note on parallelism: the PJRT client is not `Send` in the `xla` crate's
+//! wrapper, so concurrency is process-level in spirit; on this testbed a
+//! single worker saturates the core anyway (XLA CPU execution is already
+//! the bottleneck — measured in EXPERIMENTS.md §Perf).  The journal format
+//! is what makes multi-process scale-out trivial.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::data::source_for;
+use crate::runtime::Runtime;
+use crate::train::{run, RunSpec};
+use crate::tuner::{Assignment, Trial};
+use crate::util::json::{self, jnum, Json};
+
+/// One schedulable unit: an HP assignment to evaluate on a variant.
+#[derive(Debug, Clone)]
+pub struct Job {
+    /// stable key for journaling / resume
+    pub key: String,
+    pub spec: RunSpec,
+    pub assignment: Assignment,
+    pub data_seed: u64,
+}
+
+/// Sweep outcome for one job.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    pub key: String,
+    pub trial: Trial,
+    pub train_curve: Vec<f64>,
+    pub val_curve: Vec<(usize, f64)>,
+    pub wall_secs: f64,
+}
+
+impl JobResult {
+    fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("key", json::jstr(&self.key)),
+            ("trial", self.trial.to_json()),
+            (
+                "train_curve",
+                json::jnums(&self.train_curve.iter().map(|&x| x).collect::<Vec<_>>()),
+            ),
+            (
+                "val_curve",
+                Json::Arr(
+                    self.val_curve
+                        .iter()
+                        .map(|&(s, l)| Json::Arr(vec![jnum(s as f64), jnum(l)]))
+                        .collect(),
+                ),
+            ),
+            ("wall_secs", jnum(self.wall_secs)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Option<JobResult> {
+        let trial = j.get("trial")?;
+        let mut assignment = Assignment::default();
+        if let Json::Obj(m) = trial.get("assignment")? {
+            for (k, v) in m {
+                assignment.values.insert(k.clone(), v.as_f64()?);
+            }
+        }
+        Some(JobResult {
+            key: j.get("key")?.as_str()?.to_string(),
+            trial: Trial {
+                assignment,
+                val_loss: trial.get("val_loss")?.as_f64().unwrap_or(f64::NAN),
+                train_loss: trial.get("train_loss")?.as_f64().unwrap_or(f64::NAN),
+                diverged: trial.get("diverged")?.as_bool()?,
+                flops: trial.get("flops")?.as_f64()?,
+            },
+            train_curve: j
+                .get("train_curve")?
+                .as_arr()?
+                .iter()
+                .map(|x| x.as_f64().unwrap_or(f64::NAN))
+                .collect(),
+            val_curve: j
+                .get("val_curve")?
+                .as_arr()?
+                .iter()
+                .filter_map(|p| {
+                    let a = p.as_arr()?;
+                    Some((a[0].as_f64()? as usize, a[1].as_f64().unwrap_or(f64::NAN)))
+                })
+                .collect(),
+            wall_secs: j.get("wall_secs")?.as_f64()?,
+        })
+    }
+}
+
+/// Journaled sweep runner.
+pub struct Sweep<'rt> {
+    rt: &'rt Runtime,
+    journal_path: Option<PathBuf>,
+    done: std::collections::BTreeMap<String, JobResult>,
+    pub verbose: bool,
+}
+
+impl<'rt> Sweep<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Sweep<'rt> {
+        Sweep {
+            rt,
+            journal_path: None,
+            done: Default::default(),
+            verbose: false,
+        }
+    }
+
+    /// Attach a journal file; previously-completed jobs are loaded and
+    /// skipped on re-run.
+    pub fn with_journal(mut self, path: &Path) -> Result<Sweep<'rt>> {
+        if path.exists() {
+            let text = std::fs::read_to_string(path)?;
+            for line in text.lines().filter(|l| !l.trim().is_empty()) {
+                if let Ok(j) = json::parse(line) {
+                    if let Some(r) = JobResult::from_json(&j) {
+                        self.done.insert(r.key.clone(), r);
+                    }
+                }
+            }
+        }
+        self.journal_path = Some(path.to_path_buf());
+        Ok(self)
+    }
+
+    pub fn completed(&self) -> usize {
+        self.done.len()
+    }
+
+    /// Run all jobs (skipping journaled ones), returning results in job
+    /// order.
+    pub fn run(&mut self, jobs: &[Job]) -> Result<Vec<JobResult>> {
+        let total = jobs.len();
+        let mut out = Vec::with_capacity(total);
+        for (i, job) in jobs.iter().enumerate() {
+            if let Some(r) = self.done.get(&job.key) {
+                out.push(r.clone());
+                continue;
+            }
+            let t0 = std::time::Instant::now();
+            let variant = self.rt.manifest().get(&job.spec.variant)?;
+            let data = source_for(variant, job.data_seed);
+            let rr = run(self.rt, &job.spec, data.as_ref())
+                .with_context(|| format!("job {}", job.key))?;
+            let result = JobResult {
+                key: job.key.clone(),
+                trial: Trial {
+                    assignment: job.assignment.clone(),
+                    val_loss: rr.best_val_loss(),
+                    train_loss: rr.final_train_loss(),
+                    diverged: rr.diverged,
+                    flops: rr.flops,
+                },
+                train_curve: rr.train_losses.clone(),
+                val_curve: rr.val_losses.clone(),
+                wall_secs: t0.elapsed().as_secs_f64(),
+            };
+            if self.verbose {
+                eprintln!(
+                    "[{}/{}] {} -> train {:.4} val {:.4}{} ({:.1}s)",
+                    i + 1,
+                    total,
+                    job.key,
+                    result.trial.train_loss,
+                    result.trial.val_loss,
+                    if result.trial.diverged { " DIVERGED" } else { "" },
+                    result.wall_secs,
+                );
+            }
+            self.append_journal(&result)?;
+            self.done.insert(job.key.clone(), result.clone());
+            out.push(result);
+        }
+        Ok(out)
+    }
+
+    fn append_journal(&self, r: &JobResult) -> Result<()> {
+        if let Some(p) = &self.journal_path {
+            let mut f = std::fs::OpenOptions::new()
+                .create(true)
+                .append(true)
+                .open(p)?;
+            writeln!(f, "{}", r.to_json().to_string())?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jobresult_json_roundtrip() {
+        let r = JobResult {
+            key: "k1".into(),
+            trial: Trial {
+                assignment: Assignment::single("lr", 0.01),
+                val_loss: 2.5,
+                train_loss: 2.4,
+                diverged: false,
+                flops: 1e9,
+            },
+            train_curve: vec![3.0, 2.8, 2.4],
+            val_curve: vec![(10, 2.6), (20, 2.5)],
+            wall_secs: 1.25,
+        };
+        let j = r.to_json();
+        let back = JobResult::from_json(&json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.key, "k1");
+        assert_eq!(back.trial.assignment.values["lr"], 0.01);
+        assert_eq!(back.train_curve, vec![3.0, 2.8, 2.4]);
+        assert_eq!(back.val_curve, vec![(10, 2.6), (20, 2.5)]);
+        assert!(!back.trial.diverged);
+    }
+
+    #[test]
+    fn diverged_nan_roundtrip() {
+        let r = JobResult {
+            key: "k2".into(),
+            trial: Trial {
+                assignment: Assignment::default(),
+                val_loss: f64::NAN,
+                train_loss: f64::NAN,
+                diverged: true,
+                flops: 0.0,
+            },
+            train_curve: vec![f64::NAN],
+            val_curve: vec![],
+            wall_secs: 0.1,
+        };
+        let back = JobResult::from_json(&json::parse(&r.to_json().to_string()).unwrap()).unwrap();
+        assert!(back.trial.diverged);
+        assert!(back.trial.val_loss.is_nan()); // null -> NaN
+    }
+}

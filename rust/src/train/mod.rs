@@ -1,0 +1,254 @@
+//! Single-run training driver: one (variant, parametrization, HP
+//! assignment, seed) → a loss curve.  Everything above this (tuner, sweep,
+//! experiments) composes runs; everything below (runtime) executes steps.
+
+pub mod schedule;
+
+use anyhow::Result;
+
+use crate::data::{DataSource, Split};
+use crate::init;
+use crate::model::BaseShape;
+use crate::mup::{HyperParams, Optimizer, Parametrization};
+use crate::runtime::session::StepInputs;
+use crate::runtime::{Runtime, TrainSession};
+pub use schedule::Schedule;
+
+/// Loss above which (relative to the initial loss) a run is declared
+/// diverged — matching the paper's "training diverged" table entries.
+pub const DIVERGE_FACTOR: f64 = 3.0;
+pub const DIVERGE_ABS: f64 = 1e4;
+
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    /// train (or coord) variant name from the manifest
+    pub variant: String,
+    pub par: Parametrization,
+    pub hp: HyperParams,
+    pub base: BaseShape,
+    pub steps: usize,
+    pub seed: u64,
+    pub schedule: Schedule,
+    /// evaluate on the val stream every k steps (0 = never)
+    pub eval_every: usize,
+    /// number of val batches averaged per evaluation
+    pub eval_batches: usize,
+}
+
+impl RunSpec {
+    pub fn new(variant: &str, par: Parametrization, hp: HyperParams, base: BaseShape) -> RunSpec {
+        RunSpec {
+            variant: variant.to_string(),
+            par,
+            hp,
+            base,
+            steps: 100,
+            seed: 0,
+            schedule: Schedule::Constant,
+            eval_every: 0,
+            eval_batches: 4,
+        }
+    }
+
+    pub fn optimizer(&self) -> Optimizer {
+        self.par.optimizer
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    pub train_losses: Vec<f64>,
+    /// (step, val_loss) pairs
+    pub val_losses: Vec<(usize, f64)>,
+    pub diverged: bool,
+    pub steps_done: usize,
+    pub flops: f64,
+    pub wall_secs: f64,
+}
+
+impl RunResult {
+    /// Mean training loss over the last 10% of steps (smooths batch noise;
+    /// what the LR-sweep figures plot).
+    pub fn final_train_loss(&self) -> f64 {
+        if self.diverged || self.train_losses.is_empty() {
+            return f64::NAN;
+        }
+        let k = (self.train_losses.len() / 10).max(1);
+        let tail = &self.train_losses[self.train_losses.len() - k..];
+        tail.iter().sum::<f64>() / k as f64
+    }
+
+    /// Best (lowest) validation loss seen — the paper's §7 selection
+    /// metric ("we pick the HP combination that achieves the lowest
+    /// validation loss").
+    pub fn best_val_loss(&self) -> f64 {
+        if self.diverged {
+            return f64::NAN;
+        }
+        self.val_losses
+            .iter()
+            .map(|&(_, l)| l)
+            .fold(f64::NAN, |a, b| if a.is_nan() || b < a { b } else { a })
+    }
+}
+
+/// Build the per-step hp_vec for a variant/parametrization pair.
+pub fn hp_vec(spec: &RunSpec, rt: &Runtime) -> Result<[f32; 8]> {
+    let variant = rt.manifest().get(&spec.variant)?;
+    let dims = crate::model::tensor_dims(variant, &spec.base);
+    let out_dims = *dims.last().unwrap(); // unembed / w_out is last by layout
+    let hp = &spec.hp;
+    Ok(match spec.par.optimizer {
+        Optimizer::Adam => {
+            let d_head = variant.config.get("d_head").unwrap_or(1);
+            let d_head0 = crate::model::base_d_head(variant, &spec.base);
+            let m = spec.par.multipliers(hp, out_dims, d_head, d_head0);
+            [
+                m.attn_scale as f32,
+                m.output_scale as f32,
+                m.embed_scale as f32,
+                hp.beta1 as f32,
+                hp.beta2 as f32,
+                hp.eps as f32,
+                hp.weight_decay as f32,
+                1.0, // step counter; session overwrites per step
+            ]
+        }
+        Optimizer::Sgd => {
+            let m = spec.par.multipliers(hp, out_dims, 1, 1);
+            [
+                m.output_scale as f32,
+                hp.momentum as f32,
+                hp.weight_decay as f32,
+                0.0,
+                0.0,
+                0.0,
+                0.0,
+                0.0,
+            ]
+        }
+    })
+}
+
+/// Execute a full training run.
+pub fn run(rt: &Runtime, spec: &RunSpec, data: &dyn DataSource) -> Result<RunResult> {
+    let t0 = std::time::Instant::now();
+    let variant = rt.manifest().get(&spec.variant)?.clone();
+    let params = init::init_params(&variant, &spec.par, &spec.hp, &spec.base, spec.seed);
+    let base_lr = init::lr_vec(&variant, &spec.par, &spec.hp, &spec.base);
+    let hp_v = hp_vec(spec, rt)?;
+    let mut session = TrainSession::new(rt, &spec.variant, params)?;
+
+    let mut result = RunResult {
+        train_losses: Vec::with_capacity(spec.steps),
+        val_losses: Vec::new(),
+        diverged: false,
+        steps_done: 0,
+        flops: 0.0,
+        wall_secs: 0.0,
+    };
+    let mut initial_loss = f64::NAN;
+    for step in 0..spec.steps {
+        let decay = spec.schedule.factor(step, spec.steps);
+        let lr_vec: Vec<f32> = base_lr.iter().map(|&l| l * decay as f32).collect();
+        let inputs = StepInputs {
+            lr_vec,
+            hp_vec: hp_v,
+        };
+        let batch = data.batch(Split::Train, step);
+        let loss = session.step(&batch, &inputs)? as f64;
+        result.flops += variant.flops_per_step();
+        result.train_losses.push(loss);
+        result.steps_done = step + 1;
+        if initial_loss.is_nan() {
+            initial_loss = loss;
+        }
+        if !loss.is_finite() || loss > DIVERGE_ABS || loss > initial_loss * DIVERGE_FACTOR + 5.0 {
+            result.diverged = true;
+            break;
+        }
+        if spec.eval_every > 0 && (step + 1) % spec.eval_every == 0 {
+            let v = eval(&session, spec, data, &hp_v)?;
+            if !v.is_finite() {
+                result.diverged = true;
+                break;
+            }
+            result.val_losses.push((step + 1, v));
+        }
+    }
+    // Always record a final val point for selection if eval was requested.
+    if spec.eval_every > 0 && !result.diverged {
+        let v = eval(&session, spec, data, &hp_v)?;
+        if v.is_finite() {
+            result.val_losses.push((result.steps_done, v));
+        } else {
+            result.diverged = true;
+        }
+    }
+    result.wall_secs = t0.elapsed().as_secs_f64();
+    Ok(result)
+}
+
+fn eval(
+    session: &TrainSession,
+    spec: &RunSpec,
+    data: &dyn DataSource,
+    hp_v: &[f32; 8],
+) -> Result<f64> {
+    let mut acc = 0.0;
+    for b in 0..spec.eval_batches {
+        let batch = data.batch(Split::Val, b);
+        let inputs = StepInputs {
+            lr_vec: vec![],
+            hp_vec: *hp_v,
+        };
+        acc += session.eval(&batch, &inputs)? as f64;
+    }
+    Ok(acc / spec.eval_batches as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn final_train_loss_tail_mean() {
+        let r = RunResult {
+            train_losses: (0..20).map(|i| 20.0 - i as f64).collect(),
+            val_losses: vec![],
+            diverged: false,
+            steps_done: 20,
+            flops: 0.0,
+            wall_secs: 0.0,
+        };
+        // last 2 losses: 2, 1 -> mean 1.5
+        assert!((r.final_train_loss() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn diverged_run_is_nan() {
+        let r = RunResult {
+            train_losses: vec![1.0],
+            val_losses: vec![(1, 0.5)],
+            diverged: true,
+            steps_done: 1,
+            flops: 0.0,
+            wall_secs: 0.0,
+        };
+        assert!(r.final_train_loss().is_nan());
+        assert!(r.best_val_loss().is_nan());
+    }
+
+    #[test]
+    fn best_val_picks_minimum() {
+        let r = RunResult {
+            train_losses: vec![1.0; 10],
+            val_losses: vec![(5, 3.0), (10, 2.0), (15, 2.5)],
+            diverged: false,
+            steps_done: 15,
+            flops: 0.0,
+            wall_secs: 0.0,
+        };
+        assert_eq!(r.best_val_loss(), 2.0);
+    }
+}

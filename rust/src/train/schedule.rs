@@ -1,0 +1,131 @@
+//! Learning-rate schedules — one of the four HPs whose transferability
+//! Fig. 4 validates (column 4: (a) linear decay, (b)/(c) StepLR,
+//! (d) cosine annealing, (e) constant, (f) inverse square-root).
+//!
+//! Schedules are pure host-side multipliers on the per-tensor LR vector,
+//! so a single compiled artifact serves every schedule.
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Schedule {
+    Constant,
+    /// linear decay to 0 at the final step
+    Linear,
+    /// cosine annealing to 0
+    Cosine,
+    /// multiply by `factor` at each fraction-of-training milestone
+    Step2 {
+        at: [f64; 2],
+        factor: f64,
+    },
+    /// 1/sqrt(1 + step/warm)
+    InvSqrt {
+        warm: f64,
+    },
+}
+
+impl Schedule {
+    /// Multiplier at `step` of `total` (step is 0-based).
+    pub fn factor(&self, step: usize, total: usize) -> f64 {
+        let t = if total <= 1 {
+            0.0
+        } else {
+            step as f64 / (total - 1) as f64
+        };
+        match self {
+            Schedule::Constant => 1.0,
+            Schedule::Linear => (1.0 - t).max(1.0 / total.max(1) as f64),
+            Schedule::Cosine => 0.5 * (1.0 + (std::f64::consts::PI * t).cos()),
+            Schedule::Step2 { at, factor } => {
+                let mut f = 1.0;
+                if t >= at[0] {
+                    f *= factor;
+                }
+                if t >= at[1] {
+                    f *= factor;
+                }
+                f
+            }
+            Schedule::InvSqrt { warm } => 1.0 / (1.0 + step as f64 / warm).sqrt(),
+        }
+    }
+
+    /// The Fig. 4 schedule panel, by label.
+    pub fn named(name: &str) -> Option<Schedule> {
+        Some(match name {
+            "constant" => Schedule::Constant,
+            "linear" => Schedule::Linear,
+            "cosine" => Schedule::Cosine,
+            "step_0.1" => Schedule::Step2 {
+                at: [0.5, 0.8],
+                factor: 0.1,
+            },
+            "step_0.3" => Schedule::Step2 {
+                at: [0.4, 0.7],
+                factor: 0.3,
+            },
+            "invsqrt" => Schedule::InvSqrt { warm: 32.0 },
+            _ => return None,
+        })
+    }
+
+    pub fn all_named() -> &'static [&'static str] {
+        &["constant", "linear", "cosine", "step_0.1", "step_0.3", "invsqrt"]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_is_one() {
+        for s in [0, 10, 99] {
+            assert_eq!(Schedule::Constant.factor(s, 100), 1.0);
+        }
+    }
+
+    #[test]
+    fn linear_decays_monotonically() {
+        let sch = Schedule::Linear;
+        let mut prev = f64::INFINITY;
+        for s in 0..100 {
+            let f = sch.factor(s, 100);
+            assert!(f <= prev && f > 0.0);
+            prev = f;
+        }
+        assert!((sch.factor(0, 100) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_endpoints() {
+        let sch = Schedule::Cosine;
+        assert!((sch.factor(0, 100) - 1.0).abs() < 1e-12);
+        assert!(sch.factor(99, 100).abs() < 1e-12);
+        assert!((sch.factor(49, 99) - 0.5).abs() < 0.02);
+    }
+
+    #[test]
+    fn step_schedule_drops_twice() {
+        let sch = Schedule::Step2 {
+            at: [0.5, 0.8],
+            factor: 0.1,
+        };
+        assert_eq!(sch.factor(0, 100), 1.0);
+        assert!((sch.factor(60, 100) - 0.1).abs() < 1e-12);
+        assert!((sch.factor(90, 100) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn invsqrt_halves_at_3warm() {
+        let sch = Schedule::InvSqrt { warm: 32.0 };
+        assert!((sch.factor(96, 1000) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn named_roundtrip() {
+        for name in Schedule::all_named() {
+            assert!(Schedule::named(name).is_some(), "{name}");
+        }
+        assert!(Schedule::named("bogus").is_none());
+    }
+}

@@ -1,0 +1,329 @@
+//! μTransfer (Algorithm 1) and reverse-μTransfer (Appendix I).
+//!
+//! `mu_transfer` is the paper's whole pitch in one function:
+//!   1. parametrize the target in μP with the proxy as base shape;
+//!   2. tune the proxy (random search over a [`SearchSpace`]);
+//!   3. copy the winning HPs to the target, zero-shot.
+//!
+//! `naive_transfer` is the baseline that must fail (tune a small SP model,
+//! copy to a big SP model), and `direct_tuning` is the FLOPs-matched
+//! conventional alternative the Tables 4-6 compare against.
+
+use anyhow::Result;
+
+use crate::init::rng::Rng;
+use crate::model::BaseShape;
+use crate::mup::{HyperParams, Optimizer, Parametrization};
+use crate::runtime::Runtime;
+use crate::sweep::{Job, JobResult, Sweep};
+use crate::train::{RunSpec, Schedule};
+use crate::tuner::{select_best, Assignment, SearchSpace, Trial};
+
+/// Shared knobs for a transfer study.
+#[derive(Debug, Clone)]
+pub struct TransferSetup {
+    pub proxy_variant: String,
+    pub target_variant: String,
+    /// μP base shape == the proxy's widths
+    pub base: BaseShape,
+    pub optimizer: Optimizer,
+    pub space: SearchSpace,
+    pub proxy_steps: usize,
+    pub target_steps: usize,
+    pub n_samples: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+    pub schedule: Schedule,
+}
+
+#[derive(Debug, Clone)]
+pub struct TransferOutcome {
+    /// all proxy trials (the search record, Fig. 14-style)
+    pub proxy_trials: Vec<Trial>,
+    /// the winning assignment
+    pub best: Option<Assignment>,
+    /// target run with transferred HPs
+    pub target: Option<JobResult>,
+    /// FLOPs spent searching (proxy) and training the target
+    pub search_flops: f64,
+    pub target_flops: f64,
+}
+
+impl TransferOutcome {
+    /// Appendix F.4 cost ratio.
+    pub fn tuning_cost_ratio(&self) -> f64 {
+        if self.target_flops > 0.0 {
+            self.search_flops / self.target_flops
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+fn spec_for(
+    variant: &str,
+    par: Parametrization,
+    hp: HyperParams,
+    base: BaseShape,
+    steps: usize,
+    seed: u64,
+    eval_every: usize,
+    schedule: Schedule,
+) -> RunSpec {
+    let mut s = RunSpec::new(variant, par, hp, base);
+    s.steps = steps;
+    s.seed = seed;
+    s.eval_every = eval_every.max(1).min(steps);
+    s.schedule = schedule;
+    s
+}
+
+/// Algorithm 1.  `scheme_base`: μP uses the proxy widths as base for BOTH
+/// proxy and target (so the proxy literally *is* an SP model of itself,
+/// Eq. (4)).
+pub fn mu_transfer(
+    rt: &Runtime,
+    sweep: &mut Sweep,
+    setup: &TransferSetup,
+    label: &str,
+) -> Result<TransferOutcome> {
+    let par = Parametrization::mup(setup.optimizer);
+    let mut rng = Rng::new(setup.seed ^ 0xA11CE);
+    // 2. tune the proxy
+    let jobs: Vec<Job> = (0..setup.n_samples)
+        .map(|i| {
+            let a = setup.space.sample(&mut rng);
+            Job {
+                key: format!("{label}/proxy/{i}"),
+                spec: spec_for(
+                    &setup.proxy_variant,
+                    par,
+                    a.apply(HyperParams::default()),
+                    setup.base.clone(),
+                    setup.proxy_steps,
+                    setup.seed + 1000 + i as u64,
+                    setup.eval_every,
+                    setup.schedule,
+                ),
+                assignment: a,
+                data_seed: setup.seed,
+            }
+        })
+        .collect();
+    let results = sweep.run(&jobs)?;
+    let proxy_trials: Vec<Trial> = results.iter().map(|r| r.trial.clone()).collect();
+    let search_flops: f64 = proxy_trials.iter().map(|t| t.flops).sum();
+
+    // 3. zero-shot copy to the target
+    let best = select_best(&proxy_trials).map(|t| t.assignment.clone());
+    let (target, target_flops) = if let Some(best_a) = &best {
+        let job = Job {
+            key: format!("{label}/target"),
+            spec: spec_for(
+                &setup.target_variant,
+                par,
+                best_a.apply(HyperParams::default()),
+                setup.base.clone(),
+                setup.target_steps,
+                setup.seed + 99,
+                setup.eval_every,
+                setup.schedule,
+            ),
+            assignment: best_a.clone(),
+            data_seed: setup.seed,
+        };
+        let r = sweep.run(&[job])?.remove(0);
+        let fl = r.trial.flops;
+        (Some(r), fl)
+    } else {
+        (None, 0.0)
+    };
+
+    Ok(TransferOutcome {
+        proxy_trials,
+        best,
+        target,
+        search_flops,
+        target_flops,
+    })
+}
+
+/// Naive transfer baseline: tune the proxy in **SP** and copy to the SP
+/// target (what practitioners do without μP; Tables 4-6's "diverged"
+/// rows).
+pub fn naive_transfer(
+    rt: &Runtime,
+    sweep: &mut Sweep,
+    setup: &TransferSetup,
+    label: &str,
+) -> Result<TransferOutcome> {
+    let par = Parametrization::standard(setup.optimizer);
+    let mut rng = Rng::new(setup.seed ^ 0xA11CE); // same HP draws as μT
+    let jobs: Vec<Job> = (0..setup.n_samples)
+        .map(|i| {
+            let a = setup.space.sample(&mut rng);
+            Job {
+                key: format!("{label}/sp-proxy/{i}"),
+                spec: spec_for(
+                    &setup.proxy_variant,
+                    par,
+                    a.apply(HyperParams::default()),
+                    BaseShape::SameAsTarget,
+                    setup.proxy_steps,
+                    setup.seed + 1000 + i as u64,
+                    setup.eval_every,
+                    setup.schedule,
+                ),
+                assignment: a,
+                data_seed: setup.seed,
+            }
+        })
+        .collect();
+    let results = sweep.run(&jobs)?;
+    let proxy_trials: Vec<Trial> = results.iter().map(|r| r.trial.clone()).collect();
+    let search_flops: f64 = proxy_trials.iter().map(|t| t.flops).sum();
+    let best = select_best(&proxy_trials).map(|t| t.assignment.clone());
+    let (target, target_flops) = if let Some(best_a) = &best {
+        let job = Job {
+            key: format!("{label}/sp-target"),
+            spec: spec_for(
+                &setup.target_variant,
+                par,
+                best_a.apply(HyperParams::default()),
+                BaseShape::SameAsTarget,
+                setup.target_steps,
+                setup.seed + 99,
+                setup.eval_every,
+                setup.schedule,
+            ),
+            assignment: best_a.clone(),
+            data_seed: setup.seed,
+        };
+        let r = sweep.run(&[job])?.remove(0);
+        let fl = r.trial.flops;
+        (Some(r), fl)
+    } else {
+        (None, 0.0)
+    };
+    let _ = rt;
+    Ok(TransferOutcome {
+        proxy_trials,
+        best,
+        target,
+        search_flops,
+        target_flops,
+    })
+}
+
+/// Conventional tuning: sample HPs *on the target itself* with a given
+/// sample budget (the FLOPs-matched "Tuning on 1x" rows).
+pub fn direct_tuning(
+    rt: &Runtime,
+    sweep: &mut Sweep,
+    setup: &TransferSetup,
+    n_samples: usize,
+    label: &str,
+) -> Result<TransferOutcome> {
+    let par = Parametrization::standard(setup.optimizer);
+    let mut rng = Rng::new(setup.seed ^ 0xD12EC7);
+    let jobs: Vec<Job> = (0..n_samples)
+        .map(|i| {
+            let a = setup.space.sample(&mut rng);
+            Job {
+                key: format!("{label}/direct/{i}"),
+                spec: spec_for(
+                    &setup.target_variant,
+                    par,
+                    a.apply(HyperParams::default()),
+                    BaseShape::SameAsTarget,
+                    setup.target_steps,
+                    setup.seed + 2000 + i as u64,
+                    setup.eval_every,
+                    setup.schedule,
+                ),
+                assignment: a,
+                data_seed: setup.seed,
+            }
+        })
+        .collect();
+    let results = sweep.run(&jobs)?;
+    let trials: Vec<Trial> = results.iter().map(|r| r.trial.clone()).collect();
+    let search_flops: f64 = trials.iter().map(|t| t.flops).sum();
+    let best_idx = select_best(&trials).map(|b| {
+        trials
+            .iter()
+            .position(|t| std::ptr::eq(t, b))
+            .unwrap_or(0)
+    });
+    let target = best_idx.map(|i| results[i].clone());
+    let best = select_best(&trials).map(|t| t.assignment.clone());
+    let _ = rt;
+    Ok(TransferOutcome {
+        proxy_trials: trials,
+        best,
+        target,
+        search_flops,
+        target_flops: 0.0,
+    })
+}
+
+/// Reverse-μTransfer (Appendix I): take HPs that destabilize a *wide* SP
+/// model and map them onto a narrow μP model with base width =
+/// `simulated_width`, replicating the instability cheaply.  Returns the
+/// RunSpec to execute on the narrow model.
+pub fn reverse_spec(
+    narrow_variant: &str,
+    simulated: BaseShape,
+    optimizer: Optimizer,
+    hp: HyperParams,
+    steps: usize,
+    seed: u64,
+) -> RunSpec {
+    // μP with base = the *wide* shape: at narrow width the rules invert,
+    // scaling LR/init *up* exactly as much as width went down — i.e. the
+    // narrow model behaves like the wide SP model.
+    let par = Parametrization::mup(optimizer);
+    let mut s = RunSpec::new(narrow_variant, par, hp, simulated);
+    s.steps = steps;
+    s.seed = seed;
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_cost_ratio() {
+        let o = TransferOutcome {
+            proxy_trials: vec![],
+            best: None,
+            target: None,
+            search_flops: 7.0,
+            target_flops: 100.0,
+        };
+        assert!((o.tuning_cost_ratio() - 0.07).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reverse_spec_uses_mup_with_wide_base() {
+        let spec = reverse_spec(
+            "tfm_post_w64_d2",
+            BaseShape::Tfm {
+                d_model: 512,
+                n_head: 4,
+                d_head: 128,
+                d_ffn: 2048,
+            },
+            Optimizer::Adam,
+            HyperParams::default(),
+            10,
+            1,
+        );
+        assert_eq!(spec.par, Parametrization::mup(Optimizer::Adam));
+        match spec.base {
+            BaseShape::Tfm { d_model, .. } => assert_eq!(d_model, 512),
+            _ => panic!(),
+        }
+    }
+}

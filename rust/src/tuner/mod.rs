@@ -1,0 +1,362 @@
+//! Hyperparameter search: spaces, samplers, trials, selection.
+//!
+//! The paper deliberately uses plain random / grid search ("it is only for
+//! scientific reasons that we use either grid search or random search
+//! throughout this work", §10.1); both are implemented here, plus a
+//! low-discrepancy Halton sampler as an extension (the paper notes
+//! fancier tuners compose with μTransfer — they tune the proxy).
+
+use std::collections::BTreeMap;
+
+use crate::init::rng::Rng;
+use crate::mup::HyperParams;
+use crate::util::json::{jnum, Json};
+
+/// One tunable dimension.
+#[derive(Debug, Clone)]
+pub enum Dim {
+    /// log-uniform continuous (LR-like)
+    LogUniform { lo: f64, hi: f64 },
+    /// uniform continuous
+    Uniform { lo: f64, hi: f64 },
+    /// explicit grid of values (the paper's 2^z grids, App. F.1/F.2)
+    Grid(Vec<f64>),
+}
+
+impl Dim {
+    /// The paper's `base × 2^z, z ∈ {zlo, zlo+step, …, zhi}` grid shape.
+    pub fn pow2_grid(base: f64, zlo: f64, zhi: f64, step: f64) -> Dim {
+        let mut vals = Vec::new();
+        let mut z = zlo;
+        while z <= zhi + 1e-9 {
+            vals.push(base * 2f64.powf(z));
+            z += step;
+        }
+        Dim::Grid(vals)
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        match self {
+            Dim::LogUniform { lo, hi } => rng.log_uniform(*lo, *hi),
+            Dim::Uniform { lo, hi } => rng.range(*lo, *hi),
+            Dim::Grid(vals) => vals[rng.below(vals.len())],
+        }
+    }
+
+    /// Map a quasi-random u in [0,1) into the dimension.
+    pub fn from_unit(&self, u: f64) -> f64 {
+        match self {
+            Dim::LogUniform { lo, hi } => (lo.ln() + u * (hi.ln() - lo.ln())).exp(),
+            Dim::Uniform { lo, hi } => lo + u * (hi - lo),
+            Dim::Grid(vals) => vals[((u * vals.len() as f64) as usize).min(vals.len() - 1)],
+        }
+    }
+}
+
+/// Named search space over [`HyperParams`] fields.
+#[derive(Debug, Clone, Default)]
+pub struct SearchSpace {
+    pub dims: Vec<(String, Dim)>,
+}
+
+impl SearchSpace {
+    pub fn new() -> SearchSpace {
+        SearchSpace::default()
+    }
+
+    pub fn with(mut self, name: &str, dim: Dim) -> SearchSpace {
+        self.dims.push((name.to_string(), dim));
+        self
+    }
+
+    /// The IWSLT grid (App. F.1): η, α_output, α_attn.
+    pub fn iwslt_like() -> SearchSpace {
+        SearchSpace::new()
+            .with("lr", Dim::pow2_grid(5e-4, -1.5, 1.25, 0.25))
+            .with("alpha_output", Dim::pow2_grid(1.0, -8.0, 7.0, 1.0))
+            .with("alpha_attn", Dim::pow2_grid(1.0, -3.0, 8.0, 1.0))
+    }
+
+    /// The BERT grid (App. F.3): η, η_emb ratio, α_output, α_attn, σ.
+    pub fn bert_like() -> SearchSpace {
+        SearchSpace::new()
+            .with("lr", Dim::pow2_grid(1e-4, 1.5, 3.5, 0.5))
+            .with("lr_emb_ratio", Dim::pow2_grid(1.0, -1.0, 1.0, 0.5))
+            .with("alpha_output", Dim::pow2_grid(1.0, 2.0, 6.0, 2.0))
+            .with("alpha_attn", Dim::pow2_grid(1.0, 3.0, 7.0, 0.5))
+            .with("sigma", Dim::pow2_grid(1.0, -2.0, 2.0, 1.0))
+    }
+
+    /// The GPT-3 space (App. F.4): continuous log-uniform draws.
+    pub fn gpt3_like() -> SearchSpace {
+        SearchSpace::new()
+            .with("lr", Dim::LogUniform { lo: 1e-4, hi: 1e-1 })
+            .with("sigma", Dim::LogUniform { lo: 0.1, hi: 10.0 })
+            .with(
+                "alpha_attn",
+                Dim::LogUniform {
+                    lo: 0.25,
+                    hi: 4.0,
+                },
+            )
+            .with(
+                "alpha_output",
+                Dim::LogUniform {
+                    lo: 0.25,
+                    hi: 4.0,
+                },
+            )
+            .with("alpha_embed", Dim::LogUniform { lo: 0.1, hi: 10.0 })
+    }
+
+    /// Draw a random assignment.
+    pub fn sample(&self, rng: &mut Rng) -> Assignment {
+        Assignment {
+            values: self
+                .dims
+                .iter()
+                .map(|(n, d)| (n.clone(), d.sample(rng)))
+                .collect(),
+        }
+    }
+
+    /// Halton low-discrepancy sequence point `i` (extension).
+    pub fn halton(&self, i: usize) -> Assignment {
+        const PRIMES: [usize; 8] = [2, 3, 5, 7, 11, 13, 17, 19];
+        Assignment {
+            values: self
+                .dims
+                .iter()
+                .enumerate()
+                .map(|(k, (n, d))| {
+                    let u = radical_inverse(i + 1, PRIMES[k % PRIMES.len()]);
+                    (n.clone(), d.from_unit(u))
+                })
+                .collect(),
+        }
+    }
+
+    /// Full cartesian grid (only sensible for 1-2 dims).
+    pub fn grid(&self) -> Vec<Assignment> {
+        let mut out = vec![Assignment::default()];
+        for (name, dim) in &self.dims {
+            let vals = match dim {
+                Dim::Grid(v) => v.clone(),
+                _ => panic!("grid() requires Grid dims ({name} is continuous)"),
+            };
+            let mut next = Vec::with_capacity(out.len() * vals.len());
+            for a in &out {
+                for &v in &vals {
+                    let mut b = a.clone();
+                    b.values.insert(name.clone(), v);
+                    next.push(b);
+                }
+            }
+            out = next;
+        }
+        out
+    }
+}
+
+fn radical_inverse(mut i: usize, base: usize) -> f64 {
+    let mut inv = 0.0;
+    let mut f = 1.0 / base as f64;
+    while i > 0 {
+        inv += f * (i % base) as f64;
+        i /= base;
+        f /= base as f64;
+    }
+    inv
+}
+
+/// A sampled HP assignment (name → value).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Assignment {
+    pub values: BTreeMap<String, f64>,
+}
+
+impl Assignment {
+    pub fn single(name: &str, v: f64) -> Assignment {
+        let mut a = Assignment::default();
+        a.values.insert(name.to_string(), v);
+        a
+    }
+
+    /// Apply onto a `HyperParams` baseline.
+    pub fn apply(&self, mut hp: HyperParams) -> HyperParams {
+        for (k, &v) in &self.values {
+            match k.as_str() {
+                "lr" => hp.lr = v,
+                "sigma" => hp.sigma = v,
+                "alpha_output" => hp.alpha_output = v,
+                "alpha_attn" => hp.alpha_attn = v,
+                "alpha_embed" => hp.alpha_embed = v,
+                "lr_emb_ratio" => hp.lr_emb_ratio = v,
+                "beta1" => hp.beta1 = v,
+                "beta2" => hp.beta2 = v,
+                "eps" => hp.eps = v,
+                "weight_decay" => hp.weight_decay = v,
+                "momentum" => hp.momentum = v,
+                other => panic!("unknown HP dimension {other}"),
+            }
+        }
+        hp
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        for (k, &v) in &self.values {
+            o.set(k, jnum(v));
+        }
+        o
+    }
+}
+
+/// Result of evaluating one assignment.
+#[derive(Debug, Clone)]
+pub struct Trial {
+    pub assignment: Assignment,
+    /// selection metric (validation loss; NaN = diverged)
+    pub val_loss: f64,
+    pub train_loss: f64,
+    pub diverged: bool,
+    pub flops: f64,
+}
+
+impl Trial {
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("assignment", self.assignment.to_json()),
+            ("val_loss", jnum(self.val_loss)),
+            ("train_loss", jnum(self.train_loss)),
+            ("diverged", Json::Bool(self.diverged)),
+            ("flops", jnum(self.flops)),
+        ])
+    }
+}
+
+/// Pick the best trial by validation loss (the paper's §7 selection rule).
+/// Diverged trials never win.  None if *everything* diverged.
+pub fn select_best(trials: &[Trial]) -> Option<&Trial> {
+    trials
+        .iter()
+        .filter(|t| !t.diverged && t.val_loss.is_finite())
+        .min_by(|a, b| a.val_loss.partial_cmp(&b.val_loss).unwrap())
+}
+
+/// Best-so-far curve: value of the selection metric after k samples —
+/// the x-axis of the Fig. 6 (right) sample-efficiency plot.
+pub fn best_so_far(trials: &[Trial]) -> Vec<f64> {
+    let mut best = f64::NAN;
+    trials
+        .iter()
+        .map(|t| {
+            if !t.diverged && t.val_loss.is_finite() && (best.is_nan() || t.val_loss < best) {
+                best = t.val_loss;
+            }
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_grid_matches_paper_f1() {
+        // η: 5e-4 × 2^z, z ∈ {-1.5, -1.25, …, 1.25} -> 12 values
+        let d = Dim::pow2_grid(5e-4, -1.5, 1.25, 0.25);
+        match &d {
+            Dim::Grid(v) => {
+                assert_eq!(v.len(), 12);
+                assert!((v[0] - 5e-4 * 2f64.powf(-1.5)).abs() < 1e-12);
+                assert!((v[11] - 5e-4 * 2f64.powf(1.25)).abs() < 1e-12);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn sample_in_space() {
+        let space = SearchSpace::iwslt_like();
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let a = space.sample(&mut rng);
+            assert_eq!(a.values.len(), 3);
+            let lr = a.values["lr"];
+            assert!(lr > 1e-4 && lr < 2e-3);
+        }
+    }
+
+    #[test]
+    fn assignment_applies() {
+        let a = Assignment {
+            values: [("lr".to_string(), 0.01), ("alpha_output".to_string(), 4.0)]
+                .into_iter()
+                .collect(),
+        };
+        let hp = a.apply(HyperParams::default());
+        assert_eq!(hp.lr, 0.01);
+        assert_eq!(hp.alpha_output, 4.0);
+        assert_eq!(hp.beta1, 0.9); // untouched default
+    }
+
+    #[test]
+    #[should_panic]
+    fn unknown_dimension_panics() {
+        Assignment::single("bogus", 1.0).apply(HyperParams::default());
+    }
+
+    #[test]
+    fn grid_cartesian_product() {
+        let space = SearchSpace::new()
+            .with("lr", Dim::Grid(vec![0.1, 0.2]))
+            .with("sigma", Dim::Grid(vec![1.0, 2.0, 3.0]));
+        let g = space.grid();
+        assert_eq!(g.len(), 6);
+        assert!(g.iter().any(|a| a.values["lr"] == 0.2 && a.values["sigma"] == 3.0));
+    }
+
+    #[test]
+    fn halton_deterministic_and_spread() {
+        let space = SearchSpace::new().with("lr", Dim::Uniform { lo: 0.0, hi: 1.0 });
+        let xs: Vec<f64> = (0..16).map(|i| space.halton(i).values["lr"]).collect();
+        assert_eq!(xs[0], 0.5); // radical inverse base 2 of 1
+        // all distinct and well spread
+        for i in 0..16 {
+            for j in 0..i {
+                assert!((xs[i] - xs[j]).abs() > 1e-6);
+            }
+        }
+        let low = xs.iter().filter(|&&x| x < 0.5).count();
+        assert!((6..=10).contains(&low));
+    }
+
+    #[test]
+    fn select_best_skips_diverged() {
+        let t = |v: f64, d: bool| Trial {
+            assignment: Assignment::default(),
+            val_loss: v,
+            train_loss: v,
+            diverged: d,
+            flops: 0.0,
+        };
+        let trials = vec![t(1.0, true), t(2.0, false), t(1.5, false), t(f64::NAN, false)];
+        assert_eq!(select_best(&trials).unwrap().val_loss, 1.5);
+        assert!(select_best(&[t(1.0, true)]).is_none());
+    }
+
+    #[test]
+    fn best_so_far_monotone() {
+        let t = |v: f64| Trial {
+            assignment: Assignment::default(),
+            val_loss: v,
+            train_loss: v,
+            diverged: false,
+            flops: 0.0,
+        };
+        let curve = best_so_far(&[t(3.0), t(4.0), t(2.0), t(2.5)]);
+        assert_eq!(curve, vec![3.0, 3.0, 2.0, 2.0]);
+    }
+}

@@ -1,0 +1,102 @@
+//! Micro-benchmark harness (criterion is not vendored).
+//!
+//! `cargo bench` targets use `harness = false` and drive this: warmup,
+//! adaptive iteration count targeting a wall-clock budget, and
+//! median/mean/stddev reporting.  Used both by the perf pass
+//! (EXPERIMENTS.md §Perf) and the per-table end-to-end benches.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub std_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  mean {:>12}  median {:>12}  min {:>12}  ±{:.1}%",
+            self.name,
+            self.iters,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.median_ns),
+            fmt_ns(self.min_ns),
+            100.0 * self.std_ns / self.mean_ns.max(1.0),
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns >= 1e9 {
+        format!("{:.3} s", ns / 1e9)
+    } else if ns >= 1e6 {
+        format!("{:.3} ms", ns / 1e6)
+    } else if ns >= 1e3 {
+        format!("{:.3} µs", ns / 1e3)
+    } else {
+        format!("{ns:.0} ns")
+    }
+}
+
+/// Benchmark `f`, spending roughly `budget` wall-clock (after one warmup
+/// call).  `f` should perform one logical operation per call.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchStats {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(100));
+    let target_iters = (budget.as_nanos() / once.as_nanos()).clamp(3, 10_000) as usize;
+    let mut samples = Vec::with_capacity(target_iters);
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    let median = samples[n / 2];
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        median_ns: median,
+        std_ns: var.sqrt(),
+        min_ns: samples[0],
+    }
+}
+
+/// Convenience: bench and print.
+pub fn bench_print<F: FnMut()>(name: &str, budget: Duration, f: F) -> BenchStats {
+    let s = bench(name, budget, f);
+    println!("{}", s.report());
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleep_duration() {
+        let s = bench("sleep", Duration::from_millis(30), || {
+            std::thread::sleep(Duration::from_millis(2))
+        });
+        assert!(s.median_ns > 1.5e6 && s.median_ns < 30e6, "{}", s.median_ns);
+        assert!(s.iters >= 3);
+    }
+
+    #[test]
+    fn format_ns() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(1.5e3), "1.500 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.500 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+}

@@ -1,0 +1,145 @@
+//! Tiny CLI argument parser (no `clap` in the vendored crate set).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--flag` shapes used by `mutransfer` and the examples.  Unknown flags
+//! are an error so typos fail fast instead of silently using defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    seen: std::cell::RefCell<Vec<String>>,
+    known: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    a.flags.insert(stripped.to_string(), v);
+                } else {
+                    a.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    fn note(&self, key: &str) {
+        self.known.borrow_mut().push(key.to_string());
+        if self.flags.contains_key(key) {
+            self.seen.borrow_mut().push(key.to_string());
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.note(key);
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects a number, got {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} expects an integer, got {v}")))
+            .unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.get(key).map(|v| v != "false").unwrap_or(false)
+    }
+
+    /// Call after all `get`s: errors on flags that were provided but never
+    /// consumed (catches typos like `--step` for `--steps`).
+    pub fn reject_unknown(&self) -> Result<(), String> {
+        let known = self.known.borrow();
+        let unknown: Vec<_> = self
+            .flags
+            .keys()
+            .filter(|k| !known.iter().any(|s| s == *k))
+            .cloned()
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "unknown flag(s): {}; known: {}",
+                unknown.join(", "),
+                known.join(", ")
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("exp fig1 --steps 50 --preset=ci --verbose");
+        assert_eq!(a.positional, vec!["exp", "fig1"]);
+        assert_eq!(a.usize_or("steps", 0), 50);
+        assert_eq!(a.str_or("preset", "paper"), "ci");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert!(a.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("train");
+        assert_eq!(a.usize_or("steps", 100), 100);
+        assert_eq!(a.f64_or("lr", 1e-3), 1e-3);
+    }
+
+    #[test]
+    fn unknown_flag_detected() {
+        let a = parse("x --bogus 3");
+        let _ = a.get("real");
+        assert!(a.reject_unknown().is_err());
+    }
+
+    #[test]
+    fn negative_number_value() {
+        let a = parse("--z -1.5");
+        // "-1.5" doesn't start with "--" so it is consumed as the value
+        assert_eq!(a.f64_or("z", 0.0), -1.5);
+    }
+}

@@ -1,0 +1,10 @@
+//! Hand-rolled substrates (the vendored crate set has no serde / clap /
+//! criterion / rayon): JSON codec, CLI parsing, text tables, a micro
+//! benchmark harness, and a worker pool.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod table;

@@ -1,0 +1,103 @@
+//! Minimal worker pool over `std::thread` (no rayon/tokio vendored).
+//!
+//! The sweep scheduler uses it to run trials concurrently.  On this 1-core
+//! testbed the default is a single worker (XLA already saturates the
+//! core), but the scheduler/journal logic is written — and tested — for
+//! arbitrary worker counts, matching the paper's benefit #4 (small-model
+//! tuning parallelizes trivially across a cluster).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+
+/// Run `jobs` across `workers` threads, preserving result order.
+///
+/// `f` must be `Send + Sync`; jobs are pulled from a shared queue so the
+/// pool load-balances uneven job durations.
+pub fn run_indexed<J, R, F>(jobs: Vec<J>, workers: usize, f: F) -> Vec<R>
+where
+    J: Send + 'static,
+    R: Send + 'static,
+    F: Fn(usize, J) -> R + Send + Sync + 'static,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        // fast path, avoids thread overhead on the 1-core testbed
+        return jobs.into_iter().enumerate().map(|(i, j)| f(i, j)).collect();
+    }
+    let queue: Arc<Mutex<Vec<(usize, J)>>> =
+        Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
+    let f = Arc::new(f);
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    let mut handles = Vec::new();
+    for _ in 0..workers {
+        let queue = queue.clone();
+        let f = f.clone();
+        let tx = tx.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let job = queue.lock().unwrap().pop();
+            match job {
+                Some((i, j)) => {
+                    let r = f(i, j);
+                    if tx.send((i, r)).is_err() {
+                        return;
+                    }
+                }
+                None => return,
+            }
+        }));
+    }
+    drop(tx);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    for (i, r) in rx {
+        out[i] = Some(r);
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    out.into_iter().map(|r| r.expect("worker died")).collect()
+}
+
+/// Suggested worker count: leave the runtime's XLA execution the whole
+/// machine unless there is headroom.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| (n.get() / 2).max(1))
+        .unwrap_or(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_single_worker() {
+        let r = run_indexed((0..10).collect(), 1, |_, j: i32| j * 2);
+        assert_eq!(r, (0..10).map(|j| j * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn preserves_order_multi_worker() {
+        let r = run_indexed((0..50).collect(), 4, |_, j: i32| {
+            // jitter durations to force out-of-order completion
+            std::thread::sleep(std::time::Duration::from_micros((j % 7) as u64 * 50));
+            j * j
+        });
+        assert_eq!(r, (0..50).map(|j| j * j).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let r: Vec<i32> = run_indexed(Vec::<i32>::new(), 4, |_, j| j);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn index_passed_through() {
+        let r = run_indexed(vec!['a', 'b', 'c'], 2, |i, c| format!("{i}{c}"));
+        assert_eq!(r, vec!["0a", "1b", "2c"]);
+    }
+}

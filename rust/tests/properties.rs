@@ -1,0 +1,184 @@
+//! Property-based tests of the μP invariants (pure host-side math; no
+//! PJRT needed) using the in-repo prop framework.
+
+use mutransfer::mup::formulations::{abc, Formulation};
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization, Role, Scheme, TensorDims};
+use mutransfer::util::prop::{check, gen};
+
+fn roles() -> [Role; 4] {
+    [Role::Input, Role::Hidden, Role::Output, Role::Vector]
+}
+
+#[derive(Debug)]
+struct Dims(TensorDims);
+
+fn gen_dims(rng: &mut mutransfer::init::rng::Rng) -> Dims {
+    let base_in = gen::pow2(rng, 4, 9);
+    let base_out = gen::pow2(rng, 4, 9);
+    let r = gen::pow2(rng, 0, 7);
+    Dims(TensorDims {
+        fan_in: base_in * r,
+        fan_out: base_out * r,
+        base_fan_in: base_in,
+        base_fan_out: base_out,
+    })
+}
+
+/// Lemma J.1: every pair of formulations is trajectory-equivalent for
+/// every role, optimizer, and width ratio.
+#[test]
+fn prop_formulations_equivalent() {
+    check(11, 300, gen_dims, |Dims(d)| {
+        for opt in [Optimizer::Sgd, Optimizer::Adam] {
+            for role in roles() {
+                for (x, y) in [
+                    (Formulation::Table3, Formulation::Table8),
+                    (Formulation::Table3, Formulation::Table9),
+                    (Formulation::Table8, Formulation::Table9),
+                ] {
+                    let a = abc(x, role, opt, *d);
+                    let b = abc(y, role, opt, *d);
+                    if a.equivalent(&b, opt, 1e-9).is_none() {
+                        return Err(format!("{x:?}!={y:?} for {role:?} {opt:?}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Eq. (4): μP factors collapse to SP exactly at the base shape, for all
+/// roles/optimizers.
+#[test]
+fn prop_mup_equals_sp_at_base() {
+    check(
+        12,
+        200,
+        |rng| {
+            let fi = gen::pow2(rng, 3, 11);
+            let fo = gen::pow2(rng, 3, 11);
+            Dims(TensorDims {
+                fan_in: fi,
+                fan_out: fo,
+                base_fan_in: fi,
+                base_fan_out: fo,
+            })
+        },
+        |Dims(d)| {
+            for opt in [Optimizer::Sgd, Optimizer::Adam] {
+                let mup = Parametrization::mup(opt);
+                let sp = Parametrization::standard(opt);
+                for role in roles() {
+                    if mup.scaling(role, *d) != sp.scaling(role, *d) {
+                        return Err(format!("{role:?} {opt:?} differs at base"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+/// Monotonicity / direction of the Table 8 rules: as width grows,
+/// hidden Adam LR shrinks ∝ 1/r, output multiplier shrinks ∝ 1/r,
+/// vector-like Adam LR never changes, SP never changes anything.
+#[test]
+fn prop_scaling_directions() {
+    check(13, 300, gen_dims, |Dims(d)| {
+        let mup = Parametrization::mup(Optimizer::Adam);
+        let hid = mup.scaling(Role::Hidden, *d);
+        let want = 1.0 / d.r_in();
+        if (hid.lr_scale - want).abs() > 1e-12 {
+            return Err(format!("hidden lr {} != {want}", hid.lr_scale));
+        }
+        let vec = mup.scaling(Role::Vector, *d);
+        if vec.lr_scale != 1.0 {
+            return Err("vector lr must be width-independent".into());
+        }
+        let sp = Parametrization::standard(Optimizer::Adam);
+        for role in roles() {
+            if sp.scaling(role, *d).lr_scale != 1.0 {
+                return Err("SP must not scale LR".into());
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// The attention multiplier: μP scale ratio between two widths is the
+/// width ratio (1/d), SP's is sqrt of it.
+#[test]
+fn prop_attention_scaling_law() {
+    check(
+        14,
+        200,
+        |rng| (gen::pow2(rng, 2, 6), gen::pow2(rng, 0, 5)),
+        |&(d0, r)| {
+            let hp = HyperParams::default();
+            let dims = TensorDims::square(128, 128);
+            let mup = Parametrization::mup(Optimizer::Adam);
+            let sp = Parametrization::standard(Optimizer::Adam);
+            let m0 = mup.multipliers(&hp, dims, d0, d0).attn_scale;
+            let m1 = mup.multipliers(&hp, dims, d0 * r, d0).attn_scale;
+            let s0 = sp.multipliers(&hp, dims, d0, d0).attn_scale;
+            let s1 = sp.multipliers(&hp, dims, d0 * r, d0).attn_scale;
+            let rr = r as f64;
+            if (m0 / m1 - rr).abs() > 1e-9 * rr {
+                return Err(format!("μP attn ratio {} != {rr}", m0 / m1));
+            }
+            if (s0 / s1 - rr.sqrt()).abs() > 1e-9 * rr {
+                return Err(format!("SP attn ratio {} != sqrt({rr})", s0 / s1));
+            }
+            Ok(())
+        },
+    )
+    .unwrap();
+}
+
+/// Effective LR respects scheme: for any hp and dims, SP LR == master LR;
+/// μP effective LRs are positive and finite.
+#[test]
+fn prop_effective_lr_sane() {
+    check(15, 300, gen_dims, |Dims(d)| {
+        let hp = HyperParams {
+            lr: 1e-3,
+            lr_emb_ratio: 2.0,
+            ..HyperParams::default()
+        };
+        for opt in [Optimizer::Sgd, Optimizer::Adam] {
+            let sp = Parametrization::standard(opt);
+            for role in roles() {
+                let l = sp.effective_lr(&hp, role, *d);
+                let want = match role {
+                    Role::Input | Role::Vector => 2e-3, // group ratio applies in both schemes
+                    _ => 1e-3,
+                };
+                if (l - want).abs() > 1e-15 {
+                    return Err(format!("SP lr {l} != {want} for {role:?}"));
+                }
+                let m = Parametrization::mup(opt).effective_lr(&hp, role, *d);
+                if !(m.is_finite() && m > 0.0) {
+                    return Err(format!("bad μP lr {m}"));
+                }
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Scheme round-trip sanity on the enum.
+#[test]
+fn prop_scheme_exhaustive() {
+    for s in [Scheme::Sp, Scheme::Mup] {
+        for o in [Optimizer::Sgd, Optimizer::Adam] {
+            let p = Parametrization { scheme: s, optimizer: o };
+            assert_eq!(p.scheme, s);
+            assert_eq!(p.optimizer, o);
+        }
+    }
+}
