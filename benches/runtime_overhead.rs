@@ -1,7 +1,9 @@
 //! Runtime overhead breakdown: what fraction of a training step is the
-//! coordinator (literal marshalling, tuple decompose, batch synthesis)
-//! vs PJRT execution?  The L3 perf target (DESIGN.md §7) is coordinator
-//! share < 5% — i.e. the paper's contribution never bottlenecks the math.
+//! coordinator (state marshalling, batch synthesis) vs backend execution?
+//! The perf target (DESIGN.md §6) is coordinator share < 5% — i.e. the
+//! paper's contribution never bottlenecks the math.  Backend-agnostic:
+//! runs against whichever backend `Runtime::new` resolves (native by
+//! default; PJRT with the `pjrt` feature + artifacts).
 
 use std::time::{Duration, Instant};
 
@@ -21,11 +23,18 @@ fn main() -> anyhow::Result<()> {
     let hp = HyperParams::default();
     let base = BaseShape::SameAsTarget;
 
-    // 1. executable compile time (amortized across a whole sweep)
+    // 1. cold-start cost: runtime construction + first session (for the
+    // PJRT backend this is dominated by executable compilation, amortized
+    // across a whole sweep; for native it is allocation only)
     let t0 = Instant::now();
     let rt2 = Runtime::new(&mutransfer::artifacts_dir())?;
-    let _ = rt2.executable(variant)?;
-    println!("pjrt_compile/{variant}: {}", fmt_ns(t0.elapsed().as_nanos() as f64));
+    let cold_params = init::init_params(&v, &par, &hp, &base, 0);
+    let _ = TrainSession::new(&rt2, variant, cold_params)?;
+    println!(
+        "cold_start[{}]/{variant}: {}",
+        rt2.backend().name(),
+        fmt_ns(t0.elapsed().as_nanos() as f64)
+    );
 
     // 2. session init (param gen + upload)
     let s = bench_print("init_params+upload", Duration::from_secs(2), || {

@@ -1,0 +1,145 @@
+"""Regenerate rust/tests/fixtures/goldens.json.
+
+Replicates ``compile/aot.py::compute_golden`` (same deterministic fills,
+same hp vectors, same two-step protocol) through the finite-difference-
+verified numpy reference in native_ref.py — so the fixture is an
+*independent* cross-language anchor for the Rust native backend.  Run
+``tools/check_grads.py`` first if native_ref.py changed.
+
+    python3 tools/gen_goldens.py [--steps N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/tools")
+import native_ref as R  # noqa: E402
+
+
+def init_golden_params(specs, seed, scale):
+    """aot.py compute_golden protocol: every tensor det_fill'd (even
+    zeros/ones specs) with seed+index."""
+    return {
+        name: R.det_fill(shape, seed + i, scale, np.float32)
+        for i, (name, shape, _) in enumerate(specs)
+    }
+
+
+def golden_tfm(name, cfg, seed, steps, scale=0.02):
+    specs = R.tfm_param_specs(cfg)
+    params = init_golden_params(specs, seed, scale)
+    m = {k: np.zeros_like(v) for k, v in params.items()}
+    v = {k: np.zeros_like(p) for k, p in params.items()}
+    tokens = R.det_tokens(cfg.batch, cfg.seq + 1, cfg.vocab, seed + 100)
+    # LR chosen so the loss moves by >> the 1e-3 relative test tolerance
+    # each step (Adam steps are ~lr in parameter space): a broken backward
+    # or optimizer cannot hide inside the tolerance band.
+    lr = np.float32(5e-2)
+    hp = [0.125, 1.0, 1.0, 0.9, 0.999, 1e-8, 0.0, 1.0]
+    losses = []
+    for step in range(steps):
+        hp[7] = float(step + 1)
+        loss, grads, _ = R.tfm_fwd_bwd(cfg, params, tokens, hp)
+        losses.append(loss)
+        for k in params:
+            params[k], m[k], v[k] = R.adam_update(
+                params[k], grads[k], m[k], v[k], lr,
+                np.float32(hp[3]), np.float32(hp[4]), np.float32(hp[5]),
+                np.float32(hp[6]), np.float32(hp[7]),
+            )
+    return {"name": name, "seed": seed, "lr": float(lr), "scale": scale,
+            "hp": hp[:7] + [1.0], "opt": "adam", "losses": losses}
+
+
+def golden_mlp(name, cfg, seed, steps, scale=0.1):
+    specs = R.mlp_param_specs(cfg)
+    params = init_golden_params(specs, seed, scale)
+    m = {k: np.zeros_like(v) for k, v in params.items()}
+    x = R.det_fill((cfg.batch, cfg.d_in), seed + 100, 1.0, np.float32)
+    y = R.det_tokens(cfg.batch, 1, cfg.d_out, seed + 200).reshape(cfg.batch)
+    # big enough steps that the loss falls by ~2 nats over the recorded
+    # trajectory — a broken backward/update cannot hide inside tolerance
+    lr = np.float32(2.0)
+    hp = [1.0, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]
+    losses = []
+    for _ in range(steps):
+        loss, grads, _ = R.mlp_fwd_bwd(cfg, params, x, y, hp)
+        losses.append(loss)
+        for k in params:
+            params[k], m[k] = R.sgd_update(
+                params[k], grads[k], m[k], lr, np.float32(hp[1]), np.float32(hp[2])
+            )
+    return {"name": name, "seed": seed, "lr": float(lr), "scale": scale,
+            "hp": hp, "opt": "sgd", "losses": losses}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    # default must match .github/workflows/ci.yml's fixture check
+    ap.add_argument("--steps", type=int, default=6)
+    ap.add_argument(
+        "--check",
+        action="store_true",
+        help="verify the checked-in fixture reproduces within 1e-4 relative "
+        "(BLAS reassociation makes bitwise equality machine-dependent) "
+        "instead of rewriting it",
+    )
+    args = ap.parse_args()
+
+    entries = [
+        golden_tfm(
+            "tfm_post_w32_d2",
+            R.TfmCfg(vocab=64, seq=32, batch=16, d_model=32, n_layer=2,
+                     n_head=4, d_head=8, d_ffn=128, ln="post"),
+            seed=7, steps=args.steps,
+        ),
+        golden_mlp(
+            "mlp_w64",
+            R.MlpCfg(d_in=256, width=64, d_out=10, batch=64),
+            seed=11, steps=args.steps,
+        ),
+    ]
+    out = {
+        "comment": "recorded by python/tools/gen_goldens.py (numpy reference, "
+                   "gradients finite-difference-verified by tools/check_grads.py); "
+                   "asserted by rust/tests/golden.rs against the native backend",
+        "protocol": "params[i] = det_fill(shape, seed+i, scale); opt state zero; "
+                    "tokens/x/y from det_tokens/det_fill with seed+100/+200; "
+                    "losses are the pre-update loss of each train step",
+        "entries": entries,
+    }
+    path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__)))),
+        "rust", "tests", "fixtures", "goldens.json",
+    )
+    for e in entries:
+        print(f"{e['name']:<20} losses: " + " ".join(f"{l:.6f}" for l in e["losses"]))
+    if args.check:
+        with open(path) as fh:
+            old = {e["name"]: e for e in json.load(fh)["entries"]}
+        worst = 0.0
+        for e in entries:
+            o = old.get(e["name"])
+            assert o is not None, f"fixture missing {e['name']}"
+            assert len(o["losses"]) == len(e["losses"]), e["name"]
+            for a, b in zip(o["losses"], e["losses"]):
+                worst = max(worst, abs(a - b) / (1.0 + abs(b)))
+        print(f"fixture check: worst rel deviation {worst:.2e}")
+        assert worst < 1e-4, "checked-in fixture drifted from the reference"
+        return 0
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as fh:
+        json.dump(out, fh, indent=1)
+        fh.write("\n")
+    print(f"wrote {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

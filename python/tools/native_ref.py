@@ -1,0 +1,440 @@
+"""Pure-numpy reference for the Rust native backend (no JAX required).
+
+Mirrors ``python/compile/model.py`` + ``python/compile/kernels/ref.py``
+semantics exactly — same parameter layouts, same forward math (causal
+attention with -1e30 masking, layernorm eps 1e-5, logsumexp cross-entropy),
+same fused per-tensor-LR Adam/SGD updates — with hand-derived backward
+passes.  ``rust/src/runtime/native/`` is a line-by-line translation of this
+file; ``tools/gen_goldens.py`` uses it to record the golden-trajectory
+fixture that ``rust/tests/golden.rs`` asserts, and
+``tools/check_grads.py`` validates every gradient here against finite
+differences (in float64) so the fixture is anchored to an independently
+verified implementation.
+
+No imports from ``compile/`` (those need jax); this file is standalone.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+LN_EPS = 1e-5
+NEG_INF = -1e30
+
+_M64 = (1 << 64) - 1
+
+
+# ---------------------------------------------------------------------------
+# deterministic fill (bit-identical to rust/src/init/rng.rs det_fill/tokens)
+# ---------------------------------------------------------------------------
+
+
+def _splitmix64_vec(x):
+    with np.errstate(over="ignore"):
+        x = (x + np.uint64(0x9E3779B97F4A7C15)).astype(np.uint64)
+        z = x
+        z = ((z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)).astype(np.uint64)
+        z = ((z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)).astype(np.uint64)
+        return z ^ (z >> np.uint64(31))
+
+
+def det_fill(shape, seed: int, scale: float = 0.02, dtype=np.float32):
+    n = int(np.prod(shape)) if shape else 1
+    base = np.uint64((seed << 32) & _M64)
+    idx = np.arange(n, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        z = _splitmix64_vec(base + idx)
+    u = (z >> np.uint64(11)).astype(np.float64) * (2.0**-53)
+    out = (u - 0.5) * 2.0 * scale
+    return out.reshape(shape).astype(dtype)
+
+
+def det_tokens(batch: int, seq: int, vocab: int, seed: int):
+    n = batch * seq
+    base = np.uint64((seed << 32) & _M64)
+    idx = np.arange(n, dtype=np.uint64)
+    with np.errstate(over="ignore"):
+        z = _splitmix64_vec(base + idx)
+    return (z % np.uint64(vocab)).astype(np.int32).reshape(batch, seq)
+
+
+# ---------------------------------------------------------------------------
+# shared ops (forward + backward)
+# ---------------------------------------------------------------------------
+
+
+def layernorm_fwd(x, g, b):
+    mu = x.mean(axis=-1, keepdims=True)
+    xc = x - mu
+    var = (xc * xc).mean(axis=-1, keepdims=True)
+    rstd = 1.0 / np.sqrt(var + np.asarray(LN_EPS, x.dtype))
+    xhat = xc * rstd
+    return xhat * g + b, (xhat, rstd)
+
+
+def layernorm_bwd(dy, g, cache):
+    xhat, rstd = cache
+    dxhat = dy * g
+    dg = (dy * xhat).sum(axis=tuple(range(dy.ndim - 1)))
+    db = dy.sum(axis=tuple(range(dy.ndim - 1)))
+    m1 = dxhat.mean(axis=-1, keepdims=True)
+    m2 = (dxhat * xhat).mean(axis=-1, keepdims=True)
+    dx = rstd * (dxhat - m1 - xhat * m2)
+    return dx, dg, db
+
+
+def softmax(x):
+    m = x.max(axis=-1, keepdims=True)
+    e = np.exp(x - m)
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+def logsumexp(x):
+    m = x.max(axis=-1, keepdims=True)
+    return (m + np.log(np.exp(x - m).sum(axis=-1, keepdims=True)))[..., 0]
+
+
+def xent_fwd(logits, targets):
+    """Mean cross-entropy over all leading dims; targets int, same leading
+    shape as logits minus the class axis.  Returns (loss, dlogits)."""
+    lz = logsumexp(logits)
+    gold = np.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    n = float(np.prod(targets.shape))
+    loss = float((lz - gold).astype(np.float64).sum() / n)
+    d = softmax(logits)
+    np.put_along_axis(
+        d, targets[..., None],
+        np.take_along_axis(d, targets[..., None], axis=-1) - np.asarray(1.0, d.dtype),
+        axis=-1,
+    )
+    return loss, d / np.asarray(n, d.dtype)
+
+
+# ---------------------------------------------------------------------------
+# optimizers (ref.py oracles, elementwise)
+# ---------------------------------------------------------------------------
+
+
+def adam_update(p, g, m, v, lr, beta1, beta2, eps, wd, count):
+    one = np.asarray(1.0, p.dtype)
+    m2 = beta1 * m + (one - beta1) * g
+    v2 = beta2 * v + (one - beta2) * g * g
+    mhat = m2 / (one - beta1**count)
+    vhat = v2 / (one - beta2**count)
+    p2 = p - lr * (mhat / (np.sqrt(vhat) + eps)) - lr * wd * p
+    return p2, m2, v2
+
+
+def sgd_update(p, g, m, lr, momentum, wd):
+    m2 = momentum * m + g
+    p2 = p - lr * (m2 + wd * p)
+    return p2, m2
+
+
+# ---------------------------------------------------------------------------
+# transformer (decoder-only LM, pre/post-LN) — model.py transformer_fwd
+# ---------------------------------------------------------------------------
+
+
+class TfmCfg:
+    def __init__(self, vocab=64, seq=32, batch=16, d_model=128, n_layer=2,
+                 n_head=4, d_head=32, d_ffn=512, ln="pre"):
+        self.vocab, self.seq, self.batch = vocab, seq, batch
+        self.d_model, self.n_layer = d_model, n_layer
+        self.n_head, self.d_head, self.d_ffn, self.ln = n_head, d_head, d_ffn, ln
+
+    @property
+    def d_attn(self):
+        return self.n_head * self.d_head
+
+
+def tfm_param_specs(c: TfmCfg):
+    d, da, f, v, s = c.d_model, c.d_attn, c.d_ffn, c.vocab, c.seq
+    specs = [("embed", (v, d), "normal"), ("pos_embed", (s, d), "normal")]
+    for i in range(c.n_layer):
+        p = f"block{i}."
+        specs += [
+            (p + "ln1_g", (d,), "ones"), (p + "ln1_b", (d,), "zeros"),
+            (p + "wq", (d, da), "zeros"), (p + "wk", (d, da), "normal"),
+            (p + "wv", (d, da), "normal"), (p + "wo", (da, d), "normal"),
+            (p + "ln2_g", (d,), "ones"), (p + "ln2_b", (d,), "zeros"),
+            (p + "w1", (d, f), "normal"), (p + "w2", (f, d), "normal"),
+        ]
+    if c.ln == "pre":
+        specs += [("lnf_g", (d,), "ones"), ("lnf_b", (d,), "zeros")]
+    specs.append(("unembed", (d, v), "zeros"))
+    return specs
+
+
+def _split_heads(x, h, dh):
+    b, s, _ = x.shape
+    return x.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+
+def _merge_heads(x):
+    b, h, s, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, s, h * dh)
+
+
+def _attn_fwd(c, p, pre, h, attn_scale):
+    q = h @ p[pre + "wq"]
+    k = h @ p[pre + "wk"]
+    v = h @ p[pre + "wv"]
+    qh = _split_heads(q, c.n_head, c.d_head)
+    kh = _split_heads(k, c.n_head, c.d_head)
+    vh = _split_heads(v, c.n_head, c.d_head)
+    logits = np.einsum("bhqd,bhkd->bhqk", qh * attn_scale, kh)
+    s = h.shape[1]
+    causal = np.tril(np.ones((s, s), bool))
+    masked = np.where(causal, logits, np.asarray(NEG_INF, logits.dtype))
+    prob = softmax(masked)
+    ctx = np.einsum("bhqk,bhkd->bhqd", prob, vh)
+    merged = _merge_heads(ctx)
+    out = merged @ p[pre + "wo"]
+    alog = np.where(causal, logits, np.asarray(0.0, logits.dtype))
+    cache = (h, qh, kh, vh, prob, merged)
+    return out, alog, cache
+
+
+def _attn_bwd(c, p, pre, dout, attn_scale, cache, grads):
+    h, qh, kh, vh, prob, merged = cache
+    grads[pre + "wo"] += np.einsum("bsd,bse->de", merged, dout)
+    dmerged = dout @ p[pre + "wo"].T
+    dctx = _split_heads(dmerged, c.n_head, c.d_head)
+    dprob = np.einsum("bhqd,bhkd->bhqk", dctx, vh)
+    dvh = np.einsum("bhqk,bhqd->bhkd", prob, dctx)
+    dmasked = prob * (dprob - (dprob * prob).sum(axis=-1, keepdims=True))
+    # masked entries have prob == 0 so dmasked is already 0 there
+    dqh = np.einsum("bhqk,bhkd->bhqd", dmasked, kh) * attn_scale
+    dkh = np.einsum("bhqk,bhqd->bhkd", dmasked, qh * attn_scale)
+    dq = _merge_heads(dqh)
+    dk = _merge_heads(dkh)
+    dv = _merge_heads(dvh)
+    grads[pre + "wq"] += np.einsum("bsd,bse->de", h, dq)
+    grads[pre + "wk"] += np.einsum("bsd,bse->de", h, dk)
+    grads[pre + "wv"] += np.einsum("bsd,bse->de", h, dv)
+    return dq @ p[pre + "wq"].T + dk @ p[pre + "wk"].T + dv @ p[pre + "wv"].T
+
+
+def _ffn_fwd(p, pre, h):
+    u = h @ p[pre + "w1"]
+    r = np.maximum(u, np.asarray(0.0, u.dtype))
+    return r @ p[pre + "w2"], (h, u, r)
+
+
+def _ffn_bwd(p, pre, df, cache, grads):
+    h, u, r = cache
+    grads[pre + "w2"] += np.einsum("bsf,bsd->fd", r, df)
+    dr = df @ p[pre + "w2"].T
+    du = dr * (u > 0)
+    grads[pre + "w1"] += np.einsum("bsd,bsf->df", h, du)
+    return du @ p[pre + "w1"].T
+
+
+def tfm_fwd_bwd(c: TfmCfg, params: dict, tokens, hp, want_grads=True):
+    """tokens (B, S+1) int32.  hp: [attn, out, emb, b1, b2, eps, wd, step].
+    Returns (loss, grads|None, probes)."""
+    attn_scale = np.asarray(hp[0], params["embed"].dtype)
+    output_scale = np.asarray(hp[1], params["embed"].dtype)
+    embed_scale = np.asarray(hp[2], params["embed"].dtype)
+    tin = tokens[:, : c.seq]
+    tgt = tokens[:, 1 : c.seq + 1]
+    pre_ln = c.ln == "pre"
+
+    emb = params["embed"][tin]  # (B,S,D)
+    x = (emb + params["pos_embed"][None, : c.seq]) * embed_scale
+    probes = {"embed_out": x}
+
+    caches = []
+    alog0 = None
+    for i in range(c.n_layer):
+        p = f"block{i}."
+        if pre_ln:
+            h1, ln1c = layernorm_fwd(x, params[p + "ln1_g"], params[p + "ln1_b"])
+            a, alog, ac = _attn_fwd(c, params, p, h1, attn_scale)
+            x1 = x + a
+            h2, ln2c = layernorm_fwd(x1, params[p + "ln2_g"], params[p + "ln2_b"])
+            f, fc = _ffn_fwd(params, p, h2)
+            x2 = x1 + f
+            caches.append((ln1c, ac, x1, ln2c, fc))
+        else:
+            a, alog, ac = _attn_fwd(c, params, p, x, attn_scale)
+            y1 = x + a
+            x1, ln1c = layernorm_fwd(y1, params[p + "ln1_g"], params[p + "ln1_b"])
+            f, fc = _ffn_fwd(params, p, x1)
+            y2 = x1 + f
+            x2, ln2c = layernorm_fwd(y2, params[p + "ln2_g"], params[p + "ln2_b"])
+            caches.append((ac, ln1c, x1, fc, ln2c))
+        if i == 0:
+            alog0 = alog
+        x = x2
+
+    if pre_ln:
+        xf, lnfc = layernorm_fwd(x, params["lnf_g"], params["lnf_b"])
+    else:
+        xf = x
+    probes["attn_logits_l0"] = alog0
+    probes["block_out"] = xf
+    logits = (xf @ params["unembed"]) * output_scale
+    probes["logits"] = logits
+
+    loss, dlogits = xent_fwd(logits, tgt)
+    if not want_grads:
+        return loss, None, probes
+
+    grads = {k: np.zeros_like(v) for k, v in params.items()}
+    dlogits = dlogits * output_scale
+    grads["unembed"] += np.einsum("bsd,bsv->dv", xf, dlogits)
+    dxf = dlogits @ params["unembed"].T
+    if pre_ln:
+        dx, dg, db = layernorm_bwd(dxf, params["lnf_g"], lnfc)
+        grads["lnf_g"] += dg
+        grads["lnf_b"] += db
+    else:
+        dx = dxf
+
+    for i in reversed(range(c.n_layer)):
+        p = f"block{i}."
+        if pre_ln:
+            ln1c, ac, x1, ln2c, fc = caches[i]
+            dx1 = dx.copy()
+            dh2 = _ffn_bwd(params, p, dx, fc, grads)
+            d, dg, db = layernorm_bwd(dh2, params[p + "ln2_g"], ln2c)
+            grads[p + "ln2_g"] += dg
+            grads[p + "ln2_b"] += db
+            dx1 += d
+            dx = dx1.copy()
+            dh1 = _attn_bwd(c, params, p, dx1, np.asarray(hp[0], dx.dtype), ac, grads)
+            d, dg, db = layernorm_bwd(dh1, params[p + "ln1_g"], ln1c)
+            grads[p + "ln1_g"] += dg
+            grads[p + "ln1_b"] += db
+            dx += d
+        else:
+            ac, ln1c, x1, fc, ln2c = caches[i]
+            dy2, dg, db = layernorm_bwd(dx, params[p + "ln2_g"], ln2c)
+            grads[p + "ln2_g"] += dg
+            grads[p + "ln2_b"] += db
+            dx1 = dy2 + _ffn_bwd(params, p, dy2, fc, grads)
+            dy1, dg, db = layernorm_bwd(dx1, params[p + "ln1_g"], ln1c)
+            grads[p + "ln1_g"] += dg
+            grads[p + "ln1_b"] += db
+            dx = dy1 + _attn_bwd(c, params, p, dy1, np.asarray(hp[0], dx.dtype), ac, grads)
+
+    dsum = dx * np.asarray(hp[2], dx.dtype)  # d(emb + pos)
+    grads["pos_embed"][: c.seq] += dsum.sum(axis=0)
+    np.add.at(grads["embed"], tin, dsum)
+    return loss, grads, probes
+
+
+# ---------------------------------------------------------------------------
+# MLP + ResMLP (SGD family) — model.py mlp_fwd / resmlp_fwd
+# ---------------------------------------------------------------------------
+
+
+class MlpCfg:
+    def __init__(self, d_in=256, width=128, d_out=10, batch=64, act="relu", loss="xent"):
+        self.d_in, self.width, self.d_out, self.batch = d_in, width, d_out, batch
+        self.act, self.loss = act, loss
+
+
+def mlp_param_specs(c: MlpCfg):
+    n = c.width
+    return [
+        ("w1", (c.d_in, n), "normal"), ("b1", (n,), "zeros"),
+        ("w2", (n, n), "normal"), ("b2", (n,), "zeros"),
+        ("w3", (n, c.d_out), "zeros"),
+    ]
+
+
+def mlp_fwd_bwd(c: MlpCfg, params, x, y, hp, want_grads=True):
+    """x (B, d_in) f32, y (B,) int32.  hp[0] = output scale."""
+    scale = np.asarray(hp[0], x.dtype)
+    tanh = c.act == "tanh"
+    u1 = x @ params["w1"] + params["b1"]
+    h1 = np.tanh(u1) if tanh else np.maximum(u1, np.asarray(0.0, u1.dtype))
+    u2 = h1 @ params["w2"] + params["b2"]
+    h2 = np.tanh(u2) if tanh else np.maximum(u2, np.asarray(0.0, u2.dtype))
+    logits = (h2 @ params["w3"]) * scale
+    if c.loss == "xent":
+        loss, dlogits = xent_fwd(logits, y)
+    else:  # mse vs one-hot, mean over B*d_out elements
+        onehot = np.zeros_like(logits)
+        np.put_along_axis(onehot, y[:, None], np.asarray(1.0, logits.dtype), axis=-1)
+        diff = logits - onehot
+        n = float(diff.size)
+        loss = float((diff.astype(np.float64) ** 2).sum() / n)
+        dlogits = diff * np.asarray(2.0 / n, diff.dtype)
+    if not want_grads:
+        return loss, None, {"logits": logits}
+    grads = {}
+    dlogits = dlogits * scale
+    grads["w3"] = h2.T @ dlogits
+    dh2 = dlogits @ params["w3"].T
+    du2 = dh2 * (1.0 - h2 * h2) if tanh else dh2 * (u2 > 0)
+    grads["w2"] = h1.T @ du2
+    grads["b2"] = du2.sum(axis=0)
+    dh1 = du2 @ params["w2"].T
+    du1 = dh1 * (1.0 - h1 * h1) if tanh else dh1 * (u1 > 0)
+    grads["w1"] = x.T @ du1
+    grads["b1"] = du1.sum(axis=0)
+    return loss, grads, {"logits": logits}
+
+
+class ResMlpCfg:
+    def __init__(self, d_in=256, width=128, n_block=4, d_out=10, batch=64):
+        self.d_in, self.width, self.n_block, self.d_out, self.batch = (
+            d_in, width, n_block, d_out, batch,
+        )
+
+
+def resmlp_param_specs(c: ResMlpCfg):
+    n = c.width
+    specs = [("w_in", (c.d_in, n), "normal")]
+    for i in range(c.n_block):
+        p = f"block{i}."
+        specs += [
+            (p + "ln_g", (n,), "ones"), (p + "ln_b", (n,), "zeros"),
+            (p + "w1", (n, n), "normal"), (p + "w2", (n, n), "normal"),
+        ]
+    specs += [("ln_f_g", (n,), "ones"), ("ln_f_b", (n,), "zeros"),
+              ("w_out", (n, c.d_out), "zeros")]
+    return specs
+
+
+def resmlp_fwd_bwd(c: ResMlpCfg, params, x, y, hp, want_grads=True):
+    scale = np.asarray(hp[0], x.dtype)
+    h = x @ params["w_in"]
+    caches = []
+    for i in range(c.n_block):
+        p = f"block{i}."
+        z, lnc = layernorm_fwd(h, params[p + "ln_g"], params[p + "ln_b"])
+        u = z @ params[p + "w1"]
+        r = np.maximum(u, np.asarray(0.0, u.dtype))
+        h = h + r @ params[p + "w2"]
+        caches.append((z, lnc, u, r))
+    hf, lnfc = layernorm_fwd(h, params["ln_f_g"], params["ln_f_b"])
+    logits = (hf @ params["w_out"]) * scale
+    loss, dlogits = xent_fwd(logits, y)
+    if not want_grads:
+        return loss, None, {"logits": logits}
+    grads = {k: np.zeros_like(v) for k, v in params.items()}
+    dlogits = dlogits * scale
+    grads["w_out"] += hf.T @ dlogits
+    dhf = dlogits @ params["w_out"].T
+    dh, dg, db = layernorm_bwd(dhf, params["ln_f_g"], lnfc)
+    grads["ln_f_g"] += dg
+    grads["ln_f_b"] += db
+    for i in reversed(range(c.n_block)):
+        p = f"block{i}."
+        z, lnc, u, r = caches[i]
+        grads[p + "w2"] += r.T @ dh
+        dr = dh @ params[p + "w2"].T
+        du = dr * (u > 0)
+        grads[p + "w1"] += z.T @ du
+        dz = du @ params[p + "w1"].T
+        d, dg, db = layernorm_bwd(dz, params[p + "ln_g"], lnc)
+        grads[p + "ln_g"] += dg
+        grads[p + "ln_b"] += db
+        dh = dh + d
+    grads["w_in"] += x.T @ dh
+    return loss, grads, {"logits": logits}

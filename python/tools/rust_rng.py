@@ -1,0 +1,167 @@
+"""Bit-exact Python port of rust/src/init/rng.rs (+ the data sources'
+batch streams) for fixture generation and test calibration.
+
+Keep in lockstep with the Rust side: splitmix64, xoshiro256++, Box-Muller
+gaussian with spare, zipf-by-CDF, `Rng::fork`, and the LmSource /
+VisionSource batch derivations.  Any drift here invalidates calibration
+numbers, not shipped tests — the Rust tests consume their own RNG — but
+bit-exactness is what makes numpy-side calibration trustworthy.
+"""
+
+from __future__ import annotations
+
+import math
+
+M64 = (1 << 64) - 1
+
+
+def splitmix64(x: int) -> int:
+    x = (x + 0x9E3779B97F4A7C15) & M64
+    z = x
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return (z ^ (z >> 31)) & M64
+
+
+def u64_to_unit(z: int) -> float:
+    return (z >> 11) * (1.0 / (1 << 53))
+
+
+def _rotl(x: int, k: int) -> int:
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Rng:
+    """xoshiro256++ seeded via splitmix64, like rust Rng::new."""
+
+    def __init__(self, seed: int):
+        s = []
+        x = seed & M64
+        for _ in range(4):
+            x = (x + 0x9E3779B97F4A7C15) & M64
+            s.append(splitmix64(x))
+        self.s = s
+        self.spare = None
+
+    def fork(self, stream: int) -> "Rng":
+        mix = splitmix64(self.s[0] ^ splitmix64((stream * 0x9E3779B97F4A7C15) & M64))
+        return Rng(mix)
+
+    def next_u64(self) -> int:
+        s = self.s
+        result = (_rotl((s[0] + s[3]) & M64, 23) + s[0]) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def uniform(self) -> float:
+        return u64_to_unit(self.next_u64())
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+    def gaussian(self) -> float:
+        if self.spare is not None:
+            z, self.spare = self.spare, None
+            return z
+        while True:
+            u1 = self.uniform()
+            u2 = self.uniform()
+            if u1 <= 2.2250738585072014e-308:
+                continue
+            r = math.sqrt(-2.0 * math.log(u1))
+            self.spare = r * math.sin(2.0 * math.pi * u2)
+            return r * math.cos(2.0 * math.pi * u2)
+
+    def gaussian_vec(self, n: int, std: float):
+        import numpy as np
+
+        return np.array([self.gaussian() * std for _ in range(n)], np.float32)
+
+    def zipf(self, n: int, cdf) -> int:
+        u = self.uniform() * cdf[n - 1]
+        import bisect
+
+        i = bisect.bisect_left(cdf, u)
+        return min(i, n - 1)
+
+
+def zipf_cdf(n: int, s: float):
+    acc = 0.0
+    out = []
+    for k in range(1, n + 1):
+        acc += 1.0 / (k**s)
+        out.append(acc)
+    return out
+
+
+# --- data sources (rust/src/data/{corpus,vision}.rs) -----------------------
+
+
+class LmSource:
+    def __init__(self, vocab, batch, seq, seed, copy_p=0.55, induct_p=0.2,
+                 zipf_s=1.1, a=5, b=3):
+        self.vocab, self.batch, self.seq, self.seed = vocab, batch, seq, seed
+        self.copy_p, self.induct_p, self.zipf_s, self.a, self.b = (
+            copy_p, induct_p, zipf_s, a, b)
+        self.cdf = zipf_cdf(vocab, zipf_s)
+
+    def batch_tokens(self, split_val: bool, step: int):
+        import numpy as np
+
+        stream = step * 2 + (1 if split_val else 0)
+        base = Rng(self.seed ^ 0xC0FFEE).fork(stream)
+        ln = self.seq + 1
+        rows = []
+        for row_i in range(self.batch):
+            rng = base.fork(row_i)
+            v = self.vocab
+            prev = rng.below(v)
+            out = [prev]
+            succ = [None] * v
+            for _ in range(1, ln):
+                u = rng.uniform()
+                if u < self.copy_p:
+                    nxt = (self.a * prev + self.b) % v
+                elif u < self.copy_p + self.induct_p:
+                    nxt = succ[prev] if succ[prev] is not None else rng.zipf(v, self.cdf)
+                else:
+                    nxt = rng.zipf(v, self.cdf)
+                succ[prev] = nxt
+                out.append(nxt)
+                prev = nxt
+            rows.append(out)
+        return np.array(rows, np.int32)
+
+
+class VisionSource:
+    def __init__(self, d_in, n_class, batch, seed, margin=2.5, noise=0.6,
+                 warp=0.5, geometry_seed=1234):
+        import numpy as np
+
+        self.d_in, self.n_class, self.batch, self.seed = d_in, n_class, batch, seed
+        self.noise, self.warp = noise, warp
+        g = Rng(geometry_seed)
+        scale = margin / math.sqrt(d_in)
+        self.means = [g.gaussian_vec(d_in, scale) for _ in range(n_class)]
+        self.warps = [g.gaussian_vec(d_in, 1.0 / math.sqrt(d_in)) for _ in range(n_class)]
+        self._np = np
+
+    def batch_xy(self, split_val: bool, step: int):
+        np = self._np
+        stream = step * 2 + (1 if split_val else 0)
+        rng = Rng(self.seed ^ 0xF00D).fork(stream)
+        xs, ys = [], []
+        for _ in range(self.batch):
+            c = rng.below(self.n_class)
+            ys.append(c)
+            z = rng.gaussian_vec(self.d_in, self.noise)
+            z2 = float((z.astype(np.float64) ** 2).sum() / self.d_in)
+            centered = z2 - self.noise * self.noise
+            xs.append(self.means[c] + z + np.float32(self.warp * centered) * self.warps[c])
+        return np.stack(xs), np.array(ys, np.int32)

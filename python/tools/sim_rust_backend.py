@@ -1,0 +1,416 @@
+"""Loop-level simulation of rust/src/runtime/native/ for pre-merge
+verification: transcribes the Rust implementation's exact flat-array
+indexing (transformer.rs / mlp.rs / tensor.rs) into Python and diffs the
+results against the independently-verified vectorized reference
+(native_ref.py).  A mismatch here means the Rust translation has an
+indexing/wiring bug; agreement means the Rust code computes the same
+function as the finite-difference-checked reference.
+
+Not part of the test suite — a development-time harness (slow, pure
+Python loops).  Run on tiny shapes:
+
+    python3 tools/sim_rust_backend.py
+"""
+
+from __future__ import annotations
+
+import math
+import sys
+
+import numpy as np
+
+sys.path.insert(0, __file__.rsplit("/", 2)[0] + "/tools")
+import native_ref as R  # noqa: E402
+
+F = np.float32
+
+
+# --- tensor.rs ---------------------------------------------------------
+
+
+def mm(a, b, m, k, n):
+    c = [F(0.0)] * (m * n)
+    for i in range(m):
+        for l in range(k):
+            av = a[i * k + l]
+            for j in range(n):
+                c[i * n + j] = F(c[i * n + j] + F(av * b[l * n + j]))
+    return c
+
+
+def mm_tn(a, b, k, m, n):
+    c = [F(0.0)] * (m * n)
+    for l in range(k):
+        for i in range(m):
+            av = a[l * m + i]
+            for j in range(n):
+                c[i * n + j] = F(c[i * n + j] + F(av * b[l * n + j]))
+    return c
+
+
+def mm_nt(a, b, m, k, n):
+    c = [F(0.0)] * (m * n)
+    for i in range(m):
+        for j in range(n):
+            acc = F(0.0)
+            for l in range(k):
+                acc = F(acc + F(a[i * k + l] * b[j * k + l]))
+            c[i * n + j] = acc
+    return c
+
+
+def layernorm(x, g, b, rows, d):
+    y = [F(0.0)] * (rows * d)
+    xhat = [F(0.0)] * (rows * d)
+    rstd = [F(0.0)] * rows
+    inv_d = F(1.0 / d)
+    for r in range(rows):
+        mu = F(0.0)
+        for j in range(d):
+            mu = F(mu + x[r * d + j])
+        mu = F(mu * inv_d)
+        var = F(0.0)
+        for j in range(d):
+            cc = F(x[r * d + j] - mu)
+            var = F(var + F(cc * cc))
+        var = F(var * inv_d)
+        rs = F(1.0 / math.sqrt(F(var + F(1e-5))))
+        rstd[r] = rs
+        for j in range(d):
+            h = F(F(x[r * d + j] - mu) * rs)
+            xhat[r * d + j] = h
+            y[r * d + j] = F(F(h * g[j]) + b[j])
+    return y, (xhat, rstd)
+
+
+def layernorm_bwd(dy, g, cache, rows, d, dg, db):
+    xhat, rstd = cache
+    dx = [F(0.0)] * (rows * d)
+    inv_d = F(1.0 / d)
+    for r in range(rows):
+        m1 = F(0.0)
+        m2 = F(0.0)
+        for j in range(d):
+            dxh = F(dy[r * d + j] * g[j])
+            m1 = F(m1 + dxh)
+            m2 = F(m2 + F(dxh * xhat[r * d + j]))
+            dg[j] = F(dg[j] + F(dy[r * d + j] * xhat[r * d + j]))
+            db[j] = F(db[j] + dy[r * d + j])
+        m1 = F(m1 * inv_d)
+        m2 = F(m2 * inv_d)
+        for j in range(d):
+            dxh = F(dy[r * d + j] * g[j])
+            dx[r * d + j] = F(rstd[r] * F(F(dxh - m1) - F(xhat[r * d + j] * m2)))
+    return dx
+
+
+def softmax_prefix(row, active):
+    m = max(row[:active])
+    s = F(0.0)
+    for j in range(active):
+        row[j] = F(math.exp(F(row[j] - m)))
+        s = F(s + row[j])
+    inv = F(1.0 / s)
+    for j in range(active):
+        row[j] = F(row[j] * inv)
+    for j in range(active, len(row)):
+        row[j] = F(0.0)
+
+
+def xent(logits, targets, n):
+    rows = len(targets)
+    d = [F(0.0)] * (rows * n)
+    inv_rows = F(1.0 / rows)
+    acc = 0.0
+    for r in range(rows):
+        lr = logits[r * n : (r + 1) * n]
+        m = max(lr)
+        s = F(0.0)
+        for v in lr:
+            s = F(s + F(math.exp(F(v - m))))
+        lse = F(m + F(math.log(s)))
+        acc += float(F(lse - lr[targets[r]]))
+        inv_sum = F(1.0 / s)
+        for j in range(n):
+            d[r * n + j] = F(F(F(math.exp(F(lr[j] - m))) * inv_sum) * inv_rows)
+        d[r * n + targets[r]] = F(d[r * n + targets[r]] - inv_rows)
+    return acc / rows, d
+
+
+# --- transformer.rs ----------------------------------------------------
+
+PB = 10
+LN1_G, LN1_B, WQ, WK, WV, WO, LN2_G, LN2_B, W1, W2 = range(10)
+
+
+class TfmSim:
+    def __init__(self, cfg: R.TfmCfg, flat_params):
+        self.cfg = cfg
+        self.params = flat_params  # list of python lists of F
+
+    def block(self, i, off):
+        return self.params[2 + i * PB + off]
+
+    def attn_fwd(self, i, h, scale, want_alog):
+        c = self.cfg
+        bsz, s, d, da, nh, dh = c.batch, c.seq, c.d_model, c.d_attn, c.n_head, c.d_head
+        rows = bsz * s
+        q = mm(h, self.block(i, WQ), rows, d, da)
+        k = mm(h, self.block(i, WK), rows, d, da)
+        v = mm(h, self.block(i, WV), rows, d, da)
+        prob = [F(0.0)] * (bsz * nh * s * s)
+        alog = [F(0.0)] * (bsz * nh * s * s) if want_alog else []
+        merged = [F(0.0)] * (rows * da)
+        for b in range(bsz):
+            for hh in range(nh):
+                head = hh * dh
+                for qi in range(s):
+                    qrow = q[(b * s + qi) * da + head : (b * s + qi) * da + head + dh]
+                    base = ((b * nh + hh) * s + qi) * s
+                    prow = prob[base : base + s]
+                    for kj in range(qi + 1):
+                        krow = k[(b * s + kj) * da + head : (b * s + kj) * da + head + dh]
+                        dot = F(0.0)
+                        for t in range(dh):
+                            dot = F(dot + F(F(qrow[t] * scale) * krow[t]))
+                        prow[kj] = dot
+                    if want_alog:
+                        alog[base : base + qi + 1] = prow[: qi + 1]
+                    softmax_prefix(prow, qi + 1)
+                    prob[base : base + s] = prow
+                    ctx = [F(0.0)] * dh
+                    for kj in range(qi + 1):
+                        p = prob[base + kj]
+                        vrow = v[(b * s + kj) * da + head : (b * s + kj) * da + head + dh]
+                        for t in range(dh):
+                            ctx[t] = F(ctx[t] + F(p * vrow[t]))
+                    mb = (b * s + qi) * da + head
+                    merged[mb : mb + dh] = ctx
+        out = mm(merged, self.block(i, WO), rows, da, d)
+        return out, alog, q, k, v, prob, merged
+
+    def attn_bwd(self, i, dout, scale, cache, grads):
+        c = self.cfg
+        bsz, s, d, da, nh, dh = c.batch, c.seq, c.d_model, c.d_attn, c.n_head, c.d_head
+        rows = bsz * s
+        gb = 2 + i * PB
+        q, k, v, prob, merged, attn_in = cache
+        axpy(grads[gb + WO], mm_tn(merged, dout, rows, da, d))
+        dmerged = mm_nt(dout, self.block(i, WO), rows, d, da)
+        dq = [F(0.0)] * (rows * da)
+        dk = [F(0.0)] * (rows * da)
+        dv = [F(0.0)] * (rows * da)
+        dprob = [F(0.0)] * s
+        for b in range(bsz):
+            for hh in range(nh):
+                head = hh * dh
+                for qi in range(s):
+                    dctx = dmerged[(b * s + qi) * da + head : (b * s + qi) * da + head + dh]
+                    base = ((b * nh + hh) * s + qi) * s
+                    sum_dp = F(0.0)
+                    for kj in range(qi + 1):
+                        vrow = v[(b * s + kj) * da + head : (b * s + kj) * da + head + dh]
+                        dot = F(0.0)
+                        for t in range(dh):
+                            dot = F(dot + F(dctx[t] * vrow[t]))
+                        dprob[kj] = dot
+                        sum_dp = F(sum_dp + F(dot * prob[base + kj]))
+                    qrow = q[(b * s + qi) * da + head : (b * s + qi) * da + head + dh]
+                    for kj in range(qi + 1):
+                        p = prob[base + kj]
+                        for t in range(dh):
+                            idx = (b * s + kj) * da + head + t
+                            dv[idx] = F(dv[idx] + F(p * dctx[t]))
+                        dmasked = F(p * F(dprob[kj] - sum_dp))
+                        if dmasked == 0.0:
+                            continue
+                        krow = k[(b * s + kj) * da + head : (b * s + kj) * da + head + dh]
+                        for t in range(dh):
+                            qidx = (b * s + qi) * da + head + t
+                            kidx = (b * s + kj) * da + head + t
+                            dq[qidx] = F(dq[qidx] + F(F(dmasked * krow[t]) * scale))
+                            dk[kidx] = F(dk[kidx] + F(F(dmasked * qrow[t]) * scale))
+        axpy(grads[gb + WQ], mm_tn(attn_in, dq, rows, d, da))
+        axpy(grads[gb + WK], mm_tn(attn_in, dk, rows, d, da))
+        axpy(grads[gb + WV], mm_tn(attn_in, dv, rows, d, da))
+        dh_ = mm_nt(dq, self.block(i, WQ), rows, da, d)
+        axpy(dh_, mm_nt(dk, self.block(i, WK), rows, da, d))
+        axpy(dh_, mm_nt(dv, self.block(i, WV), rows, da, d))
+        return dh_
+
+    def ffn_fwd(self, i, h):
+        c = self.cfg
+        rows = c.batch * c.seq
+        u = mm(h, self.block(i, W1), rows, c.d_model, c.d_ffn)
+        r = [x if x > 0.0 else F(0.0) for x in u]
+        f = mm(r, self.block(i, W2), rows, c.d_ffn, c.d_model)
+        return f, u, r
+
+    def ffn_bwd(self, i, df, u, r, ffn_in, grads):
+        c = self.cfg
+        rows = c.batch * c.seq
+        gb = 2 + i * PB
+        axpy(grads[gb + W2], mm_tn(r, df, rows, c.d_ffn, c.d_model))
+        dr = mm_nt(df, self.block(i, W2), rows, c.d_model, c.d_ffn)
+        du = [g if x > 0.0 else F(0.0) for g, x in zip(dr, u)]
+        axpy(grads[gb + W1], mm_tn(ffn_in, du, rows, c.d_model, c.d_ffn))
+        return mm_nt(du, self.block(i, W1), rows, c.d_ffn, c.d_model)
+
+    def forward_backward(self, tokens, hp):
+        c = self.cfg
+        bsz, s, d, v = c.batch, c.seq, c.d_model, c.vocab
+        rows = bsz * s
+        attn_scale, output_scale, embed_scale = F(hp[0]), F(hp[1]), F(hp[2])
+        pre = c.ln == "pre"
+        t_in, t_gt = [], []
+        for b in range(bsz):
+            for j in range(s):
+                t_in.append(tokens[b * (s + 1) + j])
+                t_gt.append(tokens[b * (s + 1) + j + 1])
+        embed, pos = self.params[0], self.params[1]
+        x = [F(0.0)] * (rows * d)
+        for r in range(rows):
+            tok = t_in[r]
+            p = (r % s) * d
+            for j in range(d):
+                x[r * d + j] = F(F(embed[tok * d + j] + pos[p + j]) * embed_scale)
+        x0 = list(x)
+        blocks = []
+        alog0 = None
+        for i in range(c.n_layer):
+            g1, b1 = self.block(i, LN1_G), self.block(i, LN1_B)
+            g2, b2 = self.block(i, LN2_G), self.block(i, LN2_B)
+            want_alog = i == 0
+            if pre:
+                h1, ln1 = layernorm(x, g1, b1, rows, d)
+                a, alog, q, k, vv, prob, merged = self.attn_fwd(i, h1, attn_scale, want_alog)
+                x1 = [F(xa + xb) for xa, xb in zip(x, a)]
+                h2, ln2 = layernorm(x1, g2, b2, rows, d)
+                f, u, rr = self.ffn_fwd(i, h2)
+                x = [F(xa + xb) for xa, xb in zip(x1, f)]
+                blocks.append(dict(attn_in=h1, q=q, k=k, v=vv, prob=prob, merged=merged,
+                                   ffn_in=h2, u=u, r=rr, ln1=ln1, ln2=ln2))
+            else:
+                a, alog, q, k, vv, prob, merged = self.attn_fwd(i, x, attn_scale, want_alog)
+                attn_in = x
+                y1 = [F(xa + xb) for xa, xb in zip(attn_in, a)]
+                x1, ln1 = layernorm(y1, g1, b1, rows, d)
+                f, u, rr = self.ffn_fwd(i, x1)
+                y2 = [F(xa + xb) for xa, xb in zip(x1, f)]
+                x, ln2 = layernorm(y2, g2, b2, rows, d)
+                blocks.append(dict(attn_in=attn_in, q=q, k=k, v=vv, prob=prob, merged=merged,
+                                   ffn_in=x1, u=u, r=rr, ln1=ln1, ln2=ln2))
+            if want_alog:
+                alog0 = alog
+        if pre:
+            li = 2 + c.n_layer * PB
+            xf, lnf = layernorm(x, self.params[li], self.params[li + 1], rows, d)
+        else:
+            xf, lnf = x, None
+        un = len(self.params) - 1
+        logits = mm(xf, self.params[un], rows, d, v)
+        logits = [F(l * output_scale) for l in logits]
+        loss, dlogits = xent(logits, t_gt, v)
+
+        grads = [[F(0.0)] * len(p) for p in self.params]
+        dlogits = [F(g * output_scale) for g in dlogits]
+        axpy(grads[un], mm_tn(xf, dlogits, rows, d, v))
+        dxf = mm_nt(dlogits, self.params[un], rows, v, d)
+        if pre:
+            li = 2 + c.n_layer * PB
+            dx = layernorm_bwd(dxf, self.params[li], lnf, rows, d, grads[li], grads[li + 1])
+        else:
+            dx = dxf
+        for i in reversed(range(c.n_layer)):
+            gb = 2 + i * PB
+            bl = blocks[i]
+            acache = (bl["q"], bl["k"], bl["v"], bl["prob"], bl["merged"], bl["attn_in"])
+            if pre:
+                dh2 = self.ffn_bwd(i, dx, bl["u"], bl["r"], bl["ffn_in"], grads)
+                dln2 = layernorm_bwd(dh2, self.block(i, LN2_G), bl["ln2"], rows, d,
+                                     grads[gb + LN2_G], grads[gb + LN2_B])
+                dx1 = list(dx)
+                axpy(dx1, dln2)
+                dh1 = self.attn_bwd(i, dx1, attn_scale, acache, grads)
+                dln1 = layernorm_bwd(dh1, self.block(i, LN1_G), bl["ln1"], rows, d,
+                                     grads[gb + LN1_G], grads[gb + LN1_B])
+                dx = list(dx1)
+                axpy(dx, dln1)
+            else:
+                dy2 = layernorm_bwd(dx, self.block(i, LN2_G), bl["ln2"], rows, d,
+                                    grads[gb + LN2_G], grads[gb + LN2_B])
+                dx1 = list(dy2)
+                axpy(dx1, self.ffn_bwd(i, dy2, bl["u"], bl["r"], bl["ffn_in"], grads))
+                dy1 = layernorm_bwd(dx1, self.block(i, LN1_G), bl["ln1"], rows, d,
+                                    grads[gb + LN1_G], grads[gb + LN1_B])
+                dx = list(dy1)
+                axpy(dx, self.attn_bwd(i, dy1, attn_scale, acache, grads))
+        for r in range(rows):
+            tok = t_in[r]
+            p = (r % s) * d
+            for j in range(d):
+                ds = F(dx[r * d + j] * embed_scale)
+                grads[0][tok * d + j] = F(grads[0][tok * d + j] + ds)
+                grads[1][p + j] = F(grads[1][p + j] + ds)
+        probes = dict(embed_out=x0, attn_logits_l0=alog0, block_out=xf, logits=logits)
+        return loss, grads, probes
+
+
+def axpy(dst, src):
+    for i in range(len(dst)):
+        dst[i] = F(dst[i] + src[i])
+
+
+# --- harness -----------------------------------------------------------
+
+
+def flat(a):
+    return [F(x) for x in np.asarray(a, F).reshape(-1)]
+
+
+def compare(tag, got, want, tol=2e-5):
+    got = np.array(got, np.float64)
+    want = np.asarray(want, np.float64).reshape(-1)
+    denom = np.maximum(1.0, np.maximum(np.abs(got), np.abs(want)))
+    rel = np.abs(got - want) / denom
+    worst = float(rel.max()) if rel.size else 0.0
+    status = "ok" if worst < tol else "FAIL"
+    print(f"  {tag:<18} worst rel {worst:.2e}  {status}")
+    return worst < tol
+
+
+def run_tfm(ln):
+    cfg = R.TfmCfg(vocab=13, seq=7, batch=3, d_model=8, n_layer=2,
+                   n_head=2, d_head=4, d_ffn=12, ln=ln)
+    specs = R.tfm_param_specs(cfg)
+    params_np = {name: R.det_fill(shape, 50 + i, 0.08, F) for i, (name, shape, _) in enumerate(specs)}
+    tokens_np = R.det_tokens(cfg.batch, cfg.seq + 1, cfg.vocab, 321)
+    hp = [0.31, 1.7, 0.9, 0.9, 0.999, 1e-8, 0.0, 1.0]
+    loss_ref, grads_ref, probes_ref = R.tfm_fwd_bwd(cfg, params_np, tokens_np, hp)
+
+    sim = TfmSim(cfg, [flat(params_np[name]) for name, _, _ in specs])
+    loss_sim, grads_sim, probes_sim = sim.forward_backward(
+        [int(t) for t in tokens_np.reshape(-1)], hp
+    )
+    print(f"transformer {ln}-ln: loss sim {loss_sim:.6f} ref {loss_ref:.6f}")
+    ok = abs(loss_sim - loss_ref) < 1e-5 * (1 + abs(loss_ref))
+    for key in ["embed_out", "attn_logits_l0", "block_out", "logits"]:
+        ok &= compare(f"probe {key}", probes_sim[key], probes_ref[key])
+    for i, (name, _, _) in enumerate(specs):
+        ok &= compare(f"grad {name}", grads_sim[i], grads_ref[name])
+    return ok
+
+
+def main():
+    ok = True
+    for ln in ["post", "pre"]:
+        ok &= run_tfm(ln)
+    if not ok:
+        print("SIMULATION MISMATCH", file=sys.stderr)
+        return 1
+    print("rust-structure simulation matches the verified reference")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,24 +1,31 @@
 //! # mutransfer — zero-shot hyperparameter transfer via μP
 //!
-//! A Rust + JAX + Pallas reproduction of *"Tensor Programs V: Tuning Large
-//! Neural Networks via Zero-Shot Hyperparameter Transfer"* (μTransfer).
+//! A Rust reproduction of *"Tensor Programs V: Tuning Large Neural
+//! Networks via Zero-Shot Hyperparameter Transfer"* (μTransfer).
 //!
 //! The stack has three layers (see DESIGN.md):
 //!
-//! 1. **Pallas kernels** (`python/compile/kernels/`) — matmul, fused 1/d
-//!    attention, layernorm, fused per-tensor-LR optimizer steps.
-//! 2. **JAX model graphs** (`python/compile/model.py`) — Transformer/MLP
-//!    train-eval-coord steps, AOT-lowered once to HLO text artifacts.
-//! 3. **This crate** — the coordinator: μP rule engine ([`mup`]), PJRT
-//!    runtime ([`runtime`]), data substrates ([`data`]), training driver
+//! 1. **μP rule engine** ([`mup`], [`model`], [`init`]) — the paper's
+//!    Tables 3/8/9 as an executable library: per-tensor init std, LR
+//!    scales, and graph multipliers relative to a base shape.
+//! 2. **Execution backends** ([`runtime`]) — a pluggable [`runtime::Backend`]
+//!    behind one [`runtime::TrainSession`] API.  The default **native**
+//!    backend runs the Transformer/MLP/ResMLP train-eval-coord steps in
+//!    pure Rust (forward, hand-derived backward, fused per-tensor-LR
+//!    Adam/SGD) with a built-in variant registry — hermetic on any box.
+//!    The optional `pjrt` cargo feature executes AOT-lowered HLO
+//!    artifacts (from `python/compile/aot.py`, JAX + Pallas kernels)
+//!    through XLA instead (requires the Cargo.toml edits described
+//!    there: uncomment the `xla` dep, set `pjrt = ["dep:xla"]`).
+//! 3. **The harness** — data substrates ([`data`]), training driver
 //!    ([`train`]), HP search ([`tuner`]), sweep scheduler ([`sweep`]),
 //!    μTransfer workflow ([`transfer`]), coordinate checking
 //!    ([`coordcheck`]), and the experiment harness ([`exp`]) that
 //!    regenerates every table and figure of the paper.
 //!
-//! Python never runs at run time: `make artifacts` is the only build-time
-//! Python entry point, after which the `mutransfer` binary is
-//! self-contained.
+//! Python never runs at run time, and by default never at build time
+//! either: `cargo test -q` exercises the whole verification story (golden
+//! trajectories, μP property tests, sweep resume) natively.
 
 pub mod config;
 pub mod coordcheck;

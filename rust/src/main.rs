@@ -1,13 +1,20 @@
-//! `mutransfer` — the L3 coordinator CLI.
+//! `mutransfer` — the coordinator CLI.
 //!
 //! Subcommands:
 //!   exp <id>            regenerate a paper table/figure (DESIGN.md §4)
 //!   train               one training run with explicit HPs
 //!   transfer            Algorithm 1 end-to-end (tune proxy → run target)
 //!   coord-check         verify a μP implementation (App. D.1)
-//!   list-artifacts      show compiled-artifact inventory
+//!   list-artifacts      show the variant inventory (built-in registry by
+//!                       default; artifacts manifest under the pjrt feature)
 //!
 //! Common flags: --artifacts DIR --results DIR --preset ci|paper|smoke
+//!
+//! Execution backend: native (pure Rust) unless the binary was built with
+//! the `pjrt` feature AND an artifacts manifest exists, in which case the
+//! AOT-lowered XLA path is used.  Enabling `pjrt` needs the two Cargo.toml
+//! edits described there (uncomment `xla`, set `pjrt = ["dep:xla"]`) —
+//! see rust/src/runtime/mod.rs and DESIGN.md §2.
 
 use anyhow::{bail, Context, Result};
 

@@ -1,0 +1,107 @@
+//! The execution-backend abstraction.
+//!
+//! Everything above the runtime (train, sweep, tuner, transfer,
+//! coordcheck, exp) composes *steps*: feed a batch plus per-tensor LRs and
+//! the hp_vec, get back a loss (and, for coord variants, probe tensors).
+//! A [`Backend`] supplies those steps for a manifest [`Variant`]:
+//!
+//! * [`crate::runtime::native`] — pure-Rust forward/backward/update, no
+//!   external dependencies, `Send`, the default;
+//! * `crate::runtime::pjrt` (behind the off-by-default `pjrt` cargo
+//!   feature) — compiles the AOT-lowered HLO artifacts through XLA.
+//!
+//! The calling convention mirrors `python/compile/model.py`:
+//!
+//! ```text
+//! train:  (data..., params[P], opt_state[S*P], lr_vec[P], hp_vec[8])
+//!         -> (loss, params'[P], opt_state'[S*P])
+//! eval:   (data..., params[P], hp_vec[8]) -> (loss,)
+//! coord:  train + probe tensors
+//! ```
+//!
+//! with the state resident inside the session between steps.
+
+use anyhow::Result;
+
+use super::manifest::{Manifest, Variant};
+
+/// A host-side batch (row-major values + shape).
+#[derive(Debug, Clone)]
+pub enum DataBatch {
+    I32(Vec<i32>, Vec<usize>),
+    F32(Vec<f32>, Vec<usize>),
+}
+
+impl DataBatch {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            DataBatch::I32(_, s) | DataBatch::F32(_, s) => s,
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            DataBatch::I32(v, _) => v.len(),
+            DataBatch::F32(v, _) => v.len(),
+        }
+    }
+}
+
+/// A probe tensor copied back to the host (coordinate checking, Fig. 5).
+#[derive(Debug, Clone)]
+pub struct Probe {
+    pub name: String,
+    pub data: Vec<f32>,
+}
+
+/// Hyperparameter inputs fed to the executable every step.
+#[derive(Debug, Clone)]
+pub struct StepInputs {
+    /// per-tensor effective LR (μP scale × master LR × schedule)
+    pub lr_vec: Vec<f32>,
+    /// slots 0..7 — see python/compile/model.py HP_* constants
+    pub hp_vec: [f32; 8],
+}
+
+/// An execution engine that can instantiate training sessions for
+/// manifest variants.  Object-safe so [`crate::runtime::Runtime`] can hold
+/// any backend behind one pointer.
+pub trait Backend {
+    /// Short identifier for logs/benches ("native", "pjrt").
+    fn name(&self) -> &'static str;
+
+    /// Create a session for `variant` from host-side initial parameters
+    /// (one `Vec<f32>` per tensor, manifest order; already validated
+    /// against the param specs).  Optimizer state starts at zero.  The
+    /// manifest is passed for backends that need sibling variants (the
+    /// PJRT backend resolves the `__eval` twin executable through it).
+    fn session(
+        &self,
+        manifest: &Manifest,
+        variant: &Variant,
+        init: Vec<Vec<f32>>,
+    ) -> Result<Box<dyn BackendSession>>;
+}
+
+/// One model being trained: owns params + optimizer state between steps.
+pub trait BackendSession {
+    /// One fused optimizer step; returns the loss *before* the update and,
+    /// when `want_probes` (coord variants only), the probe tensors in
+    /// `variant.probes` order.  `hp_vec` already carries the 1-based Adam
+    /// step counter in slot 7 — [`crate::runtime::TrainSession`] maintains
+    /// it so backends stay stateless about step indices.
+    fn step(
+        &mut self,
+        data: &[DataBatch],
+        lr_vec: &[f32],
+        hp_vec: &[f32; 8],
+        want_probes: bool,
+    ) -> Result<(f32, Vec<Probe>)>;
+
+    /// Forward-only loss on a batch with the current parameters.
+    fn eval(&self, data: &[DataBatch], hp_vec: &[f32; 8]) -> Result<f32>;
+
+    /// Copy a state tensor back to the host: indices `0..n_params` are the
+    /// parameters, followed by the optimizer-state blocks.
+    fn param(&self, idx: usize) -> Result<Vec<f32>>;
+}

@@ -1,82 +1,188 @@
-//! PJRT runtime: load AOT artifacts (HLO text), compile once per variant,
-//! and drive training/eval loops with host-resident state.
+//! Execution runtime: a [`Manifest`] of model variants plus a pluggable
+//! [`Backend`] that runs their train/eval/coord steps.
 //!
-//! Layering (DESIGN.md §1): Python lowers each model variant once at build
-//! time; at run time this module is the *only* code that talks to XLA.
-//! The tuner/sweep/experiment layers above deal purely in losses and HP
-//! assignments.
+//! Layering (DESIGN.md §1): the tuner/sweep/experiment layers above deal
+//! purely in losses and HP assignments; [`TrainSession`] is the only
+//! surface they drive.  Two backends implement it:
 //!
-//! State handling: PJRT (via the `xla` crate 0.1.6) returns a computation's
-//! outputs as a single tuple buffer, so params/opt-state round-trip through
-//! host `Literal`s each step (`decompose_tuple` is a move, the dominant
-//! cost is one memcpy each way).  On this CPU backend that is a few
-//! percent of step time at our sizes — measured in EXPERIMENTS.md §Perf —
-//! and it buys a dependency-free runtime.  Executables are cached per
-//! variant and shared by every trial in a sweep.
+//! * [`native`] (default) — pure-Rust forward/backward and fused
+//!   per-tensor-LR Adam/SGD updates executed directly from the manifest's
+//!   param specs.  No Python, no XLA, no artifacts directory: the variant
+//!   registry is built in ([`native::registry`]), so `Runtime::native()`
+//!   works on any box and the whole verification story (golden
+//!   trajectories, coordinate checks, sweeps) runs hermetically.  The
+//!   backend is `Send`, which is what lets the sweep scheduler scale past
+//!   one client.
+//! * `pjrt` (cargo feature `pjrt`, off by default) — loads AOT-lowered HLO
+//!   text artifacts produced by `python/compile/aot.py` and executes them
+//!   through XLA via the `xla` crate.  State round-trips through host
+//!   literals each step; executables are cached per variant and shared by
+//!   every trial in a sweep.
+//!
+//! [`Runtime::new`] prefers PJRT when it is compiled in *and* an artifacts
+//! manifest exists at the given path, and falls back to the native backend
+//! otherwise — so every caller (CLI, examples, benches, tests) is
+//! backend-agnostic.
 
+pub mod backend;
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 pub mod session;
 
+pub use backend::{Backend, BackendSession, DataBatch, Probe, StepInputs};
 pub use manifest::{Arch, Kind, Manifest, ParamInfo, Variant};
-pub use session::{DataBatch, TrainSession};
+pub use session::TrainSession;
 
-use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::Path;
-use std::rc::Rc;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
-/// Owns the PJRT client, the manifest, and the executable cache.
+/// Owns the manifest and the execution backend.
 pub struct Runtime {
-    client: xla::PjRtClient,
     manifest: Manifest,
-    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    backend: Box<dyn Backend>,
 }
 
 impl Runtime {
+    /// The hermetic default: pure-Rust execution over the built-in variant
+    /// registry (mirrors `python/compile/aot.py::build_registry`).
+    pub fn native() -> Runtime {
+        Runtime {
+            manifest: native::registry::builtin_manifest(),
+            backend: Box::new(native::NativeBackend),
+        }
+    }
+
+    /// Generic constructor: PJRT when compiled with the `pjrt` feature and
+    /// `artifacts_dir` holds a manifest; the native backend otherwise.
     pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        #[cfg(feature = "pjrt")]
+        {
+            if artifacts_dir.join("manifest.json").exists() {
+                return Runtime::pjrt(artifacts_dir);
+            }
+        }
+        let _ = artifacts_dir;
+        Ok(Runtime::native())
+    }
+
+    /// PJRT/XLA execution of the AOT artifacts in `artifacts_dir`.
+    #[cfg(feature = "pjrt")]
+    pub fn pjrt(artifacts_dir: &Path) -> Result<Runtime> {
         let manifest = Manifest::load(artifacts_dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let backend = pjrt::PjrtBackend::new()?;
         Ok(Runtime {
-            client,
             manifest,
-            cache: RefCell::new(HashMap::new()),
+            backend: Box::new(backend),
         })
+    }
+
+    /// Any manifest + any backend (tests, future remote executors).
+    pub fn with_backend(manifest: Manifest, backend: Box<dyn Backend>) -> Runtime {
+        Runtime { manifest, backend }
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    pub fn client(&self) -> &xla::PjRtClient {
-        &self.client
+    pub fn backend(&self) -> &dyn Backend {
+        self.backend.as_ref()
     }
+}
 
-    /// Compile (or fetch from cache) the executable for a variant.
-    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn native_runtime_has_builtin_variants() {
+        let rt = Runtime::native();
+        assert_eq!(rt.backend().name(), "native");
+        for name in [
+            "tfm_post_w32_d2",
+            "tfm_post_w32_d2__eval",
+            "tfm_post_w32_d2__coord",
+            "tfm_pre_w128_d2",
+            "mlp_w64",
+            "resmlp_w32",
+        ] {
+            assert!(rt.manifest().get(name).is_ok(), "{name} missing");
         }
-        let var = self.manifest.get(name)?;
-        let proto = xla::HloModuleProto::from_text_file(
-            var.hlo_path
-                .to_str()
-                .context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("loading HLO text for {name}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("PJRT compile of {name}"))?;
-        let exe = Rc::new(exe);
-        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
-        Ok(exe)
     }
 
-    /// Number of compiled executables currently cached (telemetry).
-    pub fn cache_size(&self) -> usize {
-        self.cache.borrow().len()
+    #[test]
+    fn new_falls_back_to_native_without_artifacts() {
+        let dir = std::env::temp_dir().join("mutransfer_no_artifacts_here");
+        let _ = std::fs::create_dir_all(&dir);
+        let rt = Runtime::new(&dir).unwrap();
+        assert!(rt.manifest().get("mlp_w64").is_ok());
+    }
+
+    /// Mock backend echoing hp_vec[7] as the loss: pins the Backend trait
+    /// contract — `with_backend` dispatch, init validation, and the
+    /// session-maintained 1-based Adam step counter.
+    struct MockBackend;
+    struct MockSession;
+
+    impl Backend for MockBackend {
+        fn name(&self) -> &'static str {
+            "mock"
+        }
+
+        fn session(
+            &self,
+            _manifest: &Manifest,
+            _variant: &Variant,
+            _init: Vec<Vec<f32>>,
+        ) -> Result<Box<dyn BackendSession>> {
+            Ok(Box::new(MockSession))
+        }
+    }
+
+    impl BackendSession for MockSession {
+        fn step(
+            &mut self,
+            _data: &[DataBatch],
+            _lr_vec: &[f32],
+            hp_vec: &[f32; 8],
+            _want_probes: bool,
+        ) -> Result<(f32, Vec<Probe>)> {
+            Ok((hp_vec[7], Vec::new()))
+        }
+
+        fn eval(&self, _data: &[DataBatch], _hp_vec: &[f32; 8]) -> Result<f32> {
+            Ok(0.5)
+        }
+
+        fn param(&self, _idx: usize) -> Result<Vec<f32>> {
+            Ok(Vec::new())
+        }
+    }
+
+    #[test]
+    fn with_backend_dispatches_and_session_drives_step_counter() {
+        let rt = Runtime::with_backend(
+            native::registry::builtin_manifest(),
+            Box::new(MockBackend),
+        );
+        assert_eq!(rt.backend().name(), "mock");
+        let v = rt.manifest().get("tfm_post_w32_d2").unwrap().clone();
+        let init: Vec<Vec<f32>> = v.params.iter().map(|p| vec![0.0; p.numel()]).collect();
+        let mut s = TrainSession::new(&rt, "tfm_post_w32_d2", init).unwrap();
+        let data = vec![DataBatch::I32(Vec::new(), Vec::new())];
+        let inputs = StepInputs {
+            lr_vec: vec![0.0; v.n_params()],
+            hp_vec: [0.0; 8],
+        };
+        // adam variant: the session must overwrite hp[7] with 1, 2, ...
+        assert_eq!(s.step(&data, &inputs).unwrap(), 1.0);
+        assert_eq!(s.step(&data, &inputs).unwrap(), 2.0);
+        assert_eq!(s.steps_done, 2);
+        assert_eq!(s.eval(&data, &inputs).unwrap(), 0.5);
+        // wrong init length must be rejected before reaching the backend
+        assert!(TrainSession::new(&rt, "tfm_post_w32_d2", Vec::new()).is_err());
     }
 }

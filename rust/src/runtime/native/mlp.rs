@@ -1,0 +1,346 @@
+//! Native MLP (Section 3 / Fig. 3) and residual MLP (Tab. 12 ResNet
+//! stand-in) with SGD+momentum — model.py `make_mlp_steps` /
+//! `make_resmlp_steps` mirrored from `python/tools/native_ref.py`
+//! (`mlp_fwd_bwd` / `resmlp_fwd_bwd`, finite-difference-verified).
+//!
+//! hp_vec slots (model.py HP_SGD_*): 0 output-logit multiplier,
+//! 1 momentum, 2 weight decay.
+
+use anyhow::{bail, Result};
+
+use crate::model::{MlpConfig, ResMlpConfig};
+use crate::runtime::backend::{BackendSession, DataBatch, Probe};
+use crate::runtime::manifest::{Arch, Variant};
+
+use super::optim::sgd_update;
+use super::tensor::{axpy, layernorm, layernorm_bwd, mm, mm_nt, mm_tn, xent};
+
+#[derive(Clone, Copy, PartialEq)]
+enum Act {
+    Relu,
+    Tanh,
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Loss {
+    Xent,
+    Mse,
+}
+
+enum Net {
+    Mlp { cfg: MlpConfig, act: Act, loss: Loss },
+    ResMlp { cfg: ResMlpConfig },
+}
+
+/// One SGD-family model: owns params + momentum buffers.
+pub struct SgdNetSession {
+    net: Net,
+    params: Vec<Vec<f32>>,
+    ms: Vec<Vec<f32>>,
+}
+
+impl SgdNetSession {
+    pub fn new(variant: &Variant, init: Vec<Vec<f32>>) -> Result<SgdNetSession> {
+        let net = match variant.arch {
+            Arch::Mlp => {
+                let act = match variant.config_str.get("act").map(|s| s.as_str()) {
+                    Some("tanh") => Act::Tanh,
+                    _ => Act::Relu,
+                };
+                let loss = match variant.config_str.get("loss").map(|s| s.as_str()) {
+                    Some("mse") => Loss::Mse,
+                    _ => Loss::Xent,
+                };
+                Net::Mlp {
+                    cfg: MlpConfig::from_variant(variant),
+                    act,
+                    loss,
+                }
+            }
+            Arch::ResMlp => Net::ResMlp {
+                cfg: ResMlpConfig::from_variant(variant),
+            },
+            Arch::Transformer => bail!("transformer handled by TfmSession"),
+        };
+        let ms = init.iter().map(|p| vec![0.0; p.len()]).collect();
+        Ok(SgdNetSession {
+            net,
+            params: init,
+            ms,
+        })
+    }
+
+    fn batch(&self, data: &[DataBatch]) -> Result<(Vec<f32>, Vec<usize>)> {
+        let (batch, d_in, d_out) = match &self.net {
+            Net::Mlp { cfg, .. } => (cfg.batch, cfg.d_in, cfg.d_out),
+            Net::ResMlp { cfg } => (cfg.batch, cfg.d_in, cfg.d_out),
+        };
+        match data {
+            [DataBatch::F32(x, xs), DataBatch::I32(y, ys)] => {
+                if x.len() != batch * d_in || xs != &[batch, d_in] {
+                    bail!("x shape {xs:?} != [{batch}, {d_in}]");
+                }
+                if y.len() != batch || ys != &[batch] {
+                    bail!("y shape {ys:?} != [{batch}]");
+                }
+                let mut targets = Vec::with_capacity(batch);
+                for &c in y {
+                    if c < 0 || c as usize >= d_out {
+                        bail!("class label {c} outside 0..{d_out}");
+                    }
+                    targets.push(c as usize);
+                }
+                Ok((x.clone(), targets))
+            }
+            _ => bail!("mlp/resmlp expect (f32 x, i32 y) data inputs"),
+        }
+    }
+
+    /// Forward (+ optionally backward).  Returns (loss, grads).
+    fn fwd_bwd(
+        &self,
+        x: &[f32],
+        y: &[usize],
+        hp: &[f32; 8],
+        want_grads: bool,
+    ) -> (f64, Option<Vec<Vec<f32>>>) {
+        match &self.net {
+            Net::Mlp { cfg, act, loss } => self.mlp_fwd_bwd(cfg, *act, *loss, x, y, hp, want_grads),
+            Net::ResMlp { cfg } => self.resmlp_fwd_bwd(cfg, x, y, hp, want_grads),
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn mlp_fwd_bwd(
+        &self,
+        cfg: &MlpConfig,
+        act: Act,
+        loss_kind: Loss,
+        x: &[f32],
+        y: &[usize],
+        hp: &[f32; 8],
+        want_grads: bool,
+    ) -> (f64, Option<Vec<Vec<f32>>>) {
+        let (b, n, c) = (cfg.batch, cfg.width, cfg.d_out);
+        let scale = hp[0];
+        // params: w1, b1, w2, b2, w3
+        let (w1, b1, w2, b2, w3) = (
+            &self.params[0],
+            &self.params[1],
+            &self.params[2],
+            &self.params[3],
+            &self.params[4],
+        );
+        let apply_act = |u: &[f32]| -> Vec<f32> {
+            match act {
+                Act::Relu => u.iter().map(|&v| if v > 0.0 { v } else { 0.0 }).collect(),
+                Act::Tanh => u.iter().map(|&v| v.tanh()).collect(),
+            }
+        };
+        let mut u1 = mm(x, w1, b, cfg.d_in, n);
+        for r in 0..b {
+            for j in 0..n {
+                u1[r * n + j] += b1[j];
+            }
+        }
+        let h1 = apply_act(&u1);
+        let mut u2 = mm(&h1, w2, b, n, n);
+        for r in 0..b {
+            for j in 0..n {
+                u2[r * n + j] += b2[j];
+            }
+        }
+        let h2 = apply_act(&u2);
+        let mut logits = mm(&h2, w3, b, n, c);
+        for l in logits.iter_mut() {
+            *l *= scale;
+        }
+        let (loss, mut dlogits) = match loss_kind {
+            Loss::Xent => xent(&logits, y, c),
+            Loss::Mse => {
+                // mean((logits - onehot)²) over all B·C elements
+                let nel = (b * c) as f32;
+                let mut acc = 0.0f64;
+                let mut d = vec![0.0f32; b * c];
+                for r in 0..b {
+                    for j in 0..c {
+                        let diff = logits[r * c + j] - if y[r] == j { 1.0 } else { 0.0 };
+                        acc += (diff as f64) * (diff as f64);
+                        d[r * c + j] = diff * (2.0 / nel);
+                    }
+                }
+                (acc / nel as f64, d)
+            }
+        };
+        if !want_grads {
+            return (loss, None);
+        }
+        for g in dlogits.iter_mut() {
+            *g *= scale;
+        }
+        let dact = |du: &mut Vec<f32>, u: &[f32], h: &[f32]| match act {
+            Act::Relu => {
+                for (g, &uv) in du.iter_mut().zip(u) {
+                    if uv <= 0.0 {
+                        *g = 0.0;
+                    }
+                }
+            }
+            Act::Tanh => {
+                for (g, &hv) in du.iter_mut().zip(h) {
+                    *g *= 1.0 - hv * hv;
+                }
+            }
+        };
+        let gw3 = mm_tn(&h2, &dlogits, b, n, c);
+        let mut du2 = mm_nt(&dlogits, w3, b, c, n);
+        dact(&mut du2, &u2, &h2);
+        let gw2 = mm_tn(&h1, &du2, b, n, n);
+        let gb2 = col_sum(&du2, b, n);
+        let mut du1 = mm_nt(&du2, w2, b, n, n);
+        dact(&mut du1, &u1, &h1);
+        let gw1 = mm_tn(x, &du1, b, cfg.d_in, n);
+        let gb1 = col_sum(&du1, b, n);
+        (loss, Some(vec![gw1, gb1, gw2, gb2, gw3]))
+    }
+
+    /// Residual-MLP block param: `params[1 + i*4 + off]`
+    /// (layout: w_in, [ln_g, ln_b, w1, w2] × n_block, ln_f_g, ln_f_b, w_out).
+    fn rblock(&self, i: usize, off: usize) -> &[f32] {
+        &self.params[1 + i * 4 + off]
+    }
+
+    fn resmlp_fwd_bwd(
+        &self,
+        cfg: &ResMlpConfig,
+        x: &[f32],
+        y: &[usize],
+        hp: &[f32; 8],
+        want_grads: bool,
+    ) -> (f64, Option<Vec<Vec<f32>>>) {
+        let (b, n, c, nb) = (cfg.batch, cfg.width, cfg.d_out, cfg.n_block);
+        let scale = hp[0];
+        let pb = 4;
+        let lnf_g = &self.params[1 + nb * pb];
+        let lnf_b = &self.params[1 + nb * pb + 1];
+        let w_out = &self.params[1 + nb * pb + 2];
+
+        let mut h = mm(x, &self.params[0], b, cfg.d_in, n);
+        let mut caches = Vec::with_capacity(nb);
+        for i in 0..nb {
+            let (z, lnc) = layernorm(&h, self.rblock(i, 0), self.rblock(i, 1), b, n);
+            let u = mm(&z, self.rblock(i, 2), b, n, n);
+            let r: Vec<f32> = u.iter().map(|&v| if v > 0.0 { v } else { 0.0 }).collect();
+            let f = mm(&r, self.rblock(i, 3), b, n, n);
+            axpy(&mut h, &f);
+            caches.push((z, lnc, u, r));
+        }
+        let (hf, lnfc) = layernorm(&h, lnf_g, lnf_b, b, n);
+        let mut logits = mm(&hf, w_out, b, n, c);
+        for l in logits.iter_mut() {
+            *l *= scale;
+        }
+        let (loss, mut dlogits) = xent(&logits, y, c);
+        if !want_grads {
+            return (loss, None);
+        }
+        let mut grads: Vec<Vec<f32>> = self.params.iter().map(|p| vec![0.0; p.len()]).collect();
+        for g in dlogits.iter_mut() {
+            *g *= scale;
+        }
+        let iw_out = 1 + nb * pb + 2;
+        axpy(&mut grads[iw_out], &mm_tn(&hf, &dlogits, b, n, c));
+        let dhf = mm_nt(&dlogits, w_out, b, c, n);
+        let mut dh = {
+            let (a, rest) = grads.split_at_mut(1 + nb * pb + 1);
+            layernorm_bwd(
+                &dhf,
+                lnf_g,
+                &lnfc,
+                b,
+                n,
+                a.last_mut().unwrap(),
+                &mut rest[0],
+            )
+        };
+        for i in (0..nb).rev() {
+            let (z, lnc, u, r) = &caches[i];
+            let gb = 1 + i * pb;
+            axpy(&mut grads[gb + 3], &mm_tn(r, &dh, b, n, n));
+            let dr = mm_nt(&dh, self.rblock(i, 3), b, n, n);
+            let du: Vec<f32> = dr
+                .iter()
+                .zip(u)
+                .map(|(&g, &uv)| if uv > 0.0 { g } else { 0.0 })
+                .collect();
+            axpy(&mut grads[gb + 2], &mm_tn(z, &du, b, n, n));
+            let dz = mm_nt(&du, self.rblock(i, 2), b, n, n);
+            let d = {
+                let (a, rest) = grads.split_at_mut(gb + 1);
+                layernorm_bwd(
+                    &dz,
+                    self.rblock(i, 0),
+                    lnc,
+                    b,
+                    n,
+                    a.last_mut().unwrap(),
+                    &mut rest[0],
+                )
+            };
+            axpy(&mut dh, &d);
+        }
+        axpy(&mut grads[0], &mm_tn(x, &dh, b, cfg.d_in, n));
+        (loss, Some(grads))
+    }
+}
+
+/// Column sums of a (rows, n) matrix — bias gradients.
+fn col_sum(m: &[f32], rows: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; n];
+    for r in 0..rows {
+        for j in 0..n {
+            out[j] += m[r * n + j];
+        }
+    }
+    out
+}
+
+impl BackendSession for SgdNetSession {
+    fn step(
+        &mut self,
+        data: &[DataBatch],
+        lr_vec: &[f32],
+        hp_vec: &[f32; 8],
+        _want_probes: bool,
+    ) -> Result<(f32, Vec<Probe>)> {
+        let (x, y) = self.batch(data)?;
+        let (loss, grads) = self.fwd_bwd(&x, &y, hp_vec, true);
+        let grads = grads.expect("train step computes grads");
+        let (momentum, wd) = (hp_vec[1], hp_vec[2]);
+        for i in 0..self.params.len() {
+            sgd_update(
+                &mut self.params[i],
+                &grads[i],
+                &mut self.ms[i],
+                lr_vec[i],
+                momentum,
+                wd,
+            );
+        }
+        Ok((loss as f32, Vec::new()))
+    }
+
+    fn eval(&self, data: &[DataBatch], hp_vec: &[f32; 8]) -> Result<f32> {
+        let (x, y) = self.batch(data)?;
+        Ok(self.fwd_bwd(&x, &y, hp_vec, false).0 as f32)
+    }
+
+    fn param(&self, idx: usize) -> Result<Vec<f32>> {
+        let p = self.params.len();
+        match idx / p {
+            0 => Ok(self.params[idx].clone()),
+            1 => Ok(self.ms[idx - p].clone()),
+            _ => bail!("state index {idx} out of range ({} tensors)", 2 * p),
+        }
+    }
+}

@@ -1,0 +1,121 @@
+//! Pure-Rust execution backend: the hermetic default.
+//!
+//! Runs the MLP and Transformer (and residual-MLP) train/eval/coord steps
+//! — forward, hand-derived reverse-mode backward, and the fused
+//! per-tensor-LR SGD/Adam update — directly from the manifest's param
+//! specs.  No XLA, no Python, no artifacts directory; the variant registry
+//! ([`registry`]) is compiled in.  Numerics mirror the JAX graphs through
+//! the finite-difference-verified numpy reference
+//! (`python/tools/native_ref.py`); the golden-trajectory fixture
+//! (`rust/tests/fixtures/goldens.json`) pins agreement to 1e-3 relative.
+//!
+//! Unlike the PJRT client, every concrete type here is `Send` (asserted
+//! in the tests below) — the prerequisite for the multi-threaded sweep
+//! workers called out in ROADMAP.md.  Note the `Box<dyn Backend>` /
+//! `Box<dyn BackendSession>` handles used by [`crate::runtime::Runtime`]
+//! erase that marker today; thread fan-out needs a `Send`-bounded handle
+//! on top of these types.
+
+pub mod mlp;
+pub mod optim;
+pub mod registry;
+pub mod tensor;
+pub mod transformer;
+
+use anyhow::Result;
+
+use super::backend::{Backend, BackendSession};
+use super::manifest::{Arch, Manifest, Variant};
+
+/// Stateless factory: all state lives in the per-variant sessions.
+pub struct NativeBackend;
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn session(
+        &self,
+        _manifest: &Manifest,
+        variant: &Variant,
+        init: Vec<Vec<f32>>,
+    ) -> Result<Box<dyn BackendSession>> {
+        Ok(match variant.arch {
+            Arch::Transformer => Box::new(transformer::TfmSession::new(variant, init)?),
+            Arch::Mlp | Arch::ResMlp => Box::new(mlp::SgdNetSession::new(variant, init)?),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::{DataBatch, StepInputs};
+    use crate::runtime::{Runtime, TrainSession};
+
+    fn zeros_init(variant: &Variant) -> Vec<Vec<f32>> {
+        variant
+            .params
+            .iter()
+            .map(|p| match p.init.as_str() {
+                "ones" => vec![1.0; p.numel()],
+                _ => vec![0.0; p.numel()],
+            })
+            .collect()
+    }
+
+    /// With all-zero weights the LM must emit uniform logits: loss ln(V),
+    /// exactly, on any token batch — a closed-form anchor with no RNG.
+    #[test]
+    fn zero_init_transformer_loss_is_log_vocab() {
+        let rt = Runtime::native();
+        let v = rt.manifest().get("tfm_post_w32_d2").unwrap().clone();
+        let mut s = TrainSession::new(&rt, "tfm_post_w32_d2", zeros_init(&v)).unwrap();
+        let b = v.config.req("batch");
+        let seq = v.config.req("seq");
+        let tokens: Vec<i32> = (0..b * (seq + 1)).map(|i| (i % 64) as i32).collect();
+        let data = vec![DataBatch::I32(tokens, vec![b, seq + 1])];
+        let inputs = StepInputs {
+            lr_vec: vec![0.0; v.n_params()],
+            hp_vec: [0.125, 1.0, 1.0, 0.9, 0.999, 1e-8, 0.0, 1.0],
+        };
+        let loss = s.step(&data, &inputs).unwrap() as f64;
+        assert!((loss - 64f64.ln()).abs() < 1e-5, "loss {loss}");
+        // zero LR: a second step sees identical params → identical loss
+        let loss2 = s.step(&data, &inputs).unwrap() as f64;
+        assert_eq!(loss, loss2);
+    }
+
+    /// Same anchor for the MLP (zero w3 → uniform softmax → ln(d_out)) and
+    /// its eval twin path.
+    #[test]
+    fn zero_init_mlp_loss_is_log_classes() {
+        let rt = Runtime::native();
+        let v = rt.manifest().get("mlp_w64").unwrap().clone();
+        let s = TrainSession::new(&rt, "mlp_w64", zeros_init(&v)).unwrap();
+        let b = v.config.req("batch");
+        let d = v.config.req("d_in");
+        let data = vec![
+            DataBatch::F32(vec![0.5; b * d], vec![b, d]),
+            DataBatch::I32((0..b).map(|i| (i % 10) as i32).collect(), vec![b]),
+        ];
+        let inputs = StepInputs {
+            lr_vec: vec![0.0; v.n_params()],
+            hp_vec: [1.0, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
+        };
+        let loss = s.eval(&data, &inputs).unwrap() as f64;
+        assert!((loss - 10f64.ln()).abs() < 1e-5, "loss {loss}");
+    }
+
+    /// Every concrete native type must be Send (the whole point vs the
+    /// PJRT client) — including the stateful sessions, not just the
+    /// field-less factory.
+    #[test]
+    fn native_backend_and_sessions_are_send() {
+        fn assert_send<T: Send>() {}
+        assert_send::<NativeBackend>();
+        assert_send::<transformer::TfmSession>();
+        assert_send::<mlp::SgdNetSession>();
+    }
+}

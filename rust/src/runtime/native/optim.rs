@@ -1,0 +1,81 @@
+//! Fused per-tensor-LR optimizer steps, mirroring the Pallas kernels'
+//! oracles (`python/compile/kernels/ref.py::{adam,sgd}_update_ref`)
+//! operation-for-operation so golden trajectories agree across backends.
+
+/// Adam with bias correction and decoupled weight decay; `t` is the
+/// 1-based step count (fed through hp_vec slot 7 by the session).
+#[allow(clippy::too_many_arguments)]
+pub fn adam_update(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    lr: f32,
+    beta1: f32,
+    beta2: f32,
+    eps: f32,
+    wd: f32,
+    t: f32,
+) {
+    let bc1 = 1.0 - beta1.powf(t);
+    let bc2 = 1.0 - beta2.powf(t);
+    for i in 0..p.len() {
+        m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
+        v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
+        let mhat = m[i] / bc1;
+        let vhat = v[i] / bc2;
+        p[i] = p[i] - lr * (mhat / (vhat.sqrt() + eps)) - lr * wd * p[i];
+    }
+}
+
+/// Heavy-ball SGD: m ← μ·m + g; p ← p − lr·(m + wd·p).
+pub fn sgd_update(p: &mut [f32], g: &[f32], m: &mut [f32], lr: f32, momentum: f32, wd: f32) {
+    for i in 0..p.len() {
+        m[i] = momentum * m[i] + g[i];
+        p[i] = p[i] - lr * (m[i] + wd * p[i]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sgd_matches_ref_formula() {
+        let mut p = vec![1.0f32, -2.0];
+        let g = vec![0.5f32, 0.25];
+        let mut m = vec![0.1f32, 0.0];
+        sgd_update(&mut p, &g, &mut m, 0.1, 0.9, 0.01);
+        // m = 0.9*0.1 + 0.5 = 0.59; p = 1 - 0.1*(0.59 + 0.01*1) = 0.94
+        assert!((m[0] - 0.59).abs() < 1e-6);
+        assert!((p[0] - 0.94).abs() < 1e-6);
+        assert!((m[1] - 0.25).abs() < 1e-6);
+        assert!((p[1] - (-2.0 - 0.1 * (0.25 - 0.02))).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adam_first_step_is_signed_lr() {
+        // with zero state, t=1: mhat = g, vhat = g² → update ≈ lr·sign(g)
+        let mut p = vec![0.0f32, 0.0];
+        let g = vec![0.3f32, -0.7];
+        let mut m = vec![0.0f32; 2];
+        let mut v = vec![0.0f32; 2];
+        adam_update(&mut p, &g, &mut m, &mut v, 0.01, 0.9, 0.999, 1e-8, 0.0, 1.0);
+        assert!((p[0] + 0.01).abs() < 1e-4, "{}", p[0]);
+        assert!((p[1] - 0.01).abs() < 1e-4, "{}", p[1]);
+    }
+
+    #[test]
+    fn adam_bias_correction_uses_step() {
+        let mut p1 = vec![0.0f32];
+        let mut m1 = vec![0.05f32];
+        let mut v1 = vec![0.01f32];
+        let mut p2 = p1.clone();
+        let mut m2 = m1.clone();
+        let mut v2 = v1.clone();
+        let g = vec![0.1f32];
+        adam_update(&mut p1, &g, &mut m1, &mut v1, 0.01, 0.9, 0.999, 1e-8, 0.0, 1.0);
+        adam_update(&mut p2, &g, &mut m2, &mut v2, 0.01, 0.9, 0.999, 1e-8, 0.0, 5.0);
+        assert!(p1[0] != p2[0], "step count must change the update");
+    }
+}

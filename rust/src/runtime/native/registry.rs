@@ -1,0 +1,340 @@
+//! Built-in variant registry: the Rust mirror of
+//! `python/compile/aot.py::build_registry`, so the native backend serves
+//! the exact same experiment surface (names, shapes, calling conventions)
+//! without any artifacts directory.
+//!
+//! Keep in lockstep with aot.py — `rust/tests/golden.rs` cross-checks the
+//! param layouts against `crate::model`'s spec builders for every entry,
+//! and (when a PJRT artifacts manifest is present) the two registries must
+//! agree name-for-name.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::model::{mlp_specs, resmlp_specs, transformer_specs, MlpConfig, ResMlpConfig, TfmConfig};
+use crate::runtime::manifest::{Arch, DataInput, Kind, Manifest, ModelConfig, Variant};
+
+/// Probe names emitted by coord variants (model.py order).
+pub const COORD_PROBES: [&str; 4] = ["embed_out", "attn_logits_l0", "block_out", "logits"];
+
+fn tfm_config_fields(c: &TfmConfig) -> (ModelConfig, BTreeMap<String, String>) {
+    let mut config = ModelConfig::default();
+    for (k, v) in [
+        ("vocab", c.vocab),
+        ("seq", c.seq),
+        ("batch", c.batch),
+        ("d_model", c.d_model),
+        ("n_layer", c.n_layer),
+        ("n_head", c.n_head),
+        ("d_head", c.d_head),
+        ("d_ffn", c.d_ffn),
+    ] {
+        config.fields.insert(k.to_string(), v as f64);
+    }
+    let mut s = BTreeMap::new();
+    s.insert("ln".into(), if c.pre_ln { "pre" } else { "post" }.into());
+    (config, s)
+}
+
+fn tfm_variant(name: &str, kind: Kind, c: &TfmConfig) -> Variant {
+    let (config, config_str) = tfm_config_fields(c);
+    Variant {
+        name: name.to_string(),
+        arch: Arch::Transformer,
+        kind,
+        opt: "adam".into(),
+        hlo_path: PathBuf::from(format!("builtin:{name}")),
+        config,
+        config_str,
+        data_inputs: vec![DataInput {
+            name: "tokens".into(),
+            dtype: "i32".into(),
+            shape: vec![c.batch, c.seq + 1],
+        }],
+        n_state: 2,
+        probes: if kind == Kind::Coord {
+            COORD_PROBES.iter().map(|s| s.to_string()).collect()
+        } else {
+            Vec::new()
+        },
+        params: transformer_specs(c),
+        golden: None,
+    }
+}
+
+fn mlp_variant(name: &str, kind: Kind, c: &MlpConfig, act: &str, loss: &str) -> Variant {
+    let mut config = ModelConfig::default();
+    for (k, v) in [
+        ("d_in", c.d_in),
+        ("width", c.width),
+        ("d_out", c.d_out),
+        ("batch", c.batch),
+    ] {
+        config.fields.insert(k.to_string(), v as f64);
+    }
+    let mut config_str = BTreeMap::new();
+    config_str.insert("act".into(), act.to_string());
+    config_str.insert("loss".into(), loss.to_string());
+    Variant {
+        name: name.to_string(),
+        arch: Arch::Mlp,
+        kind,
+        opt: "sgd".into(),
+        hlo_path: PathBuf::from(format!("builtin:{name}")),
+        config,
+        config_str,
+        data_inputs: vec![
+            DataInput {
+                name: "x".into(),
+                dtype: "f32".into(),
+                shape: vec![c.batch, c.d_in],
+            },
+            DataInput {
+                name: "y".into(),
+                dtype: "i32".into(),
+                shape: vec![c.batch],
+            },
+        ],
+        n_state: 1,
+        probes: Vec::new(),
+        params: mlp_specs(c),
+        golden: None,
+    }
+}
+
+fn resmlp_variant(name: &str, kind: Kind, c: &ResMlpConfig) -> Variant {
+    let mut config = ModelConfig::default();
+    for (k, v) in [
+        ("d_in", c.d_in),
+        ("width", c.width),
+        ("n_block", c.n_block),
+        ("d_out", c.d_out),
+        ("batch", c.batch),
+    ] {
+        config.fields.insert(k.to_string(), v as f64);
+    }
+    Variant {
+        name: name.to_string(),
+        arch: Arch::ResMlp,
+        kind,
+        opt: "sgd".into(),
+        hlo_path: PathBuf::from(format!("builtin:{name}")),
+        config,
+        config_str: BTreeMap::new(),
+        data_inputs: vec![
+            DataInput {
+                name: "x".into(),
+                dtype: "f32".into(),
+                shape: vec![c.batch, c.d_in],
+            },
+            DataInput {
+                name: "y".into(),
+                dtype: "i32".into(),
+                shape: vec![c.batch],
+            },
+        ],
+        n_state: 1,
+        probes: Vec::new(),
+        params: resmlp_specs(c),
+        golden: None,
+    }
+}
+
+/// Default transformer shape at width `w` (aot.py `tfm_dims`): n_head
+/// fixed at 4, d_head = w/4, d_ffn = 4·w.
+fn tfm_dims(w: usize, n_layer: usize, pre_ln: bool) -> TfmConfig {
+    TfmConfig {
+        vocab: 64,
+        seq: 32,
+        batch: 16,
+        d_model: w,
+        n_layer,
+        n_head: 4,
+        d_head: w / 4,
+        d_ffn: 4 * w,
+        pre_ln,
+    }
+}
+
+fn mlp_cfg(width: usize) -> MlpConfig {
+    MlpConfig {
+        d_in: 256,
+        width,
+        d_out: 10,
+        batch: 64,
+    }
+}
+
+/// The full artifact set of aot.py, natively (DESIGN.md §4's experiment
+/// index names these variants).
+pub fn builtin_manifest() -> Manifest {
+    let mut out: Vec<Variant> = Vec::new();
+    let mut tfm = |name: String, c: TfmConfig| {
+        out.push(tfm_variant(&name, Kind::Train, &c));
+        out.push(tfm_variant(&format!("{name}__eval"), Kind::Eval, &c));
+    };
+
+    // Post-LN width family (Fig. 1 / Fig. 5 / Fig. 7 / Tab. 4)
+    for w in [32, 64, 128, 256, 512] {
+        tfm(format!("tfm_post_w{w}_d2"), tfm_dims(w, 2, false));
+    }
+    // Pre-LN width family (Fig. 4 / Fig. 6 / Fig. 19 / Tab. 7 proxy)
+    for w in [32, 64, 128, 256, 512] {
+        tfm(format!("tfm_pre_w{w}_d2"), tfm_dims(w, 2, true));
+    }
+    // Depth family at w128 (Fig. 4 depth transfer; pre-LN only — §6.1)
+    for d in [4, 8] {
+        tfm(format!("tfm_pre_w128_d{d}"), tfm_dims(128, d, true));
+    }
+    // Sequence-length / batch-size transfer (Fig. 19)
+    for s in [16, 64] {
+        let mut c = tfm_dims(128, 2, true);
+        c.seq = s;
+        tfm(format!("tfm_pre_w128_d2_s{s}"), c);
+    }
+    for b in [8, 32] {
+        let mut c = tfm_dims(128, 2, true);
+        c.batch = b;
+        tfm(format!("tfm_pre_w128_d2_b{b}"), c);
+    }
+    // d_head ablation (Fig. 10): tiny d_head at fixed width
+    {
+        let mut c = tfm_dims(128, 2, true);
+        c.d_head = 4;
+        c.d_ffn = 512;
+        tfm("tfm_pre_w128_d2_hd4".to_string(), c);
+    }
+    // n_head-as-width family (Fig. 13): fix d_head = 16, scale n_head
+    for nh in [2, 4, 8, 16] {
+        let c = TfmConfig {
+            vocab: 64,
+            seq: 32,
+            batch: 16,
+            d_model: 16 * nh,
+            n_layer: 2,
+            n_head: nh,
+            d_head: 16,
+            d_ffn: 64 * nh,
+            pre_ln: true,
+        };
+        tfm(format!("tfm_pre_nh{nh}_hd16"), c);
+    }
+    // d_ffn-ratio family (Fig. 12): vary width ratio at fixed d_model
+    for f in [128, 256, 1024, 2048] {
+        let mut c = tfm_dims(128, 2, true);
+        c.d_head = 32;
+        c.d_ffn = f;
+        tfm(format!("tfm_pre_w128_d2_f{f}"), c);
+    }
+    // Tab. 6 (BERT-style) + Tab. 7 (GPT-3-style) targets
+    tfm("tfm_pre_w256_d4".to_string(), tfm_dims(256, 4, true));
+    tfm("tfm_pre_w512_d6".to_string(), tfm_dims(512, 6, true));
+    tfm("tfm_pre_w512_d4".to_string(), tfm_dims(512, 4, true));
+
+    // Coord variants: post family at every width + pre w128
+    for w in [32, 64, 128, 256, 512] {
+        out.push(tfm_variant(
+            &format!("tfm_post_w{w}_d2__coord"),
+            Kind::Coord,
+            &tfm_dims(w, 2, false),
+        ));
+    }
+    out.push(tfm_variant(
+        "tfm_pre_w128_d2__coord",
+        Kind::Coord,
+        &tfm_dims(128, 2, true),
+    ));
+
+    // MLP family (Fig. 3 / Fig. 9)
+    for w in [64, 128, 256, 512, 1024, 2048] {
+        let name = format!("mlp_w{w}");
+        out.push(mlp_variant(&name, Kind::Train, &mlp_cfg(w), "relu", "xent"));
+        out.push(mlp_variant(&format!("{name}__eval"), Kind::Eval, &mlp_cfg(w), "relu", "xent"));
+    }
+    for w in [64, 256, 1024] {
+        let name = format!("mlp_tanh_w{w}");
+        out.push(mlp_variant(&name, Kind::Train, &mlp_cfg(w), "tanh", "xent"));
+        out.push(mlp_variant(&format!("{name}__eval"), Kind::Eval, &mlp_cfg(w), "tanh", "xent"));
+        let name = format!("mlp_tanhmse_w{w}");
+        out.push(mlp_variant(&name, Kind::Train, &mlp_cfg(w), "tanh", "mse"));
+        out.push(mlp_variant(&format!("{name}__eval"), Kind::Eval, &mlp_cfg(w), "tanh", "mse"));
+    }
+
+    // ResMLP family (Tab. 12 ResNet substitute)
+    for w in [32, 64, 128, 256] {
+        let c = ResMlpConfig {
+            d_in: 256,
+            width: w,
+            n_block: 4,
+            d_out: 10,
+            batch: 64,
+        };
+        let name = format!("resmlp_w{w}");
+        out.push(resmlp_variant(&name, Kind::Train, &c));
+        out.push(resmlp_variant(&format!("{name}__eval"), Kind::Eval, &c));
+    }
+
+    let mut variants = BTreeMap::new();
+    for v in out {
+        let dup = variants.insert(v.name.clone(), v);
+        debug_assert!(dup.is_none(), "duplicate variant name");
+    }
+    Manifest {
+        dir: PathBuf::from("builtin"),
+        variants,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_mirrors_aot_counts() {
+        let m = builtin_manifest();
+        // aot.py: 2×(5 post + 5 pre + 2 depth + 2 seq + 2 batch + 1 hd4 +
+        // 4 nh + 4 ffn + 3 targets) train+eval pairs + 6 coord
+        let tfm_pairs = 5 + 5 + 2 + 2 + 2 + 1 + 4 + 4 + 3;
+        let mlp_pairs = 6 + 3 + 3;
+        let resmlp_pairs = 4;
+        assert_eq!(
+            m.variants.len(),
+            2 * (tfm_pairs + mlp_pairs + resmlp_pairs) + 6
+        );
+    }
+
+    #[test]
+    fn coord_variants_carry_probes() {
+        let m = builtin_manifest();
+        let c = m.get("tfm_post_w64_d2__coord").unwrap();
+        assert_eq!(c.kind, Kind::Coord);
+        assert_eq!(c.probes, COORD_PROBES.to_vec());
+        assert_eq!(m.get("tfm_post_w64_d2").unwrap().probes.len(), 0);
+    }
+
+    #[test]
+    fn calling_conventions_match_manifest_math() {
+        let m = builtin_manifest();
+        let t = m.get("tfm_post_w32_d2").unwrap();
+        assert_eq!(t.n_state, 2);
+        assert_eq!(t.data_inputs[0].shape, vec![16, 33]);
+        assert_eq!(t.n_outputs(), 1 + t.n_params() * 3);
+        let s = m.get("tfm_pre_w128_d2_s16").unwrap();
+        assert_eq!(s.config.req("seq"), 16);
+        assert_eq!(s.data_inputs[0].shape, vec![16, 17]);
+        let mlp = m.get("mlp_tanhmse_w256").unwrap();
+        assert_eq!(mlp.config_str.get("act").unwrap(), "tanh");
+        assert_eq!(mlp.config_str.get("loss").unwrap(), "mse");
+        assert_eq!(mlp.n_state, 1);
+    }
+
+    #[test]
+    fn flops_positive_for_all_variants() {
+        let m = builtin_manifest();
+        for name in m.names() {
+            let v = m.get(name).unwrap();
+            assert!(v.flops_per_step() > 0.0, "{name}");
+            assert!(v.total_numel() > 0, "{name}");
+        }
+    }
+}

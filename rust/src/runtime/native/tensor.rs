@@ -1,0 +1,307 @@
+//! Dense f32 primitives for the native backend.
+//!
+//! Row-major `Vec<f32>` throughout; shapes are tracked by the callers
+//! (model code), which keeps these kernels monomorphic and loop-shaped so
+//! the compiler can vectorize them.  Numerics mirror
+//! `python/compile/kernels/ref.py` (layernorm eps, stable softmax) — the
+//! golden-trajectory tests bound the drift against the numpy reference at
+//! 1e-3 relative over multi-step trajectories.
+
+pub const LN_EPS: f32 = 1e-5;
+
+/// c = a · b, a: (m, k), b: (k, n).
+pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    // No zero-skip shortcuts: 0·Inf/NaN must poison the output exactly as
+    // in the numpy reference, or diverged trials could report finite
+    // losses and the sweep's divergence detection would miss them.
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for (l, &av) in arow.iter().enumerate() {
+            let brow = &b[l * n..(l + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// c = aᵀ · b, a: (k, m), b: (k, n) — the weight-gradient contraction
+/// (xᵀ · dy summed over rows).
+pub fn mm_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    let mut c = vec![0.0f32; m * n];
+    for l in 0..k {
+        let arow = &a[l * m..(l + 1) * m];
+        let brow = &b[l * n..(l + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                crow[j] += av * brow[j];
+            }
+        }
+    }
+    c
+}
+
+/// c = a · bᵀ, a: (m, k), b: (n, k) — the input-gradient contraction
+/// (dy · Wᵀ).
+pub fn mm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut c = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let crow = &mut c[i * n..(i + 1) * n];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for l in 0..k {
+                acc += arow[l] * brow[l];
+            }
+            crow[j] = acc;
+        }
+    }
+    c
+}
+
+/// Accumulate `src` into `dst`.
+pub fn axpy(dst: &mut [f32], src: &[f32]) {
+    debug_assert_eq!(dst.len(), src.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d += s;
+    }
+}
+
+/// Elementwise sum of two tensors.
+pub fn add(a: &[f32], b: &[f32]) -> Vec<f32> {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(&x, &y)| x + y).collect()
+}
+
+/// Layernorm forward cache: normalized activations + reciprocal stds.
+pub struct LnCache {
+    pub xhat: Vec<f32>,
+    pub rstd: Vec<f32>,
+}
+
+/// y = (x - mean)/sqrt(var + eps) * g + b over each row of length `d`.
+pub fn layernorm(x: &[f32], g: &[f32], b: &[f32], rows: usize, d: usize) -> (Vec<f32>, LnCache) {
+    debug_assert_eq!(x.len(), rows * d);
+    let mut y = vec![0.0f32; rows * d];
+    let mut xhat = vec![0.0f32; rows * d];
+    let mut rstd = vec![0.0f32; rows];
+    let inv_d = 1.0 / d as f32;
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mut mu = 0.0f32;
+        for &v in xr {
+            mu += v;
+        }
+        mu *= inv_d;
+        let mut var = 0.0f32;
+        for &v in xr {
+            let c = v - mu;
+            var += c * c;
+        }
+        var *= inv_d;
+        let rs = 1.0 / (var + LN_EPS).sqrt();
+        rstd[r] = rs;
+        for j in 0..d {
+            let h = (xr[j] - mu) * rs;
+            xhat[r * d + j] = h;
+            y[r * d + j] = h * g[j] + b[j];
+        }
+    }
+    (y, LnCache { xhat, rstd })
+}
+
+/// Layernorm backward: returns dx; accumulates dg/db.
+pub fn layernorm_bwd(
+    dy: &[f32],
+    g: &[f32],
+    cache: &LnCache,
+    rows: usize,
+    d: usize,
+    dg: &mut [f32],
+    db: &mut [f32],
+) -> Vec<f32> {
+    debug_assert_eq!(dy.len(), rows * d);
+    let mut dx = vec![0.0f32; rows * d];
+    let inv_d = 1.0 / d as f32;
+    for r in 0..rows {
+        let dyr = &dy[r * d..(r + 1) * d];
+        let xh = &cache.xhat[r * d..(r + 1) * d];
+        let rs = cache.rstd[r];
+        let mut m1 = 0.0f32;
+        let mut m2 = 0.0f32;
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            m1 += dxh;
+            m2 += dxh * xh[j];
+            dg[j] += dyr[j] * xh[j];
+            db[j] += dyr[j];
+        }
+        m1 *= inv_d;
+        m2 *= inv_d;
+        for j in 0..d {
+            let dxh = dyr[j] * g[j];
+            dx[r * d + j] = rs * (dxh - m1 - xh[j] * m2);
+        }
+    }
+    dx
+}
+
+/// In-place stable softmax over the first `active` entries of `row`;
+/// entries `active..` are set to 0 (the causal-mask convention).
+pub fn softmax_prefix(row: &mut [f32], active: usize) {
+    let mut m = f32::NEG_INFINITY;
+    for &v in &row[..active] {
+        if v > m {
+            m = v;
+        }
+    }
+    let mut sum = 0.0f32;
+    for v in row[..active].iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row[..active].iter_mut() {
+        *v *= inv;
+    }
+    for v in row[active..].iter_mut() {
+        *v = 0.0;
+    }
+}
+
+/// Mean softmax-cross-entropy over `rows` rows of `n` logits; returns
+/// (loss, dlogits) where dlogits = (softmax - onehot)/rows, mirroring
+/// `native_ref.xent_fwd`.
+pub fn xent(logits: &[f32], targets: &[usize], n: usize) -> (f64, Vec<f32>) {
+    let rows = targets.len();
+    debug_assert_eq!(logits.len(), rows * n);
+    let mut d = vec![0.0f32; rows * n];
+    let inv_rows = 1.0 / rows as f32;
+    let mut acc = 0.0f64;
+    for r in 0..rows {
+        let lr = &logits[r * n..(r + 1) * n];
+        let mut m = f32::NEG_INFINITY;
+        for &v in lr {
+            if v > m {
+                m = v;
+            }
+        }
+        let mut sum = 0.0f32;
+        for &v in lr {
+            sum += (v - m).exp();
+        }
+        let lse = m + sum.ln();
+        acc += (lse - lr[targets[r]]) as f64;
+        let inv_sum = 1.0 / sum;
+        let dr = &mut d[r * n..(r + 1) * n];
+        for j in 0..n {
+            dr[j] = (lr[j] - m).exp() * inv_sum * inv_rows;
+        }
+        dr[targets[r]] -= inv_rows;
+    }
+    (acc / rows as f64, d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mm_small() {
+        // [[1,2],[3,4]] x [[5,6],[7,8]] = [[19,22],[43,50]]
+        let c = mm(&[1.0, 2.0, 3.0, 4.0], &[5.0, 6.0, 7.0, 8.0], 2, 2, 2);
+        assert_eq!(c, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn transposed_matmuls_agree_with_manual_transpose() {
+        let a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]; // (3, 2) or (2, 3)
+        let b = [1.0f32, -1.0, 0.5, 2.0, 1.5, -0.5];
+        // aᵀ·b with a as (3,2), b as (3,2): (2,2)
+        let at = [1.0f32, 3.0, 5.0, 2.0, 4.0, 6.0]; // (2,3) manual transpose
+        assert_eq!(mm_tn(&a, &b, 3, 2, 2), mm(&at, &b, 2, 3, 2));
+        // a·bᵀ with a as (3,2), b as (3,2): (3,3)
+        let bt = [1.0f32, 0.5, 1.5, -1.0, 2.0, -0.5]; // (2,3)
+        assert_eq!(mm_nt(&a, &b, 3, 2, 3), mm(&a, &bt, 3, 2, 3));
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = [1.0f32, 2.0, 3.0, 4.0, -2.0, 0.0, 2.0, 8.0];
+        let g = [1.0f32; 4];
+        let b = [0.0f32; 4];
+        let (y, _) = layernorm(&x, &g, &b, 2, 4);
+        for r in 0..2 {
+            let row = &y[r * 4..(r + 1) * 4];
+            let mu: f32 = row.iter().sum::<f32>() / 4.0;
+            let var: f32 = row.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / 4.0;
+            assert!(mu.abs() < 1e-5, "mean {mu}");
+            assert!((var - 1.0).abs() < 1e-3, "var {var}");
+        }
+    }
+
+    #[test]
+    fn layernorm_bwd_finite_difference() {
+        let x = [0.3f32, -1.2, 0.7, 2.1, 0.4, -0.8];
+        let g = [1.1f32, 0.9, 1.3];
+        let b = [0.1f32, -0.2, 0.0];
+        let dy = [0.5f32, -0.3, 0.8, 0.2, 0.7, -0.5];
+        let (_, cache) = layernorm(&x, &g, &b, 2, 3);
+        let mut dg = vec![0.0f32; 3];
+        let mut db = vec![0.0f32; 3];
+        let dx = layernorm_bwd(&dy, &g, &cache, 2, 3, &mut dg, &mut db);
+        let loss = |x: &[f32]| -> f64 {
+            let (y, _) = layernorm(x, &g, &b, 2, 3);
+            y.iter().zip(&dy).map(|(&a, &w)| (a * w) as f64).sum()
+        };
+        let mut xp = x;
+        for i in 0..x.len() {
+            let eps = 1e-3f32;
+            xp[i] = x[i] + eps;
+            let lp = loss(&xp);
+            xp[i] = x[i] - eps;
+            let lm = loss(&xp);
+            xp[i] = x[i];
+            let num = (lp - lm) / (2.0 * eps as f64);
+            assert!(
+                (num - dx[i] as f64).abs() < 2e-3,
+                "dx[{i}] analytic {} vs numeric {num}",
+                dx[i]
+            );
+        }
+    }
+
+    #[test]
+    fn softmax_prefix_masks_tail() {
+        let mut row = [1.0f32, 2.0, 3.0, 99.0];
+        softmax_prefix(&mut row, 3);
+        assert_eq!(row[3], 0.0);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(row[2] > row[1] && row[1] > row[0]);
+    }
+
+    #[test]
+    fn xent_uniform_logits() {
+        let logits = vec![0.0f32; 2 * 5];
+        let (loss, d) = xent(&logits, &[1, 3], 5);
+        assert!((loss - (5f64).ln()).abs() < 1e-6);
+        // gradient rows sum to zero
+        for r in 0..2 {
+            let s: f32 = d[r * 5..(r + 1) * 5].iter().sum();
+            assert!(s.abs() < 1e-6);
+        }
+        assert!(d[5 + 3] < 0.0 && d[5] > 0.0);
+    }
+}

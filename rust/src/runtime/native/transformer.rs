@@ -1,0 +1,576 @@
+//! Native decoder-only Transformer LM: forward, reverse-mode backward, and
+//! the fused per-tensor-LR Adam step (model.py `make_transformer_steps`).
+//!
+//! Line-by-line mirror of `python/tools/native_ref.py::tfm_fwd_bwd`, whose
+//! gradients are finite-difference-verified by `tools/check_grads.py` and
+//! whose trajectories anchor `rust/tests/fixtures/goldens.json`.  Pre- and
+//! post-layernorm residual wirings are both supported (Fig. 1 uses post,
+//! most transfer figures pre).
+//!
+//! hp_vec slots (model.py HP_*): 0 attn logit scale, 1 output-logit
+//! multiplier, 2 embedding multiplier, 3 β₁, 4 β₂, 5 ε, 6 weight decay,
+//! 7 one-based Adam step (maintained by the session).
+
+use anyhow::{bail, Result};
+
+use crate::model::TfmConfig;
+use crate::runtime::backend::{BackendSession, DataBatch, Probe};
+use crate::runtime::manifest::{Kind, Variant};
+
+use super::optim::adam_update;
+use super::tensor::{
+    add, axpy, layernorm, layernorm_bwd, mm, mm_nt, mm_tn, softmax_prefix, xent, LnCache,
+};
+
+/// Parameters per block in the manifest layout.
+const PB: usize = 10;
+/// Offsets inside a block.
+const LN1_G: usize = 0;
+const LN1_B: usize = 1;
+const WQ: usize = 2;
+const WK: usize = 3;
+const WV: usize = 4;
+const WO: usize = 5;
+const LN2_G: usize = 6;
+const LN2_B: usize = 7;
+const W1: usize = 8;
+const W2: usize = 9;
+
+pub struct TfmSession {
+    cfg: TfmConfig,
+    kind: Kind,
+    /// manifest order: embed, pos_embed, blocks, [lnf], unembed
+    params: Vec<Vec<f32>>,
+    /// Adam first/second moments, parallel to `params`
+    ms: Vec<Vec<f32>>,
+    vs: Vec<Vec<f32>>,
+}
+
+struct BlockCache {
+    /// attention input (x for post-LN, LN1(x) for pre-LN)
+    attn_in: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// (B*H*S, S) softmax probabilities (causal-masked rows)
+    prob: Vec<f32>,
+    merged: Vec<f32>,
+    /// FFN input (x1 for post-LN, LN2(x1) for pre-LN)
+    ffn_in: Vec<f32>,
+    u: Vec<f32>,
+    r: Vec<f32>,
+    ln1: LnCache,
+    ln2: LnCache,
+}
+
+struct Forward {
+    loss: f64,
+    /// dlogits already divided by row count (None for eval)
+    dlogits: Option<Vec<f32>>,
+    x0: Vec<f32>,
+    alog0: Vec<f32>,
+    xf: Vec<f32>,
+    logits: Vec<f32>,
+    blocks: Vec<BlockCache>,
+    lnf: Option<LnCache>,
+    t_in: Vec<usize>,
+}
+
+impl TfmSession {
+    pub fn new(variant: &Variant, init: Vec<Vec<f32>>) -> Result<TfmSession> {
+        let cfg = TfmConfig::from_variant(variant);
+        let expected = 2 + cfg.n_layer * PB + if cfg.pre_ln { 2 } else { 0 } + 1;
+        if init.len() != expected {
+            bail!(
+                "transformer layout mismatch: {} tensors, expected {expected}",
+                init.len()
+            );
+        }
+        let ms = init.iter().map(|p| vec![0.0; p.len()]).collect();
+        let vs = init.iter().map(|p| vec![0.0; p.len()]).collect();
+        Ok(TfmSession {
+            cfg,
+            kind: variant.kind,
+            params: init,
+            ms,
+            vs,
+        })
+    }
+
+    fn block(&self, i: usize, off: usize) -> &[f32] {
+        &self.params[2 + i * PB + off]
+    }
+
+    fn unembed_idx(&self) -> usize {
+        self.params.len() - 1
+    }
+
+    fn tokens(&self, data: &[DataBatch]) -> Result<Vec<i32>> {
+        let (c, want) = (&self.cfg, self.cfg.batch * (self.cfg.seq + 1));
+        match data {
+            [DataBatch::I32(v, shape)] => {
+                if v.len() != want || shape != &[c.batch, c.seq + 1] {
+                    bail!(
+                        "tokens shape {shape:?} != [{}, {}]",
+                        c.batch,
+                        c.seq + 1
+                    );
+                }
+                Ok(v.clone())
+            }
+            _ => bail!("transformer expects one i32 token batch"),
+        }
+    }
+
+    /// Causal attention sublayer.  Returns (out, attn_logit_probe, cache
+    /// pieces); `h` is (R, D).
+    #[allow(clippy::type_complexity)]
+    fn attn_fwd(
+        &self,
+        i: usize,
+        h: &[f32],
+        scale: f32,
+        want_alog: bool,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let c = &self.cfg;
+        let (bsz, s, d, da, nh, dh) = (c.batch, c.seq, c.d_model, c.d_attn(), c.n_head, c.d_head);
+        let rows = bsz * s;
+        let q = mm(h, self.block(i, WQ), rows, d, da);
+        let k = mm(h, self.block(i, WK), rows, d, da);
+        let v = mm(h, self.block(i, WV), rows, d, da);
+        let mut prob = vec![0.0f32; bsz * nh * s * s];
+        let mut alog = if want_alog {
+            vec![0.0f32; bsz * nh * s * s]
+        } else {
+            Vec::new()
+        };
+        let mut merged = vec![0.0f32; rows * da];
+        for b in 0..bsz {
+            for hh in 0..nh {
+                let head = hh * dh;
+                for qi in 0..s {
+                    let qrow = &q[(b * s + qi) * da + head..(b * s + qi) * da + head + dh];
+                    let prow =
+                        &mut prob[((b * nh + hh) * s + qi) * s..((b * nh + hh) * s + qi) * s + s];
+                    for kj in 0..=qi {
+                        let krow = &k[(b * s + kj) * da + head..(b * s + kj) * da + head + dh];
+                        let mut dot = 0.0f32;
+                        for t in 0..dh {
+                            dot += qrow[t] * scale * krow[t];
+                        }
+                        prow[kj] = dot;
+                    }
+                    if want_alog {
+                        let arow = &mut alog
+                            [((b * nh + hh) * s + qi) * s..((b * nh + hh) * s + qi) * s + s];
+                        arow[..=qi].copy_from_slice(&prow[..=qi]);
+                    }
+                    softmax_prefix(prow, qi + 1);
+                    let ctx =
+                        &mut merged[(b * s + qi) * da + head..(b * s + qi) * da + head + dh];
+                    for kj in 0..=qi {
+                        let p = prob[((b * nh + hh) * s + qi) * s + kj];
+                        let vrow = &v[(b * s + kj) * da + head..(b * s + kj) * da + head + dh];
+                        for t in 0..dh {
+                            ctx[t] += p * vrow[t];
+                        }
+                    }
+                }
+            }
+        }
+        let out = mm(&merged, self.block(i, WO), rows, da, d);
+        (out, alog, q, k, v, prob, merged)
+    }
+
+    /// Backward through the attention sublayer; returns d(attn_in) and
+    /// accumulates weight grads.
+    fn attn_bwd(
+        &self,
+        i: usize,
+        dout: &[f32],
+        scale: f32,
+        cache: &BlockCache,
+        grads: &mut [Vec<f32>],
+    ) -> Vec<f32> {
+        let c = &self.cfg;
+        let (bsz, s, d, da, nh, dh) = (c.batch, c.seq, c.d_model, c.d_attn(), c.n_head, c.d_head);
+        let rows = bsz * s;
+        let gb = 2 + i * PB;
+        axpy(&mut grads[gb + WO], &mm_tn(&cache.merged, dout, rows, da, d));
+        let dmerged = mm_nt(dout, self.block(i, WO), rows, d, da);
+        let mut dq = vec![0.0f32; rows * da];
+        let mut dk = vec![0.0f32; rows * da];
+        let mut dv = vec![0.0f32; rows * da];
+        let mut dprob = vec![0.0f32; s];
+        for b in 0..bsz {
+            for hh in 0..nh {
+                let head = hh * dh;
+                for qi in 0..s {
+                    let dctx = &dmerged[(b * s + qi) * da + head..(b * s + qi) * da + head + dh];
+                    let prow = &cache.prob
+                        [((b * nh + hh) * s + qi) * s..((b * nh + hh) * s + qi) * s + s];
+                    let mut sum_dp = 0.0f32;
+                    for kj in 0..=qi {
+                        let vrow =
+                            &cache.v[(b * s + kj) * da + head..(b * s + kj) * da + head + dh];
+                        let mut dot = 0.0f32;
+                        for t in 0..dh {
+                            dot += dctx[t] * vrow[t];
+                        }
+                        dprob[kj] = dot;
+                        sum_dp += dot * prow[kj];
+                    }
+                    let qrow =
+                        &cache.q[(b * s + qi) * da + head..(b * s + qi) * da + head + dh];
+                    let dqrow = &mut dq[(b * s + qi) * da + head..(b * s + qi) * da + head + dh];
+                    for kj in 0..=qi {
+                        let p = prow[kj];
+                        // dv += p · dctx
+                        let dvrow =
+                            &mut dv[(b * s + kj) * da + head..(b * s + kj) * da + head + dh];
+                        for t in 0..dh {
+                            dvrow[t] += p * dctx[t];
+                        }
+                        let dmasked = p * (dprob[kj] - sum_dp);
+                        if dmasked == 0.0 {
+                            continue;
+                        }
+                        let krow =
+                            &cache.k[(b * s + kj) * da + head..(b * s + kj) * da + head + dh];
+                        let dkrow =
+                            &mut dk[(b * s + kj) * da + head..(b * s + kj) * da + head + dh];
+                        for t in 0..dh {
+                            dqrow[t] += dmasked * krow[t] * scale;
+                            dkrow[t] += dmasked * qrow[t] * scale;
+                        }
+                    }
+                }
+            }
+        }
+        let h = &cache.attn_in;
+        axpy(&mut grads[gb + WQ], &mm_tn(h, &dq, rows, d, da));
+        axpy(&mut grads[gb + WK], &mm_tn(h, &dk, rows, d, da));
+        axpy(&mut grads[gb + WV], &mm_tn(h, &dv, rows, d, da));
+        let mut dh = mm_nt(&dq, self.block(i, WQ), rows, da, d);
+        axpy(&mut dh, &mm_nt(&dk, self.block(i, WK), rows, da, d));
+        axpy(&mut dh, &mm_nt(&dv, self.block(i, WV), rows, da, d));
+        dh
+    }
+
+    /// FFN sublayer forward: relu(h·w1)·w2.
+    fn ffn_fwd(&self, i: usize, h: &[f32]) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let c = &self.cfg;
+        let rows = c.batch * c.seq;
+        let u = mm(h, self.block(i, W1), rows, c.d_model, c.d_ffn);
+        let r: Vec<f32> = u.iter().map(|&x| if x > 0.0 { x } else { 0.0 }).collect();
+        let f = mm(&r, self.block(i, W2), rows, c.d_ffn, c.d_model);
+        (f, u, r)
+    }
+
+    fn ffn_bwd(
+        &self,
+        i: usize,
+        df: &[f32],
+        cache: &BlockCache,
+        grads: &mut [Vec<f32>],
+    ) -> Vec<f32> {
+        let c = &self.cfg;
+        let rows = c.batch * c.seq;
+        let gb = 2 + i * PB;
+        axpy(&mut grads[gb + W2], &mm_tn(&cache.r, df, rows, c.d_ffn, c.d_model));
+        let dr = mm_nt(df, self.block(i, W2), rows, c.d_model, c.d_ffn);
+        let du: Vec<f32> = dr
+            .iter()
+            .zip(&cache.u)
+            .map(|(&g, &x)| if x > 0.0 { g } else { 0.0 })
+            .collect();
+        axpy(&mut grads[gb + W1], &mm_tn(&cache.ffn_in, &du, rows, c.d_model, c.d_ffn));
+        mm_nt(&du, self.block(i, W1), rows, c.d_ffn, c.d_model)
+    }
+
+    /// Full forward pass; computes dlogits too unless eval-only.
+    fn forward(&self, tokens: &[i32], hp: &[f32; 8], eval_only: bool) -> Forward {
+        let c = &self.cfg;
+        let (bsz, s, d, v) = (c.batch, c.seq, c.d_model, c.vocab);
+        let rows = bsz * s;
+        let (attn_scale, output_scale, embed_scale) = (hp[0], hp[1], hp[2]);
+
+        let mut t_in = Vec::with_capacity(rows);
+        let mut t_gt = Vec::with_capacity(rows);
+        for b in 0..bsz {
+            for j in 0..s {
+                t_in.push(tokens[b * (s + 1) + j] as usize);
+                t_gt.push(tokens[b * (s + 1) + j + 1] as usize);
+            }
+        }
+
+        let embed = &self.params[0];
+        let pos = &self.params[1];
+        let mut x = vec![0.0f32; rows * d];
+        for r in 0..rows {
+            let tok = t_in[r];
+            let p = (r % s) * d;
+            for j in 0..d {
+                x[r * d + j] = (embed[tok * d + j] + pos[p + j]) * embed_scale;
+            }
+        }
+        let x0 = x.clone();
+
+        let mut blocks = Vec::with_capacity(c.n_layer);
+        let mut alog0 = Vec::new();
+        for i in 0..c.n_layer {
+            let g1 = self.block(i, LN1_G);
+            let b1 = self.block(i, LN1_B);
+            let g2 = self.block(i, LN2_G);
+            let b2 = self.block(i, LN2_B);
+            let want_alog = i == 0;
+            let cache = if c.pre_ln {
+                let (h1, ln1) = layernorm(&x, g1, b1, rows, d);
+                let (a, alog, q, k, vv, prob, merged) =
+                    self.attn_fwd(i, &h1, attn_scale, want_alog);
+                let x1 = add(&x, &a);
+                let (h2, ln2) = layernorm(&x1, g2, b2, rows, d);
+                let (f, u, rr) = self.ffn_fwd(i, &h2);
+                x = add(&x1, &f);
+                if want_alog {
+                    alog0 = alog;
+                }
+                BlockCache {
+                    attn_in: h1,
+                    q,
+                    k,
+                    v: vv,
+                    prob,
+                    merged,
+                    ffn_in: h2,
+                    u,
+                    r: rr,
+                    ln1,
+                    ln2,
+                }
+            } else {
+                let (a, alog, q, k, vv, prob, merged) = self.attn_fwd(i, &x, attn_scale, want_alog);
+                let attn_in = std::mem::take(&mut x);
+                let y1 = add(&attn_in, &a);
+                let (x1, ln1) = layernorm(&y1, g1, b1, rows, d);
+                let (f, u, rr) = self.ffn_fwd(i, &x1);
+                let y2 = add(&x1, &f);
+                let (x2, ln2) = layernorm(&y2, g2, b2, rows, d);
+                x = x2;
+                if want_alog {
+                    alog0 = alog;
+                }
+                BlockCache {
+                    attn_in,
+                    q,
+                    k,
+                    v: vv,
+                    prob,
+                    merged,
+                    ffn_in: x1,
+                    u,
+                    r: rr,
+                    ln1,
+                    ln2,
+                }
+            };
+            blocks.push(cache);
+        }
+
+        let (xf, lnf) = if c.pre_ln {
+            let li = 2 + c.n_layer * PB;
+            let (xf, cache) = layernorm(&x, &self.params[li], &self.params[li + 1], rows, d);
+            (xf, Some(cache))
+        } else {
+            (x, None)
+        };
+
+        let unembed = &self.params[self.unembed_idx()];
+        let mut logits = mm(&xf, unembed, rows, d, v);
+        for l in logits.iter_mut() {
+            *l *= output_scale;
+        }
+        let (loss, dlogits) = xent(&logits, &t_gt, v);
+        Forward {
+            loss,
+            dlogits: if eval_only { None } else { Some(dlogits) },
+            x0,
+            alog0,
+            xf,
+            logits,
+            blocks,
+            lnf,
+            t_in,
+        }
+    }
+
+    /// Reverse pass; returns per-tensor grads in manifest order.
+    fn backward(&self, fwd: &Forward, hp: &[f32; 8]) -> Vec<Vec<f32>> {
+        let c = &self.cfg;
+        let (bsz, s, d, v) = (c.batch, c.seq, c.d_model, c.vocab);
+        let rows = bsz * s;
+        let (attn_scale, output_scale, embed_scale) = (hp[0], hp[1], hp[2]);
+        let mut grads: Vec<Vec<f32>> = self.params.iter().map(|p| vec![0.0; p.len()]).collect();
+
+        let mut dlogits = fwd.dlogits.clone().expect("backward needs train forward");
+        for g in dlogits.iter_mut() {
+            *g *= output_scale;
+        }
+        let un = self.unembed_idx();
+        axpy(&mut grads[un], &mm_tn(&fwd.xf, &dlogits, rows, d, v));
+        let dxf = mm_nt(&dlogits, &self.params[un], rows, v, d);
+
+        let mut dx = if c.pre_ln {
+            let li = 2 + c.n_layer * PB;
+            let (g_slice, rest) = grads.split_at_mut(li + 1);
+            let dg = g_slice.last_mut().unwrap();
+            let db = &mut rest[0];
+            layernorm_bwd(
+                &dxf,
+                &self.params[li],
+                fwd.lnf.as_ref().unwrap(),
+                rows,
+                d,
+                dg,
+                db,
+            )
+        } else {
+            dxf
+        };
+
+        for i in (0..c.n_layer).rev() {
+            let gb = 2 + i * PB;
+            let cache = &fwd.blocks[i];
+            if c.pre_ln {
+                // x2 = x1 + FFN(LN2(x1)); x1 = x + attn(LN1(x))
+                let dh2 = self.ffn_bwd(i, &dx, cache, &mut grads);
+                let dln2 = {
+                    let (a, b) = grads.split_at_mut(gb + LN2_B);
+                    layernorm_bwd(
+                        &dh2,
+                        self.params[gb + LN2_G].as_slice(),
+                        &cache.ln2,
+                        rows,
+                        d,
+                        &mut a[gb + LN2_G],
+                        &mut b[0],
+                    )
+                };
+                let mut dx1 = dx;
+                axpy(&mut dx1, &dln2);
+                let dh1 = self.attn_bwd(i, &dx1, attn_scale, cache, &mut grads);
+                let dln1 = {
+                    let (a, b) = grads.split_at_mut(gb + LN1_B);
+                    layernorm_bwd(
+                        &dh1,
+                        self.params[gb + LN1_G].as_slice(),
+                        &cache.ln1,
+                        rows,
+                        d,
+                        &mut a[gb + LN1_G],
+                        &mut b[0],
+                    )
+                };
+                dx = dx1;
+                axpy(&mut dx, &dln1);
+            } else {
+                // x2 = LN2(x1 + FFN(x1)); x1 = LN1(x + attn(x))
+                let dy2 = {
+                    let (a, b) = grads.split_at_mut(gb + LN2_B);
+                    layernorm_bwd(
+                        &dx,
+                        self.params[gb + LN2_G].as_slice(),
+                        &cache.ln2,
+                        rows,
+                        d,
+                        &mut a[gb + LN2_G],
+                        &mut b[0],
+                    )
+                };
+                let mut dx1 = dy2.clone();
+                axpy(&mut dx1, &self.ffn_bwd(i, &dy2, cache, &mut grads));
+                let dy1 = {
+                    let (a, b) = grads.split_at_mut(gb + LN1_B);
+                    layernorm_bwd(
+                        &dx1,
+                        self.params[gb + LN1_G].as_slice(),
+                        &cache.ln1,
+                        rows,
+                        d,
+                        &mut a[gb + LN1_G],
+                        &mut b[0],
+                    )
+                };
+                dx = dy1.clone();
+                axpy(&mut dx, &self.attn_bwd(i, &dy1, attn_scale, cache, &mut grads));
+            }
+        }
+
+        // x0 = (embed[tokens] + pos) * embed_scale
+        for r in 0..rows {
+            let tok = fwd.t_in[r];
+            let p = (r % s) * d;
+            for j in 0..d {
+                let ds = dx[r * d + j] * embed_scale;
+                grads[0][tok * d + j] += ds;
+                grads[1][p + j] += ds;
+            }
+        }
+        grads
+    }
+}
+
+impl BackendSession for TfmSession {
+    fn step(
+        &mut self,
+        data: &[DataBatch],
+        lr_vec: &[f32],
+        hp_vec: &[f32; 8],
+        want_probes: bool,
+    ) -> Result<(f32, Vec<Probe>)> {
+        let tokens = self.tokens(data)?;
+        let fwd = self.forward(&tokens, hp_vec, false);
+        let probes = if want_probes && self.kind == Kind::Coord {
+            vec![
+                Probe { name: "embed_out".into(), data: fwd.x0.clone() },
+                Probe { name: "attn_logits_l0".into(), data: fwd.alog0.clone() },
+                Probe { name: "block_out".into(), data: fwd.xf.clone() },
+                Probe { name: "logits".into(), data: fwd.logits.clone() },
+            ]
+        } else {
+            Vec::new()
+        };
+        let grads = self.backward(&fwd, hp_vec);
+        let (b1, b2, eps, wd, t) = (hp_vec[3], hp_vec[4], hp_vec[5], hp_vec[6], hp_vec[7]);
+        for i in 0..self.params.len() {
+            adam_update(
+                &mut self.params[i],
+                &grads[i],
+                &mut self.ms[i],
+                &mut self.vs[i],
+                lr_vec[i],
+                b1,
+                b2,
+                eps,
+                wd,
+                t,
+            );
+        }
+        Ok((fwd.loss as f32, probes))
+    }
+
+    fn eval(&self, data: &[DataBatch], hp_vec: &[f32; 8]) -> Result<f32> {
+        let tokens = self.tokens(data)?;
+        Ok(self.forward(&tokens, hp_vec, true).loss as f32)
+    }
+
+    fn param(&self, idx: usize) -> Result<Vec<f32>> {
+        let p = self.params.len();
+        match idx / p {
+            0 => Ok(self.params[idx].clone()),
+            1 => Ok(self.ms[idx - p].clone()),
+            2 => Ok(self.vs[idx - 2 * p].clone()),
+            _ => bail!("state index {idx} out of range ({} tensors)", 3 * p),
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! PJRT/XLA backend (cargo feature `pjrt`, off by default): load AOT
+//! artifacts (HLO text) lowered by `python/compile/aot.py`, compile once
+//! per variant, and drive training/eval with host-resident state.
+//!
+//! Enabling this feature requires the `xla` crate (0.1.6): in Cargo.toml
+//! uncomment the dependency line AND change the feature to
+//! `pjrt = ["dep:xla"]`.  It is intentionally not resolved in default
+//! builds so the crate stays hermetic on machines without the XLA
+//! toolchain.
+//!
+//! State handling: PJRT (via the `xla` crate) returns a computation's
+//! outputs as a single tuple buffer, so params/opt-state round-trip
+//! through host `Literal`s each step (`decompose_tuple` is a move; the
+//! dominant cost is one memcpy each way).  On the CPU backend that is a
+//! few percent of step time at our sizes, and it buys a Python-free
+//! runtime.  Executables are cached per variant and shared by every trial
+//! in a sweep.  The PJRT client is not `Send`, which is why the sweep
+//! scheduler defaults to the native backend for multi-worker runs.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::backend::{Backend, BackendSession, DataBatch, Probe};
+use super::manifest::{Kind, Manifest, Variant};
+
+pub struct PjrtBackend {
+    client: xla::PjRtClient,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl PjrtBackend {
+    pub fn new() -> Result<PjrtBackend> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtBackend {
+            client,
+            cache: RefCell::new(HashMap::new()),
+        })
+    }
+
+    /// Compile (or fetch from cache) the executable for a variant.
+    pub fn executable(&self, variant: &Variant) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.cache.borrow().get(&variant.name) {
+            return Ok(e.clone());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            variant
+                .hlo_path
+                .to_str()
+                .context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("loading HLO text for {}", variant.name))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("PJRT compile of {}", variant.name))?;
+        let exe = Rc::new(exe);
+        self.cache
+            .borrow_mut()
+            .insert(variant.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Number of compiled executables currently cached (telemetry).
+    pub fn cache_size(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn session(
+        &self,
+        manifest: &Manifest,
+        variant: &Variant,
+        init: Vec<Vec<f32>>,
+    ) -> Result<Box<dyn BackendSession>> {
+        let exe = self.executable(variant)?;
+        // eval twin, if the registry shipped one (train variants do)
+        let eval_name = format!("{}__eval", variant.name.trim_end_matches("__coord"));
+        let eval_exe = manifest
+            .get(&eval_name)
+            .ok()
+            .and_then(|v| self.executable(v).ok());
+        let mut state = Vec::with_capacity(variant.n_params() * (1 + variant.n_state));
+        for (p, data) in variant.params.iter().zip(&init) {
+            state.push(to_lit_f32(data, &p.shape)?);
+        }
+        for _ in 0..variant.n_state {
+            for p in &variant.params {
+                state.push(to_lit_f32(&vec![0.0; p.numel()], &p.shape)?);
+            }
+        }
+        Ok(Box::new(PjrtSession {
+            variant: variant.clone(),
+            exe,
+            eval_exe,
+            state,
+        }))
+    }
+}
+
+struct PjrtSession {
+    variant: Variant,
+    exe: Rc<xla::PjRtLoadedExecutable>,
+    eval_exe: Option<Rc<xla::PjRtLoadedExecutable>>,
+    /// params followed by n_state moment blocks, each n_params literals
+    state: Vec<xla::Literal>,
+}
+
+impl BackendSession for PjrtSession {
+    fn step(
+        &mut self,
+        data: &[DataBatch],
+        lr_vec: &[f32],
+        hp_vec: &[f32; 8],
+        want_probes: bool,
+    ) -> Result<(f32, Vec<Probe>)> {
+        let p = self.variant.n_params();
+        let data_lits: Vec<xla::Literal> =
+            data.iter().map(to_literal).collect::<Result<_>>()?;
+        let lr_lit = to_lit_f32(lr_vec, &[p])?;
+        let hp_lit = to_lit_f32(hp_vec, &[8])?;
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(self.variant.n_inputs());
+        args.extend(data_lits.iter());
+        args.extend(self.state.iter());
+        args.push(&lr_lit);
+        args.push(&hp_lit);
+
+        let result = self.exe.execute::<&xla::Literal>(&args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        let mut outs = tuple.to_tuple()?;
+        if outs.len() != self.variant.n_outputs() {
+            bail!(
+                "executable returned {} outputs, manifest says {}",
+                outs.len(),
+                self.variant.n_outputs()
+            );
+        }
+        let probes = if want_probes {
+            let names = self.variant.probes.clone();
+            let tail = outs.split_off(outs.len() - names.len());
+            names
+                .into_iter()
+                .zip(tail)
+                .map(|(name, lit)| {
+                    Ok(Probe {
+                        name,
+                        data: lit.to_vec::<f32>()?,
+                    })
+                })
+                .collect::<Result<Vec<_>>>()?
+        } else if self.variant.kind == Kind::Coord {
+            outs.truncate(outs.len() - self.variant.probes.len());
+            Vec::new()
+        } else {
+            Vec::new()
+        };
+        let loss = outs[0].get_first_element::<f32>()?;
+        self.state = outs.split_off(1);
+        Ok((loss, probes))
+    }
+
+    fn eval(&self, data: &[DataBatch], hp_vec: &[f32; 8]) -> Result<f32> {
+        let exe = self
+            .eval_exe
+            .as_ref()
+            .context("no eval twin artifact for this variant")?;
+        let data_lits: Vec<xla::Literal> =
+            data.iter().map(to_literal).collect::<Result<_>>()?;
+        let hp_lit = to_lit_f32(hp_vec, &[8])?;
+        let mut args: Vec<&xla::Literal> = Vec::new();
+        args.extend(data_lits.iter());
+        args.extend(self.state.iter().take(self.variant.n_params()));
+        args.push(&hp_lit);
+        let result = exe.execute::<&xla::Literal>(&args)?;
+        let out = result[0][0].to_literal_sync()?.to_tuple1()?;
+        Ok(out.get_first_element::<f32>()?)
+    }
+
+    fn param(&self, idx: usize) -> Result<Vec<f32>> {
+        Ok(self.state[idx].to_vec::<f32>()?)
+    }
+}
+
+fn to_literal(d: &DataBatch) -> Result<xla::Literal> {
+    let lit = match d {
+        DataBatch::I32(v, shape) => {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(v.as_slice()).reshape(&dims)?
+        }
+        DataBatch::F32(v, shape) => {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            xla::Literal::vec1(v.as_slice()).reshape(&dims)?
+        }
+    };
+    Ok(lit)
+}
+
+fn to_lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(xla::Literal::vec1(data).reshape(&dims)?)
+}

@@ -1,57 +1,22 @@
-//! Training session: the hot path.  One session = one model being trained
-//! (one trial of a sweep, or the end-to-end example).
+//! Training session: the hot path, backend-agnostic.  One session = one
+//! model being trained (one trial of a sweep, or the end-to-end example).
+//!
+//! The session owns the cross-backend invariants — variant-kind checks,
+//! init validation against the param specs, the data-input arity check,
+//! and the 1-based Adam step counter in `hp_vec[7]` — so each
+//! [`crate::runtime::Backend`] implements only the math.
 
 use anyhow::{bail, Context, Result};
 
+use super::backend::BackendSession;
+pub use super::backend::{DataBatch, Probe, StepInputs};
 use super::manifest::{Kind, Variant};
 use super::Runtime;
-
-/// A host-side batch ready to become a PJRT literal.
-#[derive(Debug, Clone)]
-pub enum DataBatch {
-    I32(Vec<i32>, Vec<usize>),
-    F32(Vec<f32>, Vec<usize>),
-}
-
-impl DataBatch {
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = match self {
-            DataBatch::I32(v, shape) => {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(v.as_slice()).reshape(&dims)?
-            }
-            DataBatch::F32(v, shape) => {
-                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                xla::Literal::vec1(v.as_slice()).reshape(&dims)?
-            }
-        };
-        Ok(lit)
-    }
-}
-
-/// A probe tensor copied back to the host (coordinate checking).
-#[derive(Debug, Clone)]
-pub struct Probe {
-    pub name: String,
-    pub data: Vec<f32>,
-}
-
-/// Hyperparameter inputs fed to the executable every step.
-#[derive(Debug, Clone)]
-pub struct StepInputs {
-    /// per-tensor effective LR (μP scale × master LR × schedule)
-    pub lr_vec: Vec<f32>,
-    /// slots 0..7 — see python/compile/model.py HP_* constants
-    pub hp_vec: [f32; 8],
-}
 
 pub struct TrainSession<'rt> {
     rt: &'rt Runtime,
     pub variant: Variant,
-    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
-    eval_exe: Option<std::rc::Rc<xla::PjRtLoadedExecutable>>,
-    /// params followed by n_state moment blocks, each n_params literals
-    state: Vec<xla::Literal>,
+    inner: Box<dyn BackendSession>,
     /// number of optimizer steps taken (drives Adam bias correction)
     pub steps_done: usize,
 }
@@ -59,7 +24,11 @@ pub struct TrainSession<'rt> {
 impl<'rt> TrainSession<'rt> {
     /// Build a session from host-side initial parameters (one `Vec<f32>`
     /// per tensor, in manifest order).  Opt-state starts at zero.
-    pub fn new(rt: &'rt Runtime, variant_name: &str, init: Vec<Vec<f32>>) -> Result<TrainSession<'rt>> {
+    pub fn new(
+        rt: &'rt Runtime,
+        variant_name: &str,
+        init: Vec<Vec<f32>>,
+    ) -> Result<TrainSession<'rt>> {
         let variant = rt.manifest().get(variant_name)?.clone();
         if variant.kind == Kind::Eval {
             bail!("{variant_name} is an eval variant; use the train/coord one");
@@ -72,29 +41,21 @@ impl<'rt> TrainSession<'rt> {
                 variant.n_params()
             );
         }
-        let exe = rt.executable(variant_name)?;
-        // eval twin, if the registry shipped one (train variants do)
-        let eval_name = format!("{}__eval", variant.name.trim_end_matches("__coord"));
-        let eval_exe = rt.executable(&eval_name).ok();
-
-        let mut state = Vec::with_capacity(variant.n_params() * (1 + variant.n_state));
         for (p, data) in variant.params.iter().zip(&init) {
             if data.len() != p.numel() {
                 bail!("param {} expects {} elements, got {}", p.name, p.numel(), data.len());
             }
-            state.push(to_lit_f32(data, &p.shape)?);
         }
-        for _ in 0..variant.n_state {
-            for p in &variant.params {
-                state.push(to_lit_f32(&vec![0.0; p.numel()], &p.shape)?);
-            }
-        }
+        let inner = rt
+            .backend()
+            .session(rt.manifest(), &variant, init)
+            .with_context(|| {
+                format!("creating {} session for {variant_name}", rt.backend().name())
+            })?;
         Ok(TrainSession {
             rt,
             variant,
-            exe,
-            eval_exe,
-            state,
+            inner,
             steps_done: 0,
         })
     }
@@ -136,83 +97,25 @@ impl<'rt> TrainSession<'rt> {
         if self.variant.opt == "adam" {
             hp[7] = (self.steps_done + 1) as f32;
         }
-        let data_lits: Vec<xla::Literal> =
-            data.iter().map(|d| d.to_literal()).collect::<Result<_>>()?;
-        let lr_lit = to_lit_f32(&inputs.lr_vec, &[p])?;
-        let hp_lit = to_lit_f32(&hp, &[8])?;
-
-        let mut args: Vec<&xla::Literal> = Vec::with_capacity(self.variant.n_inputs());
-        args.extend(data_lits.iter());
-        args.extend(self.state.iter());
-        args.push(&lr_lit);
-        args.push(&hp_lit);
-
-        let result = self.exe.execute::<&xla::Literal>(&args)?;
-        let tuple = result[0][0].to_literal_sync()?;
-        let mut outs = tuple.to_tuple()?;
-        if outs.len() != self.variant.n_outputs() {
-            bail!(
-                "executable returned {} outputs, manifest says {}",
-                outs.len(),
-                self.variant.n_outputs()
-            );
-        }
-        let probes = if want_probes {
-            let names = self.variant.probes.clone();
-            let tail = outs.split_off(outs.len() - names.len());
-            names
-                .into_iter()
-                .zip(tail)
-                .map(|(name, lit)| {
-                    Ok(Probe {
-                        name,
-                        data: lit.to_vec::<f32>()?,
-                    })
-                })
-                .collect::<Result<Vec<_>>>()?
-        } else if self.variant.kind == Kind::Coord {
-            outs.truncate(outs.len() - self.variant.probes.len());
-            Vec::new()
-        } else {
-            Vec::new()
-        };
-        let loss = outs[0].get_first_element::<f32>()?;
-        self.state = outs.split_off(1);
+        let out = self.inner.step(data, &inputs.lr_vec, &hp, want_probes)?;
         self.steps_done += 1;
-        Ok((loss, probes))
+        Ok(out)
     }
 
-    /// Forward-only loss on a batch with the *current* parameters, via the
-    /// eval twin executable.  Borrows the resident param literals (no state
-    /// copy).
+    /// Forward-only loss on a batch with the *current* parameters.
     pub fn eval(&self, data: &[DataBatch], inputs: &StepInputs) -> Result<f32> {
-        let exe = self
-            .eval_exe
-            .as_ref()
-            .context("no eval twin artifact for this variant")?;
-        let data_lits: Vec<xla::Literal> =
-            data.iter().map(|d| d.to_literal()).collect::<Result<_>>()?;
-        let hp_lit = to_lit_f32(&inputs.hp_vec, &[8])?;
-        let mut args: Vec<&xla::Literal> = Vec::new();
-        args.extend(data_lits.iter());
-        args.extend(self.state.iter().take(self.variant.n_params()));
-        args.push(&hp_lit);
-        let result = exe.execute::<&xla::Literal>(&args)?;
-        let out = result[0][0].to_literal_sync()?.to_tuple1()?;
-        Ok(out.get_first_element::<f32>()?)
+        if data.len() != self.variant.data_inputs.len() {
+            bail!("expected {} data inputs", self.variant.data_inputs.len());
+        }
+        self.inner.eval(data, &inputs.hp_vec)
     }
 
     /// Copy a parameter tensor back to the host (diagnostics / checkpoints).
     pub fn param(&self, idx: usize) -> Result<Vec<f32>> {
-        Ok(self.state[idx].to_vec::<f32>()?)
+        self.inner.param(idx)
     }
 
     pub fn runtime(&self) -> &Runtime {
         self.rt
     }
-}
-
-fn to_lit_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
-    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-    Ok(xla::Literal::vec1(data).reshape(&dims)?)
 }

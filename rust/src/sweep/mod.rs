@@ -1,16 +1,20 @@
 //! Sweep scheduler: run a batch of training trials with journaling.
 //!
 //! A sweep = a list of [`crate::train::RunSpec`]-producing jobs executed
-//! through a shared [`crate::runtime::Runtime`] (executables cached across
-//! trials).  Results stream to a JSON-lines journal so an interrupted
-//! sweep resumes where it left off — the sweep is the "cluster scheduler"
-//! of the paper's benefit #4, scaled to one box.
+//! through a shared [`crate::runtime::Runtime`].  Results stream to a
+//! JSON-lines journal so an interrupted sweep resumes where it left off —
+//! the sweep is the "cluster scheduler" of the paper's benefit #4, scaled
+//! to one box.
 //!
-//! Note on parallelism: the PJRT client is not `Send` in the `xla` crate's
-//! wrapper, so concurrency is process-level in spirit; on this testbed a
-//! single worker saturates the core anyway (XLA CPU execution is already
-//! the bottleneck — measured in EXPERIMENTS.md §Perf).  The journal format
-//! is what makes multi-process scale-out trivial.
+//! Note on parallelism: the scheduler itself is sequential today.  The
+//! native backend's concrete types are all `Send` (unlike the PJRT
+//! client), which is the prerequisite for thread-fan-out via
+//! `util::pool` — but the current `Box<dyn Backend>`/`Box<dyn
+//! BackendSession>` handles erase that marker, so multi-worker sweeps
+//! additionally need a `Send`-bounded session handle (tracked in
+//! ROADMAP.md).  The journal format is what makes multi-process
+//! scale-out trivial either way, and resume is bit-exact
+//! (rust/tests/sweep_resume.rs).
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -70,17 +74,24 @@ impl JobResult {
         let mut assignment = Assignment::default();
         if let Json::Obj(m) = trial.get("assignment")? {
             for (k, v) in m {
-                assignment.values.insert(k.clone(), v.as_f64()?);
+                // null (a non-finite value) decodes to NaN like every other
+                // numeric field — dropping the record would re-run the job
+                assignment
+                    .values
+                    .insert(k.clone(), v.as_f64().unwrap_or(f64::NAN));
             }
         }
         Some(JobResult {
             key: j.get("key")?.as_str()?.to_string(),
             trial: Trial {
                 assignment,
+                // Non-finite f64s serialize as JSON null; every numeric
+                // field must decode null back to NaN (not drop the record)
+                // or a diverged job would silently re-run on resume.
                 val_loss: trial.get("val_loss")?.as_f64().unwrap_or(f64::NAN),
                 train_loss: trial.get("train_loss")?.as_f64().unwrap_or(f64::NAN),
                 diverged: trial.get("diverged")?.as_bool()?,
-                flops: trial.get("flops")?.as_f64()?,
+                flops: trial.get("flops")?.as_f64().unwrap_or(f64::NAN),
             },
             train_curve: j
                 .get("train_curve")?
@@ -97,7 +108,7 @@ impl JobResult {
                     Some((a[0].as_f64()? as usize, a[1].as_f64().unwrap_or(f64::NAN)))
                 })
                 .collect(),
-            wall_secs: j.get("wall_secs")?.as_f64()?,
+            wall_secs: j.get("wall_secs")?.as_f64().unwrap_or(f64::NAN),
         })
     }
 }
@@ -246,5 +257,36 @@ mod tests {
         let back = JobResult::from_json(&json::parse(&r.to_json().to_string()).unwrap()).unwrap();
         assert!(back.trial.diverged);
         assert!(back.trial.val_loss.is_nan()); // null -> NaN
+    }
+
+    #[test]
+    fn nan_flops_and_wall_secs_do_not_drop_the_record() {
+        // Regression: flops/wall_secs used `?` on null while the losses
+        // used unwrap_or(NAN), so a record with NaN flops deserialized to
+        // None and the journal silently dropped it on resume.
+        let mut assignment = Assignment::single("lr", 0.1);
+        assignment.values.insert("sigma".into(), f64::NAN);
+        let r = JobResult {
+            key: "k3".into(),
+            trial: Trial {
+                assignment,
+                val_loss: f64::NAN,
+                train_loss: f64::NAN,
+                diverged: true,
+                flops: f64::NAN,
+            },
+            train_curve: vec![10.0, f64::NAN],
+            val_curve: vec![],
+            wall_secs: f64::NAN,
+        };
+        let back = JobResult::from_json(&json::parse(&r.to_json().to_string()).unwrap())
+            .expect("NaN flops must still round-trip");
+        assert_eq!(back.key, "k3");
+        assert!(back.trial.flops.is_nan());
+        assert!(back.wall_secs.is_nan());
+        assert_eq!(back.trial.assignment.values["lr"], 0.1);
+        assert!(back.trial.assignment.values["sigma"].is_nan());
+        assert_eq!(back.train_curve[0], 10.0);
+        assert!(back.train_curve[1].is_nan());
     }
 }

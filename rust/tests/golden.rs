@@ -1,100 +1,141 @@
-//! Cross-language golden tests: the Python build path recorded, for two
-//! tiny variants, the loss of two train steps from deterministically
-//! filled params/inputs (compile/aot.py::compute_golden).  Here we
-//! replicate the exact same inputs through the Rust runtime and assert
-//! the PJRT-executed losses match — the strongest end-to-end signal that
-//! manifest layout, literal marshalling, and the executable all agree.
+//! Cross-language golden-trajectory tests, hermetic.
+//!
+//! `python/tools/gen_goldens.py` recorded, for two tiny variants, the
+//! losses of several train steps from deterministically filled
+//! params/inputs through the numpy reference implementation (whose
+//! gradients are finite-difference-verified by
+//! `python/tools/check_grads.py`).  Here we replicate exactly the same
+//! inputs through the native backend and assert the losses match within
+//! 1e-3 relative — the strongest end-to-end signal that the manifest
+//! layout, forward, backward, and fused optimizer all agree across
+//! languages.  No Python, XLA, or artifacts directory is needed at test
+//! time: the fixture is checked in.
 
 use mutransfer::init::rng::{det_fill, det_tokens};
 use mutransfer::runtime::session::StepInputs;
-use mutransfer::runtime::{Kind, Runtime, TrainSession};
+use mutransfer::runtime::{Arch, DataBatch, Kind, Runtime, TrainSession};
+use mutransfer::util::json::{self, Json};
 
-fn runtime() -> Option<Runtime> {
-    let dir = mutransfer::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: no artifacts at {dir:?} (run `make artifacts`)");
-        return None;
-    }
-    Some(Runtime::new(&dir).expect("runtime"))
+fn fixture() -> Json {
+    let path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/fixtures/goldens.json"
+    );
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("reading fixture {path}: {e}"));
+    json::parse(&text).expect("fixture parses")
 }
 
-fn golden_check(rt: &Runtime, name: &str) {
-    let variant = rt.manifest().get(name).unwrap().clone();
-    let golden = variant
-        .golden
+fn entry(name: &str) -> Json {
+    fixture()
+        .req("entries")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .find(|e| e.req("name").as_str() == Some(name))
+        .unwrap_or_else(|| panic!("no fixture entry for {name}"))
         .clone()
-        .unwrap_or_else(|| panic!("{name} carries no golden"));
-    let seed = golden.seed;
+}
+
+fn golden_check(name: &str) {
+    let rt = Runtime::native();
+    let e = entry(name);
+    let seed = e.req("seed").as_f64().unwrap() as u64;
+    let lr = e.req("lr").as_f64().unwrap() as f32;
+    let scale = e.req("scale").as_f64().unwrap() as f32;
+    let mut hp_vec = [0f32; 8];
+    for (i, h) in e.req("hp").as_arr().unwrap().iter().enumerate() {
+        hp_vec[i] = h.as_f64().unwrap() as f32;
+    }
+    let losses: Vec<f64> = e
+        .req("losses")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|l| l.as_f64().unwrap())
+        .collect();
+    assert!(losses.len() >= 4, "{name}: fixture should pin a trajectory");
+
+    let variant = rt.manifest().get(name).unwrap().clone();
+    // the golden protocol det-fills every tensor, including zeros/ones specs
     let init: Vec<Vec<f32>> = variant
         .params
         .iter()
         .enumerate()
-        .map(|(i, p)| det_fill(p.numel(), seed + i as u64, 0.02))
+        .map(|(i, p)| det_fill(p.numel(), seed + i as u64, scale))
         .collect();
-    let mut session = TrainSession::new(rt, name, init).unwrap();
-    let p = variant.n_params();
-    let lr = golden.lr as f32;
-    let (data, hp_vec): (Vec<mutransfer::runtime::DataBatch>, [f32; 8]) =
-        if variant.arch == mutransfer::runtime::Arch::Transformer {
-            let b = variant.config.req("batch");
-            let s = variant.config.req("seq");
-            let v = variant.config.req("vocab");
-            (
-                vec![mutransfer::runtime::DataBatch::I32(
-                    det_tokens(b * (s + 1), v as u32, seed + 100),
-                    vec![b, s + 1],
-                )],
-                [0.125, 1.0, 1.0, 0.9, 0.999, 1e-8, 0.0, 1.0],
-            )
-        } else {
-            let b = variant.config.req("batch");
-            let d = variant.config.req("d_in");
-            let c = variant.config.req("d_out");
-            (
-                vec![
-                    mutransfer::runtime::DataBatch::F32(
-                        det_fill(b * d, seed + 100, 1.0),
-                        vec![b, d],
-                    ),
-                    mutransfer::runtime::DataBatch::I32(
-                        det_tokens(b, c as u32, seed + 200),
-                        vec![b],
-                    ),
-                ],
-                [1.0, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
-            )
-        };
+    let mut session = TrainSession::new(&rt, name, init).unwrap();
+    let data: Vec<DataBatch> = if variant.arch == Arch::Transformer {
+        let b = variant.config.req("batch");
+        let s = variant.config.req("seq");
+        let v = variant.config.req("vocab");
+        vec![DataBatch::I32(
+            det_tokens(b * (s + 1), v as u32, seed + 100),
+            vec![b, s + 1],
+        )]
+    } else {
+        let b = variant.config.req("batch");
+        let d = variant.config.req("d_in");
+        let c = variant.config.req("d_out");
+        vec![
+            DataBatch::F32(det_fill(b * d, seed + 100, 1.0), vec![b, d]),
+            DataBatch::I32(det_tokens(b, c as u32, seed + 200), vec![b]),
+        ]
+    };
     let inputs = StepInputs {
-        lr_vec: vec![lr; p],
+        lr_vec: vec![lr; variant.n_params()],
         hp_vec,
     };
-    for (step, want) in golden.losses.iter().enumerate() {
+    for (step, want) in losses.iter().enumerate() {
         let got = session.step(&data, &inputs).unwrap() as f64;
-        let tol = 1e-4 * (1.0 + want.abs());
+        let tol = 1e-3 * (1.0 + want.abs());
         assert!(
             (got - want).abs() < tol,
-            "{name} step {step}: rust {got} vs python golden {want}"
+            "{name} step {step}: native {got} vs python golden {want} (tol {tol})"
         );
     }
 }
 
 #[test]
 fn transformer_golden_matches_python() {
-    let Some(rt) = runtime() else { return };
-    golden_check(&rt, "tfm_post_w32_d2");
+    golden_check("tfm_post_w32_d2");
 }
 
 #[test]
 fn mlp_golden_matches_python() {
-    let Some(rt) = runtime() else { return };
-    golden_check(&rt, "mlp_w64");
+    golden_check("mlp_w64");
 }
 
+/// The recorded trajectories must actually move (by much more than the
+/// comparison tolerance) — otherwise a broken optimizer could pass.
+#[test]
+fn golden_trajectories_are_nontrivial() {
+    for name in ["tfm_post_w32_d2", "mlp_w64"] {
+        let e = entry(name);
+        let losses: Vec<f64> = e
+            .req("losses")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|l| l.as_f64().unwrap())
+            .collect();
+        let first = losses[0];
+        let min = losses.iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(
+            first - min > 10.0 * 1e-3 * (1.0 + first.abs()),
+            "{name}: trajectory {losses:?} moves less than 10x tolerance"
+        );
+    }
+}
+
+/// Every variant's param layout must equal the Rust spec builders' — the
+/// built-in registry and `crate::model` must never drift apart.
 #[test]
 fn manifest_layout_matches_rust_mirror() {
-    // every variant's param layout must equal the Rust spec builders'
-    let Some(rt) = runtime() else { return };
-    for name in rt.manifest().names() {
+    let rt = Runtime::native();
+    let names = rt.manifest().names();
+    assert!(names.len() > 80, "registry unexpectedly small");
+    for name in names {
         let v = rt.manifest().get(name).unwrap();
         let specs = mutransfer::model::specs_for_variant(v);
         assert_eq!(specs.len(), v.params.len(), "{name}: tensor count");
@@ -111,7 +152,7 @@ fn manifest_layout_matches_rust_mirror() {
 
 #[test]
 fn eval_twin_exists_for_every_train_variant() {
-    let Some(rt) = runtime() else { return };
+    let rt = Runtime::native();
     for name in rt.manifest().names() {
         let v = rt.manifest().get(name).unwrap();
         if v.kind == Kind::Train {

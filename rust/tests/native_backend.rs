@@ -1,0 +1,205 @@
+//! Hermetic end-to-end tests of the native backend: the paper's μP
+//! verification story (coordinate checking, App. D.1 / Fig. 5) plus
+//! learnability and determinism smoke runs — all with no Python, no XLA,
+//! no artifacts directory.
+//!
+//! Thresholds were calibrated against the numpy reference
+//! (python/tools/native_ref.py): under SP the logits / attention-logits
+//! Δ-RMS grows with exponent ≈ +0.5…+0.9 across width, under μP every
+//! probe's exponent is ≤ 0.
+
+use std::collections::BTreeMap;
+
+use mutransfer::coordcheck::{coord_check, growth_exponents, passes_mup_check};
+use mutransfer::data::source_for;
+use mutransfer::model::BaseShape;
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization, Scheme};
+use mutransfer::runtime::Runtime;
+use mutransfer::train::{run, RunSpec};
+
+const COORD_WIDTHS: [usize; 2] = [32, 64];
+const COORD_STEPS: usize = 4;
+
+fn coord_exponents(rt: &Runtime, scheme: Scheme) -> BTreeMap<String, f64> {
+    let par = match scheme {
+        Scheme::Mup => Parametrization::mup(Optimizer::Adam),
+        Scheme::Sp => Parametrization::standard(Optimizer::Adam),
+    };
+    let mut records = Vec::new();
+    for &w in &COORD_WIDTHS {
+        let variant = format!("tfm_post_w{w}_d2__coord");
+        let base = match scheme {
+            Scheme::Mup => BaseShape::Tfm {
+                d_model: 32,
+                n_head: 4,
+                d_head: 8,
+                d_ffn: 128,
+            },
+            Scheme::Sp => BaseShape::SameAsTarget,
+        };
+        let hp = HyperParams {
+            lr: 2f64.powi(-7),
+            ..HyperParams::default()
+        };
+        let mut spec = RunSpec::new(&variant, par, hp, base);
+        spec.seed = 3;
+        let v = rt.manifest().get(&variant).unwrap();
+        let data = source_for(v, 11);
+        records.push(coord_check(rt, &spec, data.as_ref(), COORD_STEPS).unwrap());
+    }
+    let e = growth_exponents(&records);
+    assert_eq!(e.len(), 4, "all four probes should report: {e:?}");
+    e
+}
+
+/// μP: no probed activation's update size may grow with width (the §8
+/// verification a correct implementation must pass).
+#[test]
+fn mup_coordinates_stable_across_width() {
+    let rt = Runtime::native();
+    let e = coord_exponents(&rt, Scheme::Mup);
+    assert!(passes_mup_check(&e, 0.2), "μP exponents {e:?}");
+}
+
+/// SP: logits and attention logits must blow up with width — the failure
+/// mode μP exists to fix.  If this stops failing, the coord check lost
+/// its teeth.
+#[test]
+fn sp_logits_blow_up_with_width() {
+    let rt = Runtime::native();
+    let e = coord_exponents(&rt, Scheme::Sp);
+    assert!(
+        e["logits"] > 0.25,
+        "SP logits should grow ~sqrt(width): {e:?}"
+    );
+    assert!(
+        e["attn_logits_l0"] > 0.25,
+        "SP attn logits should grow with width: {e:?}"
+    );
+    assert!(!passes_mup_check(&e, 0.2), "SP must fail the μP check");
+}
+
+/// End-to-end: a post-LN transformer trained natively on the synthetic
+/// corpus learns (loss falls well below the uniform-prediction ln(V)),
+/// starting from exactly ln(V) thanks to the zero-init unembed.
+#[test]
+fn native_transformer_learns_the_corpus() {
+    let rt = Runtime::native();
+    let hp = HyperParams {
+        lr: 2f64.powi(-7),
+        ..HyperParams::default()
+    };
+    let mut spec = RunSpec::new(
+        "tfm_post_w32_d2",
+        Parametrization::mup(Optimizer::Adam),
+        hp,
+        BaseShape::SameAsTarget,
+    );
+    spec.steps = 25;
+    spec.seed = 0;
+    let v = rt.manifest().get("tfm_post_w32_d2").unwrap();
+    let data = source_for(v, 7);
+    let r = run(&rt, &spec, data.as_ref()).unwrap();
+    assert!(!r.diverged);
+    assert_eq!(r.steps_done, 25);
+    assert!(
+        (r.train_losses[0] - 64f64.ln()).abs() < 1e-4,
+        "zero-init unembed must start at ln(V): {}",
+        r.train_losses[0]
+    );
+    let last = *r.train_losses.last().unwrap();
+    assert!(last < 3.5, "loss should fall from 4.16, got {last}");
+    assert!(r.flops > 0.0 && r.wall_secs > 0.0);
+}
+
+/// End-to-end: the MLP on the synthetic vision task, including the
+/// eval (validation) path through the native backend.
+#[test]
+fn native_mlp_learns_the_vision_task() {
+    let rt = Runtime::native();
+    let hp = HyperParams {
+        lr: 0.1,
+        ..HyperParams::default()
+    };
+    let mut spec = RunSpec::new(
+        "mlp_w64",
+        Parametrization::mup(Optimizer::Sgd),
+        hp,
+        BaseShape::SameAsTarget,
+    );
+    spec.steps = 40;
+    spec.seed = 0;
+    spec.eval_every = 20;
+    spec.eval_batches = 2;
+    let v = rt.manifest().get("mlp_w64").unwrap();
+    let data = source_for(v, 7);
+    let r = run(&rt, &spec, data.as_ref()).unwrap();
+    assert!(!r.diverged);
+    let final_loss = r.final_train_loss();
+    assert!(
+        final_loss < 1.8,
+        "MLP should learn the mixture task: final {final_loss}"
+    );
+    assert!(!r.val_losses.is_empty(), "eval path must produce val points");
+    for &(_, vl) in &r.val_losses {
+        assert!(vl.is_finite());
+    }
+    assert!(r.best_val_loss() < 2.3, "val loss {:?}", r.val_losses);
+}
+
+/// Identical specs → bitwise-identical loss curves: the native backend
+/// (and the data/init substrate above it) is fully deterministic, which
+/// is what the sweep journal's resume guarantee rests on.
+#[test]
+fn native_runs_are_deterministic() {
+    let rt = Runtime::native();
+    let mk = || {
+        let hp = HyperParams {
+            lr: 0.05,
+            ..HyperParams::default()
+        };
+        let mut spec = RunSpec::new(
+            "mlp_w64",
+            Parametrization::mup(Optimizer::Sgd),
+            hp,
+            BaseShape::Width(32),
+        );
+        spec.steps = 10;
+        spec.seed = 5;
+        spec
+    };
+    let v = rt.manifest().get("mlp_w64").unwrap();
+    let data = source_for(v, 3);
+    let a = run(&rt, &mk(), data.as_ref()).unwrap();
+    let b = run(&rt, &mk(), data.as_ref()).unwrap();
+    assert_eq!(a.train_losses, b.train_losses);
+}
+
+/// The residual MLP path also executes and learns a little.
+#[test]
+fn native_resmlp_trains() {
+    let rt = Runtime::native();
+    let hp = HyperParams {
+        lr: 0.05,
+        ..HyperParams::default()
+    };
+    let mut spec = RunSpec::new(
+        "resmlp_w32",
+        Parametrization::mup(Optimizer::Sgd),
+        hp,
+        BaseShape::SameAsTarget,
+    );
+    spec.steps = 15;
+    spec.seed = 1;
+    let v = rt.manifest().get("resmlp_w32").unwrap();
+    let data = source_for(v, 5);
+    let r = run(&rt, &spec, data.as_ref()).unwrap();
+    assert!(!r.diverged);
+    assert!(
+        (r.train_losses[0] - 10f64.ln()).abs() < 1e-4,
+        "zero-init w_out starts at ln(10): {}",
+        r.train_losses[0]
+    );
+    let last = *r.train_losses.last().unwrap();
+    assert!(last < 2.2, "loss should decrease from ln(10): {last}");
+}

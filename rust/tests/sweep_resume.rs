@@ -1,0 +1,105 @@
+//! Sweep-resume integration test: run a journaled sweep through the
+//! native backend, truncate the journal mid-way, re-run, and assert that
+//! (a) journaled jobs are skipped (not re-executed), and (b) the combined
+//! results are bit-identical to the first pass — the determinism + JSON
+//! round-trip contract the scheduler's crash-recovery story rests on.
+
+use mutransfer::model::BaseShape;
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::runtime::Runtime;
+use mutransfer::sweep::{Job, Sweep};
+use mutransfer::train::RunSpec;
+use mutransfer::tuner::Assignment;
+
+fn jobs() -> Vec<Job> {
+    [0.02f64, 0.05, 0.1, 0.15]
+        .iter()
+        .enumerate()
+        .map(|(i, &lr)| {
+            let hp = HyperParams {
+                lr,
+                ..HyperParams::default()
+            };
+            let mut spec = RunSpec::new(
+                "mlp_w64",
+                Parametrization::mup(Optimizer::Sgd),
+                hp,
+                BaseShape::SameAsTarget,
+            );
+            spec.steps = 6;
+            spec.seed = i as u64;
+            spec.eval_every = 3;
+            spec.eval_batches = 2;
+            Job {
+                key: format!("resume-test/{i}"),
+                spec,
+                assignment: Assignment::single("lr", lr),
+                data_seed: 7,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn sweep_resumes_from_truncated_journal() {
+    let rt = Runtime::native();
+    let dir = std::env::temp_dir().join("mutransfer_sweep_resume_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let journal = dir.join("sweep.journal");
+    let js = jobs();
+
+    // first pass: everything executes, one journal line per job
+    let mut sweep = Sweep::new(&rt).with_journal(&journal).unwrap();
+    assert_eq!(sweep.completed(), 0);
+    let first = sweep.run(&js).unwrap();
+    assert_eq!(first.len(), js.len());
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert_eq!(lines.len(), js.len());
+
+    // simulate a crash after two jobs: truncate the journal
+    std::fs::write(&journal, format!("{}\n{}\n", lines[0], lines[1])).unwrap();
+
+    // resume: two jobs load from the journal, two re-execute
+    let mut resumed = Sweep::new(&rt).with_journal(&journal).unwrap();
+    assert_eq!(resumed.completed(), 2, "journaled jobs should be preloaded");
+    let second = resumed.run(&js).unwrap();
+    assert_eq!(resumed.completed(), js.len());
+
+    // exactly two lines were appended — the first two jobs were skipped,
+    // not re-run (a re-run would have re-appended them)
+    let relines = std::fs::read_to_string(&journal)
+        .unwrap()
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .count();
+    assert_eq!(relines, js.len());
+
+    // results identical across passes, bit-for-bit: journaled f64s
+    // round-trip exactly and the native backend is deterministic
+    for (a, b) in first.iter().zip(&second) {
+        assert_eq!(a.key, b.key);
+        assert_eq!(a.train_curve, b.train_curve, "{}", a.key);
+        assert_eq!(a.val_curve, b.val_curve, "{}", a.key);
+        assert_eq!(a.trial.diverged, b.trial.diverged);
+        assert_eq!(a.trial.train_loss, b.trial.train_loss, "{}", a.key);
+        assert_eq!(a.trial.val_loss, b.trial.val_loss, "{}", a.key);
+        assert_eq!(a.trial.flops, b.trial.flops, "{}", a.key);
+        assert_eq!(
+            a.trial.assignment.values, b.trial.assignment.values,
+            "{}",
+            a.key
+        );
+    }
+
+    // third pass over the same journal: nothing executes at all
+    let mut third = Sweep::new(&rt).with_journal(&journal).unwrap();
+    assert_eq!(third.completed(), js.len());
+    let again = third.run(&js).unwrap();
+    for (a, b) in second.iter().zip(&again) {
+        assert_eq!(a.train_curve, b.train_curve);
+    }
+    let final_lines = std::fs::read_to_string(&journal).unwrap().lines().count();
+    assert_eq!(final_lines, js.len(), "fully-journaled sweep must not append");
+}
