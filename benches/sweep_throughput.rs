@@ -1,0 +1,94 @@
+//! Parallel sweep-scheduler throughput: the same trial set at 1, 2 and 4
+//! workers on the native backend — the paper's benefit #4 ("small-model
+//! tuning parallelizes trivially") measured end-to-end through
+//! `Sweep::run`'s fan-out path, journal writes included.
+//!
+//! Expected shape: near-linear scaling up to the physical core count
+//! (trials are independent, the journal mutex is held only to append one
+//! line per trial).  On a ≥4-core host the 4-worker run must beat the
+//! sequential one by >1.5×; on smaller hosts the ratio is reported but
+//! not enforced.
+
+use std::time::Instant;
+
+use mutransfer::init::rng::Rng;
+use mutransfer::model::BaseShape;
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::runtime::Runtime;
+use mutransfer::sweep::{Job, Sweep};
+use mutransfer::train::RunSpec;
+use mutransfer::tuner::SearchSpace;
+
+fn jobs(n: usize, steps: usize) -> Vec<Job> {
+    let space = SearchSpace::iwslt_like();
+    let mut rng = Rng::new(7);
+    let base = BaseShape::Tfm {
+        d_model: 32,
+        n_head: 4,
+        d_head: 8,
+        d_ffn: 128,
+    };
+    (0..n)
+        .map(|i| {
+            let a = space.sample(&mut rng);
+            let mut spec = RunSpec::new(
+                "tfm_post_w32_d2",
+                Parametrization::mup(Optimizer::Adam),
+                a.apply(HyperParams::default()),
+                base.clone(),
+            );
+            spec.steps = steps;
+            spec.eval_every = steps / 2;
+            Job {
+                key: format!("bench/{i}"),
+                spec,
+                assignment: a,
+                data_seed: 1,
+            }
+        })
+        .collect()
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::native();
+    let dir = std::env::temp_dir().join("mutransfer_bench_sweep_throughput");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+
+    let js = jobs(16, 12);
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("sweep throughput: {} trials, {} cores", js.len(), cores);
+
+    let mut secs_at = Vec::new();
+    for workers in [1usize, 2, 4] {
+        // fresh journal per config: every run executes every trial
+        let journal = dir.join(format!("w{workers}.journal"));
+        let t0 = Instant::now();
+        let r = Sweep::new(&rt)
+            .with_workers(workers)
+            .with_journal(&journal)?
+            .run(&js)?;
+        let secs = t0.elapsed().as_secs_f64();
+        assert_eq!(r.len(), js.len());
+        println!(
+            "  workers={workers}: {secs:.2}s -> {:.1} trials/min",
+            js.len() as f64 / secs * 60.0
+        );
+        secs_at.push((workers, secs));
+    }
+
+    let seq = secs_at[0].1;
+    for &(w, secs) in &secs_at[1..] {
+        println!("  speedup at {w} workers: {:.2}x", seq / secs);
+    }
+    let speedup4 = seq / secs_at[2].1;
+    if cores >= 4 {
+        assert!(
+            speedup4 > 1.5,
+            "4 workers should be >1.5x sequential on a {cores}-core host, got {speedup4:.2}x"
+        );
+    } else {
+        println!("  ({cores} cores: skipping the >1.5x @ 4 workers assertion)");
+    }
+    Ok(())
+}

@@ -31,6 +31,9 @@ pub struct Scale {
     /// independent tuning trials for percentile rows
     pub trials: usize,
     pub target_steps: usize,
+    /// sweep worker threads (`--workers`; every experiment's Sweep uses
+    /// this, so one flag parallelizes the whole figure suite)
+    pub workers: usize,
 }
 
 impl Scale {
@@ -45,6 +48,7 @@ impl Scale {
             search_samples: 8,
             trials: 3,
             target_steps: 60,
+            workers: 1,
         }
     }
 
@@ -60,6 +64,7 @@ impl Scale {
             search_samples: 3,
             trials: 2,
             target_steps: 12,
+            workers: 1,
         }
     }
 
@@ -74,6 +79,7 @@ impl Scale {
             search_samples: 64,
             trials: 25,
             target_steps: 1000,
+            workers: 1,
         }
     }
 
@@ -86,16 +92,14 @@ impl Scale {
         }
     }
 
-    /// The log2 LR ladder.
+    /// The log2 LR ladder (integer-indexed like `Dim::pow2_grid`, so a
+    /// fractional step cannot drop the top rung to accumulated error).
     pub fn lrs(&self) -> Vec<f64> {
         let (lo, hi, step) = self.lr_grid;
-        let mut out = Vec::new();
-        let mut z = lo;
-        while z <= hi + 1e-9 {
-            out.push(2f64.powf(z));
-            z += step;
+        match crate::tuner::Dim::pow2_grid(1.0, lo, hi, step) {
+            crate::tuner::Dim::Grid(v) => v,
+            _ => unreachable!(),
         }
-        out
     }
 }
 

@@ -16,7 +16,7 @@ use crate::util::table::{fmt_loss, Table};
 use super::common::{self, Scale};
 
 pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
-    let mut sweep = Sweep::new(rt).with_journal(&rep.path("fig12.journal"))?;
+    let mut sweep = Sweep::new(rt).with_workers(scale.workers).with_journal(&rep.path("fig12.journal"))?;
     sweep.verbose = true;
     let ffns: Vec<usize> = if scale.name == "smoke" {
         vec![128, 512]

@@ -18,7 +18,7 @@ use crate::util::table::{fmt_loss, Table};
 use super::common::{self, Scale};
 
 pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
-    let mut sweep = Sweep::new(rt).with_journal(&rep.path("fig13.journal"))?;
+    let mut sweep = Sweep::new(rt).with_workers(scale.workers).with_journal(&rep.path("fig13.journal"))?;
     sweep.verbose = true;
     let heads: Vec<usize> = if scale.name == "smoke" {
         vec![2, 4]
@@ -71,7 +71,7 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
 
 /// Figure 10: α_attn landscape roughness at d_head = 4 vs 32.
 pub fn run_dk(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
-    let mut sweep = Sweep::new(rt).with_journal(&rep.path("fig10.journal"))?;
+    let mut sweep = Sweep::new(rt).with_workers(scale.workers).with_journal(&rep.path("fig10.journal"))?;
     sweep.verbose = true;
     let par = Parametrization::mup(Optimizer::Adam);
     let alphas: Vec<f64> = (-3..=3).map(|z| 2f64.powi(z)).collect();

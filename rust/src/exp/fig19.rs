@@ -14,7 +14,7 @@ use crate::util::table::{fmt_loss, Table};
 use super::common::{self, Scale};
 
 pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
-    let mut sweep = Sweep::new(rt).with_journal(&rep.path("fig19.journal"))?;
+    let mut sweep = Sweep::new(rt).with_workers(scale.workers).with_journal(&rep.path("fig19.journal"))?;
     sweep.verbose = true;
     let hp0 = HyperParams::default();
     let lrs = scale.lrs();

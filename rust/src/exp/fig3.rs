@@ -25,7 +25,7 @@ pub(crate) fn run_mlp(
     prefix: &str,
     name: &str,
 ) -> Result<()> {
-    let mut sweep = Sweep::new(rt).with_journal(&rep.path(&format!("{name}.journal")))?;
+    let mut sweep = Sweep::new(rt).with_workers(scale.workers).with_journal(&rep.path(&format!("{name}.journal")))?;
     sweep.verbose = true;
     let hp0 = HyperParams::default();
     // SGD wants larger LRs than Adam: shift the ladder up.

@@ -20,7 +20,7 @@ use crate::util::table::{fmt_loss, Table};
 use super::common::Scale;
 
 pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
-    let mut sweep = Sweep::new(rt).with_journal(&rep.path("fig6.journal"))?;
+    let mut sweep = Sweep::new(rt).with_workers(scale.workers).with_journal(&rep.path("fig6.journal"))?;
     sweep.verbose = true;
     let (pw, tw) = if scale.name == "paper" { (64usize, 256usize) } else { (32, 128) };
     let proxy = &format!("tfm_post_w{pw}_d2");

@@ -18,7 +18,7 @@ use crate::util::table::Table;
 use super::common::{self, Scale};
 
 pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
-    let mut sweep = Sweep::new(rt).with_journal(&rep.path("fig7.journal"))?;
+    let mut sweep = Sweep::new(rt).with_workers(scale.workers).with_journal(&rep.path("fig7.journal"))?;
     sweep.verbose = true;
     let base_w = scale.widths[0];
     let lrs = [("small-lr", 2f64.powi(-10)), ("large-lr", 2f64.powi(-6))];

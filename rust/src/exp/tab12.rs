@@ -18,7 +18,7 @@ use crate::util::table::{fmt_loss, Table};
 use super::common::Scale;
 
 pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
-    let mut sweep = Sweep::new(rt).with_journal(&rep.path("tab12.journal"))?;
+    let mut sweep = Sweep::new(rt).with_workers(scale.workers).with_journal(&rep.path("tab12.journal"))?;
     sweep.verbose = true;
     let proxy_w = 32usize;
     let target_w = if scale.name == "smoke" { 64 } else { 256 };

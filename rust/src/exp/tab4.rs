@@ -80,7 +80,7 @@ fn run_mt(
     base: BaseShape,
     trials: usize,
 ) -> Result<()> {
-    let mut sweep = Sweep::new(rt).with_journal(&rep.path(&format!("{name}.journal")))?;
+    let mut sweep = Sweep::new(rt).with_workers(scale.workers).with_journal(&rep.path(&format!("{name}.journal")))?;
     sweep.verbose = true;
 
     // FLOPs matching: the proxy search budget defines the total compute;

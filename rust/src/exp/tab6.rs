@@ -21,7 +21,7 @@ use crate::util::table::{fmt_loss, Table};
 use super::common::Scale;
 
 pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
-    let mut sweep = Sweep::new(rt).with_journal(&rep.path("tab6.journal"))?;
+    let mut sweep = Sweep::new(rt).with_workers(scale.workers).with_journal(&rep.path("tab6.journal"))?;
     sweep.verbose = true;
     let proxy = "tfm_pre_w64_d2";
     // ci shrinks the family one notch so the suite fits a single core;

@@ -43,7 +43,7 @@ fn base() -> BaseShape {
 
 pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
     let target = target_for(scale);
-    let mut sweep = Sweep::new(rt).with_journal(&rep.path("tab7.journal"))?;
+    let mut sweep = Sweep::new(rt).with_workers(scale.workers).with_journal(&rep.path("tab7.journal"))?;
     sweep.verbose = true;
     let par = Parametrization::mup(Optimizer::Adam);
     let space = SearchSpace::gpt3_like();
@@ -175,7 +175,7 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
 /// *simulated width* via reverse-μTransfer; the divergence thresholds
 /// must line up.
 pub fn run_reverse(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
-    let mut sweep = Sweep::new(rt).with_journal(&rep.path("fig21.journal"))?;
+    let mut sweep = Sweep::new(rt).with_workers(scale.workers).with_journal(&rep.path("fig21.journal"))?;
     sweep.verbose = true;
     let lrs = scale.lrs();
     let narrow_w = scale.widths[0];

@@ -34,12 +34,14 @@ fn main() {
 }
 
 const USAGE: &str = "usage: mutransfer <exp|train|transfer|coord-check|list-artifacts> [flags]
-  exp <id>|all        --preset ci|paper|smoke
+  exp <id>|all        --preset ci|paper|smoke [--workers N]
   train               --variant NAME --scheme mup|sp --lr F --steps N [--base-width W]
-  transfer            --proxy NAME --target NAME --base-width W --samples N --steps N --target-steps N
+  transfer            --proxy NAME --target NAME --base-width W --samples N --steps N --target-steps N [--workers N]
   coord-check         --variant NAME(__coord) --scheme mup|sp [--base-width W] [--steps N]
   list-artifacts
-common: --artifacts DIR  --results DIR";
+common: --artifacts DIR  --results DIR
+--workers: sweep worker threads (default: MUTRANSFER_WORKERS or half the
+cores; needs a Send-capable backend — native yes, pjrt falls back to 1)";
 
 fn real_main() -> Result<()> {
     let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
@@ -61,8 +63,9 @@ fn real_main() -> Result<()> {
                 .get(1)
                 .context("exp needs an id (e.g. fig1); see DESIGN.md §4")?
                 .clone();
-            let scale = Scale::by_name(&preset)
+            let mut scale = Scale::by_name(&preset)
                 .with_context(|| format!("unknown preset {preset}"))?;
+            scale.workers = args.workers_or(mutransfer::util::pool::default_workers());
             let rt = Runtime::new(&artifacts)?;
             let rep = Reporter::new(results);
             exp::run(&id, &rt, &rep, &scale)?;
@@ -116,10 +119,12 @@ fn real_main() -> Result<()> {
             let steps = args.usize_or("steps", 40);
             let target_steps = args.usize_or("target-steps", 120);
             let seed = args.u64_or("seed", 0);
+            let workers = args.workers_or(mutransfer::util::pool::default_workers());
             args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
             let rt = Runtime::new(&artifacts)?;
             let rep = Reporter::new(results);
             let mut sweep = mutransfer::sweep::Sweep::new(&rt)
+                .with_workers(workers)
                 .with_journal(&rep.path("transfer-cli.journal"))?;
             sweep.verbose = true;
             let setup = mutransfer::transfer::TransferSetup {

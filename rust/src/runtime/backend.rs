@@ -10,6 +10,12 @@
 //! * `crate::runtime::pjrt` (behind the off-by-default `pjrt` cargo
 //!   feature) — compiles the AOT-lowered HLO artifacts through XLA.
 //!
+//! Parallelism is a per-backend capability: [`Backend::parallelism`] says
+//! how many sessions may run concurrently and [`Backend::session_send`]
+//! hands out a `Send`-bounded session handle for worker threads.  The
+//! native backend implements both; PJRT keeps the declining defaults, so
+//! the sweep scheduler transparently falls back to sequential execution.
+//!
 //! The calling convention mirrors `python/compile/model.py`:
 //!
 //! ```text
@@ -81,6 +87,31 @@ pub trait Backend {
         variant: &Variant,
         init: Vec<Vec<f32>>,
     ) -> Result<Box<dyn BackendSession>>;
+
+    /// How many sessions this backend can usefully drive concurrently —
+    /// the sweep scheduler clamps its worker count to this.  The default
+    /// (1) means "sequential only"; backends whose sessions are `Send`
+    /// (the native one) report `usize::MAX` and let callers pick by core
+    /// count.  PJRT keeps the default: its client is not `Send`.
+    fn parallelism(&self) -> usize {
+        1
+    }
+
+    /// `Send`-bounded variant of [`Backend::session`]: a session handle
+    /// that may be moved to a worker thread.  Backends whose session
+    /// types are not `Send` (PJRT) keep the default `Ok(None)` — the
+    /// sweep scheduler then falls back to its sequential loop.  `Ok(None)`
+    /// is a capability answer, not an error: `Err` still means session
+    /// construction itself failed.
+    fn session_send(
+        &self,
+        manifest: &Manifest,
+        variant: &Variant,
+        init: Vec<Vec<f32>>,
+    ) -> Result<Option<Box<dyn BackendSession + Send>>> {
+        let _ = (manifest, variant, init);
+        Ok(None)
+    }
 }
 
 /// One model being trained: owns params + optimizer state between steps.

@@ -10,9 +10,10 @@
 //!   param specs.  No Python, no XLA, no artifacts directory: the variant
 //!   registry is built in ([`native::registry`]), so `Runtime::native()`
 //!   works on any box and the whole verification story (golden
-//!   trajectories, coordinate checks, sweeps) runs hermetically.  The
-//!   backend is `Send`, which is what lets the sweep scheduler scale past
-//!   one client.
+//!   trajectories, coordinate checks, sweeps) runs hermetically.  Its
+//!   sessions are `Send` and it implements [`Backend::session_send`] /
+//!   unbounded [`Backend::parallelism`], which is what the multi-worker
+//!   sweep scheduler (`Sweep::run` with `workers > 1`) fans out through.
 //! * `pjrt` (cargo feature `pjrt`, off by default) — loads AOT-lowered HLO
 //!   text artifacts produced by `python/compile/aot.py` and executes them
 //!   through XLA via the `xla` crate.  State round-trips through host
@@ -33,7 +34,7 @@ pub mod session;
 
 pub use backend::{Backend, BackendSession, DataBatch, Probe, StepInputs};
 pub use manifest::{Arch, Kind, Manifest, ParamInfo, Variant};
-pub use session::TrainSession;
+pub use session::{SessionCore, TrainSession};
 
 use std::path::Path;
 
@@ -180,7 +181,7 @@ mod tests {
         // adam variant: the session must overwrite hp[7] with 1, 2, ...
         assert_eq!(s.step(&data, &inputs).unwrap(), 1.0);
         assert_eq!(s.step(&data, &inputs).unwrap(), 2.0);
-        assert_eq!(s.steps_done, 2);
+        assert_eq!(s.steps_done(), 2);
         assert_eq!(s.eval(&data, &inputs).unwrap(), 0.5);
         // wrong init length must be rejected before reaching the backend
         assert!(TrainSession::new(&rt, "tfm_post_w32_d2", Vec::new()).is_err());

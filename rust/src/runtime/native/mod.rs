@@ -10,11 +10,11 @@
 //! (`rust/tests/fixtures/goldens.json`) pins agreement to 1e-3 relative.
 //!
 //! Unlike the PJRT client, every concrete type here is `Send` (asserted
-//! in the tests below) — the prerequisite for the multi-threaded sweep
-//! workers called out in ROADMAP.md.  Note the `Box<dyn Backend>` /
-//! `Box<dyn BackendSession>` handles used by [`crate::runtime::Runtime`]
-//! erase that marker today; thread fan-out needs a `Send`-bounded handle
-//! on top of these types.
+//! in the tests below), which is what lets this backend implement the
+//! `Send`-bounded session path ([`crate::runtime::Backend::session_send`])
+//! and report unbounded [`crate::runtime::Backend::parallelism`] — the
+//! sweep scheduler fans trials out across worker threads through those
+//! two capabilities (`sweep::Sweep::run` with `workers > 1`).
 
 pub mod mlp;
 pub mod optim;
@@ -30,6 +30,20 @@ use super::manifest::{Arch, Manifest, Variant};
 /// Stateless factory: all state lives in the per-variant sessions.
 pub struct NativeBackend;
 
+/// Either concrete native session, pre-boxing: both are `Send`, so the
+/// same constructor serves the plain and the `Send`-bounded trait paths.
+enum NativeSession {
+    Tfm(transformer::TfmSession),
+    Net(mlp::SgdNetSession),
+}
+
+fn build_session(variant: &Variant, init: Vec<Vec<f32>>) -> Result<NativeSession> {
+    Ok(match variant.arch {
+        Arch::Transformer => NativeSession::Tfm(transformer::TfmSession::new(variant, init)?),
+        Arch::Mlp | Arch::ResMlp => NativeSession::Net(mlp::SgdNetSession::new(variant, init)?),
+    })
+}
+
 impl Backend for NativeBackend {
     fn name(&self) -> &'static str {
         "native"
@@ -41,10 +55,29 @@ impl Backend for NativeBackend {
         variant: &Variant,
         init: Vec<Vec<f32>>,
     ) -> Result<Box<dyn BackendSession>> {
-        Ok(match variant.arch {
-            Arch::Transformer => Box::new(transformer::TfmSession::new(variant, init)?),
-            Arch::Mlp | Arch::ResMlp => Box::new(mlp::SgdNetSession::new(variant, init)?),
+        Ok(match build_session(variant, init)? {
+            NativeSession::Tfm(s) => Box::new(s),
+            NativeSession::Net(s) => Box::new(s),
         })
+    }
+
+    /// Sessions are self-contained and `Send`; any number may run at
+    /// once.  Callers (the sweep scheduler) choose the actual worker
+    /// count from core count / CLI flags.
+    fn parallelism(&self) -> usize {
+        usize::MAX
+    }
+
+    fn session_send(
+        &self,
+        _manifest: &Manifest,
+        variant: &Variant,
+        init: Vec<Vec<f32>>,
+    ) -> Result<Option<Box<dyn BackendSession + Send>>> {
+        Ok(Some(match build_session(variant, init)? {
+            NativeSession::Tfm(s) => Box::new(s),
+            NativeSession::Net(s) => Box::new(s),
+        }))
     }
 }
 
@@ -117,5 +150,32 @@ mod tests {
         assert_send::<NativeBackend>();
         assert_send::<transformer::TfmSession>();
         assert_send::<mlp::SgdNetSession>();
+    }
+
+    /// The Send-session capability: the native backend hands out a
+    /// session that really crosses a thread boundary and computes the
+    /// same closed-form anchor there.
+    #[test]
+    fn session_send_works_across_threads() {
+        let rt = Runtime::native();
+        assert_eq!(rt.backend().parallelism(), usize::MAX);
+        let v = rt.manifest().get("mlp_w64").unwrap().clone();
+        let session = rt
+            .backend()
+            .session_send(rt.manifest(), &v, zeros_init(&v))
+            .unwrap()
+            .expect("native backend must offer Send sessions");
+        let b = v.config.req("batch");
+        let d = v.config.req("d_in");
+        let loss = std::thread::spawn(move || {
+            let data = vec![
+                DataBatch::F32(vec![0.5; b * d], vec![b, d]),
+                DataBatch::I32((0..b).map(|i| (i % 10) as i32).collect(), vec![b]),
+            ];
+            session.eval(&data, &[1.0, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]).unwrap() as f64
+        })
+        .join()
+        .unwrap();
+        assert!((loss - 10f64.ln()).abs() < 1e-5, "loss {loss}");
     }
 }

@@ -14,8 +14,11 @@
 //! dominant cost is one memcpy each way).  On the CPU backend that is a
 //! few percent of step time at our sizes, and it buys a Python-free
 //! runtime.  Executables are cached per variant and shared by every trial
-//! in a sweep.  The PJRT client is not `Send`, which is why the sweep
-//! scheduler defaults to the native backend for multi-worker runs.
+//! in a sweep.  The PJRT client (and the `Rc`/`RefCell` executable cache)
+//! is not `Send`, so this backend *declines* the parallel capabilities:
+//! it keeps the trait defaults `parallelism() == 1` and
+//! `session_send() == Ok(None)`, and `Sweep::run` falls back to its
+//! sequential loop regardless of the requested `--workers`.
 
 use std::cell::RefCell;
 use std::collections::HashMap;

@@ -1,10 +1,15 @@
 //! Training session: the hot path, backend-agnostic.  One session = one
 //! model being trained (one trial of a sweep, or the end-to-end example).
 //!
-//! The session owns the cross-backend invariants — variant-kind checks,
-//! init validation against the param specs, the data-input arity check,
-//! and the 1-based Adam step counter in `hp_vec[7]` — so each
-//! [`crate::runtime::Backend`] implements only the math.
+//! The cross-backend invariants — variant-kind checks, init validation
+//! against the param specs, the data-input arity check, and the 1-based
+//! Adam step counter in `hp_vec[7]` — live in [`SessionCore`], so each
+//! [`crate::runtime::Backend`] implements only the math.  The core is
+//! generic over the session pointer's bound: [`TrainSession`] wraps a
+//! plain `dyn BackendSession` for single-threaded callers, while the
+//! sweep scheduler's worker threads drive a
+//! `SessionCore<dyn BackendSession + Send>` obtained through
+//! [`crate::runtime::Backend::session_send`] (see `train::prepare`).
 
 use anyhow::{bail, Context, Result};
 
@@ -13,51 +18,49 @@ pub use super::backend::{DataBatch, Probe, StepInputs};
 use super::manifest::{Kind, Variant};
 use super::Runtime;
 
-pub struct TrainSession<'rt> {
-    rt: &'rt Runtime,
+/// Check a host-side init against a variant's param specs and reject eval
+/// variants — shared by every session-construction path (`TrainSession`,
+/// `train::prepare`) so the backend only ever sees validated inputs.
+pub fn validate_init(variant: &Variant, variant_name: &str, init: &[Vec<f32>]) -> Result<()> {
+    if variant.kind == Kind::Eval {
+        bail!("{variant_name} is an eval variant; use the train/coord one");
+    }
+    if init.len() != variant.n_params() {
+        bail!(
+            "init has {} tensors, variant {} has {}",
+            init.len(),
+            variant_name,
+            variant.n_params()
+        );
+    }
+    for (p, data) in variant.params.iter().zip(init) {
+        if data.len() != p.numel() {
+            bail!("param {} expects {} elements, got {}", p.name, p.numel(), data.len());
+        }
+    }
+    Ok(())
+}
+
+/// The invariant-owning wrapper around a backend session.  `S` is the
+/// session pointer's bound: `dyn BackendSession` (single-threaded) or
+/// `dyn BackendSession + Send` (sweep worker threads).  When `S: Send`,
+/// the whole core is `Send` — `Variant` is plain data.
+pub struct SessionCore<S: BackendSession + ?Sized> {
     pub variant: Variant,
-    inner: Box<dyn BackendSession>,
+    inner: Box<S>,
     /// number of optimizer steps taken (drives Adam bias correction)
     pub steps_done: usize,
 }
 
-impl<'rt> TrainSession<'rt> {
-    /// Build a session from host-side initial parameters (one `Vec<f32>`
-    /// per tensor, in manifest order).  Opt-state starts at zero.
-    pub fn new(
-        rt: &'rt Runtime,
-        variant_name: &str,
-        init: Vec<Vec<f32>>,
-    ) -> Result<TrainSession<'rt>> {
-        let variant = rt.manifest().get(variant_name)?.clone();
-        if variant.kind == Kind::Eval {
-            bail!("{variant_name} is an eval variant; use the train/coord one");
-        }
-        if init.len() != variant.n_params() {
-            bail!(
-                "init has {} tensors, variant {} has {}",
-                init.len(),
-                variant_name,
-                variant.n_params()
-            );
-        }
-        for (p, data) in variant.params.iter().zip(&init) {
-            if data.len() != p.numel() {
-                bail!("param {} expects {} elements, got {}", p.name, p.numel(), data.len());
-            }
-        }
-        let inner = rt
-            .backend()
-            .session(rt.manifest(), &variant, init)
-            .with_context(|| {
-                format!("creating {} session for {variant_name}", rt.backend().name())
-            })?;
-        Ok(TrainSession {
-            rt,
+impl<S: BackendSession + ?Sized> SessionCore<S> {
+    /// Wrap an already-constructed backend session.  Callers must have
+    /// run [`validate_init`] (the backends assume validated shapes).
+    pub fn new(variant: Variant, inner: Box<S>) -> SessionCore<S> {
+        SessionCore {
             variant,
             inner,
             steps_done: 0,
-        })
+        }
     }
 
     /// One optimizer step.  Returns the training loss *before* the update.
@@ -113,6 +116,67 @@ impl<'rt> TrainSession<'rt> {
     /// Copy a parameter tensor back to the host (diagnostics / checkpoints).
     pub fn param(&self, idx: usize) -> Result<Vec<f32>> {
         self.inner.param(idx)
+    }
+}
+
+pub struct TrainSession<'rt> {
+    rt: &'rt Runtime,
+    core: SessionCore<dyn BackendSession>,
+}
+
+impl<'rt> TrainSession<'rt> {
+    /// Build a session from host-side initial parameters (one `Vec<f32>`
+    /// per tensor, in manifest order).  Opt-state starts at zero.
+    pub fn new(
+        rt: &'rt Runtime,
+        variant_name: &str,
+        init: Vec<Vec<f32>>,
+    ) -> Result<TrainSession<'rt>> {
+        let variant = rt.manifest().get(variant_name)?.clone();
+        validate_init(&variant, variant_name, &init)?;
+        let inner = rt
+            .backend()
+            .session(rt.manifest(), &variant, init)
+            .with_context(|| {
+                format!("creating {} session for {variant_name}", rt.backend().name())
+            })?;
+        Ok(TrainSession {
+            rt,
+            core: SessionCore::new(variant, inner),
+        })
+    }
+
+    pub fn variant(&self) -> &Variant {
+        &self.core.variant
+    }
+
+    pub fn steps_done(&self) -> usize {
+        self.core.steps_done
+    }
+
+    /// One optimizer step.  Returns the training loss *before* the update.
+    pub fn step(&mut self, data: &[DataBatch], inputs: &StepInputs) -> Result<f32> {
+        self.core.step(data, inputs)
+    }
+
+    /// One step that also returns the coordinate-check probe tensors
+    /// (requires a `coord` variant).
+    pub fn step_with_probes(
+        &mut self,
+        data: &[DataBatch],
+        inputs: &StepInputs,
+    ) -> Result<(f32, Vec<Probe>)> {
+        self.core.step_with_probes(data, inputs)
+    }
+
+    /// Forward-only loss on a batch with the *current* parameters.
+    pub fn eval(&self, data: &[DataBatch], inputs: &StepInputs) -> Result<f32> {
+        self.core.eval(data, inputs)
+    }
+
+    /// Copy a parameter tensor back to the host (diagnostics / checkpoints).
+    pub fn param(&self, idx: usize) -> Result<Vec<f32>> {
+        self.core.param(idx)
     }
 
     pub fn runtime(&self) -> &Runtime {

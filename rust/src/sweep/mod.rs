@@ -6,26 +6,31 @@
 //! the sweep is the "cluster scheduler" of the paper's benefit #4, scaled
 //! to one box.
 //!
-//! Note on parallelism: the scheduler itself is sequential today.  The
-//! native backend's concrete types are all `Send` (unlike the PJRT
-//! client), which is the prerequisite for thread-fan-out via
-//! `util::pool` — but the current `Box<dyn Backend>`/`Box<dyn
-//! BackendSession>` handles erase that marker, so multi-worker sweeps
-//! additionally need a `Send`-bounded session handle (tracked in
-//! ROADMAP.md).  The journal format is what makes multi-process
-//! scale-out trivial either way, and resume is bit-exact
-//! (rust/tests/sweep_resume.rs).
+//! Parallelism: [`Sweep::run`] fans pending jobs out across
+//! [`Sweep::workers`] threads via `util::pool::run_indexed` whenever the
+//! backend offers `Send` sessions (`Backend::session_send`; the native
+//! backend does, the PJRT client declines and the sweep transparently
+//! falls back to the sequential loop).  A mutex-synchronized journal
+//! writer appends every completed trial exactly once; journal line
+//! *order* varies with worker scheduling, but the journal is a keyed set,
+//! so resume stays bit-exact regardless of worker count — and results
+//! always return in job order (rust/tests/sweep_resume.rs pins all of
+//! this).  The journal format is also what makes multi-process scale-out
+//! trivial.
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 use anyhow::{Context, Result};
 
 use crate::data::source_for;
 use crate::runtime::Runtime;
-use crate::train::{run, RunSpec};
+use crate::train::{prepare, run, PreparedRun, RunSpec};
 use crate::tuner::{Assignment, Trial};
 use crate::util::json::{self, jnum, Json};
+use crate::util::pool;
 
 /// One schedulable unit: an HP assignment to evaluate on a variant.
 #[derive(Debug, Clone)]
@@ -104,8 +109,19 @@ impl JobResult {
                 .as_arr()?
                 .iter()
                 .filter_map(|p| {
+                    // Hand-edited / corrupted pairs must not panic the
+                    // resume path: anything that isn't a 2-element array
+                    // skips just this point (the record still loads).  A
+                    // null step decodes to 0 and a null loss to NaN, so a
+                    // point survives either half going non-finite.
                     let a = p.as_arr()?;
-                    Some((a[0].as_f64()? as usize, a[1].as_f64().unwrap_or(f64::NAN)))
+                    if a.len() < 2 {
+                        return None;
+                    }
+                    Some((
+                        a[0].as_f64().unwrap_or(0.0) as usize,
+                        a[1].as_f64().unwrap_or(f64::NAN),
+                    ))
                 })
                 .collect(),
             wall_secs: j.get("wall_secs")?.as_f64().unwrap_or(f64::NAN),
@@ -119,16 +135,35 @@ pub struct Sweep<'rt> {
     journal_path: Option<PathBuf>,
     done: std::collections::BTreeMap<String, JobResult>,
     pub verbose: bool,
+    workers: usize,
 }
 
 impl<'rt> Sweep<'rt> {
+    /// Defaults to one worker (or `MUTRANSFER_WORKERS` from the env — the
+    /// CI matrix sets it so every journal/resume test also exercises the
+    /// parallel scheduler).  Use [`Sweep::with_workers`] to set it
+    /// explicitly.
     pub fn new(rt: &'rt Runtime) -> Sweep<'rt> {
         Sweep {
             rt,
             journal_path: None,
             done: Default::default(),
             verbose: false,
+            workers: pool::env_workers().unwrap_or(1),
         }
+    }
+
+    /// Fan jobs out across `n` worker threads (clamped to ≥1; further
+    /// clamped at run time to the backend's `parallelism()` capability,
+    /// so requesting 8 workers on the PJRT backend quietly runs
+    /// sequentially rather than failing).
+    pub fn with_workers(mut self, n: usize) -> Sweep<'rt> {
+        self.workers = n.max(1);
+        self
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
     }
 
     /// Attach a journal file; previously-completed jobs are loaded and
@@ -154,7 +189,29 @@ impl<'rt> Sweep<'rt> {
 
     /// Run all jobs (skipping journaled ones), returning results in job
     /// order.
+    ///
+    /// With `workers > 1` and a backend that offers `Send` sessions
+    /// ([`crate::runtime::Backend::session_send`]), pending jobs fan out
+    /// across worker threads; each completed trial is appended to the
+    /// journal exactly once, as it finishes.  Execution is deterministic
+    /// per job, so the results (and a later resume) are bit-identical to
+    /// a sequential run regardless of worker count — only journal line
+    /// order varies.
     pub fn run(&mut self, jobs: &[Job]) -> Result<Vec<JobResult>> {
+        let workers = self
+            .workers
+            .min(self.rt.backend().parallelism())
+            .clamp(1, jobs.len().max(1));
+        if workers > 1 {
+            if let Some(out) = self.run_parallel(jobs, workers)? {
+                return Ok(out);
+            }
+            // backend declined Send sessions (PJRT): sequential fallback
+        }
+        self.run_sequential(jobs)
+    }
+
+    fn run_sequential(&mut self, jobs: &[Job]) -> Result<Vec<JobResult>> {
         let total = jobs.len();
         let mut out = Vec::with_capacity(total);
         for (i, job) in jobs.iter().enumerate() {
@@ -197,6 +254,147 @@ impl<'rt> Sweep<'rt> {
             out.push(result);
         }
         Ok(out)
+    }
+
+    /// The multi-worker path.  Returns `Ok(None)` when the backend
+    /// declines `Send` sessions, in which case nothing has executed and
+    /// the caller falls back to the sequential loop.
+    ///
+    /// Pending jobs are prepared (sessions built) on this thread in
+    /// chunks of `workers × 8` — enough runway that uneven trial
+    /// durations still load-balance, without holding every session of a
+    /// huge sweep resident at once — then executed via
+    /// `pool::run_indexed`.  Workers append finished trials to the shared
+    /// journal under a mutex, so every record lands exactly once and
+    /// whole-line-atomically even though completion order is arbitrary.
+    fn run_parallel(&mut self, jobs: &[Job], workers: usize) -> Result<Option<Vec<JobResult>>> {
+        struct Prepared {
+            key: String,
+            assignment: Assignment,
+            data_seed: u64,
+            run: PreparedRun,
+        }
+
+        // open the journal once up front; worker threads share it
+        let file = match &self.journal_path {
+            Some(p) => Some(
+                std::fs::OpenOptions::new()
+                    .create(true)
+                    .append(true)
+                    .open(p)?,
+            ),
+            None => None,
+        };
+        let journal = Arc::new(Mutex::new(file));
+        let finished = Arc::new(AtomicUsize::new(
+            jobs.iter().filter(|j| self.done.contains_key(&j.key)).count(),
+        ));
+        let verbose = self.verbose;
+        let total = jobs.len();
+
+        let mut queue: Vec<&Job> = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for job in jobs {
+            // duplicate keys execute once; later occurrences resolve from
+            // the done map, same as on the sequential path
+            if !self.done.contains_key(&job.key) && seen.insert(job.key.clone()) {
+                queue.push(job);
+            }
+        }
+
+        let mut first_err: Option<anyhow::Error> = None;
+        for chunk in queue.chunks(workers.saturating_mul(8).max(1)) {
+            let mut prepared = Vec::with_capacity(chunk.len());
+            for job in chunk {
+                match prepare(self.rt, &job.spec)? {
+                    Some(run) => prepared.push(Prepared {
+                        key: job.key.clone(),
+                        assignment: job.assignment.clone(),
+                        data_seed: job.data_seed,
+                        run,
+                    }),
+                    // static backend capability: if one job can't get a
+                    // Send session, none can — nothing in this chunk ran
+                    None => return Ok(None),
+                }
+            }
+            let journal = journal.clone();
+            let finished = finished.clone();
+            let outcomes: Vec<Result<JobResult>> =
+                pool::run_indexed(prepared, workers, move |_, p: Prepared| -> Result<JobResult> {
+                    let t0 = std::time::Instant::now();
+                    let data = source_for(p.run.variant(), p.data_seed);
+                    let rr = p
+                        .run
+                        .execute(data.as_ref())
+                        .with_context(|| format!("job {}", p.key))?;
+                    let result = JobResult {
+                        key: p.key,
+                        trial: Trial {
+                            assignment: p.assignment,
+                            val_loss: rr.best_val_loss(),
+                            train_loss: rr.final_train_loss(),
+                            diverged: rr.diverged,
+                            flops: rr.flops,
+                        },
+                        train_curve: rr.train_losses,
+                        val_curve: rr.val_losses,
+                        wall_secs: t0.elapsed().as_secs_f64(),
+                    };
+                    {
+                        // exactly-once, whole-line append; recover a
+                        // poisoned lock — the file is always between lines
+                        let mut guard = journal.lock().unwrap_or_else(|e| e.into_inner());
+                        if let Some(f) = guard.as_mut() {
+                            writeln!(f, "{}", result.to_json().to_string())
+                                .with_context(|| format!("journaling job {}", result.key))?;
+                        }
+                    }
+                    if verbose {
+                        let k = finished.fetch_add(1, Ordering::SeqCst) + 1;
+                        eprintln!(
+                            "[{k}/{total}] {} -> train {:.4} val {:.4}{} ({:.1}s)",
+                            result.key,
+                            result.trial.train_loss,
+                            result.trial.val_loss,
+                            if result.trial.diverged { " DIVERGED" } else { "" },
+                            result.wall_secs,
+                        );
+                    }
+                    Ok(result)
+                });
+            for outcome in outcomes {
+                match outcome {
+                    // journaled by the worker already; record for resume +
+                    // result assembly
+                    Ok(r) => {
+                        self.done.insert(r.key.clone(), r);
+                    }
+                    Err(e) => {
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                }
+            }
+            if first_err.is_some() {
+                break; // sibling successes are journaled; abort like the
+                       // sequential path would
+            }
+        }
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        Ok(Some(
+            jobs.iter()
+                .map(|j| {
+                    self.done
+                        .get(&j.key)
+                        .cloned()
+                        .expect("parallel sweep: every job completed or errored")
+                })
+                .collect(),
+        ))
     }
 
     fn append_journal(&self, r: &JobResult) -> Result<()> {
@@ -257,6 +455,21 @@ mod tests {
         let back = JobResult::from_json(&json::parse(&r.to_json().to_string()).unwrap()).unwrap();
         assert!(back.trial.diverged);
         assert!(back.trial.val_loss.is_nan()); // null -> NaN
+    }
+
+    #[test]
+    fn corrupt_val_curve_pairs_skip_the_point_not_the_record() {
+        // Regression: a[0]/a[1] indexing panicked resume on a hand-edited
+        // journal line with a short pair; now the bad pair is skipped, a
+        // null step decodes to 0, and a null loss decodes to NaN.
+        let line = r#"{"key":"k","trial":{"assignment":{"lr":0.1},"val_loss":1.0,"train_loss":1.0,"diverged":false,"flops":1.0},"train_curve":[1.0],"val_curve":[[10,2.5],[20],[],7,[null,2.25],[30,null]],"wall_secs":0.1}"#;
+        let r = JobResult::from_json(&json::parse(line).unwrap()).unwrap();
+        assert_eq!(r.key, "k");
+        assert_eq!(r.val_curve.len(), 3);
+        assert_eq!(r.val_curve[0], (10, 2.5));
+        assert_eq!(r.val_curve[1], (0, 2.25)); // null step -> 0, point kept
+        assert_eq!(r.val_curve[2].0, 30);
+        assert!(r.val_curve[2].1.is_nan()); // null loss -> NaN, point kept
     }
 
     #[test]

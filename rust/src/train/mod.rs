@@ -4,14 +4,14 @@
 
 pub mod schedule;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::data::{DataSource, Split};
 use crate::init;
 use crate::model::BaseShape;
 use crate::mup::{HyperParams, Optimizer, Parametrization};
-use crate::runtime::session::StepInputs;
-use crate::runtime::{Runtime, TrainSession};
+use crate::runtime::session::{validate_init, StepInputs};
+use crate::runtime::{BackendSession, Runtime, SessionCore, Variant};
 pub use schedule::Schedule;
 
 /// Loss above which (relative to the initial loss) a run is declared
@@ -130,15 +130,98 @@ pub fn hp_vec(spec: &RunSpec, rt: &Runtime) -> Result<[f32; 8]> {
     })
 }
 
-/// Execute a full training run.
-pub fn run(rt: &Runtime, spec: &RunSpec, data: &dyn DataSource) -> Result<RunResult> {
-    let t0 = std::time::Instant::now();
+/// Everything a run needs once the `Runtime` has been consulted: resolved
+/// variant, expanded init (already inside the session), per-tensor base
+/// LRs and the hp_vec.  Because the session handle is `Send`-bounded
+/// (obtained via [`crate::runtime::Backend::session_send`]), a
+/// `PreparedRun` can be shipped to a sweep worker thread and executed
+/// there without touching the `Runtime` again.
+pub struct PreparedRun {
+    spec: RunSpec,
+    core: SessionCore<dyn BackendSession + Send>,
+    base_lr: Vec<f32>,
+    hp_v: [f32; 8],
+}
+
+impl PreparedRun {
+    pub fn variant(&self) -> &Variant {
+        &self.core.variant
+    }
+
+    /// Run the step loop to completion.  Consumes the prepared session —
+    /// a run is not restartable mid-trajectory.
+    pub fn execute(mut self, data: &dyn DataSource) -> Result<RunResult> {
+        drive(&mut self.core, &self.spec, &self.base_lr, &self.hp_v, data)
+    }
+}
+
+/// Spec resolution shared by the sequential and parallel paths: resolve
+/// the variant, expand init + per-tensor LRs + hp_vec, and validate.  One
+/// function so the two schedulers can never desynchronize on seeding or
+/// validation order — the bit-exact-across-worker-counts contract depends
+/// on it.
+fn resolve(rt: &Runtime, spec: &RunSpec) -> Result<(Variant, Vec<Vec<f32>>, Vec<f32>, [f32; 8])> {
     let variant = rt.manifest().get(&spec.variant)?.clone();
     let params = init::init_params(&variant, &spec.par, &spec.hp, &spec.base, spec.seed);
     let base_lr = init::lr_vec(&variant, &spec.par, &spec.hp, &spec.base);
     let hp_v = hp_vec(spec, rt)?;
-    let mut session = TrainSession::new(rt, &spec.variant, params)?;
+    validate_init(&variant, &spec.variant, &params)?;
+    Ok((variant, params, base_lr, hp_v))
+}
 
+/// Resolve a spec into a [`PreparedRun`] on the coordinator thread.
+/// Returns `Ok(None)` when the backend declines `Send` sessions (PJRT) —
+/// the caller must then execute sequentially via [`run`].
+pub fn prepare(rt: &Runtime, spec: &RunSpec) -> Result<Option<PreparedRun>> {
+    let (variant, params, base_lr, hp_v) = resolve(rt, spec)?;
+    let inner = match rt
+        .backend()
+        .session_send(rt.manifest(), &variant, params)
+        .with_context(|| {
+            format!(
+                "creating {} Send session for {}",
+                rt.backend().name(),
+                spec.variant
+            )
+        })? {
+        Some(s) => s,
+        None => return Ok(None),
+    };
+    Ok(Some(PreparedRun {
+        spec: spec.clone(),
+        core: SessionCore::new(variant, inner),
+        base_lr,
+        hp_v,
+    }))
+}
+
+/// Execute a full training run (single-threaded path).
+pub fn run(rt: &Runtime, spec: &RunSpec, data: &dyn DataSource) -> Result<RunResult> {
+    let (variant, params, base_lr, hp_v) = resolve(rt, spec)?;
+    let inner = rt
+        .backend()
+        .session(rt.manifest(), &variant, params)
+        .with_context(|| {
+            format!("creating {} session for {}", rt.backend().name(), spec.variant)
+        })?;
+    let mut core = SessionCore::new(variant, inner);
+    drive(&mut core, spec, &base_lr, &hp_v, data)
+}
+
+/// The step loop, generic over the session bound so the same code drives
+/// both the sequential path (`dyn BackendSession`) and sweep worker
+/// threads (`dyn BackendSession + Send`).  Identical specs produce
+/// bitwise-identical results on either path — the parallel scheduler's
+/// bit-exact-resume contract rests on this being the single loop.
+fn drive<S: BackendSession + ?Sized>(
+    core: &mut SessionCore<S>,
+    spec: &RunSpec,
+    base_lr: &[f32],
+    hp_v: &[f32; 8],
+    data: &dyn DataSource,
+) -> Result<RunResult> {
+    let t0 = std::time::Instant::now();
+    let flops_per_step = core.variant.flops_per_step();
     let mut result = RunResult {
         train_losses: Vec::with_capacity(spec.steps),
         val_losses: Vec::new(),
@@ -153,11 +236,11 @@ pub fn run(rt: &Runtime, spec: &RunSpec, data: &dyn DataSource) -> Result<RunRes
         let lr_vec: Vec<f32> = base_lr.iter().map(|&l| l * decay as f32).collect();
         let inputs = StepInputs {
             lr_vec,
-            hp_vec: hp_v,
+            hp_vec: *hp_v,
         };
         let batch = data.batch(Split::Train, step);
-        let loss = session.step(&batch, &inputs)? as f64;
-        result.flops += variant.flops_per_step();
+        let loss = core.step(&batch, &inputs)? as f64;
+        result.flops += flops_per_step;
         result.train_losses.push(loss);
         result.steps_done = step + 1;
         if initial_loss.is_nan() {
@@ -168,7 +251,7 @@ pub fn run(rt: &Runtime, spec: &RunSpec, data: &dyn DataSource) -> Result<RunRes
             break;
         }
         if spec.eval_every > 0 && (step + 1) % spec.eval_every == 0 {
-            let v = eval(&session, spec, data, &hp_v)?;
+            let v = eval(core, spec, data, hp_v)?;
             if !v.is_finite() {
                 result.diverged = true;
                 break;
@@ -178,7 +261,7 @@ pub fn run(rt: &Runtime, spec: &RunSpec, data: &dyn DataSource) -> Result<RunRes
     }
     // Always record a final val point for selection if eval was requested.
     if spec.eval_every > 0 && !result.diverged {
-        let v = eval(&session, spec, data, &hp_v)?;
+        let v = eval(core, spec, data, hp_v)?;
         if v.is_finite() {
             result.val_losses.push((result.steps_done, v));
         } else {
@@ -189,8 +272,8 @@ pub fn run(rt: &Runtime, spec: &RunSpec, data: &dyn DataSource) -> Result<RunRes
     Ok(result)
 }
 
-fn eval(
-    session: &TrainSession,
+fn eval<S: BackendSession + ?Sized>(
+    core: &SessionCore<S>,
     spec: &RunSpec,
     data: &dyn DataSource,
     hp_v: &[f32; 8],
@@ -202,7 +285,7 @@ fn eval(
             lr_vec: vec![],
             hp_vec: *hp_v,
         };
-        acc += session.eval(&batch, &inputs)? as f64;
+        acc += core.eval(&batch, &inputs)? as f64;
     }
     Ok(acc / spec.eval_batches as f64)
 }

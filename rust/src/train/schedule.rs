@@ -8,7 +8,10 @@
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Schedule {
     Constant,
-    /// linear decay to 0 at the final step
+    /// linear decay toward 0, floored at `1/total`: the final step trains
+    /// at `lr/total` instead of an exact 0, which would make it a no-op
+    /// (the paper's linear-decay panel likewise never multiplies by 0).
+    /// The floor is intentional; `linear_decays_monotonically` pins it.
     Linear,
     /// cosine annealing to 0
     Cosine,
@@ -94,6 +97,9 @@ mod tests {
             prev = f;
         }
         assert!((sch.factor(0, 100) - 1.0).abs() < 1e-12);
+        // the documented floor: final step trains at exactly 1/total, not 0
+        assert_eq!(sch.factor(99, 100), 0.01);
+        assert_eq!(sch.factor(1, 2), 0.5);
     }
 
     #[test]

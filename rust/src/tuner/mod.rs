@@ -25,14 +25,24 @@ pub enum Dim {
 
 impl Dim {
     /// The paper's `base × 2^z, z ∈ {zlo, zlo+step, …, zhi}` grid shape.
+    ///
+    /// Iterates an integer index (`zlo + i·step`) rather than accumulating
+    /// `z += step`: for steps that are not exact binary fractions (0.1,
+    /// 0.25·3, …) the accumulated float error could overshoot `zhi` and
+    /// silently drop the grid endpoint.
     pub fn pow2_grid(base: f64, zlo: f64, zhi: f64, step: f64) -> Dim {
-        let mut vals = Vec::new();
-        let mut z = zlo;
-        while z <= zhi + 1e-9 {
-            vals.push(base * 2f64.powf(z));
-            z += step;
-        }
-        Dim::Grid(vals)
+        assert!(step > 0.0, "pow2_grid needs step > 0, got {step}");
+        let count = if zhi < zlo {
+            0
+        } else {
+            // same tolerance the old loop used for its `z <= zhi` test
+            ((zhi - zlo + 1e-9) / step) as usize + 1
+        };
+        Dim::Grid(
+            (0..count)
+                .map(|i| base * 2f64.powf(zlo + i as f64 * step))
+                .collect(),
+        )
     }
 
     pub fn sample(&self, rng: &mut Rng) -> f64 {
@@ -272,6 +282,25 @@ mod tests {
                 assert_eq!(v.len(), 12);
                 assert!((v[0] - 5e-4 * 2f64.powf(-1.5)).abs() < 1e-12);
                 assert!((v[11] - 5e-4 * 2f64.powf(1.25)).abs() < 1e-12);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn pow2_grid_keeps_endpoints_with_fractional_step() {
+        // Regression: `z += 0.1` accumulated float error past zhi and
+        // dropped the z = 7 endpoint; the integer-indexed form keeps it.
+        let d = Dim::pow2_grid(1.0, -8.0, 7.0, 0.1);
+        match &d {
+            Dim::Grid(v) => {
+                assert_eq!(v.len(), 151); // z ∈ {-8.0, -7.9, …, 7.0}
+                assert_eq!(v[0], 2f64.powf(-8.0));
+                assert!(
+                    (v[150] / 2f64.powf(7.0) - 1.0).abs() < 1e-12,
+                    "endpoint missing or wrong: {}",
+                    v[150]
+                );
             }
             _ => panic!(),
         }

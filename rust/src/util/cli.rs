@@ -81,6 +81,17 @@ impl Args {
         self.get(key).map(|v| v != "false").unwrap_or(false)
     }
 
+    /// The shared `--workers N` flag (sweep/tuner/transfer parallelism).
+    /// Precedence: explicit flag > `MUTRANSFER_WORKERS` env > `default`;
+    /// always ≥ 1.
+    pub fn workers_or(&self, default: usize) -> usize {
+        self.usize_or(
+            "workers",
+            crate::util::pool::env_workers().unwrap_or(default),
+        )
+        .max(1)
+    }
+
     /// Call after all `get`s: errors on flags that were provided but never
     /// consumed (catches typos like `--step` for `--steps`).
     pub fn reject_unknown(&self) -> Result<(), String> {

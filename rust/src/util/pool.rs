@@ -1,10 +1,18 @@
 //! Minimal worker pool over `std::thread` (no rayon/tokio vendored).
 //!
-//! The sweep scheduler uses it to run trials concurrently.  On this 1-core
-//! testbed the default is a single worker (XLA already saturates the
-//! core), but the scheduler/journal logic is written — and tested — for
-//! arbitrary worker counts, matching the paper's benefit #4 (small-model
-//! tuning parallelizes trivially across a cluster).
+//! The sweep scheduler fans trials out through [`run_indexed`] (see
+//! `Sweep::run`), matching the paper's benefit #4 (small-model tuning
+//! parallelizes trivially across a cluster).  The scheduler/journal logic
+//! is written — and tested — for arbitrary worker counts.
+//!
+//! Panic policy: a panicking job must surface to the caller as *its own*
+//! panic payload, re-raised after all threads join — never as a derived
+//! panic from pool bookkeeping (the old code's `expect("worker died")`
+//! masked the payload).  Jobs run with the queue lock released, so a job
+//! panic cannot poison the mutex and sibling workers keep draining the
+//! queue; should the lock ever be found poisoned anyway (a panic inside
+//! `pop` itself), the guard is recovered rather than cascaded, since the
+//! `Vec` underneath is still consistent.
 
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
@@ -12,7 +20,9 @@ use std::sync::{Arc, Mutex};
 /// Run `jobs` across `workers` threads, preserving result order.
 ///
 /// `f` must be `Send + Sync`; jobs are pulled from a shared queue so the
-/// pool load-balances uneven job durations.
+/// pool load-balances uneven job durations.  If a job panics, the
+/// remaining jobs still run and the original panic payload is re-raised
+/// on the calling thread once every worker has finished.
 pub fn run_indexed<J, R, F>(jobs: Vec<J>, workers: usize, f: F) -> Vec<R>
 where
     J: Send + 'static,
@@ -38,7 +48,12 @@ where
         let f = f.clone();
         let tx = tx.clone();
         handles.push(std::thread::spawn(move || loop {
-            let job = queue.lock().unwrap().pop();
+            // Jobs run with the lock released, so job panics never poison
+            // this mutex; recovering a poisoned guard (a panic inside
+            // `pop` itself) is defensive — the Vec is still consistent,
+            // and cascading an unrelated lock panic would mask the
+            // original payload.
+            let job = queue.lock().unwrap_or_else(|e| e.into_inner()).pop();
             match job {
                 Some((i, j)) => {
                     let r = f(i, j);
@@ -55,10 +70,20 @@ where
     for (i, r) in rx {
         out[i] = Some(r);
     }
+    let mut panic_payload = None;
     for h in handles {
-        let _ = h.join();
+        if let Err(p) = h.join() {
+            // keep only the first payload; later ones are either the same
+            // logical failure or casualties of it
+            panic_payload.get_or_insert(p);
+        }
     }
-    out.into_iter().map(|r| r.expect("worker died")).collect()
+    if let Some(p) = panic_payload {
+        std::panic::resume_unwind(p);
+    }
+    out.into_iter()
+        .map(|r| r.expect("pool invariant: no panic implies every job completed"))
+        .collect()
 }
 
 /// Suggested worker count: leave the runtime's XLA execution the whole
@@ -67,6 +92,17 @@ pub fn default_workers() -> usize {
     std::thread::available_parallelism()
         .map(|n| (n.get() / 2).max(1))
         .unwrap_or(1)
+}
+
+/// Worker count from the `MUTRANSFER_WORKERS` env var (CI sets it to 4 so
+/// the parallel scheduler path is exercised on every push); `None` when
+/// unset or unparseable.
+pub fn env_workers() -> Option<usize> {
+    std::env::var("MUTRANSFER_WORKERS")
+        .ok()?
+        .parse()
+        .ok()
+        .filter(|&n| n >= 1)
 }
 
 #[cfg(test)]
@@ -99,5 +135,54 @@ mod tests {
     fn index_passed_through() {
         let r = run_indexed(vec!['a', 'b', 'c'], 2, |i, c| format!("{i}{c}"));
         assert_eq!(r, vec!["0a", "1b", "2c"]);
+    }
+
+    #[test]
+    fn panicking_job_propagates_its_own_payload() {
+        // Regression: a worker panic used to surface to the caller as the
+        // pool's own `expect("worker died")` panic, masking the job's
+        // payload; now the original payload is re-raised after join.
+        let payload = std::panic::catch_unwind(|| {
+            run_indexed((0..8).collect(), 4, |_, j: i32| {
+                if j == 3 {
+                    panic!("boom {j}");
+                }
+                j
+            })
+        })
+        .expect_err("a panicking job must panic the caller");
+        let msg = payload
+            .downcast_ref::<String>()
+            .expect("payload should be the job's own format string");
+        assert_eq!(msg, "boom 3");
+    }
+
+    #[test]
+    fn siblings_finish_despite_a_panicking_job() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let done = Arc::new(AtomicUsize::new(0));
+        let seen = done.clone();
+        let r = std::panic::catch_unwind(|| {
+            run_indexed((0..16).collect(), 4, move |_, j: i32| {
+                if j == 0 {
+                    panic!("first job dies");
+                }
+                seen.fetch_add(1, Ordering::SeqCst);
+                j
+            })
+        });
+        assert!(r.is_err());
+        // the other 15 jobs all ran: one worker dying never blocks the rest
+        assert_eq!(done.load(Ordering::SeqCst), 15);
+    }
+
+    #[test]
+    fn env_workers_never_returns_zero() {
+        // deliberately does not mutate the (process-global) env: the CI
+        // matrix sets MUTRANSFER_WORKERS for the whole test binary
+        match env_workers() {
+            Some(n) => assert!(n >= 1),
+            None => {}
+        }
     }
 }

@@ -1,8 +1,11 @@
-//! Sweep-resume integration test: run a journaled sweep through the
+//! Sweep-resume integration tests: run a journaled sweep through the
 //! native backend, truncate the journal mid-way, re-run, and assert that
 //! (a) journaled jobs are skipped (not re-executed), and (b) the combined
 //! results are bit-identical to the first pass — the determinism + JSON
 //! round-trip contract the scheduler's crash-recovery story rests on.
+//! The parallel tests pin the multi-worker scheduler to the same
+//! contract: job-ordered results, exactly one journal record per job, and
+//! bit-identical resume at any worker count.
 
 use mutransfer::model::BaseShape;
 use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
@@ -102,4 +105,115 @@ fn sweep_resumes_from_truncated_journal() {
     }
     let final_lines = std::fs::read_to_string(&journal).unwrap().lines().count();
     assert_eq!(final_lines, js.len(), "fully-journaled sweep must not append");
+}
+
+/// Everything except wall time must match bit-for-bit between two runs of
+/// the same job (wall clock legitimately differs across workers/machines).
+fn assert_same_result(a: &mutransfer::sweep::JobResult, b: &mutransfer::sweep::JobResult) {
+    assert_eq!(a.key, b.key);
+    assert_eq!(a.train_curve, b.train_curve, "{}", a.key);
+    assert_eq!(a.val_curve, b.val_curve, "{}", a.key);
+    assert_eq!(a.trial.diverged, b.trial.diverged, "{}", a.key);
+    assert_eq!(a.trial.train_loss.to_bits(), b.trial.train_loss.to_bits(), "{}", a.key);
+    assert_eq!(a.trial.val_loss.to_bits(), b.trial.val_loss.to_bits(), "{}", a.key);
+    assert_eq!(a.trial.flops, b.trial.flops, "{}", a.key);
+    assert_eq!(a.trial.assignment.values, b.trial.assignment.values, "{}", a.key);
+}
+
+/// Keys present in a journal file, in append order.
+fn journal_keys(path: &std::path::Path) -> Vec<String> {
+    std::fs::read_to_string(path)
+        .unwrap()
+        .lines()
+        .filter(|l| !l.trim().is_empty())
+        .map(|l| {
+            mutransfer::util::json::parse(l).unwrap().get("key").unwrap().as_str().unwrap().to_string()
+        })
+        .collect()
+}
+
+#[test]
+fn parallel_sweep_matches_sequential_bit_for_bit() {
+    let rt = Runtime::native();
+    let dir = std::env::temp_dir().join("mutransfer_sweep_parallel_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let js = jobs();
+
+    // sequential reference (1 worker, journaled)
+    let j_seq = dir.join("seq.journal");
+    let seq = Sweep::new(&rt)
+        .with_workers(1)
+        .with_journal(&j_seq)
+        .unwrap()
+        .run(&js)
+        .unwrap();
+
+    // 4 workers on a fresh journal
+    let j_par = dir.join("par.journal");
+    let par = Sweep::new(&rt)
+        .with_workers(4)
+        .with_journal(&j_par)
+        .unwrap()
+        .run(&js)
+        .unwrap();
+
+    // (a) results come back in job order, regardless of completion order
+    assert_eq!(par.len(), js.len());
+    for (job, r) in js.iter().zip(&par) {
+        assert_eq!(job.key, r.key, "results must be in job order");
+    }
+
+    // (b) the journal holds exactly one record per job (any line order)
+    let mut keys = journal_keys(&j_par);
+    keys.sort();
+    let mut expect: Vec<String> = js.iter().map(|j| j.key.clone()).collect();
+    expect.sort();
+    assert_eq!(keys, expect, "exactly one journal record per job");
+
+    // parallel results are bit-identical to the sequential ones
+    for (a, b) in seq.iter().zip(&par) {
+        assert_same_result(a, b);
+    }
+}
+
+#[test]
+fn truncated_journal_resumes_bit_identically_under_4_workers() {
+    let rt = Runtime::native();
+    let dir = std::env::temp_dir().join("mutransfer_sweep_parallel_resume_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let js = jobs();
+
+    // full sequential pass = the reference trajectory
+    let journal = dir.join("sweep.journal");
+    let reference = Sweep::new(&rt)
+        .with_workers(1)
+        .with_journal(&journal)
+        .unwrap()
+        .run(&js)
+        .unwrap();
+
+    // crash simulation: keep only the first two journal lines
+    let text = std::fs::read_to_string(&journal).unwrap();
+    let lines: Vec<&str> = text.lines().filter(|l| !l.trim().is_empty()).collect();
+    std::fs::write(&journal, format!("{}\n{}\n", lines[0], lines[1])).unwrap();
+
+    // resume under 4 workers: two jobs preload, two re-execute in parallel
+    let mut resumed = Sweep::new(&rt).with_workers(4).with_journal(&journal).unwrap();
+    assert_eq!(resumed.completed(), 2, "journaled jobs should be preloaded");
+    let second = resumed.run(&js).unwrap();
+    assert_eq!(resumed.completed(), js.len());
+
+    // bit-identical to the sequential reference, in job order
+    for (a, b) in reference.iter().zip(&second) {
+        assert_same_result(a, b);
+    }
+
+    // still exactly one record per job after the parallel resume
+    let mut keys = journal_keys(&journal);
+    keys.sort();
+    let mut expect: Vec<String> = js.iter().map(|j| j.key.clone()).collect();
+    expect.sort();
+    assert_eq!(keys, expect);
 }
