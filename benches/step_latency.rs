@@ -1,24 +1,123 @@
 //! Per-step latency across widths — the L3 perf-pass workhorse
-//! (EXPERIMENTS.md §Perf).  Breaks a train step into its host-side
-//! components (batch gen, literal marshalling) vs PJRT execution so the
-//! coordinator's overhead is directly visible.
+//! (EXPERIMENTS.md §Perf).  Two sections:
+//!
+//! 1. kernel-level: the blocked, panel-packed GEMMs (tensor.rs) against
+//!    the naive reference loops (`tensor::naive`) at the exact shapes a
+//!    d_model ≥ 256 train step issues — the ≥2× speedup bar of the
+//!    blocked-kernel rewrite is enforced here (geometric mean across the
+//!    shapes at each d_model; the bench exits non-zero below the bar;
+//!    set STEP_LATENCY_NO_ASSERT=1 to measure without gating);
+//! 2. end-to-end: a full train step per width, so coordinator overhead
+//!    (batch gen, marshalling) stays visible next to the math.
+//!
+//! Sessions are single-threaded internally (determinism invariant,
+//! DESIGN.md §5), so these numbers multiply directly with the multi-worker
+//! sweep scheduler's trial throughput (`benches/sweep_throughput.rs`).
 
 use std::time::Duration;
 
 use mutransfer::data::{source_for, Split};
 use mutransfer::init;
+use mutransfer::init::rng::det_fill;
 use mutransfer::model::BaseShape;
 use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::runtime::native::tensor::{self, naive};
 use mutransfer::runtime::session::StepInputs;
 use mutransfer::runtime::{Runtime, TrainSession};
-use mutransfer::util::bench::bench_print;
+use mutransfer::util::bench::{bench, bench_print, fmt_ns};
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::new(&mutransfer::artifacts_dir())?;
     let budget = Duration::from_secs(3);
-    println!("== step_latency: end-to-end train step by width ==");
+
+    println!("== step_latency: blocked vs naive GEMM at train-step shapes ==");
+    // rows = batch·seq = 16·32 for every registry transformer; the three
+    // kernel variants cover forward (mm), weight grads (mm_tn: contraction
+    // over rows), and input grads (mm_nt: contraction over the wide dim).
+    let kbudget = Duration::from_millis(800);
+    let rows = 16 * 32;
+    enum Kernel {
+        Nn, // mm:    a (m, k) · b (k, n)
+        Tn, // mm_tn: a (k, m)ᵀ · b (k, n)
+        Nt, // mm_nt: a (m, k) · b (n, k)ᵀ
+    }
+    let mut below_bar = Vec::new();
+    for &dm in &[256usize, 512] {
+        let mut log_speedups = Vec::new();
+        let shapes = [
+            ("qkv/fwd   mm", Kernel::Nn, rows, dm, dm), // h·W_q (d_attn = d_model)
+            ("ffn/fwd   mm", Kernel::Nn, rows, dm, 4 * dm), // h·W1
+            ("wgrad  mm_tn", Kernel::Tn, dm, rows, 4 * dm), // hᵀ·du (k = rows)
+            ("igrad  mm_nt", Kernel::Nt, rows, 4 * dm, dm), // du·W1ᵀ
+        ];
+        for (tag, kind, m, k, n) in shapes {
+            let (blocked, naive_s) = match kind {
+                Kernel::Nn => {
+                    let a = det_fill(m * k, 1, 0.1);
+                    let b = det_fill(k * n, 2, 0.1);
+                    (
+                        bench(&format!("blocked/{tag}/d{dm}"), kbudget, || {
+                            std::hint::black_box(tensor::mm(&a, &b, m, k, n));
+                        }),
+                        bench(&format!("naive/{tag}/d{dm}"), kbudget, || {
+                            std::hint::black_box(naive::mm(&a, &b, m, k, n));
+                        }),
+                    )
+                }
+                Kernel::Tn => {
+                    let a = det_fill(k * m, 3, 0.1);
+                    let b = det_fill(k * n, 4, 0.1);
+                    (
+                        bench(&format!("blocked/{tag}/d{dm}"), kbudget, || {
+                            std::hint::black_box(tensor::mm_tn(&a, &b, k, m, n));
+                        }),
+                        bench(&format!("naive/{tag}/d{dm}"), kbudget, || {
+                            std::hint::black_box(naive::mm_tn(&a, &b, k, m, n));
+                        }),
+                    )
+                }
+                Kernel::Nt => {
+                    let a = det_fill(m * k, 5, 0.1);
+                    let b = det_fill(n * k, 6, 0.1);
+                    (
+                        bench(&format!("blocked/{tag}/d{dm}"), kbudget, || {
+                            std::hint::black_box(tensor::mm_nt(&a, &b, m, k, n));
+                        }),
+                        bench(&format!("naive/{tag}/d{dm}"), kbudget, || {
+                            std::hint::black_box(naive::mm_nt(&a, &b, m, k, n));
+                        }),
+                    )
+                }
+            };
+            let speedup = naive_s.median_ns / blocked.median_ns;
+            log_speedups.push(speedup.ln());
+            println!(
+                "{:<14} d_model {:>4}  (m {:>4}, k {:>4}, n {:>5})  blocked {:>12}  naive {:>12}  speedup {:.2}x",
+                tag,
+                dm,
+                m,
+                k,
+                n,
+                fmt_ns(blocked.median_ns),
+                fmt_ns(naive_s.median_ns),
+                speedup,
+            );
+        }
+        let geomean =
+            (log_speedups.iter().sum::<f64>() / log_speedups.len() as f64).exp();
+        println!("  -> d_model {dm}: geomean kernel speedup {geomean:.2}x (bar: 2.00x)");
+        if geomean < 2.0 {
+            below_bar.push((dm, geomean));
+        }
+    }
+    if !below_bar.is_empty() && std::env::var_os("STEP_LATENCY_NO_ASSERT").is_none() {
+        eprintln!("FAIL: blocked kernels below the 2x acceptance bar: {below_bar:?}");
+        std::process::exit(1);
+    }
+
+    println!("\n== step_latency: end-to-end train step by width ==");
     let mut results = Vec::new();
-    for w in [32usize, 64, 128, 256] {
+    for w in [32usize, 64, 128, 256, 512] {
         let variant = format!("tfm_post_w{w}_d2");
         let v = rt.manifest().get(&variant)?.clone();
         let par = Parametrization::mup(Optimizer::Adam);

@@ -28,35 +28,172 @@ F = np.float32
 # --- tensor.rs ---------------------------------------------------------
 
 
+# Blocked kernels (PR 3): panel-packed, register-tiled GEMMs.  The index
+# arithmetic below is a line-for-line transcription of the Rust blocked
+# drivers; _micro mirrors the MR x NR microkernel including its f32
+# accumulation order (k ascending within a KC block, KC blocks ascending).
+
+MR = 4  # microkernel rows (the 4x unroll)
+NR = 16  # B-panel width
+KC = 256  # k-dimension cache block
+NC = 256  # n-dimension cache block (multiple of NR)
+
+
+def _pack_b(b, k0, kb, j0, nb, n):
+    npan = (nb + NR - 1) // NR
+    out = [F(0.0)] * (npan * kb * NR)
+    for p in range(npan):
+        jl = j0 + p * NR
+        w = min(NR, j0 + nb - jl)
+        dst0 = p * kb * NR
+        for l in range(kb):
+            src = (k0 + l) * n + jl
+            dst = dst0 + l * NR
+            out[dst : dst + w] = b[src : src + w]
+    return out
+
+
+def _pack_bt(b, k0, kb, j0, nb, kstride):
+    npan = (nb + NR - 1) // NR
+    out = [F(0.0)] * (npan * kb * NR)
+    for p in range(npan):
+        jl = j0 + p * NR
+        w = min(NR, j0 + nb - jl)
+        dst0 = p * kb * NR
+        for jr in range(w):
+            src = (jl + jr) * kstride + k0
+            for l in range(kb):
+                out[dst0 + l * NR + jr] = b[src + l]
+    return out
+
+
+def _pack_at(a, k0, kb, m):
+    out = [F(0.0)] * (m * kb)
+    for i in range(m):
+        for l in range(kb):
+            out[i * kb + l] = a[(k0 + l) * m + i]
+    return out
+
+
+def _micro(a, a_off, a_stride, mr, panel, kb, c, c_off, c_stride, w):
+    acc = [[F(0.0)] * NR for _ in range(MR)]
+    for l in range(kb):
+        bl = panel[l * NR : (l + 1) * NR]
+        for r in range(mr):
+            av = a[a_off + r * a_stride + l]
+            accr = acc[r]
+            for j in range(NR):
+                accr[j] = F(accr[j] + F(av * bl[j]))
+    for r in range(mr):
+        base = c_off + r * c_stride
+        for j in range(w):
+            c[base + j] = F(c[base + j] + acc[r][j])
+
+
+def _kernel_block(c, a, a_col0, a_stride, m, panel, kb, j0, nb, n):
+    npan = (nb + NR - 1) // NR
+    i0 = 0
+    while i0 < m:
+        mr = min(MR, m - i0)
+        for p in range(npan):
+            jl = j0 + p * NR
+            w = min(NR, j0 + nb - jl)
+            _micro(
+                a,
+                i0 * a_stride + a_col0,
+                a_stride,
+                mr,
+                panel[p * kb * NR : (p + 1) * kb * NR],
+                kb,
+                c,
+                i0 * n + jl,
+                n,
+                w,
+            )
+        i0 += mr
+
+
+def mm_into(c, a, b, m, k, n):
+    for k0 in range(0, k, KC):
+        kb = min(KC, k - k0)
+        for j0 in range(0, n, NC):
+            nb = min(NC, n - j0)
+            panel = _pack_b(b, k0, kb, j0, nb, n)
+            _kernel_block(c, a, k0, k, m, panel, kb, j0, nb, n)
+
+
 def mm(a, b, m, k, n):
     c = [F(0.0)] * (m * n)
-    for i in range(m):
-        for l in range(k):
-            av = a[i * k + l]
-            for j in range(n):
-                c[i * n + j] = F(c[i * n + j] + F(av * b[l * n + j]))
+    mm_into(c, a, b, m, k, n)
     return c
+
+
+def mm_tn_into(c, a, b, k, m, n):
+    for k0 in range(0, k, KC):
+        kb = min(KC, k - k0)
+        at = _pack_at(a, k0, kb, m)
+        for j0 in range(0, n, NC):
+            nb = min(NC, n - j0)
+            panel = _pack_b(b, k0, kb, j0, nb, n)
+            _kernel_block(c, at, 0, kb, m, panel, kb, j0, nb, n)
 
 
 def mm_tn(a, b, k, m, n):
     c = [F(0.0)] * (m * n)
-    for l in range(k):
-        for i in range(m):
-            av = a[l * m + i]
-            for j in range(n):
-                c[i * n + j] = F(c[i * n + j] + F(av * b[l * n + j]))
+    mm_tn_into(c, a, b, k, m, n)
     return c
+
+
+def mm_nt_into(c, a, b, m, k, n):
+    for k0 in range(0, k, KC):
+        kb = min(KC, k - k0)
+        for j0 in range(0, n, NC):
+            nb = min(NC, n - j0)
+            panel = _pack_bt(b, k0, kb, j0, nb, k)
+            _kernel_block(c, a, k0, k, m, panel, kb, j0, nb, n)
 
 
 def mm_nt(a, b, m, k, n):
     c = [F(0.0)] * (m * n)
-    for i in range(m):
-        for j in range(n):
-            acc = F(0.0)
-            for l in range(k):
-                acc = F(acc + F(a[i * k + l] * b[j * k + l]))
-            c[i * n + j] = acc
+    mm_nt_into(c, a, b, m, k, n)
     return c
+
+
+def pack_head(src, row0, s, stride, off, dh):
+    dst = [F(0.0)] * (s * dh)
+    for si in range(s):
+        sb = (row0 + si) * stride + off
+        dst[si * dh : (si + 1) * dh] = src[sb : sb + dh]
+    return dst
+
+
+def unpack_head(src, dst, row0, s, stride, off, dh):
+    for si in range(s):
+        db = (row0 + si) * stride + off
+        dst[db : db + dh] = src[si * dh : (si + 1) * dh]
+
+
+def softmax_ctx_fused(scores, v, s, dh, ctx):
+    for qi in range(s):
+        row = scores[qi * s : (qi + 1) * s]
+        softmax_prefix(row, qi + 1)
+        scores[qi * s : (qi + 1) * s] = row
+        crow = [F(0.0)] * dh
+        kj = 0
+        while kj + MR <= s:
+            p0, p1, p2, p3 = row[kj], row[kj + 1], row[kj + 2], row[kj + 3]
+            for t in range(dh):
+                acc = F(F(p0 * v[kj * dh + t]) + F(p1 * v[(kj + 1) * dh + t]))
+                acc = F(acc + F(p2 * v[(kj + 2) * dh + t]))
+                acc = F(acc + F(p3 * v[(kj + 3) * dh + t]))
+                crow[t] = F(crow[t] + acc)
+            kj += MR
+        while kj < s:
+            p = row[kj]
+            for t in range(dh):
+                crow[t] = F(crow[t] + F(p * v[kj * dh + t]))
+            kj += 1
+        ctx[qi * dh : (qi + 1) * dh] = crow
 
 
 def layernorm(x, g, b, rows, d):
@@ -164,28 +301,22 @@ class TfmSim:
         for b in range(bsz):
             for hh in range(nh):
                 head = hh * dh
-                for qi in range(s):
-                    qrow = q[(b * s + qi) * da + head : (b * s + qi) * da + head + dh]
-                    base = ((b * nh + hh) * s + qi) * s
-                    prow = prob[base : base + s]
-                    for kj in range(qi + 1):
-                        krow = k[(b * s + kj) * da + head : (b * s + kj) * da + head + dh]
-                        dot = F(0.0)
-                        for t in range(dh):
-                            dot = F(dot + F(F(qrow[t] * scale) * krow[t]))
-                        prow[kj] = dot
-                    if want_alog:
-                        alog[base : base + qi + 1] = prow[: qi + 1]
-                    softmax_prefix(prow, qi + 1)
-                    prob[base : base + s] = prow
-                    ctx = [F(0.0)] * dh
-                    for kj in range(qi + 1):
-                        p = prob[base + kj]
-                        vrow = v[(b * s + kj) * da + head : (b * s + kj) * da + head + dh]
-                        for t in range(dh):
-                            ctx[t] = F(ctx[t] + F(p * vrow[t]))
-                    mb = (b * s + qi) * da + head
-                    merged[mb : mb + dh] = ctx
+                qh = pack_head(q, b * s, s, da, head, dh)
+                kh = pack_head(k, b * s, s, da, head, dh)
+                vh = pack_head(v, b * s, s, da, head, dh)
+                qh = [F(x * scale) for x in qh]
+                blk = (b * nh + hh) * s * s
+                scores = [F(0.0)] * (s * s)
+                mm_nt_into(scores, qh, kh, s, dh, s)
+                if want_alog:
+                    for qi in range(s):
+                        alog[blk + qi * s : blk + qi * s + qi + 1] = scores[
+                            qi * s : qi * s + qi + 1
+                        ]
+                ctx = [F(0.0)] * (s * dh)
+                softmax_ctx_fused(scores, vh, s, dh, ctx)
+                prob[blk : blk + s * s] = scores
+                unpack_head(ctx, merged, b * s, s, da, head, dh)
         out = mm(merged, self.block(i, WO), rows, da, d)
         return out, alog, q, k, v, prob, merged
 
@@ -200,36 +331,43 @@ class TfmSim:
         dq = [F(0.0)] * (rows * da)
         dk = [F(0.0)] * (rows * da)
         dv = [F(0.0)] * (rows * da)
-        dprob = [F(0.0)] * s
         for b in range(bsz):
             for hh in range(nh):
                 head = hh * dh
+                qh = pack_head(q, b * s, s, da, head, dh)
+                kh = pack_head(k, b * s, s, da, head, dh)
+                vh = pack_head(v, b * s, s, da, head, dh)
+                dctx = pack_head(dmerged, b * s, s, da, head, dh)
+                blk = (b * nh + hh) * s * s
+                pblk = prob[blk : blk + s * s]
+                # dprob = dctx · vhᵀ over full rows; masked columns carry
+                # exact-zero probabilities so they only contribute zeros
+                # (or NaN-poison, matching numpy) below.
+                dprob = [F(0.0)] * (s * s)
+                mm_nt_into(dprob, dctx, vh, s, dh, s)
+                # dvh = probᵀ · dctx
+                dvh = [F(0.0)] * (s * dh)
+                mm_tn_into(dvh, pblk, dctx, s, s, dh)
+                unpack_head(dvh, dv, b * s, s, da, head, dh)
+                # softmax backward rowwise: dmasked = p ⊙ (dprob − ⟨dprob, p⟩)
                 for qi in range(s):
-                    dctx = dmerged[(b * s + qi) * da + head : (b * s + qi) * da + head + dh]
-                    base = ((b * nh + hh) * s + qi) * s
-                    sum_dp = F(0.0)
-                    for kj in range(qi + 1):
-                        vrow = v[(b * s + kj) * da + head : (b * s + kj) * da + head + dh]
-                        dot = F(0.0)
-                        for t in range(dh):
-                            dot = F(dot + F(dctx[t] * vrow[t]))
-                        dprob[kj] = dot
-                        sum_dp = F(sum_dp + F(dot * prob[base + kj]))
-                    qrow = q[(b * s + qi) * da + head : (b * s + qi) * da + head + dh]
-                    for kj in range(qi + 1):
-                        p = prob[base + kj]
-                        for t in range(dh):
-                            idx = (b * s + kj) * da + head + t
-                            dv[idx] = F(dv[idx] + F(p * dctx[t]))
-                        dmasked = F(p * F(dprob[kj] - sum_dp))
-                        if dmasked == 0.0:
-                            continue
-                        krow = k[(b * s + kj) * da + head : (b * s + kj) * da + head + dh]
-                        for t in range(dh):
-                            qidx = (b * s + qi) * da + head + t
-                            kidx = (b * s + kj) * da + head + t
-                            dq[qidx] = F(dq[qidx] + F(F(dmasked * krow[t]) * scale))
-                            dk[kidx] = F(dk[kidx] + F(F(dmasked * qrow[t]) * scale))
+                    sdp = F(0.0)
+                    for j in range(s):
+                        sdp = F(sdp + F(dprob[qi * s + j] * pblk[qi * s + j]))
+                    for j in range(s):
+                        dprob[qi * s + j] = F(
+                            pblk[qi * s + j] * F(dprob[qi * s + j] - sdp)
+                        )
+                # dqh = (dmasked · kh) · scale
+                dqh = [F(0.0)] * (s * dh)
+                mm_into(dqh, dprob, kh, s, s, dh)
+                dqh = [F(x * scale) for x in dqh]
+                unpack_head(dqh, dq, b * s, s, da, head, dh)
+                # dkh = dmaskedᵀ · (qh · scale)
+                qh = [F(x * scale) for x in qh]
+                dkh = [F(0.0)] * (s * dh)
+                mm_tn_into(dkh, dprob, qh, s, s, dh)
+                unpack_head(dkh, dk, b * s, s, da, head, dh)
         axpy(grads[gb + WQ], mm_tn(attn_in, dq, rows, d, da))
         axpy(grads[gb + WK], mm_tn(attn_in, dk, rows, d, da))
         axpy(grads[gb + WV], mm_tn(attn_in, dv, rows, d, da))
@@ -242,7 +380,8 @@ class TfmSim:
         c = self.cfg
         rows = c.batch * c.seq
         u = mm(h, self.block(i, W1), rows, c.d_model, c.d_ffn)
-        r = [x if x > 0.0 else F(0.0) for x in u]
+        # mirrors tensor.rs relu: np.maximum semantics, NaN propagates
+        r = [x if x > 0.0 or math.isnan(x) else F(0.0) for x in u]
         f = mm(r, self.block(i, W2), rows, c.d_ffn, c.d_model)
         return f, u, r
 
@@ -379,9 +518,54 @@ def compare(tag, got, want, tol=2e-5):
     return worst < tol
 
 
-def run_tfm(ln):
-    cfg = R.TfmCfg(vocab=13, seq=7, batch=3, d_model=8, n_layer=2,
-                   n_head=2, d_head=4, d_ffn=12, ln=ln)
+def check_kernels():
+    """Blocked GEMMs vs numpy on shapes that exercise every edge path:
+    non-multiple-of-MR rows, non-multiple-of-NR columns, k spanning
+    multiple KC blocks, and degenerate dims."""
+    rng = np.random.default_rng(7)
+    ok = True
+    for (m, k, n) in [
+        (1, 1, 1),
+        (3, 5, 2),
+        (4, 16, 16),
+        (5, 17, 33),
+        (9, 40, 21),
+        (2, 300, 7),  # k crosses the KC=256 block edge
+        (13, 260, 18),
+        (5, 7, 300),  # n crosses the NC=256 block edge
+    ]:
+        a = rng.standard_normal((m, k)).astype(F)
+        b = rng.standard_normal((k, n)).astype(F)
+        got = mm(flat(a), flat(b), m, k, n)
+        ok &= compare(f"mm {m}x{k}x{n}", got, (a.astype(np.float64) @ b.astype(np.float64)).astype(F))
+        # mm_tn takes a as (k, m) row-major: that's a.T laid out row-major
+        got = mm_tn(flat(np.ascontiguousarray(a.T)), flat(b), k, m, n)
+        ok &= compare(f"mm_tn {m}x{k}x{n}", got, (a.astype(np.float64) @ b.astype(np.float64)).astype(F))
+        bt = np.ascontiguousarray(b.T)  # (n, k) input for mm_nt
+        got = mm_nt(flat(a), flat(bt), m, k, n)
+        ok &= compare(f"mm_nt {m}x{k}x{n}", got, (a.astype(np.float64) @ b.astype(np.float64)).astype(F))
+    # NaN poisoning: 0 · Inf in A/B must reach C (no zero-skip shortcut)
+    a = np.zeros((4, 4), F)
+    b = np.full((4, 4), np.inf, F)
+    for got, tag in [
+        (mm(flat(a), flat(b), 4, 4, 4), "mm"),
+        (mm_tn(flat(a), flat(b), 4, 4, 4), "mm_tn"),
+        (mm_nt(flat(a), flat(b), 4, 4, 4), "mm_nt"),
+    ]:
+        if not all(math.isnan(x) for x in got):
+            print(f"  {tag} zero-times-inf failed to poison: FAIL")
+            ok = False
+    return ok
+
+
+def run_tfm(ln, odd=False):
+    if odd:
+        # deliberately awkward dims: s and dh off every tile boundary
+        cfg = R.TfmCfg(vocab=11, seq=9, batch=2, d_model=20, n_layer=1,
+                       n_head=2, d_head=5, d_ffn=17, ln=ln)
+    else:
+        cfg = R.TfmCfg(vocab=13, seq=7, batch=3, d_model=8, n_layer=2,
+                       n_head=2, d_head=4, d_ffn=12, ln=ln)
     specs = R.tfm_param_specs(cfg)
     params_np = {name: R.det_fill(shape, 50 + i, 0.08, F) for i, (name, shape, _) in enumerate(specs)}
     tokens_np = R.det_tokens(cfg.batch, cfg.seq + 1, cfg.vocab, 321)
@@ -402,9 +586,11 @@ def run_tfm(ln):
 
 
 def main():
-    ok = True
+    print("blocked-kernel self-check vs numpy:")
+    ok = check_kernels()
     for ln in ["post", "pre"]:
         ok &= run_tfm(ln)
+        ok &= run_tfm(ln, odd=True)
     if not ok:
         print("SIMULATION MISMATCH", file=sys.stderr)
         return 1

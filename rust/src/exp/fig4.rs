@@ -114,11 +114,8 @@ pub(crate) fn run_inner(
                 };
                 pts.push((v, loss));
             }
-            let best = pts
-                .iter()
-                .filter(|(_, l)| l.is_finite())
-                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
-            if let Some(&(v, l)) = best {
+            let best = best_finite_cell(&pts);
+            if let Some((v, l)) = best {
                 summary.row(vec![
                     hp_name.to_string(),
                     label.clone(),
@@ -162,13 +159,9 @@ pub(crate) fn run_inner(
             let r = sweep.run(&[job])?.remove(0);
             rows.push((sched_name.to_string(), r.trial.train_loss));
         }
-        let best = rows
-            .iter()
-            .filter(|(_, l)| l.is_finite())
-            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
-            .cloned();
+        let best = best_finite_cell(&rows);
         if let Some((s, l)) = best {
-            summary.row(vec!["schedule".into(), label.clone(), s.clone(), fmt_loss(l)]);
+            summary.row(vec!["schedule".into(), label.clone(), s, fmt_loss(l)]);
         }
         sj.set(
             label,
@@ -185,4 +178,56 @@ pub(crate) fn run_inner(
     rep.json(name, &series)?;
     let _ = BaseShape::SameAsTarget; // (SP comparison lives in fig1/fig18)
     Ok(())
+}
+
+/// Best (key, loss) cell ignoring non-finite losses — a diverged
+/// width/LR cell (NaN/∞ loss) must neither win the argmin nor panic the
+/// comparator, mirroring `tuner::select_best`.  None if every cell
+/// diverged.
+pub(crate) fn best_finite_cell<T: Clone>(cells: &[(T, f64)]) -> Option<(T, f64)> {
+    cells
+        .iter()
+        .filter(|(_, l)| l.is_finite())
+        .min_by(|a, b| a.1.total_cmp(&b.1))
+        .cloned()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::best_finite_cell;
+
+    /// The Fig. 4 argmin with one diverged LR cell: picks the best finite
+    /// loss instead of panicking (the old partial_cmp().unwrap()).
+    #[test]
+    fn best_pick_ignores_diverged_cell() {
+        let pts = vec![
+            (0.25f64, 4.1),
+            (0.5, f64::NAN), // diverged cell from a NaN val_loss journal decode
+            (1.0, 3.2),
+            (2.0, f64::INFINITY),
+            (4.0, 3.9),
+        ];
+        let (v, l) = best_finite_cell(&pts).unwrap();
+        assert_eq!(v, 1.0);
+        assert_eq!(l, 3.2);
+    }
+
+    #[test]
+    fn best_pick_all_diverged_is_none() {
+        let pts = vec![(0.25f64, f64::NAN), (0.5, f64::NAN)];
+        assert!(best_finite_cell(&pts).is_none());
+        assert!(best_finite_cell::<f64>(&[]).is_none());
+    }
+
+    #[test]
+    fn best_pick_string_keys() {
+        let rows = vec![
+            ("cosine".to_string(), f64::NAN),
+            ("linear".to_string(), 2.5),
+            ("constant".to_string(), 2.7),
+        ];
+        let (s, l) = best_finite_cell(&rows).unwrap();
+        assert_eq!(s, "linear");
+        assert_eq!(l, 2.5);
+    }
 }

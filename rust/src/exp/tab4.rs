@@ -138,16 +138,27 @@ fn run_mt(
 
     let mut t = Table::new(
         &format!("{name}: target val-loss percentiles over {trials} independent tuning trials (lower is better)"),
-        &["setup", "#samples", "p25", "p50", "p75", "p100(worst→best order: p100 is max loss)"],
+        &["setup", "#samples", "p25", "p50", "p75", "p100 (max finite loss; diverged count in row label)"],
     );
+    // Diverged trials decode as NaN val_loss; per the stats-module NaN
+    // semantics we report quartiles over the finite trials and surface the
+    // diverged count explicitly (quartile_row over the raw data would pin
+    // NaN into p100 the moment one trial diverged, hiding the real worst
+    // finite loss the table is meant to show).
     let row = |label: &str, n: usize, xs: &[f64]| -> Vec<String> {
         let finite: Vec<f64> = xs.iter().cloned().filter(|x| x.is_finite()).collect();
+        let ndiv = xs.len() - finite.len();
+        let label = if ndiv > 0 {
+            format!("{label} [{ndiv}/{} diverged]", xs.len())
+        } else {
+            label.to_string()
+        };
         if finite.is_empty() {
-            return vec![label.into(), n.to_string(), "-".into(), "-".into(), "-".into(), "training diverged".into()];
+            return vec![label, n.to_string(), "-".into(), "-".into(), "-".into(), "training diverged".into()];
         }
         let q = quartile_row(&finite);
         vec![
-            label.into(),
+            label,
             n.to_string(),
             fmt_loss(q[0]),
             fmt_loss(q[1]),

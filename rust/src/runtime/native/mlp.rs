@@ -13,7 +13,9 @@ use crate::runtime::backend::{BackendSession, DataBatch, Probe};
 use crate::runtime::manifest::{Arch, Variant};
 
 use super::optim::sgd_update;
-use super::tensor::{axpy, layernorm, layernorm_bwd, mm, mm_nt, mm_tn, xent};
+use super::tensor::{
+    add_bias, axpy, col_sum, layernorm, layernorm_bwd, mm, mm_nt, mm_tn, relu, relu_bwd, xent,
+};
 
 #[derive(Clone, Copy, PartialEq)]
 enum Act {
@@ -133,23 +135,15 @@ impl SgdNetSession {
         );
         let apply_act = |u: &[f32]| -> Vec<f32> {
             match act {
-                Act::Relu => u.iter().map(|&v| if v > 0.0 { v } else { 0.0 }).collect(),
+                Act::Relu => relu(u),
                 Act::Tanh => u.iter().map(|&v| v.tanh()).collect(),
             }
         };
         let mut u1 = mm(x, w1, b, cfg.d_in, n);
-        for r in 0..b {
-            for j in 0..n {
-                u1[r * n + j] += b1[j];
-            }
-        }
+        add_bias(&mut u1, b1, b, n);
         let h1 = apply_act(&u1);
         let mut u2 = mm(&h1, w2, b, n, n);
-        for r in 0..b {
-            for j in 0..n {
-                u2[r * n + j] += b2[j];
-            }
-        }
+        add_bias(&mut u2, b2, b, n);
         let h2 = apply_act(&u2);
         let mut logits = mm(&h2, w3, b, n, c);
         for l in logits.iter_mut() {
@@ -179,13 +173,7 @@ impl SgdNetSession {
             *g *= scale;
         }
         let dact = |du: &mut Vec<f32>, u: &[f32], h: &[f32]| match act {
-            Act::Relu => {
-                for (g, &uv) in du.iter_mut().zip(u) {
-                    if uv <= 0.0 {
-                        *g = 0.0;
-                    }
-                }
-            }
+            Act::Relu => relu_bwd(du, u),
             Act::Tanh => {
                 for (g, &hv) in du.iter_mut().zip(h) {
                     *g *= 1.0 - hv * hv;
@@ -230,7 +218,7 @@ impl SgdNetSession {
         for i in 0..nb {
             let (z, lnc) = layernorm(&h, self.rblock(i, 0), self.rblock(i, 1), b, n);
             let u = mm(&z, self.rblock(i, 2), b, n, n);
-            let r: Vec<f32> = u.iter().map(|&v| if v > 0.0 { v } else { 0.0 }).collect();
+            let r = relu(&u);
             let f = mm(&r, self.rblock(i, 3), b, n, n);
             axpy(&mut h, &f);
             caches.push((z, lnc, u, r));
@@ -267,12 +255,8 @@ impl SgdNetSession {
             let (z, lnc, u, r) = &caches[i];
             let gb = 1 + i * pb;
             axpy(&mut grads[gb + 3], &mm_tn(r, &dh, b, n, n));
-            let dr = mm_nt(&dh, self.rblock(i, 3), b, n, n);
-            let du: Vec<f32> = dr
-                .iter()
-                .zip(u)
-                .map(|(&g, &uv)| if uv > 0.0 { g } else { 0.0 })
-                .collect();
+            let mut du = mm_nt(&dh, self.rblock(i, 3), b, n, n);
+            relu_bwd(&mut du, u);
             axpy(&mut grads[gb + 2], &mm_tn(z, &du, b, n, n));
             let dz = mm_nt(&du, self.rblock(i, 2), b, n, n);
             let d = {
@@ -292,17 +276,6 @@ impl SgdNetSession {
         axpy(&mut grads[0], &mm_tn(x, &dh, b, cfg.d_in, n));
         (loss, Some(grads))
     }
-}
-
-/// Column sums of a (rows, n) matrix — bias gradients.
-fn col_sum(m: &[f32], rows: usize, n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n];
-    for r in 0..rows {
-        for j in 0..n {
-            out[j] += m[r * n + j];
-        }
-    }
-    out
 }
 
 impl BackendSession for SgdNetSession {

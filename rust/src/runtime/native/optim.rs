@@ -4,7 +4,14 @@
 
 /// Adam with bias correction and decoupled weight decay; `t` is the
 /// 1-based step count (fed through hp_vec slot 7 by the session).
-#[allow(clippy::too_many_arguments)]
+///
+/// The fused zip walk mirrors the blocked tensor kernels' style: one
+/// forward pass over equal-length slices with no index bounds checks, and
+/// the per-element operation order is exactly the reference formula (the
+/// golden trajectories pin it), so the rewrite cannot change numerics.
+// assign_op_pattern is allowed because `p = p - a - b` is the reference
+// formula's exact operation order; `p -= a + b` would round differently.
+#[allow(clippy::too_many_arguments, clippy::assign_op_pattern)]
 pub fn adam_update(
     p: &mut [f32],
     g: &[f32],
@@ -17,22 +24,25 @@ pub fn adam_update(
     wd: f32,
     t: f32,
 ) {
+    debug_assert!(g.len() == p.len() && m.len() == p.len() && v.len() == p.len());
     let bc1 = 1.0 - beta1.powf(t);
     let bc2 = 1.0 - beta2.powf(t);
-    for i in 0..p.len() {
-        m[i] = beta1 * m[i] + (1.0 - beta1) * g[i];
-        v[i] = beta2 * v[i] + (1.0 - beta2) * g[i] * g[i];
-        let mhat = m[i] / bc1;
-        let vhat = v[i] / bc2;
-        p[i] = p[i] - lr * (mhat / (vhat.sqrt() + eps)) - lr * wd * p[i];
+    for (((pv, &gv), mv), vv) in p.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut()) {
+        *mv = beta1 * *mv + (1.0 - beta1) * gv;
+        *vv = beta2 * *vv + (1.0 - beta2) * gv * gv;
+        let mhat = *mv / bc1;
+        let vhat = *vv / bc2;
+        *pv = *pv - lr * (mhat / (vhat.sqrt() + eps)) - lr * wd * *pv;
     }
 }
 
 /// Heavy-ball SGD: m ← μ·m + g; p ← p − lr·(m + wd·p).
+#[allow(clippy::assign_op_pattern)]
 pub fn sgd_update(p: &mut [f32], g: &[f32], m: &mut [f32], lr: f32, momentum: f32, wd: f32) {
-    for i in 0..p.len() {
-        m[i] = momentum * m[i] + g[i];
-        p[i] = p[i] - lr * (m[i] + wd * p[i]);
+    debug_assert!(g.len() == p.len() && m.len() == p.len());
+    for ((pv, &gv), mv) in p.iter_mut().zip(g).zip(m.iter_mut()) {
+        *mv = momentum * *mv + gv;
+        *pv = *pv - lr * (*mv + wd * *pv);
     }
 }
 

@@ -1,73 +1,428 @@
-//! Dense f32 primitives for the native backend.
+//! Dense f32 primitives for the native backend — cache-blocked kernels.
 //!
 //! Row-major `Vec<f32>` throughout; shapes are tracked by the callers
-//! (model code), which keeps these kernels monomorphic and loop-shaped so
-//! the compiler can vectorize them.  Numerics mirror
-//! `python/compile/kernels/ref.py` (layernorm eps, stable softmax) — the
-//! golden-trajectory tests bound the drift against the numpy reference at
-//! 1e-3 relative over multi-step trajectories.
+//! (model code).  The GEMM family (`mm`/`mm_tn`/`mm_nt` and their `_into`
+//! scratch-reusing variants) shares one panel-packed, register-tiled core:
+//! B is packed into `NR`-wide column panels per (`KC`×`NC`) cache block and
+//! an `MR`×`NR` microkernel (4×-unrolled over A rows, autovectorizable over
+//! the panel width) accumulates into C.  Per output element the summation
+//! still runs k-ascending (KC blocks in order, k ascending inside each
+//! block), so results are bitwise run-to-run deterministic; only the
+//! *grouping* of partial sums differs from the naive loops, which keeps the
+//! drift against the numpy golden reference (`rust/tests/golden.rs`) well
+//! inside its 1e-3 envelope (observed ≤ ~1e-5 per step; the blocked-vs-naive
+//! property test in `rust/tests/properties.rs` pins ≤ 1e-5 relative per
+//! GEMM).  The original naive loops are kept in [`naive`] as the reference
+//! for equivalence tests and the bench baseline
+//! (`benches/step_latency.rs`).
+//!
+//! Numerics mirror `python/compile/kernels/ref.py` (layernorm eps, stable
+//! softmax); the blocked loop structure itself is transcribed index-for-
+//! index in `python/tools/sim_rust_backend.py` and diffed there against the
+//! finite-difference-verified numpy reference.
 
 pub const LN_EPS: f32 = 1e-5;
 
+/// Microkernel rows — the 4× unroll over A.
+pub const MR: usize = 4;
+/// B-panel width (microkernel accumulator row; SIMD-friendly).
+pub const NR: usize = 16;
+/// k-dimension cache block (panel depth).
+const KC: usize = 256;
+/// n-dimension cache block; a multiple of `NR`.
+const NC: usize = 256;
+
+// No zero-skip shortcuts anywhere in this module: 0·Inf/NaN must poison
+// the output exactly as in the numpy reference, or diverged trials could
+// report finite losses and the sweep's divergence detection would miss
+// them.  Packing may zero-pad panel *tail lanes*, but those lanes are
+// never written back to C, so padding cannot mask non-finite inputs.
+
+/// Pack a (`kb`×`nb`) block of row-major `b` (full row stride `n`) into
+/// `NR`-wide column panels: panel `p` holds columns `j0 + p·NR ..`,
+/// row-major inside the panel with stride `NR` (tail lanes zero-padded).
+fn pack_b(b: &[f32], k0: usize, kb: usize, j0: usize, nb: usize, n: usize, out: &mut Vec<f32>) {
+    let npan = (nb + NR - 1) / NR;
+    out.clear();
+    out.resize(npan * kb * NR, 0.0);
+    for p in 0..npan {
+        let jl = j0 + p * NR;
+        let w = NR.min(j0 + nb - jl);
+        let dst0 = p * kb * NR;
+        for l in 0..kb {
+            let src = (k0 + l) * n + jl;
+            let dst = dst0 + l * NR;
+            out[dst..dst + w].copy_from_slice(&b[src..src + w]);
+        }
+    }
+}
+
+/// Same panel layout, but the source is row-major (`n`×`k`) and is packed
+/// transposed — the B side of `mm_nt`.
+fn pack_bt(
+    b: &[f32],
+    k0: usize,
+    kb: usize,
+    j0: usize,
+    nb: usize,
+    kstride: usize,
+    out: &mut Vec<f32>,
+) {
+    let npan = (nb + NR - 1) / NR;
+    out.clear();
+    out.resize(npan * kb * NR, 0.0);
+    for p in 0..npan {
+        let jl = j0 + p * NR;
+        let w = NR.min(j0 + nb - jl);
+        let dst0 = p * kb * NR;
+        for jr in 0..w {
+            let src = (jl + jr) * kstride + k0;
+            for l in 0..kb {
+                out[dst0 + l * NR + jr] = b[src + l];
+            }
+        }
+    }
+}
+
+/// Transpose one k-block of a (`k`×`m`) matrix into row-major (`m`×`kb`) —
+/// the A side of `mm_tn`, so the microkernel always reads A rows
+/// contiguously.
+fn pack_at(a: &[f32], k0: usize, kb: usize, m: usize, out: &mut Vec<f32>) {
+    out.clear();
+    out.resize(m * kb, 0.0);
+    for i in 0..m {
+        for l in 0..kb {
+            out[i * kb + l] = a[(k0 + l) * m + i];
+        }
+    }
+}
+
+/// `mr`×`w` microkernel: C-block += A-strip · B-panel over `kb` steps.
+/// `a_off`/`a_stride` address the strip's rows inside `a`; `panel` is the
+/// packed `kb`×`NR` B panel; accumulators live in registers and are added
+/// to C once per call (k-ascending order per element is preserved).
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+fn micro(
+    a: &[f32],
+    a_off: usize,
+    a_stride: usize,
+    mr: usize,
+    panel: &[f32],
+    kb: usize,
+    c: &mut [f32],
+    c_off: usize,
+    c_stride: usize,
+    w: usize,
+) {
+    let mut acc = [[0.0f32; NR]; MR];
+    if mr == MR {
+        // fast path: four A-row broadcasts against the NR-wide panel
+        for l in 0..kb {
+            let bl = &panel[l * NR..(l + 1) * NR];
+            let a0 = a[a_off + l];
+            let a1 = a[a_off + a_stride + l];
+            let a2 = a[a_off + 2 * a_stride + l];
+            let a3 = a[a_off + 3 * a_stride + l];
+            for j in 0..NR {
+                let bv = bl[j];
+                acc[0][j] += a0 * bv;
+                acc[1][j] += a1 * bv;
+                acc[2][j] += a2 * bv;
+                acc[3][j] += a3 * bv;
+            }
+        }
+    } else {
+        for l in 0..kb {
+            let bl = &panel[l * NR..(l + 1) * NR];
+            for (r, accr) in acc.iter_mut().enumerate().take(mr) {
+                let av = a[a_off + r * a_stride + l];
+                for j in 0..NR {
+                    accr[j] += av * bl[j];
+                }
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate().take(mr) {
+        let base = c_off + r * c_stride;
+        let crow = &mut c[base..base + w];
+        for (cv, &av) in crow.iter_mut().zip(accr.iter()) {
+            *cv += av;
+        }
+    }
+}
+
+/// Drive the microkernel over all row strips × panels of one packed
+/// (`kb`×`nb`) B block.  `a_col0`/`a_stride` locate the matching A block.
+#[allow(clippy::too_many_arguments)]
+fn kernel_block(
+    c: &mut [f32],
+    a: &[f32],
+    a_col0: usize,
+    a_stride: usize,
+    m: usize,
+    panel: &[f32],
+    kb: usize,
+    j0: usize,
+    nb: usize,
+    n: usize,
+) {
+    let npan = (nb + NR - 1) / NR;
+    let mut i0 = 0;
+    while i0 < m {
+        let mr = MR.min(m - i0);
+        for p in 0..npan {
+            let jl = j0 + p * NR;
+            let w = NR.min(j0 + nb - jl);
+            micro(
+                a,
+                i0 * a_stride + a_col0,
+                a_stride,
+                mr,
+                &panel[p * kb * NR..(p + 1) * kb * NR],
+                kb,
+                c,
+                i0 * n + jl,
+                n,
+                w,
+            );
+        }
+        i0 += mr;
+    }
+}
+
+// Per-thread packing scratch: the GEMMs sit in the per-(batch, head)
+// attention hot loop, where a fresh panel allocation per call would rival
+// the math for the small head shapes.  Sessions are single-threaded and
+// sweep workers are distinct threads, so thread-locals add no contention
+// and cannot change results (packing is a pure copy).  Nothing here is
+// re-entrant: kernel_block/micro never call back into the drivers.
+thread_local! {
+    static PACK_PANEL: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+    static PACK_AT: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// c += a · b, a: (m, k), b: (k, n).  `c` is typically freshly zeroed by
+/// the allocating wrappers; accumulate semantics let callers reuse scratch.
+pub fn mm_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    debug_assert_eq!(c.len(), m * n);
+    PACK_PANEL.with(|pp| {
+        let mut panel = pp.borrow_mut();
+        for k0 in (0..k).step_by(KC) {
+            let kb = KC.min(k - k0);
+            for j0 in (0..n).step_by(NC) {
+                let nb = NC.min(n - j0);
+                pack_b(b, k0, kb, j0, nb, n, &mut panel);
+                kernel_block(c, a, k0, k, m, &panel, kb, j0, nb, n);
+            }
+        }
+    });
+}
+
 /// c = a · b, a: (m, k), b: (k, n).
 pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    // No zero-skip shortcuts: 0·Inf/NaN must poison the output exactly as
-    // in the numpy reference, or diverged trials could report finite
-    // losses and the sweep's divergence detection would miss them.
     let mut c = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for (l, &av) in arow.iter().enumerate() {
-            let brow = &b[l * n..(l + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
-            }
-        }
-    }
+    mm_into(&mut c, a, b, m, k, n);
     c
 }
 
-/// c = aᵀ · b, a: (k, m), b: (k, n) — the weight-gradient contraction
+/// c += aᵀ · b, a: (k, m), b: (k, n) — the weight-gradient contraction
 /// (xᵀ · dy summed over rows).
-pub fn mm_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+pub fn mm_tn_into(c: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: usize) {
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
-    let mut c = vec![0.0f32; m * n];
-    for l in 0..k {
-        let arow = &a[l * m..(l + 1) * m];
-        let brow = &b[l * n..(l + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
-            let crow = &mut c[i * n..(i + 1) * n];
-            for j in 0..n {
-                crow[j] += av * brow[j];
+    debug_assert_eq!(c.len(), m * n);
+    PACK_AT.with(|pa| {
+        PACK_PANEL.with(|pp| {
+            let mut at = pa.borrow_mut();
+            let mut panel = pp.borrow_mut();
+            for k0 in (0..k).step_by(KC) {
+                let kb = KC.min(k - k0);
+                pack_at(a, k0, kb, m, &mut at);
+                for j0 in (0..n).step_by(NC) {
+                    let nb = NC.min(n - j0);
+                    pack_b(b, k0, kb, j0, nb, n, &mut panel);
+                    kernel_block(c, &at, 0, kb, m, &panel, kb, j0, nb, n);
+                }
             }
-        }
-    }
+        });
+    });
+}
+
+/// c = aᵀ · b, a: (k, m), b: (k, n).
+pub fn mm_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    mm_tn_into(&mut c, a, b, k, m, n);
     c
 }
 
-/// c = a · bᵀ, a: (m, k), b: (n, k) — the input-gradient contraction
+/// c += a · bᵀ, a: (m, k), b: (n, k) — the input-gradient contraction
 /// (dy · Wᵀ).
-pub fn mm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+pub fn mm_nt_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize) {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
-    let mut c = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a[i * k..(i + 1) * k];
-        let crow = &mut c[i * n..(i + 1) * n];
-        for j in 0..n {
-            let brow = &b[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for l in 0..k {
-                acc += arow[l] * brow[l];
+    debug_assert_eq!(c.len(), m * n);
+    PACK_PANEL.with(|pp| {
+        let mut panel = pp.borrow_mut();
+        for k0 in (0..k).step_by(KC) {
+            let kb = KC.min(k - k0);
+            for j0 in (0..n).step_by(NC) {
+                let nb = NC.min(n - j0);
+                pack_bt(b, k0, kb, j0, nb, k, &mut panel);
+                kernel_block(c, a, k0, k, m, &panel, kb, j0, nb, n);
             }
-            crow[j] = acc;
+        }
+    });
+}
+
+/// c = a · bᵀ, a: (m, k), b: (n, k).
+pub fn mm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut c = vec![0.0f32; m * n];
+    mm_nt_into(&mut c, a, b, m, k, n);
+    c
+}
+
+/// The pre-rewrite naive loops, kept as the reference implementation:
+/// equivalence tests pin the blocked kernels against these, and
+/// `benches/step_latency.rs` uses them as the speedup baseline.
+pub mod naive {
+    /// c = a · b, a: (m, k), b: (k, n).
+    pub fn mm(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), k * n);
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (l, &av) in arow.iter().enumerate() {
+                let brow = &b[l * n..(l + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// c = aᵀ · b, a: (k, m), b: (k, n).
+    pub fn mm_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), k * m);
+        debug_assert_eq!(b.len(), k * n);
+        let mut c = vec![0.0f32; m * n];
+        for l in 0..k {
+            let arow = &a[l * m..(l + 1) * m];
+            let brow = &b[l * n..(l + 1) * n];
+            for (i, &av) in arow.iter().enumerate() {
+                let crow = &mut c[i * n..(i + 1) * n];
+                for j in 0..n {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+        c
+    }
+
+    /// c = a · bᵀ, a: (m, k), b: (n, k).
+    pub fn mm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        debug_assert_eq!(a.len(), m * k);
+        debug_assert_eq!(b.len(), n * k);
+        let mut c = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &a[i * k..(i + 1) * k];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for j in 0..n {
+                let brow = &b[j * k..(j + 1) * k];
+                let mut acc = 0.0f32;
+                for l in 0..k {
+                    acc += arow[l] * brow[l];
+                }
+                crow[j] = acc;
+            }
+        }
+        c
+    }
+}
+
+/// Gather one attention head into a contiguous head-major (`s`×`dh`)
+/// panel: `dst[si] = src[row0 + si][off..off + dh]`.
+pub fn pack_head(
+    src: &[f32],
+    dst: &mut [f32],
+    row0: usize,
+    s: usize,
+    stride: usize,
+    off: usize,
+    dh: usize,
+) {
+    debug_assert_eq!(dst.len(), s * dh);
+    for si in 0..s {
+        let sb = (row0 + si) * stride + off;
+        dst[si * dh..(si + 1) * dh].copy_from_slice(&src[sb..sb + dh]);
+    }
+}
+
+/// Scatter a head-major (`s`×`dh`) panel back into interleaved rows —
+/// the inverse of [`pack_head`].
+pub fn unpack_head(
+    src: &[f32],
+    dst: &mut [f32],
+    row0: usize,
+    s: usize,
+    stride: usize,
+    off: usize,
+    dh: usize,
+) {
+    debug_assert_eq!(src.len(), s * dh);
+    for si in 0..s {
+        let db = (row0 + si) * stride + off;
+        dst[db..db + dh].copy_from_slice(&src[si * dh..(si + 1) * dh]);
+    }
+}
+
+/// Fused causal softmax + context accumulate for one head: `scores` is
+/// the (`s`×`s`) attention-logit matrix (row `qi` has `qi + 1` causally
+/// active entries; the rest may hold garbage from the full logit GEMM).
+/// Each row is softmaxed in place (tail zeroed, [`softmax_prefix`]
+/// convention) and immediately accumulated into `ctx = P · V` with a
+/// 4×-unrolled key loop, while the row is still cache-hot.  The context
+/// product runs over the *full* key range: masked probabilities are exact
+/// zeros, so a non-finite V row poisons the context exactly as the numpy
+/// reference's dense `prob @ v` does.
+pub fn softmax_ctx_fused(scores: &mut [f32], v: &[f32], s: usize, dh: usize, ctx: &mut [f32]) {
+    debug_assert_eq!(scores.len(), s * s);
+    debug_assert_eq!(v.len(), s * dh);
+    debug_assert_eq!(ctx.len(), s * dh);
+    for qi in 0..s {
+        let row = &mut scores[qi * s..(qi + 1) * s];
+        softmax_prefix(row, qi + 1);
+        let crow = &mut ctx[qi * dh..(qi + 1) * dh];
+        crow.fill(0.0);
+        let mut kj = 0;
+        while kj + MR <= s {
+            let p0 = row[kj];
+            let p1 = row[kj + 1];
+            let p2 = row[kj + 2];
+            let p3 = row[kj + 3];
+            let v0 = &v[kj * dh..(kj + 1) * dh];
+            let v1 = &v[(kj + 1) * dh..(kj + 2) * dh];
+            let v2 = &v[(kj + 2) * dh..(kj + 3) * dh];
+            let v3 = &v[(kj + 3) * dh..(kj + 4) * dh];
+            for t in 0..dh {
+                crow[t] += p0 * v0[t] + p1 * v1[t] + p2 * v2[t] + p3 * v3[t];
+            }
+            kj += MR;
+        }
+        while kj < s {
+            let p = row[kj];
+            let vr = &v[kj * dh..(kj + 1) * dh];
+            for t in 0..dh {
+                crow[t] += p * vr[t];
+            }
+            kj += 1;
         }
     }
-    c
 }
 
 /// Accumulate `src` into `dst`.
@@ -82,6 +437,59 @@ pub fn axpy(dst: &mut [f32], src: &[f32]) {
 pub fn add(a: &[f32], b: &[f32]) -> Vec<f32> {
     debug_assert_eq!(a.len(), b.len());
     a.iter().zip(b).map(|(&x, &y)| x + y).collect()
+}
+
+/// y = max(x, 0) elementwise — the shared activation kernel.  Mirrors the
+/// reference's `np.maximum(u, 0)`: a NaN input propagates (a diverging
+/// trial must stay visibly diverged), unlike `f32::max`, which would
+/// return the non-NaN operand.
+pub fn relu(x: &[f32]) -> Vec<f32> {
+    x.iter()
+        .map(|&v| if v > 0.0 || v.is_nan() { v } else { 0.0 })
+        .collect()
+}
+
+/// In-place relu backward: `du ⊙ (u > 0)`, exactly the reference's mask
+/// multiply — the gradient is zeroed wherever `u` is not positive,
+/// *including* NaN `u` (NaN > 0 is false), so the two languages agree on
+/// non-finite inputs too.
+pub fn relu_bwd(du: &mut [f32], u: &[f32]) {
+    debug_assert_eq!(du.len(), u.len());
+    for (g, &uv) in du.iter_mut().zip(u) {
+        *g = if uv > 0.0 { *g } else { 0.0 };
+    }
+}
+
+/// Broadcast-add a length-`n` bias over each of `rows` rows of `x`.
+pub fn add_bias(x: &mut [f32], bias: &[f32], rows: usize, n: usize) {
+    debug_assert_eq!(x.len(), rows * n);
+    debug_assert_eq!(bias.len(), n);
+    for r in 0..rows {
+        let row = &mut x[r * n..(r + 1) * n];
+        for (xv, &bv) in row.iter_mut().zip(bias) {
+            *xv += bv;
+        }
+    }
+}
+
+/// Column sums of a (`rows`×`n`) matrix — bias gradients.
+pub fn col_sum(m: &[f32], rows: usize, n: usize) -> Vec<f32> {
+    debug_assert_eq!(m.len(), rows * n);
+    let mut out = vec![0.0f32; n];
+    for r in 0..rows {
+        let row = &m[r * n..(r + 1) * n];
+        for (o, &v) in out.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Scale a tensor in place.
+pub fn scale_in_place(x: &mut [f32], s: f32) {
+    for v in x.iter_mut() {
+        *v *= s;
+    }
 }
 
 /// Layernorm forward cache: normalized activations + reciprocal stds.
@@ -216,6 +624,7 @@ pub fn xent(logits: &[f32], targets: &[usize], n: usize) -> (f64, Vec<f32>) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::init::rng::Rng;
 
     #[test]
     fn mm_small() {
@@ -234,6 +643,147 @@ mod tests {
         // a·bᵀ with a as (3,2), b as (3,2): (3,3)
         let bt = [1.0f32, 0.5, 1.5, -1.0, 2.0, -0.5]; // (2,3)
         assert_eq!(mm_nt(&a, &b, 3, 2, 3), mm(&a, &bt, 3, 2, 3));
+    }
+
+    fn gauss(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian() as f32).collect()
+    }
+
+    fn assert_close(got: &[f32], want: &[f32], tol: f64, tag: &str) {
+        assert_eq!(got.len(), want.len(), "{tag}: length");
+        for (i, (&g, &w)) in got.iter().zip(want).enumerate() {
+            let denom = 1.0f64.max(w.abs() as f64);
+            assert!(
+                ((g as f64 - w as f64) / denom).abs() < tol,
+                "{tag}[{i}]: blocked {g} vs naive {w}"
+            );
+        }
+    }
+
+    /// Blocked and naive kernels agree on shapes crossing every tile
+    /// boundary (MR/NR/KC edges, degenerate dims).
+    #[test]
+    fn blocked_matches_naive_on_edge_shapes() {
+        let mut rng = Rng::new(42);
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (3, 5, 2),
+            (4, 16, 16),
+            (5, 17, 33),
+            (9, 40, 21),
+            (2, 300, 7),   // k crosses the KC=256 block edge
+            (13, 260, 18), // k crosses KC with row/panel tails
+            (5, 7, 300),   // n crosses the NC=256 block edge
+            (9, 260, 280), // k and n both multi-block, with tails
+        ] {
+            let a = gauss(&mut rng, m * k);
+            let b = gauss(&mut rng, k * n);
+            assert_close(
+                &mm(&a, &b, m, k, n),
+                &naive::mm(&a, &b, m, k, n),
+                1e-5,
+                &format!("mm {m}x{k}x{n}"),
+            );
+            let at = gauss(&mut rng, k * m);
+            assert_close(
+                &mm_tn(&at, &b, k, m, n),
+                &naive::mm_tn(&at, &b, k, m, n),
+                1e-5,
+                &format!("mm_tn {m}x{k}x{n}"),
+            );
+            let bt = gauss(&mut rng, n * k);
+            assert_close(
+                &mm_nt(&a, &bt, m, k, n),
+                &naive::mm_nt(&a, &bt, m, k, n),
+                1e-5,
+                &format!("mm_nt {m}x{k}x{n}"),
+            );
+        }
+    }
+
+    /// 0·Inf must poison C in every kernel — the no-zero-skip invariant.
+    #[test]
+    fn zero_times_inf_poisons_output() {
+        let a = vec![0.0f32; 16];
+        let b = vec![f32::INFINITY; 16];
+        for (c, tag) in [
+            (mm(&a, &b, 4, 4, 4), "mm"),
+            (mm_tn(&a, &b, 4, 4, 4), "mm_tn"),
+            (mm_nt(&a, &b, 4, 4, 4), "mm_nt"),
+        ] {
+            assert!(c.iter().all(|v| v.is_nan()), "{tag}: {c:?}");
+        }
+    }
+
+    /// The fused softmax+context path equals softmax_prefix rows followed
+    /// by an explicit P·V product.
+    #[test]
+    fn softmax_ctx_fused_matches_unfused() {
+        let (s, dh) = (7, 5);
+        let mut rng = Rng::new(9);
+        let scores0 = gauss(&mut rng, s * s);
+        let v = gauss(&mut rng, s * dh);
+        let mut scores = scores0.clone();
+        let mut ctx = vec![0.0f32; s * dh];
+        softmax_ctx_fused(&mut scores, &v, s, dh, &mut ctx);
+        // reference: softmax rows, then dense P·V
+        let mut p = scores0;
+        for qi in 0..s {
+            softmax_prefix(&mut p[qi * s..(qi + 1) * s], qi + 1);
+        }
+        assert_close(&scores, &p, 1e-7, "fused probs");
+        assert_close(&ctx, &naive::mm(&p, &v, s, s, dh), 1e-5, "fused ctx");
+    }
+
+    /// A NaN V row must poison context rows even where the causal mask
+    /// zeroed its probability (0·NaN = NaN, mirroring numpy's dense
+    /// prob @ v).
+    #[test]
+    fn softmax_ctx_fused_nan_v_poisons_all_rows() {
+        let (s, dh) = (5, 3);
+        let mut scores = vec![0.1f32; s * s];
+        let mut v = vec![1.0f32; s * dh];
+        v[(s - 1) * dh] = f32::NAN; // last key row: masked for qi < s-1
+        let mut ctx = vec![0.0f32; s * dh];
+        softmax_ctx_fused(&mut scores, &v, s, dh, &mut ctx);
+        assert!(ctx[0].is_nan(), "row 0 must see 0·NaN poison: {}", ctx[0]);
+    }
+
+    #[test]
+    fn pack_unpack_head_roundtrip() {
+        let (s, stride, dh, off) = (3, 8, 2, 4);
+        let src: Vec<f32> = (0..s * stride).map(|i| i as f32).collect();
+        let mut panel = vec![0.0f32; s * dh];
+        pack_head(&src, &mut panel, 0, s, stride, off, dh);
+        assert_eq!(panel, vec![4.0, 5.0, 12.0, 13.0, 20.0, 21.0]);
+        let mut dst = vec![0.0f32; s * stride];
+        unpack_head(&panel, &mut dst, 0, s, stride, off, dh);
+        for si in 0..s {
+            for t in 0..dh {
+                assert_eq!(dst[si * stride + off + t], src[si * stride + off + t]);
+            }
+        }
+    }
+
+    #[test]
+    fn relu_and_bias_helpers() {
+        assert_eq!(relu(&[-1.0, 0.0, 2.5]), vec![0.0, 0.0, 2.5]);
+        // np.maximum semantics: NaN propagates forward...
+        let r = relu(&[f32::NAN, -1.0]);
+        assert!(r[0].is_nan() && r[1] == 0.0);
+        let mut du = vec![1.0f32, 2.0, 3.0];
+        relu_bwd(&mut du, &[-1.0, 0.0, 5.0]);
+        assert_eq!(du, vec![0.0, 0.0, 3.0]);
+        // ...but the backward mask (u > 0) is false for NaN u, exactly as
+        // the reference's `du * (u > 0)`
+        let mut du = vec![1.0f32, f32::NAN];
+        relu_bwd(&mut du, &[f32::NAN, 2.0]);
+        assert_eq!(du[0], 0.0);
+        assert!(du[1].is_nan());
+        let mut x = vec![1.0f32, 2.0, 3.0, 4.0];
+        add_bias(&mut x, &[10.0, 20.0], 2, 2);
+        assert_eq!(x, vec![11.0, 22.0, 13.0, 24.0]);
+        assert_eq!(col_sum(&[1.0, 2.0, 3.0, 4.0], 2, 2), vec![4.0, 6.0]);
     }
 
     #[test]

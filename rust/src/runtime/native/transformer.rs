@@ -19,7 +19,8 @@ use crate::runtime::manifest::{Kind, Variant};
 
 use super::optim::adam_update;
 use super::tensor::{
-    add, axpy, layernorm, layernorm_bwd, mm, mm_nt, mm_tn, softmax_prefix, xent, LnCache,
+    add, axpy, layernorm, layernorm_bwd, mm, mm_into, mm_nt, mm_nt_into, mm_tn, mm_tn_into,
+    pack_head, relu, relu_bwd, scale_in_place, softmax_ctx_fused, unpack_head, xent, LnCache,
 };
 
 /// Parameters per block in the manifest layout.
@@ -124,6 +125,14 @@ impl TfmSession {
 
     /// Causal attention sublayer.  Returns (out, attn_logit_probe, cache
     /// pieces); `h` is (R, D).
+    ///
+    /// Per (batch, head) the strided `q`/`k`/`v` columns are gathered into
+    /// contiguous head-major (S, dh) panels so the logit matrix is one
+    /// `mm_nt` GEMM and the softmax+context path is the fused blocked
+    /// kernel — no strided `dh`-length dot loops.  The full (S, S) logit
+    /// GEMM includes causally-masked cells; `softmax_ctx_fused` overwrites
+    /// them with exact zeros, matching the numpy reference's mask-then-
+    /// softmax.
     #[allow(clippy::type_complexity)]
     fn attn_fwd(
         &self,
@@ -145,37 +154,30 @@ impl TfmSession {
             Vec::new()
         };
         let mut merged = vec![0.0f32; rows * da];
+        // head-major scratch panels, reused across (batch, head)
+        let mut qh = vec![0.0f32; s * dh];
+        let mut kh = vec![0.0f32; s * dh];
+        let mut vh = vec![0.0f32; s * dh];
+        let mut ctx = vec![0.0f32; s * dh];
         for b in 0..bsz {
             for hh in 0..nh {
                 let head = hh * dh;
-                for qi in 0..s {
-                    let qrow = &q[(b * s + qi) * da + head..(b * s + qi) * da + head + dh];
-                    let prow =
-                        &mut prob[((b * nh + hh) * s + qi) * s..((b * nh + hh) * s + qi) * s + s];
-                    for kj in 0..=qi {
-                        let krow = &k[(b * s + kj) * da + head..(b * s + kj) * da + head + dh];
-                        let mut dot = 0.0f32;
-                        for t in 0..dh {
-                            dot += qrow[t] * scale * krow[t];
-                        }
-                        prow[kj] = dot;
-                    }
-                    if want_alog {
-                        let arow = &mut alog
-                            [((b * nh + hh) * s + qi) * s..((b * nh + hh) * s + qi) * s + s];
-                        arow[..=qi].copy_from_slice(&prow[..=qi]);
-                    }
-                    softmax_prefix(prow, qi + 1);
-                    let ctx =
-                        &mut merged[(b * s + qi) * da + head..(b * s + qi) * da + head + dh];
-                    for kj in 0..=qi {
-                        let p = prob[((b * nh + hh) * s + qi) * s + kj];
-                        let vrow = &v[(b * s + kj) * da + head..(b * s + kj) * da + head + dh];
-                        for t in 0..dh {
-                            ctx[t] += p * vrow[t];
-                        }
+                pack_head(&q, &mut qh, b * s, s, da, head, dh);
+                pack_head(&k, &mut kh, b * s, s, da, head, dh);
+                pack_head(&v, &mut vh, b * s, s, da, head, dh);
+                // logits = (q·scale) · kᵀ, as in the reference
+                scale_in_place(&mut qh, scale);
+                let blk = (b * nh + hh) * s * s;
+                let scores = &mut prob[blk..blk + s * s];
+                mm_nt_into(scores, &qh, &kh, s, dh, s);
+                if want_alog {
+                    for qi in 0..s {
+                        alog[blk + qi * s..blk + qi * s + qi + 1]
+                            .copy_from_slice(&scores[qi * s..qi * s + qi + 1]);
                     }
                 }
+                softmax_ctx_fused(scores, &vh, s, dh, &mut ctx);
+                unpack_head(&ctx, &mut merged, b * s, s, da, head, dh);
             }
         }
         let out = mm(&merged, self.block(i, WO), rows, da, d);
@@ -184,6 +186,16 @@ impl TfmSession {
 
     /// Backward through the attention sublayer; returns d(attn_in) and
     /// accumulates weight grads.
+    ///
+    /// Mirrors the numpy reference's dense einsums on head-major panels:
+    /// dprob = dctx·Vᵀ, dV = Pᵀ·dctx, dmasked = P⊙(dprob − ⟨dprob, P⟩),
+    /// dQ = (dmasked·K)·scale, dK = dmaskedᵀ·(Q·scale).  All products run
+    /// over the full key range — masked columns carry exact-zero
+    /// probabilities, so they contribute nothing for finite operands but
+    /// still poison the gradients when a Q/K/V panel holds NaN/Inf (the
+    /// old per-element loop's `dmasked == 0` skip violated tensor.rs's
+    /// no-zero-skip invariant and could hide a diverging trial from
+    /// divergence detection).
     fn attn_bwd(
         &self,
         i: usize,
@@ -201,50 +213,51 @@ impl TfmSession {
         let mut dq = vec![0.0f32; rows * da];
         let mut dk = vec![0.0f32; rows * da];
         let mut dv = vec![0.0f32; rows * da];
-        let mut dprob = vec![0.0f32; s];
+        // head-major scratch panels, reused across (batch, head)
+        let mut qh = vec![0.0f32; s * dh];
+        let mut kh = vec![0.0f32; s * dh];
+        let mut vh = vec![0.0f32; s * dh];
+        let mut dctx = vec![0.0f32; s * dh];
+        let mut dpanel = vec![0.0f32; s * dh];
+        let mut dprob = vec![0.0f32; s * s];
         for b in 0..bsz {
             for hh in 0..nh {
                 let head = hh * dh;
+                pack_head(&cache.q, &mut qh, b * s, s, da, head, dh);
+                pack_head(&cache.k, &mut kh, b * s, s, da, head, dh);
+                pack_head(&cache.v, &mut vh, b * s, s, da, head, dh);
+                pack_head(&dmerged, &mut dctx, b * s, s, da, head, dh);
+                let blk = (b * nh + hh) * s * s;
+                let pblk = &cache.prob[blk..blk + s * s];
+                // dprob = dctx · vᵀ
+                dprob.fill(0.0);
+                mm_nt_into(&mut dprob, &dctx, &vh, s, dh, s);
+                // dv = probᵀ · dctx
+                dpanel.fill(0.0);
+                mm_tn_into(&mut dpanel, pblk, &dctx, s, s, dh);
+                unpack_head(&dpanel, &mut dv, b * s, s, da, head, dh);
+                // softmax backward rowwise, in place over dprob
                 for qi in 0..s {
-                    let dctx = &dmerged[(b * s + qi) * da + head..(b * s + qi) * da + head + dh];
-                    let prow = &cache.prob
-                        [((b * nh + hh) * s + qi) * s..((b * nh + hh) * s + qi) * s + s];
-                    let mut sum_dp = 0.0f32;
-                    for kj in 0..=qi {
-                        let vrow =
-                            &cache.v[(b * s + kj) * da + head..(b * s + kj) * da + head + dh];
-                        let mut dot = 0.0f32;
-                        for t in 0..dh {
-                            dot += dctx[t] * vrow[t];
-                        }
-                        dprob[kj] = dot;
-                        sum_dp += dot * prow[kj];
+                    let p = &pblk[qi * s..(qi + 1) * s];
+                    let g = &mut dprob[qi * s..(qi + 1) * s];
+                    let mut sdp = 0.0f32;
+                    for (gv, pv) in g.iter().zip(p) {
+                        sdp += gv * pv;
                     }
-                    let qrow =
-                        &cache.q[(b * s + qi) * da + head..(b * s + qi) * da + head + dh];
-                    let dqrow = &mut dq[(b * s + qi) * da + head..(b * s + qi) * da + head + dh];
-                    for kj in 0..=qi {
-                        let p = prow[kj];
-                        // dv += p · dctx
-                        let dvrow =
-                            &mut dv[(b * s + kj) * da + head..(b * s + kj) * da + head + dh];
-                        for t in 0..dh {
-                            dvrow[t] += p * dctx[t];
-                        }
-                        let dmasked = p * (dprob[kj] - sum_dp);
-                        if dmasked == 0.0 {
-                            continue;
-                        }
-                        let krow =
-                            &cache.k[(b * s + kj) * da + head..(b * s + kj) * da + head + dh];
-                        let dkrow =
-                            &mut dk[(b * s + kj) * da + head..(b * s + kj) * da + head + dh];
-                        for t in 0..dh {
-                            dqrow[t] += dmasked * krow[t] * scale;
-                            dkrow[t] += dmasked * qrow[t] * scale;
-                        }
+                    for (gv, pv) in g.iter_mut().zip(p) {
+                        *gv = pv * (*gv - sdp);
                     }
                 }
+                // dq = (dmasked · k) · scale
+                dpanel.fill(0.0);
+                mm_into(&mut dpanel, &dprob, &kh, s, s, dh);
+                scale_in_place(&mut dpanel, scale);
+                unpack_head(&dpanel, &mut dq, b * s, s, da, head, dh);
+                // dk = dmaskedᵀ · (q · scale)
+                scale_in_place(&mut qh, scale);
+                dpanel.fill(0.0);
+                mm_tn_into(&mut dpanel, &dprob, &qh, s, s, dh);
+                unpack_head(&dpanel, &mut dk, b * s, s, da, head, dh);
             }
         }
         let h = &cache.attn_in;
@@ -262,7 +275,7 @@ impl TfmSession {
         let c = &self.cfg;
         let rows = c.batch * c.seq;
         let u = mm(h, self.block(i, W1), rows, c.d_model, c.d_ffn);
-        let r: Vec<f32> = u.iter().map(|&x| if x > 0.0 { x } else { 0.0 }).collect();
+        let r = relu(&u);
         let f = mm(&r, self.block(i, W2), rows, c.d_ffn, c.d_model);
         (f, u, r)
     }
@@ -278,12 +291,8 @@ impl TfmSession {
         let rows = c.batch * c.seq;
         let gb = 2 + i * PB;
         axpy(&mut grads[gb + W2], &mm_tn(&cache.r, df, rows, c.d_ffn, c.d_model));
-        let dr = mm_nt(df, self.block(i, W2), rows, c.d_model, c.d_ffn);
-        let du: Vec<f32> = dr
-            .iter()
-            .zip(&cache.u)
-            .map(|(&g, &x)| if x > 0.0 { g } else { 0.0 })
-            .collect();
+        let mut du = mm_nt(df, self.block(i, W2), rows, c.d_model, c.d_ffn);
+        relu_bwd(&mut du, &cache.u);
         axpy(&mut grads[gb + W1], &mm_tn(&cache.ffn_in, &du, rows, c.d_model, c.d_ffn));
         mm_nt(&du, self.block(i, W1), rows, c.d_ffn, c.d_model)
     }
@@ -572,5 +581,189 @@ impl BackendSession for TfmSession {
             2 => Ok(self.vs[idx - 2 * p].clone()),
             _ => bail!("state index {idx} out of range ({} tensors)", 3 * p),
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::init::rng::det_fill;
+
+    /// A minimal post-LN session whose only populated tensors are block
+    /// 0's attention weights — enough to drive `attn_fwd`/`attn_bwd`
+    /// directly (the unused slots stay empty).
+    fn attn_session(cfg: TfmConfig, scale: f32) -> TfmSession {
+        let (d, da) = (cfg.d_model, cfg.d_attn());
+        let mut params: Vec<Vec<f32>> = vec![Vec::new(); 2 + PB + 1];
+        params[2 + WQ] = det_fill(d * da, 11, scale);
+        params[2 + WK] = det_fill(d * da, 12, scale);
+        params[2 + WV] = det_fill(d * da, 13, scale);
+        params[2 + WO] = det_fill(da * d, 14, scale);
+        let ms = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        let vs = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        TfmSession {
+            cfg,
+            kind: Kind::Train,
+            params,
+            ms,
+            vs,
+        }
+    }
+
+    fn tiny_cfg() -> TfmConfig {
+        TfmConfig {
+            vocab: 7,
+            seq: 5,
+            batch: 2,
+            d_model: 6,
+            n_layer: 1,
+            n_head: 2,
+            d_head: 3,
+            d_ffn: 8,
+            pre_ln: false,
+        }
+    }
+
+    fn empty_ln() -> LnCache {
+        LnCache {
+            xhat: Vec::new(),
+            rstd: Vec::new(),
+        }
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn cache_from_fwd(
+        h: &[f32],
+        parts: (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>),
+    ) -> BlockCache {
+        let (_, _, q, k, v, prob, merged) = parts;
+        BlockCache {
+            attn_in: h.to_vec(),
+            q,
+            k,
+            v,
+            prob,
+            merged,
+            ffn_in: Vec::new(),
+            u: Vec::new(),
+            r: Vec::new(),
+            ln1: empty_ln(),
+            ln2: empty_ln(),
+        }
+    }
+
+    fn zero_grads(s: &TfmSession) -> Vec<Vec<f32>> {
+        s.params.iter().map(|p| vec![0.0; p.len()]).collect()
+    }
+
+    /// attn_bwd's d(attn_in) and dWQ against central finite differences of
+    /// the scalar J(h) = Σ attn(h) ⊙ W — a direct regression test for the
+    /// head-major GEMM backward.
+    #[test]
+    fn attn_bwd_finite_difference() {
+        let cfg = tiny_cfg();
+        let rows = cfg.batch * cfg.seq;
+        let d = cfg.d_model;
+        let attn_scale = 0.6f32;
+        let mut sess = attn_session(cfg, 0.5);
+        let h0 = det_fill(rows * d, 21, 0.5);
+        let w = det_fill(rows * d, 22, 0.5);
+        let j = |s: &TfmSession, h: &[f32]| -> f64 {
+            let (out, ..) = s.attn_fwd(0, h, attn_scale, false);
+            out.iter().zip(&w).map(|(&o, &wv)| (o * wv) as f64).sum()
+        };
+        let fwd = sess.attn_fwd(0, &h0, attn_scale, false);
+        let cache = cache_from_fwd(&h0, fwd);
+        let mut grads = zero_grads(&sess);
+        let dh = sess.attn_bwd(0, &w, attn_scale, &cache, &mut grads);
+        let eps = 3e-3f32;
+        // d(attn_in): probe a spread of coordinates
+        let mut hp = h0.clone();
+        for idx in (0..rows * d).step_by(7) {
+            hp[idx] = h0[idx] + eps;
+            let jp = j(&sess, &hp);
+            hp[idx] = h0[idx] - eps;
+            let jm = j(&sess, &hp);
+            hp[idx] = h0[idx];
+            let num = (jp - jm) / (2.0 * eps as f64);
+            let ana = dh[idx] as f64;
+            assert!(
+                (num - ana).abs() < 1e-2 * (1.0 + ana.abs()),
+                "dh[{idx}]: analytic {ana} vs numeric {num}"
+            );
+        }
+        // dWQ: perturb the weight itself
+        let gq = grads[2 + WQ].clone();
+        for idx in (0..gq.len()).step_by(5) {
+            let orig = sess.params[2 + WQ][idx];
+            sess.params[2 + WQ][idx] = orig + eps;
+            let jp = j(&sess, &h0);
+            sess.params[2 + WQ][idx] = orig - eps;
+            let jm = j(&sess, &h0);
+            sess.params[2 + WQ][idx] = orig;
+            let num = (jp - jm) / (2.0 * eps as f64);
+            let ana = gq[idx] as f64;
+            assert!(
+                (num - ana).abs() < 1e-2 * (1.0 + ana.abs()),
+                "dWQ[{idx}]: analytic {ana} vs numeric {num}"
+            );
+        }
+    }
+
+    /// Regression for the old `dmasked == 0.0 { continue }` shortcut: a
+    /// key row holding Inf whose softmax probability underflowed to exact
+    /// zero must still poison dq (0·Inf = NaN), so a diverging trial
+    /// cannot report finite gradients.  The old skip read neither krow nor
+    /// qrow in that case and returned fully finite gradients here.
+    #[test]
+    fn attn_bwd_zero_prob_nonfinite_k_poisons() {
+        let cfg = TfmConfig {
+            vocab: 7,
+            seq: 2,
+            batch: 1,
+            d_model: 2,
+            n_layer: 1,
+            n_head: 1,
+            d_head: 2,
+            d_ffn: 4,
+            pre_ln: false,
+        };
+        let (s, da) = (cfg.seq, cfg.d_attn());
+        let rows = cfg.batch * s;
+        let sess = attn_session(cfg, 0.5);
+        let h = vec![0.25f32; rows * sess.cfg.d_model];
+        let q = vec![0.5f32; rows * da];
+        let mut k = vec![0.5f32; rows * da];
+        k[0] = f32::INFINITY; // key row 0 diverged
+        let v = vec![1.0f32; rows * da];
+        // row qi=0 attends only to key 0 (prob 1); row qi=1's probability
+        // on key 0 underflowed to exactly 0 — the old code skipped it.
+        let prob = vec![1.0f32, 0.0, 0.0, 1.0];
+        let merged = vec![1.0f32; rows * da];
+        let cache = BlockCache {
+            attn_in: h,
+            q,
+            k,
+            v,
+            prob,
+            merged,
+            ffn_in: Vec::new(),
+            u: Vec::new(),
+            r: Vec::new(),
+            ln1: empty_ln(),
+            ln2: empty_ln(),
+        };
+        let mut grads = zero_grads(&sess);
+        let dout = vec![1.0f32; rows * sess.cfg.d_model];
+        let dh = sess.attn_bwd(0, &dout, 0.7, &cache, &mut grads);
+        assert!(
+            dh.iter().any(|x| !x.is_finite()),
+            "d(attn_in) must be poisoned by the Inf key row: {dh:?}"
+        );
+        assert!(
+            grads[2 + WQ].iter().any(|x| !x.is_finite()),
+            "dWQ must be poisoned: {:?}",
+            grads[2 + WQ]
+        );
     }
 }

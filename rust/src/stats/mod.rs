@@ -5,6 +5,19 @@
 //! coordinate standard deviations and log-log growth-exponent fits.  No
 //! stats crate is vendored, so this is built from scratch and unit-tested
 //! against hand-computed values.
+//!
+//! ## Non-finite inputs (diverged trials)
+//!
+//! Sweeps deliberately include diverging trials, whose `val_loss` decodes
+//! from the journal as NaN — so NaN is first-class data here, never a
+//! panic.  Ordering statistics treat a NaN as *worse than every real
+//! loss*: [`sort_nan_last`] places all NaNs after every finite value (and
+//! after ±∞), so a percentile whose rank falls into the NaN tail — e.g.
+//! p100 as soon as one trial diverged — is NaN, while lower percentiles
+//! stay finite as long as enough finite mass remains.  Interpolation
+//! between a finite value and a NaN neighbour is NaN.  Callers that want
+//! finite-only semantics filter first (see `exp/tab4`'s percentile rows
+//! and `tuner::select_best`).
 
 /// Mean of a slice (0 for empty).
 pub fn mean(xs: &[f64]) -> f64 {
@@ -32,12 +45,32 @@ pub fn rms(xs: &[f32]) -> f64 {
     (xs.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>() / xs.len() as f64).sqrt()
 }
 
+/// Total order with every NaN sorted last (after +∞), regardless of the
+/// NaN's sign bit — the "diverged is worst" ordering used by all
+/// selection and percentile paths.  Never panics, unlike
+/// `partial_cmp().unwrap()`, which a single diverged trial used to crash.
+pub fn nan_last(a: &f64, b: &f64) -> std::cmp::Ordering {
+    match (a.is_nan(), b.is_nan()) {
+        (true, true) => std::cmp::Ordering::Equal,
+        (true, false) => std::cmp::Ordering::Greater,
+        (false, true) => std::cmp::Ordering::Less,
+        (false, false) => a.total_cmp(b),
+    }
+}
+
+/// Sort ascending with NaNs last (see [`nan_last`]).
+pub fn sort_nan_last(xs: &mut [f64]) {
+    xs.sort_by(nan_last);
+}
+
 /// Linear-interpolated percentile, p in [0, 100].  Matches numpy's
-/// default ("linear") method.
+/// default ("linear") method on finite inputs; NaNs sort last, so ranks
+/// that land in (or interpolate into) the NaN tail return NaN (module
+/// docs, "Non-finite inputs").
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     assert!(!xs.is_empty(), "percentile of empty slice");
     let mut v: Vec<f64> = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sort_nan_last(&mut v);
     let rank = p / 100.0 * (v.len() - 1) as f64;
     let lo = rank.floor() as usize;
     let hi = rank.ceil() as usize;
@@ -48,7 +81,10 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
-/// The Table-4-style percentile row (25/50/75/100).
+/// The Table-4-style percentile row (25/50/75/100).  Diverged (NaN)
+/// entries rank worst, so p100 is NaN as soon as any trial diverged and
+/// the remaining quartiles follow the documented NaN-tail semantics —
+/// no panic.
 pub fn quartile_row(xs: &[f64]) -> [f64; 4] {
     [
         percentile(xs, 25.0),
@@ -83,7 +119,10 @@ pub fn growth_exponent(widths: &[f64], values: &[f64]) -> f64 {
     linfit(&lx, &ly).1
 }
 
-/// Percentile bootstrap confidence interval for the mean.
+/// Percentile bootstrap confidence interval for the mean.  A NaN input
+/// (diverged trial) contaminates every resample that draws it, so with
+/// NaNs present the bounds degrade toward NaN deterministically rather
+/// than panicking; filter to finite values first for a finite CI.
 pub fn bootstrap_mean_ci(
     xs: &[f64],
     iters: usize,
@@ -97,7 +136,7 @@ pub fn bootstrap_mean_ci(
             s / xs.len() as f64
         })
         .collect();
-    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sort_nan_last(&mut means);
     (
         percentile(&means, 100.0 * alpha / 2.0),
         percentile(&means, 100.0 * (1.0 - alpha / 2.0)),
@@ -170,6 +209,60 @@ mod tests {
     fn rms_known() {
         assert!((rms(&[3.0, 4.0]) - (12.5f64).sqrt()).abs() < 1e-6);
         assert_eq!(rms(&[]), 0.0);
+    }
+
+    #[test]
+    fn sort_nan_last_total_order() {
+        let mut xs = [
+            f64::NAN,
+            1.0,
+            f64::NEG_INFINITY,
+            -f64::NAN,
+            f64::INFINITY,
+            -3.0,
+        ];
+        sort_nan_last(&mut xs);
+        assert_eq!(xs[0], f64::NEG_INFINITY);
+        assert_eq!(xs[1], -3.0);
+        assert_eq!(xs[2], 1.0);
+        assert_eq!(xs[3], f64::INFINITY);
+        assert!(xs[4].is_nan() && xs[5].is_nan(), "NaNs (either sign) last");
+    }
+
+    /// One diverged trial: no panic; p100 is NaN, lower quartiles finite.
+    #[test]
+    fn percentile_with_nan_tail() {
+        let xs = [2.0, f64::NAN, 1.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert!(percentile(&xs, 100.0).is_nan());
+        // rank interpolating into the NaN tail is NaN too
+        assert!(percentile(&xs, 90.0).is_nan());
+        let q = quartile_row(&xs);
+        assert_eq!(q[0], 2.0);
+        assert_eq!(q[1], 3.0);
+        assert!(q[3].is_nan());
+    }
+
+    /// Everything diverged: still no panic, all-NaN row.
+    #[test]
+    fn quartiles_all_nan() {
+        let xs = [f64::NAN, f64::NAN];
+        let q = quartile_row(&xs);
+        assert!(q.iter().all(|v| v.is_nan()), "{q:?}");
+    }
+
+    /// NaN-laden bootstrap must not panic; bounds degrade toward NaN.
+    #[test]
+    fn bootstrap_ci_tolerates_nan() {
+        let mut rng = crate::init::rng::Rng::new(6);
+        let mut xs: Vec<f64> = (0..20).map(|_| rng.gaussian()).collect();
+        xs.push(f64::NAN);
+        let (lo, hi) = bootstrap_mean_ci(&xs, 50, 0.05, &mut rng);
+        // with 21 draws per resample a NaN lands in essentially every
+        // resample, so both bounds are NaN — the point is the call returns
+        assert!(lo.is_nan() || lo.is_finite());
+        assert!(hi.is_nan() || hi.is_finite());
     }
 
     #[test]

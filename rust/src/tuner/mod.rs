@@ -251,7 +251,7 @@ pub fn select_best(trials: &[Trial]) -> Option<&Trial> {
     trials
         .iter()
         .filter(|t| !t.diverged && t.val_loss.is_finite())
-        .min_by(|a, b| a.val_loss.partial_cmp(&b.val_loss).unwrap())
+        .min_by(|a, b| a.val_loss.total_cmp(&b.val_loss))
 }
 
 /// Best-so-far curve: value of the selection metric after k samples —

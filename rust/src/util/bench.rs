@@ -57,7 +57,9 @@ pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchStats {
         f();
         samples.push(t.elapsed().as_nanos() as f64);
     }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // total_cmp: timing samples are always finite, but a sort comparator
+    // must never be able to panic (the partial_cmp().unwrap() bug class)
+    samples.sort_by(f64::total_cmp);
     let n = samples.len();
     let mean = samples.iter().sum::<f64>() / n as f64;
     let median = samples[n / 2];

@@ -1,8 +1,10 @@
 //! Property-based tests of the μP invariants (pure host-side math; no
-//! PJRT needed) using the in-repo prop framework.
+//! PJRT needed) using the in-repo prop framework, plus the blocked-kernel
+//! equivalence property pinning the native GEMM rewrite.
 
 use mutransfer::mup::formulations::{abc, Formulation};
 use mutransfer::mup::{HyperParams, Optimizer, Parametrization, Role, Scheme, TensorDims};
+use mutransfer::runtime::native::tensor::{self, naive};
 use mutransfer::util::prop::{check, gen};
 
 fn roles() -> [Role; 4] {
@@ -165,6 +167,105 @@ fn prop_effective_lr_sane() {
                     return Err(format!("bad μP lr {m}"));
                 }
             }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+#[derive(Debug)]
+struct MmShape {
+    m: usize,
+    k: usize,
+    n: usize,
+    a: Vec<f32>,
+    b_kn: Vec<f32>, // (k, n) operand for mm / mm_tn
+    b_nk: Vec<f32>, // (n, k) operand for mm_nt
+    a_km: Vec<f32>, // (k, m) operand for mm_tn
+}
+
+fn gen_mm_shape(rng: &mut mutransfer::init::rng::Rng) -> MmShape {
+    // shapes straddle the tile boundaries (MR=4, NR=16) and occasionally
+    // exceed one KC=256 k-block or one NC=256 n-block (the multi-block
+    // driver paths); dims are NOT restricted to tile multiples
+    let m = 1 + rng.below(21);
+    let n = if rng.below(8) == 0 {
+        250 + rng.below(20) // crosses the NC block edge
+    } else {
+        1 + rng.below(40)
+    };
+    let k = if rng.below(8) == 0 {
+        250 + rng.below(20) // crosses the KC block edge
+    } else {
+        1 + rng.below(48)
+    };
+    let fill = |rng: &mut mutransfer::init::rng::Rng, len: usize| -> Vec<f32> {
+        (0..len).map(|_| rng.gaussian() as f32).collect()
+    };
+    MmShape {
+        m,
+        k,
+        n,
+        a: fill(rng, m * k),
+        b_kn: fill(rng, k * n),
+        b_nk: fill(rng, n * k),
+        a_km: fill(rng, k * m),
+    }
+}
+
+fn max_rel_err(got: &[f32], want: &[f32]) -> f64 {
+    got.iter()
+        .zip(want)
+        .map(|(&g, &w)| ((g as f64) - (w as f64)).abs() / 1.0f64.max((w as f64).abs()))
+        .fold(0.0, f64::max)
+}
+
+/// The blocked, panel-packed GEMMs agree with the naive reference loops
+/// to ≤ 1e-5 relative on random shapes, including non-multiple-of-tile
+/// dims — the correctness contract of the tensor.rs rewrite (only the
+/// grouping of partial sums may differ, never the set of products).
+#[test]
+fn prop_blocked_kernels_match_naive() {
+    check(17, 60, gen_mm_shape, |s| {
+        let tol = 1e-5;
+        let cases = [
+            (
+                "mm",
+                tensor::mm(&s.a, &s.b_kn, s.m, s.k, s.n),
+                naive::mm(&s.a, &s.b_kn, s.m, s.k, s.n),
+            ),
+            (
+                "mm_tn",
+                tensor::mm_tn(&s.a_km, &s.b_kn, s.k, s.m, s.n),
+                naive::mm_tn(&s.a_km, &s.b_kn, s.k, s.m, s.n),
+            ),
+            (
+                "mm_nt",
+                tensor::mm_nt(&s.a, &s.b_nk, s.m, s.k, s.n),
+                naive::mm_nt(&s.a, &s.b_nk, s.m, s.k, s.n),
+            ),
+        ];
+        for (tag, got, want) in &cases {
+            let err = max_rel_err(got, want);
+            if err > tol {
+                return Err(format!("{tag} {}x{}x{} rel err {err:.2e}", s.m, s.k, s.n));
+            }
+        }
+        Ok(())
+    })
+    .unwrap();
+}
+
+/// Blocked kernels are bitwise deterministic call-to-call — the
+/// run-to-run determinism invariant (DESIGN.md §5) the sweep journal
+/// relies on.
+#[test]
+fn prop_blocked_kernels_deterministic() {
+    check(18, 20, gen_mm_shape, |s| {
+        let c1 = tensor::mm(&s.a, &s.b_kn, s.m, s.k, s.n);
+        let c2 = tensor::mm(&s.a, &s.b_kn, s.m, s.k, s.n);
+        if c1 != c2 {
+            return Err(format!("mm {}x{}x{} not bitwise stable", s.m, s.k, s.n));
         }
         Ok(())
     })
