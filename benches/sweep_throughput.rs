@@ -44,6 +44,7 @@ fn jobs(n: usize, steps: usize) -> Vec<Job> {
                 spec,
                 assignment: a,
                 data_seed: 1,
+                ckpt_id: None,
             }
         })
         .collect()

@@ -1,7 +1,9 @@
 //! Tuning-throughput bench (Tables 4-7 operational core): trials/minute
 //! of the sweep scheduler on the proxy model, plus journal-resume
 //! overhead — the numbers that determine how long a 256-sample BERT-style
-//! search (App. F.3) takes on given hardware.
+//! search (App. F.3) takes on given hardware — and the SHA-vs-random
+//! comparison: best val loss and total train steps at equal per-trial
+//! final budget (SHA must execute strictly fewer steps).
 
 use std::time::Instant;
 
@@ -11,8 +13,9 @@ use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
 use mutransfer::report::Reporter;
 use mutransfer::runtime::Runtime;
 use mutransfer::sweep::{Job, Sweep};
-use mutransfer::train::{RunSpec, Schedule};
-use mutransfer::tuner::SearchSpace;
+use mutransfer::train::RunSpec;
+use mutransfer::tuner::sha::{run_sha, ShaConfig};
+use mutransfer::tuner::{select_best, SearchSpace, Trial};
 
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::new(&mutransfer::artifacts_dir())?;
@@ -45,6 +48,7 @@ fn main() -> anyhow::Result<()> {
                 spec,
                 assignment: a,
                 data_seed: 1,
+                ckpt_id: None,
             }
         })
         .collect();
@@ -67,5 +71,84 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(r1.len(), r2.len());
     println!("journal resume: {warm:.3}s (cold/warm speedup {:.0}x)", cold / warm.max(1e-9));
     assert!(warm < cold / 5.0, "journal resume should be much faster");
+
+    // ---- SHA vs random at equal per-trial final budget -----------------
+    // Same 8 log-spaced LR candidates, same 24-step final budget.  Random
+    // trains every candidate to the full budget; SHA (eta=2, rung0=6)
+    // trains everyone to 6 steps, then resumes the top half from their
+    // checkpoints.  Row: tuner | trials | train steps | best val loss.
+    let base = BaseShape::Tfm {
+        d_model: 32,
+        n_head: 4,
+        d_head: 8,
+        d_ffn: 128,
+    };
+    let max_steps = 24;
+    let lrs: Vec<f64> = (0..8).map(|z| 2e-3 * 2f64.powi(z - 4)).collect();
+    let mk_jobs = |label: &str| -> Vec<Job> {
+        lrs.iter()
+            .enumerate()
+            .map(|(i, &lr)| {
+                let hp = HyperParams { lr, ..HyperParams::default() };
+                let mut spec = RunSpec::new(
+                    "tfm_post_w32_d2",
+                    Parametrization::mup(Optimizer::Adam),
+                    hp,
+                    base.clone(),
+                );
+                spec.steps = max_steps;
+                spec.eval_every = 6;
+                spec.seed = 100 + i as u64;
+                Job {
+                    key: format!("{label}/{i}"),
+                    spec,
+                    assignment: mutransfer::tuner::Assignment::single("lr", lr),
+                    data_seed: 3,
+                    ckpt_id: None,
+                }
+            })
+            .collect()
+    };
+
+    let t2 = Instant::now();
+    let rand_results = Sweep::new(&rt).run(&mk_jobs("rand"))?;
+    let rand_secs = t2.elapsed().as_secs_f64();
+    let rand_trials: Vec<Trial> = rand_results.iter().map(|r| r.trial.clone()).collect();
+    let rand_steps: usize = rand_results.iter().map(|r| r.train_curve.len()).sum();
+    let rand_best = select_best(&rand_trials);
+
+    let t3 = Instant::now();
+    let mut sha_sweep = Sweep::new(&rt).with_checkpoints(&rep.path("sha-ckpt"), 0)?;
+    let sha = run_sha(
+        &mut sha_sweep,
+        &mk_jobs("sha"),
+        &ShaConfig { eta: 2, rung0: 6, max_steps },
+    )?;
+    let sha_secs = t3.elapsed().as_secs_f64();
+    let sha_best = select_best(&sha.trials);
+
+    println!("\ntuner    trials  train-steps  best-val   wall");
+    println!(
+        "random   {:>6}  {rand_steps:>11}  {:>8.4}   {rand_secs:>5.2}s",
+        lrs.len(),
+        rand_best.map(|t| t.val_loss).unwrap_or(f64::NAN),
+    );
+    println!(
+        "sha      {:>6}  {:>11}  {:>8.4}   {sha_secs:>5.2}s",
+        lrs.len(),
+        sha.total_steps,
+        sha_best.map(|t| t.val_loss).unwrap_or(f64::NAN),
+    );
+    for r in &sha.rungs {
+        println!(
+            "  rung @{:>3} steps: {} trials, {} new steps",
+            r.budget, r.survivors, r.steps_charged
+        );
+    }
+    assert!(
+        sha.total_steps < rand_steps,
+        "SHA must execute strictly fewer train steps ({} vs {rand_steps})",
+        sha.total_steps
+    );
     Ok(())
 }

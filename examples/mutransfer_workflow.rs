@@ -15,7 +15,7 @@ use mutransfer::report::Reporter;
 use mutransfer::runtime::Runtime;
 use mutransfer::sweep::Sweep;
 use mutransfer::train::Schedule;
-use mutransfer::transfer::{mu_transfer, naive_transfer, TransferSetup};
+use mutransfer::transfer::{mu_transfer, naive_transfer, TransferSetup, TunerKind};
 use mutransfer::tuner::SearchSpace;
 use mutransfer::util::cli::Args;
 
@@ -48,6 +48,7 @@ fn main() -> anyhow::Result<()> {
         seed: 17,
         eval_every: (steps / 2).max(2),
         schedule: Schedule::Constant,
+        tuner: TunerKind::Random,
     };
 
     println!("=== step 1+2: tune w32 proxy ({samples} samples), transfer to w128 ===");

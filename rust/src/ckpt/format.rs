@@ -1,0 +1,498 @@
+//! The on-disk checkpoint container: a versioned, deterministic binary
+//! section format (DESIGN.md §7).
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic[8] = "MUTCKPT\0"
+//! version  u32
+//! n_sections u32
+//! section × n_sections:
+//!   name_len u16, name utf-8 bytes
+//!   dtype    u8   (1 = f32, 2 = f64, 3 = u64, 4 = raw bytes)
+//!   ndim     u8,  dims u64 × ndim          (the shape manifest)
+//!   payload_len u64, payload bytes         (little-endian scalars)
+//!   crc32    u32  over the section record (name_len..payload inclusive)
+//! ```
+//!
+//! Writers serialize the whole file into one buffer, write it to
+//! `<path>.tmp`, fsync, then rename over `path` — a crash can never leave
+//! a half-written checkpoint visible under the final name.  Readers
+//! validate magic, version, per-section shape/payload consistency, and
+//! every CRC before returning a single byte of data; the same state always
+//! serializes to the same bytes (no timestamps, no map iteration order —
+//! sections are an explicit list).
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+pub const MAGIC: [u8; 8] = *b"MUTCKPT\0";
+pub const VERSION: u32 = 1;
+
+/// IEEE CRC-32 (the zlib polynomial), table built at compile time — the
+/// vendored crate set has no checksum crate.
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc_table();
+
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    F64,
+    U64,
+    Raw,
+}
+
+impl Dtype {
+    fn code(self) -> u8 {
+        match self {
+            Dtype::F32 => 1,
+            Dtype::F64 => 2,
+            Dtype::U64 => 3,
+            Dtype::Raw => 4,
+        }
+    }
+
+    fn parse(c: u8) -> Result<Dtype> {
+        Ok(match c {
+            1 => Dtype::F32,
+            2 => Dtype::F64,
+            3 => Dtype::U64,
+            4 => Dtype::Raw,
+            other => bail!("unknown section dtype code {other}"),
+        })
+    }
+
+    fn elem_size(self) -> usize {
+        match self {
+            Dtype::F32 => 4,
+            Dtype::F64 | Dtype::U64 => 8,
+            Dtype::Raw => 1,
+        }
+    }
+}
+
+/// One named, shaped, checksummed blob.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Section {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<u64>,
+    /// little-endian scalar bytes; length == product(shape) · elem_size
+    pub payload: Vec<u8>,
+}
+
+impl Section {
+    pub fn f32s(name: &str, shape: &[u64], data: &[f32]) -> Section {
+        let mut payload = Vec::with_capacity(data.len() * 4);
+        for v in data {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        Section {
+            name: name.to_string(),
+            dtype: Dtype::F32,
+            shape: shape.to_vec(),
+            payload,
+        }
+    }
+
+    pub fn f64s(name: &str, data: &[f64]) -> Section {
+        let mut payload = Vec::with_capacity(data.len() * 8);
+        for v in data {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        Section {
+            name: name.to_string(),
+            dtype: Dtype::F64,
+            shape: vec![data.len() as u64],
+            payload,
+        }
+    }
+
+    pub fn u64s(name: &str, data: &[u64]) -> Section {
+        let mut payload = Vec::with_capacity(data.len() * 8);
+        for v in data {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        Section {
+            name: name.to_string(),
+            dtype: Dtype::U64,
+            shape: vec![data.len() as u64],
+            payload,
+        }
+    }
+
+    pub fn raw(name: &str, bytes: Vec<u8>) -> Section {
+        Section {
+            name: name.to_string(),
+            dtype: Dtype::Raw,
+            shape: vec![bytes.len() as u64],
+            payload: bytes,
+        }
+    }
+
+    pub fn numel(&self) -> u64 {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32s(&self) -> Result<Vec<f32>> {
+        if self.dtype != Dtype::F32 {
+            bail!("section {} is {:?}, expected F32", self.name, self.dtype);
+        }
+        Ok(self
+            .payload
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    pub fn as_f64s(&self) -> Result<Vec<f64>> {
+        if self.dtype != Dtype::F64 {
+            bail!("section {} is {:?}, expected F64", self.name, self.dtype);
+        }
+        Ok(self
+            .payload
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect())
+    }
+
+    pub fn as_u64s(&self) -> Result<Vec<u64>> {
+        if self.dtype != Dtype::U64 {
+            bail!("section {} is {:?}, expected U64", self.name, self.dtype);
+        }
+        Ok(self
+            .payload
+            .chunks_exact(8)
+            .map(|c| u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]))
+            .collect())
+    }
+
+    pub fn as_text(&self) -> Result<String> {
+        if self.dtype != Dtype::Raw {
+            bail!("section {} is {:?}, expected Raw", self.name, self.dtype);
+        }
+        String::from_utf8(self.payload.clone())
+            .with_context(|| format!("section {} is not utf-8", self.name))
+    }
+
+    /// Serialize the section record (everything except the trailing CRC).
+    fn encode(&self) -> Result<Vec<u8>> {
+        if self.name.len() > u16::MAX as usize {
+            bail!("section name too long ({} bytes)", self.name.len());
+        }
+        if self.shape.len() > u8::MAX as usize {
+            bail!("section {} has {} dims (max 255)", self.name, self.shape.len());
+        }
+        let want = self
+            .numel()
+            .checked_mul(self.dtype.elem_size() as u64)
+            .context("section size overflow")?;
+        if self.payload.len() as u64 != want {
+            bail!(
+                "section {}: payload is {} bytes, shape {:?} implies {want}",
+                self.name,
+                self.payload.len(),
+                self.shape
+            );
+        }
+        let mut out = Vec::with_capacity(self.name.len() + self.payload.len() + 32);
+        out.extend_from_slice(&(self.name.len() as u16).to_le_bytes());
+        out.extend_from_slice(self.name.as_bytes());
+        out.push(self.dtype.code());
+        out.push(self.shape.len() as u8);
+        for d in &self.shape {
+            out.extend_from_slice(&d.to_le_bytes());
+        }
+        out.extend_from_slice(&(self.payload.len() as u64).to_le_bytes());
+        out.extend_from_slice(&self.payload);
+        Ok(out)
+    }
+}
+
+/// Serialize and atomically publish a checkpoint: write `<path>.tmp`,
+/// fsync, rename.  Identical sections always produce identical bytes.
+pub fn write_file(path: &Path, sections: &[Section]) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(sections.len() as u32).to_le_bytes());
+    for s in sections {
+        let rec = s.encode()?;
+        buf.extend_from_slice(&rec);
+        buf.extend_from_slice(&crc32(&rec).to_le_bytes());
+    }
+    let tmp = tmp_path(path);
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(&buf)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing {}", path.display()))?;
+    Ok(())
+}
+
+fn tmp_path(path: &Path) -> PathBuf {
+    let mut os = path.as_os_str().to_os_string();
+    os.push(".tmp");
+    PathBuf::from(os)
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        // `pos + n` could wrap on a crafted length (e.g. a Raw section
+        // declaring u64::MAX bytes passes the shape/payload consistency
+        // check); compare against the remaining bytes instead so corrupt
+        // files stay a recoverable error, never a panic.
+        if n > self.buf.len() - self.pos {
+            bail!(
+                "truncated checkpoint: wanted {n} bytes at offset {}, file has {}",
+                self.pos,
+                self.buf.len()
+            );
+        }
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+}
+
+/// Read and fully validate a checkpoint file.  Every failure mode is a
+/// distinct error: bad magic, unsupported version, truncation, a
+/// shape/payload mismatch, or a CRC mismatch naming the section.
+pub fn read_file(path: &Path) -> Result<Vec<Section>> {
+    let buf = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let mut cur = Cursor { buf: &buf, pos: 0 };
+    let magic = cur.take(8)?;
+    if magic != MAGIC {
+        bail!("bad magic: {} is not a mutransfer checkpoint", path.display());
+    }
+    let version = cur.u32()?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version} (this build reads {VERSION})");
+    }
+    let n = cur.u32()? as usize;
+    let mut out = Vec::with_capacity(n.min(1024));
+    for i in 0..n {
+        let rec_start = cur.pos;
+        let name_len = cur.u16()? as usize;
+        let name = String::from_utf8(cur.take(name_len)?.to_vec())
+            .with_context(|| format!("section {i}: name is not utf-8"))?;
+        let dtype = Dtype::parse(cur.u8()?)?;
+        let ndim = cur.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(cur.u64()?);
+        }
+        let payload_len = cur.u64()? as usize;
+        let numel: u64 = shape.iter().try_fold(1u64, |a, &d| a.checked_mul(d)).context(
+            "section shape overflow",
+        )?;
+        let want = numel
+            .checked_mul(dtype.elem_size() as u64)
+            .context("section size overflow")?;
+        if payload_len as u64 != want {
+            bail!(
+                "section {name}: payload length {payload_len} does not match shape {shape:?}"
+            );
+        }
+        let payload = cur.take(payload_len)?.to_vec();
+        let rec_end = cur.pos;
+        let stored = cur.u32()?;
+        let actual = crc32(&buf[rec_start..rec_end]);
+        if stored != actual {
+            bail!("crc mismatch in section {name}: stored {stored:#010x}, computed {actual:#010x}");
+        }
+        out.push(Section {
+            name,
+            dtype,
+            shape,
+            payload,
+        });
+    }
+    if cur.pos != buf.len() {
+        bail!(
+            "trailing bytes after last section ({} of {} consumed)",
+            cur.pos,
+            buf.len()
+        );
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_reference_vectors() {
+        // the canonical zlib check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    fn tmpfile(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("mutransfer_ckpt_format_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_all_dtypes() {
+        let path = tmpfile("roundtrip.ckpt");
+        let secs = vec![
+            Section::raw("meta", b"hello".to_vec()),
+            Section::u64s("ints", &[0, 1, u64::MAX]),
+            Section::f64s("curve", &[1.5, f64::NAN, -0.0]),
+            Section::f32s("w", &[2, 3], &[1.0, -2.5, 0.0, f32::NAN, 3.25, -0.0]),
+        ];
+        write_file(&path, &secs).unwrap();
+        let back = read_file(&path).unwrap();
+        assert_eq!(back.len(), 4);
+        assert_eq!(back[0].as_text().unwrap(), "hello");
+        assert_eq!(back[1].as_u64s().unwrap(), vec![0, 1, u64::MAX]);
+        let curve = back[2].as_f64s().unwrap();
+        assert_eq!(curve[0].to_bits(), 1.5f64.to_bits());
+        assert_eq!(curve[1].to_bits(), f64::NAN.to_bits()); // bit-exact, incl. NaN
+        assert_eq!(curve[2].to_bits(), (-0.0f64).to_bits());
+        assert_eq!(back[3].shape, vec![2, 3]);
+        let w = back[3].as_f32s().unwrap();
+        assert_eq!(w.len(), 6);
+        assert_eq!(w[3].to_bits(), f32::NAN.to_bits());
+        assert_eq!(w[5].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn deterministic_bytes() {
+        let a = tmpfile("det_a.ckpt");
+        let b = tmpfile("det_b.ckpt");
+        let secs = vec![
+            Section::raw("variant", b"tfm".to_vec()),
+            Section::f32s("w", &[4], &[0.1, 0.2, 0.3, 0.4]),
+        ];
+        write_file(&a, &secs).unwrap();
+        write_file(&b, &secs).unwrap();
+        assert_eq!(std::fs::read(&a).unwrap(), std::fs::read(&b).unwrap());
+    }
+
+    #[test]
+    fn no_tmp_file_left_behind() {
+        let path = tmpfile("clean.ckpt");
+        write_file(&path, &[Section::raw("x", vec![1, 2, 3])]).unwrap();
+        assert!(path.exists());
+        assert!(!tmp_path(&path).exists());
+    }
+
+    #[test]
+    fn corruption_is_rejected() {
+        let path = tmpfile("corrupt.ckpt");
+        write_file(
+            &path,
+            &[Section::f32s("w", &[3], &[1.0, 2.0, 3.0])],
+        )
+        .unwrap();
+        let good = std::fs::read(&path).unwrap();
+
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        let e = read_file(&path).unwrap_err().to_string();
+        assert!(e.contains("magic"), "{e}");
+
+        // wrong version
+        let mut bad = good.clone();
+        bad[8] = 99;
+        std::fs::write(&path, &bad).unwrap();
+        let e = read_file(&path).unwrap_err().to_string();
+        assert!(e.contains("version"), "{e}");
+
+        // truncated
+        std::fs::write(&path, &good[..good.len() - 3]).unwrap();
+        let e = read_file(&path).unwrap_err().to_string();
+        assert!(e.to_lowercase().contains("truncated"), "{e}");
+
+        // flipped payload byte -> crc mismatch
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 6] ^= 0x01; // inside the last section's payload
+        std::fs::write(&path, &bad).unwrap();
+        let e = read_file(&path).unwrap_err().to_string();
+        assert!(e.contains("crc"), "{e}");
+
+        // intact file still loads
+        std::fs::write(&path, &good).unwrap();
+        assert!(read_file(&path).is_ok());
+    }
+
+    /// A crafted section declaring a u64::MAX-byte payload must come back
+    /// as a truncation error, not an overflow panic (regression for the
+    /// `pos + n` wrap in `Cursor::take`).
+    #[test]
+    fn absurd_declared_length_is_an_error_not_a_panic() {
+        let path = tmpfile("absurd.ckpt");
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        buf.extend_from_slice(&1u32.to_le_bytes()); // one section
+        buf.extend_from_slice(&1u16.to_le_bytes()); // name_len
+        buf.push(b'x');
+        buf.push(4); // Raw
+        buf.push(1); // ndim
+        buf.extend_from_slice(&u64::MAX.to_le_bytes()); // dim
+        buf.extend_from_slice(&u64::MAX.to_le_bytes()); // payload_len
+        std::fs::write(&path, &buf).unwrap();
+        let e = read_file(&path).unwrap_err().to_string();
+        assert!(e.to_lowercase().contains("truncated"), "{e}");
+    }
+}

@@ -1,0 +1,378 @@
+//! Durable trial state: checkpoint/restore for training runs
+//! (DESIGN.md §7).
+//!
+//! A [`Snapshot`] is the complete, host-side image of one training trial
+//! at a step boundary: the variant name, every parameter and optimizer
+//! moment tensor ([`crate::runtime::ModelState`] order, named and shaped
+//! by the variant's param specs), the step counter, the loss curves
+//! recorded so far, and — for stateful data sources — an
+//! [`crate::init::rng::RngState`].  Restoring a snapshot into a fresh
+//! session and continuing the drive loop produces a **bitwise identical**
+//! trajectory to the uninterrupted run (pinned by
+//! `rust/tests/ckpt_resume.rs`): tensors round-trip as raw little-endian
+//! f32 bits, losses as raw f64 bits, and the repo's data substrates are
+//! pure functions of (seed, split, step), so the persisted step counter
+//! *is* the data cursor.
+//!
+//! The byte format lives in [`format`]: magic + version + shape manifest
+//! + per-section CRC32, written tmp-file-then-rename so a crash never
+//! leaves a torn checkpoint under the final name.  Backends without state
+//! capture (PJRT) decline via `BackendSession::state`, and every caller
+//! falls back to running from step 0.
+
+pub mod format;
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::init::rng::RngState;
+use crate::runtime::backend::ModelState;
+use crate::runtime::manifest::Variant;
+use self::format::Section;
+
+/// How far a run had progressed when the snapshot was taken.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunProgress {
+    /// optimizer steps completed (also the data-stream cursor)
+    pub steps_done: usize,
+    /// true for the end-of-run snapshot (the run finished or diverged);
+    /// false for a periodic mid-run snapshot
+    pub complete: bool,
+    pub diverged: bool,
+    /// FLOPs spent so far (restored so resumed totals match uninterrupted)
+    pub flops: f64,
+    pub train_losses: Vec<f64>,
+    /// (step, val_loss) pairs recorded so far
+    pub val_losses: Vec<(usize, f64)>,
+}
+
+/// One trial frozen at a step boundary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Snapshot {
+    /// manifest variant this state belongs to (restore refuses others)
+    pub variant: String,
+    /// fingerprint of the run configuration that produced this state
+    /// (`RunSpec::trajectory_fingerprint`: parametrization, HPs, base
+    /// shape, seed, schedule — everything except the step budget).  Resume
+    /// refuses a snapshot whose fingerprint does not match, so changed HPs
+    /// can never be silently glued onto old state.
+    pub spec_fp: u64,
+    pub n_params: usize,
+    pub progress: RunProgress,
+    /// named state tensors: the parameters (manifest names) followed by
+    /// the optimizer-state blocks (`opt0.<name>`, `opt1.<name>`, …) —
+    /// the same order as [`crate::runtime::BackendSession::param`]
+    pub tensors: Vec<(String, Vec<f32>)>,
+    /// shapes parallel to `tensors` (the file's shape manifest)
+    pub shapes: Vec<Vec<usize>>,
+    /// data-RNG stream state, for sources that are not (seed, step)-pure
+    pub data_rng: Option<RngState>,
+}
+
+const SEC_VARIANT: &str = "variant";
+const SEC_META: &str = "meta";
+const SEC_FLOPS: &str = "flops";
+const SEC_TRAIN: &str = "train_losses";
+const SEC_VAL_STEPS: &str = "val_steps";
+const SEC_VAL_LOSSES: &str = "val_losses";
+const SEC_RNG: &str = "data_rng";
+const TENSOR_PREFIX: &str = "t:";
+
+impl Snapshot {
+    /// Assemble a snapshot from a backend state capture, naming and
+    /// shaping every tensor from the variant's param specs.  Takes the
+    /// state by value and moves the tensors — snapshotting is on the
+    /// train hot path, so the capture's clone is the only full copy.
+    pub fn from_state(
+        variant: &Variant,
+        state: ModelState,
+        progress: RunProgress,
+        spec_fp: u64,
+        data_rng: Option<RngState>,
+    ) -> Result<Snapshot> {
+        let p = variant.n_params();
+        if p == 0 || state.n_params != p {
+            bail!(
+                "state has {} params, variant {} has {p}",
+                state.n_params,
+                variant.name
+            );
+        }
+        if state.tensors.len() % p != 0 || state.tensors.len() < p {
+            bail!(
+                "state has {} tensors, not a whole number of {p}-tensor blocks",
+                state.tensors.len()
+            );
+        }
+        let mut tensors = Vec::with_capacity(state.tensors.len());
+        let mut shapes = Vec::with_capacity(state.tensors.len());
+        for (i, t) in state.tensors.into_iter().enumerate() {
+            let info = &variant.params[i % p];
+            if t.len() != info.numel() {
+                bail!(
+                    "state tensor {i} ({}) has {} elements, spec says {}",
+                    info.name,
+                    t.len(),
+                    info.numel()
+                );
+            }
+            let name = if i < p {
+                info.name.clone()
+            } else {
+                format!("opt{}.{}", i / p - 1, info.name)
+            };
+            tensors.push((name, t));
+            shapes.push(info.shape.clone());
+        }
+        Ok(Snapshot {
+            variant: variant.name.clone(),
+            spec_fp,
+            n_params: p,
+            progress,
+            tensors,
+            shapes,
+            data_rng,
+        })
+    }
+
+    /// The backend-facing view: tensors in `param(idx)` order.
+    pub fn model_state(&self) -> ModelState {
+        ModelState {
+            tensors: self.tensors.iter().map(|(_, d)| d.clone()).collect(),
+            n_params: self.n_params,
+        }
+    }
+
+    /// Consuming variant of [`Snapshot::model_state`]: moves the tensors
+    /// instead of cloning them — the resume path restores once and drops
+    /// the snapshot, so the copy would only double peak memory.
+    pub fn into_model_state(self) -> ModelState {
+        ModelState {
+            tensors: self.tensors.into_iter().map(|(_, d)| d).collect(),
+            n_params: self.n_params,
+        }
+    }
+
+    /// Refuse to restore into the wrong variant or a mismatched layout.
+    pub fn validate_for(&self, variant: &Variant) -> Result<()> {
+        if self.variant != variant.name {
+            bail!(
+                "checkpoint is for variant {}, session runs {}",
+                self.variant,
+                variant.name
+            );
+        }
+        let p = variant.n_params();
+        if self.n_params != p || p == 0 || self.tensors.len() % p != 0 {
+            bail!(
+                "checkpoint layout mismatch: {} params / {} tensors vs variant's {p}",
+                self.n_params,
+                self.tensors.len()
+            );
+        }
+        for (i, (name, data)) in self.tensors.iter().enumerate() {
+            let info = &variant.params[i % p];
+            if data.len() != info.numel() {
+                bail!(
+                    "checkpoint tensor {name} has {} elements, spec {} wants {}",
+                    data.len(),
+                    info.name,
+                    info.numel()
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize + atomically publish (tmp-file-then-rename).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let pr = &self.progress;
+        let mut secs = vec![
+            Section::raw(SEC_VARIANT, self.variant.as_bytes().to_vec()),
+            Section::u64s(
+                SEC_META,
+                &[
+                    pr.steps_done as u64,
+                    self.n_params as u64,
+                    pr.complete as u64,
+                    pr.diverged as u64,
+                    self.tensors.len() as u64,
+                    self.spec_fp,
+                ],
+            ),
+            Section::f64s(SEC_FLOPS, &[pr.flops]),
+            Section::f64s(SEC_TRAIN, &pr.train_losses),
+            Section::u64s(
+                SEC_VAL_STEPS,
+                &pr.val_losses.iter().map(|&(s, _)| s as u64).collect::<Vec<_>>(),
+            ),
+            Section::f64s(
+                SEC_VAL_LOSSES,
+                &pr.val_losses.iter().map(|&(_, l)| l).collect::<Vec<_>>(),
+            ),
+        ];
+        if let Some(rng) = &self.data_rng {
+            secs.push(Section::u64s(SEC_RNG, &rng.to_words()));
+        }
+        for ((name, data), shape) in self.tensors.iter().zip(&self.shapes) {
+            let dims: Vec<u64> = shape.iter().map(|&d| d as u64).collect();
+            secs.push(Section::f32s(
+                &format!("{TENSOR_PREFIX}{name}"),
+                &dims,
+                data,
+            ));
+        }
+        format::write_file(path, &secs)
+            .with_context(|| format!("writing checkpoint {}", path.display()))
+    }
+
+    /// Read + fully validate a checkpoint file (magic, version, CRCs,
+    /// section schema).
+    pub fn load(path: &Path) -> Result<Snapshot> {
+        let secs = format::read_file(path)
+            .with_context(|| format!("loading checkpoint {}", path.display()))?;
+        let find = |name: &str| -> Result<&Section> {
+            secs.iter()
+                .find(|s| s.name == name)
+                .with_context(|| format!("checkpoint is missing the {name} section"))
+        };
+        let variant = find(SEC_VARIANT)?.as_text()?;
+        let meta = find(SEC_META)?.as_u64s()?;
+        if meta.len() != 6 {
+            bail!("meta section has {} words, expected 6", meta.len());
+        }
+        let flops = *find(SEC_FLOPS)?
+            .as_f64s()?
+            .first()
+            .context("flops section is empty")?;
+        let train_losses = find(SEC_TRAIN)?.as_f64s()?;
+        let val_steps = find(SEC_VAL_STEPS)?.as_u64s()?;
+        let val_vals = find(SEC_VAL_LOSSES)?.as_f64s()?;
+        if val_steps.len() != val_vals.len() {
+            bail!(
+                "val curve mismatch: {} steps vs {} losses",
+                val_steps.len(),
+                val_vals.len()
+            );
+        }
+        let data_rng = match secs.iter().find(|s| s.name == SEC_RNG) {
+            Some(s) => {
+                Some(RngState::from_words(&s.as_u64s()?).map_err(|e| anyhow::anyhow!(e))?)
+            }
+            None => None,
+        };
+        let mut tensors = Vec::new();
+        let mut shapes = Vec::new();
+        for s in &secs {
+            if let Some(name) = s.name.strip_prefix(TENSOR_PREFIX) {
+                tensors.push((name.to_string(), s.as_f32s()?));
+                shapes.push(s.shape.iter().map(|&d| d as usize).collect());
+            }
+        }
+        if tensors.len() as u64 != meta[4] {
+            bail!(
+                "checkpoint lists {} tensors, meta says {}",
+                tensors.len(),
+                meta[4]
+            );
+        }
+        Ok(Snapshot {
+            variant,
+            spec_fp: meta[5],
+            n_params: meta[1] as usize,
+            progress: RunProgress {
+                steps_done: meta[0] as usize,
+                complete: meta[2] != 0,
+                diverged: meta[3] != 0,
+                flops,
+                train_losses,
+                val_losses: val_steps
+                    .iter()
+                    .zip(&val_vals)
+                    .map(|(&s, &l)| (s as usize, l))
+                    .collect(),
+            },
+            tensors,
+            shapes,
+            data_rng,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Runtime;
+
+    fn sample_snapshot() -> (Snapshot, Variant) {
+        let rt = Runtime::native();
+        let variant = rt.manifest().get("mlp_w64").unwrap().clone();
+        let tensors: Vec<Vec<f32>> = variant
+            .params
+            .iter()
+            .chain(variant.params.iter()) // params + one momentum block
+            .enumerate()
+            .map(|(i, p)| (0..p.numel()).map(|j| (i * 1000 + j) as f32 * 0.5).collect())
+            .collect();
+        let state = ModelState {
+            n_params: variant.n_params(),
+            tensors,
+        };
+        let progress = RunProgress {
+            steps_done: 7,
+            complete: false,
+            diverged: false,
+            flops: 1.25e9,
+            train_losses: vec![2.3, 2.2, f64::NAN],
+            val_losses: vec![(4, 2.25), (7, f64::NAN)],
+        };
+        let snap = Snapshot::from_state(&variant, state, progress, 0xFEED, None).unwrap();
+        (snap, variant)
+    }
+
+    #[test]
+    fn snapshot_roundtrip_is_bitwise() {
+        let (snap, variant) = sample_snapshot();
+        let dir = std::env::temp_dir().join("mutransfer_ckpt_mod_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.ckpt");
+        snap.save(&path).unwrap();
+        let back = Snapshot::load(&path).unwrap();
+        assert_eq!(back.variant, snap.variant);
+        assert_eq!(back.spec_fp, 0xFEED);
+        assert_eq!(back.n_params, snap.n_params);
+        assert_eq!(back.progress.steps_done, 7);
+        assert!(!back.progress.complete);
+        assert_eq!(back.progress.flops, 1.25e9);
+        assert_eq!(back.progress.train_losses.len(), 3);
+        assert_eq!(back.progress.train_losses[1].to_bits(), 2.2f64.to_bits());
+        assert!(back.progress.train_losses[2].is_nan());
+        assert_eq!(back.progress.val_losses[0], (4, 2.25));
+        assert!(back.progress.val_losses[1].1.is_nan());
+        for ((na, da), (nb, db)) in snap.tensors.iter().zip(&back.tensors) {
+            assert_eq!(na, nb);
+            assert_eq!(da.len(), db.len());
+            for (x, y) in da.iter().zip(db) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        back.validate_for(&variant).unwrap();
+    }
+
+    #[test]
+    fn validate_refuses_other_variants() {
+        let (snap, _) = sample_snapshot();
+        let rt = Runtime::native();
+        let other = rt.manifest().get("resmlp_w32").unwrap().clone();
+        assert!(snap.validate_for(&other).is_err());
+    }
+
+    #[test]
+    fn opt_blocks_are_named_by_block_index() {
+        let (snap, variant) = sample_snapshot();
+        let p = variant.n_params();
+        assert_eq!(snap.tensors[0].0, variant.params[0].name);
+        assert!(snap.tensors[p].0.starts_with("opt0."));
+    }
+}

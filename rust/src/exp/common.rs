@@ -149,6 +149,7 @@ pub fn lr_job(
         spec,
         assignment: Assignment::single("lr", lr),
         data_seed: 7,
+        ckpt_id: None,
     }
 }
 

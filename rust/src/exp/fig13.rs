@@ -105,6 +105,7 @@ pub fn run_dk(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
                     spec,
                     assignment: Assignment::single("alpha_attn", a),
                     data_seed: 7,
+                    ckpt_id: None,
                 };
                 let r = sweep.run(&[job])?.remove(0);
                 if r.trial.train_loss.is_finite() {

@@ -92,6 +92,7 @@ pub(crate) fn run_inner(
                             spec,
                             assignment: Assignment::single(hp_name, v),
                             data_seed: 7,
+                            ckpt_id: None,
                         }
                     })
                 })
@@ -155,6 +156,7 @@ pub(crate) fn run_inner(
                 spec,
                 assignment: Assignment::default(),
                 data_seed: 7,
+                ckpt_id: None,
             };
             let r = sweep.run(&[job])?.remove(0);
             rows.push((sched_name.to_string(), r.trial.train_loss));

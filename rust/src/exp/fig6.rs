@@ -12,7 +12,7 @@ use crate::runtime::Runtime;
 use crate::stats;
 use crate::sweep::Sweep;
 use crate::train::Schedule;
-use crate::transfer::{direct_tuning, mu_transfer, TransferSetup};
+use crate::transfer::{direct_tuning, mu_transfer, TransferSetup, TunerKind};
 use crate::tuner::{best_so_far, SearchSpace};
 use crate::util::json::{jnum, jnums, Json};
 use crate::util::table::{fmt_loss, Table};
@@ -68,6 +68,7 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
                 seed: 700 + trial as u64,
                 eval_every: (scale.steps / 2).max(2),
                 schedule: Schedule::Constant,
+                tuner: TunerKind::Random,
             };
             let mu = mu_transfer(rt, &mut sweep, &setup, &format!("fig6/b{budget}/t{trial}"))?;
             mu_meds.push(

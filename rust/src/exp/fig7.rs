@@ -50,6 +50,7 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
                     spec,
                     assignment: Assignment::single("lr", lr),
                     data_seed: 7,
+                    ckpt_id: None,
                 };
                 let r = sweep.run(&[job])?.remove(0);
                 curves.push((w, r.train_curve.clone()));

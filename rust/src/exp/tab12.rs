@@ -59,6 +59,7 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
                     spec,
                     assignment: a.clone(),
                     data_seed: 11,
+                    ckpt_id: None,
                 }
             })
             .collect();
@@ -84,6 +85,7 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
                 spec,
                 assignment: best_a.clone(),
                 data_seed: 11,
+                ckpt_id: None,
             }])?
             .remove(0);
         t.row(vec![

@@ -21,7 +21,7 @@ use crate::runtime::Runtime;
 use crate::stats::quartile_row;
 use crate::sweep::Sweep;
 use crate::train::Schedule;
-use crate::transfer::{direct_tuning, mu_transfer, naive_transfer, TransferSetup};
+use crate::transfer::{direct_tuning, mu_transfer, naive_transfer, TransferSetup, TunerKind};
 use crate::tuner::SearchSpace;
 use crate::util::json::{jnum, jnums, Json};
 use crate::util::table::{fmt_loss, Table};
@@ -114,6 +114,7 @@ fn run_mt(
             seed: 500 + trial as u64,
             eval_every: scale.steps.max(4) / 2,
             schedule: Schedule::Constant,
+            tuner: TunerKind::Random,
         };
         let mu = mu_transfer(rt, &mut sweep, &setup, &format!("{name}/t{trial}"))?;
         mu_losses.push(

@@ -13,7 +13,7 @@ use crate::report::Reporter;
 use crate::runtime::Runtime;
 use crate::sweep::{Job, Sweep};
 use crate::train::{RunSpec, Schedule};
-use crate::transfer::{mu_transfer, naive_transfer, TransferSetup};
+use crate::transfer::{mu_transfer, naive_transfer, TransferSetup, TunerKind};
 use crate::tuner::SearchSpace;
 use crate::util::json::{jnum, Json};
 use crate::util::table::{fmt_loss, Table};
@@ -56,6 +56,7 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
         seed: 600,
         eval_every: scale.steps.max(4) / 2,
         schedule: Schedule::Linear,
+        tuner: TunerKind::Random,
     };
 
     let mu0 = mu_transfer(rt, &mut sweep, &setup0, "tab6/base")?;
@@ -89,6 +90,7 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
                 spec,
                 assignment: Default::default(),
                 data_seed: 600,
+                ckpt_id: None,
             }])?
             .remove(0);
         t.row(vec![
@@ -133,6 +135,7 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
                     spec,
                     assignment: best.clone().unwrap_or_default(),
                     data_seed: 600,
+                    ckpt_id: None,
                 }])?
                 .remove(0);
             search_flops += 0.0; // family reuse: no extra search cost
@@ -157,6 +160,7 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
                     spec: nspec,
                     assignment: naive0.best.clone().unwrap_or_default(),
                     data_seed: 600,
+                    ckpt_id: None,
                 }])?
                 .remove(0);
             (r.trial.val_loss, Some((nr.trial.val_loss, nr.trial.diverged)))

@@ -76,6 +76,7 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
                     spec,
                     assignment: a,
                     data_seed: 0x69B,
+                    ckpt_id: None,
                 }
             })
             .collect();
@@ -113,6 +114,7 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
             spec: mu_spec,
             assignment: best.clone(),
             data_seed: 0x69B,
+            ckpt_id: None,
         }])?
         .remove(0);
     let default_hp = HyperParams {
@@ -134,6 +136,7 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
             spec: sp_spec,
             assignment: Default::default(),
             data_seed: 0x69B,
+            ckpt_id: None,
         }])?
         .remove(0);
 
@@ -242,6 +245,7 @@ pub fn run_reverse(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
                     spec,
                     assignment: crate::tuner::Assignment::single("lr", lr),
                     data_seed: 7,
+                    ckpt_id: None,
                 }])?
                 .remove(0);
             t.row(vec![

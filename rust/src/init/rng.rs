@@ -17,6 +17,18 @@ pub fn splitmix64(x: u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Fold a byte string into a u64 via repeated splitmix64 rounds — the
+/// repo's identity hash (checkpoint file names, trajectory fingerprints).
+/// Not cryptographic; collision-resistant enough for path/config keys.
+#[inline]
+pub fn fold64(seed: u64, bytes: &[u8]) -> u64 {
+    let mut h = seed;
+    for &b in bytes {
+        h = splitmix64(h ^ b as u64);
+    }
+    h
+}
+
 /// u64 -> f64 uniform in [0, 1) using the top 53 bits (same mapping as the
 /// Python side).
 #[inline]
@@ -44,6 +56,49 @@ pub fn det_tokens(n: usize, vocab: u32, seed: u64) -> Vec<i32> {
         .collect()
 }
 
+/// The complete serializable state of an [`Rng`]: the xoshiro256++ word
+/// state (which encodes both the seed and the stream position) plus the
+/// Box-Muller spare.  `Rng::state()` / `Rng::from_state()` round-trip it
+/// exactly, so a data stream interrupted mid-draw provably resumes in the
+/// same order — the checkpoint subsystem ([`crate::ckpt`]) persists this
+/// for stateful data sources (the built-in sources are (seed, step)-pure
+/// and don't need it, but the API is load-bearing for anything that
+/// consumes an `Rng` incrementally).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RngState {
+    pub s: [u64; 4],
+    pub gauss_spare: Option<f64>,
+}
+
+impl RngState {
+    /// Fixed-width encoding for binary checkpoints: the four state words,
+    /// a spare-present flag, and the spare's raw f64 bits.
+    pub fn to_words(&self) -> [u64; 6] {
+        [
+            self.s[0],
+            self.s[1],
+            self.s[2],
+            self.s[3],
+            self.gauss_spare.is_some() as u64,
+            self.gauss_spare.unwrap_or(0.0).to_bits(),
+        ]
+    }
+
+    pub fn from_words(w: &[u64]) -> Result<RngState, String> {
+        if w.len() != 6 {
+            return Err(format!("RngState wants 6 words, got {}", w.len()));
+        }
+        Ok(RngState {
+            s: [w[0], w[1], w[2], w[3]],
+            gauss_spare: if w[4] != 0 {
+                Some(f64::from_bits(w[5]))
+            } else {
+                None
+            },
+        })
+    }
+}
+
 /// xoshiro256++ — fast, high-quality, tiny; seeded via splitmix64 per the
 /// reference recommendation.
 #[derive(Clone, Debug)]
@@ -64,6 +119,25 @@ impl Rng {
         Rng {
             s,
             gauss_spare: None,
+        }
+    }
+
+    /// Capture the full generator state (seed *and* stream position).
+    /// `Rng::from_state(&rng.state())` continues the exact same stream —
+    /// including a pending Box-Muller spare — so interrupted data
+    /// generation resumes bit-for-bit (see [`RngState`]).
+    pub fn state(&self) -> RngState {
+        RngState {
+            s: self.s,
+            gauss_spare: self.gauss_spare,
+        }
+    }
+
+    /// Rebuild a generator from a captured state.
+    pub fn from_state(state: &RngState) -> Rng {
+        Rng {
+            s: state.s,
+            gauss_spare: state.gauss_spare,
         }
     }
 
@@ -233,6 +307,48 @@ mod tests {
             let v = r.log_uniform(1e-4, 1e-1);
             assert!((1e-4..1e-1).contains(&v));
         }
+    }
+
+    #[test]
+    fn state_capture_resumes_exactly() {
+        // capture mid-stream, keep drawing, then restore: the restored
+        // generator must reproduce the continuation bit-for-bit
+        let mut r = Rng::new(1234);
+        for _ in 0..17 {
+            r.next_u64();
+        }
+        let st = r.state();
+        let cont: Vec<u64> = (0..32).map(|_| r.next_u64()).collect();
+        let mut back = Rng::from_state(&st);
+        let replay: Vec<u64> = (0..32).map(|_| back.next_u64()).collect();
+        assert_eq!(cont, replay);
+    }
+
+    #[test]
+    fn state_capture_preserves_gaussian_spare() {
+        // draw an ODD number of gaussians so a Box-Muller spare is pending,
+        // then restore: the spare must survive or the streams diverge
+        let mut r = Rng::new(5);
+        let _ = r.gaussian(); // leaves a spare cached
+        let st = r.state();
+        assert!(st.gauss_spare.is_some(), "odd draw count must leave a spare");
+        let cont: Vec<f64> = (0..9).map(|_| r.gaussian()).collect();
+        let mut back = Rng::from_state(&st);
+        let replay: Vec<f64> = (0..9).map(|_| back.gaussian()).collect();
+        for (a, b) in cont.iter().zip(&replay) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn rng_state_word_encoding_roundtrips() {
+        let mut r = Rng::new(42);
+        let _ = r.gaussian();
+        for st in [r.state(), Rng::new(7).state()] {
+            let back = RngState::from_words(&st.to_words()).unwrap();
+            assert_eq!(back, st);
+        }
+        assert!(RngState::from_words(&[1, 2, 3]).is_err());
     }
 
     #[test]

@@ -18,15 +18,21 @@
 //!    through XLA instead (requires the Cargo.toml edits described
 //!    there: uncomment the `xla` dep, set `pjrt = ["dep:xla"]`).
 //! 3. **The harness** — data substrates ([`data`]), training driver
-//!    ([`train`]), HP search ([`tuner`]), sweep scheduler ([`sweep`]),
-//!    μTransfer workflow ([`transfer`]), coordinate checking
-//!    ([`coordcheck`]), and the experiment harness ([`exp`]) that
-//!    regenerates every table and figure of the paper.
+//!    ([`train`]), HP search ([`tuner`], including successive halving in
+//!    [`tuner::sha`]), sweep scheduler ([`sweep`]), μTransfer workflow
+//!    ([`transfer`]), coordinate checking ([`coordcheck`]), and the
+//!    experiment harness ([`exp`]) that regenerates every table and
+//!    figure of the paper.  Durable trial state lives in [`ckpt`]: a
+//!    versioned, CRC-checked binary snapshot format plus
+//!    `BackendSession::state`/`restore` capabilities, so interrupted
+//!    runs/sweeps resume mid-trial bitwise-identically and adaptive
+//!    tuners can pause/promote trials.
 //!
 //! Python never runs at run time, and by default never at build time
 //! either: `cargo test -q` exercises the whole verification story (golden
 //! trajectories, μP property tests, sweep resume) natively.
 
+pub mod ckpt;
 pub mod config;
 pub mod coordcheck;
 pub mod data;

@@ -23,7 +23,8 @@ use mutransfer::model::BaseShape;
 use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
 use mutransfer::report::Reporter;
 use mutransfer::runtime::Runtime;
-use mutransfer::train::{run as train_run, RunSpec, Schedule};
+use mutransfer::train::{run_ckpt as train_run_ckpt, CkptConfig, RunSpec, Schedule};
+use mutransfer::transfer::TunerKind;
 use mutransfer::util::cli::Args;
 
 fn main() {
@@ -33,15 +34,25 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: mutransfer <exp|train|transfer|coord-check|list-artifacts> [flags]
+const USAGE: &str = "usage: mutransfer <exp|train|transfer|coord-check|list-artifacts|journal-canon> [flags]
   exp <id>|all        --preset ci|paper|smoke [--workers N]
   train               --variant NAME --scheme mup|sp --lr F --steps N [--base-width W]
+                      [--checkpoint FILE --checkpoint-every N]  (auto-resumes from FILE)
   transfer            --proxy NAME --target NAME --base-width W --samples N --steps N --target-steps N [--workers N]
+                      [--tuner random|grid|sha [--eta K --rung0 R]]
+                      [--checkpoint-dir DIR --checkpoint-every N] [--resume-from JOURNAL]
   coord-check         --variant NAME(__coord) --scheme mup|sp [--base-width W] [--steps N]
   list-artifacts
+  journal-canon FILE  print a sweep journal canonicalized (wall_secs
+                      stripped, records sorted) for bit-exact comparison
 common: --artifacts DIR  --results DIR
 --workers: sweep worker threads (default: MUTRANSFER_WORKERS or half the
-cores; needs a Send-capable backend — native yes, pjrt falls back to 1)";
+cores; needs a Send-capable backend — native yes, pjrt falls back to 1)
+--tuner sha: successive halving (eta default 2, rung0 default steps/4);
+checkpoints let promoted trials resume instead of retraining, so sha
+executes strictly fewer train steps than random at equal final budget
+--resume-from: reuse JOURNAL as the sweep journal (completed trials skip,
+interrupted trials resume mid-flight when --checkpoint-dir matches)";
 
 fn real_main() -> Result<()> {
     let args = Args::from_env().map_err(|e| anyhow::anyhow!(e))?;
@@ -86,6 +97,17 @@ fn real_main() -> Result<()> {
             hp.lr = args.f64_or("lr", hp.lr);
             hp.sigma = args.f64_or("sigma", hp.sigma);
             let lr = hp.lr;
+            // durable single-run state: snapshot to FILE every N steps and
+            // auto-resume from it when the file already exists
+            let ckpt = args.get("checkpoint").map(|p| CkptConfig {
+                every: 0,
+                path: p.into(),
+            });
+            let ckpt_every = args.usize_or("checkpoint-every", 25);
+            let ckpt = ckpt.map(|mut c| {
+                c.every = ckpt_every;
+                c
+            });
             args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
             let rt = Runtime::new(&artifacts)?;
             let v = rt.manifest().get(&variant)?;
@@ -97,7 +119,12 @@ fn real_main() -> Result<()> {
             spec.eval_every = (steps / 4).max(1);
             spec.schedule = cfg.schedule();
             let data = mutransfer::data::source_for(v, seed);
-            let r = train_run(&rt, &spec, data.as_ref())?;
+            if let Some(c) = &ckpt {
+                if c.path.exists() {
+                    eprintln!("resuming from checkpoint {}", c.path.display());
+                }
+            }
+            let r = train_run_ckpt(&rt, &spec, data.as_ref(), ckpt.as_ref())?;
             println!(
                 "variant={variant} scheme={scheme} lr={lr:.3e} steps={} diverged={} final_train={:.4} best_val={:.4} ({:.2}s, {:.2} GFLOPs)",
                 r.steps_done,
@@ -120,12 +147,33 @@ fn real_main() -> Result<()> {
             let target_steps = args.usize_or("target-steps", 120);
             let seed = args.u64_or("seed", 0);
             let workers = args.workers_or(mutransfer::util::pool::default_workers());
+            let tuner_name = args.str_or("tuner", "random");
+            let eta = args.usize_or("eta", 2);
+            let rung0 = args.usize_or("rung0", (steps / 4).max(1));
+            let ckpt_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
+            let ckpt_every = args.usize_or("checkpoint-every", 0);
+            let resume_from = args.get("resume-from").map(std::path::PathBuf::from);
             args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let tuner = match tuner_name.as_str() {
+                "random" => TunerKind::Random,
+                "grid" => TunerKind::Grid,
+                "sha" => TunerKind::Sha { eta, rung0 },
+                other => bail!("--tuner must be random|grid|sha, got {other}"),
+            };
             let rt = Runtime::new(&artifacts)?;
             let rep = Reporter::new(results);
+            let journal = resume_from.unwrap_or_else(|| rep.path("transfer-cli.journal"));
             let mut sweep = mutransfer::sweep::Sweep::new(&rt)
                 .with_workers(workers)
-                .with_journal(&rep.path("transfer-cli.journal"))?;
+                .with_journal(&journal)?;
+            // SHA needs durable trial state to realize its savings; give
+            // it a default checkpoint dir when none was requested
+            let ckpt_dir = ckpt_dir.or_else(|| {
+                matches!(tuner, TunerKind::Sha { .. }).then(|| rep.path("ckpt"))
+            });
+            if let Some(d) = &ckpt_dir {
+                sweep = sweep.with_checkpoints(d, ckpt_every)?;
+            }
             sweep.verbose = true;
             let setup = mutransfer::transfer::TransferSetup {
                 proxy_variant: proxy.clone(),
@@ -144,6 +192,7 @@ fn real_main() -> Result<()> {
                 seed,
                 eval_every: (steps / 2).max(2),
                 schedule: Schedule::Constant,
+                tuner,
             };
             let out = mutransfer::transfer::mu_transfer(&rt, &mut sweep, &setup, "cli")?;
             match (&out.best, &out.target) {
@@ -155,6 +204,37 @@ fn real_main() -> Result<()> {
                     100.0 * out.tuning_cost_ratio(),
                 ),
                 _ => println!("all proxy trials diverged — widen the search space"),
+            }
+        }
+        "journal-canon" => {
+            // canonical journal view for bit-exact comparisons across runs:
+            // wall_secs (the only legitimately nondeterministic field) and
+            // ckpt records (paths differ per run dir) are dropped, records
+            // sort lexicographically.  Used by the CI crash/resume check.
+            let path = args
+                .positional
+                .get(1)
+                .context("journal-canon needs a journal path")?
+                .clone();
+            args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let text = std::fs::read_to_string(&path)
+                .with_context(|| format!("reading {path}"))?;
+            let mut lines: Vec<String> = Vec::new();
+            for line in text.lines().filter(|l| !l.trim().is_empty()) {
+                let Ok(mut j) = mutransfer::util::json::parse(line) else {
+                    continue; // torn tail — with_journal would truncate it
+                };
+                if j.get("ckpt").is_some() {
+                    continue;
+                }
+                if let mutransfer::util::json::Json::Obj(m) = &mut j {
+                    m.remove("wall_secs");
+                }
+                lines.push(j.to_string());
+            }
+            lines.sort();
+            for l in lines {
+                println!("{l}");
             }
         }
         "coord-check" => {

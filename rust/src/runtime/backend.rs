@@ -60,6 +60,29 @@ pub struct Probe {
     pub data: Vec<f32>,
 }
 
+/// Host-side copy of everything a [`BackendSession`] owns between steps:
+/// the parameter tensors followed by the optimizer-state blocks (Adam m
+/// then v; SGD momentum), in the same index order as
+/// [`BackendSession::param`].  This is the unit the checkpoint subsystem
+/// ([`crate::ckpt`]) persists and restores.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelState {
+    /// `n_params` parameter tensors, then whole optimizer-state blocks of
+    /// `n_params` tensors each
+    pub tensors: Vec<Vec<f32>>,
+    pub n_params: usize,
+}
+
+impl ModelState {
+    pub fn params(&self) -> &[Vec<f32>] {
+        &self.tensors[..self.n_params]
+    }
+
+    pub fn opt_state(&self) -> &[Vec<f32>] {
+        &self.tensors[self.n_params..]
+    }
+}
+
 /// Hyperparameter inputs fed to the executable every step.
 #[derive(Debug, Clone)]
 pub struct StepInputs {
@@ -135,4 +158,23 @@ pub trait BackendSession {
     /// Copy a state tensor back to the host: indices `0..n_params` are the
     /// parameters, followed by the optimizer-state blocks.
     fn param(&self, idx: usize) -> Result<Vec<f32>>;
+
+    /// Capability: copy the session's *entire* mutable state (params +
+    /// optimizer moments) to the host for checkpointing.  Mirrors the
+    /// [`Backend::session_send`] pattern: `Ok(None)` means the backend
+    /// declines (PJRT keeps its state device-side and keeps this default;
+    /// callers then skip checkpointing), while `Err` means capture itself
+    /// failed.  The native backend implements it.
+    fn state(&self) -> Result<Option<ModelState>> {
+        Ok(None)
+    }
+
+    /// Capability: overwrite the session's state from a snapshot.
+    /// `Ok(false)` = declined (the caller keeps its freshly-initialized
+    /// session and re-runs from step 0); `Err` = the snapshot does not fit
+    /// this session (tensor count/length mismatch).
+    fn restore(&mut self, state: &ModelState) -> Result<bool> {
+        let _ = state;
+        Ok(false)
+    }
 }

@@ -32,7 +32,7 @@ pub mod native;
 pub mod pjrt;
 pub mod session;
 
-pub use backend::{Backend, BackendSession, DataBatch, Probe, StepInputs};
+pub use backend::{Backend, BackendSession, DataBatch, ModelState, Probe, StepInputs};
 pub use manifest::{Arch, Kind, Manifest, ParamInfo, Variant};
 pub use session::{SessionCore, TrainSession};
 

@@ -9,7 +9,7 @@
 use anyhow::{bail, Result};
 
 use crate::model::{MlpConfig, ResMlpConfig};
-use crate::runtime::backend::{BackendSession, DataBatch, Probe};
+use crate::runtime::backend::{BackendSession, DataBatch, ModelState, Probe};
 use crate::runtime::manifest::{Arch, Variant};
 
 use super::optim::sgd_update;
@@ -315,5 +315,40 @@ impl BackendSession for SgdNetSession {
             1 => Ok(self.ms[idx - p].clone()),
             _ => bail!("state index {idx} out of range ({} tensors)", 2 * p),
         }
+    }
+
+    /// Full state capture for checkpointing: params, then the SGD momentum
+    /// block (the `param(idx)` order).
+    fn state(&self) -> Result<Option<ModelState>> {
+        let mut tensors = Vec::with_capacity(self.params.len() * 2);
+        tensors.extend(self.params.iter().cloned());
+        tensors.extend(self.ms.iter().cloned());
+        Ok(Some(ModelState {
+            tensors,
+            n_params: self.params.len(),
+        }))
+    }
+
+    fn restore(&mut self, state: &ModelState) -> Result<bool> {
+        let p = self.params.len();
+        if state.n_params != p || state.tensors.len() != 2 * p {
+            bail!(
+                "mlp state mismatch: snapshot has {} params / {} tensors, session wants {p} / {}",
+                state.n_params,
+                state.tensors.len(),
+                2 * p
+            );
+        }
+        for (i, t) in state.tensors.iter().enumerate() {
+            let want = self.params[i % p].len();
+            if t.len() != want {
+                bail!("state tensor {i} has {} elements, session wants {want}", t.len());
+            }
+        }
+        for i in 0..p {
+            self.params[i].copy_from_slice(&state.tensors[i]);
+            self.ms[i].copy_from_slice(&state.tensors[p + i]);
+        }
+        Ok(true)
     }
 }

@@ -14,7 +14,7 @@
 use anyhow::{bail, Result};
 
 use crate::model::TfmConfig;
-use crate::runtime::backend::{BackendSession, DataBatch, Probe};
+use crate::runtime::backend::{BackendSession, DataBatch, ModelState, Probe};
 use crate::runtime::manifest::{Kind, Variant};
 
 use super::optim::adam_update;
@@ -581,6 +581,43 @@ impl BackendSession for TfmSession {
             2 => Ok(self.vs[idx - 2 * p].clone()),
             _ => bail!("state index {idx} out of range ({} tensors)", 3 * p),
         }
+    }
+
+    /// Full state capture for checkpointing: params, then the Adam m and v
+    /// blocks (the `param(idx)` order).
+    fn state(&self) -> Result<Option<ModelState>> {
+        let mut tensors = Vec::with_capacity(self.params.len() * 3);
+        tensors.extend(self.params.iter().cloned());
+        tensors.extend(self.ms.iter().cloned());
+        tensors.extend(self.vs.iter().cloned());
+        Ok(Some(ModelState {
+            tensors,
+            n_params: self.params.len(),
+        }))
+    }
+
+    fn restore(&mut self, state: &ModelState) -> Result<bool> {
+        let p = self.params.len();
+        if state.n_params != p || state.tensors.len() != 3 * p {
+            bail!(
+                "transformer state mismatch: snapshot has {} params / {} tensors, session wants {p} / {}",
+                state.n_params,
+                state.tensors.len(),
+                3 * p
+            );
+        }
+        for (i, t) in state.tensors.iter().enumerate() {
+            let want = self.params[i % p].len();
+            if t.len() != want {
+                bail!("state tensor {i} has {} elements, session wants {want}", t.len());
+            }
+        }
+        for i in 0..p {
+            self.params[i].copy_from_slice(&state.tensors[i]);
+            self.ms[i].copy_from_slice(&state.tensors[p + i]);
+            self.vs[i].copy_from_slice(&state.tensors[2 * p + i]);
+        }
+        Ok(true)
     }
 }
 

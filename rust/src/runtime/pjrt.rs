@@ -18,7 +18,12 @@
 //! is not `Send`, so this backend *declines* the parallel capabilities:
 //! it keeps the trait defaults `parallelism() == 1` and
 //! `session_send() == Ok(None)`, and `Sweep::run` falls back to its
-//! sequential loop regardless of the requested `--workers`.
+//! sequential loop regardless of the requested `--workers`.  For the same
+//! reason it declines the checkpoint capabilities (`state() == Ok(None)`,
+//! `restore() == Ok(false)`): the live tuple buffer would have to be
+//! decomposed mid-stream to snapshot it.  Checkpointing callers
+//! (`train::run_ckpt`, the sweep's `--checkpoint-dir` path, SHA) detect
+//! the declined capability and transparently run trials from step 0.
 
 use std::cell::RefCell;
 use std::collections::HashMap;

@@ -13,7 +13,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use super::backend::BackendSession;
+use super::backend::{BackendSession, ModelState};
 pub use super::backend::{DataBatch, Probe, StepInputs};
 use super::manifest::{Kind, Variant};
 use super::Runtime;
@@ -117,6 +117,26 @@ impl<S: BackendSession + ?Sized> SessionCore<S> {
     pub fn param(&self, idx: usize) -> Result<Vec<f32>> {
         self.inner.param(idx)
     }
+
+    /// Snapshot the backend's full mutable state (params + optimizer
+    /// moments).  `Ok(None)` when the backend declines the capability
+    /// (PJRT) — checkpointing callers then no-op.
+    pub fn state(&self) -> Result<Option<ModelState>> {
+        self.inner.state()
+    }
+
+    /// Restore backend state *and* the step counter from a snapshot (the
+    /// counter drives Adam bias correction through `hp_vec[7]`, so the two
+    /// must move together).  `Ok(false)` when the backend declines — the
+    /// caller keeps its freshly-initialized session and runs from step 0.
+    pub fn restore(&mut self, state: &ModelState, steps_done: usize) -> Result<bool> {
+        if self.inner.restore(state)? {
+            self.steps_done = steps_done;
+            Ok(true)
+        } else {
+            Ok(false)
+        }
+    }
 }
 
 pub struct TrainSession<'rt> {
@@ -177,6 +197,18 @@ impl<'rt> TrainSession<'rt> {
     /// Copy a parameter tensor back to the host (diagnostics / checkpoints).
     pub fn param(&self, idx: usize) -> Result<Vec<f32>> {
         self.core.param(idx)
+    }
+
+    /// Snapshot the full session state; `None` if the backend declines
+    /// (see [`SessionCore::state`]).
+    pub fn state(&self) -> Result<Option<ModelState>> {
+        self.core.state()
+    }
+
+    /// Restore state + step counter; `false` if the backend declines
+    /// (see [`SessionCore::restore`]).
+    pub fn restore(&mut self, state: &ModelState, steps_done: usize) -> Result<bool> {
+        self.core.restore(state, steps_done)
     }
 
     pub fn runtime(&self) -> &Runtime {

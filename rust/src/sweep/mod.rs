@@ -17,17 +17,27 @@
 //! always return in job order (rust/tests/sweep_resume.rs pins all of
 //! this).  The journal format is also what makes multi-process scale-out
 //! trivial.
+//!
+//! Durable trial state: with [`Sweep::with_checkpoints`], every running
+//! trial snapshots its model/optimizer state (via `train::CkptConfig` →
+//! the [`crate::ckpt`] subsystem), the journal records each trial's
+//! checkpoint path before it starts, and an interrupted sweep resumes
+//! in-flight trials *mid-trial* instead of from step 0.  Each append is a
+//! single write + fdatasync, and the loader tolerates a torn final line
+//! by truncating back to the last complete record — so a kill at any
+//! instant loses at most the unfinished tail of one trial.
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::data::source_for;
+use crate::init::rng::fold64;
 use crate::runtime::Runtime;
-use crate::train::{prepare, run, PreparedRun, RunSpec};
+use crate::train::{prepare, run_ckpt, CkptConfig, PreparedRun, RunSpec};
 use crate::tuner::{Assignment, Trial};
 use crate::util::json::{self, jnum, Json};
 use crate::util::pool;
@@ -40,6 +50,45 @@ pub struct Job {
     pub spec: RunSpec,
     pub assignment: Assignment,
     pub data_seed: u64,
+    /// stable checkpoint identity, shared across re-submissions of the
+    /// same underlying trial: SHA re-keys each rung (`…@r<budget>`) but
+    /// chains snapshots through this id so a promoted trial resumes from
+    /// its previous rung instead of step 0.  `None` = use `key`.
+    pub ckpt_id: Option<String>,
+}
+
+impl Job {
+    /// The identity a trial's checkpoint file is keyed by.
+    pub fn ckpt_key(&self) -> &str {
+        self.ckpt_id.as_deref().unwrap_or(&self.key)
+    }
+}
+
+/// Collision-safe file name for a trial checkpoint: a sanitized prefix of
+/// the id (human-greppable) plus a 64-bit hash of the full id.
+fn ckpt_file_name(id: &str) -> String {
+    let h = fold64(0x9E37_79B9_7F4A_7C15, id.as_bytes());
+    let mut safe: String = id
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '.' { c } else { '_' })
+        .collect();
+    safe.truncate(80);
+    format!("{safe}-{h:016x}.ckpt")
+}
+
+/// Append one journal record as a single write followed by fdatasync: a
+/// crash can tear at most the final line, which `with_journal` recovers
+/// from by truncating back to the last complete record.
+fn append_line(path: &Path, line: &str) -> Result<()> {
+    let mut f = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)?;
+    let mut bytes = line.as_bytes().to_vec();
+    bytes.push(b'\n');
+    f.write_all(&bytes)?;
+    f.sync_data()?;
+    Ok(())
 }
 
 /// Sweep outcome for one job.
@@ -136,6 +185,11 @@ pub struct Sweep<'rt> {
     done: std::collections::BTreeMap<String, JobResult>,
     pub verbose: bool,
     workers: usize,
+    ckpt_dir: Option<PathBuf>,
+    ckpt_every: usize,
+    /// ckpt-id → snapshot path, loaded from the journal's `ckpt` records
+    /// on resume (deterministically re-derived when absent)
+    ckpt_records: std::collections::BTreeMap<String, PathBuf>,
 }
 
 impl<'rt> Sweep<'rt> {
@@ -150,6 +204,9 @@ impl<'rt> Sweep<'rt> {
             done: Default::default(),
             verbose: false,
             workers: pool::env_workers().unwrap_or(1),
+            ckpt_dir: None,
+            ckpt_every: 0,
+            ckpt_records: Default::default(),
         }
     }
 
@@ -167,20 +224,165 @@ impl<'rt> Sweep<'rt> {
     }
 
     /// Attach a journal file; previously-completed jobs are loaded and
-    /// skipped on re-run.
+    /// skipped on re-run, and journaled checkpoint paths are picked up so
+    /// interrupted trials resume mid-flight.
+    ///
+    /// Crash consistency: a kill between `write` and `fsync` can leave a
+    /// torn final line.  Instead of failing (or silently dropping every
+    /// later append into the garbage), the loader truncates the file back
+    /// to the end of the last complete JSON record and resumes from there
+    /// — only the torn record's trial re-runs.
     pub fn with_journal(mut self, path: &Path) -> Result<Sweep<'rt>> {
         if path.exists() {
             let text = std::fs::read_to_string(path)?;
-            for line in text.lines().filter(|l| !l.trim().is_empty()) {
-                if let Ok(j) = json::parse(line) {
-                    if let Some(r) = JobResult::from_json(&j) {
-                        self.done.insert(r.key.clone(), r);
+            let mut pos = 0usize; // byte offset just past the current line
+            let mut good_end = 0usize; // … past the last usable record
+            let mut missing_newline = false;
+            for line in text.split_inclusive('\n') {
+                pos += line.len();
+                let trimmed = line.trim();
+                if trimmed.is_empty() {
+                    good_end = pos;
+                    continue;
+                }
+                match json::parse(trimmed) {
+                    Ok(j) => {
+                        if let Some(c) = j.get("ckpt") {
+                            if let (Some(id), Some(p)) = (
+                                c.get("id").and_then(|v| v.as_str()),
+                                c.get("path").and_then(|v| v.as_str()),
+                            ) {
+                                self.ckpt_records
+                                    .insert(id.to_string(), PathBuf::from(p));
+                            }
+                        } else if let Some(r) = JobResult::from_json(&j) {
+                            self.done.insert(r.key.clone(), r);
+                        }
+                        good_end = pos;
+                        missing_newline = !line.ends_with('\n');
+                    }
+                    Err(_) => {
+                        // unusable record: skipped.  If nothing usable
+                        // follows, good_end stays put and the torn tail is
+                        // truncated away below.
                     }
                 }
+            }
+            // Only a file in which we actually recognized journal records
+            // (results or ckpt paths) may ever be modified — pointing
+            // --resume-from at some other non-empty file must be an error,
+            // not an append target and never a truncation victim.
+            let recognized = !self.done.is_empty() || !self.ckpt_records.is_empty();
+            if good_end < text.len() {
+                if !recognized {
+                    bail!(
+                        "{} does not look like a sweep journal (no records recognized); refusing to use it",
+                        path.display()
+                    );
+                }
+                // A crash mid-append tears at most ONE trailing line, and a
+                // torn write is a strict prefix — so the crash signature is
+                // exactly "one unparseable final line with no newline".
+                // Only that gets truncated; complete-but-unparseable lines
+                // (hand-edited corruption) are skipped without modifying
+                // the file.
+                let tail = &text[good_end..];
+                let torn_single = !tail.ends_with('\n') && !tail.trim_end().contains('\n');
+                if torn_single {
+                    // torn final record: physically drop it so future
+                    // appends can't merge into the garbage
+                    let f = std::fs::OpenOptions::new().write(true).open(path)?;
+                    f.set_len(good_end as u64)?;
+                    f.sync_all()?;
+                }
+            } else if missing_newline {
+                if !recognized {
+                    bail!(
+                        "{} does not look like a sweep journal (no records recognized); refusing to use it",
+                        path.display()
+                    );
+                }
+                // final record parsed but its newline is missing: complete
+                // the line so the next append starts fresh
+                let mut f = std::fs::OpenOptions::new().append(true).open(path)?;
+                f.write_all(b"\n")?;
+                f.sync_data()?;
             }
         }
         self.journal_path = Some(path.to_path_buf());
         Ok(self)
+    }
+
+    /// Enable durable trial state under `dir` (created if needed): every
+    /// running trial snapshots to its own file every `every` steps (0 =
+    /// only at trial end), an interrupted sweep resumes such trials
+    /// mid-flight instead of from step 0, and SHA rungs chain through the
+    /// same files.  The journal records each trial's checkpoint path the
+    /// first time the trial starts.  Backends without state capture (PJRT)
+    /// silently run without checkpoints.
+    pub fn with_checkpoints(mut self, dir: &Path, every: usize) -> Result<Sweep<'rt>> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating checkpoint dir {}", dir.display()))?;
+        self.ckpt_dir = Some(dir.to_path_buf());
+        self.ckpt_every = every;
+        Ok(self)
+    }
+
+    /// Whether durable trial state is configured ([`Sweep::with_checkpoints`]).
+    pub fn checkpoints_enabled(&self) -> bool {
+        self.ckpt_dir.is_some()
+    }
+
+    /// Where a trial's snapshot lives; `None` when checkpointing is off.
+    pub fn checkpoint_path(&self, ckpt_key: &str) -> Option<PathBuf> {
+        let dir = self.ckpt_dir.as_ref()?;
+        Some(
+            self.ckpt_records
+                .get(ckpt_key)
+                .cloned()
+                .unwrap_or_else(|| dir.join(ckpt_file_name(ckpt_key))),
+        )
+    }
+
+    /// Delete a trial's snapshot (SHA prunes eliminated trials; harmless
+    /// if the file never existed).
+    pub fn remove_checkpoint(&self, ckpt_key: &str) {
+        if let Some(p) = self.checkpoint_path(ckpt_key) {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+
+    fn ckpt_cfg(&self, job: &Job) -> Option<CkptConfig> {
+        self.checkpoint_path(job.ckpt_key()).map(|path| CkptConfig {
+            every: self.ckpt_every,
+            path,
+        })
+    }
+
+    /// Journal a trial's checkpoint path before it starts executing, so a
+    /// crash mid-trial leaves the path discoverable.  Idempotent per id.
+    fn journal_ckpt_record(&mut self, job: &Job) -> Result<()> {
+        if self.ckpt_dir.is_none() || self.journal_path.is_none() {
+            return Ok(());
+        }
+        let id = job.ckpt_key().to_string();
+        if self.ckpt_records.contains_key(&id) {
+            return Ok(());
+        }
+        let path = self
+            .checkpoint_path(&id)
+            .expect("ckpt_dir is set");
+        let rec = Json::from_pairs(vec![(
+            "ckpt",
+            Json::from_pairs(vec![
+                ("id", json::jstr(&id)),
+                ("path", json::jstr(&path.to_string_lossy())),
+            ]),
+        )]);
+        let jp = self.journal_path.clone().expect("journal_path is set");
+        append_line(&jp, &rec.to_string())?;
+        self.ckpt_records.insert(id, path);
+        Ok(())
     }
 
     pub fn completed(&self) -> usize {
@@ -220,9 +422,11 @@ impl<'rt> Sweep<'rt> {
                 continue;
             }
             let t0 = std::time::Instant::now();
+            self.journal_ckpt_record(job)?;
+            let ckpt = self.ckpt_cfg(job);
             let variant = self.rt.manifest().get(&job.spec.variant)?;
             let data = source_for(variant, job.data_seed);
-            let rr = run(self.rt, &job.spec, data.as_ref())
+            let rr = run_ckpt(self.rt, &job.spec, data.as_ref(), ckpt.as_ref())
                 .with_context(|| format!("job {}", job.key))?;
             let result = JobResult {
                 key: job.key.clone(),
@@ -307,12 +511,21 @@ impl<'rt> Sweep<'rt> {
             let mut prepared = Vec::with_capacity(chunk.len());
             for job in chunk {
                 match prepare(self.rt, &job.spec)? {
-                    Some(run) => prepared.push(Prepared {
-                        key: job.key.clone(),
-                        assignment: job.assignment.clone(),
-                        data_seed: job.data_seed,
-                        run,
-                    }),
+                    Some(run) => {
+                        // journal the checkpoint path before anything
+                        // executes, so a crash mid-trial leaves it findable
+                        self.journal_ckpt_record(job)?;
+                        let run = match self.ckpt_cfg(job) {
+                            Some(cfg) => run.with_checkpoint(cfg),
+                            None => run,
+                        };
+                        prepared.push(Prepared {
+                            key: job.key.clone(),
+                            assignment: job.assignment.clone(),
+                            data_seed: job.data_seed,
+                            run,
+                        })
+                    }
                     // static backend capability: if one job can't get a
                     // Send session, none can — nothing in this chunk ran
                     None => return Ok(None),
@@ -343,11 +556,18 @@ impl<'rt> Sweep<'rt> {
                     };
                     {
                         // exactly-once, whole-line append; recover a
-                        // poisoned lock — the file is always between lines
+                        // poisoned lock — the file is always between lines.
+                        // One write_all + fdatasync per record: a crash can
+                        // tear at most the final line, which with_journal
+                        // truncates away on resume.
                         let mut guard = journal.lock().unwrap_or_else(|e| e.into_inner());
                         if let Some(f) = guard.as_mut() {
-                            writeln!(f, "{}", result.to_json().to_string())
+                            let mut bytes = result.to_json().to_string().into_bytes();
+                            bytes.push(b'\n');
+                            f.write_all(&bytes)
                                 .with_context(|| format!("journaling job {}", result.key))?;
+                            f.sync_data()
+                                .with_context(|| format!("syncing journal for {}", result.key))?;
                         }
                     }
                     if verbose {
@@ -399,11 +619,7 @@ impl<'rt> Sweep<'rt> {
 
     fn append_journal(&self, r: &JobResult) -> Result<()> {
         if let Some(p) = &self.journal_path {
-            let mut f = std::fs::OpenOptions::new()
-                .create(true)
-                .append(true)
-                .open(p)?;
-            writeln!(f, "{}", r.to_json().to_string())?;
+            append_line(p, &r.to_json().to_string())?;
         }
         Ok(())
     }
@@ -412,6 +628,20 @@ impl<'rt> Sweep<'rt> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn ckpt_file_names_are_stable_safe_and_collision_resistant() {
+        let a = ckpt_file_name("transfer/proxy/3");
+        assert_eq!(a, ckpt_file_name("transfer/proxy/3"), "must be deterministic");
+        assert!(a.ends_with(".ckpt"));
+        assert!(!a.contains('/'), "path separators must be sanitized: {a}");
+        // same sanitized prefix, different ids -> different hashes
+        let b = ckpt_file_name("transfer:proxy:3");
+        assert_ne!(a, b);
+        // long ids stay bounded
+        let long = ckpt_file_name(&"x".repeat(500));
+        assert!(long.len() < 120, "{}", long.len());
+    }
 
     #[test]
     fn jobresult_json_roundtrip() {

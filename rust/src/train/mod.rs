@@ -4,8 +4,11 @@
 
 pub mod schedule;
 
+use std::path::{Path, PathBuf};
+
 use anyhow::{Context, Result};
 
+use crate::ckpt::{RunProgress, Snapshot};
 use crate::data::{DataSource, Split};
 use crate::init;
 use crate::model::BaseShape;
@@ -52,6 +55,31 @@ impl RunSpec {
 
     pub fn optimizer(&self) -> Optimizer {
         self.par.optimizer
+    }
+
+    /// Identity of the *trajectory* this spec defines: variant,
+    /// parametrization, HPs, base shape, seed, and schedule — everything
+    /// that changes the step-by-step math, but **not** the eval cadence,
+    /// and not the step budget *when the schedule is budget-agnostic*
+    /// (SHA rungs legitimately extend a constant-LR trial's budget; a
+    /// linear/cosine trial's per-step LR depends on the total, so its
+    /// budget is part of the identity and resume under a different budget
+    /// restarts fresh).  Checkpoints record this; resume refuses a
+    /// snapshot written under a different fingerprint, so edited HPs can
+    /// never silently continue foreign state.
+    pub fn trajectory_fingerprint(&self) -> u64 {
+        let budget_tag = if self.schedule.budget_agnostic() {
+            0
+        } else {
+            self.steps as u64
+        };
+        // Debug formatting is deterministic (f64 prints shortest
+        // round-trip), which is all a same-binary identity check needs.
+        let desc = format!(
+            "{}|{:?}|{:?}|{:?}|{:?}|{}|{budget_tag}",
+            self.variant, self.par, self.hp, self.base, self.schedule, self.seed
+        );
+        crate::init::rng::fold64(0xC0DE_5EED_0000_0001, desc.as_bytes())
     }
 }
 
@@ -130,6 +158,22 @@ pub fn hp_vec(spec: &RunSpec, rt: &Runtime) -> Result<[f32; 8]> {
     })
 }
 
+/// Periodic-checkpoint policy for one run (DESIGN.md §7).  The drive loop
+/// writes a [`Snapshot`] to `path` every `every` steps (and always one at
+/// the end of the run, marked complete), and — if `path` already holds a
+/// usable snapshot when the run starts — restores it and continues from
+/// its step counter instead of from 0.  An interrupted-then-resumed run
+/// is bitwise identical to an uninterrupted one
+/// (`rust/tests/ckpt_resume.rs`).  Backends without state capture (PJRT)
+/// make both directions a silent no-op.
+#[derive(Debug, Clone)]
+pub struct CkptConfig {
+    /// write a mid-run snapshot every `every` steps (0 = only at the end)
+    pub every: usize,
+    /// snapshot file; written tmp-then-rename, read back on resume
+    pub path: PathBuf,
+}
+
 /// Everything a run needs once the `Runtime` has been consulted: resolved
 /// variant, expanded init (already inside the session), per-tensor base
 /// LRs and the hp_vec.  Because the session handle is `Send`-bounded
@@ -141,6 +185,7 @@ pub struct PreparedRun {
     core: SessionCore<dyn BackendSession + Send>,
     base_lr: Vec<f32>,
     hp_v: [f32; 8],
+    ckpt: Option<CkptConfig>,
 }
 
 impl PreparedRun {
@@ -148,10 +193,24 @@ impl PreparedRun {
         &self.core.variant
     }
 
+    /// Attach a checkpoint policy: the drive loop snapshots periodically
+    /// and resumes from `cfg.path` when it already holds usable state.
+    pub fn with_checkpoint(mut self, cfg: CkptConfig) -> PreparedRun {
+        self.ckpt = Some(cfg);
+        self
+    }
+
     /// Run the step loop to completion.  Consumes the prepared session —
-    /// a run is not restartable mid-trajectory.
+    /// restartability lives in the checkpoint file, not the value.
     pub fn execute(mut self, data: &dyn DataSource) -> Result<RunResult> {
-        drive(&mut self.core, &self.spec, &self.base_lr, &self.hp_v, data)
+        drive(
+            &mut self.core,
+            &self.spec,
+            &self.base_lr,
+            &self.hp_v,
+            data,
+            self.ckpt.as_ref(),
+        )
     }
 }
 
@@ -192,11 +251,24 @@ pub fn prepare(rt: &Runtime, spec: &RunSpec) -> Result<Option<PreparedRun>> {
         core: SessionCore::new(variant, inner),
         base_lr,
         hp_v,
+        ckpt: None,
     }))
 }
 
 /// Execute a full training run (single-threaded path).
 pub fn run(rt: &Runtime, spec: &RunSpec, data: &dyn DataSource) -> Result<RunResult> {
+    run_ckpt(rt, spec, data, None)
+}
+
+/// [`run`] with a checkpoint policy: resumes from `ckpt.path` when it
+/// holds usable state, snapshots every `ckpt.every` steps plus once at the
+/// end.  `None` behaves exactly like [`run`].
+pub fn run_ckpt(
+    rt: &Runtime,
+    spec: &RunSpec,
+    data: &dyn DataSource,
+    ckpt: Option<&CkptConfig>,
+) -> Result<RunResult> {
     let (variant, params, base_lr, hp_v) = resolve(rt, spec)?;
     let inner = rt
         .backend()
@@ -205,7 +277,52 @@ pub fn run(rt: &Runtime, spec: &RunSpec, data: &dyn DataSource) -> Result<RunRes
             format!("creating {} session for {}", rt.backend().name(), spec.variant)
         })?;
     let mut core = SessionCore::new(variant, inner);
-    drive(&mut core, spec, &base_lr, &hp_v, data)
+    drive(&mut core, spec, &base_lr, &hp_v, data, ckpt)
+}
+
+/// Rebuild the outcome of a finished run straight from its end-of-run
+/// snapshot (a crash landed between the final snapshot and the caller's
+/// bookkeeping).  Wall time is the only field that cannot be restored.
+fn result_from_snapshot(snap: &Snapshot) -> RunResult {
+    RunResult {
+        train_losses: snap.progress.train_losses.clone(),
+        val_losses: snap.progress.val_losses.clone(),
+        diverged: snap.progress.diverged,
+        steps_done: snap.progress.steps_done,
+        flops: snap.progress.flops,
+        wall_secs: 0.0,
+    }
+}
+
+/// Snapshot the session + run progress to `path` (tmp-then-rename).
+/// Backends that decline state capture make this a no-op.
+fn write_snapshot<S: BackendSession + ?Sized>(
+    core: &SessionCore<S>,
+    spec: &RunSpec,
+    result: &RunResult,
+    complete: bool,
+    path: &Path,
+) -> Result<()> {
+    let state = match core.state()? {
+        Some(s) => s,
+        None => return Ok(()),
+    };
+    let progress = RunProgress {
+        steps_done: result.steps_done,
+        complete,
+        diverged: result.diverged,
+        flops: result.flops,
+        train_losses: result.train_losses.clone(),
+        val_losses: result.val_losses.clone(),
+    };
+    Snapshot::from_state(
+        &core.variant,
+        state,
+        progress,
+        spec.trajectory_fingerprint(),
+        None,
+    )?
+    .save(path)
 }
 
 /// The step loop, generic over the session bound so the same code drives
@@ -213,12 +330,23 @@ pub fn run(rt: &Runtime, spec: &RunSpec, data: &dyn DataSource) -> Result<RunRes
 /// threads (`dyn BackendSession + Send`).  Identical specs produce
 /// bitwise-identical results on either path — the parallel scheduler's
 /// bit-exact-resume contract rests on this being the single loop.
+///
+/// With a [`CkptConfig`], the loop first tries to resume from the
+/// snapshot file (restoring tensors, step counter, recorded loss curves
+/// and FLOPs), then snapshots every `every` steps and once at the end.
+/// Because the restore is bit-exact and the data substrates are pure in
+/// (seed, split, step), the resumed trajectory is bitwise identical to an
+/// uninterrupted run.  An unreadable or mismatched snapshot is *ignored*
+/// with a warning (the run restarts from 0) — a crashed write can never
+/// produce one thanks to tmp-then-rename, so this only fires on genuine
+/// external corruption, where restarting is the honest fallback.
 fn drive<S: BackendSession + ?Sized>(
     core: &mut SessionCore<S>,
     spec: &RunSpec,
     base_lr: &[f32],
     hp_v: &[f32; 8],
     data: &dyn DataSource,
+    ckpt: Option<&CkptConfig>,
 ) -> Result<RunResult> {
     let t0 = std::time::Instant::now();
     let flops_per_step = core.variant.flops_per_step();
@@ -231,7 +359,61 @@ fn drive<S: BackendSession + ?Sized>(
         wall_secs: 0.0,
     };
     let mut initial_loss = f64::NAN;
-    for step in 0..spec.steps {
+    let mut start = 0usize;
+    if let Some(c) = ckpt {
+        if c.path.exists() {
+            match Snapshot::load(&c.path) {
+                Ok(snap) => {
+                    if let Err(e) = snap.validate_for(&core.variant) {
+                        eprintln!(
+                            "warning: ignoring checkpoint {}: {e:#}",
+                            c.path.display()
+                        );
+                    } else if snap.spec_fp != spec.trajectory_fingerprint() {
+                        eprintln!(
+                            "warning: checkpoint {} was written under a different run \
+                             configuration (hp/seed/schedule); restarting from step 0",
+                            c.path.display()
+                        );
+                    } else if snap.progress.complete
+                        && (snap.progress.diverged || snap.progress.steps_done == spec.steps)
+                    {
+                        let mut r = result_from_snapshot(&snap);
+                        r.wall_secs = t0.elapsed().as_secs_f64();
+                        return Ok(r);
+                    } else if snap.progress.steps_done > spec.steps {
+                        eprintln!(
+                            "warning: checkpoint {} is at step {} but only {} steps were requested; restarting fresh",
+                            c.path.display(),
+                            snap.progress.steps_done,
+                            spec.steps
+                        );
+                    } else {
+                        // take the progress out (loss curves are small),
+                        // then move the tensors into the restore without a
+                        // second full-model copy
+                        let progress = snap.progress.clone();
+                        if core.restore(&snap.into_model_state(), progress.steps_done)? {
+                            start = progress.steps_done;
+                            result.train_losses = progress.train_losses;
+                            result.val_losses = progress.val_losses;
+                            result.flops = progress.flops;
+                            result.steps_done = start;
+                            initial_loss =
+                                result.train_losses.first().copied().unwrap_or(f64::NAN);
+                        }
+                        // restore declined (backend without the
+                        // capability): fall through and run from step 0
+                    }
+                }
+                Err(e) => eprintln!(
+                    "warning: ignoring unreadable checkpoint {}: {e:#}",
+                    c.path.display()
+                ),
+            }
+        }
+    }
+    for step in start..spec.steps {
         let decay = spec.schedule.factor(step, spec.steps);
         let lr_vec: Vec<f32> = base_lr.iter().map(|&l| l * decay as f32).collect();
         let inputs = StepInputs {
@@ -258,6 +440,14 @@ fn drive<S: BackendSession + ?Sized>(
             }
             result.val_losses.push((step + 1, v));
         }
+        if let Some(c) = ckpt {
+            // mid-run snapshot, written after the step's eval so the
+            // recorded curves are consistent with the tensors; the final
+            // step is covered by the complete snapshot below
+            if c.every > 0 && (step + 1) % c.every == 0 && step + 1 < spec.steps {
+                write_snapshot(core, spec, &result, false, &c.path)?;
+            }
+        }
     }
     // Always record a final val point for selection if eval was requested.
     if spec.eval_every > 0 && !result.diverged {
@@ -267,6 +457,9 @@ fn drive<S: BackendSession + ?Sized>(
         } else {
             result.diverged = true;
         }
+    }
+    if let Some(c) = ckpt {
+        write_snapshot(core, spec, &result, true, &c.path)?;
     }
     result.wall_secs = t0.elapsed().as_secs_f64();
     Ok(result)

@@ -27,6 +27,18 @@ pub enum Schedule {
 }
 
 impl Schedule {
+    /// Whether the multiplier at a given step is independent of the total
+    /// step budget.  Budget-agnostic schedules (constant, inverse
+    /// square-root) let a checkpointed trial legally *extend* its budget
+    /// mid-trajectory — SHA's rung promotions rely on this.  The others
+    /// (linear, cosine, step milestones) bake `total` into every step's
+    /// LR, so the checkpoint trajectory fingerprint includes the budget
+    /// and a resume under a different budget restarts from step 0 rather
+    /// than splicing two decay ladders together.
+    pub fn budget_agnostic(&self) -> bool {
+        matches!(self, Schedule::Constant | Schedule::InvSqrt { .. })
+    }
+
     /// Multiplier at `step` of `total` (step is 0-based).
     pub fn factor(&self, step: usize, total: usize) -> f64 {
         let t = if total <= 1 {

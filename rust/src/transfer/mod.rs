@@ -17,7 +17,26 @@ use crate::mup::{HyperParams, Optimizer, Parametrization};
 use crate::runtime::Runtime;
 use crate::sweep::{Job, JobResult, Sweep};
 use crate::train::{RunSpec, Schedule};
+use crate::tuner::sha::{run_sha, ShaConfig};
 use crate::tuner::{select_best, Assignment, SearchSpace, Trial};
+
+/// How step 2 of Algorithm 1 ("tune the proxy") searches the space.  All
+/// three run through the same [`Sweep`] (worker pool + journal + optional
+/// checkpoints); only the schedule differs.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TunerKind {
+    /// the paper's default: `n_samples` independent draws, full budget each
+    Random,
+    /// exhaustive cartesian grid (requires `Dim::Grid` dimensions;
+    /// `n_samples` is ignored)
+    Grid,
+    /// successive halving over `n_samples` random draws: all trials run to
+    /// `rung0` steps, the top `1/eta` resume from their snapshots with
+    /// `eta×` more budget, repeating up to `proxy_steps` — strictly fewer
+    /// total train steps than [`TunerKind::Random`] at the same final
+    /// budget when the sweep has checkpoints enabled
+    Sha { eta: usize, rung0: usize },
+}
 
 /// Shared knobs for a transfer study.
 #[derive(Debug, Clone)]
@@ -34,6 +53,8 @@ pub struct TransferSetup {
     pub seed: u64,
     pub eval_every: usize,
     pub schedule: Schedule,
+    /// proxy-tuning strategy (random / grid / successive halving)
+    pub tuner: TunerKind,
 }
 
 #[derive(Debug, Clone)]
@@ -87,35 +108,61 @@ pub fn mu_transfer(
     setup: &TransferSetup,
     label: &str,
 ) -> Result<TransferOutcome> {
+    let _ = rt; // execution flows through the sweep's shared runtime
     let par = Parametrization::mup(setup.optimizer);
     let mut rng = Rng::new(setup.seed ^ 0xA11CE);
-    // 2. tune the proxy
-    let jobs: Vec<Job> = (0..setup.n_samples)
-        .map(|i| {
-            let a = setup.space.sample(&mut rng);
-            Job {
-                key: format!("{label}/proxy/{i}"),
-                spec: spec_for(
-                    &setup.proxy_variant,
-                    par,
-                    a.apply(HyperParams::default()),
-                    setup.base.clone(),
-                    setup.proxy_steps,
-                    setup.seed + 1000 + i as u64,
-                    setup.eval_every,
-                    setup.schedule,
-                ),
-                assignment: a,
-                data_seed: setup.seed,
-            }
+    // 2. tune the proxy.  Grid enumerates the space; Random and SHA draw
+    // the same `n_samples` assignments (same RNG stream, so SHA's
+    // candidate set is identical to what Random would evaluate).
+    let assignments: Vec<Assignment> = match &setup.tuner {
+        TunerKind::Grid => setup.space.grid(),
+        _ => (0..setup.n_samples)
+            .map(|_| setup.space.sample(&mut rng))
+            .collect(),
+    };
+    let jobs: Vec<Job> = assignments
+        .into_iter()
+        .enumerate()
+        .map(|(i, a)| Job {
+            key: format!("{label}/proxy/{i}"),
+            spec: spec_for(
+                &setup.proxy_variant,
+                par,
+                a.apply(HyperParams::default()),
+                setup.base.clone(),
+                setup.proxy_steps,
+                setup.seed + 1000 + i as u64,
+                setup.eval_every,
+                setup.schedule,
+            ),
+            assignment: a,
+            data_seed: setup.seed,
+            ckpt_id: None,
         })
         .collect();
-    let results = sweep.run(&jobs)?;
-    let proxy_trials: Vec<Trial> = results.iter().map(|r| r.trial.clone()).collect();
+    let (proxy_trials, best) = match &setup.tuner {
+        TunerKind::Sha { eta, rung0 } => {
+            let out = run_sha(
+                sweep,
+                &jobs,
+                &ShaConfig {
+                    eta: *eta,
+                    rung0: *rung0,
+                    max_steps: setup.proxy_steps,
+                },
+            )?;
+            (out.trials, out.best)
+        }
+        _ => {
+            let results = sweep.run(&jobs)?;
+            let trials: Vec<Trial> = results.iter().map(|r| r.trial.clone()).collect();
+            let best = select_best(&trials).map(|t| t.assignment.clone());
+            (trials, best)
+        }
+    };
     let search_flops: f64 = proxy_trials.iter().map(|t| t.flops).sum();
 
     // 3. zero-shot copy to the target
-    let best = select_best(&proxy_trials).map(|t| t.assignment.clone());
     let (target, target_flops) = if let Some(best_a) = &best {
         let job = Job {
             key: format!("{label}/target"),
@@ -131,6 +178,7 @@ pub fn mu_transfer(
             ),
             assignment: best_a.clone(),
             data_seed: setup.seed,
+            ckpt_id: None,
         };
         let r = sweep.run(&[job])?.remove(0);
         let fl = r.trial.flops;
@@ -176,6 +224,7 @@ pub fn naive_transfer(
                 ),
                 assignment: a,
                 data_seed: setup.seed,
+                ckpt_id: None,
             }
         })
         .collect();
@@ -198,6 +247,7 @@ pub fn naive_transfer(
             ),
             assignment: best_a.clone(),
             data_seed: setup.seed,
+            ckpt_id: None,
         };
         let r = sweep.run(&[job])?.remove(0);
         let fl = r.trial.flops;
@@ -243,6 +293,7 @@ pub fn direct_tuning(
                 ),
                 assignment: a,
                 data_seed: setup.seed,
+                ckpt_id: None,
             }
         })
         .collect();

@@ -3,8 +3,12 @@
 //! The paper deliberately uses plain random / grid search ("it is only for
 //! scientific reasons that we use either grid search or random search
 //! throughout this work", §10.1); both are implemented here, plus a
-//! low-discrepancy Halton sampler as an extension (the paper notes
-//! fancier tuners compose with μTransfer — they tune the proxy).
+//! low-discrepancy Halton sampler as an extension, and — in [`sha`] —
+//! synchronous successive halving over the checkpoint subsystem (the
+//! paper notes fancier tuners compose with μTransfer — they tune the
+//! proxy).
+
+pub mod sha;
 
 use std::collections::BTreeMap;
 

@@ -1,0 +1,256 @@
+//! Synchronous successive halving (SHA) on top of durable trial state.
+//!
+//! The paper tunes its proxies with plain random/grid search "for
+//! scientific reasons" (§10.1) and notes that fancier tuners compose with
+//! μTransfer because they only ever touch the cheap proxy.  SHA is the
+//! canonical such tuner: run every trial to a small rung budget, keep the
+//! top `1/eta` by validation loss, give the survivors `eta×` more budget,
+//! repeat.  With checkpointing enabled on the [`Sweep`]
+//! ([`Sweep::with_checkpoints`]), a promoted trial *resumes* from its
+//! rung snapshot instead of retraining from step 0, so the total train
+//! steps executed are strictly fewer than exhaustive search at the same
+//! final budget (pinned by `rust/tests/ckpt_resume.rs` and reported by
+//! `benches/tuning_throughput.rs`).
+//!
+//! Mechanics:
+//! * each rung re-submits the surviving jobs through [`Sweep::run`] —
+//!   so rungs inherit the multi-worker pool, the journal (crash-resume
+//!   works *inside* a rung and across rungs), and per-job determinism;
+//! * rung jobs are re-keyed `<key>@r<budget>` (distinct journal records
+//!   per budget) but share the trial's [`Job::ckpt_id`], which is how the
+//!   snapshots chain;
+//! * ranking uses the validation loss **at the rung boundary** (the last
+//!   val point of the curve, NaN for diverged trials) under the NaN-worst
+//!   total order ([`crate::stats::nan_last`]).  The boundary loss is a
+//!   pure function of the trial's state at the rung budget, so a resumed
+//!   rung and a retrained-from-scratch rung rank identically — unlike the
+//!   min-over-history in `Trial::val_loss`, which would carry earlier
+//!   rungs' eval points into resumed curves.  A diverged trial can never
+//!   be promoted over a finite one, and all-NaN rungs still rank
+//!   deterministically;
+//! * eliminated trials' checkpoints are pruned; survivors' are kept for
+//!   warm-starting.
+
+use anyhow::{bail, Result};
+
+use crate::stats;
+use crate::sweep::{Job, JobResult, Sweep};
+use crate::tuner::{Assignment, Trial};
+
+/// Validation loss at the rung boundary: the curve's last val point, NaN
+/// for diverged trials (or when no eval ran).  Unlike `Trial::val_loss`
+/// (min over the whole history), this depends only on the trial's state
+/// at the budget, so checkpoint-resumed and retrained rungs score
+/// bit-identically.
+fn rung_score(r: &JobResult) -> f64 {
+    if r.trial.diverged {
+        return f64::NAN;
+    }
+    r.val_curve.last().map(|&(_, l)| l).unwrap_or(f64::NAN)
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShaConfig {
+    /// promotion factor: keep the top `1/eta` of a rung (≥ 2)
+    pub eta: usize,
+    /// budget of the first rung, in train steps (≥ 1)
+    pub rung0: usize,
+    /// final-rung budget — the full per-trial budget exhaustive search
+    /// would spend on every trial
+    pub max_steps: usize,
+}
+
+impl ShaConfig {
+    /// The strictly-increasing rung budgets `rung0 · eta^k`, clamped so
+    /// the last rung is exactly `max_steps`.
+    pub fn rungs(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut r = self.rung0.max(1);
+        loop {
+            out.push(r.min(self.max_steps.max(1)));
+            if r >= self.max_steps {
+                break;
+            }
+            r = r.saturating_mul(self.eta.max(2));
+        }
+        out
+    }
+}
+
+/// What happened at one rung.
+#[derive(Debug, Clone)]
+pub struct RungReport {
+    pub budget: usize,
+    /// trials that ran at this rung
+    pub survivors: usize,
+    /// new train steps charged at this rung (resumed trials are only
+    /// charged the delta over their previous rung)
+    pub steps_charged: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ShaOutcome {
+    /// one entry per input job: the trial state at the last rung that job
+    /// reached (eliminated trials keep their small-budget result)
+    pub trials: Vec<Trial>,
+    /// best assignment among the *final-rung* survivors (full budget), by
+    /// the rung-boundary val loss; `None` only if every survivor diverged
+    pub best: Option<Assignment>,
+    pub rungs: Vec<RungReport>,
+    /// total train steps charged across all rungs — compare against
+    /// `jobs.len() × max_steps` for exhaustive search
+    pub total_steps: usize,
+}
+
+/// Run synchronous successive halving over `jobs` through `sweep`.
+///
+/// Each job's `spec.steps` is overridden per rung; `spec.eval_every` is
+/// clamped into `1..=budget` so every rung produces a validation loss to
+/// rank by.  Enable [`Sweep::with_checkpoints`] to make promotions resume
+/// from snapshots — without it SHA still returns the same selections
+/// (ranking is by the rung-boundary loss, a pure function of the trial's
+/// state at the budget), but each rung retrains from step 0.  The same
+/// holds for budget-dependent LR schedules (linear/cosine/step): their
+/// per-step LR changes with the budget, so rungs never resume (the
+/// trajectory fingerprint refuses) and `total_steps` charges them in
+/// full.
+pub fn run_sha(sweep: &mut Sweep, jobs: &[Job], cfg: &ShaConfig) -> Result<ShaOutcome> {
+    if cfg.eta < 2 {
+        bail!("sha: eta must be >= 2, got {}", cfg.eta);
+    }
+    if cfg.rung0 == 0 || cfg.max_steps == 0 {
+        bail!("sha: rung0 and max_steps must be >= 1");
+    }
+    if cfg.rung0 > cfg.max_steps {
+        bail!(
+            "sha: rung0 ({}) exceeds max_steps ({})",
+            cfg.rung0,
+            cfg.max_steps
+        );
+    }
+    if jobs.is_empty() {
+        return Ok(ShaOutcome {
+            trials: Vec::new(),
+            best: None,
+            rungs: Vec::new(),
+            total_steps: 0,
+        });
+    }
+    let rungs = cfg.rungs();
+    let mut alive: Vec<usize> = (0..jobs.len()).collect();
+    let mut latest: Vec<Option<Trial>> = vec![None; jobs.len()];
+    let mut scores: Vec<f64> = vec![f64::NAN; jobs.len()];
+    let mut prev_steps: Vec<usize> = vec![0; jobs.len()];
+    let mut reports = Vec::with_capacity(rungs.len());
+    let mut total_steps = 0usize;
+    let mut best: Option<Assignment> = None;
+
+    for (ri, &budget) in rungs.iter().enumerate() {
+        // Which trials will actually resume this rung: a snapshot file
+        // must exist (a state-incapable backend like PJRT never writes
+        // one, even with a checkpoint dir configured) and the schedule
+        // must be budget-agnostic (otherwise the trajectory fingerprint
+        // refuses the budget change and drive retrains from step 0).
+        // Checked before the rung runs, since running overwrites files.
+        let will_resume: Vec<bool> = alive
+            .iter()
+            .map(|&i| {
+                jobs[i].spec.schedule.budget_agnostic()
+                    && sweep
+                        .checkpoint_path(jobs[i].ckpt_key())
+                        .map(|p| p.exists())
+                        .unwrap_or(false)
+            })
+            .collect();
+        let rung_jobs: Vec<Job> = alive
+            .iter()
+            .map(|&i| {
+                let mut j = jobs[i].clone();
+                let id = j.ckpt_key().to_string();
+                j.ckpt_id = Some(id);
+                j.key = format!("{}@r{budget}", jobs[i].key);
+                j.spec.steps = budget;
+                j.spec.eval_every = j.spec.eval_every.clamp(1, budget);
+                j
+            })
+            .collect();
+        let results = sweep.run(&rung_jobs)?;
+        // Honest step accounting: a resumed trial only executes the delta
+        // over its previous rung; a trial without a usable snapshot
+        // retrains its whole prefix and is charged in full.
+        let mut charged = 0usize;
+        for (k, (&i, r)) in alive.iter().zip(&results).enumerate() {
+            charged += if will_resume[k] {
+                r.train_curve.len().saturating_sub(prev_steps[i])
+            } else {
+                r.train_curve.len()
+            };
+            prev_steps[i] = r.train_curve.len();
+            latest[i] = Some(r.trial.clone());
+            scores[i] = rung_score(r);
+        }
+        total_steps += charged;
+        reports.push(RungReport {
+            budget,
+            survivors: alive.len(),
+            steps_charged: charged,
+        });
+        if ri + 1 == rungs.len() {
+            // winner: lowest boundary loss among the full-budget survivors
+            best = alive
+                .iter()
+                .filter(|&&i| scores[i].is_finite())
+                .min_by(|&&a, &&b| stats::nan_last(&scores[a], &scores[b]))
+                .map(|&i| jobs[i].assignment.clone());
+            break;
+        }
+        // rank the rung by boundary val loss under the NaN-worst total
+        // order and promote the top 1/eta (at least one)
+        let mut order = alive.clone();
+        order.sort_by(|&a, &b| stats::nan_last(&scores[a], &scores[b]));
+        let keep = (alive.len() / cfg.eta).max(1);
+        for &i in &order[keep..] {
+            sweep.remove_checkpoint(jobs[i].ckpt_key());
+        }
+        alive = order[..keep].to_vec();
+        alive.sort_unstable(); // deterministic submission order next rung
+    }
+
+    Ok(ShaOutcome {
+        trials: latest.into_iter().flatten().collect(),
+        best,
+        rungs: reports,
+        total_steps,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rung_ladder_shapes() {
+        let c = ShaConfig { eta: 2, rung0: 5, max_steps: 20 };
+        assert_eq!(c.rungs(), vec![5, 10, 20]);
+        // non-power ladders clamp the last rung to max_steps
+        let c = ShaConfig { eta: 3, rung0: 4, max_steps: 20 };
+        assert_eq!(c.rungs(), vec![4, 12, 20]);
+        // rung0 == max_steps degenerates to plain search
+        let c = ShaConfig { eta: 2, rung0: 8, max_steps: 8 };
+        assert_eq!(c.rungs(), vec![8]);
+    }
+
+    #[test]
+    fn config_validation() {
+        let rt = crate::runtime::Runtime::native();
+        let mut sweep = Sweep::new(&rt);
+        let bad = ShaConfig { eta: 1, rung0: 2, max_steps: 8 };
+        assert!(run_sha(&mut sweep, &[], &bad).is_err());
+        let bad = ShaConfig { eta: 2, rung0: 9, max_steps: 8 };
+        assert!(run_sha(&mut sweep, &[], &bad).is_err());
+        let ok = ShaConfig { eta: 2, rung0: 2, max_steps: 8 };
+        let out = run_sha(&mut sweep, &[], &ok).unwrap();
+        assert!(out.trials.is_empty() && out.best.is_none());
+        assert_eq!(out.total_steps, 0);
+    }
+}

@@ -38,6 +38,7 @@ fn jobs() -> Vec<Job> {
                 spec,
                 assignment: Assignment::single("lr", lr),
                 data_seed: 7,
+                ckpt_id: None,
             }
         })
         .collect()
