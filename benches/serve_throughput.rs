@@ -1,0 +1,140 @@
+//! Serve-daemon throughput: `GET /jobs/:id` requests/sec under 32
+//! concurrent keep-alive clients **while a 4-worker sweep is running**,
+//! plus submit-to-first-event latency over the SSE stream — the two
+//! numbers that say whether the control plane stays responsive while the
+//! data plane is saturated.
+//!
+//! Expected shape: the API path is a mutex-guarded BTreeMap lookup plus
+//! one small JSON serialization per request, so it should sustain tens of
+//! thousands of req/s; the sweep workers only contend for cores, not for
+//! the registry lock.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mutransfer::serve::http::{self, Client};
+use mutransfer::serve::{Daemon, Event, JobKind, JobSpec};
+use mutransfer::transfer::TunerKind;
+use mutransfer::util::bench::fmt_ns;
+use mutransfer::util::json;
+
+const CLIENTS: usize = 32;
+const MEASURE: Duration = Duration::from_secs(2);
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::temp_dir().join("mutransfer_bench_serve");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir)?;
+    let daemon = Daemon::start("127.0.0.1:0", &dir, None)?;
+    let addr = daemon.addr.to_string();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!("serve throughput: {CLIENTS} keep-alive clients, 4-worker sweep, {cores} cores");
+
+    // a sweep big enough to still be running through the measurement
+    let spec = JobSpec {
+        name: "bench".into(),
+        kind: JobKind::Transfer,
+        proxy: "tfm_post_w32_d2".into(),
+        target: "tfm_post_w64_d2".into(),
+        base_width: 32,
+        samples: 16,
+        steps: 40,
+        target_steps: 20,
+        seed: 11,
+        workers: 4,
+        tuner: TunerKind::Random,
+        ckpt_every: 0,
+    };
+
+    // -- submit → first SSE event latency --------------------------------
+    let t_submit = Instant::now();
+    let (st, body) = http::rpc(&addr, "POST", "/jobs", Some(&spec.to_json().to_string()))?;
+    assert_eq!(st, 201, "{body}");
+    let submit_rtt = t_submit.elapsed();
+    let id = json::parse(&body)
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .req("id")
+        .as_str()
+        .unwrap()
+        .to_string();
+    let mut first_event = None;
+    http::sse(&addr, &format!("/jobs/{id}/events"), |_, _| {
+        first_event = Some(t_submit.elapsed());
+        false // one frame is all we need
+    })?;
+    let first_event = first_event.expect("SSE stream must deliver at least one event");
+    println!(
+        "{:<44} {:>14}",
+        "submit POST round-trip",
+        fmt_ns(submit_rtt.as_nanos() as f64)
+    );
+    println!(
+        "{:<44} {:>14}",
+        "submit -> first SSE event",
+        fmt_ns(first_event.as_nanos() as f64)
+    );
+
+    // -- GET /jobs/:id under concurrent keep-alive load ------------------
+    let stop = Arc::new(AtomicBool::new(false));
+    let total = Arc::new(AtomicU64::new(0));
+    let path = format!("/jobs/{id}");
+    let mut handles = Vec::new();
+    for _ in 0..CLIENTS {
+        let addr = addr.clone();
+        let path = path.clone();
+        let stop = stop.clone();
+        let total = total.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).expect("connect");
+            let mut n = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let (st, _) = client.request("GET", &path, None).expect("request");
+                assert_eq!(st, 200);
+                n += 1;
+            }
+            total.fetch_add(n, Ordering::Relaxed);
+        }));
+    }
+    let t0 = Instant::now();
+    std::thread::sleep(MEASURE);
+    stop.store(true, Ordering::Relaxed);
+    for h in handles {
+        h.join().unwrap();
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let n = total.load(Ordering::Relaxed);
+    let rps = n as f64 / secs;
+    println!(
+        "{:<44} {:>14}",
+        format!("GET /jobs/:id x{CLIENTS} keep-alive"),
+        format!("{rps:.0} req/s")
+    );
+    println!(
+        "{:<44} {:>14}",
+        "  per-request latency (mean)",
+        fmt_ns(secs * 1e9 * CLIENTS as f64 / n.max(1) as f64)
+    );
+    // the control plane must not collapse under the data plane: even on a
+    // loaded box the registry lookup path should clear 1k req/s easily
+    assert!(
+        rps > 1000.0,
+        "GET /jobs/:id sustained only {rps:.0} req/s under {CLIENTS} clients"
+    );
+
+    // -- drain: wait for the sweep to finish, then report it -------------
+    let mut state = String::new();
+    http::sse(&addr, &format!("/jobs/{id}/events"), |_, data| {
+        match json::parse(data).ok().as_ref().and_then(Event::from_json) {
+            Some(Event::JobUpdate { state: s }) => {
+                state = s;
+                !matches!(state.as_str(), "done" | "failed")
+            }
+            _ => true,
+        }
+    })?;
+    println!("sweep job finished: {state}");
+    assert_eq!(state, "done");
+    daemon.shutdown();
+    Ok(())
+}

@@ -7,6 +7,34 @@
 //!  1. loading the artifact manifest,
 //!  2. μP initialization + per-tensor learning rates from the rule engine,
 //!  3. a training loop on the synthetic corpus with validation evals.
+//!
+//! # Tuning as a service (`serve` / `submit`) — DESIGN.md §9
+//!
+//! Everything this example does inline also runs as a daemon job.  The
+//! service workflow, end to end:
+//!
+//! ```text
+//! # 1. start the daemon (durable job registry under --state-dir; a
+//! #    killed daemon restarted on the same dir resumes its queue)
+//! mutransfer serve --addr 127.0.0.1:7077 --state-dir ./serve-state &
+//!
+//! # 2. submit a proxy sweep (same flags as `mutransfer transfer`);
+//! #    prints the job id
+//! id=$(mutransfer submit --addr 127.0.0.1:7077 --name demo \
+//!        --proxy tfm_post_w32_d2 --target tfm_post_w64_d2 \
+//!        --base-width 32 --samples 8 --steps 40 --target-steps 60)
+//!
+//! # 3. stream live progress (SSE: trial finishes, evals, warnings)
+//! mutransfer watch --addr 127.0.0.1:7077 $id
+//!
+//! # 4. fetch canonical results — byte-identical to the same sweep run
+//! #    offline via `mutransfer transfer --results-json`
+//! mutransfer results --addr 127.0.0.1:7077 $id > results.json
+//!
+//! # 5. the muTransfer payoff: ask the service for the best transferred
+//! #    HPs for ANY width — tuned once, served forever
+//! mutransfer hp --addr 127.0.0.1:7077 --width 512
+//! ```
 
 use mutransfer::data::source_for;
 use mutransfer::model::BaseShape;

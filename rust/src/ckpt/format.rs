@@ -15,18 +15,20 @@
 //!   crc32    u32  over the section record (name_len..payload inclusive)
 //! ```
 //!
-//! Writers serialize the whole file into one buffer, write it to
-//! `<path>.tmp`, fsync, then rename over `path` — a crash can never leave
-//! a half-written checkpoint visible under the final name.  Readers
+//! Writers serialize the whole file into one buffer and publish it
+//! atomically via `util::fsio::write_atomic` (hidden tmp sibling, fsync,
+//! rename over `path`) — a crash can never leave a half-written
+//! checkpoint visible under the final name.  Readers
 //! validate magic, version, per-section shape/payload consistency, and
 //! every CRC before returning a single byte of data; the same state always
 //! serializes to the same bytes (no timestamps, no map iteration order —
 //! sections are an explicit list).
 
-use std::io::Write;
-use std::path::{Path, PathBuf};
+use std::path::Path;
 
 use anyhow::{bail, Context, Result};
+#[cfg(test)]
+use std::path::PathBuf;
 
 pub const MAGIC: [u8; 8] = *b"MUTCKPT\0";
 pub const VERSION: u32 = 1;
@@ -234,8 +236,8 @@ impl Section {
     }
 }
 
-/// Serialize and atomically publish a checkpoint: write `<path>.tmp`,
-/// fsync, rename.  Identical sections always produce identical bytes.
+/// Serialize and atomically publish a checkpoint (tmp-then-rename via
+/// `util::fsio`).  Identical sections always produce identical bytes.
 pub fn write_file(path: &Path, sections: &[Section]) -> Result<()> {
     let mut buf = Vec::new();
     buf.extend_from_slice(&MAGIC);
@@ -246,22 +248,7 @@ pub fn write_file(path: &Path, sections: &[Section]) -> Result<()> {
         buf.extend_from_slice(&rec);
         buf.extend_from_slice(&crc32(&rec).to_le_bytes());
     }
-    let tmp = tmp_path(path);
-    {
-        let mut f = std::fs::File::create(&tmp)
-            .with_context(|| format!("creating {}", tmp.display()))?;
-        f.write_all(&buf)?;
-        f.sync_all()?;
-    }
-    std::fs::rename(&tmp, path)
-        .with_context(|| format!("publishing {}", path.display()))?;
-    Ok(())
-}
-
-fn tmp_path(path: &Path) -> PathBuf {
-    let mut os = path.as_os_str().to_os_string();
-    os.push(".tmp");
-    PathBuf::from(os)
+    crate::util::fsio::write_atomic(path, &buf)
 }
 
 struct Cursor<'a> {
@@ -430,7 +417,8 @@ mod tests {
         let path = tmpfile("clean.ckpt");
         write_file(&path, &[Section::raw("x", vec![1, 2, 3])]).unwrap();
         assert!(path.exists());
-        assert!(!tmp_path(&path).exists());
+        // util::fsio's hidden-sibling tmp name
+        assert!(!path.with_file_name(".clean.ckpt.tmp").exists());
     }
 
     #[test]

@@ -26,7 +26,10 @@
 //!    versioned, CRC-checked binary snapshot format plus
 //!    `BackendSession::state`/`restore` capabilities, so interrupted
 //!    runs/sweeps resume mid-trial bitwise-identically and adaptive
-//!    tuners can pause/promote trials.
+//!    tuners can pause/promote trials.  [`serve`] turns the harness into
+//!    a service: a typed event bus every layer emits progress into, and a
+//!    `mutransfer serve` daemon with a durable job registry, REST/SSE API
+//!    and `GET /hp` — tune once on a proxy, serve the HPs to any scale.
 //!
 //! Python never runs at run time, and by default never at build time
 //! either: `cargo test -q` exercises the whole verification story (golden
@@ -42,6 +45,7 @@ pub mod model;
 pub mod mup;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod sweep;
 pub mod train;

@@ -7,6 +7,9 @@
 //!   coord-check         verify a μP implementation (App. D.1)
 //!   list-artifacts      show the variant inventory (built-in registry by
 //!                       default; artifacts manifest under the pjrt feature)
+//!   serve               run the tuning service daemon (DESIGN.md §9)
+//!   submit/status/results/watch/hp
+//!                       HTTP clients against a running daemon
 //!
 //! Common flags: --artifacts DIR --results DIR --preset ci|paper|smoke
 //!
@@ -23,9 +26,11 @@ use mutransfer::model::BaseShape;
 use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
 use mutransfer::report::Reporter;
 use mutransfer::runtime::Runtime;
-use mutransfer::train::{run_ckpt as train_run_ckpt, CkptConfig, RunSpec, Schedule};
+use mutransfer::serve::{self, JobKind, JobSpec};
+use mutransfer::train::{run_ckpt as train_run_ckpt, CkptConfig, RunSpec};
 use mutransfer::transfer::TunerKind;
 use mutransfer::util::cli::Args;
+use mutransfer::util::json;
 
 fn main() {
     if let Err(e) = real_main() {
@@ -34,17 +39,28 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: mutransfer <exp|train|transfer|coord-check|list-artifacts|journal-canon> [flags]
+const USAGE: &str = "usage: mutransfer <exp|train|transfer|coord-check|list-artifacts|journal-canon|serve|submit|status|results|watch|hp> [flags]
   exp <id>|all        --preset ci|paper|smoke [--workers N]
   train               --variant NAME --scheme mup|sp --lr F --steps N [--base-width W]
                       [--checkpoint FILE --checkpoint-every N]  (auto-resumes from FILE)
   transfer            --proxy NAME --target NAME --base-width W --samples N --steps N --target-steps N [--workers N]
                       [--tuner random|grid|sha [--eta K --rung0 R]]
                       [--checkpoint-dir DIR --checkpoint-every N] [--resume-from JOURNAL]
+                      [--results-json FILE]  (canonical outcome dump, byte-identical
+                      to a serve job's GET /jobs/:id/results)
   coord-check         --variant NAME(__coord) --scheme mup|sp [--base-width W] [--steps N]
   list-artifacts
   journal-canon FILE  print a sweep journal canonicalized (wall_secs
                       stripped, records sorted) for bit-exact comparison
+  serve               --state-dir DIR [--addr HOST:PORT]  run the tuning daemon
+                      (REST + SSE; a killed daemon resumes its queue on restart)
+  submit              --addr A [--name S --kind sweep|transfer] + transfer flags;
+                      prints the new job id
+  status              --addr A [JOB]     list jobs / show one job
+  results             --addr A JOB       print a done job's canonical results JSON
+  watch               --addr A JOB       stream a job's events (SSE) to completion
+  hp                  --addr A [--width W]  best transferred HPs from any
+                      completed sweep (the muTransfer question, as an endpoint)
 common: --artifacts DIR  --results DIR
 --workers: sweep worker threads (default: MUTRANSFER_WORKERS or half the
 cores; needs a Send-capable backend — native yes, pjrt falls back to 1)
@@ -139,27 +155,15 @@ fn real_main() -> Result<()> {
             }
         }
         "transfer" => {
-            let proxy = args.str_or("proxy", "tfm_post_w64_d2");
-            let target = args.str_or("target", "tfm_post_w256_d2");
-            let base_width = args.usize_or("base-width", 64);
-            let samples = args.usize_or("samples", 12);
-            let steps = args.usize_or("steps", 40);
-            let target_steps = args.usize_or("target-steps", 120);
-            let seed = args.u64_or("seed", 0);
             let workers = args.workers_or(mutransfer::util::pool::default_workers());
-            let tuner_name = args.str_or("tuner", "random");
-            let eta = args.usize_or("eta", 2);
-            let rung0 = args.usize_or("rung0", (steps / 4).max(1));
             let ckpt_dir = args.get("checkpoint-dir").map(std::path::PathBuf::from);
-            let ckpt_every = args.usize_or("checkpoint-every", 0);
             let resume_from = args.get("resume-from").map(std::path::PathBuf::from);
+            let results_json = args.get("results-json").map(std::path::PathBuf::from);
+            // the CLI and the serve daemon build their TransferSetup
+            // through the SAME JobSpec::setup() mapping — that shared path
+            // is what makes a daemon job bit-identical to an offline run
+            let spec = parse_job_spec(&args, "transfer")?;
             args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
-            let tuner = match tuner_name.as_str() {
-                "random" => TunerKind::Random,
-                "grid" => TunerKind::Grid,
-                "sha" => TunerKind::Sha { eta, rung0 },
-                other => bail!("--tuner must be random|grid|sha, got {other}"),
-            };
             let rt = Runtime::new(&artifacts)?;
             let rep = Reporter::new(results);
             let journal = resume_from.unwrap_or_else(|| rep.path("transfer-cli.journal"));
@@ -169,32 +173,22 @@ fn real_main() -> Result<()> {
             // SHA needs durable trial state to realize its savings; give
             // it a default checkpoint dir when none was requested
             let ckpt_dir = ckpt_dir.or_else(|| {
-                matches!(tuner, TunerKind::Sha { .. }).then(|| rep.path("ckpt"))
+                matches!(spec.tuner, TunerKind::Sha { .. }).then(|| rep.path("ckpt"))
             });
             if let Some(d) = &ckpt_dir {
-                sweep = sweep.with_checkpoints(d, ckpt_every)?;
+                sweep = sweep.with_checkpoints(d, spec.ckpt_every)?;
             }
             sweep.verbose = true;
-            let setup = mutransfer::transfer::TransferSetup {
-                proxy_variant: proxy.clone(),
-                target_variant: target.clone(),
-                base: BaseShape::Tfm {
-                    d_model: base_width,
-                    n_head: 4,
-                    d_head: base_width / 4,
-                    d_ffn: 4 * base_width,
-                },
-                optimizer: Optimizer::Adam,
-                space: mutransfer::tuner::SearchSpace::iwslt_like(),
-                proxy_steps: steps,
-                target_steps,
-                n_samples: samples,
-                seed,
-                eval_every: (steps / 2).max(2),
-                schedule: Schedule::Constant,
-                tuner,
-            };
-            let out = mutransfer::transfer::mu_transfer(&rt, &mut sweep, &setup, "cli")?;
+            let setup = spec.setup();
+            let out = mutransfer::transfer::mu_transfer(
+                &rt,
+                &mut sweep,
+                &setup,
+                mutransfer::serve::daemon::JOB_LABEL,
+            )?;
+            if let Some(p) = &results_json {
+                mutransfer::util::fsio::write_atomic(p, out.to_json().to_string().as_bytes())?;
+            }
             match (&out.best, &out.target) {
                 (Some(best), Some(t)) => println!(
                     "best proxy HPs: {:?}\ntarget val loss: {:.4} (diverged={})\ntuning cost ratio: {:.1}%",
@@ -265,6 +259,152 @@ fn real_main() -> Result<()> {
                 );
             }
         }
+        "serve" => {
+            let addr = args.str_or("addr", "127.0.0.1:7077");
+            let state_dir = std::path::PathBuf::from(
+                args.get("state-dir")
+                    .context("serve needs --state-dir DIR (durable job registry)")?,
+            );
+            args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let daemon = serve::Daemon::start(&addr, &state_dir, Some(artifacts.clone()))?;
+            println!(
+                "mutransfer serve: listening on http://{} (state-dir {}, {} job(s) resumed)",
+                daemon.addr,
+                state_dir.display(),
+                daemon.registry.pending(),
+            );
+            use std::io::Write as _;
+            std::io::stdout().flush().ok(); // scripts wait on this line
+            daemon.join();
+        }
+        "submit" => {
+            let addr = args.str_or("addr", "127.0.0.1:7077");
+            let spec = parse_job_spec(&args, &args.str_or("kind", "transfer"))?;
+            args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let (status, body) =
+                serve::http::rpc(&addr, "POST", "/jobs", Some(&spec.to_json().to_string()))?;
+            if status != 201 {
+                bail!("submit rejected ({status}): {body}");
+            }
+            let id = json::parse(&body)
+                .map_err(|e| anyhow::anyhow!("bad submit response: {e}"))?
+                .req("id")
+                .as_str()
+                .context("submit response has no id")?
+                .to_string();
+            // bare id on stdout so scripts can do id=$(mutransfer submit …)
+            println!("{id}");
+        }
+        "status" => {
+            let addr = args.str_or("addr", "127.0.0.1:7077");
+            let id = args.positional.get(1).cloned();
+            args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let path = match &id {
+                Some(i) => format!("/jobs/{i}"),
+                None => "/jobs".to_string(),
+            };
+            let (status, body) = serve::http::rpc(&addr, "GET", &path, None)?;
+            if status != 200 {
+                bail!("status failed ({status}): {body}");
+            }
+            let j = json::parse(&body).map_err(|e| anyhow::anyhow!("bad response: {e}"))?;
+            let show = |v: &json::Json| {
+                println!(
+                    "{:<10} {:<10} {:<9} {}",
+                    v.get("id").and_then(|x| x.as_str()).unwrap_or("?"),
+                    v.get("state").and_then(|x| x.as_str()).unwrap_or("?"),
+                    v.get("kind").and_then(|x| x.as_str()).unwrap_or("?"),
+                    v.get("name").and_then(|x| x.as_str()).unwrap_or(""),
+                );
+                if let Some(err) = v.get("error").and_then(|x| x.as_str()) {
+                    println!("  error: {err}");
+                }
+            };
+            println!("{:<10} {:<10} {:<9} {}", "id", "state", "kind", "name");
+            match j.get("jobs").and_then(|a| a.as_arr()) {
+                Some(jobs) => jobs.iter().for_each(show),
+                None => show(&j),
+            }
+        }
+        "results" => {
+            let addr = args.str_or("addr", "127.0.0.1:7077");
+            let id = args
+                .positional
+                .get(1)
+                .context("results needs a job id (see `mutransfer status`)")?;
+            args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let (status, body) =
+                serve::http::rpc(&addr, "GET", &format!("/jobs/{id}/results"), None)?;
+            if status != 200 {
+                bail!("results unavailable ({status}): {body}");
+            }
+            // raw passthrough, no trailing newline: `mutransfer results … >
+            // f.json` is byte-identical to the daemon's results.json (and
+            // to an offline --results-json dump)
+            use std::io::Write as _;
+            std::io::stdout().write_all(body.as_bytes())?;
+            std::io::stdout().flush()?;
+        }
+        "watch" => {
+            let addr = args.str_or("addr", "127.0.0.1:7077");
+            let id = args
+                .positional
+                .get(1)
+                .context("watch needs a job id (see `mutransfer status`)")?
+                .clone();
+            args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let mut terminal: Option<String> = None;
+            serve::http::sse(&addr, &format!("/jobs/{id}/events"), |_, data| {
+                let Ok(j) = json::parse(data) else { return true };
+                let Some(ev) = serve::Event::from_json(&j) else { return true };
+                match &ev {
+                    serve::Event::JobUpdate { state } => {
+                        println!("job {id}: {state}");
+                        if matches!(state.as_str(), "done" | "failed" | "cancelled") {
+                            terminal = Some(state.clone());
+                            return false;
+                        }
+                    }
+                    serve::Event::TrialFinished {
+                        key,
+                        ordinal,
+                        total,
+                        train_loss,
+                        val_loss,
+                        diverged,
+                        wall_secs,
+                    } => println!(
+                        "[{ordinal}/{total}] {key} -> train {train_loss:.4} val {val_loss:.4}{} ({wall_secs:.1}s)",
+                        if *diverged { " DIVERGED" } else { "" },
+                    ),
+                    serve::Event::RungPromoted { budget, survivors, promoted } => {
+                        println!("sha rung @{budget} steps: promoted {promoted}/{survivors}")
+                    }
+                    serve::Event::Warning { msg, .. } => println!("warning: {msg}"),
+                    _ => {}
+                }
+                true
+            })?;
+            match terminal.as_deref() {
+                Some("done") => {}
+                Some(state) => bail!("job {id} finished as {state}"),
+                None => bail!("event stream ended before job {id} reached a terminal state"),
+            }
+        }
+        "hp" => {
+            let addr = args.str_or("addr", "127.0.0.1:7077");
+            let width = args.get("width").map(|w| w.to_string());
+            args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let path = match width {
+                Some(w) => format!("/hp?width={w}"),
+                None => "/hp".to_string(),
+            };
+            let (status, body) = serve::http::rpc(&addr, "GET", &path, None)?;
+            if status != 200 {
+                bail!("no transferred HPs available ({status}): {body}");
+            }
+            println!("{body}");
+        }
         "list-artifacts" => {
             let rt = Runtime::new(&artifacts)?;
             println!("{:<42} {:<12} {:<6} {:>10} {:>14}", "variant", "arch", "kind", "params", "GFLOPs/step");
@@ -283,6 +423,45 @@ fn real_main() -> Result<()> {
         _ => bail!("{USAGE}"),
     }
     Ok(())
+}
+
+/// Parse the transfer-shaped flag set into a serve [`JobSpec`] — one
+/// parser (and one `JobSpec::setup()` mapping behind it) shared by the
+/// offline `transfer` subcommand and the daemon-bound `submit`, so a
+/// submitted job and an offline run are the same job by construction.
+fn parse_job_spec(args: &Args, kind: &str) -> Result<JobSpec> {
+    // flagless defaults come from JobSpec::default() — the same source
+    // JobSpec::from_json uses for a body-less POST /jobs, so the CLI and
+    // the API can never drift apart on what the default job is
+    let d = JobSpec::default();
+    let steps = args.usize_or("steps", d.steps);
+    // eta/rung0 are consumed even for random/grid so passing them with a
+    // different tuner stays a no-op rather than an unknown-flag error
+    let eta = args.usize_or("eta", JobSpec::default_eta());
+    let rung0 = args.usize_or("rung0", JobSpec::default_rung0(steps));
+    let tuner = match args.str_or("tuner", "random").as_str() {
+        "random" => TunerKind::Random,
+        "grid" => TunerKind::Grid,
+        "sha" => TunerKind::Sha { eta, rung0 },
+        other => bail!("--tuner must be random|grid|sha, got {other}"),
+    };
+    // validated(): the same checks POST /jobs applies, so the offline CLI
+    // can never accept a spec the API would reject (or vice versa)
+    JobSpec {
+        name: args.str_or("name", "cli"),
+        kind: JobKind::parse(kind)?,
+        proxy: args.str_or("proxy", &d.proxy),
+        target: args.str_or("target", &d.target),
+        base_width: args.usize_or("base-width", d.base_width),
+        samples: args.usize_or("samples", d.samples),
+        steps,
+        target_steps: args.usize_or("target-steps", d.target_steps),
+        seed: args.u64_or("seed", d.seed),
+        workers: args.usize_or("workers", d.workers),
+        tuner,
+        ckpt_every: args.usize_or("checkpoint-every", d.ckpt_every),
+    }
+    .validated()
 }
 
 fn parse_scheme(

@@ -1,11 +1,17 @@
 //! Result persistence: every experiment writes (a) a paper-style text
 //! table to stdout, (b) CSV series under `results/`, and (c) a JSON blob
 //! with the raw numbers, so EXPERIMENTS.md entries are regenerable.
+//!
+//! All artifact writes publish tmp-file-then-rename (the same
+//! crash-consistency rule `ckpt/format.rs` enforces): the serve daemon
+//! reports results too, and a SIGKILLed daemon must never leave a torn
+//! CSV/JSON artifact behind for a reader to trip over.
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 
+use crate::util::fsio::write_atomic;
 use crate::util::json::Json;
 use crate::util::table::Table;
 
@@ -24,18 +30,18 @@ impl Reporter {
         Reporter::new(crate::results_dir())
     }
 
-    /// Print a table and persist its CSV twin.
+    /// Print a table and persist its CSV twin (atomic publish).
     pub fn table(&self, name: &str, t: &Table) -> Result<()> {
         if !self.quiet {
             println!("{}", t.render());
         }
-        std::fs::write(self.dir.join(format!("{name}.csv")), t.to_csv())?;
+        write_atomic(&self.dir.join(format!("{name}.csv")), t.to_csv().as_bytes())?;
         Ok(())
     }
 
-    /// Persist raw JSON (figure series, trial dumps).
+    /// Persist raw JSON (figure series, trial dumps); atomic publish.
     pub fn json(&self, name: &str, j: &Json) -> Result<()> {
-        std::fs::write(self.dir.join(format!("{name}.json")), j.to_string())?;
+        write_atomic(&self.dir.join(format!("{name}.json")), j.to_string().as_bytes())?;
         Ok(())
     }
 
@@ -68,5 +74,8 @@ mod tests {
         assert!(dir.join("tab.csv").exists());
         let s = std::fs::read_to_string(dir.join("blob.json")).unwrap();
         assert!(s.contains("\"v\""));
+        // atomic publish leaves no tmp residue behind
+        assert!(!dir.join(".tab.csv.tmp").exists());
+        assert!(!dir.join(".blob.json.tmp").exists());
     }
 }

@@ -1,0 +1,168 @@
+//! REST/SSE routes over the job registry (DESIGN.md §9).
+//!
+//! | method | path                  | status            | body                       |
+//! |--------|-----------------------|-------------------|----------------------------|
+//! | POST   | /jobs                 | 201 / 400         | `{"id","name"}`            |
+//! | GET    | /jobs                 | 200               | `{"jobs":[view…]}`         |
+//! | GET    | /jobs/:id             | 200 / 404         | job view                   |
+//! | GET    | /jobs/:id/results     | 200 / 404 / 409   | canonical results JSON     |
+//! | DELETE | /jobs/:id             | 200 / 404 / 409   | `{"id","state"}`           |
+//! | GET    | /jobs/:id/events      | 200 / 404 (SSE)   | `id:`/`data:` event frames |
+//! | GET    | /hp?width=N           | 200 / 404         | best transferred HPs       |
+//! | GET    | /healthz              | 200               | `{"ok":true}`              |
+//!
+//! Client-supplied job names are echoed back **verbatim** (full JSON
+//! string escaping, surrogate pairs included — `util::json` round-trip
+//! tests pin it).  Unknown paths are 404, known paths with the wrong
+//! method 405.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use super::daemon::{CancelOutcome, JobSpec, Registry};
+use super::http::{self, error_json, Request};
+use crate::util::json::{self, jstr, Json};
+
+/// Dispatch one request; returns whether the connection may be reused
+/// (SSE streams and malformed exchanges always close).
+pub fn handle(reg: &std::sync::Arc<Registry>, req: &Request, w: &mut TcpStream) -> bool {
+    let keep = req.keep_alive();
+    let segs: Vec<&str> = req
+        .path
+        .trim_matches('/')
+        .split('/')
+        .filter(|s| !s.is_empty())
+        .collect();
+    let ok = match (req.method.as_str(), segs.as_slice()) {
+        ("GET", ["healthz"]) => http::respond_json(
+            w,
+            200,
+            &Json::from_pairs(vec![("ok", Json::Bool(true))]),
+            keep,
+        ),
+        ("POST", ["jobs"]) => match json::parse(&req.body)
+            .map_err(|e| e.to_string())
+            .and_then(|j| JobSpec::from_json(&j).map_err(|e| format!("{e:#}")))
+        {
+            Ok(spec) => match reg.submit(spec.clone()) {
+                Ok(id) => http::respond_json(
+                    w,
+                    201,
+                    &Json::from_pairs(vec![("id", jstr(&id)), ("name", jstr(&spec.name))]),
+                    keep,
+                ),
+                Err(e) => http::respond_json(w, 500, &error_json(500, &format!("{e:#}")), keep),
+            },
+            Err(msg) => http::respond_json(w, 400, &error_json(400, &msg), keep),
+        },
+        ("GET", ["jobs"]) => http::respond_json(w, 200, &reg.list(), keep),
+        ("GET", ["jobs", id]) => match reg.view(id) {
+            Some(v) => http::respond_json(w, 200, &v, keep),
+            None => http::respond_json(w, 404, &error_json(404, "no such job"), keep),
+        },
+        ("GET", ["jobs", id, "results"]) => match reg.state(id) {
+            None => http::respond_json(w, 404, &error_json(404, "no such job"), keep),
+            Some(st) if st != super::daemon::JobState::Done => http::respond_json(
+                w,
+                409,
+                &error_json(409, &format!("job is {}, results exist only for done jobs", st.as_str())),
+                keep,
+            ),
+            Some(_) => match reg.results_raw(id) {
+                // raw passthrough: the stored bytes ARE the canonical
+                // form; re-serializing could only risk drift
+                Some(raw) => http::respond(w, 200, "application/json", raw.as_bytes(), keep),
+                None => http::respond_json(w, 500, &error_json(500, "results.json unreadable"), keep),
+            },
+        },
+        ("DELETE", ["jobs", id]) => match reg.cancel(id) {
+            Ok(CancelOutcome::Cancelled) => http::respond_json(
+                w,
+                200,
+                &Json::from_pairs(vec![("id", jstr(id)), ("state", jstr("cancelled"))]),
+                keep,
+            ),
+            Ok(CancelOutcome::Deleted) => http::respond_json(
+                w,
+                200,
+                &Json::from_pairs(vec![("id", jstr(id)), ("state", jstr("deleted"))]),
+                keep,
+            ),
+            Ok(CancelOutcome::Running) => http::respond_json(
+                w,
+                409,
+                &error_json(409, "job is running; running jobs cannot be cancelled"),
+                keep,
+            ),
+            Ok(CancelOutcome::NotFound) => {
+                http::respond_json(w, 404, &error_json(404, "no such job"), keep)
+            }
+            Err(e) => http::respond_json(w, 500, &error_json(500, &format!("{e:#}")), keep),
+        },
+        ("GET", ["jobs", id, "events"]) => return stream_events(reg, req, id, w),
+        ("GET", ["hp"]) => {
+            let width = req.query.get("width").and_then(|v| v.parse().ok());
+            match reg.best_hp(width) {
+                Some(ans) => http::respond_json(w, 200, &ans, keep),
+                None => http::respond_json(
+                    w,
+                    404,
+                    &error_json(404, "no completed sweep has a non-diverged winner yet"),
+                    keep,
+                ),
+            }
+        }
+        // known resources, wrong method
+        (_, ["jobs"]) | (_, ["jobs", _]) | (_, ["jobs", _, "results"])
+        | (_, ["jobs", _, "events"]) | (_, ["hp"]) | (_, ["healthz"]) => {
+            http::respond_json(w, 405, &error_json(405, "method not allowed"), keep)
+        }
+        _ => http::respond_json(w, 404, &error_json(404, "no such route"), keep),
+    };
+    ok.is_ok() && keep
+}
+
+/// `GET /jobs/:id/events`: replay retained history from `?after=SEQ` (or
+/// the standard `Last-Event-ID` header), then stream live events.  The
+/// stream ends when the job's bus closes (terminal state) or the client
+/// disconnects; idle gaps carry `: ping` comments so dead peers are
+/// noticed.  Always closes the connection (SSE has no length framing).
+fn stream_events(
+    reg: &std::sync::Arc<Registry>,
+    req: &Request,
+    id: &str,
+    w: &mut TcpStream,
+) -> bool {
+    let Some(bus) = reg.bus(id) else {
+        let _ = http::respond_json(w, 404, &error_json(404, "no such job"), false);
+        return false;
+    };
+    let after: u64 = req
+        .query
+        .get("after")
+        .map(|s| s.as_str())
+        .or_else(|| req.header("last-event-id"))
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0);
+    let rx = bus.subscribe(after);
+    if http::sse_headers(w).is_err() {
+        return false;
+    }
+    loop {
+        match rx.recv_timeout(Duration::from_millis(500)) {
+            Ok((seq, ev)) => {
+                if http::sse_event(w, seq, &ev.to_json()).is_err() {
+                    break; // client went away
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if http::sse_ping(w).is_err() {
+                    break;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => break, // job over
+        }
+    }
+    let _ = w.shutdown(std::net::Shutdown::Both);
+    false
+}

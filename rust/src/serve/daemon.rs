@@ -1,0 +1,1093 @@
+//! The tuning-service daemon: a durable job registry + FIFO queue feeding
+//! one executor thread, fronted by the REST/SSE API in [`super::api`]
+//! (DESIGN.md §9).
+//!
+//! Durability model — everything the daemon must not lose lives on disk
+//! under `--state-dir`, published with the same crash-consistency rules
+//! the rest of the repo already enforces:
+//!
+//! ```text
+//! state_dir/jobs/<id>/spec.json      job spec      (tmp-then-rename at submit)
+//! state_dir/jobs/<id>/journal        sweep journal (append + fdatasync per trial)
+//! state_dir/jobs/<id>/ckpt/          trial snapshots (tmp-then-rename)
+//! state_dir/jobs/<id>/results.json   canonical outcome (tmp-then-rename)
+//! state_dir/jobs/<id>/state.json     terminal state only (tmp-then-rename)
+//! ```
+//!
+//! `Running` is deliberately **not** persisted: a SIGKILLed daemon
+//! restarted with the same `--state-dir` re-scans `jobs/`, re-queues every
+//! job without a terminal `state.json` in id order, and the PR-4 journal +
+//! checkpoint machinery makes the re-run skip completed trials and resume
+//! interrupted ones mid-flight — so a killed daemon finishes its queue
+//! with bit-identical results and no recomputation (pinned by the CI
+//! daemon end-to-end step and `rust/tests/serve_e2e.rs`).
+
+use std::collections::{BTreeMap, VecDeque};
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::BaseShape;
+use crate::mup::Optimizer;
+use crate::runtime::Runtime;
+use crate::serve::events::{Event, EventBus, EventSink};
+use crate::sweep::Sweep;
+use crate::train::Schedule;
+use crate::transfer::{mu_transfer, tune_only, TransferSetup, TunerKind};
+use crate::tuner::SearchSpace;
+use crate::util::fsio::write_atomic;
+use crate::util::json::{self, jnum, jstr, Json};
+
+/// The journal/result key label every daemon job runs under.  Pinned to
+/// the offline CLI's label so a daemon-run sweep and `mutransfer transfer`
+/// produce byte-comparable journals and identical `results.json` bytes —
+/// the CI end-to-end step diffs exactly that.
+pub const JOB_LABEL: &str = "cli";
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobKind {
+    /// tune the proxy only (serve the winner through `GET /hp`)
+    Sweep,
+    /// full Algorithm 1: tune the proxy, run the target zero-shot
+    Transfer,
+}
+
+impl JobKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobKind::Sweep => "sweep",
+            JobKind::Transfer => "transfer",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<JobKind> {
+        match s {
+            "sweep" => Ok(JobKind::Sweep),
+            "transfer" => Ok(JobKind::Transfer),
+            other => bail!("job kind must be sweep|transfer, got {other}"),
+        }
+    }
+}
+
+/// A submitted tuning job — the JSON body of `POST /jobs`, persisted
+/// verbatim as `spec.json`.  [`JobSpec::setup`] is the **single** place a
+/// spec becomes a [`TransferSetup`]; the offline `mutransfer transfer`
+/// CLI routes through it too, which is what makes a daemon job
+/// bit-identical to the same sweep run offline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// client-supplied display name, echoed back verbatim by the API
+    pub name: String,
+    pub kind: JobKind,
+    pub proxy: String,
+    pub target: String,
+    pub base_width: usize,
+    pub samples: usize,
+    pub steps: usize,
+    pub target_steps: usize,
+    pub seed: u64,
+    /// sweep worker threads; 0 = auto (`MUTRANSFER_WORKERS` or 1)
+    pub workers: usize,
+    pub tuner: TunerKind,
+    /// mid-trial snapshot cadence; 0 with a non-SHA tuner = no checkpoints
+    pub ckpt_every: usize,
+}
+
+impl Default for JobSpec {
+    fn default() -> JobSpec {
+        JobSpec {
+            name: String::new(),
+            kind: JobKind::Transfer,
+            proxy: "tfm_post_w64_d2".into(),
+            target: "tfm_post_w256_d2".into(),
+            base_width: 64,
+            samples: 12,
+            steps: 40,
+            target_steps: 120,
+            seed: 0,
+            workers: 0,
+            tuner: TunerKind::Random,
+            ckpt_every: 0,
+        }
+    }
+}
+
+impl JobSpec {
+    /// SHA defaults shared by the JSON decoder and the CLI flag parser —
+    /// one source, so `--tuner sha` without `--eta/--rung0` and a JSON
+    /// body without those fields always mean the same job.
+    pub fn default_eta() -> usize {
+        2
+    }
+
+    pub fn default_rung0(steps: usize) -> usize {
+        (steps / 4).max(1)
+    }
+
+    /// Validate a directly-constructed spec by round-tripping it through
+    /// the canonical JSON codec: the CLI routes here so `transfer` and
+    /// `submit` accept exactly the specs `POST /jobs` accepts — same
+    /// checks, same errors, no drift.
+    pub fn validated(self) -> Result<JobSpec> {
+        JobSpec::from_json(&self.to_json())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let (tuner, eta, rung0) = match &self.tuner {
+            TunerKind::Random => ("random", 0, 0),
+            TunerKind::Grid => ("grid", 0, 0),
+            TunerKind::Sha { eta, rung0 } => ("sha", *eta, *rung0),
+        };
+        Json::from_pairs(vec![
+            ("name", jstr(&self.name)),
+            ("kind", jstr(self.kind.as_str())),
+            ("proxy", jstr(&self.proxy)),
+            ("target", jstr(&self.target)),
+            ("base_width", jnum(self.base_width as f64)),
+            ("samples", jnum(self.samples as f64)),
+            ("steps", jnum(self.steps as f64)),
+            ("target_steps", jnum(self.target_steps as f64)),
+            // string, not number: our JSON numbers are f64, which cannot
+            // round-trip u64 seeds above 2^53 exactly
+            ("seed", jstr(&self.seed.to_string())),
+            ("workers", jnum(self.workers as f64)),
+            ("tuner", jstr(tuner)),
+            ("eta", jnum(eta as f64)),
+            ("rung0", jnum(rung0 as f64)),
+            ("ckpt_every", jnum(self.ckpt_every as f64)),
+        ])
+    }
+
+    /// Parse and validate a client-submitted spec.  Missing fields take
+    /// the defaults; out-of-range values are a hard error (the API turns
+    /// it into a 400).
+    pub fn from_json(j: &Json) -> Result<JobSpec> {
+        let d = JobSpec::default();
+        let s = |k: &str, dv: &str| -> String {
+            j.get(k)
+                .and_then(|v| v.as_str())
+                .map(str::to_string)
+                .unwrap_or_else(|| dv.to_string())
+        };
+        let u = |k: &str, dv: usize| -> Result<usize> {
+            match j.get(k) {
+                None | Some(Json::Null) => Ok(dv),
+                Some(v) => v
+                    .as_f64()
+                    // whole numbers only: 24.9 must be a 400, not a
+                    // silently-executed steps=24
+                    .filter(|f| f.is_finite() && *f >= 0.0 && f.fract() == 0.0)
+                    .map(|f| f as usize)
+                    .with_context(|| format!("field {k} must be a non-negative integer")),
+            }
+        };
+        let name = s("name", &d.name);
+        if name.chars().count() > 256 {
+            bail!("name exceeds 256 characters");
+        }
+        let steps = u("steps", d.steps)?;
+        let rung0 = u("rung0", JobSpec::default_rung0(steps))?;
+        let eta = u("eta", JobSpec::default_eta())?;
+        // same validation run_sha applies offline: a spec the CLI would
+        // reject must be a 400 here, never a silently-rewritten job
+        let tuner = match s("tuner", "random").as_str() {
+            "random" => TunerKind::Random,
+            "grid" => TunerKind::Grid,
+            "sha" => {
+                if eta < 2 {
+                    bail!("sha needs eta >= 2, got {eta}");
+                }
+                if rung0 == 0 || rung0 > steps {
+                    bail!("sha needs 1 <= rung0 <= steps, got rung0={rung0} steps={steps}");
+                }
+                TunerKind::Sha { eta, rung0 }
+            }
+            other => bail!("tuner must be random|grid|sha, got {other}"),
+        };
+        // seed accepts a string (exact u64) or a number (exact below 2^53)
+        let seed = match j.get("seed") {
+            None | Some(Json::Null) => d.seed,
+            Some(Json::Str(text)) => text
+                .parse::<u64>()
+                .ok()
+                .with_context(|| format!("field seed must be a u64, got {text:?}"))?,
+            Some(v) => v
+                .as_f64()
+                .filter(|f| f.is_finite() && *f >= 0.0 && f.fract() == 0.0 && *f <= 9e15)
+                .map(|f| f as u64)
+                .context("field seed must be a non-negative integer (send as string beyond 2^53)")?,
+        };
+        let spec = JobSpec {
+            name,
+            kind: JobKind::parse(&s("kind", d.kind.as_str()))?,
+            proxy: s("proxy", &d.proxy),
+            target: s("target", &d.target),
+            base_width: u("base_width", d.base_width)?,
+            samples: u("samples", d.samples)?,
+            steps,
+            target_steps: u("target_steps", d.target_steps)?,
+            seed,
+            workers: u("workers", d.workers)?,
+            tuner,
+            ckpt_every: u("ckpt_every", d.ckpt_every)?,
+        };
+        if spec.steps == 0 || spec.samples == 0 {
+            bail!("steps and samples must be >= 1");
+        }
+        if spec.base_width == 0 || spec.base_width % 4 != 0 {
+            bail!("base_width must be a positive multiple of 4 (n_head = 4)");
+        }
+        if spec.kind == JobKind::Transfer && spec.target_steps == 0 {
+            bail!("transfer jobs need target_steps >= 1");
+        }
+        Ok(spec)
+    }
+
+    /// The one spec→setup mapping (mirrored exactly by nothing else: the
+    /// CLI `transfer` subcommand builds a `JobSpec` and calls this too).
+    pub fn setup(&self) -> TransferSetup {
+        TransferSetup {
+            proxy_variant: self.proxy.clone(),
+            target_variant: self.target.clone(),
+            base: BaseShape::Tfm {
+                d_model: self.base_width,
+                n_head: 4,
+                d_head: self.base_width / 4,
+                d_ffn: 4 * self.base_width,
+            },
+            optimizer: Optimizer::Adam,
+            space: SearchSpace::iwslt_like(),
+            proxy_steps: self.steps,
+            target_steps: self.target_steps,
+            n_samples: self.samples,
+            seed: self.seed,
+            eval_every: (self.steps / 2).max(2),
+            schedule: Schedule::Constant,
+            tuner: self.tuner.clone(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    Queued,
+    Running,
+    Done,
+    Failed,
+    Cancelled,
+}
+
+impl JobState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Failed => "failed",
+            JobState::Cancelled => "cancelled",
+        }
+    }
+
+    pub fn terminal(&self) -> bool {
+        matches!(self, JobState::Done | JobState::Failed | JobState::Cancelled)
+    }
+}
+
+struct JobEntry {
+    spec: JobSpec,
+    state: JobState,
+    error: Option<String>,
+    bus: Arc<EventBus>,
+    /// `(winning val loss, assignment)` of a done job, cached so `GET /hp`
+    /// never re-reads results documents off disk per request
+    best: Option<(f64, Json)>,
+}
+
+/// Pull the `/hp`-relevant facts out of a results document.
+fn extract_best(results: &Json) -> Option<(f64, Json)> {
+    let assignment = results.get("best").filter(|b| !b.is_null())?;
+    let loss = results
+        .get("best_val_loss")
+        .and_then(|v| v.as_f64())
+        .filter(|l| l.is_finite())?;
+    Some((loss, assignment.clone()))
+}
+
+struct RegInner {
+    jobs: BTreeMap<String, JobEntry>,
+    queue: VecDeque<String>,
+    next_id: u64,
+}
+
+/// What `DELETE /jobs/:id` did.
+#[derive(Debug, PartialEq, Eq)]
+pub enum CancelOutcome {
+    /// queued job → terminal `cancelled` (persisted)
+    Cancelled,
+    /// finished job → its record and artifacts were removed
+    Deleted,
+    /// running jobs cannot be interrupted (409)
+    Running,
+    NotFound,
+}
+
+/// Durable job registry: the single source of truth the HTTP handlers and
+/// the executor share.  All mutation happens under one mutex; filesystem
+/// writes are tmp-then-rename so a crash at any instant leaves either the
+/// old or the new contents, never a torn file.
+pub struct Registry {
+    state_dir: PathBuf,
+    inner: Mutex<RegInner>,
+    work: Condvar,
+}
+
+impl Registry {
+    pub fn open(state_dir: &Path) -> Result<Arc<Registry>> {
+        let jobs_dir = state_dir.join("jobs");
+        std::fs::create_dir_all(&jobs_dir)
+            .with_context(|| format!("creating state dir {}", jobs_dir.display()))?;
+        let mut jobs = BTreeMap::new();
+        let mut queue = VecDeque::new();
+        let mut next_id = 1u64;
+        let mut ids: Vec<String> = std::fs::read_dir(&jobs_dir)?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().join("spec.json").exists())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        ids.sort(); // zero-padded ids sort in submission order
+        for id in ids {
+            // the id range is burned even for unloadable jobs, so a later
+            // submit can never reuse a directory that still holds an old
+            // job's journal/checkpoints
+            if let Some(n) = id.strip_prefix('j').and_then(|s| s.parse::<u64>().ok()) {
+                next_id = next_id.max(n + 1);
+            }
+            // one corrupt job directory must not brick the whole daemon:
+            // skip it (leaving it on disk for forensics) and keep loading
+            match Self::load_job(&jobs_dir.join(&id)) {
+                Ok((spec, state, error)) => {
+                    let bus = Arc::new(EventBus::new());
+                    let mut best = None;
+                    if state.terminal() {
+                        bus.emit(&Event::JobUpdate { state: state.as_str().to_string() });
+                        bus.close();
+                        if state == JobState::Done {
+                            // one read at startup, then /hp answers from
+                            // memory for the daemon's lifetime
+                            best = std::fs::read_to_string(
+                                jobs_dir.join(&id).join("results.json"),
+                            )
+                            .ok()
+                            .and_then(|t| json::parse(&t).ok())
+                            .as_ref()
+                            .and_then(extract_best);
+                        }
+                    } else {
+                        // no terminal state recorded: the daemon died while
+                        // this job was queued or running — re-queue it.  Its
+                        // journal and checkpoints make the re-run skip
+                        // finished trials.
+                        queue.push_back(id.clone());
+                    }
+                    jobs.insert(id, JobEntry { spec, state, error, bus, best });
+                }
+                Err(e) => eprintln!(
+                    "[serve] skipping unloadable job {id}: {e:#} (directory left on disk)"
+                ),
+            }
+        }
+        // ids are never reused, even across delete + restart: the
+        // high-water mark survives in its own file
+        if let Ok(text) = std::fs::read_to_string(state_dir.join("last_id")) {
+            if let Ok(n) = text.trim().parse::<u64>() {
+                next_id = next_id.max(n + 1);
+            }
+        }
+        Ok(Arc::new(Registry {
+            state_dir: state_dir.to_path_buf(),
+            inner: Mutex::new(RegInner { jobs, queue, next_id }),
+            work: Condvar::new(),
+        }))
+    }
+
+    /// Load one job directory: spec + terminal state (if any).
+    fn load_job(dir: &Path) -> Result<(JobSpec, JobState, Option<String>)> {
+        let spec_text = std::fs::read_to_string(dir.join("spec.json"))?;
+        let spec = JobSpec::from_json(
+            &json::parse(&spec_text).map_err(|e| anyhow::anyhow!("corrupt spec.json: {e}"))?,
+        )?;
+        let (state, error) = match std::fs::read_to_string(dir.join("state.json")) {
+            Ok(text) => {
+                let j = json::parse(&text)
+                    .map_err(|e| anyhow::anyhow!("corrupt state.json: {e}"))?;
+                let st = match j.get("state").and_then(|v| v.as_str()) {
+                    Some("done") => JobState::Done,
+                    Some("failed") => JobState::Failed,
+                    Some("cancelled") => JobState::Cancelled,
+                    other => bail!("unknown terminal state {other:?}"),
+                };
+                let err = j.get("error").and_then(|v| v.as_str()).map(str::to_string);
+                (st, err)
+            }
+            Err(_) => (JobState::Queued, None),
+        };
+        Ok((spec, state, error))
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, RegInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    pub fn job_dir(&self, id: &str) -> PathBuf {
+        self.state_dir.join("jobs").join(id)
+    }
+
+    /// Persist and enqueue a job; returns its id.  The spec hits disk
+    /// before the id is announced, so a submit the client saw succeed is
+    /// never lost to a crash.
+    ///
+    /// The registry lock is held only for the in-memory transitions (id
+    /// allocation + the final publish); the job-dir filesystem work runs
+    /// unlocked so a slow fsync never stalls the whole control plane.
+    /// The tiny `last_id` write stays under the lock: it is what makes
+    /// ids never-reused across delete + restart, so it must be ordered
+    /// with the allocation it records.
+    pub fn submit(&self, spec: JobSpec) -> Result<String> {
+        let id = {
+            let mut inner = self.lock();
+            let n = inner.next_id;
+            inner.next_id += 1;
+            write_atomic(&self.state_dir.join("last_id"), n.to_string().as_bytes())?;
+            format!("j{n:06}")
+        };
+        let dir = self.job_dir(&id);
+        std::fs::create_dir_all(&dir)?;
+        write_atomic(&dir.join("spec.json"), spec.to_json().to_string().as_bytes())?;
+        let bus = Arc::new(EventBus::new());
+        bus.emit(&Event::JobUpdate { state: "queued".into() });
+        {
+            let mut inner = self.lock();
+            inner.jobs.insert(
+                id.clone(),
+                JobEntry { spec, state: JobState::Queued, error: None, bus, best: None },
+            );
+            inner.queue.push_back(id.clone());
+        }
+        self.work.notify_all();
+        Ok(id)
+    }
+
+    /// Executor side: block until a job is available (or `stop` is set).
+    /// The popped job transitions to `Running` in memory only — see the
+    /// module docs for why `Running` is never persisted.
+    pub fn next_job(&self, stop: &AtomicBool) -> Option<(String, JobSpec)> {
+        let mut inner = self.lock();
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return None;
+            }
+            if let Some(id) = inner.queue.pop_front() {
+                // a queued job can have been cancelled since enqueue
+                let Some(entry) = inner.jobs.get_mut(&id) else { continue };
+                if entry.state != JobState::Queued {
+                    continue;
+                }
+                entry.state = JobState::Running;
+                entry
+                    .bus
+                    .emit(&Event::JobUpdate { state: "running".into() });
+                return Some((id.clone(), entry.spec.clone()));
+            }
+            let (guard, _) = self
+                .work
+                .wait_timeout(inner, Duration::from_millis(100))
+                .unwrap_or_else(|e| e.into_inner());
+            inner = guard;
+        }
+    }
+
+    /// Record a job's terminal state: `results.json` first (when it
+    /// succeeded), then `state.json` — both atomic, in that order, so a
+    /// `done` marker always implies readable results.
+    pub fn finish(&self, id: &str, outcome: Result<Json>) -> Result<()> {
+        let dir = self.job_dir(id);
+        let (state, error, best) = match &outcome {
+            Ok(results) => {
+                write_atomic(&dir.join("results.json"), results.to_string().as_bytes())?;
+                (JobState::Done, None, extract_best(results))
+            }
+            Err(e) => (JobState::Failed, Some(format!("{e:#}")), None),
+        };
+        let mut st = Json::from_pairs(vec![("state", jstr(state.as_str()))]);
+        if let Some(e) = &error {
+            st.set("error", jstr(e));
+        }
+        write_atomic(&dir.join("state.json"), st.to_string().as_bytes())?;
+        let mut inner = self.lock();
+        if let Some(entry) = inner.jobs.get_mut(id) {
+            entry.state = state;
+            entry.error = error;
+            entry.best = best;
+            entry
+                .bus
+                .emit(&Event::JobUpdate { state: state.as_str().to_string() });
+            entry.bus.close();
+        }
+        Ok(())
+    }
+
+    /// `DELETE /jobs/:id` semantics (documented in DESIGN.md §9).
+    pub fn cancel(&self, id: &str) -> Result<CancelOutcome> {
+        let mut inner = self.lock();
+        let Some(entry) = inner.jobs.get_mut(id) else {
+            return Ok(CancelOutcome::NotFound);
+        };
+        match entry.state {
+            JobState::Running => Ok(CancelOutcome::Running),
+            JobState::Queued => {
+                // the small state.json write stays under the lock: the
+                // cancelled marker must be ordered with the queue removal
+                // or a concurrent executor pop could start a job whose
+                // terminal state is already on disk
+                let st = Json::from_pairs(vec![("state", jstr("cancelled"))]);
+                write_atomic(&self.job_dir(id).join("state.json"), st.to_string().as_bytes())?;
+                entry.state = JobState::Cancelled;
+                entry
+                    .bus
+                    .emit(&Event::JobUpdate { state: "cancelled".into() });
+                entry.bus.close();
+                inner.queue.retain(|q| q != id);
+                Ok(CancelOutcome::Cancelled)
+            }
+            _ => {
+                // terminal jobs never transition again, so the (possibly
+                // large — checkpoints) directory removal can run unlocked
+                entry.bus.close();
+                inner.jobs.remove(id);
+                drop(inner);
+                std::fs::remove_dir_all(self.job_dir(id))
+                    .with_context(|| format!("removing job dir for {id}"))?;
+                Ok(CancelOutcome::Deleted)
+            }
+        }
+    }
+
+    fn view_locked(id: &str, e: &JobEntry) -> Json {
+        let mut j = Json::from_pairs(vec![
+            ("id", jstr(id)),
+            ("name", jstr(&e.spec.name)),
+            ("kind", jstr(e.spec.kind.as_str())),
+            ("state", jstr(e.state.as_str())),
+            ("spec", e.spec.to_json()),
+        ]);
+        if let Some(err) = &e.error {
+            j.set("error", jstr(err));
+        }
+        j
+    }
+
+    pub fn view(&self, id: &str) -> Option<Json> {
+        let inner = self.lock();
+        inner.jobs.get(id).map(|e| Self::view_locked(id, e))
+    }
+
+    pub fn list(&self) -> Json {
+        let inner = self.lock();
+        Json::from_pairs(vec![(
+            "jobs",
+            Json::Arr(
+                inner
+                    .jobs
+                    .iter()
+                    .map(|(id, e)| Self::view_locked(id, e))
+                    .collect(),
+            ),
+        )])
+    }
+
+    pub fn state(&self, id: &str) -> Option<JobState> {
+        self.lock().jobs.get(id).map(|e| e.state)
+    }
+
+    /// Jobs still owed work (queued or running) — what a restarted daemon
+    /// reports as "resumed".
+    pub fn pending(&self) -> usize {
+        self.lock()
+            .jobs
+            .values()
+            .filter(|e| !e.state.terminal())
+            .count()
+    }
+
+    pub fn bus(&self, id: &str) -> Option<Arc<EventBus>> {
+        self.lock().jobs.get(id).map(|e| e.bus.clone())
+    }
+
+    /// Raw `results.json` bytes for a `done` job (`None` = not done yet;
+    /// the API distinguishes unknown ids separately).
+    pub fn results_raw(&self, id: &str) -> Option<String> {
+        if self.state(id) != Some(JobState::Done) {
+            return None;
+        }
+        std::fs::read_to_string(self.job_dir(id).join("results.json")).ok()
+    }
+
+    /// The μTransfer question, answered from the registry: the best HPs
+    /// recorded by any completed proxy sweep, ranked by winning-trial
+    /// validation loss.  μP makes the answer width-independent — that is
+    /// the paper's whole point — so the requested target `width` is
+    /// echoed, not matched.  Served entirely from the in-memory cache
+    /// (populated at `finish` / startup), so polling `/hp` never touches
+    /// disk.
+    pub fn best_hp(&self, width: Option<usize>) -> Option<Json> {
+        let inner = self.lock();
+        let (id, entry, loss, assignment) = inner
+            .jobs
+            .iter()
+            .filter(|(_, e)| e.state == JobState::Done)
+            .filter_map(|(id, e)| {
+                e.best.as_ref().map(|(l, a)| (id, e, *l, a))
+            })
+            .min_by(|a, b| a.2.total_cmp(&b.2))?;
+        let mut j = Json::from_pairs(vec![
+            ("job", jstr(id)),
+            ("name", jstr(&entry.spec.name)),
+            ("proxy", jstr(&entry.spec.proxy)),
+            ("base_width", jnum(entry.spec.base_width as f64)),
+            ("proxy_steps", jnum(entry.spec.steps as f64)),
+            ("assignment", assignment.clone()),
+            ("proxy_val_loss", jnum(loss)),
+            (
+                "note",
+                jstr("muP: these HPs transfer zero-shot to any width with the same base shape"),
+            ),
+        ]);
+        if let Some(w) = width {
+            j.set("width", jnum(w as f64));
+        }
+        Some(j)
+    }
+}
+
+/// A SIGKILL landing inside the very *first* journal append leaves a file
+/// holding one newline-less JSON prefix and nothing else.
+/// `Sweep::with_journal` deliberately refuses to truncate files in which
+/// it recognized no records (it must never destroy a foreign file handed
+/// to `--resume-from`) — but this journal is daemon-owned, so the
+/// torn-first-append signature is safe to repair here: truncate to empty
+/// and let the sweep start from scratch.  A complete-but-newline-less
+/// record is left alone (`with_journal` completes the newline itself).
+fn repair_torn_first_append(path: &Path) {
+    let Ok(text) = std::fs::read_to_string(path) else { return };
+    if text.is_empty() || text.ends_with('\n') || text.trim().is_empty() {
+        return;
+    }
+    if !text.contains('\n') && json::parse(text.trim()).is_err() {
+        if let Ok(f) = std::fs::OpenOptions::new().write(true).open(path) {
+            let _ = f.set_len(0);
+            let _ = f.sync_all();
+        }
+    }
+}
+
+/// Execute one job through the existing sweep/transfer machinery, with
+/// the job's event bus as the sink.  Pure function of (spec, job dir):
+/// results are the canonical [`crate::transfer::TransferOutcome::to_json`].
+pub fn run_job(rt: &Runtime, dir: &Path, spec: &JobSpec, bus: Arc<dyn EventSink>) -> Result<Json> {
+    let journal = dir.join("journal");
+    repair_torn_first_append(&journal);
+    let mut sweep = Sweep::new(rt).with_journal(&journal)?;
+    if spec.workers > 0 {
+        sweep = sweep.with_workers(spec.workers);
+    }
+    if spec.ckpt_every > 0 || matches!(spec.tuner, TunerKind::Sha { .. }) {
+        sweep = sweep.with_checkpoints(&dir.join("ckpt"), spec.ckpt_every)?;
+    }
+    let mut sweep = sweep.with_sink(bus);
+    let setup = spec.setup();
+    let out = match spec.kind {
+        JobKind::Transfer => mu_transfer(rt, &mut sweep, &setup, JOB_LABEL)?,
+        JobKind::Sweep => tune_only(rt, &mut sweep, &setup, JOB_LABEL)?,
+    };
+    Ok(out.to_json())
+}
+
+/// A running daemon: registry + executor thread + HTTP acceptor.
+pub struct Daemon {
+    pub registry: Arc<Registry>,
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    executor: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Daemon {
+    /// Bind `addr` (port 0 = ephemeral; the bound address is in
+    /// [`Daemon::addr`]), open the registry under `state_dir`, re-queue
+    /// unfinished jobs, and start serving.
+    pub fn start(addr: &str, state_dir: &Path, artifacts: Option<PathBuf>) -> Result<Daemon> {
+        let registry = Registry::open(state_dir)?;
+        // fail fast on an unloadable artifacts path: degrading to the
+        // native backend must be a startup error, not a silent mid-queue
+        // substitution the operator never sees
+        if let Some(p) = &artifacts {
+            Runtime::new(p)
+                .with_context(|| format!("loading artifacts from {}", p.display()))?;
+        }
+        // SO_REUSEADDR bind: a restarted daemon must reclaim its address
+        // while its previous life's connections sit in TIME_WAIT
+        let listener = crate::serve::http::bind_reuse(addr)
+            .with_context(|| format!("binding {addr}"))?;
+        let bound = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+
+        let exec_reg = registry.clone();
+        let exec_stop = stop.clone();
+        let executor = std::thread::spawn(move || {
+            // the executor owns its Runtime: backends need not be Sync.
+            // Daemon::start already validated the artifacts path; if it
+            // became unloadable since, say so instead of degrading mutely.
+            let rt = match &artifacts {
+                Some(p) => Runtime::new(p).unwrap_or_else(|e| {
+                    eprintln!(
+                        "[serve] warning: artifacts became unavailable ({e:#}); using the native backend"
+                    );
+                    Runtime::native()
+                }),
+                None => Runtime::native(),
+            };
+            while let Some((id, spec)) = exec_reg.next_job(&exec_stop) {
+                eprintln!("[serve] job {id} ({}) started", spec.name);
+                let dir = exec_reg.job_dir(&id);
+                let bus: Arc<dyn EventSink> = match exec_reg.bus(&id) {
+                    Some(b) => b,
+                    None => Arc::new(crate::serve::events::NullSink),
+                };
+                let outcome = run_job(&rt, &dir, &spec, bus);
+                match &outcome {
+                    Ok(_) => eprintln!("[serve] job {id} done"),
+                    Err(e) => eprintln!("[serve] job {id} FAILED: {e:#}"),
+                }
+                if let Err(e) = exec_reg.finish(&id, outcome) {
+                    eprintln!("[serve] persisting terminal state for {id} failed: {e:#}");
+                }
+            }
+        });
+
+        let acc_reg = registry.clone();
+        let acc_stop = stop.clone();
+        let acceptor = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if acc_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                let reg = acc_reg.clone();
+                std::thread::spawn(move || handle_connection(stream, &reg));
+            }
+        });
+
+        Ok(Daemon {
+            registry,
+            addr: bound,
+            stop,
+            acceptor: Some(acceptor),
+            executor: Some(executor),
+        })
+    }
+
+    /// Block on the acceptor — the `mutransfer serve` foreground mode.
+    pub fn join(mut self) {
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Graceful stop for tests/benches: stops accepting, wakes the
+    /// executor, joins both threads.  Call once the queue is drained — a
+    /// mid-job executor finishes its current job first (jobs themselves
+    /// are never interrupted; that is what kill -9 + restart is for).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the blocking accept() so the acceptor observes `stop`
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.executor.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn handle_connection(stream: TcpStream, reg: &Arc<Registry>) {
+    stream.set_nodelay(true).ok();
+    // bound idle/half-open peers: a silent connection must release its
+    // thread + socket instead of pinning them forever (SSE streams never
+    // read after the request, so the write path is unaffected)
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .ok();
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut writer = stream;
+    loop {
+        match crate::serve::http::read_request(&mut reader) {
+            Ok(Some(req)) => {
+                if !crate::serve::api::handle(reg, &req, &mut writer) {
+                    return;
+                }
+            }
+            Ok(None) => return, // clean keep-alive close
+            Err(e) => {
+                // idle timeout: hang up silently — an unsolicited 400
+                // would be read by a keep-alive client as the (wrong)
+                // response to its NEXT request
+                let timed_out = e.chain().any(|c| {
+                    c.downcast_ref::<std::io::Error>()
+                        .map(|io| {
+                            matches!(
+                                io.kind(),
+                                std::io::ErrorKind::TimedOut | std::io::ErrorKind::WouldBlock
+                            )
+                        })
+                        .unwrap_or(false)
+                });
+                if !timed_out {
+                    // genuinely malformed request: best-effort 400
+                    let _ = crate::serve::http::respond_json(
+                        &mut writer,
+                        400,
+                        &crate::serve::http::error_json(400, "malformed request"),
+                        false,
+                    );
+                }
+                return;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("mutransfer_daemon_{tag}"));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn jobspec_json_roundtrip() {
+        let spec = JobSpec {
+            name: "quo\"te \u{1F600}\nnl".into(),
+            kind: JobKind::Sweep,
+            proxy: "tfm_post_w32_d2".into(),
+            target: "tfm_post_w64_d2".into(),
+            base_width: 32,
+            samples: 5,
+            steps: 16,
+            target_steps: 8,
+            seed: 3,
+            workers: 2,
+            tuner: TunerKind::Sha { eta: 3, rung0: 4 },
+            ckpt_every: 2,
+        };
+        let text = spec.to_json().to_string();
+        let back = JobSpec::from_json(&json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, spec, "names with quotes/newlines/emoji must survive");
+    }
+
+    #[test]
+    fn jobspec_validation() {
+        let bad = |s: &str| JobSpec::from_json(&json::parse(s).unwrap()).is_err();
+        assert!(bad(r#"{"kind":"evil"}"#));
+        assert!(bad(r#"{"tuner":"lbfgs"}"#));
+        assert!(bad(r#"{"steps":0}"#));
+        assert!(bad(r#"{"base_width":33}"#));
+        assert!(bad(r#"{"samples":-2}"#));
+        // sha params the offline path would reject are a 400, not a
+        // silently rewritten job
+        assert!(bad(r#"{"tuner":"sha","eta":1}"#));
+        assert!(bad(r#"{"tuner":"sha","steps":8,"rung0":9}"#));
+        // seeds: fractional numbers rejected, strings exact to u64::MAX
+        assert!(bad(r#"{"seed":1.5}"#));
+        assert!(bad(r#"{"seed":"zzz"}"#));
+        let big = JobSpec::from_json(
+            &json::parse(r#"{"seed":"18446744073709551615"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(big.seed, u64::MAX);
+        assert_eq!(
+            JobSpec::from_json(&big.to_json()).unwrap().seed,
+            u64::MAX,
+            "seed must round-trip exactly above 2^53"
+        );
+        // defaults fill everything else in
+        let ok = JobSpec::from_json(&json::parse("{}").unwrap()).unwrap();
+        assert_eq!(ok.kind, JobKind::Transfer);
+        assert_eq!(ok.tuner, TunerKind::Random);
+    }
+
+    #[test]
+    fn registry_queue_survives_reopen() {
+        let dir = tmpdir("reopen");
+        let spec = JobSpec { samples: 1, steps: 2, ..JobSpec::default() };
+        {
+            let reg = Registry::open(&dir).unwrap();
+            let a = reg.submit(spec.clone()).unwrap();
+            let b = reg.submit(spec.clone()).unwrap();
+            assert_eq!(a, "j000001");
+            assert_eq!(b, "j000002");
+            // j000001 reaches a terminal state; j000002 stays queued
+            reg.finish(&a, Ok(Json::from_pairs(vec![("x", jnum(1.0))]))).unwrap();
+        }
+        // "restart": only the unfinished job is re-queued, ids continue
+        let reg = Registry::open(&dir).unwrap();
+        assert_eq!(reg.state("j000001"), Some(JobState::Done));
+        assert_eq!(reg.state("j000002"), Some(JobState::Queued));
+        let stop = AtomicBool::new(false);
+        let (id, _) = reg.next_job(&stop).unwrap();
+        assert_eq!(id, "j000002");
+        let c = reg.submit(spec).unwrap();
+        assert_eq!(c, "j000003");
+    }
+
+    #[test]
+    fn cancel_semantics() {
+        let dir = tmpdir("cancel");
+        let reg = Registry::open(&dir).unwrap();
+        let spec = JobSpec::default();
+        let q = reg.submit(spec.clone()).unwrap();
+        assert_eq!(reg.cancel(&q).unwrap(), CancelOutcome::Cancelled);
+        assert_eq!(reg.state(&q), Some(JobState::Cancelled));
+        // cancelled queue entries are skipped by the executor
+        let q2 = reg.submit(spec.clone()).unwrap();
+        let stop = AtomicBool::new(false);
+        let (id, _) = reg.next_job(&stop).unwrap();
+        assert_eq!(id, q2);
+        assert_eq!(reg.cancel(&q2).unwrap(), CancelOutcome::Running);
+        reg.finish(&q2, Err(anyhow::anyhow!("boom"))).unwrap();
+        assert_eq!(reg.state(&q2), Some(JobState::Failed));
+        // terminal → delete removes the record and the directory
+        assert_eq!(reg.cancel(&q2).unwrap(), CancelOutcome::Deleted);
+        assert_eq!(reg.cancel(&q2).unwrap(), CancelOutcome::NotFound);
+        assert!(!reg.job_dir(&q2).exists());
+    }
+
+    #[test]
+    fn ids_never_reused_after_delete_and_restart() {
+        let dir = tmpdir("idreuse");
+        let spec = JobSpec::default();
+        {
+            let reg = Registry::open(&dir).unwrap();
+            let a = reg.submit(spec.clone()).unwrap(); // j000001
+            reg.finish(&a, Ok(Json::obj())).unwrap();
+            assert_eq!(reg.cancel(&a).unwrap(), CancelOutcome::Deleted);
+        }
+        // restart: the deleted id's directory is gone, but its id is
+        // burned — a stale client reference can never alias a new job
+        let reg = Registry::open(&dir).unwrap();
+        assert_eq!(reg.submit(spec).unwrap(), "j000002");
+    }
+
+    #[test]
+    fn corrupt_job_dir_is_skipped_not_fatal() {
+        let dir = tmpdir("corruptjob");
+        {
+            let reg = Registry::open(&dir).unwrap();
+            reg.submit(JobSpec::default()).unwrap(); // j000001
+        }
+        let bad = dir.join("jobs").join("j000900");
+        std::fs::create_dir_all(&bad).unwrap();
+        std::fs::write(bad.join("spec.json"), "{not json").unwrap();
+        // restart still succeeds: the healthy job loads, the corrupt one
+        // is skipped, and its id range is burned
+        let reg = Registry::open(&dir).unwrap();
+        assert_eq!(reg.state("j000001"), Some(JobState::Queued));
+        assert!(reg.state("j000900").is_none());
+        assert_eq!(reg.submit(JobSpec::default()).unwrap(), "j000901");
+    }
+
+    #[test]
+    fn torn_first_journal_append_is_repaired() {
+        let dir = tmpdir("torn1");
+        let p = dir.join("journal");
+        // kill mid-first-append: one newline-less JSON prefix
+        std::fs::write(&p, "{\"key\":\"cli/proxy/0\",\"trial\":{\"assi").unwrap();
+        repair_torn_first_append(&p);
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "");
+        // a complete single record without its newline is NOT wiped
+        // (with_journal completes the newline itself)
+        std::fs::write(&p, "{\"x\":1}").unwrap();
+        repair_torn_first_append(&p);
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\"x\":1}");
+        // multi-line files are with_journal's territory, untouched here
+        std::fs::write(&p, "{\"x\":1}\n{\"y\":2").unwrap();
+        repair_torn_first_append(&p);
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\"x\":1}\n{\"y\":2");
+    }
+
+    #[test]
+    fn best_hp_served_from_cache_and_survives_restart() {
+        let dir = tmpdir("besthp");
+        let id = {
+            let reg = Registry::open(&dir).unwrap();
+            let id = reg.submit(JobSpec::default()).unwrap();
+            let results =
+                json::parse(r#"{"best":{"lr":0.01},"best_val_loss":2.5}"#).unwrap();
+            reg.finish(&id, Ok(results)).unwrap();
+            let ans = reg.best_hp(Some(256)).unwrap();
+            assert_eq!(ans.req("job").as_str().unwrap(), id);
+            assert_eq!(ans.req("assignment").req("lr").as_f64().unwrap(), 0.01);
+            assert_eq!(ans.req("width").as_usize().unwrap(), 256);
+            id
+        };
+        // restart: the cache repopulates from results.json at open
+        let reg = Registry::open(&dir).unwrap();
+        assert_eq!(reg.best_hp(None).unwrap().req("job").as_str().unwrap(), id);
+        // a later sweep with a lower winning loss takes over
+        let id2 = reg.submit(JobSpec::default()).unwrap();
+        reg.finish(
+            &id2,
+            Ok(json::parse(r#"{"best":{"lr":0.02},"best_val_loss":1.5}"#).unwrap()),
+        )
+        .unwrap();
+        assert_eq!(reg.best_hp(None).unwrap().req("job").as_str().unwrap(), id2);
+        // an all-diverged sweep (best null) never wins
+        let id3 = reg.submit(JobSpec::default()).unwrap();
+        reg.finish(
+            &id3,
+            Ok(json::parse(r#"{"best":null,"best_val_loss":null}"#).unwrap()),
+        )
+        .unwrap();
+        assert_eq!(reg.best_hp(None).unwrap().req("job").as_str().unwrap(), id2);
+    }
+
+    #[test]
+    fn terminal_bus_replays_state_for_late_watchers() {
+        let dir = tmpdir("latebus");
+        let spec = JobSpec::default();
+        {
+            let reg = Registry::open(&dir).unwrap();
+            let id = reg.submit(spec).unwrap();
+            reg.finish(&id, Ok(Json::obj())).unwrap();
+        }
+        let reg = Registry::open(&dir).unwrap();
+        let bus = reg.bus("j000001").unwrap();
+        let rx = bus.subscribe(0);
+        let (_, ev) = rx.recv().unwrap();
+        assert_eq!(ev, Event::JobUpdate { state: "done".into() });
+        assert!(rx.recv().is_err(), "closed bus must disconnect after replay");
+    }
+}

@@ -1,0 +1,414 @@
+//! Typed in-process event bus (DESIGN.md §9).
+//!
+//! Every long-running layer of the harness — the training drive loop
+//! ([`crate::train`]), the sweep scheduler ([`crate::sweep::Sweep`]) and
+//! the successive-halving tuner ([`crate::tuner::sha`]) — emits progress
+//! through one [`EventSink`] instead of scattering `eprintln!` calls.
+//! The sink is a capability, not a policy:
+//!
+//! * offline CLI runs get a [`StderrSink`], which reproduces the exact
+//!   pre-bus stderr output (progress lines only when the sweep is
+//!   verbose, warnings always);
+//! * the `serve` daemon gives each job an [`EventBus`], which assigns a
+//!   monotonically increasing sequence number to every event, retains the
+//!   history for late subscribers, and fans live events out to SSE
+//!   streams (`GET /jobs/:id/events`).
+//!
+//! Events serialize through [`Event::to_json`] (a `"type"`-tagged object)
+//! — the wire format of the SSE `data:` frames — and parse back with
+//! [`Event::from_json`] on the `watch` client side.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Mutex;
+
+use crate::util::json::{jnum, jstr, Json};
+
+/// One progress event from the tuning stack.  `key` fields name the trial
+/// (the sweep job key) the event belongs to; daemon-level events
+/// ([`Event::JobUpdate`]) have no key.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    /// daemon job lifecycle transition (`queued`/`running`/`done`/
+    /// `failed`/`cancelled`); also the terminal event SSE watchers key on
+    JobUpdate { state: String },
+    /// a trial began executing (after journal skip / checkpoint lookup)
+    TrialStarted { key: String },
+    /// a validation eval completed at `step`
+    StepEval { key: String, step: usize, val_loss: f64 },
+    /// a durable snapshot was published (tmp-then-rename completed)
+    CheckpointWritten { key: String, step: usize, path: String },
+    /// a trial finished; `ordinal`/`total` are the progress counters the
+    /// CLI renders as `[k/n]`
+    TrialFinished {
+        key: String,
+        ordinal: usize,
+        total: usize,
+        train_loss: f64,
+        val_loss: f64,
+        diverged: bool,
+        wall_secs: f64,
+    },
+    /// successive halving promoted the top of a rung
+    RungPromoted { budget: usize, survivors: usize, promoted: usize },
+    /// one `Sweep::run` batch drained (SHA emits one per rung)
+    SweepDone { total: usize },
+    /// a recoverable anomaly (ignored checkpoint, fingerprint mismatch…);
+    /// `msg` is the full text the stderr sink prints after `warning: `
+    Warning { key: String, msg: String },
+}
+
+impl Event {
+    pub fn warning(key: &str, msg: impl Into<String>) -> Event {
+        Event::Warning { key: key.to_string(), msg: msg.into() }
+    }
+
+    /// The SSE wire form: a flat `"type"`-tagged JSON object.
+    pub fn to_json(&self) -> Json {
+        match self {
+            Event::JobUpdate { state } => Json::from_pairs(vec![
+                ("type", jstr("job_update")),
+                ("state", jstr(state)),
+            ]),
+            Event::TrialStarted { key } => Json::from_pairs(vec![
+                ("type", jstr("trial_started")),
+                ("key", jstr(key)),
+            ]),
+            Event::StepEval { key, step, val_loss } => Json::from_pairs(vec![
+                ("type", jstr("step_eval")),
+                ("key", jstr(key)),
+                ("step", jnum(*step as f64)),
+                ("val_loss", jnum(*val_loss)),
+            ]),
+            Event::CheckpointWritten { key, step, path } => Json::from_pairs(vec![
+                ("type", jstr("checkpoint")),
+                ("key", jstr(key)),
+                ("step", jnum(*step as f64)),
+                ("path", jstr(path)),
+            ]),
+            Event::TrialFinished {
+                key,
+                ordinal,
+                total,
+                train_loss,
+                val_loss,
+                diverged,
+                wall_secs,
+            } => Json::from_pairs(vec![
+                ("type", jstr("trial_finished")),
+                ("key", jstr(key)),
+                ("ordinal", jnum(*ordinal as f64)),
+                ("total", jnum(*total as f64)),
+                ("train_loss", jnum(*train_loss)),
+                ("val_loss", jnum(*val_loss)),
+                ("diverged", Json::Bool(*diverged)),
+                ("wall_secs", jnum(*wall_secs)),
+            ]),
+            Event::RungPromoted { budget, survivors, promoted } => Json::from_pairs(vec![
+                ("type", jstr("rung_promoted")),
+                ("budget", jnum(*budget as f64)),
+                ("survivors", jnum(*survivors as f64)),
+                ("promoted", jnum(*promoted as f64)),
+            ]),
+            Event::SweepDone { total } => Json::from_pairs(vec![
+                ("type", jstr("sweep_done")),
+                ("total", jnum(*total as f64)),
+            ]),
+            Event::Warning { key, msg } => Json::from_pairs(vec![
+                ("type", jstr("warning")),
+                ("key", jstr(key)),
+                ("msg", jstr(msg)),
+            ]),
+        }
+    }
+
+    /// Parse the wire form back (the `watch` client).  `None` for unknown
+    /// or malformed objects — forward compatibility, not an error.
+    pub fn from_json(j: &Json) -> Option<Event> {
+        let s = |k: &str| j.get(k).and_then(|v| v.as_str()).map(str::to_string);
+        let n = |k: &str| j.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+        let u = |k: &str| j.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+        match j.get("type")?.as_str()? {
+            "job_update" => Some(Event::JobUpdate { state: s("state")? }),
+            "trial_started" => Some(Event::TrialStarted { key: s("key")? }),
+            "step_eval" => Some(Event::StepEval {
+                key: s("key")?,
+                step: u("step"),
+                val_loss: n("val_loss"),
+            }),
+            "checkpoint" => Some(Event::CheckpointWritten {
+                key: s("key")?,
+                step: u("step"),
+                path: s("path").unwrap_or_default(),
+            }),
+            "trial_finished" => Some(Event::TrialFinished {
+                key: s("key")?,
+                ordinal: u("ordinal"),
+                total: u("total"),
+                train_loss: n("train_loss"),
+                val_loss: n("val_loss"),
+                diverged: j.get("diverged").and_then(|v| v.as_bool()).unwrap_or(false),
+                wall_secs: n("wall_secs"),
+            }),
+            "rung_promoted" => Some(Event::RungPromoted {
+                budget: u("budget"),
+                survivors: u("survivors"),
+                promoted: u("promoted"),
+            }),
+            "sweep_done" => Some(Event::SweepDone { total: u("total") }),
+            "warning" => Some(Event::Warning {
+                key: s("key").unwrap_or_default(),
+                msg: s("msg")?,
+            }),
+            _ => None,
+        }
+    }
+}
+
+/// Where progress events go.  Implementations must be cheap and
+/// non-blocking — emit sites sit on the train/sweep hot paths — and
+/// thread-safe, because sweep workers emit concurrently.
+pub trait EventSink: Send + Sync {
+    fn emit(&self, ev: &Event);
+}
+
+/// The offline default: byte-for-byte the stderr output the CLI printed
+/// before the bus existed.  Warnings always print; `[k/n]` trial progress
+/// lines only when constructed with `progress` (the old `Sweep::verbose`).
+pub struct StderrSink {
+    progress: bool,
+}
+
+impl StderrSink {
+    pub fn new(progress: bool) -> StderrSink {
+        StderrSink { progress }
+    }
+
+    /// Warnings only — what the bare train driver used to print.
+    pub fn quiet() -> StderrSink {
+        StderrSink { progress: false }
+    }
+}
+
+impl EventSink for StderrSink {
+    fn emit(&self, ev: &Event) {
+        match ev {
+            Event::Warning { msg, .. } => eprintln!("warning: {msg}"),
+            Event::TrialFinished {
+                key,
+                ordinal,
+                total,
+                train_loss,
+                val_loss,
+                diverged,
+                wall_secs,
+            } if self.progress => eprintln!(
+                "[{ordinal}/{total}] {key} -> train {train_loss:.4} val {val_loss:.4}{} ({wall_secs:.1}s)",
+                if *diverged { " DIVERGED" } else { "" },
+            ),
+            _ => {}
+        }
+    }
+}
+
+/// Swallow everything (benches that only want the numbers).
+pub struct NullSink;
+
+impl EventSink for NullSink {
+    fn emit(&self, _: &Event) {}
+}
+
+/// Capture events in memory — unit tests and the bench harness.
+#[derive(Default)]
+pub struct CollectSink {
+    pub events: Mutex<Vec<Event>>,
+}
+
+impl CollectSink {
+    pub fn take(&self) -> Vec<Event> {
+        std::mem::take(&mut self.events.lock().unwrap_or_else(|e| e.into_inner()))
+    }
+}
+
+impl EventSink for CollectSink {
+    fn emit(&self, ev: &Event) {
+        self.events
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push(ev.clone());
+    }
+}
+
+/// History cap: a bus never retains more than this many events (a 1k-trial
+/// sweep with per-step evals stays far below it; the cap only guards
+/// against pathological emitters).  Late subscribers replay from whatever
+/// is retained.
+const HISTORY_CAP: usize = 65_536;
+
+struct BusState {
+    seq: u64,
+    history: std::collections::VecDeque<(u64, Event)>,
+    subs: Vec<Sender<(u64, Event)>>,
+    closed: bool,
+}
+
+/// Fan-out bus for one daemon job: every emitted event gets the next
+/// sequence number (starting at 1), is retained for replay, and is pushed
+/// to every live subscriber.  [`EventBus::close`] drops the subscriber
+/// channels, which is how SSE streams learn the job is over.
+pub struct EventBus {
+    inner: Mutex<BusState>,
+}
+
+impl Default for EventBus {
+    fn default() -> EventBus {
+        EventBus::new()
+    }
+}
+
+impl EventBus {
+    pub fn new() -> EventBus {
+        EventBus {
+            inner: Mutex::new(BusState {
+                seq: 0,
+                history: Default::default(),
+                subs: Vec::new(),
+                closed: false,
+            }),
+        }
+    }
+
+    /// Subscribe from just after `after` (0 = full history): retained
+    /// events with `seq > after` are pre-loaded into the channel, then
+    /// live events follow.  If the bus is already closed the receiver
+    /// yields the replay and then disconnects immediately.
+    pub fn subscribe(&self, after: u64) -> Receiver<(u64, Event)> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut b = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        for (seq, ev) in b.history.iter() {
+            if *seq > after {
+                let _ = tx.send((*seq, ev.clone()));
+            }
+        }
+        if !b.closed {
+            b.subs.push(tx);
+        }
+        rx
+    }
+
+    /// Sequence number of the latest event (0 = none yet).
+    pub fn seq(&self) -> u64 {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).seq
+    }
+
+    /// Stop accepting events and disconnect every subscriber.  History is
+    /// retained for late `subscribe` calls.
+    pub fn close(&self) {
+        let mut b = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        b.closed = true;
+        b.subs.clear();
+    }
+}
+
+impl EventSink for EventBus {
+    fn emit(&self, ev: &Event) {
+        let mut b = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if b.closed {
+            return;
+        }
+        b.seq += 1;
+        let seq = b.seq;
+        b.history.push_back((seq, ev.clone()));
+        if b.history.len() > HISTORY_CAP {
+            b.history.pop_front();
+        }
+        // dead subscribers (disconnected SSE clients) drop out here
+        b.subs.retain(|s| s.send((seq, ev.clone())).is_ok());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(k: &str) -> Event {
+        Event::TrialStarted { key: k.to_string() }
+    }
+
+    #[test]
+    fn event_json_roundtrip() {
+        let cases = vec![
+            Event::JobUpdate { state: "running".into() },
+            ev("a/b@r4"),
+            Event::StepEval { key: "k".into(), step: 10, val_loss: 2.5 },
+            Event::CheckpointWritten { key: "k".into(), step: 5, path: "/tmp/x.ckpt".into() },
+            Event::TrialFinished {
+                key: "k".into(),
+                ordinal: 3,
+                total: 8,
+                train_loss: 2.1,
+                val_loss: 2.3,
+                diverged: false,
+                wall_secs: 0.5,
+            },
+            Event::RungPromoted { budget: 20, survivors: 8, promoted: 4 },
+            Event::SweepDone { total: 12 },
+            Event::warning("k", "ignoring checkpoint /x: bad magic"),
+        ];
+        for c in cases {
+            let j = crate::util::json::parse(&c.to_json().to_string()).unwrap();
+            assert_eq!(Event::from_json(&j).unwrap(), c, "case {c:?}");
+        }
+    }
+
+    #[test]
+    fn from_json_tolerates_unknown_types() {
+        let j = crate::util::json::parse(r#"{"type":"from_the_future","x":1}"#).unwrap();
+        assert!(Event::from_json(&j).is_none());
+    }
+
+    #[test]
+    fn bus_assigns_sequence_and_replays() {
+        let bus = EventBus::new();
+        bus.emit(&ev("a"));
+        bus.emit(&ev("b"));
+        // full replay
+        let rx = bus.subscribe(0);
+        assert_eq!(rx.try_recv().unwrap(), (1, ev("a")));
+        assert_eq!(rx.try_recv().unwrap(), (2, ev("b")));
+        // live delivery
+        bus.emit(&ev("c"));
+        assert_eq!(rx.try_recv().unwrap(), (3, ev("c")));
+        // resume-from-seq replay skips what the client already saw
+        let rx2 = bus.subscribe(2);
+        assert_eq!(rx2.try_recv().unwrap(), (3, ev("c")));
+        assert!(rx2.try_recv().is_err());
+    }
+
+    #[test]
+    fn closed_bus_disconnects_subscribers_and_drops_emits() {
+        let bus = EventBus::new();
+        bus.emit(&ev("a"));
+        let rx = bus.subscribe(0);
+        bus.close();
+        bus.emit(&ev("b")); // dropped
+        assert_eq!(rx.recv().unwrap(), (1, ev("a")));
+        // channel is disconnected after the replay: recv errors, no hang
+        assert!(rx.recv().is_err());
+        assert_eq!(bus.seq(), 1);
+        // late subscriber still gets the retained history, then EOF
+        let rx2 = bus.subscribe(0);
+        assert_eq!(rx2.recv().unwrap(), (1, ev("a")));
+        assert!(rx2.recv().is_err());
+    }
+
+    #[test]
+    fn collect_sink_captures() {
+        let s = CollectSink::default();
+        s.emit(&ev("x"));
+        s.emit(&Event::SweepDone { total: 1 });
+        let got = s.take();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0], ev("x"));
+        assert!(s.take().is_empty());
+    }
+}

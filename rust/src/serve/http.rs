@@ -1,0 +1,609 @@
+//! Minimal HTTP/1.1 transport over `std::net` (DESIGN.md §9) — the
+//! vendored crate set has no hyper/tokio, and the serve daemon needs only
+//! a small, predictable subset:
+//!
+//! * server side: request parsing ([`read_request`]) with keep-alive, and
+//!   response writers ([`respond`], [`respond_json`], [`sse_headers`] +
+//!   [`sse_event`] for `text/event-stream`);
+//! * client side: a keep-alive [`Client`] (the throughput bench hammers
+//!   one connection per thread), a one-shot [`rpc`] helper for the CLI
+//!   subcommands, and an [`sse`] reader for `watch`.
+//!
+//! Hard limits (8 KiB request line/header line, 64 headers, 1 MiB body)
+//! turn malformed or hostile input into a clean 400/413 instead of
+//! unbounded buffering.  Anything that fails mid-stream just drops the
+//! connection — every durable state transition in the daemon is
+//! idempotent, so a retried request is always safe.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Bind a listener with `SO_REUSEADDR`, which `std::net::TcpListener::bind`
+/// does not set: a daemon restarted on the same `--addr` must be able to
+/// re-bind while connections from its previous life sit in TIME_WAIT (the
+/// kill‑9-and-restart recovery story, exercised by CI).  On Linux this
+/// builds the socket through raw libc calls (no new crates); elsewhere it
+/// falls back to plain bind with a bounded AddrInUse retry.
+pub fn bind_reuse(addr: &str) -> Result<TcpListener> {
+    let sa = addr
+        .to_socket_addrs()
+        .with_context(|| format!("resolving {addr}"))?
+        .next()
+        .with_context(|| format!("no address behind {addr}"))?;
+    bind_reuse_sa(sa)
+}
+
+#[cfg(target_os = "linux")]
+fn bind_reuse_sa(sa: std::net::SocketAddr) -> Result<TcpListener> {
+    use std::os::fd::FromRawFd;
+    use std::os::raw::{c_int, c_void};
+    extern "C" {
+        fn socket(domain: c_int, ty: c_int, protocol: c_int) -> c_int;
+        fn setsockopt(
+            fd: c_int,
+            level: c_int,
+            name: c_int,
+            value: *const c_void,
+            len: u32,
+        ) -> c_int;
+        fn bind(fd: c_int, addr: *const c_void, len: u32) -> c_int;
+        fn listen(fd: c_int, backlog: c_int) -> c_int;
+        fn close(fd: c_int) -> c_int;
+    }
+    const AF_INET: c_int = 2;
+    const AF_INET6: c_int = 10;
+    const SOCK_STREAM: c_int = 1;
+    const SOCK_CLOEXEC: c_int = 0x80000;
+    const SOL_SOCKET: c_int = 1;
+    const SO_REUSEADDR: c_int = 2;
+    // `sockaddr_in` / `sockaddr_in6`, Linux layout; port in network order.
+    #[repr(C)]
+    struct SockaddrIn {
+        family: u16,
+        port: u16,
+        addr: u32,
+        zero: [u8; 8],
+    }
+    #[repr(C)]
+    struct SockaddrIn6 {
+        family: u16,
+        port: u16,
+        flowinfo: u32,
+        addr: [u8; 16],
+        scope: u32,
+    }
+    let os_err = || anyhow::Error::from(std::io::Error::last_os_error());
+    unsafe {
+        let domain = match sa {
+            std::net::SocketAddr::V4(_) => AF_INET,
+            std::net::SocketAddr::V6(_) => AF_INET6,
+        };
+        let fd = socket(domain, SOCK_STREAM | SOCK_CLOEXEC, 0);
+        if fd < 0 {
+            return Err(os_err()).context("socket()");
+        }
+        let one: c_int = 1;
+        if setsockopt(
+            fd,
+            SOL_SOCKET,
+            SO_REUSEADDR,
+            &one as *const c_int as *const c_void,
+            std::mem::size_of::<c_int>() as u32,
+        ) != 0
+        {
+            let e = os_err();
+            close(fd);
+            return Err(e).context("setsockopt(SO_REUSEADDR)");
+        }
+        let rc = match sa {
+            std::net::SocketAddr::V4(v4) => {
+                let s = SockaddrIn {
+                    family: AF_INET as u16,
+                    port: v4.port().to_be(),
+                    // octets are already network order; keep the bytes as-is
+                    addr: u32::from_ne_bytes(v4.ip().octets()),
+                    zero: [0; 8],
+                };
+                bind(
+                    fd,
+                    &s as *const SockaddrIn as *const c_void,
+                    std::mem::size_of::<SockaddrIn>() as u32,
+                )
+            }
+            std::net::SocketAddr::V6(v6) => {
+                let s = SockaddrIn6 {
+                    family: AF_INET6 as u16,
+                    port: v6.port().to_be(),
+                    flowinfo: v6.flowinfo(),
+                    addr: v6.ip().octets(),
+                    scope: v6.scope_id(),
+                };
+                bind(
+                    fd,
+                    &s as *const SockaddrIn6 as *const c_void,
+                    std::mem::size_of::<SockaddrIn6>() as u32,
+                )
+            }
+        };
+        if rc != 0 {
+            let e = os_err();
+            close(fd);
+            return Err(e).with_context(|| format!("bind({sa})"));
+        }
+        if listen(fd, 128) != 0 {
+            let e = os_err();
+            close(fd);
+            return Err(e).context("listen()");
+        }
+        Ok(TcpListener::from_raw_fd(fd))
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+fn bind_reuse_sa(sa: std::net::SocketAddr) -> Result<TcpListener> {
+    // no raw-socket path off Linux: plain bind, retrying AddrInUse briefly
+    // (covers quick restarts; TIME_WAIT-heavy restarts may still wait)
+    for _ in 0..25 {
+        match TcpListener::bind(sa) {
+            Ok(l) => return Ok(l),
+            Err(e) if e.kind() == std::io::ErrorKind::AddrInUse => {
+                std::thread::sleep(Duration::from_millis(200));
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(TcpListener::bind(sa)?)
+}
+
+pub const MAX_LINE: usize = 8 * 1024;
+pub const MAX_HEADERS: usize = 64;
+pub const MAX_BODY: usize = 1024 * 1024;
+
+/// One parsed request.  Header names are lower-cased; the query string is
+/// split on `&`/`=` without percent-decoding (the API's query values are
+/// plain integers).
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    pub query: BTreeMap<String, String>,
+    pub headers: BTreeMap<String, String>,
+    pub body: String,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers.get(name).map(|s| s.as_str())
+    }
+
+    /// HTTP/1.1 defaults to keep-alive unless the client says otherwise.
+    pub fn keep_alive(&self) -> bool {
+        !self
+            .header("connection")
+            .map(|v| v.eq_ignore_ascii_case("close"))
+            .unwrap_or(false)
+    }
+}
+
+fn read_limited_line(r: &mut impl BufRead) -> Result<Option<String>> {
+    let mut buf = Vec::new();
+    let mut byte = [0u8; 1];
+    loop {
+        match r.read(&mut byte)? {
+            0 => {
+                if buf.is_empty() {
+                    return Ok(None); // clean EOF between requests
+                }
+                bail!("connection closed mid-line");
+            }
+            _ => {
+                if byte[0] == b'\n' {
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                    return Ok(Some(String::from_utf8(buf).context("non-utf8 header line")?));
+                }
+                buf.push(byte[0]);
+                if buf.len() > MAX_LINE {
+                    bail!("header line exceeds {MAX_LINE} bytes");
+                }
+            }
+        }
+    }
+}
+
+/// Parse one request off the wire.  `Ok(None)` = the peer closed the
+/// connection cleanly between requests (normal keep-alive shutdown).
+pub fn read_request(r: &mut BufReader<TcpStream>) -> Result<Option<Request>> {
+    let line = match read_limited_line(r)? {
+        None => return Ok(None),
+        Some(l) if l.is_empty() => match read_limited_line(r)? {
+            // tolerate one stray blank line between pipelined requests
+            None => return Ok(None),
+            Some(l2) => l2,
+        },
+        Some(l) => l,
+    };
+    let mut parts = line.split_whitespace();
+    let method = parts.next().context("empty request line")?.to_string();
+    let target = parts.next().context("request line has no target")?;
+    let version = parts.next().context("request line has no version")?;
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol {version}");
+    }
+    let (path, query_str) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q),
+        None => (target.to_string(), ""),
+    };
+    let mut query = BTreeMap::new();
+    for pair in query_str.split('&').filter(|s| !s.is_empty()) {
+        let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+        query.insert(k.to_string(), v.to_string());
+    }
+    let mut headers = BTreeMap::new();
+    loop {
+        let line = read_limited_line(r)?.context("connection closed inside headers")?;
+        if line.is_empty() {
+            break;
+        }
+        if headers.len() >= MAX_HEADERS {
+            bail!("more than {MAX_HEADERS} headers");
+        }
+        let (k, v) = line.split_once(':').context("malformed header")?;
+        headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+    }
+    let len: usize = headers
+        .get("content-length")
+        .map(|v| v.parse().context("bad content-length"))
+        .transpose()?
+        .unwrap_or(0);
+    if len > MAX_BODY {
+        bail!("body of {len} bytes exceeds {MAX_BODY}");
+    }
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body).context("short body")?;
+    Ok(Some(Request {
+        method,
+        path,
+        query,
+        headers,
+        body: String::from_utf8(body).context("non-utf8 body")?,
+    }))
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        201 => "Created",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        413 => "Payload Too Large",
+        500 => "Internal Server Error",
+        _ => "Unknown",
+    }
+}
+
+/// Write a complete response.  `keep_alive` controls the `Connection`
+/// header; the caller loops on the same stream when it is true.
+pub fn respond(
+    w: &mut impl Write,
+    status: u16,
+    ctype: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        reason(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    )?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+pub fn respond_json(
+    w: &mut impl Write,
+    status: u16,
+    j: &Json,
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    respond(w, status, "application/json", j.to_string().as_bytes(), keep_alive)
+}
+
+pub fn error_json(status: u16, msg: &str) -> Json {
+    Json::from_pairs(vec![("error", crate::util::json::jstr(msg))])
+}
+
+/// Start a Server-Sent-Events response.  No `Content-Length`: the stream
+/// ends when the server closes the connection, so SSE responses always
+/// carry `Connection: close`.
+pub fn sse_headers(w: &mut impl Write) -> std::io::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
+    )?;
+    w.flush()
+}
+
+/// One SSE frame: `id: <seq>` + single-line JSON `data:` payload + blank
+/// line (the framing documented in DESIGN.md §9; our JSON writer never
+/// emits raw newlines, so one `data:` line always suffices).
+pub fn sse_event(w: &mut impl Write, seq: u64, data: &Json) -> std::io::Result<()> {
+    write!(w, "id: {seq}\ndata: {}\n\n", data.to_string())?;
+    w.flush()
+}
+
+/// SSE comment frame — a keep-alive ping that also detects dead clients.
+pub fn sse_ping(w: &mut impl Write) -> std::io::Result<()> {
+    w.write_all(b": ping\n\n")?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------------
+
+/// A keep-alive HTTP/1.1 client over one connection.
+pub struct Client {
+    r: BufReader<TcpStream>,
+    w: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to {addr} (is the daemon running?)"))?;
+        stream.set_nodelay(true).ok();
+        let r = BufReader::new(stream.try_clone().context("cloning stream")?);
+        Ok(Client { r, w: stream })
+    }
+
+    /// Issue one request and read the full response body.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> Result<(u16, String)> {
+        let body = body.unwrap_or("");
+        write!(
+            self.w,
+            "{method} {path} HTTP/1.1\r\nHost: mutransfer\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+            body.len(),
+        )?;
+        self.w.flush()?;
+        let status_line = read_limited_line(&mut self.r)?.context("server closed connection")?;
+        let status: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("bad status line {status_line:?}"))?;
+        let mut len = 0usize;
+        let mut close = false;
+        loop {
+            let line = read_limited_line(&mut self.r)?.context("connection closed in headers")?;
+            if line.is_empty() {
+                break;
+            }
+            let (k, v) = line.split_once(':').context("malformed response header")?;
+            let k = k.trim().to_ascii_lowercase();
+            let v = v.trim();
+            if k == "content-length" {
+                len = v.parse().context("bad content-length")?;
+            } else if k == "connection" && v.eq_ignore_ascii_case("close") {
+                close = true;
+            }
+        }
+        let mut buf = vec![0u8; len];
+        self.r.read_exact(&mut buf).context("short response body")?;
+        if close {
+            // server will drop the socket; force the next request onto a
+            // fresh connection by poisoning this one
+            self.w.shutdown(std::net::Shutdown::Both).ok();
+        }
+        Ok((status, String::from_utf8(buf).context("non-utf8 response")?))
+    }
+}
+
+/// One-shot request on a fresh connection (the CLI subcommands).
+pub fn rpc(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(u16, String)> {
+    Client::connect(addr)?.request(method, path, body)
+}
+
+/// Consume a Server-Sent-Events stream: `on_event(seq, data_json_text)`
+/// per frame, until it returns `false` or the server ends the stream.
+pub fn sse(
+    addr: &str,
+    path: &str,
+    mut on_event: impl FnMut(u64, &str) -> bool,
+) -> Result<()> {
+    let stream = TcpStream::connect(addr)
+        .with_context(|| format!("connecting to {addr} (is the daemon running?)"))?;
+    stream.set_nodelay(true).ok();
+    // generous idle timeout: the server pings every ~500ms, so hitting
+    // this means the daemon really died mid-stream
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .ok();
+    let mut w = stream.try_clone().context("cloning stream")?;
+    write!(
+        w,
+        "GET {path} HTTP/1.1\r\nHost: mutransfer\r\nAccept: text/event-stream\r\nConnection: close\r\n\r\n"
+    )?;
+    w.flush()?;
+    let mut r = BufReader::new(stream);
+    // status + headers
+    let status_line = read_limited_line(&mut r)?.context("server closed connection")?;
+    if !status_line.contains(" 200 ") {
+        bail!("SSE request failed: {status_line}");
+    }
+    while let Some(line) = read_limited_line(&mut r)? {
+        if line.is_empty() {
+            break;
+        }
+    }
+    // frames
+    let mut seq = 0u64;
+    let mut data: Option<String> = None;
+    loop {
+        let line = match read_limited_line(&mut r) {
+            Ok(Some(l)) => l,
+            Ok(None) => return Ok(()), // server ended the stream
+            Err(e) => {
+                // mid-frame EOF after the job finished is a normal close
+                if data.is_none() {
+                    return Ok(());
+                }
+                return Err(e).context("SSE stream died mid-frame");
+            }
+        };
+        if let Some(rest) = line.strip_prefix("id:") {
+            seq = rest.trim().parse().unwrap_or(seq);
+        } else if let Some(rest) = line.strip_prefix("data:") {
+            data = Some(rest.trim().to_string());
+        } else if line.is_empty() {
+            if let Some(d) = data.take() {
+                if !on_event(seq, &d) {
+                    return Ok(());
+                }
+            }
+        }
+        // comment lines (": ping") fall through untouched
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    /// Spin up a tiny echo server for transport-level tests.
+    fn echo_server() -> std::net::SocketAddr {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { break };
+                std::thread::spawn(move || {
+                    let mut r = BufReader::new(stream.try_clone().unwrap());
+                    let mut w = stream;
+                    while let Ok(Some(req)) = read_request(&mut r) {
+                        let keep = req.keep_alive();
+                        let echo = Json::from_pairs(vec![
+                            ("method", crate::util::json::jstr(&req.method)),
+                            ("path", crate::util::json::jstr(&req.path)),
+                            ("body", crate::util::json::jstr(&req.body)),
+                            (
+                                "q",
+                                crate::util::json::jstr(
+                                    req.query.get("x").map(|s| s.as_str()).unwrap_or(""),
+                                ),
+                            ),
+                        ]);
+                        if respond_json(&mut w, 200, &echo, keep).is_err() || !keep {
+                            break;
+                        }
+                    }
+                });
+            }
+        });
+        addr
+    }
+
+    #[test]
+    fn bind_reuse_binds_accepts_and_rebinds() {
+        let l = bind_reuse("127.0.0.1:0").unwrap();
+        let addr = l.local_addr().unwrap();
+        let t = std::thread::spawn(move || {
+            let (mut s, _) = l.accept().unwrap();
+            let _ = s.write_all(b"x");
+            // server-side active close -> this endpoint enters TIME_WAIT
+            drop(s);
+            drop(l);
+        });
+        let mut c = TcpStream::connect(addr).unwrap();
+        let mut b = [0u8; 1];
+        c.read_exact(&mut b).unwrap();
+        t.join().unwrap();
+        drop(c);
+        // the daemon-restart story: rebinding the same port right after
+        // the old listener died (connections possibly in TIME_WAIT) works
+        let l2 = bind_reuse(&addr.to_string()).unwrap();
+        assert_eq!(l2.local_addr().unwrap().port(), addr.port());
+    }
+
+    #[test]
+    fn keep_alive_round_trips() {
+        let addr = echo_server().to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        for i in 0..3 {
+            let (st, body) = c
+                .request("POST", &format!("/jobs?x={i}"), Some("{\"a\":1}"))
+                .unwrap();
+            assert_eq!(st, 200);
+            let j = crate::util::json::parse(&body).unwrap();
+            assert_eq!(j.req("method").as_str().unwrap(), "POST");
+            assert_eq!(j.req("path").as_str().unwrap(), "/jobs");
+            assert_eq!(j.req("q").as_str().unwrap(), format!("{i}"));
+            assert_eq!(j.req("body").as_str().unwrap(), "{\"a\":1}");
+        }
+    }
+
+    #[test]
+    fn rpc_one_shot() {
+        let addr = echo_server().to_string();
+        let (st, body) = rpc(&addr, "GET", "/healthz", None).unwrap();
+        assert_eq!(st, 200);
+        assert!(body.contains("healthz"));
+    }
+
+    #[test]
+    fn oversized_header_line_is_an_error() {
+        let addr = echo_server();
+        let mut s = TcpStream::connect(addr).unwrap();
+        let long = "x".repeat(MAX_LINE + 10);
+        // server drops the connection instead of buffering forever
+        let _ = write!(s, "GET /{long} HTTP/1.1\r\n\r\n");
+        let mut buf = Vec::new();
+        let _ = s.read_to_end(&mut buf);
+        assert!(buf.is_empty(), "server must hang up on oversized lines");
+    }
+
+    #[test]
+    fn sse_frames_parse() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut r = BufReader::new(stream.try_clone().unwrap());
+            let mut w = stream;
+            let _ = read_request(&mut r).unwrap();
+            sse_headers(&mut w).unwrap();
+            sse_ping(&mut w).unwrap();
+            for i in 1..=3u64 {
+                sse_event(&mut w, i, &Json::from_pairs(vec![("n", crate::util::json::jnum(i as f64))]))
+                    .unwrap();
+            }
+            // connection drops here -> client sees end of stream
+        });
+        let mut got = Vec::new();
+        sse(&addr, "/jobs/x/events", |seq, data| {
+            got.push((seq, data.to_string()));
+            true
+        })
+        .unwrap();
+        assert_eq!(got.len(), 3);
+        assert_eq!(got[0].0, 1);
+        assert!(got[2].1.contains("\"n\":3"));
+    }
+}

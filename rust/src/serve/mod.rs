@@ -1,0 +1,30 @@
+//! Tuning-as-a-service (DESIGN.md §9): μTransfer's premise is that HP
+//! tuning is *amortizable* — tune once on a small proxy, serve the result
+//! to every large run.  This subsystem makes that a service instead of a
+//! foreground process, in pure `std` (zero new dependencies):
+//!
+//! * [`events`] — the typed in-process event bus every long-running layer
+//!   (train drive loop, sweep scheduler, SHA tuner) emits progress into;
+//!   the offline CLI's stderr output is just the default sink.
+//! * [`daemon`] — a durable job registry + FIFO queue executing
+//!   sweep/transfer/SHA jobs on the existing sweep machinery.  Job specs
+//!   and terminal states persist under `--state-dir`; journals and
+//!   checkpoints (PR-4) make a SIGKILLed daemon resume its queue on
+//!   restart without re-running completed trials.
+//! * [`http`] + [`api`] — a minimal HTTP/1.1 server over
+//!   `std::net::TcpListener`: JSON endpoints for submit/list/inspect/
+//!   results/cancel, an SSE stream per job fed by the bus, and
+//!   `GET /hp?width=…`, which answers the μTransfer question directly —
+//!   the best transferred HPs recorded by any completed proxy sweep.
+//!
+//! CLI surface: `mutransfer serve --addr --state-dir` plus the client
+//! subcommands `submit` / `status` / `results` / `watch` / `hp`, all
+//! speaking the same HTTP code.
+
+pub mod api;
+pub mod daemon;
+pub mod events;
+pub mod http;
+
+pub use daemon::{Daemon, JobKind, JobSpec, JobState, Registry};
+pub use events::{Event, EventBus, EventSink, StderrSink};

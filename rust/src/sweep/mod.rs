@@ -37,7 +37,8 @@ use anyhow::{bail, Context, Result};
 use crate::data::source_for;
 use crate::init::rng::fold64;
 use crate::runtime::Runtime;
-use crate::train::{prepare, run_ckpt, CkptConfig, PreparedRun, RunSpec};
+use crate::serve::events::{Event, EventSink, StderrSink};
+use crate::train::{prepare, run_ckpt_with, CkptConfig, PreparedRun, RunSpec};
 use crate::tuner::{Assignment, Trial};
 use crate::util::json::{self, jnum, Json};
 use crate::util::pool;
@@ -190,6 +191,9 @@ pub struct Sweep<'rt> {
     /// ckpt-id → snapshot path, loaded from the journal's `ckpt` records
     /// on resume (deterministically re-derived when absent)
     ckpt_records: std::collections::BTreeMap<String, PathBuf>,
+    /// where progress events go; `None` = a stderr sink whose progress
+    /// lines follow [`Sweep::verbose`] (the pre-bus CLI output)
+    sink: Option<Arc<dyn EventSink>>,
 }
 
 impl<'rt> Sweep<'rt> {
@@ -207,7 +211,26 @@ impl<'rt> Sweep<'rt> {
             ckpt_dir: None,
             ckpt_every: 0,
             ckpt_records: Default::default(),
+            sink: None,
         }
+    }
+
+    /// Route every progress/warning event this sweep (and the trials it
+    /// drives) produces into `sink` — the serve daemon passes each job's
+    /// [`crate::serve::events::EventBus`] here.  Without a sink the
+    /// default stderr sink reproduces the pre-bus CLI output exactly.
+    pub fn with_sink(mut self, sink: Arc<dyn EventSink>) -> Sweep<'rt> {
+        self.sink = Some(sink);
+        self
+    }
+
+    /// The effective event sink (explicit sink, else a stderr sink whose
+    /// progress lines follow [`Sweep::verbose`]).  SHA uses this to emit
+    /// its rung-promotion events onto the same bus.
+    pub fn sink(&self) -> Arc<dyn EventSink> {
+        self.sink
+            .clone()
+            .unwrap_or_else(|| Arc::new(StderrSink::new(self.verbose)))
     }
 
     /// Fan jobs out across `n` worker threads (clamped to ≥1; further
@@ -400,20 +423,29 @@ impl<'rt> Sweep<'rt> {
     /// a sequential run regardless of worker count — only journal line
     /// order varies.
     pub fn run(&mut self, jobs: &[Job]) -> Result<Vec<JobResult>> {
+        let sink = self.sink();
         let workers = self
             .workers
             .min(self.rt.backend().parallelism())
             .clamp(1, jobs.len().max(1));
-        if workers > 1 {
-            if let Some(out) = self.run_parallel(jobs, workers)? {
-                return Ok(out);
+        let out = if workers > 1 {
+            match self.run_parallel(jobs, workers, &sink)? {
+                Some(out) => out,
+                // backend declined Send sessions (PJRT): sequential fallback
+                None => self.run_sequential(jobs, &sink)?,
             }
-            // backend declined Send sessions (PJRT): sequential fallback
-        }
-        self.run_sequential(jobs)
+        } else {
+            self.run_sequential(jobs, &sink)?
+        };
+        sink.emit(&Event::SweepDone { total: jobs.len() });
+        Ok(out)
     }
 
-    fn run_sequential(&mut self, jobs: &[Job]) -> Result<Vec<JobResult>> {
+    fn run_sequential(
+        &mut self,
+        jobs: &[Job],
+        sink: &Arc<dyn EventSink>,
+    ) -> Result<Vec<JobResult>> {
         let total = jobs.len();
         let mut out = Vec::with_capacity(total);
         for (i, job) in jobs.iter().enumerate() {
@@ -426,8 +458,16 @@ impl<'rt> Sweep<'rt> {
             let ckpt = self.ckpt_cfg(job);
             let variant = self.rt.manifest().get(&job.spec.variant)?;
             let data = source_for(variant, job.data_seed);
-            let rr = run_ckpt(self.rt, &job.spec, data.as_ref(), ckpt.as_ref())
-                .with_context(|| format!("job {}", job.key))?;
+            sink.emit(&Event::TrialStarted { key: job.key.clone() });
+            let rr = run_ckpt_with(
+                self.rt,
+                &job.spec,
+                data.as_ref(),
+                ckpt.as_ref(),
+                sink.as_ref(),
+                &job.key,
+            )
+            .with_context(|| format!("job {}", job.key))?;
             let result = JobResult {
                 key: job.key.clone(),
                 trial: Trial {
@@ -441,18 +481,15 @@ impl<'rt> Sweep<'rt> {
                 val_curve: rr.val_losses.clone(),
                 wall_secs: t0.elapsed().as_secs_f64(),
             };
-            if self.verbose {
-                eprintln!(
-                    "[{}/{}] {} -> train {:.4} val {:.4}{} ({:.1}s)",
-                    i + 1,
-                    total,
-                    job.key,
-                    result.trial.train_loss,
-                    result.trial.val_loss,
-                    if result.trial.diverged { " DIVERGED" } else { "" },
-                    result.wall_secs,
-                );
-            }
+            sink.emit(&Event::TrialFinished {
+                key: job.key.clone(),
+                ordinal: i + 1,
+                total,
+                train_loss: result.trial.train_loss,
+                val_loss: result.trial.val_loss,
+                diverged: result.trial.diverged,
+                wall_secs: result.wall_secs,
+            });
             self.append_journal(&result)?;
             self.done.insert(job.key.clone(), result.clone());
             out.push(result);
@@ -471,7 +508,12 @@ impl<'rt> Sweep<'rt> {
     /// `pool::run_indexed`.  Workers append finished trials to the shared
     /// journal under a mutex, so every record lands exactly once and
     /// whole-line-atomically even though completion order is arbitrary.
-    fn run_parallel(&mut self, jobs: &[Job], workers: usize) -> Result<Option<Vec<JobResult>>> {
+    fn run_parallel(
+        &mut self,
+        jobs: &[Job],
+        workers: usize,
+        sink: &Arc<dyn EventSink>,
+    ) -> Result<Option<Vec<JobResult>>> {
         struct Prepared {
             key: String,
             assignment: Assignment,
@@ -493,7 +535,6 @@ impl<'rt> Sweep<'rt> {
         let finished = Arc::new(AtomicUsize::new(
             jobs.iter().filter(|j| self.done.contains_key(&j.key)).count(),
         ));
-        let verbose = self.verbose;
         let total = jobs.len();
 
         let mut queue: Vec<&Job> = Vec::new();
@@ -519,6 +560,7 @@ impl<'rt> Sweep<'rt> {
                             Some(cfg) => run.with_checkpoint(cfg),
                             None => run,
                         };
+                        let run = run.with_emitter(sink.clone(), &job.key);
                         prepared.push(Prepared {
                             key: job.key.clone(),
                             assignment: job.assignment.clone(),
@@ -533,10 +575,12 @@ impl<'rt> Sweep<'rt> {
             }
             let journal = journal.clone();
             let finished = finished.clone();
+            let sink = sink.clone();
             let outcomes: Vec<Result<JobResult>> =
                 pool::run_indexed(prepared, workers, move |_, p: Prepared| -> Result<JobResult> {
                     let t0 = std::time::Instant::now();
                     let data = source_for(p.run.variant(), p.data_seed);
+                    sink.emit(&Event::TrialStarted { key: p.key.clone() });
                     let rr = p
                         .run
                         .execute(data.as_ref())
@@ -570,17 +614,16 @@ impl<'rt> Sweep<'rt> {
                                 .with_context(|| format!("syncing journal for {}", result.key))?;
                         }
                     }
-                    if verbose {
-                        let k = finished.fetch_add(1, Ordering::SeqCst) + 1;
-                        eprintln!(
-                            "[{k}/{total}] {} -> train {:.4} val {:.4}{} ({:.1}s)",
-                            result.key,
-                            result.trial.train_loss,
-                            result.trial.val_loss,
-                            if result.trial.diverged { " DIVERGED" } else { "" },
-                            result.wall_secs,
-                        );
-                    }
+                    let k = finished.fetch_add(1, Ordering::SeqCst) + 1;
+                    sink.emit(&Event::TrialFinished {
+                        key: result.key.clone(),
+                        ordinal: k,
+                        total,
+                        train_loss: result.trial.train_loss,
+                        val_loss: result.trial.val_loss,
+                        diverged: result.trial.diverged,
+                        wall_secs: result.wall_secs,
+                    });
                     Ok(result)
                 });
             for outcome in outcomes {

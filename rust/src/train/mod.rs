@@ -5,6 +5,7 @@
 pub mod schedule;
 
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
@@ -15,6 +16,7 @@ use crate::model::BaseShape;
 use crate::mup::{HyperParams, Optimizer, Parametrization};
 use crate::runtime::session::{validate_init, StepInputs};
 use crate::runtime::{BackendSession, Runtime, SessionCore, Variant};
+use crate::serve::events::{Event, EventSink, StderrSink};
 pub use schedule::Schedule;
 
 /// Loss above which (relative to the initial loss) a run is declared
@@ -186,6 +188,8 @@ pub struct PreparedRun {
     base_lr: Vec<f32>,
     hp_v: [f32; 8],
     ckpt: Option<CkptConfig>,
+    sink: Option<Arc<dyn EventSink>>,
+    key: Option<String>,
 }
 
 impl PreparedRun {
@@ -200,9 +204,20 @@ impl PreparedRun {
         self
     }
 
+    /// Route this run's progress/warning events (labelled `key`) into
+    /// `sink` instead of the default warnings-only stderr sink.
+    pub fn with_emitter(mut self, sink: Arc<dyn EventSink>, key: &str) -> PreparedRun {
+        self.sink = Some(sink);
+        self.key = Some(key.to_string());
+        self
+    }
+
     /// Run the step loop to completion.  Consumes the prepared session —
     /// restartability lives in the checkpoint file, not the value.
     pub fn execute(mut self, data: &dyn DataSource) -> Result<RunResult> {
+        let sink: Arc<dyn EventSink> =
+            self.sink.take().unwrap_or_else(|| Arc::new(StderrSink::quiet()));
+        let key = self.key.take().unwrap_or_else(|| self.spec.variant.clone());
         drive(
             &mut self.core,
             &self.spec,
@@ -210,6 +225,8 @@ impl PreparedRun {
             &self.hp_v,
             data,
             self.ckpt.as_ref(),
+            sink.as_ref(),
+            &key,
         )
     }
 }
@@ -252,6 +269,8 @@ pub fn prepare(rt: &Runtime, spec: &RunSpec) -> Result<Option<PreparedRun>> {
         base_lr,
         hp_v,
         ckpt: None,
+        sink: None,
+        key: None,
     }))
 }
 
@@ -269,6 +288,20 @@ pub fn run_ckpt(
     data: &dyn DataSource,
     ckpt: Option<&CkptConfig>,
 ) -> Result<RunResult> {
+    run_ckpt_with(rt, spec, data, ckpt, &StderrSink::quiet(), &spec.variant)
+}
+
+/// [`run_ckpt`] with an explicit event sink: progress, checkpoint and
+/// warning events are emitted under the trial label `key` — how the sweep
+/// scheduler and the serve daemon observe individual runs.
+pub fn run_ckpt_with(
+    rt: &Runtime,
+    spec: &RunSpec,
+    data: &dyn DataSource,
+    ckpt: Option<&CkptConfig>,
+    sink: &dyn EventSink,
+    key: &str,
+) -> Result<RunResult> {
     let (variant, params, base_lr, hp_v) = resolve(rt, spec)?;
     let inner = rt
         .backend()
@@ -277,7 +310,7 @@ pub fn run_ckpt(
             format!("creating {} session for {}", rt.backend().name(), spec.variant)
         })?;
     let mut core = SessionCore::new(variant, inner);
-    drive(&mut core, spec, &base_lr, &hp_v, data, ckpt)
+    drive(&mut core, spec, &base_lr, &hp_v, data, ckpt, sink, key)
 }
 
 /// Rebuild the outcome of a finished run straight from its end-of-run
@@ -295,17 +328,19 @@ fn result_from_snapshot(snap: &Snapshot) -> RunResult {
 }
 
 /// Snapshot the session + run progress to `path` (tmp-then-rename).
-/// Backends that decline state capture make this a no-op.
+/// Backends that decline state capture make this a no-op; returns whether
+/// a snapshot was actually published (so callers can emit
+/// [`Event::CheckpointWritten`] honestly).
 fn write_snapshot<S: BackendSession + ?Sized>(
     core: &SessionCore<S>,
     spec: &RunSpec,
     result: &RunResult,
     complete: bool,
     path: &Path,
-) -> Result<()> {
+) -> Result<bool> {
     let state = match core.state()? {
         Some(s) => s,
-        None => return Ok(()),
+        None => return Ok(false),
     };
     let progress = RunProgress {
         steps_done: result.steps_done,
@@ -322,7 +357,8 @@ fn write_snapshot<S: BackendSession + ?Sized>(
         spec.trajectory_fingerprint(),
         None,
     )?
-    .save(path)
+    .save(path)?;
+    Ok(true)
 }
 
 /// The step loop, generic over the session bound so the same code drives
@@ -340,6 +376,13 @@ fn write_snapshot<S: BackendSession + ?Sized>(
 /// with a warning (the run restarts from 0) — a crashed write can never
 /// produce one thanks to tmp-then-rename, so this only fires on genuine
 /// external corruption, where restarting is the honest fallback.
+///
+/// Progress flows through `sink` (DESIGN.md §9): warnings, one
+/// [`Event::StepEval`] per recorded validation point, and one
+/// [`Event::CheckpointWritten`] per published snapshot, all labelled
+/// `key`.  The default sink ([`StderrSink::quiet`]) prints exactly the
+/// warnings the loop used to `eprintln!`.
+#[allow(clippy::too_many_arguments)]
 fn drive<S: BackendSession + ?Sized>(
     core: &mut SessionCore<S>,
     spec: &RunSpec,
@@ -347,6 +390,8 @@ fn drive<S: BackendSession + ?Sized>(
     hp_v: &[f32; 8],
     data: &dyn DataSource,
     ckpt: Option<&CkptConfig>,
+    sink: &dyn EventSink,
+    key: &str,
 ) -> Result<RunResult> {
     let t0 = std::time::Instant::now();
     let flops_per_step = core.variant.flops_per_step();
@@ -365,16 +410,19 @@ fn drive<S: BackendSession + ?Sized>(
             match Snapshot::load(&c.path) {
                 Ok(snap) => {
                     if let Err(e) = snap.validate_for(&core.variant) {
-                        eprintln!(
-                            "warning: ignoring checkpoint {}: {e:#}",
-                            c.path.display()
-                        );
+                        sink.emit(&Event::warning(
+                            key,
+                            format!("ignoring checkpoint {}: {e:#}", c.path.display()),
+                        ));
                     } else if snap.spec_fp != spec.trajectory_fingerprint() {
-                        eprintln!(
-                            "warning: checkpoint {} was written under a different run \
-                             configuration (hp/seed/schedule); restarting from step 0",
-                            c.path.display()
-                        );
+                        sink.emit(&Event::warning(
+                            key,
+                            format!(
+                                "checkpoint {} was written under a different run \
+                                 configuration (hp/seed/schedule); restarting from step 0",
+                                c.path.display()
+                            ),
+                        ));
                     } else if snap.progress.complete
                         && (snap.progress.diverged || snap.progress.steps_done == spec.steps)
                     {
@@ -382,12 +430,15 @@ fn drive<S: BackendSession + ?Sized>(
                         r.wall_secs = t0.elapsed().as_secs_f64();
                         return Ok(r);
                     } else if snap.progress.steps_done > spec.steps {
-                        eprintln!(
-                            "warning: checkpoint {} is at step {} but only {} steps were requested; restarting fresh",
-                            c.path.display(),
-                            snap.progress.steps_done,
-                            spec.steps
-                        );
+                        sink.emit(&Event::warning(
+                            key,
+                            format!(
+                                "checkpoint {} is at step {} but only {} steps were requested; restarting fresh",
+                                c.path.display(),
+                                snap.progress.steps_done,
+                                spec.steps
+                            ),
+                        ));
                     } else {
                         // take the progress out (loss curves are small),
                         // then move the tensors into the restore without a
@@ -406,10 +457,13 @@ fn drive<S: BackendSession + ?Sized>(
                         // capability): fall through and run from step 0
                     }
                 }
-                Err(e) => eprintln!(
-                    "warning: ignoring unreadable checkpoint {}: {e:#}",
-                    c.path.display()
-                ),
+                Err(e) => sink.emit(&Event::warning(
+                    key,
+                    format!(
+                        "ignoring unreadable checkpoint {}: {e:#}",
+                        c.path.display()
+                    ),
+                )),
             }
         }
     }
@@ -439,13 +493,24 @@ fn drive<S: BackendSession + ?Sized>(
                 break;
             }
             result.val_losses.push((step + 1, v));
+            sink.emit(&Event::StepEval {
+                key: key.to_string(),
+                step: step + 1,
+                val_loss: v,
+            });
         }
         if let Some(c) = ckpt {
             // mid-run snapshot, written after the step's eval so the
             // recorded curves are consistent with the tensors; the final
             // step is covered by the complete snapshot below
-            if c.every > 0 && (step + 1) % c.every == 0 && step + 1 < spec.steps {
-                write_snapshot(core, spec, &result, false, &c.path)?;
+            if c.every > 0 && (step + 1) % c.every == 0 && step + 1 < spec.steps
+                && write_snapshot(core, spec, &result, false, &c.path)?
+            {
+                sink.emit(&Event::CheckpointWritten {
+                    key: key.to_string(),
+                    step: step + 1,
+                    path: c.path.to_string_lossy().into_owned(),
+                });
             }
         }
     }
@@ -454,12 +519,23 @@ fn drive<S: BackendSession + ?Sized>(
         let v = eval(core, spec, data, hp_v)?;
         if v.is_finite() {
             result.val_losses.push((result.steps_done, v));
+            sink.emit(&Event::StepEval {
+                key: key.to_string(),
+                step: result.steps_done,
+                val_loss: v,
+            });
         } else {
             result.diverged = true;
         }
     }
     if let Some(c) = ckpt {
-        write_snapshot(core, spec, &result, true, &c.path)?;
+        if write_snapshot(core, spec, &result, true, &c.path)? {
+            sink.emit(&Event::CheckpointWritten {
+                key: key.to_string(),
+                step: result.steps_done,
+                path: c.path.to_string_lossy().into_owned(),
+            });
+        }
     }
     result.wall_secs = t0.elapsed().as_secs_f64();
     Ok(result)

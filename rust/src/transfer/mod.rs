@@ -19,6 +19,7 @@ use crate::sweep::{Job, JobResult, Sweep};
 use crate::train::{RunSpec, Schedule};
 use crate::tuner::sha::{run_sha, ShaConfig};
 use crate::tuner::{select_best, Assignment, SearchSpace, Trial};
+use crate::util::json::{jnum, Json};
 
 /// How step 2 of Algorithm 1 ("tune the proxy") searches the space.  All
 /// three run through the same [`Sweep`] (worker pool + journal + optional
@@ -79,6 +80,63 @@ impl TransferOutcome {
             f64::NAN
         }
     }
+
+    /// Validation loss of the winning proxy trial (`NaN` when everything
+    /// diverged) — what `GET /hp` ranks completed sweeps by.
+    pub fn best_val_loss(&self) -> f64 {
+        match &self.best {
+            Some(b) => self
+                .proxy_trials
+                .iter()
+                .find(|t| &t.assignment == b)
+                .map(|t| t.val_loss)
+                .unwrap_or(f64::NAN),
+            None => f64::NAN,
+        }
+    }
+
+    /// Canonical JSON form — **deterministic by construction**: every
+    /// field is a pure function of the job spec (trials, curves, FLOPs);
+    /// wall-clock times are deliberately excluded.  The serve daemon
+    /// persists this as a job's `results.json` and the CLI's
+    /// `--results-json` writes the identical bytes, which is what lets CI
+    /// assert a daemon-run sweep is bit-identical to an offline one.
+    pub fn to_json(&self) -> Json {
+        let target = match &self.target {
+            Some(r) => Json::from_pairs(vec![
+                ("trial", r.trial.to_json()),
+                (
+                    "train_curve",
+                    crate::util::json::jnums(&r.train_curve),
+                ),
+                (
+                    "val_curve",
+                    Json::Arr(
+                        r.val_curve
+                            .iter()
+                            .map(|&(s, l)| Json::Arr(vec![jnum(s as f64), jnum(l)]))
+                            .collect(),
+                    ),
+                ),
+            ]),
+            None => Json::Null,
+        };
+        Json::from_pairs(vec![
+            (
+                "proxy_trials",
+                Json::Arr(self.proxy_trials.iter().map(|t| t.to_json()).collect()),
+            ),
+            (
+                "best",
+                self.best.as_ref().map(|b| b.to_json()).unwrap_or(Json::Null),
+            ),
+            ("best_val_loss", jnum(self.best_val_loss())),
+            ("target", target),
+            ("search_flops", jnum(self.search_flops)),
+            ("target_flops", jnum(self.target_flops)),
+            ("tuning_cost_ratio", jnum(self.tuning_cost_ratio())),
+        ])
+    }
 }
 
 fn spec_for(
@@ -99,21 +157,18 @@ fn spec_for(
     s
 }
 
-/// Algorithm 1.  `scheme_base`: μP uses the proxy widths as base for BOTH
-/// proxy and target (so the proxy literally *is* an SP model of itself,
-/// Eq. (4)).
-pub fn mu_transfer(
-    rt: &Runtime,
+/// Step 2 of Algorithm 1, shared by [`mu_transfer`] and [`tune_only`]:
+/// tune the proxy through the sweep and return (all trials, winner).
+fn tune_proxy(
     sweep: &mut Sweep,
     setup: &TransferSetup,
     label: &str,
-) -> Result<TransferOutcome> {
-    let _ = rt; // execution flows through the sweep's shared runtime
+) -> Result<(Vec<Trial>, Option<Assignment>)> {
     let par = Parametrization::mup(setup.optimizer);
     let mut rng = Rng::new(setup.seed ^ 0xA11CE);
-    // 2. tune the proxy.  Grid enumerates the space; Random and SHA draw
-    // the same `n_samples` assignments (same RNG stream, so SHA's
-    // candidate set is identical to what Random would evaluate).
+    // Grid enumerates the space; Random and SHA draw the same `n_samples`
+    // assignments (same RNG stream, so SHA's candidate set is identical
+    // to what Random would evaluate).
     let assignments: Vec<Assignment> = match &setup.tuner {
         TunerKind::Grid => setup.space.grid(),
         _ => (0..setup.n_samples)
@@ -140,7 +195,7 @@ pub fn mu_transfer(
             ckpt_id: None,
         })
         .collect();
-    let (proxy_trials, best) = match &setup.tuner {
+    match &setup.tuner {
         TunerKind::Sha { eta, rung0 } => {
             let out = run_sha(
                 sweep,
@@ -151,15 +206,51 @@ pub fn mu_transfer(
                     max_steps: setup.proxy_steps,
                 },
             )?;
-            (out.trials, out.best)
+            Ok((out.trials, out.best))
         }
         _ => {
             let results = sweep.run(&jobs)?;
             let trials: Vec<Trial> = results.iter().map(|r| r.trial.clone()).collect();
             let best = select_best(&trials).map(|t| t.assignment.clone());
-            (trials, best)
+            Ok((trials, best))
         }
-    };
+    }
+}
+
+/// Step 2 of Algorithm 1 on its own: tune the proxy, skip the target run.
+/// The serve daemon's `sweep` job kind — tune once, let `GET /hp` answer
+/// for any later target scale.
+pub fn tune_only(
+    rt: &Runtime,
+    sweep: &mut Sweep,
+    setup: &TransferSetup,
+    label: &str,
+) -> Result<TransferOutcome> {
+    let _ = rt; // execution flows through the sweep's shared runtime
+    let (proxy_trials, best) = tune_proxy(sweep, setup, label)?;
+    let search_flops: f64 = proxy_trials.iter().map(|t| t.flops).sum();
+    Ok(TransferOutcome {
+        proxy_trials,
+        best,
+        target: None,
+        search_flops,
+        target_flops: 0.0,
+    })
+}
+
+/// Algorithm 1.  `scheme_base`: μP uses the proxy widths as base for BOTH
+/// proxy and target (so the proxy literally *is* an SP model of itself,
+/// Eq. (4)).
+pub fn mu_transfer(
+    rt: &Runtime,
+    sweep: &mut Sweep,
+    setup: &TransferSetup,
+    label: &str,
+) -> Result<TransferOutcome> {
+    let _ = rt; // execution flows through the sweep's shared runtime
+    let par = Parametrization::mup(setup.optimizer);
+    // 2. tune the proxy
+    let (proxy_trials, best) = tune_proxy(sweep, setup, label)?;
     let search_flops: f64 = proxy_trials.iter().map(|t| t.flops).sum();
 
     // 3. zero-shot copy to the target

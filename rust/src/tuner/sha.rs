@@ -33,6 +33,7 @@
 
 use anyhow::{bail, Result};
 
+use crate::serve::events::Event;
 use crate::stats;
 use crate::sweep::{Job, JobResult, Sweep};
 use crate::tuner::{Assignment, Trial};
@@ -212,6 +213,11 @@ pub fn run_sha(sweep: &mut Sweep, jobs: &[Job], cfg: &ShaConfig) -> Result<ShaOu
         for &i in &order[keep..] {
             sweep.remove_checkpoint(jobs[i].ckpt_key());
         }
+        sweep.sink().emit(&Event::RungPromoted {
+            budget,
+            survivors: alive.len(),
+            promoted: keep,
+        });
         alive = order[..keep].to_vec();
         alive.sort_unstable(); // deterministic submission order next rung
     }

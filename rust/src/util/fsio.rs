@@ -1,0 +1,55 @@
+//! Crash-consistent small-file publishing, shared by the reporter and
+//! the serve daemon's registry.
+//!
+//! Same rule `ckpt/format.rs` enforces for checkpoints: serialize fully,
+//! write to a hidden sibling `.<name>.tmp`, fsync, then rename over the
+//! final path.  A reader (or a daemon restarted after SIGKILL) therefore
+//! sees either the old contents or the new contents — never a torn file.
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Atomically publish `bytes` at `path` (tmp-file-then-rename + fsync).
+pub fn write_atomic(path: &Path, bytes: &[u8]) -> Result<()> {
+    let name = path
+        .file_name()
+        .with_context(|| format!("write_atomic needs a file path, got {}", path.display()))?
+        .to_string_lossy()
+        .into_owned();
+    let tmp = path.with_file_name(format!(".{name}.tmp"));
+    {
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating {}", tmp.display()))?;
+        f.write_all(bytes)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("publishing {}", path.display()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publishes_and_overwrites() {
+        let dir = std::env::temp_dir().join("mutransfer_fsio_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("out.json");
+        write_atomic(&p, b"{\"v\":1}").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\"v\":1}");
+        write_atomic(&p, b"{\"v\":2}").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\"v\":2}");
+        // no tmp residue after publish
+        assert!(!dir.join(".out.json.tmp").exists());
+    }
+
+    #[test]
+    fn rejects_pathless_target() {
+        assert!(write_atomic(Path::new("/"), b"x").is_err());
+    }
+}

@@ -294,6 +294,16 @@ impl<'a> Parser<'a> {
         }
     }
 
+    /// Four hex digits starting at byte `start` (a `\uXXXX` payload).
+    fn hex4(&self, start: usize) -> Result<u32, JsonError> {
+        if start + 4 > self.b.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = std::str::from_utf8(&self.b[start..start + 4])
+            .map_err(|_| self.err("bad \\u escape"))?;
+        u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))
+    }
+
     fn string(&mut self) -> Result<String, JsonError> {
         self.eat(b'"')?;
         let mut s = String::new();
@@ -316,31 +326,58 @@ impl<'a> Parser<'a> {
                         Some(b'b') => s.push('\u{8}'),
                         Some(b'f') => s.push('\u{c}'),
                         Some(b'u') => {
-                            if self.pos + 4 >= self.b.len() {
-                                return Err(self.err("bad \\u escape"));
+                            let hi = self.hex4(self.pos + 1)?;
+                            self.pos += 4; // now on the escape's last hex digit
+                            let mut cp = hi;
+                            if (0xD800..0xDC00).contains(&hi) {
+                                // High surrogate: an immediately following
+                                // \uDC00–\uDFFF escape combines into one
+                                // supplementary-plane scalar — the serve
+                                // API echoes client-supplied job names, so
+                                // a uD83D-uDE00 pair must decode to U+1F600
+                                // ("😀"), not two replacement chars.
+                                if self.b.get(self.pos + 1) == Some(&b'\\')
+                                    && self.b.get(self.pos + 2) == Some(&b'u')
+                                {
+                                    if let Ok(lo) = self.hex4(self.pos + 3) {
+                                        if (0xDC00..0xE000).contains(&lo) {
+                                            cp = 0x10000
+                                                + ((hi - 0xD800) << 10)
+                                                + (lo - 0xDC00);
+                                            self.pos += 6; // consume "\uXXXX" too
+                                        }
+                                    }
+                                }
                             }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.pos + 1..self.pos + 5])
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                            let cp = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            // Surrogate pairs are not needed for our data;
-                            // map lone surrogates to replacement char.
+                            // unpaired surrogates map to the replacement char
                             s.push(char::from_u32(cp).unwrap_or('\u{fffd}'));
-                            self.pos += 4;
                         }
                         _ => return Err(self.err("bad escape")),
                     }
                     self.pos += 1;
                 }
-                Some(_) => {
-                    // copy a full utf-8 scalar
-                    let rest = &self.b[self.pos..];
-                    let st = std::str::from_utf8(rest)
+                Some(b) if b < 0x80 => {
+                    s.push(b as char);
+                    self.pos += 1;
+                }
+                Some(b) => {
+                    // copy one multi-byte scalar, validating only its own
+                    // bytes: re-validating the whole remaining input per
+                    // character was O(n²), and this parser now sees
+                    // untrusted network input through the serve API
+                    let len = match b {
+                        0xC0..=0xDF => 2,
+                        0xE0..=0xEF => 3,
+                        0xF0..=0xF7 => 4,
+                        _ => return Err(self.err("invalid utf-8")),
+                    };
+                    if self.pos + len > self.b.len() {
+                        return Err(self.err("invalid utf-8"));
+                    }
+                    let st = std::str::from_utf8(&self.b[self.pos..self.pos + len])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let c = st.chars().next().unwrap();
-                    s.push(c);
-                    self.pos += c.len_utf8();
+                    s.push(st.chars().next().unwrap());
+                    self.pos += len;
                 }
             }
         }
@@ -467,5 +504,73 @@ mod tests {
     #[test]
     fn unicode_escape() {
         assert_eq!(parse(r#""A""#).unwrap(), jstr("A"));
+        assert_eq!(parse("\"\\u0041\"").unwrap(), jstr("A"));
+        assert_eq!(parse("\"\\u00e9\"").unwrap(), jstr("é"));
+    }
+
+    // -- string-escaping round-trips (the serve API echoes client-supplied
+    //    job names verbatim, so every class below must survive) ----------
+
+    #[test]
+    fn control_chars_roundtrip() {
+        let s: String = (1u32..0x20).map(|c| char::from_u32(c).unwrap()).collect();
+        let j = Json::Str(s.clone());
+        let text = j.to_string();
+        // everything below 0x20 must be escaped on the wire
+        assert!(!text.chars().any(|c| (c as u32) < 0x20), "raw control byte in {text:?}");
+        assert!(text.contains("\\u0001") && text.contains("\\u001f"), "{text}");
+        assert_eq!(parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn quote_and_backslash_roundtrip() {
+        let j = Json::Str(r#"q" b\ both\" end\\"#.to_string());
+        assert_eq!(parse(&j.to_string()).unwrap(), j);
+        // and as object keys, which take the same writer path
+        let mut o = Json::obj();
+        o.set("k\"\\\n", jnum(1.0));
+        assert_eq!(parse(&o.to_string()).unwrap(), o);
+    }
+
+    #[test]
+    fn non_bmp_roundtrip_raw_utf8() {
+        // the writer emits supplementary-plane chars as raw UTF-8
+        let j = Json::Str("job 😀🎉 \u{10348}".to_string());
+        let text = j.to_string();
+        assert_eq!(parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn surrogate_pair_escapes_decode_to_one_scalar() {
+        // external clients (curl, python json.dumps with ensure_ascii)
+        // send non-BMP chars as \u surrogate pairs
+        assert_eq!(parse("\"\\ud83d\\ude00\"").unwrap(), jstr("\u{1F600}"));
+        assert_eq!(parse("\"a\\ud83d\\ude00b\"").unwrap(), jstr("a\u{1F600}b"));
+        // upper-case hex digits too
+        assert_eq!(parse("\"\\uD83C\\uDF89\"").unwrap(), jstr("\u{1F389}"));
+        // and they round-trip through our writer (which re-emits raw UTF-8)
+        let j = parse("\"\\ud800\\udc00\"").unwrap();
+        assert_eq!(j, jstr("\u{10000}"));
+        assert_eq!(parse(&j.to_string()).unwrap(), j);
+    }
+
+    #[test]
+    fn lone_surrogates_become_replacement_chars() {
+        // unpaired high surrogate at end of string
+        assert_eq!(parse(r#""\ud800""#).unwrap(), jstr("\u{fffd}"));
+        // high surrogate followed by a normal char / a non-low escape:
+        // only the surrogate is replaced, the rest decodes normally
+        assert_eq!(parse(r#""\ud800x""#).unwrap(), jstr("\u{fffd}x"));
+        assert_eq!(parse(r#""\ud800A""#).unwrap(), jstr("\u{fffd}A"));
+        // lone low surrogate
+        assert_eq!(parse(r#""\udc00!""#).unwrap(), jstr("\u{fffd}!"));
+        // two high surrogates in a row
+        assert_eq!(parse(r#""\ud800\ud800""#).unwrap(), jstr("\u{fffd}\u{fffd}"));
+    }
+
+    #[test]
+    fn truncated_unicode_escape_is_an_error() {
+        assert!(parse(r#""\u00""#).is_err());
+        assert!(parse(r#""\uzzzz""#).is_err());
     }
 }

@@ -1,0 +1,315 @@
+//! End-to-end tests for the tuning service (DESIGN.md §9): a real daemon
+//! on a real TCP port, driven through the same HTTP client code the CLI
+//! subcommands use.
+//!
+//! The two acceptance properties of the serve subsystem are pinned here:
+//!
+//! 1. **bit-identity** — a sweep submitted over HTTP produces a results
+//!    document byte-identical to the same sweep run offline through
+//!    `transfer::mu_transfer` (+ `TransferOutcome::to_json`);
+//! 2. **crash-recovery** — a daemon restarted over a state dir whose job
+//!    was interrupted re-queues it and finishes WITHOUT re-running the
+//!    journaled trials, with results still byte-identical.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use mutransfer::runtime::Runtime;
+use mutransfer::serve::daemon::JOB_LABEL;
+use mutransfer::serve::http;
+use mutransfer::serve::{Daemon, Event, JobKind, JobSpec, Registry};
+use mutransfer::sweep::Sweep;
+use mutransfer::transfer::{mu_transfer, TunerKind};
+use mutransfer::util::json;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mutransfer_serve_e2e_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+/// The small job every test runs: w32 proxy → w64 target, 3 samples.
+fn small_spec(name: &str) -> JobSpec {
+    JobSpec {
+        name: name.to_string(),
+        kind: JobKind::Transfer,
+        proxy: "tfm_post_w32_d2".into(),
+        target: "tfm_post_w64_d2".into(),
+        base_width: 32,
+        samples: 3,
+        steps: 8,
+        target_steps: 6,
+        seed: 7,
+        workers: 0,
+        tuner: TunerKind::Random,
+        ckpt_every: 0,
+    }
+}
+
+/// Offline reference: the same job through the library path the CLI uses,
+/// with its own journal.  Returns (canonical results text, journal text).
+fn offline_reference(spec: &JobSpec, dir: &std::path::Path) -> (String, String) {
+    let rt = Runtime::native();
+    let journal = dir.join("journal");
+    let mut sweep = Sweep::new(&rt).with_journal(&journal).unwrap();
+    let out = mu_transfer(&rt, &mut sweep, &spec.setup(), JOB_LABEL).unwrap();
+    (
+        out.to_json().to_string(),
+        std::fs::read_to_string(&journal).unwrap(),
+    )
+}
+
+fn wait_done(addr: &str, id: &str, budget: Duration) -> String {
+    let t0 = Instant::now();
+    loop {
+        let (st, body) = http::rpc(addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+        assert_eq!(st, 200, "{body}");
+        let state = json::parse(&body)
+            .unwrap()
+            .req("state")
+            .as_str()
+            .unwrap()
+            .to_string();
+        if state == "done" || state == "failed" {
+            return state;
+        }
+        assert!(
+            t0.elapsed() < budget,
+            "job {id} still {state} after {budget:?}"
+        );
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+#[test]
+fn submitted_job_matches_offline_run_bit_for_bit() {
+    let spec = small_spec("e2e \"quoted\" name");
+    let (reference, _) = offline_reference(&spec, &tmpdir("ref1"));
+
+    let state = tmpdir("daemon1");
+    let daemon = Daemon::start("127.0.0.1:0", &state, None).unwrap();
+    let addr = daemon.addr.to_string();
+
+    // health check
+    let (st, body) = http::rpc(&addr, "GET", "/healthz", None).unwrap();
+    assert_eq!(st, 200, "{body}");
+
+    // submit over real HTTP
+    let (st, body) =
+        http::rpc(&addr, "POST", "/jobs", Some(&spec.to_json().to_string())).unwrap();
+    assert_eq!(st, 201, "{body}");
+    let id = json::parse(&body)
+        .unwrap()
+        .req("id")
+        .as_str()
+        .unwrap()
+        .to_string();
+
+    // the client-supplied name echoes back verbatim, quotes and all
+    let (st, body) = http::rpc(&addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+    assert_eq!(st, 200);
+    let view = json::parse(&body).unwrap();
+    assert_eq!(view.req("name").as_str().unwrap(), "e2e \"quoted\" name");
+
+    // results before completion is a 409, unknown job a 404
+    let (st, _) = http::rpc(&addr, "GET", &format!("/jobs/{id}/results"), None).unwrap();
+    assert!(st == 409 || st == 200, "got {st}"); // may already be done
+    let (st, _) = http::rpc(&addr, "GET", "/jobs/zzz/results", None).unwrap();
+    assert_eq!(st, 404);
+
+    // watch the SSE stream to the terminal event
+    let mut saw_trial = false;
+    let mut last_state = String::new();
+    http::sse(&addr, &format!("/jobs/{id}/events"), |_, data| {
+        let j = json::parse(data).unwrap();
+        match Event::from_json(&j) {
+            Some(Event::TrialFinished { .. }) => {
+                saw_trial = true;
+                true
+            }
+            Some(Event::JobUpdate { state }) => {
+                last_state = state;
+                !matches!(last_state.as_str(), "done" | "failed")
+            }
+            _ => true,
+        }
+    })
+    .unwrap();
+    assert_eq!(last_state, "done");
+    assert!(saw_trial, "SSE stream must carry trial_finished events");
+
+    // fetched results are byte-identical to the offline reference
+    let (st, got) = http::rpc(&addr, "GET", &format!("/jobs/{id}/results"), None).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(got, reference, "HTTP-run sweep must be bit-identical to offline");
+
+    // GET /hp serves the winner (width echoed, assignment present)
+    let (st, body) = http::rpc(&addr, "GET", "/hp?width=512", None).unwrap();
+    assert_eq!(st, 200, "{body}");
+    let hp = json::parse(&body).unwrap();
+    assert_eq!(hp.req("width").as_usize().unwrap(), 512);
+    assert_eq!(hp.req("job").as_str().unwrap(), id);
+    assert!(hp.req("assignment").get("lr").is_some());
+
+    daemon.shutdown();
+}
+
+#[test]
+fn restarted_daemon_resumes_queue_without_rerunning_trials() {
+    let spec = small_spec("resume");
+    let refdir = tmpdir("ref2");
+    let (reference, ref_journal) = offline_reference(&spec, &refdir);
+    let ref_lines: Vec<&str> = ref_journal.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert!(ref_lines.len() >= 3, "reference journal too small to split");
+
+    // Simulate a daemon that was SIGKILLed mid-sweep: the job is on disk
+    // with no terminal state, and its journal already holds the first two
+    // completed trials (exactly what a kill after two appends leaves).
+    let state = tmpdir("daemon2");
+    let id = {
+        let reg = Registry::open(&state).unwrap();
+        let id = reg.submit(spec.clone()).unwrap();
+        let mut partial: String = ref_lines[..2].join("\n");
+        partial.push('\n');
+        std::fs::write(reg.job_dir(&id).join("journal"), partial).unwrap();
+        id
+        // registry dropped = daemon process gone
+    };
+
+    // restart "the daemon" over the same state dir: the job must be
+    // re-queued and finish
+    let daemon = Daemon::start("127.0.0.1:0", &state, None).unwrap();
+    let addr = daemon.addr.to_string();
+    assert_eq!(wait_done(&addr, &id, Duration::from_secs(120)), "done");
+
+    // results byte-identical to the uninterrupted offline run
+    let (st, got) = http::rpc(&addr, "GET", &format!("/jobs/{id}/results"), None).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(got, reference, "resumed job must be bit-identical to offline");
+
+    // ...and the journal proves no completed trial re-ran: every key
+    // appears exactly once, and the two pre-kill lines are still the
+    // journal's first two lines, verbatim
+    let journal =
+        std::fs::read_to_string(daemon.registry.job_dir(&id).join("journal")).unwrap();
+    let lines: Vec<&str> = journal.lines().filter(|l| !l.trim().is_empty()).collect();
+    assert_eq!(lines[..2], ref_lines[..2], "pre-kill records must be untouched");
+    let mut keys: Vec<String> = lines
+        .iter()
+        .map(|l| {
+            json::parse(l)
+                .unwrap()
+                .req("key")
+                .as_str()
+                .unwrap()
+                .to_string()
+        })
+        .collect();
+    let n = keys.len();
+    keys.sort();
+    keys.dedup();
+    assert_eq!(keys.len(), n, "a journal key appeared twice: a trial re-ran");
+    assert_eq!(n, ref_lines.len(), "resumed journal must cover the same trials");
+
+    daemon.shutdown();
+}
+
+#[test]
+fn queue_is_fifo_and_cancellation_works() {
+    let state = tmpdir("fifo");
+    let daemon = Daemon::start("127.0.0.1:0", &state, None).unwrap();
+    let addr = daemon.addr.to_string();
+
+    // a sweep-kind job (no target phase), then a cancelled one
+    let mut a = small_spec("first");
+    a.kind = JobKind::Sweep;
+    a.samples = 2;
+    a.steps = 6;
+    let (st, body) = http::rpc(&addr, "POST", "/jobs", Some(&a.to_json().to_string())).unwrap();
+    assert_eq!(st, 201, "{body}");
+    let id_a = json::parse(&body).unwrap().req("id").as_str().unwrap().to_string();
+
+    let b = small_spec("second");
+    let (_, body) = http::rpc(&addr, "POST", "/jobs", Some(&b.to_json().to_string())).unwrap();
+    let id_b = json::parse(&body).unwrap().req("id").as_str().unwrap().to_string();
+
+    // cancel the queued second job (the first is small but may already be
+    // running; the second is behind it, so it must still be cancellable —
+    // unless the executor already grabbed it, in which case we accept 409)
+    let (st, body) = http::rpc(&addr, "DELETE", &format!("/jobs/{id_b}"), None).unwrap();
+    assert!(st == 200 || st == 409, "cancel got {st}: {body}");
+
+    assert_eq!(wait_done(&addr, &id_a, Duration::from_secs(120)), "done");
+    // sweep-kind results have no target section
+    let (_, got) = http::rpc(&addr, "GET", &format!("/jobs/{id_a}/results"), None).unwrap();
+    let j = json::parse(&got).unwrap();
+    assert!(j.req("target").is_null());
+    assert!(j.req("proxy_trials").as_arr().unwrap().len() == 2);
+
+    // malformed submits are 400s, not daemon crashes
+    let (st, _) = http::rpc(&addr, "POST", "/jobs", Some("{not json")).unwrap();
+    assert_eq!(st, 400);
+    let (st, _) =
+        http::rpc(&addr, "POST", "/jobs", Some(r#"{"tuner":"lbfgs"}"#)).unwrap();
+    assert_eq!(st, 400);
+    // wrong method
+    let (st, _) = http::rpc(&addr, "PUT", "/jobs", Some("{}")).unwrap();
+    assert_eq!(st, 405);
+
+    daemon.shutdown();
+}
+
+#[test]
+fn job_names_round_trip_through_the_wire_escaped() {
+    let state = tmpdir("names");
+    let daemon = Daemon::start("127.0.0.1:0", &state, None).unwrap();
+    let addr = daemon.addr.to_string();
+
+    // quotes, backslash, newline, tab, control char, and a non-BMP emoji
+    let name = "tricky \"q\" \\back\nnl\ttab \u{1}ctl \u{1F600} end";
+    let mut spec = small_spec(name);
+    spec.kind = JobKind::Sweep;
+    spec.samples = 1;
+    spec.steps = 4;
+    let (st, body) =
+        http::rpc(&addr, "POST", "/jobs", Some(&spec.to_json().to_string())).unwrap();
+    assert_eq!(st, 201, "{body}");
+    let resp = json::parse(&body).unwrap();
+    assert_eq!(resp.req("name").as_str().unwrap(), name);
+    let id = resp.req("id").as_str().unwrap().to_string();
+
+    // echoed verbatim from the registry view too (after a disk round-trip)
+    let (_, body) = http::rpc(&addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+    assert_eq!(json::parse(&body).unwrap().req("name").as_str().unwrap(), name);
+
+    // and from a surrogate-pair-escaped submission (what ensure_ascii
+    // clients send): the name parses to the same scalar sequence
+    let escaped_name_json = "\"pair \\ud83d\\ude00\"";
+    let body = format!(
+        r#"{{"name":{escaped_name_json},"kind":"sweep","proxy":"tfm_post_w32_d2","base_width":32,"samples":1,"steps":4}}"#
+    );
+    let (st, resp) = http::rpc(&addr, "POST", "/jobs", Some(&body)).unwrap();
+    assert_eq!(st, 201, "{resp}");
+    assert_eq!(
+        json::parse(&resp).unwrap().req("name").as_str().unwrap(),
+        "pair \u{1F600}"
+    );
+
+    // drain the queue so shutdown joins promptly
+    let ids: Vec<String> = {
+        let (_, body) = http::rpc(&addr, "GET", "/jobs", None).unwrap();
+        json::parse(&body)
+            .unwrap()
+            .req("jobs")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|v| v.req("id").as_str().unwrap().to_string())
+            .collect()
+    };
+    for id in ids {
+        wait_done(&addr, &id, Duration::from_secs(120));
+    }
+    daemon.shutdown();
+}
