@@ -54,6 +54,13 @@ const USAGE: &str = "usage: mutransfer <exp|train|transfer|coord-check|list-arti
                       stripped, records sorted) for bit-exact comparison
   serve               --state-dir DIR [--addr HOST:PORT]  run the tuning daemon
                       (REST + SSE; a killed daemon resumes its queue on restart)
+                      [--http-workers N]  connection pool size (default 8;
+                      beyond-capacity connects get 503 + Retry-After)
+                      [--exec-slots N]    concurrent jobs (default 2)
+                      [--workers N]       shared trial-worker budget, split
+                      fairly across running jobs (default: all cores)
+                      [--max-conns N]     accepted-connection cap (default 1024)
+                      [--cache-mb N]      results byte-cache budget (default 32)
   submit              --addr A [--name S --kind sweep|transfer] + transfer flags;
                       prints the new job id
   status              --addr A [JOB]     list jobs / show one job
@@ -265,8 +272,18 @@ fn real_main() -> Result<()> {
                 args.get("state-dir")
                     .context("serve needs --state-dir DIR (durable job registry)")?,
             );
+            let cfg = serve::ServeConfig {
+                http_workers: args.usize_or("http-workers", 8),
+                exec_slots: args.usize_or("exec-slots", 2),
+                // 0 = auto (all cores); the FairBudget splits this across
+                // however many jobs are running at once
+                worker_budget: args.usize_or("workers", 0),
+                max_conns: args.usize_or("max-conns", 1024),
+                cache_bytes: args.usize_or("cache-mb", 32).saturating_mul(1 << 20),
+            };
             args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
-            let daemon = serve::Daemon::start(&addr, &state_dir, Some(artifacts.clone()))?;
+            let daemon =
+                serve::Daemon::start_cfg(&addr, &state_dir, Some(artifacts.clone()), cfg)?;
             println!(
                 "mutransfer serve: listening on http://{} (state-dir {}, {} job(s) resumed)",
                 daemon.addr,

@@ -6,10 +6,17 @@
 //! | GET    | /jobs                 | 200               | `{"jobs":[view…]}`         |
 //! | GET    | /jobs/:id             | 200 / 404         | job view                   |
 //! | GET    | /jobs/:id/results     | 200 / 404 / 409   | canonical results JSON     |
+//! | GET    | /jobs/:id/journal     | 200 / 404         | last trial records, NDJSON |
 //! | DELETE | /jobs/:id             | 200 / 404 / 409   | `{"id","state"}`           |
 //! | GET    | /jobs/:id/events      | 200 / 404 (SSE)   | `id:`/`data:` event frames |
 //! | GET    | /hp?width=N           | 200 / 404         | best transferred HPs       |
 //! | GET    | /healthz              | 200               | `{"ok":true}`              |
+//!
+//! `GET /jobs/:id/results` query params: `path=a.b.0` answers with just
+//! that value's raw slice (lazy scan, no tree build; unknown path → 404),
+//! `nocache=1` bypasses the results byte cache.  `GET /jobs/:id/journal`
+//! takes `tail=N` (default 10, cap 1000) and filters checkpoint records
+//! out of the trial stream.
 //!
 //! Client-supplied job names are echoed back **verbatim** (full JSON
 //! string escaping, surrogate pairs included — `util::json` round-trip
@@ -17,6 +24,7 @@
 //! method 405.
 
 use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
 use super::daemon::{CancelOutcome, JobSpec, Registry};
@@ -24,8 +32,15 @@ use super::http::{self, error_json, Request};
 use crate::util::json::{self, jstr, Json};
 
 /// Dispatch one request; returns whether the connection may be reused
-/// (SSE streams and malformed exchanges always close).
-pub fn handle(reg: &std::sync::Arc<Registry>, req: &Request, w: &mut TcpStream) -> bool {
+/// (SSE streams and malformed exchanges always close).  `stop` is the
+/// daemon's shutdown flag: long-lived SSE streams poll it so a shutdown
+/// join never waits on a subscriber whose job is still running.
+pub fn handle(
+    reg: &std::sync::Arc<Registry>,
+    req: &Request,
+    w: &mut TcpStream,
+    stop: &AtomicBool,
+) -> bool {
     let keep = req.keep_alive();
     let segs: Vec<&str> = req
         .path
@@ -68,13 +83,78 @@ pub fn handle(reg: &std::sync::Arc<Registry>, req: &Request, w: &mut TcpStream) 
                 &error_json(409, &format!("job is {}, results exist only for done jobs", st.as_str())),
                 keep,
             ),
-            Some(_) => match reg.results_raw(id) {
-                // raw passthrough: the stored bytes ARE the canonical
-                // form; re-serializing could only risk drift
-                Some(raw) => http::respond(w, 200, "application/json", raw.as_bytes(), keep),
-                None => http::respond_json(w, 500, &error_json(500, "results.json unreadable"), keep),
-            },
+            Some(_) => {
+                let nocache = req.query.contains_key("nocache");
+                match reg.results_bytes(id, !nocache) {
+                    None => http::respond_json(
+                        w,
+                        500,
+                        &error_json(500, "results.json unreadable"),
+                        keep,
+                    ),
+                    Some(bytes) => match req.query.get("path") {
+                        // raw passthrough: the stored bytes ARE the
+                        // canonical form; re-serializing could only risk
+                        // drift
+                        None => http::respond(w, 200, "application/json", &bytes, keep),
+                        Some(path) if path.split('.').any(|s| s.is_empty()) => {
+                            http::respond_json(w, 400, &error_json(400, "bad path"), keep)
+                        }
+                        Some(path) => {
+                            // partial read: scan to the path, answer with
+                            // just that value's raw slice
+                            let doc = std::str::from_utf8(&bytes).ok();
+                            match doc.map(|d| json::lazy::extract(d, path)) {
+                                Some(Ok(Some(slice))) => {
+                                    http::respond(w, 200, "application/json", slice.as_bytes(), keep)
+                                }
+                                Some(Ok(None)) => http::respond_json(
+                                    w,
+                                    404,
+                                    &error_json(404, "no such path in results"),
+                                    keep,
+                                ),
+                                _ => http::respond_json(
+                                    w,
+                                    500,
+                                    &error_json(500, "results.json corrupt"),
+                                    keep,
+                                ),
+                            }
+                        }
+                    },
+                }
+            }
         },
+        ("GET", ["jobs", id, "journal"]) => {
+            if reg.state(id).is_none() {
+                http::respond_json(w, 404, &error_json(404, "no such job"), keep)
+            } else {
+                let tail: usize = req
+                    .query
+                    .get("tail")
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(10)
+                    .clamp(1, 1000);
+                let text = std::fs::read_to_string(reg.job_dir(id).join("journal"))
+                    .unwrap_or_default();
+                // trial records only: checkpoint markers and torn tails
+                // are bookkeeping, not progress — the lazy scan keeps
+                // this O(bytes) with zero tree builds per poll
+                let lines: Vec<&str> = text
+                    .lines()
+                    .filter(|l| !l.trim().is_empty())
+                    .filter(|l| json::lazy::validate(l).is_ok())
+                    .filter(|l| !matches!(json::lazy::extract(l, "ckpt"), Ok(Some(_))))
+                    .collect();
+                let start = lines.len().saturating_sub(tail);
+                let mut body = lines[start..].join("\n");
+                if !body.is_empty() {
+                    body.push('\n');
+                }
+                http::respond(w, 200, "application/x-ndjson", body.as_bytes(), keep)
+            }
+        }
         ("DELETE", ["jobs", id]) => match reg.cancel(id) {
             Ok(CancelOutcome::Cancelled) => http::respond_json(
                 w,
@@ -99,7 +179,7 @@ pub fn handle(reg: &std::sync::Arc<Registry>, req: &Request, w: &mut TcpStream) 
             }
             Err(e) => http::respond_json(w, 500, &error_json(500, &format!("{e:#}")), keep),
         },
-        ("GET", ["jobs", id, "events"]) => return stream_events(reg, req, id, w),
+        ("GET", ["jobs", id, "events"]) => return stream_events(reg, req, id, w, stop),
         ("GET", ["hp"]) => {
             let width = req.query.get("width").and_then(|v| v.parse().ok());
             match reg.best_hp(width) {
@@ -114,7 +194,8 @@ pub fn handle(reg: &std::sync::Arc<Registry>, req: &Request, w: &mut TcpStream) 
         }
         // known resources, wrong method
         (_, ["jobs"]) | (_, ["jobs", _]) | (_, ["jobs", _, "results"])
-        | (_, ["jobs", _, "events"]) | (_, ["hp"]) | (_, ["healthz"]) => {
+        | (_, ["jobs", _, "journal"]) | (_, ["jobs", _, "events"]) | (_, ["hp"])
+        | (_, ["healthz"]) => {
             http::respond_json(w, 405, &error_json(405, "method not allowed"), keep)
         }
         _ => http::respond_json(w, 404, &error_json(404, "no such route"), keep),
@@ -124,14 +205,16 @@ pub fn handle(reg: &std::sync::Arc<Registry>, req: &Request, w: &mut TcpStream) 
 
 /// `GET /jobs/:id/events`: replay retained history from `?after=SEQ` (or
 /// the standard `Last-Event-ID` header), then stream live events.  The
-/// stream ends when the job's bus closes (terminal state) or the client
-/// disconnects; idle gaps carry `: ping` comments so dead peers are
-/// noticed.  Always closes the connection (SSE has no length framing).
+/// stream ends when the job's bus closes (terminal state), the client
+/// disconnects, or the daemon begins shutting down; idle gaps carry
+/// `: ping` comments so dead peers are noticed.  Always closes the
+/// connection (SSE has no length framing).
 fn stream_events(
     reg: &std::sync::Arc<Registry>,
     req: &Request,
     id: &str,
     w: &mut TcpStream,
+    stop: &AtomicBool,
 ) -> bool {
     let Some(bus) = reg.bus(id) else {
         let _ = http::respond_json(w, 404, &error_json(404, "no such job"), false);
@@ -156,7 +239,8 @@ fn stream_events(
                 }
             }
             Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                if http::sse_ping(w).is_err() {
+                // stream pinning a pool worker must not block shutdown
+                if stop.load(Ordering::SeqCst) || http::sse_ping(w).is_err() {
                     break;
                 }
             }

@@ -1,6 +1,7 @@
-//! The tuning-service daemon: a durable job registry + FIFO queue feeding
-//! one executor thread, fronted by the REST/SSE API in [`super::api`]
-//! (DESIGN.md §9).
+//! The tuning-service daemon: a durable job registry + work queue feeding
+//! N executor slots (trial work divided fairly across running jobs by a
+//! shared [`crate::util::pool::FairBudget`]), fronted by the REST/SSE API
+//! in [`super::api`] over a bounded connection worker pool (DESIGN.md §9).
 //!
 //! Durability model — everything the daemon must not lose lives on disk
 //! under `--state-dir`, published with the same crash-consistency rules
@@ -23,12 +24,12 @@
 //! daemon end-to-end step and `rust/tests/serve_e2e.rs`).
 
 use std::collections::{BTreeMap, VecDeque};
-use std::io::BufReader;
+use std::io::{BufRead, BufReader};
 use std::net::{SocketAddr, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
@@ -42,6 +43,7 @@ use crate::transfer::{mu_transfer, tune_only, TransferSetup, TunerKind};
 use crate::tuner::SearchSpace;
 use crate::util::fsio::write_atomic;
 use crate::util::json::{self, jnum, jstr, Json};
+use crate::util::pool;
 
 /// The journal/result key label every daemon job runs under.  Pinned to
 /// the offline CLI's label so a daemon-run sweep and `mutransfer transfer`
@@ -318,6 +320,23 @@ fn extract_best(results: &Json) -> Option<(f64, Json)> {
     Some((loss, assignment.clone()))
 }
 
+/// [`extract_best`] from raw document *text*, building a tree only for
+/// the (small) winning assignment — the startup scan reads every done
+/// job's results.json, and those documents are dominated by loss curves
+/// the `/hp` answer never touches.
+fn lazy_best(text: &str) -> Option<(f64, Json)> {
+    let assignment = json::lazy::extract(text, "best").ok()??;
+    if assignment == "null" {
+        return None;
+    }
+    let loss: f64 = json::lazy::extract(text, "best_val_loss")
+        .ok()??
+        .parse()
+        .ok()
+        .filter(|l: &f64| l.is_finite())?;
+    Some((loss, json::parse(assignment).ok()?))
+}
+
 struct RegInner {
     jobs: BTreeMap<String, JobEntry>,
     queue: VecDeque<String>,
@@ -336,18 +355,125 @@ pub enum CancelOutcome {
     NotFound,
 }
 
+/// Sizing knobs for [`Daemon::start_cfg`].  [`Daemon::start`] uses the
+/// defaults; `mutransfer serve` exposes each field as a CLI flag.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// HTTP worker threads servicing the pooled connections
+    pub http_workers: usize,
+    /// executor slots — jobs running concurrently
+    pub exec_slots: usize,
+    /// total trial-worker budget shared max-min fairly across running
+    /// jobs; 0 = auto (the machine's available parallelism)
+    pub worker_budget: usize,
+    /// open-connection cap; beyond it the acceptor answers `503`
+    pub max_conns: usize,
+    /// LRU byte budget for the in-memory results cache
+    pub cache_bytes: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            http_workers: 8,
+            exec_slots: 2,
+            worker_budget: 0,
+            max_conns: 1024,
+            cache_bytes: 32 * 1024 * 1024,
+        }
+    }
+}
+
+/// In-memory LRU byte cache of terminal results documents, keyed by job
+/// id.  Serialization + disk I/O happen once per completed job; every
+/// later `GET /jobs/:id/results` is a map lookup and an `Arc` clone.
+/// Entries are evicted least-recently-touched-first once the byte budget
+/// is exceeded; a document larger than the whole budget is simply never
+/// cached (served from disk each time rather than thrashing the cache).
+struct ResultCache {
+    budget: usize,
+    inner: Mutex<CacheInner>,
+}
+
+#[derive(Default)]
+struct CacheInner {
+    entries: BTreeMap<String, CacheEntry>,
+    total: usize,
+    clock: u64,
+}
+
+struct CacheEntry {
+    bytes: Arc<Vec<u8>>,
+    tick: u64,
+}
+
+impl ResultCache {
+    fn new(budget: usize) -> ResultCache {
+        ResultCache {
+            budget,
+            inner: Mutex::new(CacheInner::default()),
+        }
+    }
+
+    fn get(&self, id: &str) -> Option<Arc<Vec<u8>>> {
+        let mut c = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        c.clock += 1;
+        let now = c.clock;
+        let e = c.entries.get_mut(id)?;
+        e.tick = now;
+        Some(e.bytes.clone())
+    }
+
+    fn put(&self, id: &str, bytes: Arc<Vec<u8>>) {
+        if bytes.len() > self.budget {
+            return;
+        }
+        let mut c = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        c.clock += 1;
+        let tick = c.clock;
+        let len = bytes.len();
+        if let Some(old) = c.entries.insert(id.to_string(), CacheEntry { bytes, tick }) {
+            c.total -= old.bytes.len();
+        }
+        c.total += len;
+        while c.total > self.budget {
+            let victim = c
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.tick)
+                .map(|(k, _)| k.clone());
+            let Some(k) = victim else { break };
+            if let Some(e) = c.entries.remove(&k) {
+                c.total -= e.bytes.len();
+            }
+        }
+    }
+
+    fn invalidate(&self, id: &str) {
+        let mut c = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(e) = c.entries.remove(id) {
+            c.total -= e.bytes.len();
+        }
+    }
+}
+
 /// Durable job registry: the single source of truth the HTTP handlers and
-/// the executor share.  All mutation happens under one mutex; filesystem
+/// the executors share.  All mutation happens under one mutex; filesystem
 /// writes are tmp-then-rename so a crash at any instant leaves either the
 /// old or the new contents, never a torn file.
 pub struct Registry {
     state_dir: PathBuf,
     inner: Mutex<RegInner>,
     work: Condvar,
+    cache: ResultCache,
 }
 
 impl Registry {
     pub fn open(state_dir: &Path) -> Result<Arc<Registry>> {
+        Self::open_cfg(state_dir, ServeConfig::default().cache_bytes)
+    }
+
+    pub fn open_cfg(state_dir: &Path, cache_bytes: usize) -> Result<Arc<Registry>> {
         let jobs_dir = state_dir.join("jobs");
         std::fs::create_dir_all(&jobs_dir)
             .with_context(|| format!("creating state dir {}", jobs_dir.display()))?;
@@ -378,14 +504,16 @@ impl Registry {
                         bus.close();
                         if state == JobState::Done {
                             // one read at startup, then /hp answers from
-                            // memory for the daemon's lifetime
+                            // memory for the daemon's lifetime; the lazy
+                            // scan pulls just the two `/hp` leaves out of
+                            // documents dominated by loss curves, instead
+                            // of building every job's full tree
                             best = std::fs::read_to_string(
                                 jobs_dir.join(&id).join("results.json"),
                             )
                             .ok()
-                            .and_then(|t| json::parse(&t).ok())
-                            .as_ref()
-                            .and_then(extract_best);
+                            .as_deref()
+                            .and_then(lazy_best);
                         }
                     } else {
                         // no terminal state recorded: the daemon died while
@@ -412,6 +540,7 @@ impl Registry {
             state_dir: state_dir.to_path_buf(),
             inner: Mutex::new(RegInner { jobs, queue, next_id }),
             work: Condvar::new(),
+            cache: ResultCache::new(cache_bytes),
         }))
     }
 
@@ -518,7 +647,12 @@ impl Registry {
         let dir = self.job_dir(id);
         let (state, error, best) = match &outcome {
             Ok(results) => {
-                write_atomic(&dir.join("results.json"), results.to_string().as_bytes())?;
+                // serialize exactly once: the same bytes go to disk and
+                // into the results cache, so a cached read can never
+                // diverge from what a fresh disk read would return
+                let text = results.to_string();
+                write_atomic(&dir.join("results.json"), text.as_bytes())?;
+                self.cache.put(id, Arc::new(text.into_bytes()));
                 (JobState::Done, None, extract_best(results))
             }
             Err(e) => (JobState::Failed, Some(format!("{e:#}")), None),
@@ -570,6 +704,10 @@ impl Registry {
                 entry.bus.close();
                 inner.jobs.remove(id);
                 drop(inner);
+                // drop cached bytes before the files: even if the removal
+                // errors, the cache must not keep serving a job the
+                // registry no longer knows
+                self.cache.invalidate(id);
                 std::fs::remove_dir_all(self.job_dir(id))
                     .with_context(|| format!("removing job dir for {id}"))?;
                 Ok(CancelOutcome::Deleted)
@@ -628,13 +766,31 @@ impl Registry {
         self.lock().jobs.get(id).map(|e| e.bus.clone())
     }
 
-    /// Raw `results.json` bytes for a `done` job (`None` = not done yet;
-    /// the API distinguishes unknown ids separately).
-    pub fn results_raw(&self, id: &str) -> Option<String> {
+    /// Raw `results.json` bytes for a `done` job (`None` = not done yet
+    /// or unknown; the API distinguishes unknown ids separately).  With
+    /// `use_cache` the bytes come from the LRU cache when present (misses
+    /// repopulate it); without, every call is a fresh disk read — the
+    /// `?nocache=1` escape hatch and the bench's uncached baseline.
+    pub fn results_bytes(&self, id: &str, use_cache: bool) -> Option<Arc<Vec<u8>>> {
         if self.state(id) != Some(JobState::Done) {
             return None;
         }
-        std::fs::read_to_string(self.job_dir(id).join("results.json")).ok()
+        if use_cache {
+            if let Some(b) = self.cache.get(id) {
+                return Some(b);
+            }
+        }
+        let bytes = Arc::new(std::fs::read(self.job_dir(id).join("results.json")).ok()?);
+        if use_cache {
+            self.cache.put(id, bytes.clone());
+        }
+        Some(bytes)
+    }
+
+    /// [`Registry::results_bytes`] as a `String` (CLI/test convenience).
+    pub fn results_raw(&self, id: &str) -> Option<String> {
+        self.results_bytes(id, true)
+            .map(|b| String::from_utf8_lossy(&b).into_owned())
     }
 
     /// The μTransfer question, answered from the registry: the best HPs
@@ -697,13 +853,24 @@ fn repair_torn_first_append(path: &Path) {
 
 /// Execute one job through the existing sweep/transfer machinery, with
 /// the job's event bus as the sink.  Pure function of (spec, job dir):
-/// results are the canonical [`crate::transfer::TransferOutcome::to_json`].
-pub fn run_job(rt: &Runtime, dir: &Path, spec: &JobSpec, bus: Arc<dyn EventSink>) -> Result<Json> {
+/// results are the canonical [`crate::transfer::TransferOutcome::to_json`]
+/// — the fair-share `budget` lease throttles *when* trials execute, never
+/// what they compute, so results stay bit-identical at any slot count.
+pub fn run_job(
+    rt: &Runtime,
+    dir: &Path,
+    spec: &JobSpec,
+    bus: Arc<dyn EventSink>,
+    budget: Option<Arc<pool::BudgetLease>>,
+) -> Result<Json> {
     let journal = dir.join("journal");
     repair_torn_first_append(&journal);
     let mut sweep = Sweep::new(rt).with_journal(&journal)?;
     if spec.workers > 0 {
         sweep = sweep.with_workers(spec.workers);
+    }
+    if let Some(lease) = budget {
+        sweep = sweep.with_budget(lease);
     }
     if spec.ckpt_every > 0 || matches!(spec.tuner, TunerKind::Sha { .. }) {
         sweep = sweep.with_checkpoints(&dir.join("ckpt"), spec.ckpt_every)?;
@@ -717,139 +884,153 @@ pub fn run_job(rt: &Runtime, dir: &Path, spec: &JobSpec, bus: Arc<dyn EventSink>
     Ok(out.to_json())
 }
 
-/// A running daemon: registry + executor thread + HTTP acceptor.
-pub struct Daemon {
-    pub registry: Arc<Registry>,
-    pub addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    acceptor: Option<std::thread::JoinHandle<()>>,
-    executor: Option<std::thread::JoinHandle<()>>,
+// ---------------------------------------------------------------------------
+// connection pool
+// ---------------------------------------------------------------------------
+
+/// One pooled keep-alive connection (reader/writer halves of a socket).
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    idle_since: Instant,
 }
 
-impl Daemon {
-    /// Bind `addr` (port 0 = ephemeral; the bound address is in
-    /// [`Daemon::addr`]), open the registry under `state_dir`, re-queue
-    /// unfinished jobs, and start serving.
-    pub fn start(addr: &str, state_dir: &Path, artifacts: Option<PathBuf>) -> Result<Daemon> {
-        let registry = Registry::open(state_dir)?;
-        // fail fast on an unloadable artifacts path: degrading to the
-        // native backend must be a startup error, not a silent mid-queue
-        // substitution the operator never sees
-        if let Some(p) = &artifacts {
-            Runtime::new(p)
-                .with_context(|| format!("loading artifacts from {}", p.display()))?;
-        }
-        // SO_REUSEADDR bind: a restarted daemon must reclaim its address
-        // while its previous life's connections sit in TIME_WAIT
-        let listener = crate::serve::http::bind_reuse(addr)
-            .with_context(|| format!("binding {addr}"))?;
-        let bound = listener.local_addr()?;
-        let stop = Arc::new(AtomicBool::new(false));
+/// Bounded connection pool: the acceptor pushes sockets, a fixed set of
+/// HTTP workers pops them, serves a bounded burst, and requeues the
+/// connection if it goes quiet — so 256 keep-alive clients multiplex over
+/// `http_workers` threads instead of pinning 256.  `active` counts every
+/// admitted socket (queued *or* being served); the acceptor answers `503`
+/// past `max_conns`, never spawning an unbounded thread.
+struct ConnPool {
+    queue: Mutex<VecDeque<Conn>>,
+    ready: Condvar,
+    active: AtomicUsize,
+    max_conns: usize,
+}
 
-        let exec_reg = registry.clone();
-        let exec_stop = stop.clone();
-        let executor = std::thread::spawn(move || {
-            // the executor owns its Runtime: backends need not be Sync.
-            // Daemon::start already validated the artifacts path; if it
-            // became unloadable since, say so instead of degrading mutely.
-            let rt = match &artifacts {
-                Some(p) => Runtime::new(p).unwrap_or_else(|e| {
-                    eprintln!(
-                        "[serve] warning: artifacts became unavailable ({e:#}); using the native backend"
-                    );
-                    Runtime::native()
-                }),
-                None => Runtime::native(),
-            };
-            while let Some((id, spec)) = exec_reg.next_job(&exec_stop) {
-                eprintln!("[serve] job {id} ({}) started", spec.name);
-                let dir = exec_reg.job_dir(&id);
-                let bus: Arc<dyn EventSink> = match exec_reg.bus(&id) {
-                    Some(b) => b,
-                    None => Arc::new(crate::serve::events::NullSink),
-                };
-                let outcome = run_job(&rt, &dir, &spec, bus);
-                match &outcome {
-                    Ok(_) => eprintln!("[serve] job {id} done"),
-                    Err(e) => eprintln!("[serve] job {id} FAILED: {e:#}"),
-                }
-                if let Err(e) = exec_reg.finish(&id, outcome) {
-                    eprintln!("[serve] persisting terminal state for {id} failed: {e:#}");
-                }
-            }
-        });
-
-        let acc_reg = registry.clone();
-        let acc_stop = stop.clone();
-        let acceptor = std::thread::spawn(move || {
-            for stream in listener.incoming() {
-                if acc_stop.load(Ordering::SeqCst) {
-                    break;
-                }
-                let Ok(stream) = stream else { continue };
-                let reg = acc_reg.clone();
-                std::thread::spawn(move || handle_connection(stream, &reg));
-            }
-        });
-
-        Ok(Daemon {
-            registry,
-            addr: bound,
-            stop,
-            acceptor: Some(acceptor),
-            executor: Some(executor),
-        })
-    }
-
-    /// Block on the acceptor — the `mutransfer serve` foreground mode.
-    pub fn join(mut self) {
-        if let Some(h) = self.acceptor.take() {
-            let _ = h.join();
-        }
-        if let Some(h) = self.executor.take() {
-            let _ = h.join();
+impl ConnPool {
+    fn new(max_conns: usize) -> ConnPool {
+        ConnPool {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+            active: AtomicUsize::new(0),
+            max_conns: max_conns.max(1),
         }
     }
 
-    /// Graceful stop for tests/benches: stops accepting, wakes the
-    /// executor, joins both threads.  Call once the queue is drained — a
-    /// mid-job executor finishes its current job first (jobs themselves
-    /// are never interrupted; that is what kill -9 + restart is for).
-    pub fn shutdown(mut self) {
-        self.stop.store(true, Ordering::SeqCst);
-        // poke the blocking accept() so the acceptor observes `stop`
-        let _ = TcpStream::connect(self.addr);
-        if let Some(h) = self.acceptor.take() {
-            let _ = h.join();
+    fn push(&self, conn: Conn) {
+        self.queue
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .push_back(conn);
+        self.ready.notify_one();
+    }
+
+    fn pop(&self, stop: &AtomicBool) -> Option<Conn> {
+        let mut q = self.queue.lock().unwrap_or_else(|e| e.into_inner());
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return None; // shutdown drops queued conns unanswered
+            }
+            if let Some(c) = q.pop_front() {
+                return Some(c);
+            }
+            q = self
+                .ready
+                .wait_timeout(q, Duration::from_millis(50))
+                .unwrap_or_else(|e| e.into_inner())
+                .0;
         }
-        if let Some(h) = self.executor.take() {
-            let _ = h.join();
-        }
+    }
+
+    fn release(&self, conn: Conn) {
+        drop(conn);
+        self.active.fetch_sub(1, Ordering::SeqCst);
     }
 }
 
-fn handle_connection(stream: TcpStream, reg: &Arc<Registry>) {
-    stream.set_nodelay(true).ok();
-    // bound idle/half-open peers: a silent connection must release its
-    // thread + socket instead of pinning them forever (SSE streams never
-    // read after the request, so the write path is unaffected)
-    stream
-        .set_read_timeout(Some(Duration::from_secs(60)))
-        .ok();
-    let Ok(read_half) = stream.try_clone() else { return };
-    let mut reader = BufReader::new(read_half);
-    let mut writer = stream;
-    loop {
-        match crate::serve::http::read_request(&mut reader) {
+/// How long a pooled connection may sit idle before it is closed.
+const IDLE_CLOSE: Duration = Duration::from_secs(60);
+/// Probe window per scheduling slice — also the worker's sleep, so an
+/// idle pool rotates through its connections without spinning hot.
+const PROBE: Duration = Duration::from_millis(2);
+/// Mid-request / mid-body read timeout once bytes have started arriving.
+const REQUEST_READ: Duration = Duration::from_secs(10);
+/// Requests served per connection per scheduling slice before it must
+/// requeue behind its siblings (keeps one pipelining client from pinning
+/// a worker).
+const BURST: usize = 32;
+
+fn conn_worker(pool: &ConnPool, reg: &Arc<Registry>, stop: &AtomicBool) {
+    while let Some(conn) = pool.pop(stop) {
+        serve_conn(pool, reg, stop, conn);
+    }
+}
+
+enum Probe {
+    Data,
+    Eof,
+    Quiet,
+    Dead,
+}
+
+/// Serve one pooled connection for one scheduling slice.
+fn serve_conn(pool: &ConnPool, reg: &Arc<Registry>, stop: &AtomicBool, mut conn: Conn) {
+    if conn.reader.buffer().is_empty() {
+        // nothing pre-buffered: probe briefly for new bytes (try_clone'd
+        // halves share the socket, so one timeout call covers both)
+        conn.writer.set_read_timeout(Some(PROBE)).ok();
+        let probe = match conn.reader.fill_buf() {
+            Ok([]) => Probe::Eof,
+            Ok(_) => Probe::Data,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                Probe::Quiet
+            }
+            Err(_) => Probe::Dead,
+        };
+        match probe {
+            Probe::Data => {}
+            Probe::Eof | Probe::Dead => {
+                pool.release(conn);
+                return;
+            }
+            Probe::Quiet => {
+                if conn.idle_since.elapsed() > IDLE_CLOSE {
+                    pool.release(conn); // silent idle close
+                } else {
+                    pool.push(conn); // round-robin back into the pool
+                }
+                return;
+            }
+        }
+    }
+    // bytes are waiting: parse + answer a bounded burst of requests
+    conn.writer.set_read_timeout(Some(REQUEST_READ)).ok();
+    for _ in 0..BURST {
+        match crate::serve::http::read_request(&mut conn.reader) {
             Ok(Some(req)) => {
-                if !crate::serve::api::handle(reg, &req, &mut writer) {
+                if !crate::serve::api::handle(reg, &req, &mut conn.writer, stop) {
+                    pool.release(conn);
+                    return;
+                }
+                conn.idle_since = Instant::now();
+                if conn.reader.buffer().is_empty() {
+                    pool.push(conn);
                     return;
                 }
             }
-            Ok(None) => return, // clean keep-alive close
+            Ok(None) => {
+                pool.release(conn); // clean keep-alive close
+                return;
+            }
             Err(e) => {
-                // idle timeout: hang up silently — an unsolicited 400
-                // would be read by a keep-alive client as the (wrong)
+                // mid-request stall: hang up silently — an unsolicited
+                // 400 would be read by a keep-alive client as the (wrong)
                 // response to its NEXT request
                 let timed_out = e.chain().any(|c| {
                     c.downcast_ref::<std::io::Error>()
@@ -864,14 +1045,190 @@ fn handle_connection(stream: TcpStream, reg: &Arc<Registry>) {
                 if !timed_out {
                     // genuinely malformed request: best-effort 400
                     let _ = crate::serve::http::respond_json(
-                        &mut writer,
+                        &mut conn.writer,
                         400,
                         &crate::serve::http::error_json(400, "malformed request"),
                         false,
                     );
                 }
+                pool.release(conn);
                 return;
             }
+        }
+    }
+    // burst exhausted with more pipelined bytes buffered: requeue so
+    // sibling connections get a turn
+    pool.push(conn);
+}
+
+/// A running daemon: registry + executor slots + HTTP acceptor feeding a
+/// bounded connection worker pool.
+pub struct Daemon {
+    pub registry: Arc<Registry>,
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    executors: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Daemon {
+    /// Bind `addr` (port 0 = ephemeral; the bound address is in
+    /// [`Daemon::addr`]), open the registry under `state_dir`, re-queue
+    /// unfinished jobs, and start serving with default sizing.
+    pub fn start(addr: &str, state_dir: &Path, artifacts: Option<PathBuf>) -> Result<Daemon> {
+        Self::start_cfg(addr, state_dir, artifacts, ServeConfig::default())
+    }
+
+    /// [`Daemon::start`] with explicit pool/executor/cache sizing.
+    pub fn start_cfg(
+        addr: &str,
+        state_dir: &Path,
+        artifacts: Option<PathBuf>,
+        cfg: ServeConfig,
+    ) -> Result<Daemon> {
+        let registry = Registry::open_cfg(state_dir, cfg.cache_bytes)?;
+        // fail fast on an unloadable artifacts path: degrading to the
+        // native backend must be a startup error, not a silent mid-queue
+        // substitution the operator never sees
+        if let Some(p) = &artifacts {
+            Runtime::new(p)
+                .with_context(|| format!("loading artifacts from {}", p.display()))?;
+        }
+        // SO_REUSEADDR bind: a restarted daemon must reclaim its address
+        // while its previous life's connections sit in TIME_WAIT
+        let listener = crate::serve::http::bind_reuse(addr)
+            .with_context(|| format!("binding {addr}"))?;
+        let bound = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+
+        // executor slots share one fair-share trial-worker budget: a big
+        // sweep and a small one run concurrently, each throttled to its
+        // max-min fair share of the machine
+        let budget_total = if cfg.worker_budget == 0 {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        } else {
+            cfg.worker_budget
+        };
+        let budget = pool::FairBudget::new(budget_total);
+        let mut executors = Vec::new();
+        for slot in 0..cfg.exec_slots.max(1) {
+            let reg = registry.clone();
+            let stop = stop.clone();
+            let artifacts = artifacts.clone();
+            let budget = budget.clone();
+            executors.push(std::thread::spawn(move || {
+                // each slot owns its Runtime: backends need not be Sync.
+                // Daemon::start already validated the artifacts path; if
+                // it became unloadable since, say so instead of degrading
+                // mutely.
+                let rt = match &artifacts {
+                    Some(p) => Runtime::new(p).unwrap_or_else(|e| {
+                        eprintln!(
+                            "[serve] warning: artifacts became unavailable ({e:#}); using the native backend"
+                        );
+                        Runtime::native()
+                    }),
+                    None => Runtime::native(),
+                };
+                while let Some((id, spec)) = reg.next_job(&stop) {
+                    eprintln!("[serve] job {id} ({}) started on slot {slot}", spec.name);
+                    let dir = reg.job_dir(&id);
+                    let bus: Arc<dyn EventSink> = match reg.bus(&id) {
+                        Some(b) => b,
+                        None => Arc::new(crate::serve::events::NullSink),
+                    };
+                    let lease = Arc::new(budget.lease());
+                    let outcome = run_job(&rt, &dir, &spec, bus, Some(lease));
+                    match &outcome {
+                        Ok(_) => eprintln!("[serve] job {id} done"),
+                        Err(e) => eprintln!("[serve] job {id} FAILED: {e:#}"),
+                    }
+                    if let Err(e) = reg.finish(&id, outcome) {
+                        eprintln!("[serve] persisting terminal state for {id} failed: {e:#}");
+                    }
+                }
+            }));
+        }
+
+        let conn_pool = Arc::new(ConnPool::new(cfg.max_conns));
+        let mut workers = Vec::new();
+        for _ in 0..cfg.http_workers.max(1) {
+            let pool = conn_pool.clone();
+            let reg = registry.clone();
+            let stop = stop.clone();
+            workers.push(std::thread::spawn(move || conn_worker(&pool, &reg, &stop)));
+        }
+
+        let acc_pool = conn_pool;
+        let acc_stop = stop.clone();
+        let acceptor = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if acc_stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                if acc_pool.active.load(Ordering::SeqCst) >= acc_pool.max_conns {
+                    // full house: a one-line 503 + close, never a new
+                    // thread and never a silent drop
+                    let mut s = stream;
+                    let _ = crate::serve::http::respond_overload(&mut s);
+                    continue;
+                }
+                stream.set_nodelay(true).ok();
+                let Ok(read_half) = stream.try_clone() else { continue };
+                acc_pool.active.fetch_add(1, Ordering::SeqCst);
+                acc_pool.push(Conn {
+                    reader: BufReader::new(read_half),
+                    writer: stream,
+                    idle_since: Instant::now(),
+                });
+            }
+        });
+
+        Ok(Daemon {
+            registry,
+            addr: bound,
+            stop,
+            acceptor: Some(acceptor),
+            workers,
+            executors,
+        })
+    }
+
+    /// Block on the serving threads — `mutransfer serve` foreground mode.
+    pub fn join(mut self) {
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        for h in self.executors.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    /// Graceful stop for tests/benches: stops accepting, wakes workers
+    /// and executors, joins every thread — a *bounded* join, since HTTP
+    /// workers observe `stop` within one pop/SSE timeout tick and
+    /// executors between jobs.  Call once the queue is drained — a
+    /// mid-job executor finishes its current job first (jobs themselves
+    /// are never interrupted; that is what kill -9 + restart is for).
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // poke the blocking accept() so the acceptor observes `stop`
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        for h in self.executors.drain(..) {
+            let _ = h.join();
         }
     }
 }
@@ -1072,6 +1429,85 @@ mod tests {
         )
         .unwrap();
         assert_eq!(reg.best_hp(None).unwrap().req("job").as_str().unwrap(), id2);
+    }
+
+    #[test]
+    fn results_cache_serves_finish_bytes_and_invalidates_on_delete() {
+        let dir = tmpdir("rescache");
+        let reg = Registry::open(&dir).unwrap();
+        let id = reg.submit(JobSpec::default()).unwrap();
+        let results = json::parse(r#"{"best":{"lr":0.01},"best_val_loss":2.5}"#).unwrap();
+        reg.finish(&id, Ok(results.clone())).unwrap();
+        let cached = reg.results_bytes(&id, true).unwrap();
+        let fresh = reg.results_bytes(&id, false).unwrap();
+        assert_eq!(*cached, *fresh, "cached bytes must equal a disk read");
+        assert_eq!(String::from_utf8(fresh.to_vec()).unwrap(), results.to_string());
+        // the cached read is served from memory: delete the file behind
+        // the cache's back and the cached path still answers
+        std::fs::remove_file(reg.job_dir(&id).join("results.json")).unwrap();
+        assert!(reg.results_bytes(&id, true).is_some());
+        assert!(reg.results_bytes(&id, false).is_none());
+        // restore + delete the job: the cache entry must die with it
+        std::fs::write(reg.job_dir(&id).join("results.json"), "{}").unwrap();
+        assert_eq!(reg.cancel(&id).unwrap(), CancelOutcome::Deleted);
+        assert!(reg.results_bytes(&id, true).is_none());
+    }
+
+    #[test]
+    fn results_cache_evicts_by_lru_byte_budget() {
+        let big = "x".repeat(400);
+        let doc = |tag: &str| {
+            Ok(Json::from_pairs(vec![("tag", jstr(tag)), ("pad", jstr(&big))]))
+        };
+        let dir = tmpdir("lru");
+        // budget fits roughly two padded documents, not three
+        let reg = Registry::open_cfg(&dir, 1024).unwrap();
+        let a = reg.submit(JobSpec::default()).unwrap();
+        let b = reg.submit(JobSpec::default()).unwrap();
+        let c = reg.submit(JobSpec::default()).unwrap();
+        reg.finish(&a, doc("a")).unwrap();
+        reg.finish(&b, doc("b")).unwrap();
+        // touch a so b is the least-recently-used entry
+        assert!(reg.results_bytes(&a, true).is_some());
+        reg.finish(&c, doc("c")).unwrap();
+        let inner = reg.cache.inner.lock().unwrap();
+        assert!(inner.total <= 1024, "cache over budget: {}", inner.total);
+        assert!(inner.entries.contains_key(&c), "newest entry must survive");
+        assert!(!inner.entries.contains_key(&b), "LRU entry must be evicted");
+        drop(inner);
+        // evicted entries still answer correctly (disk + repopulate)
+        let back = reg.results_bytes(&b, true).unwrap();
+        assert!(String::from_utf8_lossy(&back).contains("\"tag\":\"b\""));
+    }
+
+    #[test]
+    fn oversized_results_bypass_the_cache() {
+        let dir = tmpdir("oversize");
+        let reg = Registry::open_cfg(&dir, 64).unwrap();
+        let id = reg.submit(JobSpec::default()).unwrap();
+        reg.finish(
+            &id,
+            Ok(Json::from_pairs(vec![("pad", jstr(&"y".repeat(500)))])),
+        )
+        .unwrap();
+        assert!(reg.cache.inner.lock().unwrap().entries.is_empty());
+        // still served, straight from disk
+        assert!(reg.results_bytes(&id, true).is_some());
+    }
+
+    #[test]
+    fn lazy_best_matches_eager_extract_best() {
+        let docs = [
+            r#"{"best":{"lr":0.01,"sigma_w":1.5},"best_val_loss":2.5,"curve":[1,2,3]}"#,
+            r#"{"best":null,"best_val_loss":null}"#,
+            r#"{"best_val_loss":2.0}"#,
+            r#"{"best":{"lr":0.1}}"#,
+            "{}",
+        ];
+        for d in docs {
+            let eager = json::parse(d).ok().as_ref().and_then(extract_best);
+            assert_eq!(lazy_best(d), eager, "lazy/eager disagree on {d}");
+        }
     }
 
     #[test]

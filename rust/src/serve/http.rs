@@ -220,7 +220,13 @@ fn read_limited_line(r: &mut impl BufRead) -> Result<Option<String>> {
 
 /// Parse one request off the wire.  `Ok(None)` = the peer closed the
 /// connection cleanly between requests (normal keep-alive shutdown).
-pub fn read_request(r: &mut BufReader<TcpStream>) -> Result<Option<Request>> {
+///
+/// Generic over `BufRead` so the fuzz harness can drive the parser from
+/// in-memory byte slices.  Framing is deliberately strict — requests that
+/// play Content-Length games (duplicates, signs, `Transfer-Encoding`) are
+/// rejected outright rather than interpreted, because ambiguous framing
+/// is exactly how request smuggling works.
+pub fn read_request<R: BufRead>(r: &mut R) -> Result<Option<Request>> {
     let line = match read_limited_line(r)? {
         None => return Ok(None),
         Some(l) if l.is_empty() => match read_limited_line(r)? {
@@ -256,13 +262,32 @@ pub fn read_request(r: &mut BufReader<TcpStream>) -> Result<Option<Request>> {
             bail!("more than {MAX_HEADERS} headers");
         }
         let (k, v) = line.split_once(':').context("malformed header")?;
-        headers.insert(k.trim().to_ascii_lowercase(), v.trim().to_string());
+        let k = k.trim().to_ascii_lowercase();
+        let v = v.trim().to_string();
+        if k == "content-length" && headers.contains_key(&k) {
+            // duplicate Content-Length is the classic smuggling vector;
+            // silently keeping either copy would desync our framing from
+            // any front proxy's
+            bail!("duplicate content-length");
+        }
+        headers.insert(k, v);
     }
-    let len: usize = headers
-        .get("content-length")
-        .map(|v| v.parse().context("bad content-length"))
-        .transpose()?
-        .unwrap_or(0);
+    if headers.contains_key("transfer-encoding") {
+        // we never emit nor accept chunked bodies; a TE header combined
+        // with Content-Length is smuggling shape #1, so reject TE outright
+        bail!("transfer-encoding not supported");
+    }
+    let len: usize = match headers.get("content-length") {
+        None => 0,
+        Some(v) => {
+            // digit-only: usize::from_str also accepts a leading '+',
+            // which a stricter peer would frame differently
+            if v.is_empty() || !v.bytes().all(|b| b.is_ascii_digit()) {
+                bail!("bad content-length");
+            }
+            v.parse().context("bad content-length")?
+        }
+    };
     if len > MAX_BODY {
         bail!("body of {len} bytes exceeds {MAX_BODY}");
     }
@@ -287,8 +312,23 @@ fn reason(status: u16) -> &'static str {
         409 => "Conflict",
         413 => "Payload Too Large",
         500 => "Internal Server Error",
+        503 => "Service Unavailable",
         _ => "Unknown",
     }
+}
+
+/// Overload response sent by the acceptor when the connection pool is
+/// full: `503` + `Retry-After` so well-behaved clients back off, and
+/// `Connection: close` because no worker will ever service this socket.
+pub fn respond_overload(w: &mut impl Write) -> std::io::Result<()> {
+    let body = br#"{"error":"server at connection capacity"}"#;
+    write!(
+        w,
+        "HTTP/1.1 503 Service Unavailable\r\nContent-Type: application/json\r\nContent-Length: {}\r\nRetry-After: 1\r\nConnection: close\r\n\r\n",
+        body.len(),
+    )?;
+    w.write_all(body)?;
+    w.flush()
 }
 
 /// Write a complete response.  `keep_alive` controls the `Connection`
@@ -425,7 +465,7 @@ pub fn rpc(addr: &str, method: &str, path: &str, body: Option<&str>) -> Result<(
 pub fn sse(
     addr: &str,
     path: &str,
-    mut on_event: impl FnMut(u64, &str) -> bool,
+    on_event: impl FnMut(u64, &str) -> bool,
 ) -> Result<()> {
     let stream = TcpStream::connect(addr)
         .with_context(|| format!("connecting to {addr} (is the daemon running?)"))?;
@@ -452,11 +492,20 @@ pub fn sse(
             break;
         }
     }
-    // frames
+    sse_frames(&mut r, on_event)
+}
+
+/// Parse SSE frames off any `BufRead` until the stream ends or `on_event`
+/// returns `false`.  Factored out of [`sse`] so the fuzz harness can feed
+/// the frame parser truncated/garbage byte streams directly.
+pub fn sse_frames<R: BufRead>(
+    r: &mut R,
+    mut on_event: impl FnMut(u64, &str) -> bool,
+) -> Result<()> {
     let mut seq = 0u64;
     let mut data: Option<String> = None;
     loop {
-        let line = match read_limited_line(&mut r) {
+        let line = match read_limited_line(r) {
             Ok(Some(l)) => l,
             Ok(None) => return Ok(()), // server ended the stream
             Err(e) => {
@@ -577,6 +626,38 @@ mod tests {
         let mut buf = Vec::new();
         let _ = s.read_to_end(&mut buf);
         assert!(buf.is_empty(), "server must hang up on oversized lines");
+    }
+
+    #[test]
+    fn smuggling_shapes_are_rejected() {
+        let parse = |raw: &str| read_request(&mut raw.as_bytes());
+        // duplicate Content-Length
+        assert!(parse("POST /jobs HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 3\r\n\r\nab")
+            .is_err());
+        // any Transfer-Encoding
+        assert!(parse("POST /jobs HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n").is_err());
+        // non-digit / signed Content-Length
+        for cl in ["abc", "+5", "-1", "1 2", ""] {
+            assert!(
+                parse(&format!("POST / HTTP/1.1\r\nContent-Length: {cl}\r\n\r\n")).is_err(),
+                "content-length {cl:?} must be rejected"
+            );
+        }
+        // a plain well-formed request still parses from a byte slice
+        let req = parse("POST /jobs HTTP/1.1\r\nContent-Length: 2\r\n\r\nok")
+            .unwrap()
+            .unwrap();
+        assert_eq!(req.body, "ok");
+    }
+
+    #[test]
+    fn overload_response_is_a_parseable_503() {
+        let mut buf = Vec::new();
+        respond_overload(&mut buf).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 "), "{text}");
+        assert!(text.contains("Retry-After: 1"), "{text}");
+        assert!(text.contains("Connection: close"), "{text}");
     }
 
     #[test]

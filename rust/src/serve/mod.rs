@@ -6,16 +6,22 @@
 //! * [`events`] — the typed in-process event bus every long-running layer
 //!   (train drive loop, sweep scheduler, SHA tuner) emits progress into;
 //!   the offline CLI's stderr output is just the default sink.
-//! * [`daemon`] — a durable job registry + FIFO queue executing
-//!   sweep/transfer/SHA jobs on the existing sweep machinery.  Job specs
-//!   and terminal states persist under `--state-dir`; journals and
-//!   checkpoints (PR-4) make a SIGKILLed daemon resume its queue on
-//!   restart without re-running completed trials.
+//! * [`daemon`] — a durable job registry + queue executing sweep/
+//!   transfer/SHA jobs on the existing sweep machinery, now across N
+//!   executor slots whose trials share one fair-share worker budget
+//!   ([`crate::util::pool::FairBudget`]).  Job specs and terminal states
+//!   persist under `--state-dir`; journals and checkpoints (PR-4) make a
+//!   SIGKILLed daemon resume its queue on restart without re-running
+//!   completed trials.  Terminal results serialize once into an LRU byte
+//!   cache.
 //! * [`http`] + [`api`] — a minimal HTTP/1.1 server over
-//!   `std::net::TcpListener`: JSON endpoints for submit/list/inspect/
-//!   results/cancel, an SSE stream per job fed by the bus, and
-//!   `GET /hp?width=…`, which answers the μTransfer question directly —
-//!   the best transferred HPs recorded by any completed proxy sweep.
+//!   `std::net::TcpListener` served by a bounded connection worker pool
+//!   (beyond-capacity connects get `503` + `Retry-After`, never an
+//!   unbounded thread spawn): JSON endpoints for submit/list/inspect/
+//!   results/cancel, lazy partial reads (`?path=`), a journal tail, an
+//!   SSE stream per job fed by the bus, and `GET /hp?width=…`, which
+//!   answers the μTransfer question directly — the best transferred HPs
+//!   recorded by any completed proxy sweep.
 //!
 //! CLI surface: `mutransfer serve --addr --state-dir` plus the client
 //! subcommands `submit` / `status` / `results` / `watch` / `hp`, all
@@ -26,5 +32,5 @@ pub mod daemon;
 pub mod events;
 pub mod http;
 
-pub use daemon::{Daemon, JobKind, JobSpec, JobState, Registry};
+pub use daemon::{Daemon, JobKind, JobSpec, JobState, Registry, ServeConfig};
 pub use events::{Event, EventBus, EventSink, StderrSink};

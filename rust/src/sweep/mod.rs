@@ -194,6 +194,11 @@ pub struct Sweep<'rt> {
     /// where progress events go; `None` = a stderr sink whose progress
     /// lines follow [`Sweep::verbose`] (the pre-bus CLI output)
     sink: Option<Arc<dyn EventSink>>,
+    /// fair-share lease on the daemon's shared worker budget: each trial
+    /// holds a permit while it executes, so concurrent jobs split the
+    /// machine instead of multiplying thread counts.  `None` = offline
+    /// sweep, no throttling.
+    budget: Option<Arc<pool::BudgetLease>>,
 }
 
 impl<'rt> Sweep<'rt> {
@@ -212,6 +217,7 @@ impl<'rt> Sweep<'rt> {
             ckpt_every: 0,
             ckpt_records: Default::default(),
             sink: None,
+            budget: None,
         }
     }
 
@@ -221,6 +227,16 @@ impl<'rt> Sweep<'rt> {
     /// default stderr sink reproduces the pre-bus CLI output exactly.
     pub fn with_sink(mut self, sink: Arc<dyn EventSink>) -> Sweep<'rt> {
         self.sink = Some(sink);
+        self
+    }
+
+    /// Throttle trial execution through a fair-share lease on a shared
+    /// worker budget ([`pool::FairBudget`]).  Each trial blocks for a
+    /// permit before executing and releases it when done, so N concurrent
+    /// sweeps converge on budget/N effective workers each.  Scheduling
+    /// only — results stay bit-identical to an unthrottled run.
+    pub fn with_budget(mut self, lease: Arc<pool::BudgetLease>) -> Sweep<'rt> {
+        self.budget = Some(lease);
         self
     }
 
@@ -453,6 +469,8 @@ impl<'rt> Sweep<'rt> {
                 out.push(r.clone());
                 continue;
             }
+            // fair-share: hold a budget permit for the trial's duration
+            let _permit = self.budget.as_ref().map(|b| b.acquire());
             let t0 = std::time::Instant::now();
             self.journal_ckpt_record(job)?;
             let ckpt = self.ckpt_cfg(job);
@@ -576,8 +594,11 @@ impl<'rt> Sweep<'rt> {
             let journal = journal.clone();
             let finished = finished.clone();
             let sink = sink.clone();
+            let budget = self.budget.clone();
             let outcomes: Vec<Result<JobResult>> =
                 pool::run_indexed(prepared, workers, move |_, p: Prepared| -> Result<JobResult> {
+                    // fair-share: each worker's trial holds one permit
+                    let _permit = budget.as_ref().map(|b| b.acquire());
                     let t0 = std::time::Instant::now();
                     let data = source_for(p.run.variant(), p.data_seed);
                     sink.emit(&Event::TrialStarted { key: p.key.clone() });

@@ -1,0 +1,209 @@
+//! Deterministic byte-mutation fuzzing, in pure `std`.
+//!
+//! `cargo fuzz` needs nightly + libFuzzer; this repo's vendored toolchain
+//! has neither, so the fuzz layer is an ordinary test harness instead: a
+//! seed corpus on disk (`fuzz/corpus/<target>/`), a xorshift-driven
+//! mutator, and a runner that feeds every seed plus `iters` mutations of
+//! them through a target under `catch_unwind`.  The contract fuzzing
+//! enforces is narrow and absolute: **parsers never panic** — they may
+//! reject, they may error, they must not unwind.
+//!
+//! Determinism: the mutation stream is a pure function of `(seed, iters)`
+//! and the corpus bytes, so a CI failure replays locally with the same
+//! `FUZZ_ITERS`/seed and the reported iteration index pins the offending
+//! input exactly.
+
+use std::path::Path;
+
+use crate::init::rng::Rng;
+
+/// Mutated inputs never grow beyond this (keeps a splice-happy run from
+/// allocating without bound).
+const MAX_LEN: usize = 64 * 1024;
+
+/// Bytes that disproportionately reach parser edge cases: framing
+/// delimiters, string machinery, and the extremes.
+const INTERESTING: &[u8] = &[0x00, 0xff, b'\r', b'\n', b'"', b'\\', b' ', b':'];
+
+/// A seed corpus: the files of one `fuzz/corpus/<target>/` directory,
+/// sorted by file name so the mutation stream is stable across machines.
+pub struct Corpus {
+    pub inputs: Vec<Vec<u8>>,
+}
+
+impl Corpus {
+    /// Load every regular file under `dir`.  An empty (or missing) corpus
+    /// is an error — it would silently fuzz nothing.
+    pub fn load(dir: &Path) -> Result<Corpus, String> {
+        let rd = std::fs::read_dir(dir)
+            .map_err(|e| format!("fuzz corpus {}: {e}", dir.display()))?;
+        let mut names: Vec<std::path::PathBuf> = rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.is_file())
+            .collect();
+        names.sort();
+        let mut inputs = Vec::with_capacity(names.len());
+        for p in &names {
+            inputs.push(std::fs::read(p).map_err(|e| format!("{}: {e}", p.display()))?);
+        }
+        if inputs.is_empty() {
+            return Err(format!("fuzz corpus {} is empty", dir.display()));
+        }
+        Ok(Corpus { inputs })
+    }
+}
+
+/// One mutated input: `base` transformed by 1–4 random byte-level ops
+/// (bit flip, byte overwrite, truncate, span delete, corpus splice,
+/// interesting-byte insert), capped at [`MAX_LEN`].
+pub fn mutate(rng: &mut Rng, base: &[u8], corpus: &Corpus) -> Vec<u8> {
+    let mut out = base.to_vec();
+    let ops = 1 + rng.below(4);
+    for _ in 0..ops {
+        match rng.below(6) {
+            0 => {
+                // bit flip
+                if !out.is_empty() {
+                    let i = rng.below(out.len());
+                    out[i] ^= 1 << rng.below(8);
+                }
+            }
+            1 => {
+                // random byte overwrite
+                if !out.is_empty() {
+                    let i = rng.below(out.len());
+                    out[i] = (rng.next_u64() & 0xff) as u8;
+                }
+            }
+            2 => {
+                // truncate to a random prefix (exercises EOF-mid-token)
+                if !out.is_empty() {
+                    out.truncate(rng.below(out.len()));
+                }
+            }
+            3 => {
+                // delete an interior span
+                if out.len() >= 2 {
+                    let a = rng.below(out.len());
+                    let b = (a + 1 + rng.below(16)).min(out.len());
+                    out.drain(a..b);
+                }
+            }
+            4 => {
+                // splice a chunk of another corpus entry in
+                let donor = &corpus.inputs[rng.below(corpus.inputs.len())];
+                if !donor.is_empty() {
+                    let a = rng.below(donor.len());
+                    let b = (a + 1 + rng.below(64)).min(donor.len());
+                    let at = rng.below(out.len() + 1);
+                    let chunk: Vec<u8> = donor[a..b].to_vec();
+                    out.splice(at..at, chunk);
+                }
+            }
+            _ => {
+                // insert an interesting byte
+                let at = rng.below(out.len() + 1);
+                out.insert(at, INTERESTING[rng.below(INTERESTING.len())]);
+            }
+        }
+        if out.len() > MAX_LEN {
+            out.truncate(MAX_LEN);
+        }
+    }
+    out
+}
+
+/// Run `f` over every raw corpus seed, then over `iters` mutations.  Each
+/// call runs under `catch_unwind`; the first panic aborts the run with the
+/// target name, iteration index, and an input preview — enough to replay.
+pub fn run(
+    name: &str,
+    corpus: &Corpus,
+    seed: u64,
+    iters: usize,
+    f: impl Fn(&[u8]),
+) -> Result<(), String> {
+    let check = |tag: &str, input: &[u8]| -> Result<(), String> {
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(input)));
+        if r.is_err() {
+            let preview: String = input
+                .iter()
+                .take(120)
+                .map(|&b| {
+                    if (0x20..0x7f).contains(&b) {
+                        (b as char).to_string()
+                    } else {
+                        format!("\\x{b:02x}")
+                    }
+                })
+                .collect();
+            return Err(format!(
+                "fuzz target {name} panicked on {tag} ({} bytes): {preview}",
+                input.len()
+            ));
+        }
+        Ok(())
+    };
+    for (i, input) in corpus.inputs.iter().enumerate() {
+        check(&format!("seed #{i}"), input)?;
+    }
+    let mut rng = Rng::new(seed ^ 0xF0_5E_ED);
+    for i in 0..iters {
+        let base = &corpus.inputs[rng.below(corpus.inputs.len())];
+        let input = mutate(&mut rng, base, corpus);
+        check(&format!("mutation #{i}"), &input)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_corpus() -> Corpus {
+        Corpus { inputs: vec![b"GET / HTTP/1.1\r\n\r\n".to_vec(), b"{\"a\":1}".to_vec()] }
+    }
+
+    #[test]
+    fn mutation_stream_is_deterministic() {
+        let c = tiny_corpus();
+        let gen = |seed| {
+            let mut rng = Rng::new(seed);
+            (0..32).map(|_| mutate(&mut rng, &c.inputs[0], &c)).collect::<Vec<_>>()
+        };
+        assert_eq!(gen(7), gen(7), "same seed must replay the same inputs");
+        assert_ne!(gen(7), gen(8), "different seeds must diverge");
+    }
+
+    #[test]
+    fn mutated_inputs_stay_bounded() {
+        let c = Corpus { inputs: vec![vec![b'x'; MAX_LEN]] };
+        let mut rng = Rng::new(1);
+        for _ in 0..64 {
+            assert!(mutate(&mut rng, &c.inputs[0], &c).len() <= MAX_LEN);
+        }
+    }
+
+    #[test]
+    fn run_reports_a_panicking_target() {
+        let c = tiny_corpus();
+        let err = run("boom", &c, 1, 0, |b| {
+            if b.first() == Some(&b'G') {
+                panic!("intentional");
+            }
+        })
+        .unwrap_err();
+        assert!(err.contains("boom"), "{err}");
+        assert!(err.contains("seed #0"), "{err}");
+        assert!(run("ok", &c, 1, 50, |_| {}).is_ok());
+    }
+
+    #[test]
+    fn empty_corpus_is_an_error() {
+        let dir = std::env::temp_dir().join(format!("fuzz-empty-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(Corpus::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

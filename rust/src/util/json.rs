@@ -9,6 +9,12 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
+/// Maximum container nesting accepted by both the eager parser and the
+/// lazy scanner.  The serve API feeds this codec untrusted network input;
+/// without a bound, `[[[[…` recurses once per bracket and overflows the
+/// stack long before any allocation limit trips.
+pub const MAX_DEPTH: usize = 256;
+
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
     Null,
@@ -179,6 +185,7 @@ pub fn parse(src: &str) -> Result<Json, JsonError> {
     let mut p = Parser {
         b: src.as_bytes(),
         pos: 0,
+        depth: 0,
     };
     p.ws();
     let v = p.value()?;
@@ -189,9 +196,22 @@ pub fn parse(src: &str) -> Result<Json, JsonError> {
     Ok(v)
 }
 
+/// Four ascii hex digits at `start` (a `\uXXXX` payload), or `None`.
+/// Shared by the eager parser and the lazy scanner so `\u` acceptance can
+/// never drift between them; digits are checked explicitly because
+/// `from_str_radix` alone also accepts a leading `+`.
+fn hex4_at(b: &[u8], start: usize) -> Option<u32> {
+    let hex = b.get(start..start + 4)?;
+    if !hex.iter().all(|c| c.is_ascii_hexdigit()) {
+        return None;
+    }
+    u32::from_str_radix(std::str::from_utf8(hex).unwrap(), 16).ok()
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -245,10 +265,15 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.eat(b'{')?;
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting exceeds depth limit"));
+        }
         let mut m = BTreeMap::new();
         self.ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(m));
         }
         loop {
@@ -264,6 +289,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(m));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -273,10 +299,15 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.eat(b'[')?;
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting exceeds depth limit"));
+        }
         let mut a = Vec::new();
         self.ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(a));
         }
         loop {
@@ -287,6 +318,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(a));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -296,12 +328,7 @@ impl<'a> Parser<'a> {
 
     /// Four hex digits starting at byte `start` (a `\uXXXX` payload).
     fn hex4(&self, start: usize) -> Result<u32, JsonError> {
-        if start + 4 > self.b.len() {
-            return Err(self.err("bad \\u escape"));
-        }
-        let hex = std::str::from_utf8(&self.b[start..start + 4])
-            .map_err(|_| self.err("bad \\u escape"))?;
-        u32::from_str_radix(hex, 16).map_err(|_| self.err("bad \\u escape"))
+        hex4_at(self.b, start).ok_or_else(|| self.err("bad \\u escape"))
     }
 
     fn string(&mut self) -> Result<String, JsonError> {
@@ -410,6 +437,342 @@ impl<'a> Parser<'a> {
         txt.parse::<f64>()
             .map(Json::Num)
             .map_err(|_| self.err("bad number"))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// lazy scanner
+// ---------------------------------------------------------------------------
+
+/// Scan-only JSON access: validate a document or extract one value's raw
+/// text span *without building the tree*.
+///
+/// `GET /jobs/:id/results` documents carry full loss curves; a `?path=`
+/// partial read, the `/hp` startup scan and journal tailing only need one
+/// or two leaves, so allocating a `BTreeMap` per object line is pure
+/// waste.  The scanner walks the same grammar as [`parse`] byte-for-byte
+/// — same escape set, same per-scalar UTF-8 validation, same `f64`
+/// acceptance on number spans, same [`MAX_DEPTH`] — so
+/// `validate(s).is_ok() == parse(s).is_ok()` for every input (pinned by a
+/// property test and the fuzz differential target).
+pub mod lazy {
+    use super::{hex4_at, JsonError, MAX_DEPTH};
+
+    /// Full scan of `src` with no tree construction.  Accepts exactly the
+    /// documents [`super::parse`] accepts.
+    pub fn validate(src: &str) -> Result<(), JsonError> {
+        let mut s = Scanner {
+            b: src.as_bytes(),
+            pos: 0,
+            depth: 0,
+        };
+        s.ws();
+        s.skip_value()?;
+        s.ws();
+        if s.pos != s.b.len() {
+            return Err(s.err("trailing data"));
+        }
+        Ok(())
+    }
+
+    /// Extract the raw text of the value at a dot-separated `path`
+    /// (object keys and array indices, e.g. `"best.lr"` or
+    /// `"curve.3"`).  Returns `Ok(None)` when the path does not resolve
+    /// (missing key, index out of range, or indexing into a scalar);
+    /// `Err` on malformed JSON *along the scanned route* — bytes after
+    /// the target value are never examined, so run [`validate`] first if
+    /// the document itself is untrusted.
+    pub fn extract<'a>(src: &'a str, path: &str) -> Result<Option<&'a str>, JsonError> {
+        let mut s = Scanner {
+            b: src.as_bytes(),
+            pos: 0,
+            depth: 0,
+        };
+        s.ws();
+        for seg in path.split('.') {
+            if seg.is_empty() {
+                return Err(s.err("empty path segment"));
+            }
+            match s.peek() {
+                Some(b'{') => {
+                    s.pos += 1;
+                    s.depth += 1;
+                    if s.depth > MAX_DEPTH {
+                        return Err(s.err("nesting exceeds depth limit"));
+                    }
+                    s.ws();
+                    if s.peek() == Some(b'}') {
+                        return Ok(None);
+                    }
+                    loop {
+                        s.ws();
+                        let span = s.skip_string()?;
+                        s.ws();
+                        s.eat(b':')?;
+                        s.ws();
+                        if key_matches(src, span, seg)? {
+                            break; // descend into this value
+                        }
+                        s.skip_value()?;
+                        s.ws();
+                        match s.peek() {
+                            Some(b',') => s.pos += 1,
+                            Some(b'}') => return Ok(None),
+                            _ => return Err(s.err("expected ',' or '}'")),
+                        }
+                    }
+                }
+                Some(b'[') => {
+                    let Ok(idx) = seg.parse::<usize>() else {
+                        return Ok(None); // non-numeric segment on an array
+                    };
+                    s.pos += 1;
+                    s.depth += 1;
+                    if s.depth > MAX_DEPTH {
+                        return Err(s.err("nesting exceeds depth limit"));
+                    }
+                    s.ws();
+                    if s.peek() == Some(b']') {
+                        return Ok(None);
+                    }
+                    let mut i = 0usize;
+                    loop {
+                        s.ws();
+                        if i == idx {
+                            break; // descend into this element
+                        }
+                        s.skip_value()?;
+                        s.ws();
+                        match s.peek() {
+                            Some(b',') => {
+                                s.pos += 1;
+                                i += 1;
+                            }
+                            Some(b']') => return Ok(None),
+                            _ => return Err(s.err("expected ',' or ']'")),
+                        }
+                    }
+                }
+                _ => return Ok(None), // scalars have no children
+            }
+        }
+        let start = s.pos;
+        s.skip_value()?;
+        Ok(Some(&src[start..s.pos]))
+    }
+
+    /// Compare a scanned key span against a wanted segment, unescaping
+    /// only when the raw bytes contain a backslash.
+    fn key_matches(src: &str, span: (usize, usize), want: &str) -> Result<bool, JsonError> {
+        let raw = &src[span.0..span.1];
+        if !raw.as_bytes().contains(&b'\\') {
+            return Ok(raw == want);
+        }
+        // rare path: re-run the eager string decoder on just the quoted
+        // slice (already validated by skip_string, so this cannot fail)
+        let mut p = super::Parser {
+            b: src[span.0 - 1..span.1 + 1].as_bytes(),
+            pos: 0,
+            depth: 0,
+        };
+        let k = p.string().map_err(|e| JsonError {
+            pos: span.0 - 1 + e.pos,
+            msg: e.msg,
+        })?;
+        Ok(k == want)
+    }
+
+    struct Scanner<'a> {
+        b: &'a [u8],
+        pos: usize,
+        depth: usize,
+    }
+
+    impl<'a> Scanner<'a> {
+        fn err(&self, msg: &str) -> JsonError {
+            JsonError {
+                pos: self.pos,
+                msg: msg.to_string(),
+            }
+        }
+
+        fn peek(&self) -> Option<u8> {
+            self.b.get(self.pos).copied()
+        }
+
+        fn ws(&mut self) {
+            while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+                self.pos += 1;
+            }
+        }
+
+        fn eat(&mut self, c: u8) -> Result<(), JsonError> {
+            if self.peek() == Some(c) {
+                self.pos += 1;
+                Ok(())
+            } else {
+                Err(self.err(&format!("expected '{}'", c as char)))
+            }
+        }
+
+        fn lit(&mut self, s: &str) -> Result<(), JsonError> {
+            if self.b[self.pos..].starts_with(s.as_bytes()) {
+                self.pos += s.len();
+                Ok(())
+            } else {
+                Err(self.err(&format!("expected '{s}'")))
+            }
+        }
+
+        fn skip_value(&mut self) -> Result<(), JsonError> {
+            match self.peek() {
+                Some(b'{') => self.skip_object(),
+                Some(b'[') => self.skip_array(),
+                Some(b'"') => self.skip_string().map(|_| ()),
+                Some(b't') => self.lit("true"),
+                Some(b'f') => self.lit("false"),
+                Some(b'n') => self.lit("null"),
+                Some(c) if c == b'-' || c.is_ascii_digit() => self.skip_number(),
+                _ => Err(self.err("unexpected character")),
+            }
+        }
+
+        fn skip_object(&mut self) -> Result<(), JsonError> {
+            self.eat(b'{')?;
+            self.depth += 1;
+            if self.depth > MAX_DEPTH {
+                return Err(self.err("nesting exceeds depth limit"));
+            }
+            self.ws();
+            if self.peek() == Some(b'}') {
+                self.pos += 1;
+                self.depth -= 1;
+                return Ok(());
+            }
+            loop {
+                self.ws();
+                self.skip_string()?;
+                self.ws();
+                self.eat(b':')?;
+                self.ws();
+                self.skip_value()?;
+                self.ws();
+                match self.peek() {
+                    Some(b',') => self.pos += 1,
+                    Some(b'}') => {
+                        self.pos += 1;
+                        self.depth -= 1;
+                        return Ok(());
+                    }
+                    _ => return Err(self.err("expected ',' or '}'")),
+                }
+            }
+        }
+
+        fn skip_array(&mut self) -> Result<(), JsonError> {
+            self.eat(b'[')?;
+            self.depth += 1;
+            if self.depth > MAX_DEPTH {
+                return Err(self.err("nesting exceeds depth limit"));
+            }
+            self.ws();
+            if self.peek() == Some(b']') {
+                self.pos += 1;
+                self.depth -= 1;
+                return Ok(());
+            }
+            loop {
+                self.ws();
+                self.skip_value()?;
+                self.ws();
+                match self.peek() {
+                    Some(b',') => self.pos += 1,
+                    Some(b']') => {
+                        self.pos += 1;
+                        self.depth -= 1;
+                        return Ok(());
+                    }
+                    _ => return Err(self.err("expected ',' or ']'")),
+                }
+            }
+        }
+
+        /// Skip a string, returning the content span between the quotes.
+        /// A valid low-surrogate escape after a high surrogate is a valid
+        /// `\u` escape on its own, so unlike the eager decoder no pair
+        /// lookahead is needed — acceptance is identical either way.
+        fn skip_string(&mut self) -> Result<(usize, usize), JsonError> {
+            self.eat(b'"')?;
+            let start = self.pos;
+            loop {
+                match self.peek() {
+                    None => return Err(self.err("unterminated string")),
+                    Some(b'"') => {
+                        let end = self.pos;
+                        self.pos += 1;
+                        return Ok((start, end));
+                    }
+                    Some(b'\\') => {
+                        self.pos += 1;
+                        match self.peek() {
+                            Some(b'"' | b'\\' | b'/' | b'n' | b't' | b'r' | b'b' | b'f') => {}
+                            Some(b'u') => {
+                                if hex4_at(self.b, self.pos + 1).is_none() {
+                                    return Err(self.err("bad \\u escape"));
+                                }
+                                self.pos += 4;
+                            }
+                            _ => return Err(self.err("bad escape")),
+                        }
+                        self.pos += 1;
+                    }
+                    Some(b) if b < 0x80 => self.pos += 1,
+                    Some(b) => {
+                        let len = match b {
+                            0xC0..=0xDF => 2,
+                            0xE0..=0xEF => 3,
+                            0xF0..=0xF7 => 4,
+                            _ => return Err(self.err("invalid utf-8")),
+                        };
+                        if self.pos + len > self.b.len() {
+                            return Err(self.err("invalid utf-8"));
+                        }
+                        std::str::from_utf8(&self.b[self.pos..self.pos + len])
+                            .map_err(|_| self.err("invalid utf-8"))?;
+                        self.pos += len;
+                    }
+                }
+            }
+        }
+
+        fn skip_number(&mut self) -> Result<(), JsonError> {
+            let start = self.pos;
+            if self.peek() == Some(b'-') {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+            if self.peek() == Some(b'.') {
+                self.pos += 1;
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.pos += 1;
+                }
+            }
+            if matches!(self.peek(), Some(b'e' | b'E')) {
+                self.pos += 1;
+                if matches!(self.peek(), Some(b'+' | b'-')) {
+                    self.pos += 1;
+                }
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.pos += 1;
+                }
+            }
+            let txt = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+            txt.parse::<f64>()
+                .map(|_| ())
+                .map_err(|_| self.err("bad number"))
+        }
     }
 }
 
@@ -572,5 +935,92 @@ mod tests {
     fn truncated_unicode_escape_is_an_error() {
         assert!(parse(r#""\u00""#).is_err());
         assert!(parse(r#""\uzzzz""#).is_err());
+    }
+
+    #[test]
+    fn unicode_escape_rejects_sign_digits() {
+        // from_str_radix alone would accept "+123"; both paths must not
+        assert!(parse(r#""\u+123""#).is_err());
+        assert!(lazy::validate(r#""\u+123""#).is_err());
+    }
+
+    #[test]
+    fn depth_limit_stops_both_parsers() {
+        let deep = |n: usize| format!("{}0{}", "[".repeat(n), "]".repeat(n));
+        let ok = deep(MAX_DEPTH);
+        let too_deep = deep(MAX_DEPTH + 1);
+        assert!(parse(&ok).is_ok());
+        assert!(lazy::validate(&ok).is_ok());
+        assert!(parse(&too_deep).is_err());
+        assert!(lazy::validate(&too_deep).is_err());
+        // objects count against the same budget
+        let mixed = format!("{}1{}", r#"{"k":["#.repeat(129), "]}".repeat(129));
+        assert!(parse(&mixed).is_err());
+        assert!(lazy::validate(&mixed).is_err());
+    }
+
+    #[test]
+    fn lazy_validate_agrees_with_parse_on_spot_cases() {
+        let cases = [
+            "null",
+            " false ",
+            "42",
+            "-3.5e2",
+            "1e999",
+            "1.",
+            "-.5",
+            "-",
+            "1e",
+            "1 2",
+            "",
+            "{",
+            "[1,]",
+            r#"{"a":1,}"#,
+            "tru",
+            r#"{"a": [1, 2, {"b": "x\ny", "c": null}], "d": true}"#,
+            "\"\\ud83d\\ude00\"",
+            r#""\ud800x""#,
+            r#""\u00""#,
+            r#""\uzzzz""#,
+            "\"raw \u{1} control\"",
+            r#"{"k":"unterminated"#,
+        ];
+        for c in cases {
+            assert_eq!(
+                parse(c).is_ok(),
+                lazy::validate(c).is_ok(),
+                "eager/lazy disagree on {c:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn lazy_extract_walks_objects_and_arrays() {
+        let doc = r#"{"best":{"lr":0.05,"name":"wArm"},"curve":[1.5,2.5,3.5],"n":3}"#;
+        assert_eq!(lazy::extract(doc, "n").unwrap(), Some("3"));
+        assert_eq!(lazy::extract(doc, "best.lr").unwrap(), Some("0.05"));
+        assert_eq!(lazy::extract(doc, "curve.1").unwrap(), Some("2.5"));
+        assert_eq!(
+            lazy::extract(doc, "best.name").unwrap(),
+            Some(r#""wArm""#)
+        );
+        // whole-subtree extraction returns the raw slice
+        let best = lazy::extract(doc, "best").unwrap().unwrap();
+        assert_eq!(parse(best).unwrap(), *parse(doc).unwrap().req("best"));
+        // misses
+        assert_eq!(lazy::extract(doc, "missing").unwrap(), None);
+        assert_eq!(lazy::extract(doc, "curve.9").unwrap(), None);
+        assert_eq!(lazy::extract(doc, "curve.lr").unwrap(), None);
+        assert_eq!(lazy::extract(doc, "n.deeper").unwrap(), None);
+        // malformed path / malformed doc
+        assert!(lazy::extract(doc, "best..lr").is_err());
+        assert!(lazy::extract("{\"a\":", "a").is_err());
+    }
+
+    #[test]
+    fn lazy_extract_matches_escaped_keys() {
+        let doc = r#"{"abc": 7, "tab\tkey": 8}"#;
+        assert_eq!(lazy::extract(doc, "abc").unwrap(), Some("7"));
+        assert_eq!(lazy::extract(doc, "tab\tkey").unwrap(), Some("8"));
     }
 }

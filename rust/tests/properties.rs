@@ -1,10 +1,13 @@
 //! Property-based tests of the μP invariants (pure host-side math; no
 //! PJRT needed) using the in-repo prop framework, plus the blocked-kernel
-//! equivalence property pinning the native GEMM rewrite.
+//! equivalence property pinning the native GEMM rewrite, the lazy/eager
+//! JSON parity property, and the results-cache coherence property
+//! (ISSUE-6).
 
 use mutransfer::mup::formulations::{abc, Formulation};
 use mutransfer::mup::{HyperParams, Optimizer, Parametrization, Role, Scheme, TensorDims};
 use mutransfer::runtime::native::tensor::{self, naive};
+use mutransfer::util::json::{self, Json};
 use mutransfer::util::prop::{check, gen};
 
 fn roles() -> [Role; 4] {
@@ -267,6 +270,238 @@ fn prop_blocked_kernels_deterministic() {
         if c1 != c2 {
             return Err(format!("mm {}x{}x{} not bitwise stable", s.m, s.k, s.n));
         }
+        Ok(())
+    })
+    .unwrap();
+}
+
+// ---- lazy/eager JSON parity (ISSUE-6) ---------------------------------
+
+/// Random JSON value with tricky scalars and escape-heavy strings; object
+/// keys are made unique (and `.`-free) by an index so every tree node is
+/// dot-path addressable.
+fn gen_json_value(rng: &mut mutransfer::init::rng::Rng, depth: usize) -> Json {
+    const STRS: &[&str] = &[
+        "",
+        "plain",
+        "quote\"d",
+        "back\\slash",
+        "nl\ntab\t",
+        "ctl\u{1}\u{1f}",
+        "\u{1F600} emoji",
+        "é€ multibyte",
+        "slash/es",
+    ];
+    const NUMS: &[f64] = &[0.0, -0.0, 1.5, -273.15, 1e-12, 1e300, 6.25e-2, 1234567890.0];
+    let pick = if depth >= 3 { rng.below(4) } else { rng.below(6) };
+    match pick {
+        0 => Json::Null,
+        1 => Json::Bool(rng.below(2) == 0),
+        2 => Json::Num(NUMS[rng.below(NUMS.len())]),
+        3 => Json::Str(STRS[rng.below(STRS.len())].to_string()),
+        4 => Json::Arr((0..rng.below(4)).map(|_| gen_json_value(rng, depth + 1)).collect()),
+        _ => {
+            let mut m = std::collections::BTreeMap::new();
+            for i in 0..rng.below(4) {
+                let base = STRS[rng.below(STRS.len())].replace('.', "_");
+                m.insert(format!("{base}{i}"), gen_json_value(rng, depth + 1));
+            }
+            Json::Obj(m)
+        }
+    }
+}
+
+#[derive(Debug)]
+struct JsonCase {
+    /// a valid document (extraction equivalence runs on this)
+    doc: String,
+    /// a byte-corrupted variant, when still valid UTF-8 (acceptance
+    /// parity runs on it — may or may not still parse)
+    corrupt: Option<String>,
+}
+
+fn gen_json_case(rng: &mut mutransfer::init::rng::Rng) -> JsonCase {
+    let doc = gen_json_value(rng, 0).to_string();
+    let corrupt = if doc.is_empty() {
+        None
+    } else {
+        let mut b = doc.clone().into_bytes();
+        let i = rng.below(b.len());
+        b[i] = (rng.next_u64() & 0x7f) as u8; // ascii flip: often stays UTF-8
+        String::from_utf8(b).ok()
+    };
+    JsonCase { doc, corrupt }
+}
+
+fn collect_paths(j: &Json, prefix: &str, out: &mut Vec<String>) {
+    match j {
+        Json::Obj(m) => {
+            for (k, v) in m {
+                let p =
+                    if prefix.is_empty() { k.clone() } else { format!("{prefix}.{k}") };
+                out.push(p.clone());
+                collect_paths(v, &p, out);
+            }
+        }
+        Json::Arr(a) => {
+            for (i, v) in a.iter().enumerate() {
+                let p =
+                    if prefix.is_empty() { i.to_string() } else { format!("{prefix}.{i}") };
+                out.push(p.clone());
+                collect_paths(v, &p, out);
+            }
+        }
+        _ => {}
+    }
+}
+
+/// The lazy scanner accepts exactly what the eager parser accepts, and on
+/// valid documents every tree-derived path extracts to a raw slice whose
+/// eager parse equals the subtree — the contract that makes `?path=`
+/// partial reads trustworthy.
+#[test]
+fn prop_lazy_json_matches_eager() {
+    check(19, 400, gen_json_case, |case: &JsonCase| {
+        for s in std::iter::once(&case.doc).chain(case.corrupt.iter()) {
+            let eager = json::parse(s);
+            let lazy = json::lazy::validate(s);
+            if eager.is_ok() != lazy.is_ok() {
+                return Err(format!(
+                    "acceptance divergence on {s:?}: eager={:?} lazy={:?}",
+                    eager.map(|_| ()),
+                    lazy
+                ));
+            }
+        }
+        let tree = json::parse(&case.doc).expect("generated doc must be valid");
+        let mut paths = Vec::new();
+        collect_paths(&tree, "", &mut paths);
+        for p in &paths {
+            let slice = match json::lazy::extract(&case.doc, p) {
+                Ok(Some(s)) => s,
+                other => return Err(format!("extract({p}) = {other:?} on {:?}", case.doc)),
+            };
+            let sub = json::parse(slice)
+                .map_err(|e| format!("slice {slice:?} at {p} unparseable: {e}"))?;
+            let mut want = &tree;
+            for seg in p.split('.') {
+                want = match want {
+                    Json::Obj(m) => &m[seg],
+                    Json::Arr(a) => &a[seg.parse::<usize>().unwrap()],
+                    _ => unreachable!(),
+                };
+            }
+            if &sub != want {
+                return Err(format!("extract({p}) = {sub:?}, want {want:?}"));
+            }
+        }
+        // absent paths answer None, not an error
+        match json::lazy::extract(&case.doc, "zz_no_such_key") {
+            Ok(None) => Ok(()),
+            other => Err(format!("missing path gave {other:?}")),
+        }
+    })
+    .unwrap();
+}
+
+// ---- results-cache coherence (ISSUE-6) --------------------------------
+
+#[derive(Debug, Clone, Copy)]
+enum CacheOp {
+    Finish(usize),      // finish a new job with a doc of this pad size
+    ReadCached(usize),  // results_bytes(use_cache=true) on the n-th live job
+    ReadFresh(usize),   // results_bytes(use_cache=false)
+    Delete(usize),      // cancel (→ Deleted) the n-th live job
+}
+
+fn gen_cache_ops(rng: &mut mutransfer::init::rng::Rng) -> Vec<CacheOp> {
+    (0..24)
+        .map(|_| match rng.below(5) {
+            0 | 1 => CacheOp::Finish(rng.below(900)),
+            2 => CacheOp::ReadCached(rng.below(8)),
+            3 => CacheOp::ReadFresh(rng.below(8)),
+            _ => CacheOp::Delete(rng.below(8)),
+        })
+        .collect()
+}
+
+/// LRU cache coherence through the public registry API: under random
+/// finish/read/delete interleavings with a budget small enough to force
+/// evictions, a cached read always returns exactly the finished bytes,
+/// and a deleted job's results are gone on both paths.
+#[test]
+fn prop_results_cache_coherent_under_interleavings() {
+    use mutransfer::serve::daemon::CancelOutcome;
+    use mutransfer::serve::{JobSpec, Registry};
+    static SEQ: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+
+    check(20, 25, gen_cache_ops, |ops: &Vec<CacheOp>| {
+        let dir = std::env::temp_dir().join(format!(
+            "mutransfer_prop_cache_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        // ~1.5 docs worth of budget: evictions happen constantly
+        let reg = Registry::open_cfg(&dir, 1024).map_err(|e| e.to_string())?;
+        let mut live: Vec<(String, String)> = Vec::new(); // (id, expected bytes)
+        for op in ops {
+            match *op {
+                CacheOp::Finish(pad) => {
+                    let id = reg
+                        .submit(JobSpec { name: format!("p{pad}"), ..JobSpec::default() })
+                        .map_err(|e| e.to_string())?;
+                    let doc = Json::from_pairs(vec![
+                        ("id", json::jstr(&id)),
+                        ("pad", json::jstr(&"x".repeat(pad))),
+                    ]);
+                    reg.finish(&id, Ok(doc.clone())).map_err(|e| e.to_string())?;
+                    live.push((id, doc.to_string()));
+                }
+                CacheOp::ReadCached(n) | CacheOp::ReadFresh(n) => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let (id, want) = &live[n % live.len()];
+                    let cached = matches!(op, CacheOp::ReadCached(_));
+                    let got = reg
+                        .results_bytes(id, cached)
+                        .ok_or_else(|| format!("{id}: done job has no results"))?;
+                    if got.as_slice() != want.as_bytes() {
+                        return Err(format!(
+                            "{id} (cached={cached}): got {} bytes, want {}",
+                            got.len(),
+                            want.len()
+                        ));
+                    }
+                }
+                CacheOp::Delete(n) => {
+                    if live.is_empty() {
+                        continue;
+                    }
+                    let (id, _) = live.remove(n % live.len());
+                    match reg.cancel(&id).map_err(|e| e.to_string())? {
+                        CancelOutcome::Deleted => {}
+                        other => return Err(format!("cancel({id}) = {other:?}")),
+                    }
+                    if reg.results_bytes(&id, true).is_some()
+                        || reg.results_bytes(&id, false).is_some()
+                    {
+                        return Err(format!("{id}: deleted job still serves results"));
+                    }
+                }
+            }
+        }
+        // every surviving job still answers with its exact bytes
+        for (id, want) in &live {
+            let got = reg
+                .results_bytes(id, true)
+                .ok_or_else(|| format!("{id}: lost results"))?;
+            if got.as_slice() != want.as_bytes() {
+                return Err(format!("{id}: final bytes diverged"));
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
         Ok(())
     })
     .unwrap();

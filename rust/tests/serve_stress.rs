@@ -1,0 +1,355 @@
+//! Stress tests for the production-traffic serve core (ISSUE-6): a real
+//! daemon under 256 concurrent keep-alive clients while jobs execute,
+//! overload shedding at the connection cap, and bounded shutdown with
+//! live SSE streams and a non-empty queue.
+//!
+//! What these pin, beyond "it didn't crash":
+//!
+//! 1. **no dropped requests** — every request on every keep-alive
+//!    connection gets a well-formed response with the expected status,
+//!    even while two jobs train concurrently through the fair-share
+//!    budget;
+//! 2. **fair-share beats FIFO** — a small job submitted *behind* a big
+//!    one finishes first, because executor slots run concurrently and
+//!    split the worker budget instead of queuing;
+//! 3. **bit-identity under load** — a sweep served by the pooled daemon
+//!    is byte-identical to the same sweep run offline;
+//! 4. **overload is shed, not queued unboundedly** — beyond-capacity
+//!    connects get `503` + `Retry-After` and the daemon recovers as soon
+//!    as capacity frees;
+//! 5. **shutdown joins** — with an SSE subscriber pinned to a queued job
+//!    and a sweep mid-flight, `shutdown()` still returns.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use mutransfer::runtime::Runtime;
+use mutransfer::serve::daemon::JOB_LABEL;
+use mutransfer::serve::http;
+use mutransfer::serve::{Daemon, JobKind, JobSpec, ServeConfig};
+use mutransfer::sweep::Sweep;
+use mutransfer::transfer::{mu_transfer, TunerKind};
+use mutransfer::util::json;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mutransfer_serve_stress_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn spec(name: &str, kind: JobKind, samples: usize, steps: usize) -> JobSpec {
+    JobSpec {
+        name: name.to_string(),
+        kind,
+        proxy: "tfm_post_w32_d2".into(),
+        target: "tfm_post_w64_d2".into(),
+        base_width: 32,
+        samples,
+        steps,
+        target_steps: 6,
+        seed: 7,
+        workers: 2,
+        tuner: TunerKind::Random,
+        ckpt_every: 0,
+    }
+}
+
+/// One keep-alive HTTP/1.1 client: a single TCP connection issuing many
+/// requests, parsing each response by its `Content-Length` framing — the
+/// traffic shape the daemon's probe/requeue multiplexing exists for.
+struct Client {
+    r: BufReader<TcpStream>,
+    w: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Client {
+        let s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+        s.set_nodelay(true).unwrap();
+        Client { r: BufReader::new(s.try_clone().unwrap()), w: s }
+    }
+
+    fn req(&mut self, method: &str, path: &str, body: Option<&str>) -> (u16, String) {
+        let body = body.unwrap_or("");
+        write!(
+            self.w,
+            "{method} {path} HTTP/1.1\r\nHost: stress\r\nConnection: keep-alive\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len(),
+        )
+        .unwrap();
+        self.w.flush().unwrap();
+        let mut line = String::new();
+        self.r.read_line(&mut line).unwrap();
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .unwrap_or_else(|| panic!("bad status line {line:?}"))
+            .parse()
+            .unwrap();
+        let mut len = 0usize;
+        loop {
+            let mut h = String::new();
+            self.r.read_line(&mut h).unwrap();
+            let h = h.trim_end();
+            if h.is_empty() {
+                break;
+            }
+            if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+                len = v.trim().parse().unwrap();
+            }
+        }
+        let mut buf = vec![0u8; len];
+        self.r.read_exact(&mut buf).unwrap();
+        (status, String::from_utf8_lossy(&buf).into_owned())
+    }
+}
+
+fn submit(addr: &str, s: &JobSpec) -> String {
+    let (st, body) = http::rpc(addr, "POST", "/jobs", Some(&s.to_json().to_string())).unwrap();
+    assert_eq!(st, 201, "{body}");
+    json::parse(&body).unwrap().req("id").as_str().unwrap().to_string()
+}
+
+fn state_of(addr: &str, id: &str) -> String {
+    let (st, body) = http::rpc(addr, "GET", &format!("/jobs/{id}"), None).unwrap();
+    assert_eq!(st, 200, "{body}");
+    json::parse(&body).unwrap().req("state").as_str().unwrap().to_string()
+}
+
+fn wait_done(addr: &str, id: &str, budget: Duration) -> String {
+    let t0 = Instant::now();
+    loop {
+        let state = state_of(addr, id);
+        if matches!(state.as_str(), "done" | "failed" | "cancelled") {
+            return state;
+        }
+        assert!(t0.elapsed() < budget, "job {id} still {state} after {budget:?}");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+}
+
+// Expensive (256 client threads + three training jobs): excluded from the
+// plain `cargo test` sweep; CI runs it in release via
+// `cargo test --release --test serve_stress -- --include-ignored`.
+#[test]
+#[ignore = "stress scale; run with --include-ignored (CI does, in release)"]
+fn mixed_traffic_256_clients_while_two_jobs_execute() {
+    let state = tmpdir("mixed");
+    let cfg = ServeConfig {
+        http_workers: 8,
+        exec_slots: 2,
+        worker_budget: 2,
+        max_conns: 512,
+        cache_bytes: 1 << 20,
+    };
+    let daemon = Daemon::start_cfg("127.0.0.1:0", &state, None, cfg).unwrap();
+    let addr = daemon.addr.to_string();
+
+    // big job first, small job behind it: under FIFO the small one would
+    // wait; under slots + fair-share it finishes first (checked below)
+    let id_a = submit(&addr, &spec("big", JobKind::Sweep, 6, 12));
+    let id_b = submit(&addr, &spec("small", JobKind::Sweep, 2, 6));
+
+    let answered = Arc::new(AtomicUsize::new(0));
+    let mut clients = Vec::new();
+    for i in 0..256usize {
+        let addr = addr.clone();
+        let (id_a, id_b) = (id_a.clone(), id_b.clone());
+        let answered = answered.clone();
+        clients.push(std::thread::spawn(move || {
+            let mut c = Client::connect(&addr);
+            let mut expect = |status: u16, allowed: &[u16], what: &str| {
+                assert!(allowed.contains(&status), "{what}: got {status}");
+                answered.fetch_add(1, Ordering::Relaxed);
+            };
+            let (st, _) = c.req("GET", "/healthz", None);
+            expect(st, &[200], "healthz");
+            let (st, _) = c.req("GET", "/jobs", None);
+            expect(st, &[200], "list");
+            let (st, _) = c.req("GET", &format!("/jobs/{id_a}"), None);
+            expect(st, &[200], "view big");
+            let (st, _) = c.req("POST", "/jobs", Some("{not json"));
+            expect(st, &[400], "bad submit");
+            let (st, _) = c.req("GET", "/nope", None);
+            expect(st, &[404], "unknown route");
+            let (st, _) = c.req("GET", "/jobs/zzz/results", None);
+            expect(st, &[404], "unknown job results");
+            let (st, _) = c.req("GET", &format!("/jobs/{id_b}"), None);
+            expect(st, &[200], "view small");
+            // a few clients also exercise submit+delete mid-stress
+            if i % 64 == 0 {
+                let tiny = spec(&format!("tiny-{i}"), JobKind::Sweep, 1, 4);
+                let (st, body) = c.req("POST", "/jobs", Some(&tiny.to_json().to_string()));
+                expect(st, &[201], "tiny submit");
+                let id = json::parse(&body).unwrap().req("id").as_str().unwrap().to_string();
+                // 200 if still queued, 409 if an executor already took it
+                let (st, _) = c.req("DELETE", &format!("/jobs/{id}"), None);
+                expect(st, &[200, 409], "tiny delete");
+            }
+            let (st, _) = c.req("GET", "/jobs", None);
+            expect(st, &[200], "final list");
+        }));
+    }
+    for c in clients {
+        c.join().expect("a stress client panicked (dropped request or bad status)");
+    }
+    let min_answered = 256 * 8 + 4 * 2;
+    assert_eq!(answered.load(Ordering::Relaxed), min_answered, "every request answered");
+
+    // fair-share: the small job (submitted second) completes first
+    assert_eq!(wait_done(&addr, &id_b, Duration::from_secs(300)), "done");
+    assert_ne!(
+        state_of(&addr, &id_a),
+        "done",
+        "big job done before small: slots/fair-share not concurrent (FIFO behavior)"
+    );
+    assert_eq!(wait_done(&addr, &id_a, Duration::from_secs(600)), "done");
+
+    // bit-identity under the pooled daemon: a transfer job's results are
+    // byte-identical to the same spec run offline
+    let c_spec = spec("ref", JobKind::Transfer, 3, 8);
+    let rt = Runtime::native();
+    let refdir = tmpdir("mixed_ref");
+    let mut sweep = Sweep::new(&rt).with_journal(&refdir.join("journal")).unwrap();
+    let reference = mu_transfer(&rt, &mut sweep, &c_spec.setup(), JOB_LABEL)
+        .unwrap()
+        .to_json()
+        .to_string();
+    let id_c = submit(&addr, &c_spec);
+    assert_eq!(wait_done(&addr, &id_c, Duration::from_secs(300)), "done");
+    let (st, got) = http::rpc(&addr, "GET", &format!("/jobs/{id_c}/results"), None).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(got, reference, "daemon-run sweep must be bit-identical to offline");
+    // cached and uncached reads serve the same bytes
+    let (st, got2) =
+        http::rpc(&addr, "GET", &format!("/jobs/{id_c}/results?nocache=1"), None).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(got2, got);
+
+    // drain whatever tiny jobs survived their DELETE so shutdown is quick
+    let (_, body) = http::rpc(&addr, "GET", "/jobs", None).unwrap();
+    let ids: Vec<String> = json::parse(&body)
+        .unwrap()
+        .req("jobs")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.req("id").as_str().unwrap().to_string())
+        .collect();
+    for id in ids {
+        wait_done(&addr, &id, Duration::from_secs(300));
+    }
+    daemon.shutdown();
+}
+
+#[test]
+fn overload_sheds_503_with_retry_after_and_recovers() {
+    let state = tmpdir("overload");
+    let cfg = ServeConfig {
+        http_workers: 2,
+        exec_slots: 1,
+        worker_budget: 1,
+        max_conns: 4,
+        cache_bytes: 1 << 20,
+    };
+    let daemon = Daemon::start_cfg("127.0.0.1:0", &state, None, cfg).unwrap();
+    let addr = daemon.addr.to_string();
+
+    // Occupy capacity with idle keep-alive connections.  connect() only
+    // proves the SYN was accepted, not that the acceptor counted us, so
+    // probe each socket: a shed connection reads a 503, an admitted one
+    // times out silently (the daemon parks it, waiting for a request).
+    let mut held: Vec<TcpStream> = Vec::new();
+    let mut shed = None;
+    for attempt in 0..20 {
+        let s = TcpStream::connect(&addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_millis(1500))).unwrap();
+        let mut buf = [0u8; 1024];
+        let mut got = Vec::new();
+        loop {
+            match s.try_clone().unwrap().read(&mut buf) {
+                Ok(0) => break,
+                Ok(n) => got.extend_from_slice(&buf[..n]),
+                Err(_) => break, // timeout: admitted and parked
+            }
+        }
+        if got.is_empty() {
+            held.push(s); // admitted
+        } else {
+            let text = String::from_utf8_lossy(&got).into_owned();
+            assert!(text.starts_with("HTTP/1.1 503"), "attempt {attempt}: {text}");
+            assert!(
+                text.to_ascii_lowercase().contains("retry-after:"),
+                "503 must carry Retry-After: {text}"
+            );
+            shed = Some(text);
+            break;
+        }
+    }
+    assert!(shed.is_some(), "never saw a 503 despite max_conns=4 ({} held)", held.len());
+    assert!(held.len() >= 4, "cap admitted too few: {}", held.len());
+
+    // free one slot; the daemon notices the EOF on its next probe and a
+    // fresh client is admitted and served
+    drop(held.pop());
+    let t0 = Instant::now();
+    loop {
+        let mut c = Client::connect(&addr);
+        let sent = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            c.req("GET", "/healthz", None)
+        }));
+        if let Ok((200, _)) = sent {
+            break;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "daemon did not recover after a slot freed"
+        );
+        std::thread::sleep(Duration::from_millis(200));
+    }
+    drop(held);
+    daemon.shutdown();
+}
+
+#[test]
+fn shutdown_joins_with_live_sse_stream_and_queued_job() {
+    let state = tmpdir("join");
+    let cfg = ServeConfig {
+        http_workers: 2,
+        exec_slots: 1,
+        worker_budget: 1,
+        max_conns: 64,
+        cache_bytes: 1 << 20,
+    };
+    let daemon = Daemon::start_cfg("127.0.0.1:0", &state, None, cfg).unwrap();
+    let addr = daemon.addr.to_string();
+
+    // one job running, one queued behind it (single slot)
+    let _id_a = submit(&addr, &spec("running", JobKind::Sweep, 2, 6));
+    let id_b = submit(&addr, &spec("queued", JobKind::Sweep, 2, 6));
+
+    // an SSE subscriber pinned to the QUEUED job: its bus emits nothing,
+    // so only the stop-flag poll in the stream loop can end this stream
+    let sse_addr = addr.clone();
+    let sse = std::thread::spawn(move || {
+        let _ = http::sse(&sse_addr, &format!("/jobs/{id_b}/events"), |_, _| true);
+    });
+    std::thread::sleep(Duration::from_millis(300));
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        daemon.shutdown(); // joins acceptor + pool workers + executors
+        let _ = tx.send(());
+    });
+    // bound: the in-flight sweep must finish (tiny), every worker must
+    // notice stop, and the SSE stream must unpin its pool worker
+    rx.recv_timeout(Duration::from_secs(120))
+        .expect("shutdown() hung: a worker or executor failed to join");
+    sse.join().unwrap();
+}
