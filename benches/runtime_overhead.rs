@@ -10,7 +10,7 @@ use std::time::{Duration, Instant};
 use mutransfer::data::{source_for, Split};
 use mutransfer::init;
 use mutransfer::model::BaseShape;
-use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization, ScaleAxes};
 use mutransfer::runtime::session::StepInputs;
 use mutransfer::runtime::{Runtime, TrainSession};
 use mutransfer::util::bench::{bench_print, fmt_ns};
@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     // across a whole sweep; for native it is allocation only)
     let t0 = Instant::now();
     let rt2 = Runtime::new(&mutransfer::artifacts_dir())?;
-    let cold_params = init::init_params(&v, &par, &hp, &base, 0);
+    let cold_params = init::init_params(&v, &par, &hp, &base, ScaleAxes::UNIT, 0);
     let _ = TrainSession::new(&rt2, variant, cold_params)?;
     println!(
         "cold_start[{}]/{variant}: {}",
@@ -38,18 +38,19 @@ fn main() -> anyhow::Result<()> {
 
     // 2. session init (param gen + upload)
     let s = bench_print("init_params+upload", Duration::from_secs(2), || {
-        let params = init::init_params(&v, &par, &hp, &base, 0);
+        let params = init::init_params(&v, &par, &hp, &base, ScaleAxes::UNIT, 0);
         let _ = TrainSession::new(&rt, variant, params).unwrap();
     });
     let _ = s;
 
     // 3. full step vs its host-only parts
-    let params = init::init_params(&v, &par, &hp, &base, 0);
-    let lr_vec = init::lr_vec(&v, &par, &hp, &base);
+    let params = init::init_params(&v, &par, &hp, &base, ScaleAxes::UNIT, 0);
+    let lr_vec = init::lr_vec(&v, &par, &hp, &base, ScaleAxes::UNIT);
     let mut session = TrainSession::new(&rt, variant, params)?;
     let data = source_for(&v, 0);
     let inputs = StepInputs {
         lr_vec,
+        gmul_vec: vec![],
         hp_vec: [0.0625, 1.0, 1.0, 0.9, 0.999, 1e-8, 0.0, 1.0],
     };
     let mut i = 0usize;

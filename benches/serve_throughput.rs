@@ -62,6 +62,7 @@ fn main() -> anyhow::Result<()> {
         workers: 4,
         tuner: TunerKind::Random,
         ckpt_every: 0,
+        ..JobSpec::default()
     };
 
     // -- submit → first SSE event latency --------------------------------

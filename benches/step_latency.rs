@@ -20,7 +20,7 @@ use mutransfer::data::{source_for, Split};
 use mutransfer::init;
 use mutransfer::init::rng::det_fill;
 use mutransfer::model::BaseShape;
-use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization, ScaleAxes};
 use mutransfer::runtime::native::tensor::{self, naive};
 use mutransfer::runtime::session::StepInputs;
 use mutransfer::runtime::{Runtime, TrainSession};
@@ -126,12 +126,13 @@ fn main() -> anyhow::Result<()> {
             ..HyperParams::default()
         };
         let base = BaseShape::SameAsTarget;
-        let params = init::init_params(&v, &par, &hp, &base, 0);
-        let lr_vec = init::lr_vec(&v, &par, &hp, &base);
+        let params = init::init_params(&v, &par, &hp, &base, ScaleAxes::UNIT, 0);
+        let lr_vec = init::lr_vec(&v, &par, &hp, &base, ScaleAxes::UNIT);
         let mut session = TrainSession::new(&rt, &variant, params)?;
         let data = source_for(&v, 0);
         let inputs = StepInputs {
             lr_vec,
+            gmul_vec: vec![],
             hp_vec: [0.125, 1.0, 1.0, 0.9, 0.999, 1e-8, 0.0, 1.0],
         };
         let mut step = 0usize;

@@ -10,7 +10,7 @@
 //!     cargo run --release --example mutransfer_workflow -- [--samples N]
 
 use mutransfer::model::BaseShape;
-use mutransfer::mup::Optimizer;
+use mutransfer::mup::{Optimizer, Scheme};
 use mutransfer::report::Reporter;
 use mutransfer::runtime::Runtime;
 use mutransfer::sweep::Sweep;
@@ -41,6 +41,11 @@ fn main() -> anyhow::Result<()> {
             d_ffn: 128,
         },
         optimizer: Optimizer::Adam,
+        // switch to Scheme::Umup to run the same workflow under u-μP
+        // (pass --param umup to the CLI equivalent)
+        scheme: Scheme::Mup,
+        base_depth: None,
+        base_batch: None,
         space: SearchSpace::iwslt_like(),
         proxy_steps: steps,
         target_steps,

@@ -19,8 +19,12 @@
 //! mutransfer serve --addr 127.0.0.1:7077 --state-dir ./serve-state &
 //!
 //! # 2. submit a proxy sweep (same flags as `mutransfer transfer`);
-//! #    prints the job id
+//! #    prints the job id.  `--param sp|mup|umup` picks the
+//! #    parametrization (default μP; u-μP = the unit-scaled
+//! #    formulation, DESIGN.md §10), and `--base-depth`/`--base-batch`
+//! #    turn on the depth/batch transfer axes next to width
 //! id=$(mutransfer submit --addr 127.0.0.1:7077 --name demo \
+//!        --param mup \
 //!        --proxy tfm_post_w32_d2 --target tfm_post_w64_d2 \
 //!        --base-width 32 --samples 8 --steps 40 --target-steps 60)
 //!
@@ -32,8 +36,9 @@
 //! mutransfer results --addr 127.0.0.1:7077 $id > results.json
 //!
 //! # 5. the muTransfer payoff: ask the service for the best transferred
-//! #    HPs for ANY width — tuned once, served forever
-//! mutransfer hp --addr 127.0.0.1:7077 --width 512
+//! #    HPs for ANY width (or depth, or batch size) — tuned once,
+//! #    served forever
+//! mutransfer hp --addr 127.0.0.1:7077 --width 512 --depth 8 --batch 64
 //! ```
 
 use mutransfer::data::source_for;

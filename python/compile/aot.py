@@ -93,6 +93,9 @@ def build_registry() -> list:
     for w in [32, 64, 128, 256, 512]:
         v += _tfm(f"tfm_pre_w{w}_d2", ln="pre", n_layer=2, **tfm_dims(w))
     v += _tfm_coord("tfm_pre_w128_d2", ln="pre", n_layer=2, **tfm_dims(128))
+    # Depth coord family at w32 (coord-check invariants for the depth axis)
+    for d in [2, 4, 8]:
+        v += _tfm_coord(f"tfm_pre_w32_d{d}", ln="pre", n_layer=d, **tfm_dims(32))
     # Depth family at w128 (Fig. 4 depth transfer; pre-LN only — §6.1)
     for d in [4, 8]:
         v += _tfm(f"tfm_pre_w128_d{d}", ln="pre", n_layer=d, **tfm_dims(128))
@@ -133,6 +136,9 @@ def build_registry() -> list:
     # ResMLP family (Tab. 12 ResNet substitute)
     for w in [32, 64, 128, 256]:
         v += _resmlp(f"resmlp_w{w}", width=w)
+    # ResMLP depth pair at w32 (depth-transfer acceptance runs)
+    for nb in [2, 8]:
+        v += _resmlp(f"resmlp_w32_nb{nb}", width=32, n_block=nb)
 
     names = [x.name for x in v]
     assert len(names) == len(set(names)), "duplicate variant names"

@@ -42,8 +42,13 @@ pub fn coord_check(
         crate::runtime::Kind::Coord,
         "coord_check needs a __coord variant"
     );
-    let params = init::init_params(&variant, &spec.par, &spec.hp, &spec.base, spec.seed);
-    let base_lr = init::lr_vec(&variant, &spec.par, &spec.hp, &spec.base);
+    let axes = spec.axes(&variant);
+    let params = init::init_params(&variant, &spec.par, &spec.hp, &spec.base, axes, spec.seed);
+    let base_lr = init::lr_vec(&variant, &spec.par, &spec.hp, &spec.base, axes);
+    let mut gmul = init::gmul_vec(&variant, &spec.par, &spec.hp, &spec.base, axes);
+    if gmul.iter().all(|&k| k == 1.0) {
+        gmul = Vec::new();
+    }
     let hp_v = hp_vec(spec, rt)?;
     let mut session = TrainSession::new(rt, &spec.variant, params)?;
 
@@ -51,6 +56,7 @@ pub fn coord_check(
     let batch = data.batch(Split::Train, 0);
     let inputs = StepInputs {
         lr_vec: base_lr.clone(),
+        gmul_vec: gmul,
         hp_vec: hp_v,
     };
 

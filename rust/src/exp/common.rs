@@ -131,13 +131,11 @@ pub fn lr_job(
     steps: usize,
     hp0: &HyperParams,
 ) -> Job {
-    let par = match scheme {
-        Scheme::Mup => Parametrization::mup(opt),
-        Scheme::Sp => Parametrization::standard(opt),
-    };
+    let par = Parametrization::new(scheme, opt);
+    // SP has no base: it coincides with itself at every width
     let base = match scheme {
-        Scheme::Mup => base,
         Scheme::Sp => BaseShape::SameAsTarget,
+        Scheme::Mup | Scheme::Umup => base,
     };
     let hp = HyperParams { lr, ..hp0.clone() };
     let mut spec = RunSpec::new(variant, par, hp, base);

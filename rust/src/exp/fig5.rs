@@ -28,10 +28,7 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
         &["scheme", "probe", "exponent", "verdict"],
     );
     for scheme in [Scheme::Sp, Scheme::Mup] {
-        let par = match scheme {
-            Scheme::Mup => Parametrization::mup(Optimizer::Adam),
-            Scheme::Sp => Parametrization::standard(Optimizer::Adam),
-        };
+        let par = Parametrization::new(scheme, Optimizer::Adam);
         let mut records = Vec::new();
         for &w in &scale.widths {
             let variant = format!("{}__coord", common::tfm_variant(false, w));
@@ -40,8 +37,8 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
                 ..HyperParams::default()
             };
             let base = match scheme {
-                Scheme::Mup => common::tfm_base(base_w),
                 Scheme::Sp => crate::model::BaseShape::SameAsTarget,
+                _ => common::tfm_base(base_w),
             };
             let mut spec = RunSpec::new(&variant, par, hp, base);
             spec.seed = 3;

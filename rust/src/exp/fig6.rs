@@ -6,7 +6,7 @@
 use anyhow::Result;
 
 use crate::model::BaseShape;
-use crate::mup::Optimizer;
+use crate::mup::{Optimizer, Scheme};
 use crate::report::Reporter;
 use crate::runtime::Runtime;
 use crate::stats;
@@ -61,6 +61,9 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
                 target_variant: target.into(),
                 base: base.clone(),
                 optimizer: Optimizer::Adam,
+                scheme: Scheme::Mup,
+                base_depth: None,
+                base_batch: None,
                 space: SearchSpace::iwslt_like(),
                 proxy_steps: scale.steps,
                 target_steps: scale.target_steps,

@@ -31,13 +31,10 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
         for (lr_label, lr) in lrs {
             let mut curves: Vec<(usize, Vec<f64>)> = Vec::new();
             for &w in &scale.widths {
-                let par = match scheme {
-                    Scheme::Mup => crate::mup::Parametrization::mup(Optimizer::Adam),
-                    Scheme::Sp => crate::mup::Parametrization::standard(Optimizer::Adam),
-                };
+                let par = crate::mup::Parametrization::new(scheme, Optimizer::Adam);
                 let base = match scheme {
-                    Scheme::Mup => common::tfm_base(base_w),
                     Scheme::Sp => crate::model::BaseShape::SameAsTarget,
+                    _ => common::tfm_base(base_w),
                 };
                 let hp = HyperParams {
                     lr,

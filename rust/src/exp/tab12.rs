@@ -33,13 +33,10 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
     );
     let mut series = Json::obj();
     for scheme in [Scheme::Sp, Scheme::Mup] {
-        let par = match scheme {
-            Scheme::Mup => Parametrization::mup(Optimizer::Sgd),
-            Scheme::Sp => Parametrization::standard(Optimizer::Sgd),
-        };
+        let par = Parametrization::new(scheme, Optimizer::Sgd);
         let base = match scheme {
-            Scheme::Mup => BaseShape::Width(proxy_w),
             Scheme::Sp => BaseShape::SameAsTarget,
+            _ => BaseShape::Width(proxy_w),
         };
         // grid search on the proxy
         let jobs: Vec<Job> = grid

@@ -15,7 +15,7 @@
 use anyhow::Result;
 
 use crate::model::BaseShape;
-use crate::mup::Optimizer;
+use crate::mup::{Optimizer, Scheme};
 use crate::report::Reporter;
 use crate::runtime::Runtime;
 use crate::stats::quartile_row;
@@ -107,6 +107,9 @@ fn run_mt(
             target_variant: target.to_string(),
             base: base.clone(),
             optimizer: Optimizer::Adam,
+            scheme: Scheme::Mup,
+            base_depth: None,
+            base_batch: None,
             space: SearchSpace::iwslt_like(),
             proxy_steps: scale.steps,
             target_steps: scale.target_steps,

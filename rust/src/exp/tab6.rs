@@ -8,7 +8,7 @@ use anyhow::Result;
 
 use crate::model::flops::speedups;
 use crate::model::BaseShape;
-use crate::mup::{HyperParams, Optimizer, Parametrization};
+use crate::mup::{HyperParams, Optimizer, Parametrization, Scheme};
 use crate::report::Reporter;
 use crate::runtime::Runtime;
 use crate::sweep::{Job, Sweep};
@@ -49,6 +49,9 @@ pub fn run(rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> {
             d_ffn: 256,
         },
         optimizer: Optimizer::Adam,
+        scheme: Scheme::Mup,
+        base_depth: None,
+        base_batch: None,
         space: SearchSpace::bert_like(),
         proxy_steps: scale.steps,
         target_steps: scale.target_steps,

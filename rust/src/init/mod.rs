@@ -1,56 +1,156 @@
 //! Parameter initialization under a chosen parametrization.
 //!
 //! Combines the manifest's per-tensor spec (shape, role, init kind) with
-//! the μP/SP scaling rules to produce the host-side initial tensors fed to
-//! a [`crate::runtime::TrainSession`].  Gaussian init only (App. D.5:
+//! the abc triples from [`Parametrization::abc_for`] to produce the
+//! host-side initial tensors, per-tensor LRs and gradient multipliers fed
+//! to a [`crate::runtime::TrainSession`].  Gaussian init only (App. D.5:
 //! non-Gaussian init converges to the infinite-width limit more slowly and
 //! can break wider-is-better).
+//!
+//! ## Folding `a` into stored tensors
+//!
+//! A triple's `a` is an effective-weight multiplier: the network computes
+//! with `a·Ŵ`.  Our kernels expose two multiplier slots (`output_scale`
+//! over the readout, `embed_scale` over token+position embeddings); for
+//! every tensor the slot residue `k = (α·a)/slot` is folded into the
+//! *stored* tensor `E = k·Ŵ` instead.  Folding is exact when the update
+//! stays in Ŵ-coordinates, which requires feeding `k·g_E = g_Ŵ` into the
+//! optimizer moments (the per-tensor `gmul` — it cannot be folded into
+//! the LR because Adam's ε breaks scale invariance) and storing
+//! `lr' = k·c·η`, `std' = k·b·σ`.  Under SP and Table-8 μP every `k` is
+//! exactly 1.0 (the slots carry the whole `a`), so the folded path is
+//! bit-identical to the historical one; u-μP is where `k ≠ 1` appears
+//! (hidden matrices fold `1/√fan_in`, the position table folds its slot
+//! mismatch against the shared embedding slot).
 
 pub mod rng;
 
-use crate::model::{tensor_dims, BaseShape};
-use crate::mup::{HyperParams, Parametrization};
+use crate::model::{self, tensor_dims, BaseShape};
+use crate::mup::{HyperParams, Optimizer, ParamAbcSpec, Parametrization, Role, ScaleAxes, Scheme};
 use crate::runtime::Variant;
 use rng::Rng;
 
-/// Initial tensors for `variant` under `par` with base shape `base`,
-/// master init std `hp.sigma`, seeded deterministically.
+/// Per-tensor fold factors `k` for `variant` under `par` (see module
+/// docs).  Identically 1.0 for SP and Table-8 μP.
+fn fold_k(
+    variant: &Variant,
+    par: &Parametrization,
+    hp: &HyperParams,
+    base: &BaseShape,
+    axes: ScaleAxes,
+) -> Vec<f64> {
+    let dims = tensor_dims(variant, base);
+    let d_head = variant.config.get("d_head").unwrap_or(1);
+    let d_head0 = model::base_d_head(variant, base);
+    let m = par.multipliers(hp, dims[0], *dims.last().unwrap(), d_head, d_head0);
+    let sp = par.scheme == Scheme::Sp;
+    variant
+        .params
+        .iter()
+        .zip(&dims)
+        .map(|(p, d)| {
+            let abc = par.abc_for(&ParamAbcSpec {
+                role: p.role,
+                dims: *d,
+                residual: model::residual_out(&p.name),
+                axes,
+            });
+            // Which multiplier slot covers this tensor's `a`?  SP slots
+            // ignore the tuned alphas, so its numerators must too.
+            let (alpha, slot) = if p.role == Role::Output {
+                (if sp { 1.0 } else { hp.alpha_output }, m.output_scale)
+            } else if par.optimizer == Optimizer::Adam
+                && (p.name == "embed" || p.name == "pos_embed")
+            {
+                (if sp { 1.0 } else { hp.alpha_embed }, m.embed_scale)
+            } else {
+                (1.0, 1.0)
+            };
+            (alpha * abc.a) / slot
+        })
+        .collect()
+}
+
+/// Initial tensors for `variant` under `par` with base shape `base` and
+/// axis ratios `axes`, master init std `hp.sigma`, seeded
+/// deterministically.  Stored std is `(σ·b)·k`.
 pub fn init_params(
     variant: &Variant,
     par: &Parametrization,
     hp: &HyperParams,
     base: &BaseShape,
+    axes: ScaleAxes,
     seed: u64,
 ) -> Vec<Vec<f32>> {
     let dims = tensor_dims(variant, base);
+    let ks = fold_k(variant, par, hp, base, axes);
     let root = Rng::new(seed);
     variant
         .params
         .iter()
         .zip(dims)
+        .zip(ks)
         .enumerate()
-        .map(|(i, (p, d))| match p.init.as_str() {
+        .map(|(i, ((p, d), k))| match p.init.as_str() {
             "ones" => vec![1.0; p.numel()],
             "zeros" => vec![0.0; p.numel()],
             _ => {
-                let std = hp.sigma * par.scaling(p.role, d).init_std;
+                let abc = par.abc_for(&ParamAbcSpec {
+                    role: p.role,
+                    dims: d,
+                    residual: model::residual_out(&p.name),
+                    axes,
+                });
+                let std = (hp.sigma * abc.b) * k;
                 root.fork(i as u64).gaussian_vec(p.numel(), std)
             }
         })
         .collect()
 }
 
-/// Per-tensor effective LR vector (before schedule) for `variant`.
+/// Per-tensor effective LR vector (before schedule) for `variant`:
+/// `((η·c)·group_ratio)·k`.
 pub fn lr_vec(
     variant: &Variant,
     par: &Parametrization,
     hp: &HyperParams,
     base: &BaseShape,
+    axes: ScaleAxes,
 ) -> Vec<f32> {
+    let ks = fold_k(variant, par, hp, base, axes);
     tensor_dims(variant, base)
         .into_iter()
         .zip(&variant.params)
-        .map(|(d, p)| par.effective_lr(hp, p.role, d) as f32)
+        .zip(ks)
+        .map(|((d, p), k)| {
+            let abc = par.abc_for(&ParamAbcSpec {
+                role: p.role,
+                dims: d,
+                residual: model::residual_out(&p.name),
+                axes,
+            });
+            let base_lr = hp.lr * abc.c;
+            let grouped = match p.role {
+                Role::Input | Role::Vector => base_lr * hp.lr_emb_ratio,
+                _ => base_lr,
+            };
+            (grouped * k) as f32
+        })
+        .collect()
+}
+
+/// Per-tensor gradient multipliers: the fold factor `k` fed into the
+/// optimizer's moment accumulation (module docs).  All-ones under SP/μP.
+pub fn gmul_vec(
+    variant: &Variant,
+    par: &Parametrization,
+    hp: &HyperParams,
+    base: &BaseShape,
+    axes: ScaleAxes,
+) -> Vec<f32> {
+    fold_k(variant, par, hp, base, axes)
+        .into_iter()
+        .map(|k| k as f32)
         .collect()
 }
 
@@ -109,8 +209,8 @@ mod tests {
         let v = variant(64);
         let par = Parametrization::mup(Optimizer::Adam);
         let hp = HyperParams::default();
-        let a = init_params(&v, &par, &hp, &BaseShape::SameAsTarget, 7);
-        let b = init_params(&v, &par, &hp, &BaseShape::SameAsTarget, 7);
+        let a = init_params(&v, &par, &hp, &BaseShape::SameAsTarget, ScaleAxes::UNIT, 7);
+        let b = init_params(&v, &par, &hp, &BaseShape::SameAsTarget, ScaleAxes::UNIT, 7);
         assert_eq!(a, b);
         for (p, t) in v.params.iter().zip(&a) {
             match p.init.as_str() {
@@ -134,14 +234,14 @@ mod tests {
             d_head: 16,
             d_ffn: 128,
         };
-        let params = init_params(&v, &par, &hp, &base, 3);
+        let params = init_params(&v, &par, &hp, &base, ScaleAxes::UNIT, 3);
         let un = params.last().unwrap();
         let measured = stats::rms(un);
         // Table 8: output std = 1/sqrt(base_fan_in) = 1/8
         assert!((measured - 1.0 / 8.0).abs() < 0.01, "measured={measured}");
         // SP at the same width would give 1/16
         let sp = Parametrization::standard(Optimizer::Adam);
-        let sp_params = init_params(&v, &sp, &hp, &BaseShape::SameAsTarget, 3);
+        let sp_params = init_params(&v, &sp, &hp, &BaseShape::SameAsTarget, ScaleAxes::UNIT, 3);
         let sp_rms = stats::rms(sp_params.last().unwrap());
         assert!((sp_rms - 1.0 / 16.0).abs() < 0.01, "sp={sp_rms}");
     }
@@ -160,12 +260,115 @@ mod tests {
             d_head: 16,
             d_ffn: 128,
         };
-        let lrs = lr_vec(&v, &par, &hp, &base);
+        let lrs = lr_vec(&v, &par, &hp, &base, ScaleAxes::UNIT);
         assert_eq!(lrs.len(), v.params.len());
         // embed (input role): full LR; wk (hidden): LR / 4
         let idx_embed = 0;
         let idx_wk = v.params.iter().position(|p| p.name == "block0.wk").unwrap();
         assert!((lrs[idx_embed] - 1e-3).abs() < 1e-9);
         assert!((lrs[idx_wk] - 0.25e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sp_and_mup_folds_are_exactly_one() {
+        let v = variant(256);
+        let hp = HyperParams {
+            alpha_output: 1.7, // alphas must cancel out of the folds
+            alpha_embed: 0.9,
+            ..Default::default()
+        };
+        let base = BaseShape::Tfm {
+            d_model: 64,
+            n_head: 4,
+            d_head: 16,
+            d_ffn: 128,
+        };
+        for par in [
+            Parametrization::mup(Optimizer::Adam),
+            Parametrization::standard(Optimizer::Adam),
+        ] {
+            let g = gmul_vec(&v, &par, &hp, &base, ScaleAxes::UNIT);
+            assert!(g.iter().all(|&k| k == 1.0), "{:?}: {g:?}", par.scheme);
+        }
+    }
+
+    #[test]
+    fn umup_folds_hidden_and_keeps_stored_std_unit_free() {
+        let v = variant(256);
+        let par = Parametrization::umup(Optimizer::Adam);
+        let hp = HyperParams::default();
+        let base = BaseShape::Tfm {
+            d_model: 64,
+            n_head: 4,
+            d_head: 16,
+            d_ffn: 128,
+        };
+        let g = gmul_vec(&v, &par, &hp, &base, ScaleAxes::UNIT);
+        let idx_wk = v.params.iter().position(|p| p.name == "block0.wk").unwrap();
+        // hidden fold = a = 1/sqrt(fan_in) = 1/16 at d_model 256
+        assert!((g[idx_wk] - 1.0 / 16.0).abs() < 1e-9);
+        // embed is covered by the embed slot: fold exactly 1
+        assert_eq!(g[0], 1.0);
+        // stored init std for hidden therefore matches μP's 1/sqrt(fan_in)
+        let params = init_params(&v, &par, &hp, &base, ScaleAxes::UNIT, 3);
+        let wk_rms = stats::rms(&params[idx_wk]);
+        assert!((wk_rms - 1.0 / 16.0).abs() < 0.005, "wk={wk_rms}");
+        // ... and the stored embed table is unit-variance (u-μP property)
+        let emb_rms = stats::rms(&params[0]);
+        assert!((emb_rms - 1.0).abs() < 0.05, "embed={emb_rms}");
+        // effective hidden Adam LR: c·k = (√fi/r)·(1/√fi) = η/r = η/4
+        let lrs = lr_vec(&v, &par, &hp, &base, ScaleAxes::UNIT);
+        assert!((lrs[idx_wk] - 0.25e-3).abs() < 1e-9);
+    }
+
+    #[test]
+    fn depth_axis_scales_residual_lr_and_fold() {
+        let mut v = variant(64);
+        v.config.fields.insert("n_layer".into(), 4.0); // pretend 4 layers
+        let par = Parametrization::mup(Optimizer::Adam);
+        let hp = HyperParams::default();
+        let axes = crate::model::scale_axes(&v, Some(1), None);
+        assert_eq!(axes.depth_ratio, 4.0);
+        let flat = lr_vec(&v, &par, &hp, &BaseShape::SameAsTarget, ScaleAxes::UNIT);
+        let deep = lr_vec(&v, &par, &hp, &BaseShape::SameAsTarget, axes);
+        let g = gmul_vec(&v, &par, &hp, &BaseShape::SameAsTarget, axes);
+        let idx_wo = v.params.iter().position(|p| p.name == "block0.wo").unwrap();
+        let idx_wk = v.params.iter().position(|p| p.name == "block0.wk").unwrap();
+        // residual-branch outputs: LR and fold both shrink by √4 = 2
+        assert!((deep[idx_wo] / flat[idx_wo] - 0.5).abs() < 1e-6);
+        assert!((g[idx_wo] - 0.5).abs() < 1e-6);
+        // non-residual hidden: untouched
+        assert_eq!(deep[idx_wk], flat[idx_wk]);
+        assert_eq!(g[idx_wk], 1.0);
+        // SP ignores the axis entirely
+        let sp = Parametrization::standard(Optimizer::Adam);
+        assert_eq!(
+            lr_vec(&v, &sp, &hp, &BaseShape::SameAsTarget, axes),
+            lr_vec(&v, &sp, &hp, &BaseShape::SameAsTarget, ScaleAxes::UNIT)
+        );
+    }
+
+    #[test]
+    fn batch_axis_scales_all_lrs() {
+        let v = variant(64);
+        let par = Parametrization::mup(Optimizer::Adam);
+        let hp = HyperParams::default();
+        let axes = crate::model::scale_axes(&v, None, Some(4)); // batch 16, base 4
+        assert_eq!(axes.batch_ratio, 4.0);
+        let flat = lr_vec(&v, &par, &hp, &BaseShape::SameAsTarget, ScaleAxes::UNIT);
+        let big = lr_vec(&v, &par, &hp, &BaseShape::SameAsTarget, axes);
+        for (i, (a, b)) in flat.iter().zip(&big).enumerate() {
+            assert!((b / a - 2.0).abs() < 1e-6, "tensor {i}: {a} -> {b}");
+        }
+        // gradient folds are untouched by the batch axis
+        assert!(gmul_vec(&v, &par, &hp, &BaseShape::SameAsTarget, axes)
+            .iter()
+            .all(|&k| k == 1.0));
+        // SP: invariant
+        let sp = Parametrization::standard(Optimizer::Adam);
+        assert_eq!(
+            lr_vec(&v, &sp, &hp, &BaseShape::SameAsTarget, axes),
+            lr_vec(&v, &sp, &hp, &BaseShape::SameAsTarget, ScaleAxes::UNIT)
+        );
     }
 }

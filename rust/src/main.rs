@@ -23,7 +23,7 @@ use anyhow::{bail, Context, Result};
 
 use mutransfer::exp::{self, Scale};
 use mutransfer::model::BaseShape;
-use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization, Scheme};
 use mutransfer::report::Reporter;
 use mutransfer::runtime::Runtime;
 use mutransfer::serve::{self, JobKind, JobSpec};
@@ -41,14 +41,17 @@ fn main() {
 
 const USAGE: &str = "usage: mutransfer <exp|train|transfer|coord-check|list-artifacts|journal-canon|serve|submit|status|results|watch|hp> [flags]
   exp <id>|all        --preset ci|paper|smoke [--workers N]
-  train               --variant NAME --scheme mup|sp --lr F --steps N [--base-width W]
+  train               --variant NAME --param sp|mup|umup --lr F --steps N [--base-width W]
+                      [--base-depth L --base-batch B]  (depth/batch transfer axes)
                       [--checkpoint FILE --checkpoint-every N]  (auto-resumes from FILE)
   transfer            --proxy NAME --target NAME --base-width W --samples N --steps N --target-steps N [--workers N]
+                      [--param sp|mup|umup] [--base-depth L --base-batch B]
                       [--tuner random|grid|sha [--eta K --rung0 R]]
                       [--checkpoint-dir DIR --checkpoint-every N] [--resume-from JOURNAL]
                       [--results-json FILE]  (canonical outcome dump, byte-identical
                       to a serve job's GET /jobs/:id/results)
-  coord-check         --variant NAME(__coord) --scheme mup|sp [--base-width W] [--steps N]
+  coord-check         --variant NAME(__coord) --param sp|mup|umup [--base-width W]
+                      [--base-depth L --base-batch B] [--steps N]
   list-artifacts
   journal-canon FILE  print a sweep journal canonicalized (wall_secs
                       stripped, records sorted) for bit-exact comparison
@@ -66,9 +69,16 @@ const USAGE: &str = "usage: mutransfer <exp|train|transfer|coord-check|list-arti
   status              --addr A [JOB]     list jobs / show one job
   results             --addr A JOB       print a done job's canonical results JSON
   watch               --addr A JOB       stream a job's events (SSE) to completion
-  hp                  --addr A [--width W]  best transferred HPs from any
-                      completed sweep (the muTransfer question, as an endpoint)
+  hp                  --addr A [--width W --depth L --batch B]  best transferred
+                      HPs from any completed sweep (the muTransfer question, as
+                      an endpoint; dims are echoed — muP makes the answer
+                      shape-independent)
 common: --artifacts DIR  --results DIR
+--param (alias --scheme; --param wins): sp = standard parametrization (no
+transfer), mup = Table-8 muP, umup = unit-scaled muP (unit init variance,
+the scale lives in the multipliers)
+--base-depth/--base-batch: base dims for the depth/batch transfer axes
+(0/absent = same as target, i.e. width-only transfer)
 --workers: sweep worker threads (default: MUTRANSFER_WORKERS or half the
 cores; needs a Send-capable backend — native yes, pjrt falls back to 1)
 --tuner sha: successive halving (eta default 2, rung0 default steps/4);
@@ -112,8 +122,14 @@ fn real_main() -> Result<()> {
                 None => mutransfer::config::Config::default(),
             };
             let variant = args.str_or("variant", &cfg.str_or("run", "variant", "tfm_post_w64_d2"));
-            let scheme = args.str_or("scheme", "mup");
+            // --param is canonical, --scheme stays as an alias (--param wins)
+            let scheme = {
+                let alias = args.str_or("scheme", "mup");
+                args.str_or("param", &alias)
+            };
             let steps = args.usize_or("steps", cfg.usize_or("run", "steps", 100));
+            let base_depth = args.usize_or("base-depth", 0);
+            let base_batch = args.usize_or("base-batch", 0);
             let seed = args.u64_or("seed", cfg.usize_or("run", "seed", 0) as u64);
             let base_width = args.usize_or("base-width", cfg.usize_or("mup", "base_d_model", 0));
             let mut hp = cfg.hyperparams();
@@ -141,6 +157,8 @@ fn real_main() -> Result<()> {
             spec.seed = seed;
             spec.eval_every = (steps / 4).max(1);
             spec.schedule = cfg.schedule();
+            spec.base_depth = (base_depth > 0).then_some(base_depth);
+            spec.base_batch = (base_batch > 0).then_some(base_batch);
             let data = mutransfer::data::source_for(v, seed);
             if let Some(c) = &ckpt {
                 if c.path.exists() {
@@ -240,9 +258,14 @@ fn real_main() -> Result<()> {
         }
         "coord-check" => {
             let variant = args.str_or("variant", "tfm_post_w64_d2__coord");
-            let scheme = args.str_or("scheme", "mup");
+            let scheme = {
+                let alias = args.str_or("scheme", "mup");
+                args.str_or("param", &alias)
+            };
             let steps = args.usize_or("steps", 4);
             let base_width = args.usize_or("base-width", 0);
+            let base_depth = args.usize_or("base-depth", 0);
+            let base_batch = args.usize_or("base-batch", 0);
             let lr = args.f64_or("lr", 2f64.powi(-7));
             args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
             let rt = Runtime::new(&artifacts)?;
@@ -251,6 +274,8 @@ fn real_main() -> Result<()> {
             let hp = HyperParams { lr, ..HyperParams::default() };
             let mut spec = RunSpec::new(&variant, par, hp, base);
             spec.seed = 1;
+            spec.base_depth = (base_depth > 0).then_some(base_depth);
+            spec.base_batch = (base_batch > 0).then_some(base_batch);
             let data = mutransfer::data::source_for(v, 1);
             let rec = mutransfer::coordcheck::coord_check(&rt, &spec, data.as_ref(), steps)?;
             println!("width {}:", rec.width);
@@ -410,11 +435,17 @@ fn real_main() -> Result<()> {
         }
         "hp" => {
             let addr = args.str_or("addr", "127.0.0.1:7077");
-            let width = args.get("width").map(|w| w.to_string());
+            let mut query: Vec<String> = Vec::new();
+            for dim in ["width", "depth", "batch"] {
+                if let Some(v) = args.get(dim) {
+                    query.push(format!("{dim}={v}"));
+                }
+            }
             args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
-            let path = match width {
-                Some(w) => format!("/hp?width={w}"),
-                None => "/hp".to_string(),
+            let path = if query.is_empty() {
+                "/hp".to_string()
+            } else {
+                format!("/hp?{}", query.join("&"))
             };
             let (status, body) = serve::http::rpc(&addr, "GET", &path, None)?;
             if status != 200 {
@@ -462,6 +493,12 @@ fn parse_job_spec(args: &Args, kind: &str) -> Result<JobSpec> {
         "sha" => TunerKind::Sha { eta, rung0 },
         other => bail!("--tuner must be random|grid|sha, got {other}"),
     };
+    let param = {
+        let alias = args.str_or("scheme", d.param.name());
+        let name = args.str_or("param", &alias);
+        Scheme::parse(&name)
+            .with_context(|| format!("--param must be sp|mup|umup, got {name}"))?
+    };
     // validated(): the same checks POST /jobs applies, so the offline CLI
     // can never accept a spec the API would reject (or vice versa)
     JobSpec {
@@ -477,6 +514,9 @@ fn parse_job_spec(args: &Args, kind: &str) -> Result<JobSpec> {
         workers: args.usize_or("workers", d.workers),
         tuner,
         ckpt_every: args.usize_or("checkpoint-every", d.ckpt_every),
+        param,
+        base_depth: args.usize_or("base-depth", d.base_depth),
+        base_batch: args.usize_or("base-batch", d.base_batch),
     }
     .validated()
 }
@@ -487,12 +527,10 @@ fn parse_scheme(
     v: &mutransfer::runtime::Variant,
     base_width: usize,
 ) -> Result<(Parametrization, BaseShape)> {
-    let par = match scheme {
-        "mup" => Parametrization::mup(opt),
-        "sp" => Parametrization::standard(opt),
-        other => bail!("scheme must be mup|sp, got {other}"),
-    };
-    let base = if scheme == "sp" || base_width == 0 {
+    let sch = Scheme::parse(scheme)
+        .with_context(|| format!("--param must be sp|mup|umup, got {scheme}"))?;
+    let par = Parametrization::new(sch, opt);
+    let base = if sch == Scheme::Sp || base_width == 0 {
         BaseShape::SameAsTarget
     } else {
         match v.arch {

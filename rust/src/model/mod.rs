@@ -242,6 +242,39 @@ pub fn tensor_dims(v: &Variant, base: &BaseShape) -> Vec<TensorDims> {
         .collect()
 }
 
+/// Does this tensor write the output of a residual branch?  The depth
+/// transfer axis scales exactly these (branch-output multiplier 1/√r_L):
+/// the attention projection `block*.wo` and the FFN/ResMLP second matmul
+/// `block*.w2`.  Detected by name so the manifest layout (and its JSON
+/// mirror test) stays untouched.
+pub fn residual_out(name: &str) -> bool {
+    name.contains("block") && (name.ends_with(".wo") || name.ends_with(".w2"))
+}
+
+/// Depth/batch axis ratios for a variant, given the run's base dims
+/// (`None` = base equals target on that axis → ratio exactly 1.0).
+/// Depth counts residual blocks: `n_layer` (transformer) or `n_block`
+/// (ResMLP); the plain MLP has no residual depth and always reports 1.0.
+pub fn scale_axes(
+    v: &Variant,
+    base_depth: Option<usize>,
+    base_batch: Option<usize>,
+) -> crate::mup::ScaleAxes {
+    let depth = v.config.get("n_layer").or_else(|| v.config.get("n_block"));
+    let depth_ratio = match (depth, base_depth) {
+        (Some(l), Some(l0)) if l0 > 0 => l as f64 / l0 as f64,
+        _ => 1.0,
+    };
+    let batch_ratio = match (v.config.get("batch"), base_batch) {
+        (Some(b), Some(b0)) if b0 > 0 => b as f64 / b0 as f64,
+        _ => 1.0,
+    };
+    crate::mup::ScaleAxes {
+        depth_ratio,
+        batch_ratio,
+    }
+}
+
 /// d_head of the base shape (for the attention-scale multiplier).
 pub fn base_d_head(v: &Variant, base: &BaseShape) -> usize {
     match base {
@@ -354,6 +387,57 @@ mod tests {
         assert!((un.r_in() - 4.0).abs() < 1e-12);
         assert_eq!(un.fan_out, 64);
         assert_eq!(base_d_head(&v, &base), 8);
+    }
+
+    #[test]
+    fn residual_out_names() {
+        assert!(residual_out("block0.wo"));
+        assert!(residual_out("block11.w2"));
+        assert!(!residual_out("block0.wq"));
+        assert!(!residual_out("block0.w1"));
+        assert!(!residual_out("w2")); // plain MLP: not a residual branch
+        assert!(!residual_out("unembed"));
+        assert!(!residual_out("w_out"));
+        // every transformer/resmlp spec classifies exactly 2/1 per block
+        let tfm = transformer_specs(&cfg());
+        assert_eq!(tfm.iter().filter(|s| residual_out(&s.name)).count(), 4);
+        let rm = resmlp_specs(&ResMlpConfig {
+            d_in: 256,
+            width: 64,
+            n_block: 3,
+            d_out: 10,
+            batch: 64,
+        });
+        assert_eq!(rm.iter().filter(|s| residual_out(&s.name)).count(), 3);
+    }
+
+    #[test]
+    fn scale_axes_ratios() {
+        let c4 = cfg();
+        let mut v = Variant {
+            name: "t".into(),
+            arch: crate::runtime::Arch::Transformer,
+            kind: crate::runtime::manifest::Kind::Train,
+            opt: "adam".into(),
+            hlo_path: "/dev/null".into(),
+            config: Default::default(),
+            config_str: Default::default(),
+            data_inputs: vec![],
+            n_state: 2,
+            probes: vec![],
+            params: transformer_specs(&c4),
+            golden: None,
+        };
+        v.config.fields.insert("n_layer".into(), 8.0);
+        v.config.fields.insert("batch".into(), 32.0);
+        let a = scale_axes(&v, Some(2), Some(8));
+        assert_eq!(a.depth_ratio, 4.0);
+        assert_eq!(a.batch_ratio, 4.0);
+        // None (or matching) base dims are exactly 1.0
+        let u = scale_axes(&v, None, None);
+        assert_eq!(u, crate::mup::ScaleAxes::UNIT);
+        let m = scale_axes(&v, Some(8), Some(32));
+        assert_eq!(m, crate::mup::ScaleAxes::UNIT);
     }
 
     #[test]

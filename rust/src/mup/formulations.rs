@@ -70,6 +70,24 @@ pub enum Formulation {
     Table8,
     /// Table 9: the original arXiv-v1 style with sqrt multipliers.
     Table9,
+    /// u-μP (arXiv 2407.17465): every tensor initializes at unit variance
+    /// and the whole width scaling is pushed into the multiplier `a` (and
+    /// the LR).  Obtained from Table 8 by a per-role Lemma J.1 transform
+    /// with θ = Table 8's absolute init std (1/√fan_in for input/hidden,
+    /// 1/√base_fan_in for output, 1 for vectors) — so unlike Tables 3/8/9
+    /// its θ witness depends on the absolute fan-in, not just the ratios.
+    Umup,
+}
+
+/// The Lemma J.1 witness carrying Table 8 into u-μP for a given role:
+/// exactly Table 8's absolute init-std factor, so that after the
+/// transform every `b` becomes 1 (unit variance).
+pub fn theta_table8_to_umup(role: Role, dims: TensorDims) -> f64 {
+    match role {
+        Role::Input | Role::Hidden => 1.0 / (dims.fan_in as f64).sqrt(),
+        Role::Output => 1.0 / (dims.base_fan_in as f64).sqrt(),
+        Role::Vector => 1.0,
+    }
 }
 
 /// abc triple for (formulation, role, optimizer) at relative dims.
@@ -80,7 +98,45 @@ pub fn abc(f: Formulation, role: Role, opt: Optimizer, dims: TensorDims) -> Abc 
     use Formulation::*;
     use Optimizer::*;
     use Role::*;
+    let fi = dims.fan_in as f64;
+    let bfi = dims.base_fan_in as f64;
     match (f, role) {
+        // ---- u-μP: unit-variance init everywhere, scale in a and c ------
+        // (written out explicitly rather than via `transform` so the
+        // pairwise-equivalence property test below is not a tautology)
+        (Umup, Input) => Abc {
+            a: 1.0 / fi.sqrt(),
+            b: fi.sqrt(), // relative to Table 8's Θ(1): absolute std is 1
+            c: match opt {
+                Sgd => ro * fi,
+                Adam => fi.sqrt(),
+            },
+        },
+        (Umup, Vector) => Abc {
+            // vectors are already unit-scale in Table 8; u-μP keeps them
+            a: 1.0,
+            b: 1.0,
+            c: match opt {
+                Sgd => ro,
+                Adam => 1.0,
+            },
+        },
+        (Umup, Hidden) => Abc {
+            a: 1.0 / fi.sqrt(),
+            b: bfi.sqrt(), // (1/√ri)·√fi: absolute std 1
+            c: match opt {
+                Sgd => fi,
+                Adam => fi.sqrt() / ri,
+            },
+        },
+        (Umup, Output) => Abc {
+            a: (1.0 / ri) * (1.0 / bfi.sqrt()),
+            b: bfi.sqrt(), // absolute std 1
+            c: match opt {
+                Sgd => ri * bfi,
+                Adam => bfi.sqrt(),
+            },
+        },
         // ---- input weights & biases ------------------------------------
         (Table3, Input | Vector) | (Table8, Input | Vector) => Abc {
             a: 1.0,
@@ -142,6 +198,10 @@ pub fn predicted_theta(from: Formulation, to: Formulation, role: Role, dims: Ten
     use Role::*;
     match (from, to, role) {
         (x, y, _) if x == y => 1.0,
+        // u-μP composes through Table 8: θ(X→U) = θ(X→T8)·θ(T8→U), where
+        // the second factor is the per-role unit-variance witness above.
+        (x, Umup, r) => predicted_theta(x, Table8, r, dims) * theta_table8_to_umup(r, dims),
+        (Umup, y, r) => 1.0 / predicted_theta(y, Umup, r, dims),
         (Table3, Table8, Output) => 1.0 / ri,
         (Table3, Table9, Output) => 1.0 / ri.sqrt(),
         (Table8, Table9, Output) => ri.sqrt(),
@@ -175,14 +235,21 @@ mod tests {
         }
     }
 
+    const ALL: [Formulation; 4] = [
+        Formulation::Table3,
+        Formulation::Table8,
+        Formulation::Table9,
+        Formulation::Umup,
+    ];
+
     #[test]
     fn all_formulations_pairwise_equivalent() {
         for &c in DIM_CASES {
             let d = dims(c);
             for opt in [Optimizer::Sgd, Optimizer::Adam] {
                 for role in [Role::Input, Role::Hidden, Role::Output, Role::Vector] {
-                    for from in [Formulation::Table3, Formulation::Table8, Formulation::Table9] {
-                        for to in [Formulation::Table3, Formulation::Table8, Formulation::Table9] {
+                    for from in ALL {
+                        for to in ALL {
                             let x = abc(from, role, opt, d);
                             let y = abc(to, role, opt, d);
                             let theta = x.equivalent(&y, opt, 1e-9).unwrap_or_else(|| {
@@ -212,7 +279,7 @@ mod tests {
     }
 
     /// Numerical Lemma J.1: train a toy readout layer f(x) = a·(w·x) with a
-    /// nonlinear loss under each formulation's (a, b, c); all three must
+    /// nonlinear loss under each formulation's (a, b, c); all four must
     /// produce the same f_t at every step, for both SGD and Adam.
     #[test]
     fn trajectories_identical_across_formulations() {
@@ -220,7 +287,7 @@ mod tests {
         let n = 32; // toy width
         for opt in [Optimizer::Sgd, Optimizer::Adam] {
             let mut trajectories: Vec<Vec<f64>> = Vec::new();
-            for f in [Formulation::Table3, Formulation::Table8, Formulation::Table9] {
+            for f in ALL {
                 let t = abc(f, Role::Output, opt, d);
                 trajectories.push(simulate(t, opt, n));
             }

@@ -24,7 +24,8 @@
 pub mod formulations;
 pub mod rules;
 
+pub use formulations::{Abc, Formulation};
 pub use rules::{
-    GraphMultipliers, HyperParams, Optimizer, Parametrization, ParamScaling, Role, Scheme,
-    TensorDims,
+    GraphMultipliers, HyperParams, Optimizer, Parametrization, ParamAbcSpec, ParamScaling, Role,
+    ScaleAxes, Scheme, TensorDims,
 };

@@ -1,4 +1,18 @@
-//! μP / SP scaling rules (paper Tables 3 and 8, Definition 4.1).
+//! μP / SP scaling rules (paper Tables 3 and 8, Definition 4.1), plus the
+//! u-μP variant (arXiv 2407.17465) and the depth/batch transfer axes.
+//!
+//! The runtime consumes parametrizations through one surface:
+//! [`Parametrization::abc_for`] maps a [`ParamAbcSpec`] (role, dims,
+//! residual flag, axis ratios) to an [`Abc`] triple in the *mixed*
+//! convention — `a` is the relative effective-weight multiplier (1 at the
+//! base shape for μP), `b` is the **absolute** init-std factor that
+//! multiplies the tuned σ, and `c` is the relative LR factor that
+//! multiplies the tuned η.  Everything downstream (init stds, per-tensor
+//! LRs, gradient multipliers, graph multiplier slots) is derived from the
+//! triple, so adding a parametrization means adding one match arm here —
+//! not auditing the runtime.
+
+use super::formulations::Abc;
 
 /// How a parameter tensor's dimensions relate to width (Appendix B's
 /// matrix-like / vector-like classification, specialized to the roles our
@@ -43,6 +57,31 @@ pub enum Scheme {
     Sp,
     /// Maximal Update Parametrization, Table 8 formulation.
     Mup,
+    /// u-μP (arXiv 2407.17465): unit-variance init for every tensor; the
+    /// whole width scaling lives in the effective-weight multipliers and
+    /// the per-tensor LRs.  Lemma-J.1-equivalent to Table 8 per role
+    /// (`formulations::theta_table8_to_umup`), so it transfers like μP
+    /// while keeping all stored tensors at Θ(1) scale.
+    Umup,
+}
+
+impl Scheme {
+    pub fn parse(s: &str) -> Option<Scheme> {
+        Some(match s {
+            "sp" => Scheme::Sp,
+            "mup" => Scheme::Mup,
+            "umup" => Scheme::Umup,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Scheme::Sp => "sp",
+            Scheme::Mup => "mup",
+            Scheme::Umup => "umup",
+        }
+    }
 }
 
 /// Fan-in/out of a tensor at the current width and at the base width.
@@ -74,6 +113,56 @@ impl TensorDims {
 
     pub fn r_out(&self) -> f64 {
         self.fan_out as f64 / self.base_fan_out as f64
+    }
+}
+
+/// Scaling ratios for the non-width transfer axes, relative to the base
+/// model ("Completed Hyperparameter Transfer": depth and batch size
+/// transfer like width once the residual branches and LRs are scaled).
+/// `1.0` on both axes means "at base" and is an exact no-op.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScaleAxes {
+    /// residual block count ratio L/L₀
+    pub depth_ratio: f64,
+    /// batch-size ratio B/B₀
+    pub batch_ratio: f64,
+}
+
+impl ScaleAxes {
+    pub const UNIT: ScaleAxes = ScaleAxes {
+        depth_ratio: 1.0,
+        batch_ratio: 1.0,
+    };
+}
+
+impl Default for ScaleAxes {
+    fn default() -> Self {
+        ScaleAxes::UNIT
+    }
+}
+
+/// Everything [`Parametrization::abc_for`] needs to scale one parameter
+/// tensor: its role, its fan dims vs the base shape, whether it writes
+/// the output of a residual branch (the depth axis only touches those),
+/// and the run's depth/batch ratios.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParamAbcSpec {
+    pub role: Role,
+    pub dims: TensorDims,
+    /// last matmul of a residual branch (depth scaling applies)
+    pub residual: bool,
+    pub axes: ScaleAxes,
+}
+
+impl ParamAbcSpec {
+    /// Width-only spec: no residual depth scaling, both axes at base.
+    pub fn width_only(role: Role, dims: TensorDims) -> ParamAbcSpec {
+        ParamAbcSpec {
+            role,
+            dims,
+            residual: false,
+            axes: ScaleAxes::UNIT,
+        }
     }
 }
 
@@ -151,9 +240,20 @@ pub struct Parametrization {
 }
 
 impl Parametrization {
+    pub fn new(scheme: Scheme, optimizer: Optimizer) -> Parametrization {
+        Parametrization { scheme, optimizer }
+    }
+
     pub fn mup(optimizer: Optimizer) -> Parametrization {
         Parametrization {
             scheme: Scheme::Mup,
+            optimizer,
+        }
+    }
+
+    pub fn umup(optimizer: Optimizer) -> Parametrization {
+        Parametrization {
+            scheme: Scheme::Umup,
             optimizer,
         }
     }
@@ -165,55 +265,128 @@ impl Parametrization {
         }
     }
 
-    /// Table 8 rules (μP) / LeCun+flat-LR (SP), as *relative* factors:
-    /// `init_std` multiplies the tuned σ, `lr_scale` multiplies the tuned
-    /// η.  At `dims.r_in() == dims.r_out() == 1` the μP factors equal the
-    /// SP factors exactly (the Eq. (4) consistency property).
-    pub fn scaling(&self, role: Role, dims: TensorDims) -> ParamScaling {
-        let sp_std = match role {
-            // LeCun: var = 1/fan_in.  Vector-like params (biases, LN) are
-            // usually 0/1-initialized; std factor 1 lets a tuned σ_vec
-            // scale them if the spec asks for a normal init.
-            Role::Input | Role::Hidden | Role::Output => 1.0 / (dims.fan_in as f64).sqrt(),
-            Role::Vector => 1.0,
-        };
-        match self.scheme {
-            Scheme::Sp => ParamScaling {
-                init_std: sp_std,
-                lr_scale: 1.0,
+    /// The abc triple for one tensor, in the mixed convention the runtime
+    /// consumes: `a` — relative effective-weight multiplier (realized as a
+    /// graph multiplier slot where the kernel exposes one, otherwise
+    /// folded into the stored tensor with a matching gradient multiplier);
+    /// `b` — **absolute** init-std factor on the tuned σ; `c` — relative
+    /// LR factor on the tuned η.
+    ///
+    /// Width column per scheme, then the depth axis (residual-branch
+    /// outputs under μP/u-μP take a ← a/√r_L, and Adam additionally
+    /// c ← c/√r_L so the summed residual updates stay Θ(1) in depth; SGD's
+    /// update already shrinks with the branch multiplier, so its c is
+    /// untouched) and the batch axis (c ← c·√r_B for Adam, c ← c·r_B for
+    /// SGD — linear scaling rule).  SP ignores both axes: that contrast is
+    /// what the per-axis coord-check invariants pin.
+    pub fn abc_for(&self, spec: &ParamAbcSpec) -> Abc {
+        let dims = spec.dims;
+        let role = spec.role;
+        let mut abc = match self.scheme {
+            // LeCun init, flat LR, no multipliers — PyTorch defaults.
+            Scheme::Sp => Abc {
+                a: 1.0,
+                b: match role {
+                    // Vector-like params (biases, LN) are usually
+                    // 0/1-initialized; std factor 1 lets a tuned σ scale
+                    // them if the spec asks for a normal init.
+                    Role::Input | Role::Hidden | Role::Output => {
+                        1.0 / (dims.fan_in as f64).sqrt()
+                    }
+                    Role::Vector => 1.0,
+                },
+                c: 1.0,
             },
-            Scheme::Mup => {
-                // Table 8: init var — input/biases 1/fan_in, hidden
-                // 1/fan_in, output Θ(1) in width (pinned to the base
-                // fan_in for SP-compat at base).
-                let init_std = match role {
+            // Table 8: the output multiplier carries 1/ñ; init var —
+            // input/biases 1/fan_in, hidden 1/fan_in, output Θ(1) in
+            // width (pinned to the base fan_in for SP-compat at base).
+            Scheme::Mup => Abc {
+                a: match role {
+                    Role::Output => 1.0 / dims.r_in(),
+                    _ => 1.0,
+                },
+                b: match role {
                     Role::Input | Role::Hidden => 1.0 / (dims.fan_in as f64).sqrt(),
                     Role::Output => 1.0 / (dims.base_fan_in as f64).sqrt(),
                     Role::Vector => 1.0,
-                };
-                let lr_scale = match (self.optimizer, role) {
+                },
+                c: match (self.optimizer, role) {
                     // Table 8 Adam LR: 1 for vector-like, 1/fan_in
                     // (relative: 1/r_in) for hidden.
                     (Optimizer::Adam, Role::Hidden) => 1.0 / dims.r_in(),
                     (Optimizer::Adam, _) => 1.0,
-                    // Table 8 SGD LR: fan_out for input/biases, fan_in for
-                    // output (relative ratios), 1 for hidden.
+                    // Table 8 SGD LR: fan_out for input/biases, fan_in
+                    // for output (relative ratios), 1 for hidden.
                     (Optimizer::Sgd, Role::Input | Role::Vector) => dims.r_out(),
                     (Optimizer::Sgd, Role::Output) => dims.r_in(),
                     (Optimizer::Sgd, Role::Hidden) => 1.0,
-                };
-                ParamScaling { init_std, lr_scale }
+                },
+            },
+            // u-μP: b ≡ 1 (unit variance); the per-role Lemma J.1
+            // transform of Table 8 by θ = Table 8's absolute init std
+            // pushes the scale into a and c.
+            Scheme::Umup => {
+                let fi = dims.fan_in as f64;
+                let bfi = dims.base_fan_in as f64;
+                Abc {
+                    a: match role {
+                        Role::Input | Role::Hidden => 1.0 / fi.sqrt(),
+                        Role::Output => (1.0 / dims.r_in()) * (1.0 / bfi.sqrt()),
+                        Role::Vector => 1.0,
+                    },
+                    b: 1.0,
+                    c: match (self.optimizer, role) {
+                        (Optimizer::Adam, Role::Input) => fi.sqrt(),
+                        (Optimizer::Adam, Role::Hidden) => fi.sqrt() / dims.r_in(),
+                        (Optimizer::Adam, Role::Output) => bfi.sqrt(),
+                        (Optimizer::Adam, Role::Vector) => 1.0,
+                        (Optimizer::Sgd, Role::Input) => dims.r_out() * fi,
+                        (Optimizer::Sgd, Role::Hidden) => fi,
+                        (Optimizer::Sgd, Role::Output) => dims.r_in() * bfi,
+                        (Optimizer::Sgd, Role::Vector) => dims.r_out(),
+                    },
+                }
             }
+        };
+        if self.scheme != Scheme::Sp {
+            if spec.residual {
+                let s = 1.0 / spec.axes.depth_ratio.sqrt();
+                abc.a *= s;
+                if self.optimizer == Optimizer::Adam {
+                    abc.c *= s;
+                }
+            }
+            abc.c *= match self.optimizer {
+                Optimizer::Adam => spec.axes.batch_ratio.sqrt(),
+                Optimizer::Sgd => spec.axes.batch_ratio,
+            };
+        }
+        abc
+    }
+
+    /// Width-only scaling factors (legacy view of [`Self::abc_for`]):
+    /// `init_std` multiplies the tuned σ, `lr_scale` multiplies the tuned
+    /// η.  At `dims.r_in() == dims.r_out() == 1` the μP factors equal the
+    /// SP factors exactly (the Eq. (4) consistency property).
+    pub fn scaling(&self, role: Role, dims: TensorDims) -> ParamScaling {
+        let abc = self.abc_for(&ParamAbcSpec::width_only(role, dims));
+        ParamScaling {
+            init_std: abc.b,
+            lr_scale: abc.c,
         }
     }
 
     /// Graph multiplier values (Definition 4.1 + Table 8 output
-    /// multiplier) for a model whose readout fan-in ratio is
-    /// `out_dims.r_in()` and whose attention head size is `d_head`
-    /// (base `d_head0`).
+    /// multiplier) for a model whose embedding dims are `embed_dims`,
+    /// whose readout fan-in ratio is `out_dims.r_in()` and whose attention
+    /// head size is `d_head` (base `d_head0`).  The output/embedding slots
+    /// are `alpha · abc_for(..).a` — the same float expression the init
+    /// layer divides by when folding `a` into stored tensors, so covered
+    /// tensors fold to exactly 1.
     pub fn multipliers(
         &self,
         hp: &HyperParams,
+        embed_dims: TensorDims,
         out_dims: TensorDims,
         d_head: usize,
         d_head0: usize,
@@ -224,12 +397,18 @@ impl Parametrization {
                 output_scale: 1.0,
                 embed_scale: 1.0,
             },
-            Scheme::Mup => GraphMultipliers {
-                // 1/d attention with the sqrt(d_head,0) compatibility
-                // factor (App. B.1 "Attention Logit Scaling").
-                attn_scale: hp.alpha_attn * (d_head0 as f64).sqrt() / d_head as f64,
-                output_scale: hp.alpha_output / out_dims.r_in(),
-                embed_scale: hp.alpha_embed,
+            Scheme::Mup | Scheme::Umup => GraphMultipliers {
+                attn_scale: match self.scheme {
+                    // 1/d attention with the sqrt(d_head,0) compatibility
+                    // factor (App. B.1 "Attention Logit Scaling").
+                    Scheme::Mup => hp.alpha_attn * (d_head0 as f64).sqrt() / d_head as f64,
+                    // u-μP: plain 1/d — unit-scaled, no base-compat factor.
+                    _ => hp.alpha_attn / d_head as f64,
+                },
+                output_scale: hp.alpha_output
+                    * self.abc_for(&ParamAbcSpec::width_only(Role::Output, out_dims)).a,
+                embed_scale: hp.alpha_embed
+                    * self.abc_for(&ParamAbcSpec::width_only(Role::Input, embed_dims)).a,
             },
         }
     }
@@ -269,8 +448,9 @@ mod tests {
                 assert_eq!(mup.scaling(role, d), sp.scaling(role, d), "{role:?} {opt:?}");
             }
             let hp = HyperParams::default();
-            let gm = mup.multipliers(&hp, dims(128, 64, 128, 64), 32, 32);
-            let gs = sp.multipliers(&hp, dims(128, 64, 128, 64), 32, 32);
+            let emb = dims(64, 128, 64, 128);
+            let gm = mup.multipliers(&hp, emb, dims(128, 64, 128, 64), 32, 32);
+            let gs = sp.multipliers(&hp, emb, dims(128, 64, 128, 64), 32, 32);
             assert!((gm.attn_scale - gs.attn_scale).abs() < 1e-12);
             assert!((gm.output_scale - gs.output_scale).abs() < 1e-12);
             assert!((gm.embed_scale - gs.embed_scale).abs() < 1e-12);
@@ -307,7 +487,7 @@ mod tests {
         assert!((w3.lr_scale - 8.0).abs() < 1e-12);
         // and the output multiplier shrinks by ñ
         let hp = HyperParams::default();
-        let g = p.multipliers(&hp, dims(n, 10, n0, 10), 32, 32);
+        let g = p.multipliers(&hp, dims(256, n, 256, n0), dims(n, 10, n0, 10), 32, 32);
         assert!((g.output_scale - 1.0 / 8.0).abs() < 1e-12);
     }
 
@@ -331,18 +511,155 @@ mod tests {
     #[test]
     fn attention_scale_one_over_d_vs_one_over_sqrt_d() {
         let hp = HyperParams::default();
+        let emb = dims(64, 128, 64, 128);
         let out = dims(128, 64, 128, 64);
         let mup = Parametrization::mup(Optimizer::Adam);
         let sp = Parametrization::standard(Optimizer::Adam);
         // at base width both give 1/sqrt(d0)
-        let m0 = mup.multipliers(&hp, out, 32, 32);
-        let s0 = sp.multipliers(&hp, out, 32, 32);
+        let m0 = mup.multipliers(&hp, emb, out, 32, 32);
+        let s0 = sp.multipliers(&hp, emb, out, 32, 32);
         assert!((m0.attn_scale - s0.attn_scale).abs() < 1e-12);
         // at 4x width μP shrinks by 4 (1/d), SP only by 2 (1/sqrt(d))
-        let m4 = mup.multipliers(&hp, out, 128, 32);
-        let s4 = sp.multipliers(&hp, out, 128, 32);
+        let m4 = mup.multipliers(&hp, emb, out, 128, 32);
+        let s4 = sp.multipliers(&hp, emb, out, 128, 32);
         assert!((m0.attn_scale / m4.attn_scale - 4.0).abs() < 1e-9);
         assert!((s0.attn_scale / s4.attn_scale - 2.0).abs() < 1e-9);
+        // u-μP is plain 1/d: shrinks by 4 too, from a unit-ish base
+        let um = Parametrization::umup(Optimizer::Adam);
+        let u0 = um.multipliers(&hp, emb, out, 32, 32);
+        let u4 = um.multipliers(&hp, emb, out, 128, 32);
+        assert!((u0.attn_scale / u4.attn_scale - 4.0).abs() < 1e-9);
+        assert!((u0.attn_scale - 1.0 / 32.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn umup_init_is_unit_variance_and_matches_mup_effectively() {
+        // defining property: b ≡ 1 everywhere; and the *effective* init
+        // scale a·b·σ matches Table-8 μP role for role (Lemma J.1 keeps
+        // a·b invariant).
+        for opt in [Optimizer::Sgd, Optimizer::Adam] {
+            let um = Parametrization::umup(opt);
+            let mu = Parametrization::mup(opt);
+            for role in [Role::Input, Role::Hidden, Role::Output, Role::Vector] {
+                for d in [dims(256, 256, 64, 64), dims(1024, 10, 128, 10)] {
+                    let u = um.abc_for(&ParamAbcSpec::width_only(role, d));
+                    let m = mu.abc_for(&ParamAbcSpec::width_only(role, d));
+                    assert_eq!(u.b, 1.0, "{role:?} {opt:?}");
+                    assert!(
+                        (u.a * u.b - m.a * m.b).abs() < 1e-12,
+                        "{role:?} {opt:?}: effective init {} vs {}",
+                        u.a * u.b,
+                        m.a * m.b
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn depth_axis_scales_residual_tensors_only() {
+        let d = dims(256, 256, 64, 64);
+        let deep = ScaleAxes {
+            depth_ratio: 4.0,
+            batch_ratio: 1.0,
+        };
+        for scheme in [Scheme::Mup, Scheme::Umup] {
+            let p = Parametrization::new(scheme, Optimizer::Adam);
+            let flat = p.abc_for(&ParamAbcSpec::width_only(Role::Hidden, d));
+            let res = p.abc_for(&ParamAbcSpec {
+                role: Role::Hidden,
+                dims: d,
+                residual: true,
+                axes: deep,
+            });
+            let non = p.abc_for(&ParamAbcSpec {
+                role: Role::Hidden,
+                dims: d,
+                residual: false,
+                axes: deep,
+            });
+            // residual-branch output: a and Adam-LR both shrink by √r_L
+            assert!((res.a / flat.a - 0.5).abs() < 1e-12, "{scheme:?}");
+            assert!((res.c / flat.c - 0.5).abs() < 1e-12, "{scheme:?}");
+            // non-residual tensors are untouched by depth
+            assert_eq!(non, flat, "{scheme:?}");
+        }
+        // SGD: branch multiplier shrinks, LR stays
+        let p = Parametrization::mup(Optimizer::Sgd);
+        let flat = p.abc_for(&ParamAbcSpec::width_only(Role::Hidden, d));
+        let res = p.abc_for(&ParamAbcSpec {
+            role: Role::Hidden,
+            dims: d,
+            residual: true,
+            axes: deep,
+        });
+        assert!((res.a / flat.a - 0.5).abs() < 1e-12);
+        assert_eq!(res.c, flat.c);
+        // SP ignores the axis entirely
+        let sp = Parametrization::standard(Optimizer::Adam);
+        assert_eq!(
+            sp.abc_for(&ParamAbcSpec {
+                role: Role::Hidden,
+                dims: d,
+                residual: true,
+                axes: deep,
+            }),
+            sp.abc_for(&ParamAbcSpec::width_only(Role::Hidden, d))
+        );
+    }
+
+    #[test]
+    fn batch_axis_scales_lr_globally() {
+        let d = dims(256, 256, 64, 64);
+        let big = ScaleAxes {
+            depth_ratio: 1.0,
+            batch_ratio: 4.0,
+        };
+        let spec = ParamAbcSpec {
+            role: Role::Hidden,
+            dims: d,
+            residual: false,
+            axes: big,
+        };
+        let adam = Parametrization::mup(Optimizer::Adam);
+        let sgd = Parametrization::mup(Optimizer::Sgd);
+        let base = ParamAbcSpec::width_only(Role::Hidden, d);
+        // Adam: √r_B; SGD: linear scaling rule r_B; a and b untouched
+        assert!((adam.abc_for(&spec).c / adam.abc_for(&base).c - 2.0).abs() < 1e-12);
+        assert!((sgd.abc_for(&spec).c / sgd.abc_for(&base).c - 4.0).abs() < 1e-12);
+        assert_eq!(adam.abc_for(&spec).a, adam.abc_for(&base).a);
+        // SP ignores it
+        let sp = Parametrization::standard(Optimizer::Adam);
+        assert_eq!(sp.abc_for(&spec), sp.abc_for(&base));
+    }
+
+    #[test]
+    fn unit_axes_are_exact_noops() {
+        // ratio 1.0 must be bitwise invisible (golden-trajectory contract)
+        let d = dims(96, 384, 32, 128);
+        for scheme in [Scheme::Sp, Scheme::Mup, Scheme::Umup] {
+            for opt in [Optimizer::Sgd, Optimizer::Adam] {
+                let p = Parametrization::new(scheme, opt);
+                for role in [Role::Input, Role::Hidden, Role::Output, Role::Vector] {
+                    let w = p.abc_for(&ParamAbcSpec::width_only(role, d));
+                    let r = p.abc_for(&ParamAbcSpec {
+                        role,
+                        dims: d,
+                        residual: true,
+                        axes: ScaleAxes::UNIT,
+                    });
+                    assert_eq!(w, r, "{scheme:?} {opt:?} {role:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scheme_parse_roundtrip() {
+        for s in [Scheme::Sp, Scheme::Mup, Scheme::Umup] {
+            assert_eq!(Scheme::parse(s.name()), Some(s));
+        }
+        assert_eq!(Scheme::parse("bogus"), None);
     }
 
     #[test]

@@ -88,6 +88,11 @@ impl ModelState {
 pub struct StepInputs {
     /// per-tensor effective LR (μP scale × master LR × schedule)
     pub lr_vec: Vec<f32>,
+    /// per-tensor gradient multiplier fed into the optimizer moments —
+    /// the fold residue `k` of parametrizations whose effective-weight
+    /// multipliers are folded into the stored tensors (u-μP).  Empty =
+    /// all ones (SP/μP); otherwise one entry per parameter tensor.
+    pub gmul_vec: Vec<f32>,
     /// slots 0..7 — see python/compile/model.py HP_* constants
     pub hp_vec: [f32; 8],
 }
@@ -143,11 +148,15 @@ pub trait BackendSession {
     /// when `want_probes` (coord variants only), the probe tensors in
     /// `variant.probes` order.  `hp_vec` already carries the 1-based Adam
     /// step counter in slot 7 — [`crate::runtime::TrainSession`] maintains
-    /// it so backends stay stateless about step indices.
+    /// it so backends stay stateless about step indices.  `gmul` is the
+    /// per-tensor gradient multiplier ([`StepInputs::gmul_vec`]); an empty
+    /// slice means all ones, and backends that cannot apply a non-trivial
+    /// one must error rather than silently train a different model.
     fn step(
         &mut self,
         data: &[DataBatch],
         lr_vec: &[f32],
+        gmul: &[f32],
         hp_vec: &[f32; 8],
         want_probes: bool,
     ) -> Result<(f32, Vec<Probe>)>;

@@ -148,6 +148,7 @@ mod tests {
             &mut self,
             _data: &[DataBatch],
             _lr_vec: &[f32],
+            _gmul: &[f32],
             hp_vec: &[f32; 8],
             _want_probes: bool,
         ) -> Result<(f32, Vec<Probe>)> {
@@ -176,6 +177,7 @@ mod tests {
         let data = vec![DataBatch::I32(Vec::new(), Vec::new())];
         let inputs = StepInputs {
             lr_vec: vec![0.0; v.n_params()],
+            gmul_vec: vec![],
             hp_vec: [0.0; 8],
         };
         // adam variant: the session must overwrite hp[7] with 1, 2, ...

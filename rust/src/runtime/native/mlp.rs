@@ -283,6 +283,7 @@ impl BackendSession for SgdNetSession {
         &mut self,
         data: &[DataBatch],
         lr_vec: &[f32],
+        gmul: &[f32],
         hp_vec: &[f32; 8],
         _want_probes: bool,
     ) -> Result<(f32, Vec<Probe>)> {
@@ -291,11 +292,13 @@ impl BackendSession for SgdNetSession {
         let grads = grads.expect("train step computes grads");
         let (momentum, wd) = (hp_vec[1], hp_vec[2]);
         for i in 0..self.params.len() {
+            let gm = if gmul.is_empty() { 1.0 } else { gmul[i] };
             sgd_update(
                 &mut self.params[i],
                 &grads[i],
                 &mut self.ms[i],
                 lr_vec[i],
+                gm,
                 momentum,
                 wd,
             );

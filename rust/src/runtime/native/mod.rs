@@ -111,6 +111,7 @@ mod tests {
         let data = vec![DataBatch::I32(tokens, vec![b, seq + 1])];
         let inputs = StepInputs {
             lr_vec: vec![0.0; v.n_params()],
+            gmul_vec: vec![],
             hp_vec: [0.125, 1.0, 1.0, 0.9, 0.999, 1e-8, 0.0, 1.0],
         };
         let loss = s.step(&data, &inputs).unwrap() as f64;
@@ -135,6 +136,7 @@ mod tests {
         ];
         let inputs = StepInputs {
             lr_vec: vec![0.0; v.n_params()],
+            gmul_vec: vec![],
             hp_vec: [1.0, 0.9, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0],
         };
         let loss = s.eval(&data, &inputs).unwrap() as f64;

@@ -4,6 +4,11 @@
 
 /// Adam with bias correction and decoupled weight decay; `t` is the
 /// 1-based step count (fed through hp_vec slot 7 by the session).
+/// `gmul` scales the raw gradient *before* it enters the moments — the
+/// per-tensor fold residue of parametrizations that fold their weight
+/// multipliers into the stored tensors (u-μP); it must touch the moments
+/// rather than the LR because ε breaks Adam's scale invariance.
+/// `gmul = 1.0` is bitwise inert (IEEE `1.0·g == g`).
 ///
 /// The fused zip walk mirrors the blocked tensor kernels' style: one
 /// forward pass over equal-length slices with no index bounds checks, and
@@ -18,6 +23,7 @@ pub fn adam_update(
     m: &mut [f32],
     v: &mut [f32],
     lr: f32,
+    gmul: f32,
     beta1: f32,
     beta2: f32,
     eps: f32,
@@ -28,6 +34,7 @@ pub fn adam_update(
     let bc1 = 1.0 - beta1.powf(t);
     let bc2 = 1.0 - beta2.powf(t);
     for (((pv, &gv), mv), vv) in p.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut()) {
+        let gv = gmul * gv;
         *mv = beta1 * *mv + (1.0 - beta1) * gv;
         *vv = beta2 * *vv + (1.0 - beta2) * gv * gv;
         let mhat = *mv / bc1;
@@ -36,11 +43,22 @@ pub fn adam_update(
     }
 }
 
-/// Heavy-ball SGD: m ← μ·m + g; p ← p − lr·(m + wd·p).
+/// Heavy-ball SGD: m ← μ·m + gmul·g; p ← p − lr·(m + wd·p).  See
+/// [`adam_update`] for `gmul`; feeding it into the momentum keeps the
+/// folded trajectory exactly the unfolded one under any μ.
 #[allow(clippy::assign_op_pattern)]
-pub fn sgd_update(p: &mut [f32], g: &[f32], m: &mut [f32], lr: f32, momentum: f32, wd: f32) {
+pub fn sgd_update(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    lr: f32,
+    gmul: f32,
+    momentum: f32,
+    wd: f32,
+) {
     debug_assert!(g.len() == p.len() && m.len() == p.len());
     for ((pv, &gv), mv) in p.iter_mut().zip(g).zip(m.iter_mut()) {
+        let gv = gmul * gv;
         *mv = momentum * *mv + gv;
         *pv = *pv - lr * (*mv + wd * *pv);
     }
@@ -55,7 +73,7 @@ mod tests {
         let mut p = vec![1.0f32, -2.0];
         let g = vec![0.5f32, 0.25];
         let mut m = vec![0.1f32, 0.0];
-        sgd_update(&mut p, &g, &mut m, 0.1, 0.9, 0.01);
+        sgd_update(&mut p, &g, &mut m, 0.1, 1.0, 0.9, 0.01);
         // m = 0.9*0.1 + 0.5 = 0.59; p = 1 - 0.1*(0.59 + 0.01*1) = 0.94
         assert!((m[0] - 0.59).abs() < 1e-6);
         assert!((p[0] - 0.94).abs() < 1e-6);
@@ -70,9 +88,57 @@ mod tests {
         let g = vec![0.3f32, -0.7];
         let mut m = vec![0.0f32; 2];
         let mut v = vec![0.0f32; 2];
-        adam_update(&mut p, &g, &mut m, &mut v, 0.01, 0.9, 0.999, 1e-8, 0.0, 1.0);
+        adam_update(&mut p, &g, &mut m, &mut v, 0.01, 1.0, 0.9, 0.999, 1e-8, 0.0, 1.0);
         assert!((p[0] + 0.01).abs() < 1e-4, "{}", p[0]);
         assert!((p[1] - 0.01).abs() < 1e-4, "{}", p[1]);
+    }
+
+    #[test]
+    fn gmul_one_is_bitwise_inert() {
+        let mut p1 = vec![0.37f32, -1.25, 4.0];
+        let g = vec![0.311f32, -0.07, 2.5];
+        let mut m1 = vec![0.011f32, -0.4, 0.0];
+        let mut v1 = vec![0.002f32, 0.3, 0.0];
+        let (mut p2, mut m2, mut v2) = (p1.clone(), m1.clone(), v1.clone());
+        adam_update(&mut p1, &g, &mut m1, &mut v1, 0.01, 1.0, 0.9, 0.999, 1e-8, 0.1, 3.0);
+        // reference: the pre-gmul formula, inlined with gv used directly
+        {
+            let (bc1, bc2) = (1.0 - 0.9f32.powf(3.0), 1.0 - 0.999f32.powf(3.0));
+            for (((pv, &gv), mv), vv) in
+                p2.iter_mut().zip(&g).zip(m2.iter_mut()).zip(v2.iter_mut())
+            {
+                *mv = 0.9 * *mv + (1.0 - 0.9) * gv;
+                *vv = 0.999 * *vv + (1.0 - 0.999) * gv * gv;
+                let mhat = *mv / bc1;
+                let vhat = *vv / bc2;
+                *pv = *pv - 0.01 * (mhat / (vhat.sqrt() + 1e-8)) - 0.01 * 0.1 * *pv;
+            }
+        }
+        assert_eq!(p1, p2);
+        assert_eq!(m1, m2);
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn gmul_folds_like_rescaled_gradient() {
+        // gmul = k must equal feeding k·g with gmul = 1 (both optimizers)
+        let k = 0.125f32;
+        let g = vec![0.3f32, -0.7];
+        let kg: Vec<f32> = g.iter().map(|x| k * x).collect();
+        let mut p1 = vec![0.1f32, 0.2];
+        let mut m1 = vec![0.0f32; 2];
+        let mut v1 = vec![0.0f32; 2];
+        let (mut p2, mut m2, mut v2) = (p1.clone(), m1.clone(), v1.clone());
+        adam_update(&mut p1, &g, &mut m1, &mut v1, 0.01, k, 0.9, 0.999, 1e-8, 0.0, 1.0);
+        adam_update(&mut p2, &kg, &mut m2, &mut v2, 0.01, 1.0, 0.9, 0.999, 1e-8, 0.0, 1.0);
+        assert_eq!(p1, p2);
+        let mut q1 = vec![0.1f32, 0.2];
+        let mut n1 = vec![0.05f32, 0.0];
+        let (mut q2, mut n2) = (q1.clone(), n1.clone());
+        sgd_update(&mut q1, &g, &mut n1, 0.1, k, 0.9, 0.0);
+        sgd_update(&mut q2, &kg, &mut n2, 0.1, 1.0, 0.9, 0.0);
+        assert_eq!(q1, q2);
+        assert_eq!(n1, n2);
     }
 
     #[test]
@@ -84,8 +150,8 @@ mod tests {
         let mut m2 = m1.clone();
         let mut v2 = v1.clone();
         let g = vec![0.1f32];
-        adam_update(&mut p1, &g, &mut m1, &mut v1, 0.01, 0.9, 0.999, 1e-8, 0.0, 1.0);
-        adam_update(&mut p2, &g, &mut m2, &mut v2, 0.01, 0.9, 0.999, 1e-8, 0.0, 5.0);
+        adam_update(&mut p1, &g, &mut m1, &mut v1, 0.01, 1.0, 0.9, 0.999, 1e-8, 0.0, 1.0);
+        adam_update(&mut p2, &g, &mut m2, &mut v2, 0.01, 1.0, 0.9, 0.999, 1e-8, 0.0, 5.0);
         assert!(p1[0] != p2[0], "step count must change the update");
     }
 }

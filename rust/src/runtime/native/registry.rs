@@ -244,6 +244,15 @@ pub fn builtin_manifest() -> Manifest {
         Kind::Coord,
         &tfm_dims(128, 2, true),
     ));
+    // Depth coord family at w32 (coord-check invariants for the depth
+    // transfer axis: residual branches must stay O(1) as L grows)
+    for d in [2, 4, 8] {
+        out.push(tfm_variant(
+            &format!("tfm_pre_w32_d{d}__coord"),
+            Kind::Coord,
+            &tfm_dims(32, d, true),
+        ));
+    }
 
     // MLP family (Fig. 3 / Fig. 9)
     for w in [64, 128, 256, 512, 1024, 2048] {
@@ -273,6 +282,20 @@ pub fn builtin_manifest() -> Manifest {
         out.push(resmlp_variant(&name, Kind::Train, &c));
         out.push(resmlp_variant(&format!("{name}__eval"), Kind::Eval, &c));
     }
+    // ResMLP depth pair at w32 (depth-transfer acceptance: tune at
+    // n_block 2, land at n_block 8)
+    for nb in [2, 8] {
+        let c = ResMlpConfig {
+            d_in: 256,
+            width: 32,
+            n_block: nb,
+            d_out: 10,
+            batch: 64,
+        };
+        let name = format!("resmlp_w32_nb{nb}");
+        out.push(resmlp_variant(&name, Kind::Train, &c));
+        out.push(resmlp_variant(&format!("{name}__eval"), Kind::Eval, &c));
+    }
 
     let mut variants = BTreeMap::new();
     for v in out {
@@ -293,13 +316,14 @@ mod tests {
     fn registry_mirrors_aot_counts() {
         let m = builtin_manifest();
         // aot.py: 2×(5 post + 5 pre + 2 depth + 2 seq + 2 batch + 1 hd4 +
-        // 4 nh + 4 ffn + 3 targets) train+eval pairs + 6 coord
+        // 4 nh + 4 ffn + 3 targets) train+eval pairs + 9 coord
+        // (5 post + 1 pre + 3 depth)
         let tfm_pairs = 5 + 5 + 2 + 2 + 2 + 1 + 4 + 4 + 3;
         let mlp_pairs = 6 + 3 + 3;
-        let resmlp_pairs = 4;
+        let resmlp_pairs = 4 + 2;
         assert_eq!(
             m.variants.len(),
-            2 * (tfm_pairs + mlp_pairs + resmlp_pairs) + 6
+            2 * (tfm_pairs + mlp_pairs + resmlp_pairs) + 9
         );
     }
 

@@ -534,6 +534,7 @@ impl BackendSession for TfmSession {
         &mut self,
         data: &[DataBatch],
         lr_vec: &[f32],
+        gmul: &[f32],
         hp_vec: &[f32; 8],
         want_probes: bool,
     ) -> Result<(f32, Vec<Probe>)> {
@@ -552,12 +553,14 @@ impl BackendSession for TfmSession {
         let grads = self.backward(&fwd, hp_vec);
         let (b1, b2, eps, wd, t) = (hp_vec[3], hp_vec[4], hp_vec[5], hp_vec[6], hp_vec[7]);
         for i in 0..self.params.len() {
+            let gm = if gmul.is_empty() { 1.0 } else { gmul[i] };
             adam_update(
                 &mut self.params[i],
                 &grads[i],
                 &mut self.ms[i],
                 &mut self.vs[i],
                 lr_vec[i],
+                gm,
                 b1,
                 b2,
                 eps,

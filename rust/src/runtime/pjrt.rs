@@ -127,9 +127,20 @@ impl BackendSession for PjrtSession {
         &mut self,
         data: &[DataBatch],
         lr_vec: &[f32],
+        gmul: &[f32],
         hp_vec: &[f32; 8],
         want_probes: bool,
     ) -> Result<(f32, Vec<Probe>)> {
+        // The AOT-lowered executables take (lr_vec, hp_vec) only; a
+        // non-trivial per-tensor gradient multiplier (u-μP fold residue)
+        // cannot be applied, and silently dropping it would train a
+        // different model than the native backend.
+        if gmul.iter().any(|&g| g != 1.0) {
+            bail!(
+                "the pjrt backend does not support per-tensor gradient \
+                 multipliers (gmul_vec); use the native backend for u-μP"
+            );
+        }
         let p = self.variant.n_params();
         let data_lits: Vec<xla::Literal> =
             data.iter().map(to_literal).collect::<Result<_>>()?;

@@ -92,6 +92,12 @@ impl<S: BackendSession + ?Sized> SessionCore<S> {
         if inputs.lr_vec.len() != p {
             bail!("lr_vec has {} entries, expected {p}", inputs.lr_vec.len());
         }
+        if !inputs.gmul_vec.is_empty() && inputs.gmul_vec.len() != p {
+            bail!(
+                "gmul_vec has {} entries, expected 0 or {p}",
+                inputs.gmul_vec.len()
+            );
+        }
         if data.len() != self.variant.data_inputs.len() {
             bail!("expected {} data inputs", self.variant.data_inputs.len());
         }
@@ -100,7 +106,9 @@ impl<S: BackendSession + ?Sized> SessionCore<S> {
         if self.variant.opt == "adam" {
             hp[7] = (self.steps_done + 1) as f32;
         }
-        let out = self.inner.step(data, &inputs.lr_vec, &hp, want_probes)?;
+        let out = self
+            .inner
+            .step(data, &inputs.lr_vec, &inputs.gmul_vec, &hp, want_probes)?;
         self.steps_done += 1;
         Ok(out)
     }

@@ -9,8 +9,14 @@
 //! | GET    | /jobs/:id/journal     | 200 / 404         | last trial records, NDJSON |
 //! | DELETE | /jobs/:id             | 200 / 404 / 409   | `{"id","state"}`           |
 //! | GET    | /jobs/:id/events      | 200 / 404 (SSE)   | `id:`/`data:` event frames |
-//! | GET    | /hp?width=N           | 200 / 404         | best transferred HPs       |
+//! | GET    | /hp?width=&depth=&batch= | 200 / 400 / 404 | best transferred HPs     |
 //! | GET    | /healthz              | 200               | `{"ok":true}`              |
+//!
+//! `GET /hp` query params are each optional and echoed back (μP transfer
+//! makes the answer shape-independent); an *unparseable* value
+//! (`?width=abc`, `?depth=2.5`) is a 400, never silently ignored — a
+//! client that mistyped a dimension must not mistake the global best for
+//! a shape-specific answer.
 //!
 //! `GET /jobs/:id/results` query params: `path=a.b.0` answers with just
 //! that value's raw slice (lazy scan, no tree build; unknown path → 404),
@@ -181,15 +187,32 @@ pub fn handle(
         },
         ("GET", ["jobs", id, "events"]) => return stream_events(reg, req, id, w, stop),
         ("GET", ["hp"]) => {
-            let width = req.query.get("width").and_then(|v| v.parse().ok());
-            match reg.best_hp(width) {
-                Some(ans) => http::respond_json(w, 200, &ans, keep),
-                None => http::respond_json(
-                    w,
-                    404,
-                    &error_json(404, "no completed sweep has a non-diverged winner yet"),
-                    keep,
-                ),
+            // strict parse: a present-but-malformed dimension is a 400.
+            // The old `.and_then(|v| v.parse().ok())` silently collapsed
+            // `?width=abc` to "no width" and answered the global best —
+            // precisely the wrong response to a typo.
+            let dim = |k: &str| -> Result<Option<usize>, String> {
+                match req.query.get(k) {
+                    None => Ok(None),
+                    Some(v) => v
+                        .parse::<usize>()
+                        .map(Some)
+                        .map_err(|_| format!("query param {k} must be a non-negative integer, got {v:?}")),
+                }
+            };
+            match (dim("width"), dim("depth"), dim("batch")) {
+                (Ok(width), Ok(depth), Ok(batch)) => match reg.best_hp(width, depth, batch) {
+                    Some(ans) => http::respond_json(w, 200, &ans, keep),
+                    None => http::respond_json(
+                        w,
+                        404,
+                        &error_json(404, "no completed sweep has a non-diverged winner yet"),
+                        keep,
+                    ),
+                },
+                (Err(m), _, _) | (_, Err(m), _) | (_, _, Err(m)) => {
+                    http::respond_json(w, 400, &error_json(400, &m), keep)
+                }
             }
         }
         // known resources, wrong method

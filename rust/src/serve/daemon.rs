@@ -34,7 +34,7 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use crate::model::BaseShape;
-use crate::mup::Optimizer;
+use crate::mup::{Optimizer, Scheme};
 use crate::runtime::Runtime;
 use crate::serve::events::{Event, EventBus, EventSink};
 use crate::sweep::Sweep;
@@ -98,6 +98,14 @@ pub struct JobSpec {
     pub tuner: TunerKind,
     /// mid-trial snapshot cadence; 0 with a non-SHA tuner = no checkpoints
     pub ckpt_every: usize,
+    /// which parametrization the tuned/transferred runs use (`sp` is the
+    /// no-transfer baseline; `mup`/`umup` transfer)
+    pub param: Scheme,
+    /// base depth (layers/blocks) for the depth transfer axis; 0 = same
+    /// as the target, i.e. no depth scaling
+    pub base_depth: usize,
+    /// base batch size for the batch transfer axis; 0 = same as target
+    pub base_batch: usize,
 }
 
 impl Default for JobSpec {
@@ -115,6 +123,9 @@ impl Default for JobSpec {
             workers: 0,
             tuner: TunerKind::Random,
             ckpt_every: 0,
+            param: Scheme::Mup,
+            base_depth: 0,
+            base_batch: 0,
         }
     }
 }
@@ -162,6 +173,9 @@ impl JobSpec {
             ("eta", jnum(eta as f64)),
             ("rung0", jnum(rung0 as f64)),
             ("ckpt_every", jnum(self.ckpt_every as f64)),
+            ("param", jstr(self.param.name())),
+            ("base_depth", jnum(self.base_depth as f64)),
+            ("base_batch", jnum(self.base_batch as f64)),
         ])
     }
 
@@ -224,6 +238,11 @@ impl JobSpec {
                 .map(|f| f as u64)
                 .context("field seed must be a non-negative integer (send as string beyond 2^53)")?,
         };
+        let param = {
+            let text = s("param", d.param.name());
+            Scheme::parse(&text)
+                .with_context(|| format!("param must be sp|mup|umup, got {text:?}"))?
+        };
         let spec = JobSpec {
             name,
             kind: JobKind::parse(&s("kind", d.kind.as_str()))?,
@@ -237,6 +256,9 @@ impl JobSpec {
             workers: u("workers", d.workers)?,
             tuner,
             ckpt_every: u("ckpt_every", d.ckpt_every)?,
+            param,
+            base_depth: u("base_depth", d.base_depth)?,
+            base_batch: u("base_batch", d.base_batch)?,
         };
         if spec.steps == 0 || spec.samples == 0 {
             bail!("steps and samples must be >= 1");
@@ -263,6 +285,9 @@ impl JobSpec {
                 d_ffn: 4 * self.base_width,
             },
             optimizer: Optimizer::Adam,
+            scheme: self.param,
+            base_depth: (self.base_depth > 0).then_some(self.base_depth),
+            base_batch: (self.base_batch > 0).then_some(self.base_batch),
             space: SearchSpace::iwslt_like(),
             proxy_steps: self.steps,
             target_steps: self.target_steps,
@@ -796,11 +821,16 @@ impl Registry {
     /// The μTransfer question, answered from the registry: the best HPs
     /// recorded by any completed proxy sweep, ranked by winning-trial
     /// validation loss.  μP makes the answer width-independent — that is
-    /// the paper's whole point — so the requested target `width` is
-    /// echoed, not matched.  Served entirely from the in-memory cache
-    /// (populated at `finish` / startup), so polling `/hp` never touches
-    /// disk.
-    pub fn best_hp(&self, width: Option<usize>) -> Option<Json> {
+    /// the paper's whole point — so the requested target `width` (and,
+    /// with the depth/batch transfer axes, `depth`/`batch`) is echoed,
+    /// not matched.  Served entirely from the in-memory cache (populated
+    /// at `finish` / startup), so polling `/hp` never touches disk.
+    pub fn best_hp(
+        &self,
+        width: Option<usize>,
+        depth: Option<usize>,
+        batch: Option<usize>,
+    ) -> Option<Json> {
         let inner = self.lock();
         let (id, entry, loss, assignment) = inner
             .jobs
@@ -816,15 +846,22 @@ impl Registry {
             ("proxy", jstr(&entry.spec.proxy)),
             ("base_width", jnum(entry.spec.base_width as f64)),
             ("proxy_steps", jnum(entry.spec.steps as f64)),
+            ("param", jstr(entry.spec.param.name())),
             ("assignment", assignment.clone()),
             ("proxy_val_loss", jnum(loss)),
             (
                 "note",
-                jstr("muP: these HPs transfer zero-shot to any width with the same base shape"),
+                jstr("muP: these HPs transfer zero-shot across width/depth/batch with the same base shape"),
             ),
         ]);
         if let Some(w) = width {
             j.set("width", jnum(w as f64));
+        }
+        if let Some(d) = depth {
+            j.set("depth", jnum(d as f64));
+        }
+        if let Some(b) = batch {
+            j.set("batch", jnum(b as f64));
         }
         Some(j)
     }
@@ -1259,10 +1296,19 @@ mod tests {
             workers: 2,
             tuner: TunerKind::Sha { eta: 3, rung0: 4 },
             ckpt_every: 2,
+            param: Scheme::Umup,
+            base_depth: 2,
+            base_batch: 16,
         };
         let text = spec.to_json().to_string();
         let back = JobSpec::from_json(&json::parse(&text).unwrap()).unwrap();
         assert_eq!(back, spec, "names with quotes/newlines/emoji must survive");
+        // param + base dims survive the roundtrip and drive setup()
+        assert_eq!(back.param, Scheme::Umup);
+        let setup = back.setup();
+        assert_eq!(setup.scheme, Scheme::Umup);
+        assert_eq!(setup.base_depth, Some(2));
+        assert_eq!(setup.base_batch, Some(16));
     }
 
     #[test]
@@ -1270,6 +1316,7 @@ mod tests {
         let bad = |s: &str| JobSpec::from_json(&json::parse(s).unwrap()).is_err();
         assert!(bad(r#"{"kind":"evil"}"#));
         assert!(bad(r#"{"tuner":"lbfgs"}"#));
+        assert!(bad(r#"{"param":"ntk"}"#));
         assert!(bad(r#"{"steps":0}"#));
         assert!(bad(r#"{"base_width":33}"#));
         assert!(bad(r#"{"samples":-2}"#));
@@ -1294,6 +1341,11 @@ mod tests {
         let ok = JobSpec::from_json(&json::parse("{}").unwrap()).unwrap();
         assert_eq!(ok.kind, JobKind::Transfer);
         assert_eq!(ok.tuner, TunerKind::Random);
+        assert_eq!(ok.param, Scheme::Mup);
+        assert_eq!(ok.base_depth, 0);
+        let setup = ok.setup();
+        assert_eq!(setup.base_depth, None, "0 means same-as-target");
+        assert_eq!(setup.base_batch, None);
     }
 
     #[test]
@@ -1404,15 +1456,21 @@ mod tests {
             let results =
                 json::parse(r#"{"best":{"lr":0.01},"best_val_loss":2.5}"#).unwrap();
             reg.finish(&id, Ok(results)).unwrap();
-            let ans = reg.best_hp(Some(256)).unwrap();
+            let ans = reg.best_hp(Some(256), Some(8), Some(512)).unwrap();
             assert_eq!(ans.req("job").as_str().unwrap(), id);
             assert_eq!(ans.req("assignment").req("lr").as_f64().unwrap(), 0.01);
             assert_eq!(ans.req("width").as_usize().unwrap(), 256);
+            assert_eq!(ans.req("depth").as_usize().unwrap(), 8);
+            assert_eq!(ans.req("batch").as_usize().unwrap(), 512);
+            assert_eq!(ans.req("param").as_str().unwrap(), "mup");
             id
         };
         // restart: the cache repopulates from results.json at open
         let reg = Registry::open(&dir).unwrap();
-        assert_eq!(reg.best_hp(None).unwrap().req("job").as_str().unwrap(), id);
+        assert_eq!(
+            reg.best_hp(None, None, None).unwrap().req("job").as_str().unwrap(),
+            id
+        );
         // a later sweep with a lower winning loss takes over
         let id2 = reg.submit(JobSpec::default()).unwrap();
         reg.finish(
@@ -1420,7 +1478,7 @@ mod tests {
             Ok(json::parse(r#"{"best":{"lr":0.02},"best_val_loss":1.5}"#).unwrap()),
         )
         .unwrap();
-        assert_eq!(reg.best_hp(None).unwrap().req("job").as_str().unwrap(), id2);
+        assert_eq!(reg.best_hp(None, None, None).unwrap().req("job").as_str().unwrap(), id2);
         // an all-diverged sweep (best null) never wins
         let id3 = reg.submit(JobSpec::default()).unwrap();
         reg.finish(
@@ -1428,7 +1486,7 @@ mod tests {
             Ok(json::parse(r#"{"best":null,"best_val_loss":null}"#).unwrap()),
         )
         .unwrap();
-        assert_eq!(reg.best_hp(None).unwrap().req("job").as_str().unwrap(), id2);
+        assert_eq!(reg.best_hp(None, None, None).unwrap().req("job").as_str().unwrap(), id2);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::ckpt::{RunProgress, Snapshot};
 use crate::data::{DataSource, Split};
 use crate::init;
 use crate::model::BaseShape;
-use crate::mup::{HyperParams, Optimizer, Parametrization};
+use crate::mup::{HyperParams, Optimizer, Parametrization, ScaleAxes};
 use crate::runtime::session::{validate_init, StepInputs};
 use crate::runtime::{BackendSession, Runtime, SessionCore, Variant};
 use crate::serve::events::{Event, EventSink, StderrSink};
@@ -31,6 +31,13 @@ pub struct RunSpec {
     pub par: Parametrization,
     pub hp: HyperParams,
     pub base: BaseShape,
+    /// depth (n_layer / n_block) of the base model the HPs were tuned at —
+    /// `None` = same as target (no depth-axis scaling).  Drives the
+    /// residual-branch 1/√(L/L₀) factors under μP/u-μP.
+    pub base_depth: Option<usize>,
+    /// batch size of the base model — `None` = same as target.  Drives the
+    /// global LR batch-scaling factor (√(B/B₀) Adam, B/B₀ SGD).
+    pub base_batch: Option<usize>,
     pub steps: usize,
     pub seed: u64,
     pub schedule: Schedule,
@@ -47,6 +54,8 @@ impl RunSpec {
             par,
             hp,
             base,
+            base_depth: None,
+            base_batch: None,
             steps: 100,
             seed: 0,
             schedule: Schedule::Constant,
@@ -57,6 +66,12 @@ impl RunSpec {
 
     pub fn optimizer(&self) -> Optimizer {
         self.par.optimizer
+    }
+
+    /// Depth/batch transfer ratios for this spec against `variant`'s
+    /// actual shape (unit when the base dims are unset or match).
+    pub fn axes(&self, variant: &Variant) -> ScaleAxes {
+        crate::model::scale_axes(variant, self.base_depth, self.base_batch)
     }
 
     /// Identity of the *trajectory* this spec defines: variant,
@@ -78,8 +93,15 @@ impl RunSpec {
         // Debug formatting is deterministic (f64 prints shortest
         // round-trip), which is all a same-binary identity check needs.
         let desc = format!(
-            "{}|{:?}|{:?}|{:?}|{:?}|{}|{budget_tag}",
-            self.variant, self.par, self.hp, self.base, self.schedule, self.seed
+            "{}|{:?}|{:?}|{:?}|{:?}|{:?}|{:?}|{}|{budget_tag}",
+            self.variant,
+            self.par,
+            self.hp,
+            self.base,
+            self.base_depth,
+            self.base_batch,
+            self.schedule,
+            self.seed
         );
         crate::init::rng::fold64(0xC0DE_5EED_0000_0001, desc.as_bytes())
     }
@@ -132,7 +154,7 @@ pub fn hp_vec(spec: &RunSpec, rt: &Runtime) -> Result<[f32; 8]> {
         Optimizer::Adam => {
             let d_head = variant.config.get("d_head").unwrap_or(1);
             let d_head0 = crate::model::base_d_head(variant, &spec.base);
-            let m = spec.par.multipliers(hp, out_dims, d_head, d_head0);
+            let m = spec.par.multipliers(hp, dims[0], out_dims, d_head, d_head0);
             [
                 m.attn_scale as f32,
                 m.output_scale as f32,
@@ -145,7 +167,7 @@ pub fn hp_vec(spec: &RunSpec, rt: &Runtime) -> Result<[f32; 8]> {
             ]
         }
         Optimizer::Sgd => {
-            let m = spec.par.multipliers(hp, out_dims, 1, 1);
+            let m = spec.par.multipliers(hp, dims[0], out_dims, 1, 1);
             [
                 m.output_scale as f32,
                 hp.momentum as f32,
@@ -186,6 +208,7 @@ pub struct PreparedRun {
     spec: RunSpec,
     core: SessionCore<dyn BackendSession + Send>,
     base_lr: Vec<f32>,
+    gmul: Vec<f32>,
     hp_v: [f32; 8],
     ckpt: Option<CkptConfig>,
     sink: Option<Arc<dyn EventSink>>,
@@ -222,6 +245,7 @@ impl PreparedRun {
             &mut self.core,
             &self.spec,
             &self.base_lr,
+            &self.gmul,
             &self.hp_v,
             data,
             self.ckpt.as_ref(),
@@ -236,20 +260,32 @@ impl PreparedRun {
 /// function so the two schedulers can never desynchronize on seeding or
 /// validation order — the bit-exact-across-worker-counts contract depends
 /// on it.
-fn resolve(rt: &Runtime, spec: &RunSpec) -> Result<(Variant, Vec<Vec<f32>>, Vec<f32>, [f32; 8])> {
+#[allow(clippy::type_complexity)]
+fn resolve(
+    rt: &Runtime,
+    spec: &RunSpec,
+) -> Result<(Variant, Vec<Vec<f32>>, Vec<f32>, Vec<f32>, [f32; 8])> {
     let variant = rt.manifest().get(&spec.variant)?.clone();
-    let params = init::init_params(&variant, &spec.par, &spec.hp, &spec.base, spec.seed);
-    let base_lr = init::lr_vec(&variant, &spec.par, &spec.hp, &spec.base);
+    let axes = spec.axes(&variant);
+    let params = init::init_params(&variant, &spec.par, &spec.hp, &spec.base, axes, spec.seed);
+    let base_lr = init::lr_vec(&variant, &spec.par, &spec.hp, &spec.base, axes);
+    // all-ones collapses to the empty vector: backends skip the multiply
+    // entirely (bitwise-identical trajectories for SP/μP) and PJRT — which
+    // cannot apply a real fold — stays usable for them.
+    let mut gmul = init::gmul_vec(&variant, &spec.par, &spec.hp, &spec.base, axes);
+    if gmul.iter().all(|&k| k == 1.0) {
+        gmul = Vec::new();
+    }
     let hp_v = hp_vec(spec, rt)?;
     validate_init(&variant, &spec.variant, &params)?;
-    Ok((variant, params, base_lr, hp_v))
+    Ok((variant, params, base_lr, gmul, hp_v))
 }
 
 /// Resolve a spec into a [`PreparedRun`] on the coordinator thread.
 /// Returns `Ok(None)` when the backend declines `Send` sessions (PJRT) —
 /// the caller must then execute sequentially via [`run`].
 pub fn prepare(rt: &Runtime, spec: &RunSpec) -> Result<Option<PreparedRun>> {
-    let (variant, params, base_lr, hp_v) = resolve(rt, spec)?;
+    let (variant, params, base_lr, gmul, hp_v) = resolve(rt, spec)?;
     let inner = match rt
         .backend()
         .session_send(rt.manifest(), &variant, params)
@@ -267,6 +303,7 @@ pub fn prepare(rt: &Runtime, spec: &RunSpec) -> Result<Option<PreparedRun>> {
         spec: spec.clone(),
         core: SessionCore::new(variant, inner),
         base_lr,
+        gmul,
         hp_v,
         ckpt: None,
         sink: None,
@@ -302,7 +339,7 @@ pub fn run_ckpt_with(
     sink: &dyn EventSink,
     key: &str,
 ) -> Result<RunResult> {
-    let (variant, params, base_lr, hp_v) = resolve(rt, spec)?;
+    let (variant, params, base_lr, gmul, hp_v) = resolve(rt, spec)?;
     let inner = rt
         .backend()
         .session(rt.manifest(), &variant, params)
@@ -310,7 +347,7 @@ pub fn run_ckpt_with(
             format!("creating {} session for {}", rt.backend().name(), spec.variant)
         })?;
     let mut core = SessionCore::new(variant, inner);
-    drive(&mut core, spec, &base_lr, &hp_v, data, ckpt, sink, key)
+    drive(&mut core, spec, &base_lr, &gmul, &hp_v, data, ckpt, sink, key)
 }
 
 /// Rebuild the outcome of a finished run straight from its end-of-run
@@ -387,6 +424,7 @@ fn drive<S: BackendSession + ?Sized>(
     core: &mut SessionCore<S>,
     spec: &RunSpec,
     base_lr: &[f32],
+    gmul: &[f32],
     hp_v: &[f32; 8],
     data: &dyn DataSource,
     ckpt: Option<&CkptConfig>,
@@ -472,6 +510,7 @@ fn drive<S: BackendSession + ?Sized>(
         let lr_vec: Vec<f32> = base_lr.iter().map(|&l| l * decay as f32).collect();
         let inputs = StepInputs {
             lr_vec,
+            gmul_vec: gmul.to_vec(),
             hp_vec: *hp_v,
         };
         let batch = data.batch(Split::Train, step);
@@ -552,6 +591,7 @@ fn eval<S: BackendSession + ?Sized>(
         let batch = data.batch(Split::Val, b);
         let inputs = StepInputs {
             lr_vec: vec![],
+            gmul_vec: vec![],
             hp_vec: *hp_v,
         };
         acc += core.eval(&batch, &inputs)? as f64;

@@ -13,7 +13,7 @@ use anyhow::Result;
 
 use crate::init::rng::Rng;
 use crate::model::BaseShape;
-use crate::mup::{HyperParams, Optimizer, Parametrization};
+use crate::mup::{HyperParams, Optimizer, Parametrization, Scheme};
 use crate::runtime::Runtime;
 use crate::sweep::{Job, JobResult, Sweep};
 use crate::train::{RunSpec, Schedule};
@@ -46,6 +46,15 @@ pub struct TransferSetup {
     pub target_variant: String,
     /// μP base shape == the proxy's widths
     pub base: BaseShape,
+    /// which formulation parametrizes the tuned and transferred runs
+    /// (μP/u-μP transfer; SP is the baseline that drifts)
+    pub scheme: Scheme,
+    /// depth (n_layer / n_block) the proxy tunes at — `None` disables the
+    /// depth transfer axis.  Applied to proxy AND target specs; the ratio
+    /// against each variant's actual depth drives the residual factors.
+    pub base_depth: Option<usize>,
+    /// batch size the proxy tunes at — `None` disables the batch axis
+    pub base_batch: Option<usize>,
     pub optimizer: Optimizer,
     pub space: SearchSpace,
     pub proxy_steps: usize,
@@ -139,21 +148,26 @@ impl TransferOutcome {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn spec_for(
+    setup: &TransferSetup,
     variant: &str,
     par: Parametrization,
     hp: HyperParams,
     base: BaseShape,
     steps: usize,
     seed: u64,
-    eval_every: usize,
-    schedule: Schedule,
 ) -> RunSpec {
     let mut s = RunSpec::new(variant, par, hp, base);
     s.steps = steps;
     s.seed = seed;
-    s.eval_every = eval_every.max(1).min(steps);
-    s.schedule = schedule;
+    s.eval_every = setup.eval_every.max(1).min(steps);
+    s.schedule = setup.schedule;
+    // SP specs carry these too but ignore them (`abc_for` applies axis
+    // ratios only under μP/u-μP) — which is exactly the baseline story:
+    // the naive path gets no depth/batch correction and drifts.
+    s.base_depth = setup.base_depth;
+    s.base_batch = setup.base_batch;
     s
 }
 
@@ -164,7 +178,7 @@ fn tune_proxy(
     setup: &TransferSetup,
     label: &str,
 ) -> Result<(Vec<Trial>, Option<Assignment>)> {
-    let par = Parametrization::mup(setup.optimizer);
+    let par = Parametrization::new(setup.scheme, setup.optimizer);
     let mut rng = Rng::new(setup.seed ^ 0xA11CE);
     // Grid enumerates the space; Random and SHA draw the same `n_samples`
     // assignments (same RNG stream, so SHA's candidate set is identical
@@ -181,14 +195,13 @@ fn tune_proxy(
         .map(|(i, a)| Job {
             key: format!("{label}/proxy/{i}"),
             spec: spec_for(
+                setup,
                 &setup.proxy_variant,
                 par,
                 a.apply(HyperParams::default()),
                 setup.base.clone(),
                 setup.proxy_steps,
                 setup.seed + 1000 + i as u64,
-                setup.eval_every,
-                setup.schedule,
             ),
             assignment: a,
             data_seed: setup.seed,
@@ -248,7 +261,7 @@ pub fn mu_transfer(
     label: &str,
 ) -> Result<TransferOutcome> {
     let _ = rt; // execution flows through the sweep's shared runtime
-    let par = Parametrization::mup(setup.optimizer);
+    let par = Parametrization::new(setup.scheme, setup.optimizer);
     // 2. tune the proxy
     let (proxy_trials, best) = tune_proxy(sweep, setup, label)?;
     let search_flops: f64 = proxy_trials.iter().map(|t| t.flops).sum();
@@ -258,14 +271,13 @@ pub fn mu_transfer(
         let job = Job {
             key: format!("{label}/target"),
             spec: spec_for(
+                setup,
                 &setup.target_variant,
                 par,
                 best_a.apply(HyperParams::default()),
                 setup.base.clone(),
                 setup.target_steps,
                 setup.seed + 99,
-                setup.eval_every,
-                setup.schedule,
             ),
             assignment: best_a.clone(),
             data_seed: setup.seed,
@@ -304,14 +316,13 @@ pub fn naive_transfer(
             Job {
                 key: format!("{label}/sp-proxy/{i}"),
                 spec: spec_for(
+                    setup,
                     &setup.proxy_variant,
                     par,
                     a.apply(HyperParams::default()),
                     BaseShape::SameAsTarget,
                     setup.proxy_steps,
                     setup.seed + 1000 + i as u64,
-                    setup.eval_every,
-                    setup.schedule,
                 ),
                 assignment: a,
                 data_seed: setup.seed,
@@ -327,14 +338,13 @@ pub fn naive_transfer(
         let job = Job {
             key: format!("{label}/sp-target"),
             spec: spec_for(
+                setup,
                 &setup.target_variant,
                 par,
                 best_a.apply(HyperParams::default()),
                 BaseShape::SameAsTarget,
                 setup.target_steps,
                 setup.seed + 99,
-                setup.eval_every,
-                setup.schedule,
             ),
             assignment: best_a.clone(),
             data_seed: setup.seed,
@@ -373,14 +383,13 @@ pub fn direct_tuning(
             Job {
                 key: format!("{label}/direct/{i}"),
                 spec: spec_for(
+                    setup,
                     &setup.target_variant,
                     par,
                     a.apply(HyperParams::default()),
                     BaseShape::SameAsTarget,
                     setup.target_steps,
                     setup.seed + 2000 + i as u64,
-                    setup.eval_every,
-                    setup.schedule,
                 ),
                 assignment: a,
                 data_seed: setup.seed,

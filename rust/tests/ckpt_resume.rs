@@ -76,13 +76,18 @@ fn snapshot_roundtrip_bitwise_across_architectures() {
         let hp = HyperParams { lr: 5e-3, ..HyperParams::default() };
         let mut spec = RunSpec::new(name, par, hp, BaseShape::SameAsTarget);
         spec.seed = 5;
-        let params = init::init_params(&v, &spec.par, &spec.hp, &spec.base, spec.seed);
-        let base_lr = init::lr_vec(&v, &spec.par, &spec.hp, &spec.base);
+        let axes = spec.axes(&v);
+        let params = init::init_params(&v, &spec.par, &spec.hp, &spec.base, axes, spec.seed);
+        let base_lr = init::lr_vec(&v, &spec.par, &spec.hp, &spec.base, axes);
         let hp_v = hp_vec(&spec, &rt).unwrap();
         let mut sess = TrainSession::new(&rt, name, params.clone()).unwrap();
         let data = source_for(&v, 7);
         for step in 0..3 {
-            let inputs = StepInputs { lr_vec: base_lr.clone(), hp_vec: hp_v };
+            let inputs = StepInputs {
+                lr_vec: base_lr.clone(),
+                gmul_vec: vec![],
+                hp_vec: hp_v,
+            };
             sess.step(&data.batch(Split::Train, step), &inputs).unwrap();
         }
         let state = sess.state().unwrap().expect("native backend must capture state");
@@ -112,7 +117,7 @@ fn snapshot_roundtrip_bitwise_across_architectures() {
         let mut fresh = TrainSession::new(
             &rt,
             name,
-            init::init_params(&v, &spec.par, &spec.hp, &spec.base, 999),
+            init::init_params(&v, &spec.par, &spec.hp, &spec.base, spec.axes(&v), 999),
         )
         .unwrap();
         assert!(fresh.restore(&back.model_state(), 3).unwrap());
@@ -134,7 +139,7 @@ fn snapshot_loader_rejects_corruption() {
     let par = Parametrization::mup(Optimizer::Sgd);
     let hp = HyperParams::default();
     let spec = RunSpec::new("mlp_w64", par, hp, BaseShape::SameAsTarget);
-    let params = init::init_params(&v, &spec.par, &spec.hp, &spec.base, 1);
+    let params = init::init_params(&v, &spec.par, &spec.hp, &spec.base, spec.axes(&v), 1);
     let sess = TrainSession::new(&rt, "mlp_w64", params).unwrap();
     let state = sess.state().unwrap().unwrap();
     let snap = Snapshot::from_state(
@@ -351,6 +356,49 @@ fn resume_refuses_checkpoints_from_a_different_configuration() {
         second.train_losses[9].to_bits(),
         "prefix must be the resumed trajectory, not a re-run"
     );
+}
+
+/// The trajectory fingerprint covers the parametrization identity and the
+/// depth/batch base dims: a checkpoint written under μP must not resume
+/// under u-μP (the stored tensors live in folded coordinates), nor under
+/// an edited base_depth/base_batch (the per-tensor LRs and folds differ).
+#[test]
+fn resume_refuses_different_parametrization_or_base_dims() {
+    let rt = Runtime::native();
+    let dir = tdir("fp_param_guard");
+    let spec = tfm_spec(8);
+    let v = rt.manifest().get(&spec.variant).unwrap().clone();
+    let cfg = CkptConfig { every: 0, path: dir.join("run.ckpt") };
+    let data = source_for(&v, 7);
+    let first = run_ckpt(&rt, &spec, data.as_ref(), Some(&cfg)).unwrap();
+    assert_eq!(first.train_losses.len(), 8);
+
+    // each edit must change the trajectory identity, pairwise
+    let mut umup = tfm_spec(8);
+    umup.par = Parametrization::umup(Optimizer::Adam);
+    let mut deep = tfm_spec(8);
+    deep.base_depth = Some(1);
+    let mut batched = tfm_spec(8);
+    batched.base_batch = Some(4);
+    let fps = [
+        spec.trajectory_fingerprint(),
+        umup.trajectory_fingerprint(),
+        deep.trajectory_fingerprint(),
+        batched.trajectory_fingerprint(),
+    ];
+    for i in 0..fps.len() {
+        for j in i + 1..fps.len() {
+            assert_ne!(fps[i], fps[j], "fingerprints {i} and {j} collide");
+        }
+    }
+
+    // resuming the μP checkpoint under u-μP must restart from step 0 — a
+    // full-length curve proves no foreign state was glued on
+    let second = run_ckpt(&rt, &umup, data.as_ref(), Some(&cfg)).unwrap();
+    assert_eq!(second.train_losses.len(), 8, "must re-run from step 0");
+    // the file now belongs to the u-μP spec: re-running replays it bitwise
+    let third = run_ckpt(&rt, &umup, data.as_ref(), Some(&cfg)).unwrap();
+    assert_result_bitwise(&second, &third);
 }
 
 fn mlp_jobs(label: &str, steps: usize) -> Vec<Job> {

@@ -94,6 +94,7 @@ fn golden_check(name: &str) {
     };
     let inputs = StepInputs {
         lr_vec: vec![lr; variant.n_params()],
+        gmul_vec: vec![],
         hp_vec,
     };
     for (step, want) in losses.iter().enumerate() {

@@ -15,27 +15,25 @@ use mutransfer::data::source_for;
 use mutransfer::model::BaseShape;
 use mutransfer::mup::{HyperParams, Optimizer, Parametrization, Scheme};
 use mutransfer::runtime::Runtime;
+use mutransfer::stats;
 use mutransfer::train::{run, RunSpec};
 
 const COORD_WIDTHS: [usize; 2] = [32, 64];
 const COORD_STEPS: usize = 4;
 
 fn coord_exponents(rt: &Runtime, scheme: Scheme) -> BTreeMap<String, f64> {
-    let par = match scheme {
-        Scheme::Mup => Parametrization::mup(Optimizer::Adam),
-        Scheme::Sp => Parametrization::standard(Optimizer::Adam),
-    };
+    let par = Parametrization::new(scheme, Optimizer::Adam);
     let mut records = Vec::new();
     for &w in &COORD_WIDTHS {
         let variant = format!("tfm_post_w{w}_d2__coord");
         let base = match scheme {
-            Scheme::Mup => BaseShape::Tfm {
+            Scheme::Sp => BaseShape::SameAsTarget,
+            _ => BaseShape::Tfm {
                 d_model: 32,
                 n_head: 4,
                 d_head: 8,
                 d_ffn: 128,
             },
-            Scheme::Sp => BaseShape::SameAsTarget,
         };
         let hp = HyperParams {
             lr: 2f64.powi(-7),
@@ -59,6 +57,20 @@ fn mup_coordinates_stable_across_width() {
     let rt = Runtime::native();
     let e = coord_exponents(&rt, Scheme::Mup);
     assert!(passes_mup_check(&e, 0.2), "μP exponents {e:?}");
+}
+
+/// u-μP: the unit-scaled formulation is Lemma-J.1 equivalent to Table 8
+/// per role, so it must pass the *same* coordinate invariant μP does —
+/// stable update sizes across width.  Its logical tensors are
+/// unit-variance with the scale in multipliers; the runtime realizes
+/// those multipliers by folding them into the stored tensors plus a
+/// matching optimizer `gmul`, so the optimizer state stays in the
+/// unit-scale coordinate.
+#[test]
+fn umup_coordinates_stable_across_width() {
+    let rt = Runtime::native();
+    let e = coord_exponents(&rt, Scheme::Umup);
+    assert!(passes_mup_check(&e, 0.2), "u-μP exponents {e:?}");
 }
 
 /// SP: logits and attention logits must blow up with width — the failure
@@ -202,4 +214,179 @@ fn native_resmlp_trains() {
     );
     let last = *r.train_losses.last().unwrap();
     assert!(last < 2.2, "loss should decrease from ln(10): {last}");
+}
+
+/// Run the coord check across the depth ladder at fixed width and return
+/// (depth, Δrms of the final residual-stream probe) per depth.
+fn depth_coord_deltas(rt: &Runtime, scheme: Scheme, base_depth: Option<usize>) -> Vec<(usize, f64)> {
+    let par = Parametrization::new(scheme, Optimizer::Adam);
+    let mut out = Vec::new();
+    for &d in &[2usize, 4, 8] {
+        let variant = format!("tfm_pre_w32_d{d}__coord");
+        // width is pinned to the base, so the width rules are inert and
+        // any growth left is the depth axis talking
+        let base = match scheme {
+            Scheme::Sp => BaseShape::SameAsTarget,
+            _ => BaseShape::Tfm {
+                d_model: 32,
+                n_head: 4,
+                d_head: 8,
+                d_ffn: 128,
+            },
+        };
+        let hp = HyperParams {
+            lr: 2f64.powi(-7),
+            ..HyperParams::default()
+        };
+        let mut spec = RunSpec::new(&variant, par, hp, base);
+        spec.seed = 3;
+        spec.base_depth = base_depth;
+        let v = rt.manifest().get(&variant).unwrap();
+        let data = source_for(v, 11);
+        let rec = coord_check(rt, &spec, data.as_ref(), COORD_STEPS).unwrap();
+        let last = rec.deltas["block_out"]
+            .last()
+            .copied()
+            .expect("block_out probe must report");
+        out.push((d, last));
+    }
+    out
+}
+
+fn depth_exponent(pts: &[(usize, f64)]) -> f64 {
+    let d: Vec<f64> = pts.iter().map(|p| p.0 as f64).collect();
+    let v: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    stats::growth_exponent(&d, &v)
+}
+
+/// The depth transfer axis: with `base_depth` set, residual-branch
+/// outputs get the 1/sqrt(L/L0) factor, which must *reduce* the growth
+/// exponent of the final residual-stream update vs the same μP runs with
+/// the axis off.  Comparative on purpose — the axis-off exponent is the
+/// control measured in the same test, so the assertion cannot rot as the
+/// synthetic task drifts.
+#[test]
+fn depth_axis_tames_residual_stream_growth() {
+    let rt = Runtime::native();
+    let without_axis = depth_coord_deltas(&rt, Scheme::Mup, None);
+    let with_axis = depth_coord_deltas(&rt, Scheme::Mup, Some(2));
+    let umup_axis = depth_coord_deltas(&rt, Scheme::Umup, Some(2));
+    let e_without = depth_exponent(&without_axis);
+    let e_with = depth_exponent(&with_axis);
+    let e_umup = depth_exponent(&umup_axis);
+    assert!(
+        e_with + 0.05 < e_without,
+        "depth axis must reduce block_out growth: with={e_with:.3} without={e_without:.3}"
+    );
+    assert!(
+        e_umup + 0.05 < e_without,
+        "u-μP with the depth axis must match μP: umup={e_umup:.3} without={e_without:.3}"
+    );
+    // at the base depth (ratio 1) the axis is exactly inert
+    assert_eq!(
+        without_axis[0].1, with_axis[0].1,
+        "depth ratio 1 must be bit-identical to axis-off"
+    );
+}
+
+/// The batch transfer axis is pure LR scaling (the square-root rule for
+/// Adam), so its runtime invariant is host math: every per-tensor LR
+/// scales by exactly sqrt(batch/base_batch), and leaving the base unset
+/// changes nothing.
+#[test]
+fn batch_axis_scales_adam_lrs_by_sqrt_ratio() {
+    let rt = Runtime::native();
+    let v = rt.manifest().get("tfm_post_w32_d2").unwrap();
+    let batch = v.config.get("batch").expect("tfm variants carry batch");
+    let par = Parametrization::mup(Optimizer::Adam);
+    let hp = HyperParams {
+        lr: 2f64.powi(-7),
+        ..HyperParams::default()
+    };
+    let axes_for = |bb: Option<usize>| {
+        let mut spec = RunSpec::new("tfm_post_w32_d2", par, hp.clone(), BaseShape::SameAsTarget);
+        spec.base_batch = bb;
+        spec.axes(v)
+    };
+    let base = mutransfer::init::lr_vec(v, &par, &hp, &BaseShape::SameAsTarget, axes_for(None));
+    let same = mutransfer::init::lr_vec(
+        v,
+        &par,
+        &hp,
+        &BaseShape::SameAsTarget,
+        axes_for(Some(batch)),
+    );
+    assert_eq!(base, same, "base_batch == target batch must be inert");
+    let b0 = batch / 4;
+    let scaled = mutransfer::init::lr_vec(
+        v,
+        &par,
+        &hp,
+        &BaseShape::SameAsTarget,
+        axes_for(Some(b0)),
+    );
+    let want = (batch as f64 / b0 as f64).sqrt() as f32;
+    for (i, (&l, &s)) in base.iter().zip(&scaled).enumerate() {
+        let got = s / l;
+        assert!(
+            (got - want).abs() < 1e-6,
+            "tensor {i}: lr ratio {got} != sqrt(batch ratio) {want}"
+        );
+    }
+}
+
+/// Depth-transfer acceptance: tune the LR on the shallow ResMLP, carry
+/// each scheme's winner to the deep one, and compare the *regret* (loss
+/// at the transferred LR minus the deep model's own grid best).  The
+/// completed parametrization must transfer at least as well as the SP
+/// baseline — comparative, so the assertion holds at any task scale.
+#[test]
+fn depth_transfer_mup_regret_no_worse_than_sp() {
+    let rt = Runtime::native();
+    let lrs: Vec<f64> = (-6..=-2).map(|e| 2f64.powi(e)).collect();
+    let final_loss = |scheme: Scheme, variant: &str, lr: f64| -> f64 {
+        let par = Parametrization::new(scheme, Optimizer::Sgd);
+        let hp = HyperParams { lr, ..HyperParams::default() };
+        let mut spec = RunSpec::new(variant, par, hp, BaseShape::SameAsTarget);
+        spec.steps = 12;
+        spec.seed = 2;
+        // both schemes carry the base depth; abc_for applies the axis only
+        // under μP/u-μP, which is exactly the baseline story
+        spec.base_depth = Some(2);
+        let v = rt.manifest().get(variant).unwrap();
+        let data = source_for(v, 5);
+        let r = run(&rt, &spec, data.as_ref()).unwrap();
+        if r.diverged {
+            f64::INFINITY
+        } else {
+            *r.train_losses.last().unwrap()
+        }
+    };
+    let mut regret = BTreeMap::new();
+    for scheme in [Scheme::Sp, Scheme::Mup] {
+        // tune shallow
+        let best_lr = lrs
+            .iter()
+            .copied()
+            .min_by(|&a, &b| {
+                final_loss(scheme, "resmlp_w32_nb2", a)
+                    .total_cmp(&final_loss(scheme, "resmlp_w32_nb2", b))
+            })
+            .unwrap();
+        // transfer deep, against the deep model's own best
+        let transferred = final_loss(scheme, "resmlp_w32_nb8", best_lr);
+        let deep_best = lrs
+            .iter()
+            .map(|&lr| final_loss(scheme, "resmlp_w32_nb8", lr))
+            .fold(f64::INFINITY, f64::min);
+        regret.insert(scheme.name(), transferred - deep_best);
+    }
+    assert!(
+        regret["mup"].is_finite(),
+        "μP depth transfer must not diverge: {regret:?}"
+    );
+    assert!(
+        regret["mup"] <= regret["sp"] + 0.02,
+        "μP depth-transfer regret must not lose to SP: {regret:?}"
+    );
 }

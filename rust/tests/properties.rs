@@ -127,10 +127,10 @@ fn prop_attention_scaling_law() {
             let dims = TensorDims::square(128, 128);
             let mup = Parametrization::mup(Optimizer::Adam);
             let sp = Parametrization::standard(Optimizer::Adam);
-            let m0 = mup.multipliers(&hp, dims, d0, d0).attn_scale;
-            let m1 = mup.multipliers(&hp, dims, d0 * r, d0).attn_scale;
-            let s0 = sp.multipliers(&hp, dims, d0, d0).attn_scale;
-            let s1 = sp.multipliers(&hp, dims, d0 * r, d0).attn_scale;
+            let m0 = mup.multipliers(&hp, dims, dims, d0, d0).attn_scale;
+            let m1 = mup.multipliers(&hp, dims, dims, d0 * r, d0).attn_scale;
+            let s0 = sp.multipliers(&hp, dims, dims, d0, d0).attn_scale;
+            let s1 = sp.multipliers(&hp, dims, dims, d0 * r, d0).attn_scale;
             let rr = r as f64;
             if (m0 / m1 - rr).abs() > 1e-9 * rr {
                 return Err(format!("μP attn ratio {} != {rr}", m0 / m1));

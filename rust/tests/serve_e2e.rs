@@ -14,6 +14,7 @@
 use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use mutransfer::mup::Scheme;
 use mutransfer::runtime::Runtime;
 use mutransfer::serve::daemon::JOB_LABEL;
 use mutransfer::serve::http;
@@ -44,6 +45,7 @@ fn small_spec(name: &str) -> JobSpec {
         workers: 0,
         tuner: TunerKind::Random,
         ckpt_every: 0,
+        ..JobSpec::default()
     }
 }
 
@@ -151,6 +153,55 @@ fn submitted_job_matches_offline_run_bit_for_bit() {
     assert_eq!(hp.req("width").as_usize().unwrap(), 512);
     assert_eq!(hp.req("job").as_str().unwrap(), id);
     assert!(hp.req("assignment").get("lr").is_some());
+
+    daemon.shutdown();
+}
+
+/// A u-μP job through the daemon is byte-identical to its offline run
+/// (the `param`/`base_depth`/`base_batch` fields survive the wire and the
+/// disk), and `/hp` rejects malformed dimension queries with a 400
+/// instead of silently answering the global best.
+#[test]
+fn umup_job_matches_offline_and_hp_validates_queries() {
+    let mut spec = small_spec("umup");
+    spec.param = Scheme::Umup;
+    spec.base_depth = 2;
+    spec.base_batch = 16;
+    let (reference, _) = offline_reference(&spec, &tmpdir("ref_umup"));
+
+    let state = tmpdir("daemon_umup");
+    let daemon = Daemon::start("127.0.0.1:0", &state, None).unwrap();
+    let addr = daemon.addr.to_string();
+
+    let (st, body) =
+        http::rpc(&addr, "POST", "/jobs", Some(&spec.to_json().to_string())).unwrap();
+    assert_eq!(st, 201, "{body}");
+    let id = json::parse(&body)
+        .unwrap()
+        .req("id")
+        .as_str()
+        .unwrap()
+        .to_string();
+    assert_eq!(wait_done(&addr, &id, Duration::from_secs(120)), "done");
+
+    let (st, got) = http::rpc(&addr, "GET", &format!("/jobs/{id}/results"), None).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(got, reference, "u-μP daemon run must be bit-identical to offline");
+
+    // the answer names the parametrization and echoes all three dims
+    let (st, body) = http::rpc(&addr, "GET", "/hp?width=128&depth=4&batch=32", None).unwrap();
+    assert_eq!(st, 200, "{body}");
+    let hp = json::parse(&body).unwrap();
+    assert_eq!(hp.req("param").as_str().unwrap(), "umup");
+    assert_eq!(hp.req("width").as_usize().unwrap(), 128);
+    assert_eq!(hp.req("depth").as_usize().unwrap(), 4);
+    assert_eq!(hp.req("batch").as_usize().unwrap(), 32);
+
+    // malformed dimensions are a 400, not a silent global-best answer
+    for q in ["/hp?width=abc", "/hp?depth=-3", "/hp?batch=1e4"] {
+        let (st, body) = http::rpc(&addr, "GET", q, None).unwrap();
+        assert_eq!(st, 400, "{q} must be rejected: {body}");
+    }
 
     daemon.shutdown();
 }

@@ -56,6 +56,7 @@ fn spec(name: &str, kind: JobKind, samples: usize, steps: usize) -> JobSpec {
         workers: 2,
         tuner: TunerKind::Random,
         ckpt_every: 0,
+        ..JobSpec::default()
     }
 }
 
