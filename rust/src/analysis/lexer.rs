@@ -1,0 +1,470 @@
+//! A small hand-rolled Rust lexer — just enough syntax awareness for
+//! `mutlint`'s token-pattern passes (DESIGN.md §11).
+//!
+//! The lints match identifier/punct *token* sequences, so the lexer's one
+//! job is to never misclassify text: a `partial_cmp` inside a string
+//! literal, a `File::create` inside a doc comment, or a lint name inside
+//! this very module must not trip a pass.  That requires getting the
+//! genuinely tricky corners of Rust's lexical grammar right:
+//!
+//! * raw strings `r"…"` / `r#"…"#` / `r##"…"##` (terminator = quote plus
+//!   the opening hash count, quotes inside are data);
+//! * byte and raw-byte strings `b"…"`, `br#"…"#`, byte chars `b'x'`;
+//! * **nested** block comments `/* /* */ */` (Rust block comments nest,
+//!   unlike C);
+//! * char literal vs lifetime disambiguation: `'a'` is a char, `'a` is a
+//!   lifetime, `'\n'` escapes, `b'\''` is a byte char;
+//! * raw identifiers `r#type`.
+//!
+//! Everything else (numbers, multi-char operators) is lexed loosely: the
+//! passes never interpret numeric values, and the only compound operator
+//! they match is `::`, which is fused into one token.
+
+/// Token classification.  String-like kinds are kept distinct so the
+/// golden tests can pin the tricky-corpus behavior precisely; the passes
+/// themselves mostly care about `Ident` vs everything-else.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokKind {
+    Ident,
+    Lifetime,
+    Char,
+    ByteChar,
+    Str,
+    ByteStr,
+    RawStr,
+    RawByteStr,
+    Num,
+    Punct,
+    LineComment,
+    BlockComment,
+}
+
+impl TokKind {
+    pub fn is_comment(self) -> bool {
+        matches!(self, TokKind::LineComment | TokKind::BlockComment)
+    }
+}
+
+/// One lexed token: kind, the exact source slice, and the 1-based line of
+/// its first character (findings are reported as `file:line`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Tok {
+    pub kind: TokKind,
+    pub text: String,
+    pub line: u32,
+}
+
+fn is_ident_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_ident_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+struct Lexer<'a> {
+    src: &'a str,
+    /// (byte offset, char) pairs — indexed by char position
+    cs: Vec<(usize, char)>,
+    i: usize,
+    line: u32,
+    toks: Vec<Tok>,
+}
+
+impl<'a> Lexer<'a> {
+    fn new(src: &'a str) -> Lexer<'a> {
+        Lexer { src, cs: src.char_indices().collect(), i: 0, line: 1, toks: Vec::new() }
+    }
+
+    /// Char at position `i` (`'\0'` past the end — NUL never appears in
+    /// source we lint, so it doubles as an EOF sentinel).
+    fn at(&self, i: usize) -> char {
+        self.cs.get(i).map(|&(_, c)| c).unwrap_or('\0')
+    }
+
+    /// Byte offset of char position `i`.
+    fn off(&self, i: usize) -> usize {
+        self.cs.get(i).map(|&(o, _)| o).unwrap_or(self.src.len())
+    }
+
+    /// Advance one char, counting newlines.
+    fn bump(&mut self) {
+        if self.at(self.i) == '\n' {
+            self.line += 1;
+        }
+        self.i += 1;
+    }
+
+    fn push(&mut self, kind: TokKind, start: usize, line: u32) {
+        let text = self.src[self.off(start)..self.off(self.i)].to_string();
+        self.toks.push(Tok { kind, text, line });
+    }
+
+    fn run(mut self) -> Vec<Tok> {
+        while self.i < self.cs.len() {
+            let start = self.i;
+            let line = self.line;
+            let c = self.at(self.i);
+            match c {
+                _ if c.is_whitespace() => self.bump(),
+                '/' if self.at(self.i + 1) == '/' => {
+                    while self.i < self.cs.len() && self.at(self.i) != '\n' {
+                        self.i += 1;
+                    }
+                    self.push(TokKind::LineComment, start, line);
+                }
+                '/' if self.at(self.i + 1) == '*' => {
+                    self.block_comment();
+                    self.push(TokKind::BlockComment, start, line);
+                }
+                '\'' => self.char_or_lifetime(),
+                '"' => {
+                    self.string_body();
+                    self.push(TokKind::Str, start, line);
+                }
+                'r' | 'b' => self.r_or_b(),
+                _ if is_ident_start(c) => {
+                    self.ident_body();
+                    self.push(TokKind::Ident, start, line);
+                }
+                _ if c.is_ascii_digit() => {
+                    self.num_body();
+                    self.push(TokKind::Num, start, line);
+                }
+                ':' if self.at(self.i + 1) == ':' => {
+                    self.i += 2;
+                    self.push(TokKind::Punct, start, line);
+                }
+                _ => {
+                    self.bump();
+                    self.push(TokKind::Punct, start, line);
+                }
+            }
+        }
+        self.toks
+    }
+
+    /// Nested block comment; `self.i` is on the opening `/`.
+    fn block_comment(&mut self) {
+        let mut depth = 0usize;
+        while self.i < self.cs.len() {
+            if self.at(self.i) == '/' && self.at(self.i + 1) == '*' {
+                depth += 1;
+                self.i += 2;
+            } else if self.at(self.i) == '*' && self.at(self.i + 1) == '/' {
+                depth -= 1;
+                self.i += 2;
+                if depth == 0 {
+                    return;
+                }
+            } else {
+                self.bump();
+            }
+        }
+    }
+
+    /// `self.i` is on a `'`: char literal, lifetime, or (degenerate) a
+    /// lone-quote punct.
+    fn char_or_lifetime(&mut self) {
+        let start = self.i;
+        let line = self.line;
+        if self.at(self.i + 1) == '\\' {
+            // escaped char literal: ' \ … '
+            self.i += 2; // past quote and backslash
+            self.i += 1; // the escaped char itself (n, ', \, u, …)
+            // \u{…} payload, then scan to the closing quote
+            while self.i < self.cs.len() && self.at(self.i) != '\'' {
+                self.bump();
+            }
+            self.i += 1; // closing quote
+            self.push(TokKind::Char, start, line);
+        } else if self.at(self.i + 2) == '\'' && self.at(self.i + 1) != '\'' {
+            // exactly one char between quotes: 'a', '1', 'λ'
+            self.i += 3;
+            self.push(TokKind::Char, start, line);
+        } else if is_ident_start(self.at(self.i + 1)) {
+            // 'a, 'static, 'label — a lifetime (or loop label)
+            self.i += 2;
+            while is_ident_cont(self.at(self.i)) {
+                self.i += 1;
+            }
+            self.push(TokKind::Lifetime, start, line);
+        } else {
+            self.i += 1;
+            self.push(TokKind::Punct, start, line);
+        }
+    }
+
+    /// Body of a non-raw string; `self.i` on the opening quote.
+    fn string_body(&mut self) {
+        self.i += 1;
+        while self.i < self.cs.len() {
+            match self.at(self.i) {
+                '\\' => self.i += 2,
+                '"' => {
+                    self.i += 1;
+                    return;
+                }
+                _ => self.bump(),
+            }
+        }
+    }
+
+    /// Raw-string body starting at the first `#`-or-quote after the
+    /// `r`/`br` introducer; returns false if this is not a raw string
+    /// (caller falls back to ident lexing).
+    fn raw_string_body(&mut self, intro: usize) -> bool {
+        let mut hashes = 0usize;
+        while self.at(intro + hashes) == '#' {
+            hashes += 1;
+        }
+        if self.at(intro + hashes) != '"' {
+            return false;
+        }
+        self.i = intro + hashes + 1;
+        while self.i < self.cs.len() {
+            if self.at(self.i) == '"' {
+                let mut k = 0usize;
+                while k < hashes && self.at(self.i + 1 + k) == '#' {
+                    k += 1;
+                }
+                if k == hashes {
+                    self.i += 1 + hashes;
+                    return true;
+                }
+            }
+            self.bump();
+        }
+        true
+    }
+
+    /// Disambiguate tokens starting with `r` or `b`: raw strings, byte
+    /// strings, byte chars, raw identifiers, or plain identifiers.
+    fn r_or_b(&mut self) {
+        let start = self.i;
+        let line = self.line;
+        let c = self.at(self.i);
+        if c == 'b' {
+            if self.at(self.i + 1) == '\'' {
+                // byte char b'x' / b'\n'
+                self.i += 1;
+                self.char_or_lifetime();
+                // re-tag what char_or_lifetime pushed
+                let text = self.src[self.off(start)..self.off(self.i)].to_string();
+                if let Some(t) = self.toks.last_mut() {
+                    t.kind = TokKind::ByteChar;
+                    t.text = text;
+                    t.line = line;
+                }
+                return;
+            }
+            if self.at(self.i + 1) == '"' {
+                self.i += 1;
+                self.string_body();
+                self.push(TokKind::ByteStr, start, line);
+                return;
+            }
+            if self.at(self.i + 1) == 'r' && self.raw_string_body(start + 2) {
+                self.push(TokKind::RawByteStr, start, line);
+                return;
+            }
+        } else {
+            // c == 'r'
+            if self.at(self.i + 1) == '#' && is_ident_start(self.at(self.i + 2)) {
+                // raw identifier r#type
+                self.i += 2;
+                self.ident_body();
+                self.push(TokKind::Ident, start, line);
+                return;
+            }
+            if self.raw_string_body(start + 1) {
+                self.push(TokKind::RawStr, start, line);
+                return;
+            }
+        }
+        self.ident_body();
+        self.push(TokKind::Ident, start, line);
+    }
+
+    fn ident_body(&mut self) {
+        while is_ident_cont(self.at(self.i)) {
+            self.i += 1;
+        }
+    }
+
+    /// Loose number: digits/letters/underscores, plus `.` only when a
+    /// digit follows (so `0..n` and `1.max(2)` terminate correctly).
+    fn num_body(&mut self) {
+        while self.i < self.cs.len() {
+            let c = self.at(self.i);
+            if is_ident_cont(c) {
+                self.i += 1;
+            } else if c == '.' && self.at(self.i + 1).is_ascii_digit() {
+                self.i += 1;
+            } else {
+                return;
+            }
+        }
+    }
+}
+
+/// Lex a whole source file.  Comments are kept as tokens (suppressions
+/// live in them); passes that only want code filter them out.
+pub fn lex(src: &str) -> Vec<Tok> {
+    Lexer::new(src).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds_texts(src: &str) -> Vec<(TokKind, String)> {
+        lex(src).into_iter().map(|t| (t.kind, t.text)).collect()
+    }
+
+    #[test]
+    fn golden_raw_strings() {
+        use TokKind::*;
+        // quotes and hash-short terminators inside raw strings are data
+        let got = kinds_texts(r###"let s = r#"quote " and "# done; x"###);
+        assert_eq!(
+            got,
+            vec![
+                (Ident, "let".into()),
+                (Ident, "s".into()),
+                (Punct, "=".into()),
+                (RawStr, r##"r#"quote " and "#"##.into()),
+                (Ident, "done".into()),
+                (Punct, ";".into()),
+                (Ident, "x".into()),
+            ]
+        );
+        // r"" with no hashes, and a ## terminator ignoring a lone "#
+        let got = kinds_texts("r\"a\\\" + r##\"b\"# c\"##");
+        assert_eq!(got[0], (RawStr, "r\"a\\\"".into())); // backslash is data in raw strings
+        assert_eq!(got[1], (Punct, "+".into()));
+        assert_eq!(got[2], (RawStr, "r##\"b\"# c\"##".into()));
+    }
+
+    #[test]
+    fn golden_nested_block_comments() {
+        use TokKind::*;
+        let got = kinds_texts("a /* outer /* inner */ still comment */ b");
+        assert_eq!(
+            got,
+            vec![
+                (Ident, "a".into()),
+                (BlockComment, "/* outer /* inner */ still comment */".into()),
+                (Ident, "b".into()),
+            ]
+        );
+        // the classic trap: an unwrap() inside a comment must not be code
+        let got = lex("/* .unwrap() */ safe");
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[1].text, "safe");
+    }
+
+    #[test]
+    fn golden_char_vs_lifetime() {
+        use TokKind::*;
+        let got = kinds_texts("fn f<'a>(x: &'a str) -> char { 'a' }");
+        let lifetimes: Vec<_> = got.iter().filter(|(k, _)| *k == Lifetime).collect();
+        assert_eq!(lifetimes.len(), 2);
+        assert!(lifetimes.iter().all(|(_, t)| t == "'a"));
+        let chars: Vec<_> = got.iter().filter(|(k, _)| *k == Char).collect();
+        assert_eq!(chars, vec![&(Char, "'a'".to_string())]);
+        // escapes, unicode payloads, quote-escape, static lifetime
+        let got = kinds_texts(r"'\n' '\u{1F600}' '\'' 'static 'λ'");
+        assert_eq!(
+            got,
+            vec![
+                (Char, r"'\n'".into()),
+                (Char, r"'\u{1F600}'".into()),
+                (Char, r"'\''".into()),
+                (Lifetime, "'static".into()),
+                (Char, "'λ'".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn golden_byte_strings_and_chars() {
+        use TokKind::*;
+        let got = kinds_texts(r##"b"bytes" br#"raw bytes "q" "# b'x' b'\'' plain"##);
+        assert_eq!(
+            got,
+            vec![
+                (ByteStr, r#"b"bytes""#.into()),
+                (RawByteStr, r##"br#"raw bytes "q" "#"##.into()),
+                (ByteChar, "b'x'".into()),
+                (ByteChar, r"b'\''".into()),
+                (Ident, "plain".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn golden_raw_idents_and_lookalikes() {
+        use TokKind::*;
+        // r#type is an ident; rate/break_even start with r/b but are plain
+        let got = kinds_texts("r#type rate break_even b r");
+        assert_eq!(
+            got,
+            vec![
+                (Ident, "r#type".into()),
+                (Ident, "rate".into()),
+                (Ident, "break_even".into()),
+                (Ident, "b".into()),
+                (Ident, "r".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn golden_numbers_and_ranges() {
+        use TokKind::*;
+        let got = kinds_texts("0..n 1.0f64.max(x) 0x1F 1e-5 1_000");
+        assert_eq!(got[0], (Num, "0".into()));
+        assert_eq!(got[1], (Punct, ".".into()));
+        assert_eq!(got[2], (Punct, ".".into()));
+        assert_eq!(got[3], (Ident, "n".into()));
+        assert_eq!(got[4], (Num, "1.0f64".into()));
+        assert_eq!(got[5], (Punct, ".".into()));
+        assert_eq!(got[6], (Ident, "max".into()));
+        assert!(got.contains(&(Num, "0x1F".into())));
+        assert!(got.contains(&(Num, "1e".into()))); // loose: exponent sign splits
+        assert!(got.contains(&(Num, "1_000".into())));
+    }
+
+    #[test]
+    fn golden_paths_and_strings_hide_idents() {
+        use TokKind::*;
+        let got = kinds_texts(r#"File::create "File::create" // File::create"#);
+        assert_eq!(got[0], (Ident, "File".into()));
+        assert_eq!(got[1], (Punct, "::".into()));
+        assert_eq!(got[2], (Ident, "create".into()));
+        assert_eq!(got[3].0, Str);
+        assert_eq!(got[4].0, LineComment);
+        assert_eq!(got.len(), 5);
+    }
+
+    #[test]
+    fn line_numbers_across_multiline_tokens() {
+        let src = "a\n\"two\nline\"\n/* c\nc */\nr#\"raw\nraw\"#\nz";
+        let toks = lex(src);
+        let find = |text: &str| toks.iter().find(|t| t.text.contains(text)).unwrap().line;
+        assert_eq!(find("a"), 1);
+        assert_eq!(find("two"), 2); // string starts on line 2
+        assert_eq!(find("/* c"), 4);
+        assert_eq!(find("raw"), 6);
+        assert_eq!(toks.last().unwrap().line, 8);
+    }
+
+    #[test]
+    fn unterminated_inputs_do_not_hang_or_panic() {
+        // torn files must lex to *something*; mutlint runs pre-compile
+        for src in ["\"open", "/* open", "r#\"open", "'", "b'", "r#"] {
+            let _ = lex(src);
+        }
+    }
+}

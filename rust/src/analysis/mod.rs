@@ -1,0 +1,306 @@
+//! `mutlint` — project-invariant static analysis (DESIGN.md §11).
+//!
+//! PRs 3–7 accumulated correctness contracts that lived only in prose:
+//! NaN-worst ordering via `total_cmp`, tmp-then-rename crash consistency,
+//! event-bus-only output from the daemon, no-panic serve paths, and the
+//! μP guarantee that every registered tensor maps to an abc-triple.  This
+//! module machine-checks them on every push: a hand-rolled lexer
+//! ([`lexer`]) feeds token-pattern passes ([`passes`]) that are
+//! deny-by-default and suppressable only with an in-source reason:
+//!
+//! ```text
+//! // mutlint: allow(<lint>, "<why this site is exempt>")
+//! ```
+//!
+//! A suppression covers findings on its own line or the line directly
+//! below.  A suppression *without* a reason string does not suppress
+//! anything and is itself reported (lint `suppression`, which cannot be
+//! suppressed) — the reason is the contract.
+//!
+//! Run it as `cargo run --release --bin mutlint` (CI does, exit 1 on any
+//! unsuppressed finding; `MUTLINT_NO_ASSERT=1` downgrades to report-only,
+//! matching the bench-gate convention).
+
+pub mod lexer;
+pub mod passes;
+
+use lexer::{lex, Tok, TokKind};
+use std::collections::BTreeMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// One lint hit.  `suppressed` is true when an adjacent reasoned
+/// `mutlint: allow` covers it — such findings are counted but do not fail
+/// the build.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    /// Root-relative path with `/` separators (stable across platforms).
+    pub file: String,
+    pub line: u32,
+    pub lint: &'static str,
+    pub msg: String,
+    pub suppressed: bool,
+}
+
+impl Finding {
+    pub fn render(&self) -> String {
+        let tag = if self.suppressed { " (suppressed)" } else { "" };
+        format!("{}:{}: {}: {}{}", self.file, self.line, self.lint, self.msg, tag)
+    }
+}
+
+/// A lexed source file plus the line-level metadata passes need:
+/// suppression comments and `#[cfg(test)]` regions.
+pub struct SourceFile {
+    /// Root-relative path with `/` separators — all pass scoping matches
+    /// against this.
+    pub rel: String,
+    /// All tokens, comments included (suppressions live in comments).
+    pub toks: Vec<Tok>,
+    /// Code tokens only (comments stripped) — what the passes scan.
+    pub code: Vec<Tok>,
+    /// True for files that are test/bench/example code in their entirety
+    /// (`rust/tests/`, `benches/`, `examples/`): lints with a
+    /// production-code scope skip them wholesale.
+    pub whole_exempt: bool,
+    /// `(lint name, line of the allow comment)` for reasoned suppressions.
+    suppressions: Vec<(String, u32)>,
+    /// Lines of `mutlint: allow` comments missing a reason string.
+    bad_suppressions: Vec<u32>,
+    /// Inclusive line ranges of `#[cfg(test)]` / `#[test]` items.
+    test_regions: Vec<(u32, u32)>,
+}
+
+impl SourceFile {
+    pub fn parse(rel: String, src: &str) -> SourceFile {
+        let toks = lex(src);
+        let code: Vec<Tok> = toks.iter().filter(|t| !t.kind.is_comment()).cloned().collect();
+        let mut suppressions = Vec::new();
+        let mut bad_suppressions = Vec::new();
+        for t in toks.iter().filter(|t| t.kind.is_comment()) {
+            match parse_allow(&t.text) {
+                Some((lint, true)) => suppressions.push((lint, t.line)),
+                Some((_, false)) => bad_suppressions.push(t.line),
+                None => {}
+            }
+        }
+        let test_regions = find_test_regions(&code);
+        let whole_exempt = rel.starts_with("rust/tests/")
+            || rel.starts_with("benches/")
+            || rel.starts_with("examples/");
+        SourceFile { rel, toks, code, whole_exempt, suppressions, bad_suppressions, test_regions }
+    }
+
+    /// Is a finding of `lint` at `line` covered by a reasoned allow on the
+    /// same line or the line above?
+    pub fn is_suppressed(&self, lint: &str, line: u32) -> bool {
+        self.suppressions
+            .iter()
+            .any(|(l, sl)| l == lint && (*sl == line || *sl + 1 == line))
+    }
+
+    /// Is `line` inside a `#[cfg(test)]` module or `#[test]` item?
+    pub fn in_test(&self, line: u32) -> bool {
+        self.test_regions.iter().any(|&(a, b)| line >= a && line <= b)
+    }
+
+    /// Lines carrying a reason-less `mutlint: allow` comment.
+    pub fn bad_suppression_lines(&self) -> &[u32] {
+        &self.bad_suppressions
+    }
+}
+
+/// Parse a `mutlint: allow(<lint>, "<reason>")` marker out of a comment.
+/// Returns `(lint, has_nonempty_reason)`, or `None` when the comment
+/// carries no marker at all.
+fn parse_allow(comment: &str) -> Option<(String, bool)> {
+    let marker = comment.find("mutlint:")?;
+    let rest = comment[marker + "mutlint:".len()..].trim_start();
+    let rest = rest.strip_prefix("allow")?.trim_start();
+    let rest = rest.strip_prefix('(')?;
+    let name_end = rest.find([',', ')'])?;
+    let lint = rest[..name_end].trim().to_string();
+    if lint.is_empty() {
+        return None;
+    }
+    // A valid reason is a non-empty double-quoted string after the comma.
+    let tail = &rest[name_end..];
+    let has_reason = tail.strip_prefix(',').is_some_and(|after| {
+        let after = after.trim_start();
+        match after.strip_prefix('"') {
+            Some(inner) => inner.find('"').is_some_and(|close| close > 0),
+            None => false,
+        }
+    });
+    Some((lint, has_reason))
+}
+
+/// Locate `#[cfg(test)]` (and bare `#[test]`) attributed items and return
+/// the inclusive line span from the attribute to the item's closing brace.
+/// Brace matching runs over code tokens, so braces inside strings and
+/// comments can't desynchronize it.
+fn find_test_regions(code: &[Tok]) -> Vec<(u32, u32)> {
+    let mut out = Vec::new();
+    let is = |t: Option<&Tok>, k: TokKind, s: &str| t.is_some_and(|t| t.kind == k && t.text == s);
+    let mut i = 0usize;
+    while i < code.len() {
+        let attr_test = is(code.get(i), TokKind::Punct, "#")
+            && is(code.get(i + 1), TokKind::Punct, "[")
+            && ((is(code.get(i + 2), TokKind::Ident, "cfg")
+                && is(code.get(i + 3), TokKind::Punct, "(")
+                && is(code.get(i + 4), TokKind::Ident, "test")
+                && is(code.get(i + 5), TokKind::Punct, ")")
+                && is(code.get(i + 6), TokKind::Punct, "]"))
+                || (is(code.get(i + 2), TokKind::Ident, "test")
+                    && is(code.get(i + 3), TokKind::Punct, "]")));
+        if !attr_test {
+            i += 1;
+            continue;
+        }
+        let start_line = code[i].line;
+        // Scan to the item's opening brace, then match it.  A semicolon
+        // first means a brace-less item (e.g. `#[cfg(test)] use …;`).
+        let mut j = i + 1;
+        while j < code.len() && code[j].text != "{" && code[j].text != ";" {
+            j += 1;
+        }
+        if j >= code.len() || code[j].text == ";" {
+            out.push((start_line, code.get(j).map_or(start_line, |t| t.line)));
+            i = j + 1;
+            continue;
+        }
+        let mut depth = 0usize;
+        while j < code.len() {
+            match code[j].text.as_str() {
+                "{" => depth += 1,
+                "}" => {
+                    depth -= 1;
+                    if depth == 0 {
+                        break;
+                    }
+                }
+                _ => {}
+            }
+            j += 1;
+        }
+        let end_line = code.get(j).map_or(u32::MAX, |t| t.line);
+        out.push((start_line, end_line));
+        i = j + 1;
+    }
+    out
+}
+
+/// Walk the lintable tree under `root`: `rust/src`, `rust/tests`,
+/// `benches`, `examples`.  Lint *fixtures* (seeded-violation corpora under
+/// `rust/tests/fixtures/`) are skipped — they are linted explicitly by the
+/// negative tests, never as part of the real tree.
+pub fn load_tree(root: &Path) -> io::Result<Vec<SourceFile>> {
+    let mut files: BTreeMap<String, PathBuf> = BTreeMap::new();
+    for sub in ["rust/src", "rust/tests", "benches", "examples"] {
+        let dir = root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &mut files, root)?;
+        }
+    }
+    let mut out = Vec::with_capacity(files.len());
+    for (rel, path) in files {
+        if rel.starts_with("rust/tests/fixtures/") {
+            continue;
+        }
+        let src = fs::read_to_string(&path)?;
+        out.push(SourceFile::parse(rel, &src));
+    }
+    Ok(out)
+}
+
+fn collect_rs(dir: &Path, files: &mut BTreeMap<String, PathBuf>, root: &Path) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        if path.is_dir() {
+            collect_rs(&path, files, root)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            files.insert(rel, path);
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allow_parsing() {
+        assert_eq!(
+            parse_allow(r#"// mutlint: allow(nan-cmp, "ranks, not losses")"#),
+            Some(("nan-cmp".to_string(), true))
+        );
+        // no reason → recognized but invalid
+        assert_eq!(parse_allow("// mutlint: allow(nan-cmp)"), Some(("nan-cmp".into(), false)));
+        // empty reason string is not a reason
+        assert_eq!(parse_allow(r#"// mutlint: allow(x, "")"#), Some(("x".into(), false)));
+        // unrelated comments carry no marker
+        assert_eq!(parse_allow("// plain comment about mutlint"), None);
+        assert_eq!(parse_allow("/* mutlint: allow(atomic-write, \"block form\") */"),
+            Some(("atomic-write".into(), true)));
+    }
+
+    #[test]
+    fn suppression_covers_same_and_next_line() {
+        let src = "// mutlint: allow(demo, \"r\")\nfn f() {}\nfn g() {}\n";
+        let sf = SourceFile::parse("rust/src/x.rs".into(), src);
+        assert!(sf.is_suppressed("demo", 1));
+        assert!(sf.is_suppressed("demo", 2));
+        assert!(!sf.is_suppressed("demo", 3));
+        assert!(!sf.is_suppressed("other", 2));
+    }
+
+    #[test]
+    fn reasonless_suppression_is_recorded_not_honored() {
+        let src = "// mutlint: allow(demo)\nfn f() {}\n";
+        let sf = SourceFile::parse("rust/src/x.rs".into(), src);
+        assert!(!sf.is_suppressed("demo", 2));
+        assert_eq!(sf.bad_suppression_lines(), &[1]);
+    }
+
+    #[test]
+    fn test_region_detection() {
+        let src = "fn prod() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn helper() { let s = \"}\"; }\n\
+                       #[test]\n\
+                       fn t() {}\n\
+                   }\n\
+                   fn prod2() {}\n";
+        let sf = SourceFile::parse("rust/src/x.rs".into(), src);
+        assert!(!sf.in_test(1));
+        assert!(sf.in_test(2));
+        assert!(sf.in_test(4)); // brace inside string must not end the region
+        assert!(sf.in_test(6));
+        assert!(sf.in_test(7));
+        assert!(!sf.in_test(8));
+    }
+
+    #[test]
+    fn whole_exemption_by_path() {
+        for (rel, exempt) in [
+            ("rust/tests/golden.rs", true),
+            ("benches/step_latency.rs", true),
+            ("examples/quickstart.rs", true),
+            ("rust/src/serve/daemon.rs", false),
+        ] {
+            let sf = SourceFile::parse(rel.into(), "fn f() {}");
+            assert_eq!(sf.whole_exempt, exempt, "{rel}");
+        }
+    }
+}

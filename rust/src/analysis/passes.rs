@@ -1,0 +1,495 @@
+//! The lint passes.  Each pass is a token-pattern scan over
+//! [`SourceFile::code`] with path-based scoping; `run_all` applies
+//! suppressions and returns the merged, sorted finding list.
+//!
+//! The five lints (contracts documented in DESIGN.md §11):
+//!
+//! | lint              | contract                                              |
+//! |-------------------|-------------------------------------------------------|
+//! | `nan-cmp`         | no `partial_cmp` / `f32::max`-style float compares on |
+//! |                   | loss-like paths — `total_cmp`/`nan_last` only (PR-3)  |
+//! | `atomic-write`    | durable state under `serve/`, `report/`, `ckpt/`, the |
+//! |                   | runtime manifest goes through `fsio::write_atomic`    |
+//! | `no-panic-serve`  | no `unwrap`/`expect`/slice-index in serve paths       |
+//! |                   | reachable from untrusted bytes                        |
+//! | `bus-only-output` | daemon output goes through the `EventSink` bus, not   |
+//! |                   | raw `eprintln!`/`println!`                            |
+//! | `mup-coverage`    | every `Role` variant maps through `abc_for`, and      |
+//! |                   | `model/` only uses declared roles                     |
+//!
+//! Plus the meta-lint `suppression` (reason-less `mutlint: allow` —
+//! cannot itself be suppressed).
+
+use super::lexer::{Tok, TokKind};
+use super::{Finding, SourceFile};
+use std::collections::BTreeSet;
+
+/// All lint names, for CLI help and the self-tests.
+pub const LINTS: &[&str] = &[
+    "nan-cmp",
+    "atomic-write",
+    "no-panic-serve",
+    "bus-only-output",
+    "mup-coverage",
+    "suppression",
+];
+
+/// Run every pass over the loaded tree.  Findings come back sorted by
+/// (file, line, lint); adjacent reasoned suppressions mark findings
+/// `suppressed` rather than dropping them, so callers can report both
+/// counts.
+pub fn run_all(files: &[SourceFile]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for sf in files {
+        file_passes(sf, &mut out);
+    }
+    mup_coverage(files, &mut out);
+    out.sort_by(|a, b| (&a.file, a.line, a.lint).cmp(&(&b.file, b.line, b.lint)));
+    out
+}
+
+fn file_passes(sf: &SourceFile, out: &mut Vec<Finding>) {
+    // The suppression meta-lint applies everywhere, test code included: a
+    // reason-less allow is a broken contract no matter where it sits.
+    for &line in sf.bad_suppression_lines() {
+        out.push(Finding {
+            file: sf.rel.clone(),
+            line,
+            lint: "suppression",
+            msg: "mutlint: allow(..) without a reason string suppresses nothing; \
+                  write allow(<lint>, \"<why>\")"
+                .into(),
+            suppressed: false,
+        });
+    }
+    if sf.whole_exempt {
+        return;
+    }
+    nan_cmp(sf, out);
+    atomic_write(sf, out);
+    no_panic_serve(sf, out);
+    bus_only_output(sf, out);
+}
+
+/// Emit one finding, honoring same-line / line-above suppressions.
+fn emit(sf: &SourceFile, out: &mut Vec<Finding>, lint: &'static str, line: u32, msg: String) {
+    out.push(Finding {
+        file: sf.rel.clone(),
+        line,
+        lint,
+        msg,
+        suppressed: sf.is_suppressed(lint, line),
+    });
+}
+
+fn is_ident(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Ident && t.text == s
+}
+
+fn is_punct(t: &Tok, s: &str) -> bool {
+    t.kind == TokKind::Punct && t.text == s
+}
+
+/// `path :: name` — tokens `i`, `i+1`, `i+2`.
+fn is_path(code: &[Tok], i: usize, head: &str, tail: &str) -> bool {
+    is_ident(&code[i], head)
+        && code.get(i + 1).is_some_and(|t| is_punct(t, "::"))
+        && code.get(i + 2).is_some_and(|t| is_ident(t, tail))
+}
+
+// ---------------------------------------------------------------- nan-cmp
+
+/// PR-3 contract: losses can be NaN (divergent trials), and ordering them
+/// with `partial_cmp`/`f32::max` either panics or silently ranks a
+/// diverged run best.  `stats/` and the native tensor kernels are the
+/// whitelist — they operate on finite data by construction and own the
+/// `total_cmp`/`nan_last` helpers everyone else must use.
+fn nan_cmp(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let in_scope = sf.rel.starts_with("rust/src/")
+        && !sf.rel.starts_with("rust/src/stats/")
+        && !sf.rel.starts_with("rust/src/runtime/native/");
+    if !in_scope {
+        return;
+    }
+    let code = &sf.code;
+    for (i, t) in code.iter().enumerate() {
+        if sf.in_test(t.line) {
+            continue;
+        }
+        if is_ident(t, "partial_cmp") {
+            emit(sf, out, "nan-cmp", t.line,
+                "partial_cmp is NaN-unsound on loss-like paths; use total_cmp or stats::nan_last"
+                    .into());
+        } else if is_path(code, i, "f32", "max") || is_path(code, i, "f32", "min")
+            || is_path(code, i, "f64", "max") || is_path(code, i, "f64", "min")
+        {
+            emit(sf, out, "nan-cmp", t.line,
+                format!("{}::{} drops NaN silently; use total_cmp-based ordering",
+                    t.text, code[i + 2].text));
+        }
+    }
+}
+
+// ------------------------------------------------------------ atomic-write
+
+/// PR-5 contract: anything a `kill -9` may interrupt mid-write must go
+/// through `util::fsio::write_atomic` (tmp + rename + fsync).  Direct
+/// `File::create` / `fs::write` / `OpenOptions` in the durable-state
+/// directories can tear `state.json`, reports, checkpoints, or the
+/// runtime manifest.
+fn atomic_write(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let in_scope = sf.rel.starts_with("rust/src/serve/")
+        || sf.rel.starts_with("rust/src/report/")
+        || sf.rel.starts_with("rust/src/ckpt/")
+        || sf.rel == "rust/src/runtime/manifest.rs";
+    if !in_scope {
+        return;
+    }
+    let code = &sf.code;
+    for (i, t) in code.iter().enumerate() {
+        if sf.in_test(t.line) {
+            continue;
+        }
+        let hit = if is_path(code, i, "File", "create") {
+            Some("File::create")
+        } else if is_path(code, i, "fs", "write") {
+            Some("fs::write")
+        } else if is_ident(t, "OpenOptions") {
+            Some("OpenOptions")
+        } else {
+            None
+        };
+        if let Some(api) = hit {
+            emit(sf, out, "atomic-write", t.line,
+                format!("{api} in a durable-state path can tear under kill -9; \
+                         use util::fsio::write_atomic"));
+        }
+    }
+}
+
+// ---------------------------------------------------------- no-panic-serve
+
+/// Keywords that legitimately precede `[` without forming an index
+/// expression (`let [a, b] = …`, `return [x]`, `in [..]`, …).
+const NON_INDEX_KEYWORDS: &[&str] = &[
+    "as", "async", "await", "box", "break", "const", "continue", "crate", "do", "dyn", "else",
+    "enum", "extern", "false", "fn", "for", "if", "impl", "in", "let", "loop", "match", "mod",
+    "move", "mut", "pub", "ref", "return", "static", "struct", "super", "trait", "true", "type",
+    "union", "unsafe", "use", "where", "while", "yield",
+];
+
+/// The serve daemon handles untrusted bytes; a panic in a request path
+/// kills the worker and (pre-PR-6) could poison shared state.  Production
+/// serve code returns typed errors — no `unwrap()`, no `expect()`, no
+/// panicking slice-index.
+fn no_panic_serve(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if !sf.rel.starts_with("rust/src/serve/") {
+        return;
+    }
+    let code = &sf.code;
+    for (i, t) in code.iter().enumerate() {
+        if sf.in_test(t.line) {
+            continue;
+        }
+        // `.unwrap(` / `.expect(` — method calls only, so idents named
+        // unwrap_or_else etc. never match (distinct ident tokens).
+        if (is_ident(t, "unwrap") || is_ident(t, "expect"))
+            && i > 0
+            && is_punct(&code[i - 1], ".")
+            && code.get(i + 1).is_some_and(|n| is_punct(n, "("))
+        {
+            emit(sf, out, "no-panic-serve", t.line,
+                format!(".{}() can panic on untrusted input; return a typed error", t.text));
+        }
+        // Index expression: `expr[` where expr ends in a non-keyword
+        // ident, `)`, or `]`.  Type positions (`buf: [u8; N]`), macros
+        // (`vec![`), attributes (`#[`), and slices (`&[`) all have punct
+        // or keyword predecessors and never match.
+        if is_punct(t, "[") && i > 0 {
+            let p = &code[i - 1];
+            let indexes = match p.kind {
+                TokKind::Ident => !NON_INDEX_KEYWORDS.contains(&p.text.as_str()),
+                TokKind::Punct => p.text == ")" || p.text == "]",
+                _ => false,
+            };
+            if indexes {
+                emit(sf, out, "no-panic-serve", t.line,
+                    "slice indexing can panic on untrusted input; use .get()".into());
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------- bus-only-output
+
+/// PR-5 contract: the daemon's observable output is the typed event bus;
+/// `StderrSink` is the one component that turns events back into stderr
+/// lines.  Raw print macros anywhere else bypass replay, SSE streaming,
+/// and quiet mode.  CLI `main`, `rust/src/bin/`, and the sink itself are
+/// structurally exempt.
+fn bus_only_output(sf: &SourceFile, out: &mut Vec<Finding>) {
+    let in_scope = sf.rel.starts_with("rust/src/")
+        && sf.rel != "rust/src/main.rs"
+        && !sf.rel.starts_with("rust/src/bin/")
+        && sf.rel != "rust/src/serve/events.rs";
+    if !in_scope {
+        return;
+    }
+    let code = &sf.code;
+    for (i, t) in code.iter().enumerate() {
+        if sf.in_test(t.line) {
+            continue;
+        }
+        if t.kind == TokKind::Ident
+            && matches!(t.text.as_str(), "println" | "eprintln" | "print" | "eprint")
+            && code.get(i + 1).is_some_and(|n| is_punct(n, "!"))
+        {
+            emit(sf, out, "bus-only-output", t.line,
+                format!("{}! bypasses the event bus; emit an Event via an EventSink", t.text));
+        }
+    }
+}
+
+// ----------------------------------------------------------- mup-coverage
+
+/// The μTransfer guarantee is only as strong as its weakest tensor: one
+/// role left out of `abc_for` and that layer trains in SP, which is
+/// exactly the silent-transfer-failure mode of Lingle 2024.  Project-wide
+/// pass: every `Role` variant declared in `mup/rules.rs` must be matched
+/// inside `abc_for`, and `model/` may only name declared variants.
+fn mup_coverage(files: &[SourceFile], out: &mut Vec<Finding>) {
+    let Some(rules) = files.iter().find(|f| f.rel == "rust/src/mup/rules.rs") else {
+        // Nothing to check against (e.g. a partial fixture tree with no
+        // model/ either); only complain if model code exists.
+        if let Some(m) = files.iter().find(|f| f.rel.starts_with("rust/src/model/")) {
+            out.push(Finding {
+                file: m.rel.clone(),
+                line: 1,
+                lint: "mup-coverage",
+                msg: "model/ present but rust/src/mup/rules.rs not found; \
+                      cannot verify abc coverage"
+                    .into(),
+                suppressed: false,
+            });
+        }
+        return;
+    };
+    let variants = role_variants(&rules.code);
+    let handled = abc_for_roles(&rules.code);
+    for (name, line) in &variants {
+        if !handled.contains(name) {
+            emit(rules, out, "mup-coverage", *line,
+                format!("Role::{name} is never mapped by abc_for; \
+                         tensors with this role would silently train in SP"));
+        }
+    }
+    let declared: BTreeSet<&str> = variants.iter().map(|(n, _)| n.as_str()).collect();
+    for sf in files.iter().filter(|f| f.rel.starts_with("rust/src/model/")) {
+        let code = &sf.code;
+        for i in 0..code.len() {
+            if is_ident(&code[i], "Role")
+                && code.get(i + 1).is_some_and(|t| is_punct(t, "::"))
+            {
+                if let Some(v) = code.get(i + 2) {
+                    if v.kind == TokKind::Ident && !declared.contains(v.text.as_str()) {
+                        emit(sf, out, "mup-coverage", v.line,
+                            format!("Role::{} is not declared in mup::rules::Role", v.text));
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Unit variants of `pub enum Role { … }`: idents at brace depth 1
+/// immediately followed by `,` or the closing `}`.
+fn role_variants(code: &[Tok]) -> Vec<(String, u32)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < code.len() {
+        if is_ident(&code[i], "enum")
+            && code.get(i + 1).is_some_and(|t| is_ident(t, "Role"))
+            && code.get(i + 2).is_some_and(|t| is_punct(t, "{"))
+        {
+            let mut j = i + 3;
+            let mut depth = 1usize;
+            while j < code.len() && depth > 0 {
+                match code[j].text.as_str() {
+                    "{" | "(" | "[" => depth += 1,
+                    "}" | ")" | "]" => depth -= 1,
+                    _ => {
+                        if depth == 1
+                            && code[j].kind == TokKind::Ident
+                            && code.get(j + 1).is_some_and(|n| {
+                                is_punct(n, ",") || is_punct(n, "}")
+                            })
+                        {
+                            out.push((code[j].text.clone(), code[j].line));
+                        }
+                    }
+                }
+                j += 1;
+            }
+            return out;
+        }
+        i += 1;
+    }
+    out
+}
+
+/// `Role::X` idents inside the body of `fn abc_for`.
+fn abc_for_roles(code: &[Tok]) -> BTreeSet<String> {
+    let mut out = BTreeSet::new();
+    let mut i = 0usize;
+    while i < code.len() {
+        if is_ident(&code[i], "fn") && code.get(i + 1).is_some_and(|t| is_ident(t, "abc_for")) {
+            // scan to the body's opening brace, then brace-match
+            let mut j = i + 2;
+            while j < code.len() && !is_punct(&code[j], "{") {
+                j += 1;
+            }
+            let mut depth = 0usize;
+            while j < code.len() {
+                match code[j].text.as_str() {
+                    "{" => depth += 1,
+                    "}" => {
+                        depth -= 1;
+                        if depth == 0 {
+                            return out;
+                        }
+                    }
+                    _ => {
+                        if is_ident(&code[j], "Role")
+                            && code.get(j + 1).is_some_and(|t| is_punct(t, "::"))
+                        {
+                            if let Some(v) = code.get(j + 2) {
+                                if v.kind == TokKind::Ident {
+                                    out.insert(v.text.clone());
+                                }
+                            }
+                        }
+                    }
+                }
+                j += 1;
+            }
+            return out;
+        }
+        i += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn findings(rel: &str, src: &str) -> Vec<Finding> {
+        let sf = SourceFile::parse(rel.into(), src);
+        let mut out = Vec::new();
+        file_passes(&sf, &mut out);
+        out
+    }
+
+    fn unsuppressed(rel: &str, src: &str) -> Vec<Finding> {
+        findings(rel, src).into_iter().filter(|f| !f.suppressed).collect()
+    }
+
+    #[test]
+    fn nan_cmp_flags_and_whitelists() {
+        let bad = "fn f(a: f64, b: f64) { a.partial_cmp(&b); }";
+        assert_eq!(unsuppressed("rust/src/train/mod.rs", bad).len(), 1);
+        assert_eq!(unsuppressed("rust/src/stats/mod.rs", bad).len(), 0);
+        assert_eq!(unsuppressed("rust/src/runtime/native/tensor.rs", bad).len(), 0);
+        let path_form = "fn f(a: f32, b: f32) -> f32 { f32::max(a, b) }";
+        assert_eq!(unsuppressed("rust/src/train/mod.rs", path_form).len(), 1);
+        // method .max is integer-safe and never flagged; strings/comments invisible
+        let ok = "fn f(a: usize) { a.max(3); } // partial_cmp\nconst S: &str = \"partial_cmp\";";
+        assert_eq!(unsuppressed("rust/src/train/mod.rs", ok).len(), 0);
+        // test regions are exempt
+        let in_test = "#[cfg(test)]\nmod tests { fn f(a: f64, b: f64) { a.partial_cmp(&b); } }";
+        assert_eq!(unsuppressed("rust/src/train/mod.rs", in_test).len(), 0);
+    }
+
+    #[test]
+    fn atomic_write_scoped_to_durable_dirs() {
+        let bad = "fn f() { std::fs::write(\"x\", b\"y\").ok(); File::create(\"x\").ok(); }";
+        assert_eq!(unsuppressed("rust/src/serve/daemon.rs", bad).len(), 2);
+        assert_eq!(unsuppressed("rust/src/runtime/manifest.rs", bad).len(), 2);
+        // out of scope: util owns write_atomic itself
+        assert_eq!(unsuppressed("rust/src/util/fsio.rs", bad).len(), 0);
+        let oo = "fn f() { let o = OpenOptions::new(); }";
+        assert_eq!(unsuppressed("rust/src/ckpt/format.rs", oo).len(), 1);
+    }
+
+    #[test]
+    fn no_panic_serve_unwrap_and_index() {
+        let bad = "fn f(v: &[u8]) { v.first().unwrap(); let x = v[0]; }";
+        assert_eq!(unsuppressed("rust/src/serve/http.rs", bad).len(), 2);
+        // other modules may unwrap
+        assert_eq!(unsuppressed("rust/src/train/mod.rs", bad).len(), 0);
+        // non-index brackets: patterns, types, macros, attributes, slices
+        let ok = "fn f(v: Vec<u8>) -> [u8; 2] { let [a, b] = [v.len() as u8, 0]; \
+                  let _s: &[u8] = &v; let _m = vec![1]; [a, b] }";
+        assert_eq!(unsuppressed("rust/src/serve/http.rs", ok).len(), 0);
+        // unwrap_or_else is a distinct ident and never matches
+        let ok2 = "fn f(r: Result<u8, u8>) -> u8 { r.unwrap_or_else(|e| e) }";
+        assert_eq!(unsuppressed("rust/src/serve/http.rs", ok2).len(), 0);
+    }
+
+    #[test]
+    fn bus_only_output_whitelists() {
+        let bad = "fn f() { eprintln!(\"x\"); }";
+        assert_eq!(unsuppressed("rust/src/serve/daemon.rs", bad).len(), 1);
+        assert_eq!(unsuppressed("rust/src/main.rs", bad).len(), 0);
+        assert_eq!(unsuppressed("rust/src/bin/mutlint.rs", bad).len(), 0);
+        assert_eq!(unsuppressed("rust/src/serve/events.rs", bad).len(), 0);
+        assert_eq!(unsuppressed("rust/tests/serve_e2e.rs", bad).len(), 0);
+    }
+
+    #[test]
+    fn suppression_with_reason_marks_finding() {
+        let src = "// mutlint: allow(nan-cmp, \"ranks over finite ints\")\n\
+                   fn f(a: f64, b: f64) { a.partial_cmp(&b); }";
+        let all = findings("rust/src/train/mod.rs", src);
+        assert_eq!(all.len(), 1);
+        assert!(all[0].suppressed);
+        // reason-less: finding stays live AND the allow itself is flagged
+        let src2 = "// mutlint: allow(nan-cmp)\nfn f(a: f64, b: f64) { a.partial_cmp(&b); }";
+        let all2 = findings("rust/src/train/mod.rs", src2);
+        let lints: Vec<_> = all2.iter().map(|f| (f.lint, f.suppressed)).collect();
+        assert!(lints.contains(&("suppression", false)));
+        assert!(lints.contains(&("nan-cmp", false)));
+    }
+
+    #[test]
+    fn mup_coverage_missing_variant_and_undeclared_use() {
+        let rules = SourceFile::parse(
+            "rust/src/mup/rules.rs".into(),
+            "pub enum Role { Input, Hidden, Frozen }\n\
+             impl P { pub fn abc_for(&self) { match r { \
+             Role::Input => 1, Role::Hidden => 2 }; } }",
+        );
+        let model = SourceFile::parse(
+            "rust/src/model/mod.rs".into(),
+            "fn build() { reg(Role::Input); reg(Role::Ghost); }",
+        );
+        let mut out = Vec::new();
+        mup_coverage(&[rules, model], &mut out);
+        let msgs: Vec<_> = out.iter().map(|f| f.msg.as_str()).collect();
+        assert_eq!(out.len(), 2, "{msgs:?}");
+        assert!(msgs.iter().any(|m| m.contains("Role::Frozen")));
+        assert!(msgs.iter().any(|m| m.contains("Role::Ghost")));
+    }
+
+    #[test]
+    fn mup_coverage_clean_when_all_variants_handled() {
+        let rules = SourceFile::parse(
+            "rust/src/mup/rules.rs".into(),
+            "pub enum Role { Input, Output }\n\
+             pub fn abc_for() { match r { Role::Input | Role::Output => 1 }; }",
+        );
+        let mut out = Vec::new();
+        mup_coverage(&[rules], &mut out);
+        assert!(out.is_empty(), "{out:?}");
+    }
+}

@@ -1,0 +1,73 @@
+//! `mutlint` — run the project-invariant lints (DESIGN.md §11) over the
+//! tree and fail on any unsuppressed finding.
+//!
+//! ```text
+//! cargo run --release --bin mutlint [ROOT]
+//! ```
+//!
+//! * `ROOT` defaults to the current directory (CI runs it from the repo
+//!   root).
+//! * Exit 0: clean.  Exit 1: unsuppressed findings.  Exit 2: usage/IO
+//!   error.
+//! * `MUTLINT_NO_ASSERT=1` reports findings but exits 0 — the same escape
+//!   hatch convention as the bench gates (`BENCH_NO_ASSERT=1`).
+
+use mutransfer::analysis::{load_tree, passes};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut args = std::env::args().skip(1);
+    let root = match args.next() {
+        None => PathBuf::from("."),
+        Some(a) if a == "--help" || a == "-h" => {
+            println!("usage: mutlint [ROOT]");
+            println!("lints: {}", passes::LINTS.join(", "));
+            println!("suppress with: // mutlint: allow(<lint>, \"<reason>\")");
+            return ExitCode::SUCCESS;
+        }
+        Some(a) => PathBuf::from(a),
+    };
+    if args.next().is_some() {
+        eprintln!("usage: mutlint [ROOT]");
+        return ExitCode::from(2);
+    }
+
+    let files = match load_tree(&root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("mutlint: failed to read tree under {}: {e}", root.display());
+            return ExitCode::from(2);
+        }
+    };
+    if files.is_empty() {
+        eprintln!("mutlint: no .rs files found under {} (expected rust/src)", root.display());
+        return ExitCode::from(2);
+    }
+
+    let findings = passes::run_all(&files);
+    let mut live = 0usize;
+    let mut suppressed = 0usize;
+    for f in &findings {
+        if f.suppressed {
+            suppressed += 1;
+        } else {
+            live += 1;
+            println!("{}", f.render());
+        }
+    }
+    println!(
+        "mutlint: {} files, {} finding(s) ({} suppressed with reasons)",
+        files.len(),
+        live,
+        suppressed
+    );
+    if live == 0 {
+        return ExitCode::SUCCESS;
+    }
+    if std::env::var("MUTLINT_NO_ASSERT").is_ok_and(|v| v == "1") {
+        println!("mutlint: MUTLINT_NO_ASSERT=1 set; reporting only");
+        return ExitCode::SUCCESS;
+    }
+    ExitCode::FAILURE
+}

@@ -51,6 +51,7 @@ pub fn run(id: &str, rt: &Runtime, rep: &Reporter, scale: &Scale) -> Result<()> 
         "tab12" | "fig16" | "tab13" => tab12::run(rt, rep, scale),
         "all" => {
             for id in ALL {
+                // mutlint: allow(bus-only-output, "exp-all section banner on the CLI's own stdout, printed only from the mutransfer exp subcommand")
                 println!("\n################ {id} ################");
                 run(id, rt, rep, scale)?;
             }

@@ -218,7 +218,7 @@ impl Rng {
     pub fn zipf(&mut self, n: usize, s: f64, cdf: &[f64]) -> usize {
         debug_assert_eq!(cdf.len(), n);
         let u = self.uniform() * cdf[n - 1];
-        match cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+        match cdf.binary_search_by(|p| p.total_cmp(&u)) {
             Ok(i) => i,
             Err(i) => i.min(n - 1),
         }

@@ -35,6 +35,7 @@
 //! either: `cargo test -q` exercises the whole verification story (golden
 //! trajectories, μP property tests, sweep resume) natively.
 
+pub mod analysis;
 pub mod ckpt;
 pub mod config;
 pub mod coordcheck;

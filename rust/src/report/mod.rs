@@ -33,6 +33,7 @@ impl Reporter {
     /// Print a table and persist its CSV twin (atomic publish).
     pub fn table(&self, name: &str, t: &Table) -> Result<()> {
         if !self.quiet {
+            // mutlint: allow(bus-only-output, "Reporter's stdout table rendering is the exp CLI contract; quiet() is the daemon-side off switch")
             println!("{}", t.render());
         }
         write_atomic(&self.dir.join(format!("{name}.csv")), t.to_csv().as_bytes())?;
@@ -47,6 +48,7 @@ impl Reporter {
 
     pub fn note(&self, msg: &str) {
         if !self.quiet {
+            // mutlint: allow(bus-only-output, "Reporter notes are the exp CLI's stdout contract; quiet() is the daemon-side off switch")
             println!("{msg}");
         }
     }

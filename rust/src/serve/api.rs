@@ -154,7 +154,7 @@ pub fn handle(
                     .filter(|l| !matches!(json::lazy::extract(l, "ckpt"), Ok(Some(_))))
                     .collect();
                 let start = lines.len().saturating_sub(tail);
-                let mut body = lines[start..].join("\n");
+                let mut body = lines.get(start..).unwrap_or(&[]).join("\n");
                 if !body.is_empty() {
                     body.push('\n');
                 }

@@ -36,7 +36,7 @@ use anyhow::{bail, Context, Result};
 use crate::model::BaseShape;
 use crate::mup::{Optimizer, Scheme};
 use crate::runtime::Runtime;
-use crate::serve::events::{Event, EventBus, EventSink};
+use crate::serve::events::{Event, EventBus, EventSink, StderrSink};
 use crate::sweep::Sweep;
 use crate::train::Schedule;
 use crate::transfer::{mu_transfer, tune_only, TransferSetup, TunerKind};
@@ -499,6 +499,18 @@ impl Registry {
     }
 
     pub fn open_cfg(state_dir: &Path, cache_bytes: usize) -> Result<Arc<Registry>> {
+        Self::open_logged(state_dir, cache_bytes, &StderrSink::quiet())
+    }
+
+    /// [`Registry::open_cfg`] with an explicit sink for operational log
+    /// events (unloadable-job skips).  The daemon routes these through the
+    /// event bus (DESIGN.md §11.4); the `StderrSink` default preserves the
+    /// old stderr lines for direct callers.
+    pub fn open_logged(
+        state_dir: &Path,
+        cache_bytes: usize,
+        log: &dyn EventSink,
+    ) -> Result<Arc<Registry>> {
         let jobs_dir = state_dir.join("jobs");
         std::fs::create_dir_all(&jobs_dir)
             .with_context(|| format!("creating state dir {}", jobs_dir.display()))?;
@@ -549,9 +561,9 @@ impl Registry {
                     }
                     jobs.insert(id, JobEntry { spec, state, error, bus, best });
                 }
-                Err(e) => eprintln!(
+                Err(e) => log.emit(&Event::server_log(format!(
                     "[serve] skipping unloadable job {id}: {e:#} (directory left on disk)"
-                ),
+                ))),
             }
         }
         // ids are never reused, even across delete + restart: the
@@ -881,6 +893,7 @@ fn repair_torn_first_append(path: &Path) {
         return;
     }
     if !text.contains('\n') && json::parse(text.trim()).is_err() {
+        // mutlint: allow(atomic-write, "in-place truncate of a daemon-owned torn journal; there is no content to make durable and rename would race the sweep's own append path")
         if let Ok(f) = std::fs::OpenOptions::new().write(true).open(path) {
             let _ = f.set_len(0);
             let _ = f.sync_all();
@@ -1124,7 +1137,21 @@ impl Daemon {
         artifacts: Option<PathBuf>,
         cfg: ServeConfig,
     ) -> Result<Daemon> {
-        let registry = Registry::open_cfg(state_dir, cfg.cache_bytes)?;
+        Self::start_logged(addr, state_dir, artifacts, cfg, Arc::new(StderrSink::quiet()))
+    }
+
+    /// [`Daemon::start_cfg`] with an explicit sink for the daemon's
+    /// operational log events (`[serve] …` lifecycle lines).  The default
+    /// `StderrSink` keeps stderr byte-identical to the pre-bus daemon;
+    /// tests pass a `CollectSink`, embedders can forward to their own bus.
+    pub fn start_logged(
+        addr: &str,
+        state_dir: &Path,
+        artifacts: Option<PathBuf>,
+        cfg: ServeConfig,
+        log: Arc<dyn EventSink>,
+    ) -> Result<Daemon> {
+        let registry = Registry::open_logged(state_dir, cfg.cache_bytes, log.as_ref())?;
         // fail fast on an unloadable artifacts path: degrading to the
         // native backend must be a startup error, not a silent mid-queue
         // substitution the operator never sees
@@ -1156,6 +1183,7 @@ impl Daemon {
             let stop = stop.clone();
             let artifacts = artifacts.clone();
             let budget = budget.clone();
+            let log = log.clone();
             executors.push(std::thread::spawn(move || {
                 // each slot owns its Runtime: backends need not be Sync.
                 // Daemon::start already validated the artifacts path; if
@@ -1163,15 +1191,18 @@ impl Daemon {
                 // mutely.
                 let rt = match &artifacts {
                     Some(p) => Runtime::new(p).unwrap_or_else(|e| {
-                        eprintln!(
+                        log.emit(&Event::server_log(format!(
                             "[serve] warning: artifacts became unavailable ({e:#}); using the native backend"
-                        );
+                        )));
                         Runtime::native()
                     }),
                     None => Runtime::native(),
                 };
                 while let Some((id, spec)) = reg.next_job(&stop) {
-                    eprintln!("[serve] job {id} ({}) started on slot {slot}", spec.name);
+                    log.emit(&Event::server_log(format!(
+                        "[serve] job {id} ({}) started on slot {slot}",
+                        spec.name
+                    )));
                     let dir = reg.job_dir(&id);
                     let bus: Arc<dyn EventSink> = match reg.bus(&id) {
                         Some(b) => b,
@@ -1180,11 +1211,15 @@ impl Daemon {
                     let lease = Arc::new(budget.lease());
                     let outcome = run_job(&rt, &dir, &spec, bus, Some(lease));
                     match &outcome {
-                        Ok(_) => eprintln!("[serve] job {id} done"),
-                        Err(e) => eprintln!("[serve] job {id} FAILED: {e:#}"),
+                        Ok(_) => log.emit(&Event::server_log(format!("[serve] job {id} done"))),
+                        Err(e) => log.emit(&Event::server_log(format!(
+                            "[serve] job {id} FAILED: {e:#}"
+                        ))),
                     }
                     if let Err(e) = reg.finish(&id, outcome) {
-                        eprintln!("[serve] persisting terminal state for {id} failed: {e:#}");
+                        log.emit(&Event::server_log(format!(
+                            "[serve] persisting terminal state for {id} failed: {e:#}"
+                        )));
                     }
                 }
             }));
@@ -1279,6 +1314,31 @@ mod tests {
         let _ = std::fs::remove_dir_all(&d);
         std::fs::create_dir_all(&d).unwrap();
         d
+    }
+
+    #[test]
+    fn open_logged_reports_unloadable_job_on_the_sink() {
+        let dir = tmpdir("openlog");
+        // corrupt job dir: spec.json present but unparseable
+        let jdir = dir.join("jobs").join("j0000000007");
+        std::fs::create_dir_all(&jdir).unwrap();
+        std::fs::write(jdir.join("spec.json"), "{not json").unwrap();
+        let sink = crate::serve::events::CollectSink::default();
+        let reg = Registry::open_logged(&dir, 0, &sink).unwrap();
+        let evs = sink.take();
+        assert!(
+            evs.iter().any(|e| matches!(
+                e,
+                Event::ServerLog { msg }
+                    if msg.contains("skipping unloadable job j0000000007")
+            )),
+            "skip must surface as a typed ServerLog event, got {evs:?}"
+        );
+        let inner = reg.inner.lock().unwrap();
+        assert!(inner.jobs.is_empty(), "corrupt job must not load");
+        assert!(inner.next_id > 7, "unloadable job still burns its id range");
+        // the directory stays on disk for forensics
+        assert!(jdir.join("spec.json").exists());
     }
 
     #[test]

@@ -55,11 +55,20 @@ pub enum Event {
     /// a recoverable anomaly (ignored checkpoint, fingerprint mismatch…);
     /// `msg` is the full text the stderr sink prints after `warning: `
     Warning { key: String, msg: String },
+    /// a daemon operational log line (job lifecycle, registry repair,
+    /// persistence failures) — the `[serve] …` lines that predate the
+    /// bus.  [`StderrSink`] prints `msg` verbatim so daemon stderr stays
+    /// byte-identical; bus subscribers see it as a typed event.
+    ServerLog { msg: String },
 }
 
 impl Event {
     pub fn warning(key: &str, msg: impl Into<String>) -> Event {
         Event::Warning { key: key.to_string(), msg: msg.into() }
+    }
+
+    pub fn server_log(msg: impl Into<String>) -> Event {
+        Event::ServerLog { msg: msg.into() }
     }
 
     /// The SSE wire form: a flat `"type"`-tagged JSON object.
@@ -118,6 +127,10 @@ impl Event {
                 ("key", jstr(key)),
                 ("msg", jstr(msg)),
             ]),
+            Event::ServerLog { msg } => Json::from_pairs(vec![
+                ("type", jstr("server_log")),
+                ("msg", jstr(msg)),
+            ]),
         }
     }
 
@@ -159,6 +172,7 @@ impl Event {
                 key: s("key").unwrap_or_default(),
                 msg: s("msg")?,
             }),
+            "server_log" => Some(Event::ServerLog { msg: s("msg")? }),
             _ => None,
         }
     }
@@ -193,6 +207,9 @@ impl EventSink for StderrSink {
     fn emit(&self, ev: &Event) {
         match ev {
             Event::Warning { msg, .. } => eprintln!("warning: {msg}"),
+            // daemon ops lines printed unconditionally before the bus
+            // existed; `msg` carries its own `[serve] ` prefix
+            Event::ServerLog { msg } => eprintln!("{msg}"),
             Event::TrialFinished {
                 key,
                 ordinal,
@@ -353,6 +370,7 @@ mod tests {
             Event::RungPromoted { budget: 20, survivors: 8, promoted: 4 },
             Event::SweepDone { total: 12 },
             Event::warning("k", "ignoring checkpoint /x: bad magic"),
+            Event::server_log("[serve] job j-1 started on slot 0"),
         ];
         for c in cases {
             let j = crate::util::json::parse(&c.to_json().to_string()).unwrap();

@@ -203,12 +203,14 @@ fn read_limited_line(r: &mut impl BufRead) -> Result<Option<String>> {
                 bail!("connection closed mid-line");
             }
             _ => {
+                // mutlint: allow(no-panic-serve, "index 0 of the fixed [u8; 1] read buffer is infallible")
                 if byte[0] == b'\n' {
                     if buf.last() == Some(&b'\r') {
                         buf.pop();
                     }
                     return Ok(Some(String::from_utf8(buf).context("non-utf8 header line")?));
                 }
+                // mutlint: allow(no-panic-serve, "index 0 of the fixed [u8; 1] read buffer is infallible")
                 buf.push(byte[0]);
                 if buf.len() > MAX_LINE {
                     bail!("header line exceeds {MAX_LINE} bytes");

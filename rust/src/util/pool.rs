@@ -18,6 +18,67 @@ use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 
+/// Test-only schedule perturbation: seeded yield/sleep injection at the
+/// interleaving-sensitive points of [`FairBudget`] (acquire entry, grant,
+/// permit/lease release).  Production code pays one relaxed atomic load
+/// per point; the `sched_perturb` harness enables it per-thread with a
+/// deterministic seed and replays ≥1k distinct schedules.
+///
+/// Points are only placed where **no lock is held**, so an injected sleep
+/// can reorder threads but can never extend a critical section.
+pub mod perturb {
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    /// Fast-path gate: stays false unless some thread ever opted in, so
+    /// the hook is a single relaxed load in production.
+    static ANY_ENABLED: AtomicBool = AtomicBool::new(false);
+
+    thread_local! {
+        /// xorshift64* state; 0 = this thread not perturbed.
+        static STATE: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Enable perturbation on the calling thread with a deterministic
+    /// seed (0 is mapped to a fixed nonzero state).
+    pub fn enable_thread(seed: u64) {
+        STATE.with(|s| s.set(if seed == 0 { 0x9E3779B97F4A7C15 } else { seed }));
+        ANY_ENABLED.store(true, Ordering::Relaxed);
+    }
+
+    /// Stop perturbing the calling thread.
+    pub fn disable_thread() {
+        STATE.with(|s| s.set(0));
+    }
+
+    /// A perturbation point: depending on the thread's seeded RNG, do
+    /// nothing, yield, or sleep up to ~200µs.  `_tag` names the site for
+    /// debugging; decisions depend only on the seed and call order.
+    pub fn point(_tag: &str) {
+        if !ANY_ENABLED.load(Ordering::Relaxed) {
+            return;
+        }
+        let draw = STATE.with(|s| {
+            let mut x = s.get();
+            if x == 0 {
+                return None;
+            }
+            x ^= x >> 12;
+            x ^= x << 25;
+            x ^= x >> 27;
+            s.set(x);
+            Some(x.wrapping_mul(0x2545_F491_4F6C_DD1D))
+        });
+        if let Some(r) = draw {
+            match r % 8 {
+                0..=3 => {}
+                4 | 5 => std::thread::yield_now(),
+                _ => std::thread::sleep(std::time::Duration::from_micros(r % 200)),
+            }
+        }
+    }
+}
+
 /// Run `jobs` across `workers` threads, preserving result order.
 ///
 /// `f` must be `Send + Sync`; jobs are pulled from a shared queue so the
@@ -141,6 +202,54 @@ impl FairBudget {
         st.holders.insert(id, (0, 0));
         BudgetLease { budget: self.clone(), id }
     }
+
+    /// Slots currently in use across all holders (diagnostic: the
+    /// perturbation harness asserts this returns to 0 after every
+    /// schedule — a nonzero value after all permits dropped is a lost
+    /// permit).
+    pub fn outstanding(&self) -> usize {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner()).used_total
+    }
+
+    /// `acquire` calls currently registered as waiting, across all
+    /// holders (diagnostic: stale waiting counts — e.g. from an acquire
+    /// unwound mid-wait — would permanently cap peers at their fair
+    /// share; see [`WaitGuard`]).
+    pub fn waiting(&self) -> usize {
+        let st = self.inner.lock().unwrap_or_else(|e| e.into_inner());
+        st.holders.values().map(|(_, w)| *w).sum()
+    }
+}
+
+/// Unwind-safety for the waiting count: [`BudgetLease::acquire`] registers
+/// itself in the holder's waiting counter before blocking, and that
+/// counter feeds every *other* holder's `others_waiting` fairness check.
+/// If the acquiring thread unwinds mid-wait (a panic while blocked — e.g.
+/// injected by the perturbation harness, or a poison panic surfacing
+/// through the condvar), a bare `h.1 += 1` would leak: peers would see a
+/// phantom waiter forever and stay capped at fair share with free slots
+/// on the table.  The guard is declared *before* the `MutexGuard`, so on
+/// unwind the lock is released first (locals drop in reverse declaration
+/// order) and the guard can safely re-lock — recovering a poisoned lock —
+/// to decrement the count and wake peers.
+struct WaitGuard<'a> {
+    budget: &'a FairBudget,
+    id: u64,
+    armed: bool,
+}
+
+impl Drop for WaitGuard<'_> {
+    fn drop(&mut self) {
+        if !self.armed {
+            return;
+        }
+        let mut st = self.budget.inner.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(h) = st.holders.get_mut(&self.id) {
+            h.1 = h.1.saturating_sub(1);
+        }
+        drop(st);
+        self.budget.freed.notify_all();
+    }
 }
 
 /// One holder's handle on a [`FairBudget`].
@@ -153,9 +262,15 @@ impl BudgetLease {
     /// Block until this holder is entitled to one more worker slot.
     pub fn acquire(&self) -> BudgetPermit {
         let b = &self.budget;
+        perturb::point("acquire-enter");
+        // Declaration order matters: `wait` before `st`, so on unwind the
+        // MutexGuard is released (poisoning the lock) before WaitGuard
+        // re-locks (recovering it) to undo the waiting-count increment.
+        let mut wait = WaitGuard { budget: b, id: self.id, armed: false };
         let mut st = b.inner.lock().unwrap_or_else(|e| e.into_inner());
         if let Some(h) = st.holders.get_mut(&self.id) {
             h.1 += 1;
+            wait.armed = true;
         }
         loop {
             let holders = st.holders.len().max(1);
@@ -169,8 +284,11 @@ impl BudgetLease {
                 st.used_total += 1;
                 if let Some(h) = st.holders.get_mut(&self.id) {
                     h.0 += 1;
-                    h.1 -= 1;
+                    h.1 = h.1.saturating_sub(1);
                 }
+                wait.armed = false;
+                drop(st);
+                perturb::point("acquire-granted");
                 return BudgetPermit { budget: b.clone(), holder: self.id };
             }
             st = b
@@ -190,6 +308,7 @@ impl BudgetLease {
 
 impl Drop for BudgetLease {
     fn drop(&mut self) {
+        perturb::point("lease-drop");
         let mut st = self.budget.inner.lock().unwrap_or_else(|e| e.into_inner());
         // live permits keep their used_total accounting; only the holder's
         // registration (and thus the fair-share denominator) goes away
@@ -207,6 +326,7 @@ pub struct BudgetPermit {
 
 impl Drop for BudgetPermit {
     fn drop(&mut self) {
+        perturb::point("permit-drop");
         let mut st = self.budget.inner.lock().unwrap_or_else(|e| e.into_inner());
         st.used_total = st.used_total.saturating_sub(1);
         if let Some(h) = st.holders.get_mut(&self.holder) {
@@ -383,6 +503,83 @@ mod tests {
         assert!(t0.elapsed() < std::time::Duration::from_secs(5));
         drop((p1, p2, p3));
         waiter.join().unwrap();
+    }
+
+    #[test]
+    fn panicking_holder_does_not_deadlock_peers() {
+        // ISSUE-8 audit: a holder that panics mid-lease (permits live)
+        // must release everything through RAII unwinding — its slots flow
+        // back and a peer's acquire proceeds instead of deadlocking.
+        let b = FairBudget::new(2);
+        let peer = b.lease();
+        let b2 = b.clone();
+        let t = std::thread::spawn(move || {
+            let lease = b2.lease();
+            let _p1 = lease.acquire();
+            let _p2 = lease.acquire();
+            panic!("holder dies mid-lease");
+        });
+        assert!(t.join().is_err(), "holder thread must have panicked");
+        // both slots must be reacquirable, promptly
+        let p1 = peer.acquire();
+        let p2 = peer.acquire();
+        drop((p1, p2));
+        drop(peer);
+        assert_eq!(b.outstanding(), 0, "panicked holder leaked a permit");
+        assert_eq!(b.waiting(), 0, "panicked holder leaked a waiting count");
+    }
+
+    #[test]
+    fn peer_blocked_in_acquire_survives_holder_panic() {
+        // Harder variant: the peer is already blocked inside acquire()
+        // when the lone-slot holder panics.  The unwind poisons nothing
+        // the peer can't recover (poisoned-lock recovery is
+        // unwrap_or_else(into_inner) throughout), and the freed slot must
+        // reach the sleeper.
+        let b = FairBudget::new(1);
+        let peer = Arc::new(b.lease());
+        let b2 = b.clone();
+        let (took, took_rx) = mpsc::channel();
+        let holder = std::thread::spawn(move || {
+            let lease = b2.lease();
+            let _p = lease.acquire();
+            took.send(()).unwrap();
+            std::thread::sleep(std::time::Duration::from_millis(30));
+            panic!("holder dies while a peer waits");
+        });
+        took_rx.recv().unwrap();
+        let (done, done_rx) = mpsc::channel();
+        let peer2 = peer.clone();
+        let waiter = std::thread::spawn(move || {
+            let _p = peer2.acquire(); // blocks until the unwind frees the slot
+            done.send(()).unwrap();
+        });
+        assert!(
+            done_rx.recv_timeout(std::time::Duration::from_secs(10)).is_ok(),
+            "peer deadlocked behind a panicked holder"
+        );
+        assert!(holder.join().is_err());
+        waiter.join().unwrap();
+        drop(peer);
+        assert_eq!(b.outstanding(), 0);
+        assert_eq!(b.waiting(), 0);
+    }
+
+    #[test]
+    fn perturb_points_are_deterministic_noops_when_disabled() {
+        // disabled: free (single relaxed load), no state change
+        perturb::point("off");
+        // enabled with a seed: must not panic or hang, and disable stops it
+        perturb::enable_thread(42);
+        for _ in 0..64 {
+            perturb::point("on");
+        }
+        perturb::disable_thread();
+        perturb::point("off-again");
+        // seed 0 maps to a fixed nonzero state instead of disabling
+        perturb::enable_thread(0);
+        perturb::point("zero-seed");
+        perturb::disable_thread();
     }
 
     #[test]

@@ -1,0 +1,6 @@
+//! Seeded mutlint fixture (never compiled): model code using only
+//! declared roles — must stay clean.
+
+pub fn role() -> Role {
+    Role::Input
+}

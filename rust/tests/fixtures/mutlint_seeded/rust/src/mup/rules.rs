@@ -1,0 +1,20 @@
+//! Seeded mutlint fixture (never compiled): Role::Frozen is declared but
+//! never mapped by abc_for — the silent-SP mode mup-coverage catches.
+
+pub enum Role {
+    Input,
+    Hidden,
+    Frozen,
+}
+
+pub struct Rules;
+
+impl Rules {
+    pub fn abc_for(&self, role: &Role) -> f64 {
+        match role {
+            Role::Input => 1.0,
+            Role::Hidden => 0.5,
+            _ => 0.0,
+        }
+    }
+}

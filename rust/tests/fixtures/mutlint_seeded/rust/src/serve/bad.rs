@@ -1,0 +1,11 @@
+//! Seeded mutlint fixture (never compiled): one violation for each
+//! serve-scoped lint, plus one correctly-reasoned suppression.
+
+pub fn persist(v: &[u8]) -> u8 {
+    std::fs::write("state.json", v).ok();
+    eprintln!("wrote state");
+    let first = v[0];
+    // mutlint: allow(no-panic-serve, "fixture: demonstrates a reasoned suppression")
+    let second = *v.get(1).unwrap();
+    first + second
+}

@@ -1,0 +1,5 @@
+//! Seeded mutlint fixture (never compiled): a reason-less suppression
+//! suppresses nothing and is itself flagged.
+
+// mutlint: allow(nan-cmp)
+pub fn worst(a: f64, b: f64) -> bool { a.partial_cmp(&b).is_none() }

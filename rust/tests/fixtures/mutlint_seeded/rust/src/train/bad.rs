@@ -1,0 +1,5 @@
+//! Seeded mutlint fixture (never compiled): one nan-cmp violation.
+
+pub fn best(a: f64, b: f64) -> bool {
+    a.partial_cmp(&b).is_some()
+}

@@ -1,0 +1,128 @@
+//! Seeded schedule-perturbation harness for `util::pool::FairBudget`
+//! (ISSUE-8 dynamic-analysis wiring; see DESIGN.md §11.6).
+//!
+//! The lease/permit fairness protocol is condvar-polling over a small
+//! amount of shared state, and its failure modes — lost permits, stale
+//! waiting counts, deadlock behind a panicked holder — only show up under
+//! adversarial thread interleavings.  Rather than hoping CI's scheduler
+//! happens to produce one, every thread opts into
+//! `pool::perturb::enable_thread(seed)`: a deterministic per-thread
+//! xorshift64* stream that injects yields/short sleeps at the protocol's
+//! lock-free perturbation points.  Each seed is one schedule; the harness
+//! replays ≥1k of them (`SCHED_PERTURB_ITERS` overrides the count) and
+//! asserts the pool drains to zero outstanding permits and zero
+//! registered waiters every time, under a watchdog so a deadlock fails
+//! fast instead of hanging CI.
+
+use mutransfer::util::pool::{perturb, FairBudget};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn iters() -> u64 {
+    std::env::var("SCHED_PERTURB_ITERS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(1024)
+}
+
+/// One schedule: 2 holders × 2 worker threads × 3 acquire/release cycles
+/// against a 3-slot budget — small enough that every interleaving class
+/// (contended grant, over-share grant, waiter handoff, lease teardown)
+/// is reachable, with all threads perturbed from `seed`.
+fn one_schedule(seed: u64) {
+    let b = FairBudget::new(3);
+    let (done, done_rx) = mpsc::channel();
+    let mut holders = Vec::new();
+    for hi in 0..2u64 {
+        let b = b.clone();
+        let done = done.clone();
+        holders.push(std::thread::spawn(move || {
+            let lease = Arc::new(b.lease());
+            let mut workers = Vec::new();
+            for wi in 0..2u64 {
+                let lease = lease.clone();
+                workers.push(std::thread::spawn(move || {
+                    perturb::enable_thread(
+                        seed.wrapping_mul(0x9E37_79B9).wrapping_add(hi * 31 + wi * 7 + 1),
+                    );
+                    for _ in 0..3 {
+                        let permit = lease.acquire();
+                        perturb::point("holding");
+                        drop(permit);
+                    }
+                    perturb::disable_thread();
+                }));
+            }
+            for w in workers {
+                w.join().unwrap();
+            }
+            done.send(()).unwrap();
+        }));
+    }
+    drop(done);
+    for _ in 0..2 {
+        if done_rx.recv_timeout(Duration::from_secs(30)).is_err() {
+            panic!("schedule seed {seed}: deadlock (a holder did not finish in 30s)");
+        }
+    }
+    for h in holders {
+        h.join().unwrap();
+    }
+    assert_eq!(b.outstanding(), 0, "seed {seed}: lost permit");
+    assert_eq!(b.waiting(), 0, "seed {seed}: stale waiting count");
+}
+
+#[test]
+fn fair_budget_survives_1k_perturbed_schedules() {
+    let n = iters();
+    for seed in 0..n {
+        one_schedule(seed);
+    }
+}
+
+/// A holder panics mid-lease under perturbation while a peer is blocked
+/// in `acquire` on the freed capacity: the unwind must hand the slots to
+/// the peer (RAII drops + poisoned-lock recovery), never deadlock it.
+fn panic_schedule(seed: u64) {
+    let b = FairBudget::new(2);
+    let peer = Arc::new(b.lease());
+    let b2 = b.clone();
+    let panicker = std::thread::spawn(move || {
+        perturb::enable_thread(seed.wrapping_add(1));
+        let lease = b2.lease();
+        let _p1 = lease.acquire();
+        let _p2 = lease.acquire();
+        perturb::point("pre-panic");
+        panic!("injected panic mid-lease (seed {seed})");
+    });
+    let (done, done_rx) = mpsc::channel();
+    let peer2 = peer.clone();
+    let waiter = std::thread::spawn(move || {
+        perturb::enable_thread(seed.wrapping_add(101));
+        for _ in 0..2 {
+            let permit = peer2.acquire();
+            perturb::point("peer-holding");
+            drop(permit);
+        }
+        perturb::disable_thread();
+        done.send(()).unwrap();
+    });
+    assert!(
+        done_rx.recv_timeout(Duration::from_secs(30)).is_ok(),
+        "seed {seed}: peer deadlocked behind a panicked holder"
+    );
+    assert!(panicker.join().is_err(), "seed {seed}: injected panic vanished");
+    waiter.join().unwrap();
+    drop(peer);
+    assert_eq!(b.outstanding(), 0, "seed {seed}: panicked holder leaked a permit");
+    assert_eq!(b.waiting(), 0, "seed {seed}: panicked holder leaked a waiting count");
+}
+
+#[test]
+fn perturbed_panicking_holder_never_deadlocks_peers() {
+    // noisy by design: each seed prints one expected panic message
+    for seed in 0..48u64 {
+        panic_schedule(seed);
+    }
+}
