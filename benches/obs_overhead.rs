@@ -1,0 +1,83 @@
+//! Observability overhead gate (DESIGN.md §12): a full training run with
+//! live telemetry on — metrics registry active plus μ-coordinate
+//! sampling every `coords::SAMPLE_EVERY` steps — must cost at most 2%
+//! more per step than the same run with telemetry off.  Trace spans stay
+//! disabled on both sides (that is the production daemon configuration;
+//! tracing is an explicitly-requested debugging mode with its own cost).
+//!
+//! Runs are interleaved off/on so thermal and frequency drift hits both
+//! arms equally; the gate compares medians.  Exits non-zero above the
+//! bar; set OBS_OVERHEAD_NO_ASSERT=1 to measure without gating.
+
+use std::time::Instant;
+
+use mutransfer::data::source_for;
+use mutransfer::model::BaseShape;
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::obs::coords;
+use mutransfer::runtime::Runtime;
+use mutransfer::serve::events::CollectSink;
+use mutransfer::train::{run_ckpt_with, RunSpec};
+use mutransfer::util::bench::fmt_ns;
+
+const VARIANT: &str = "tfm_post_w64_d2";
+const STEPS: usize = 32; // 4 coord samples per run at SAMPLE_EVERY = 8
+const PAIRS: usize = 11;
+
+fn one_run(rt: &Runtime, telemetry: bool) -> anyhow::Result<f64> {
+    coords::set_enabled(telemetry);
+    let hp = HyperParams { lr: 2f64.powi(-7), ..HyperParams::default() };
+    let mut spec = RunSpec::new(
+        VARIANT,
+        Parametrization::mup(Optimizer::Adam),
+        hp,
+        BaseShape::SameAsTarget,
+    );
+    spec.steps = STEPS;
+    spec.seed = 5;
+    let v = rt.manifest().get(VARIANT)?;
+    let data = source_for(v, 9);
+    let sink = CollectSink::default();
+    let t0 = Instant::now();
+    run_ckpt_with(rt, &spec, data.as_ref(), None, &sink, VARIANT)?;
+    let ns_per_step = t0.elapsed().as_nanos() as f64 / STEPS as f64;
+    coords::set_enabled(false);
+    Ok(ns_per_step)
+}
+
+fn median(xs: &mut [f64]) -> f64 {
+    xs.sort_by(f64::total_cmp);
+    xs[xs.len() / 2]
+}
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::new(&mutransfer::artifacts_dir())?;
+
+    println!("== obs_overhead: {STEPS}-step run, telemetry off vs on ({PAIRS} interleaved pairs) ==");
+    // warmup pair: page in code + data, settle the allocator
+    one_run(&rt, false)?;
+    one_run(&rt, true)?;
+
+    let (mut off, mut on) = (Vec::new(), Vec::new());
+    for _ in 0..PAIRS {
+        off.push(one_run(&rt, false)?);
+        on.push(one_run(&rt, true)?);
+    }
+    let (m_off, m_on) = (median(&mut off), median(&mut on));
+    let overhead = m_on / m_off - 1.0;
+    println!(
+        "telemetry_off {:>12}/step  telemetry_on {:>12}/step  overhead {:+.2}%  (bar: +2.00%)",
+        fmt_ns(m_off),
+        fmt_ns(m_on),
+        overhead * 100.0,
+    );
+
+    if overhead > 0.02 && std::env::var_os("OBS_OVERHEAD_NO_ASSERT").is_none() {
+        eprintln!(
+            "FAIL: telemetry overhead {:+.2}% exceeds the 2% budget",
+            overhead * 100.0
+        );
+        std::process::exit(1);
+    }
+    Ok(())
+}

@@ -40,6 +40,27 @@
 //! #    served forever
 //! mutransfer hp --addr 127.0.0.1:7077 --width 512 --depth 8 --batch 64
 //! ```
+//!
+//! # Observability (`/metrics`, trace spans, live μ-coords) — DESIGN.md §12
+//!
+//! ```text
+//! # Prometheus text exposition of the whole daemon: per-route request
+//! # counts/latency, cache hits, executor occupancy, warnings, …
+//! curl http://127.0.0.1:7077/metrics
+//! curl http://127.0.0.1:7077/debug/metrics        # same registry, JSON
+//! curl http://127.0.0.1:7077/healthz              # uptime, queue, slots
+//!
+//! # live μ-coordinate telemetry for a running job — upd_rms·√fan_in per
+//! # parameter group per sampled step; flat under μP, grows under SP
+//! curl http://127.0.0.1:7077/jobs/$id/metrics
+//! mutransfer watch --addr 127.0.0.1:7077 --coords $id
+//!
+//! # offline: the same signals from a single training run
+//! mutransfer train --variant tfm_post_w64_d2 --param mup --lr 2e-3 \
+//!     --steps 60 --coords --trace-out trace.json
+//! # trace.json is Chrome trace-event format: open chrome://tracing (or
+//! # https://ui.perfetto.dev) to see train_step > gemm/attn span nesting
+//! ```
 
 use mutransfer::data::source_for;
 use mutransfer::model::BaseShape;

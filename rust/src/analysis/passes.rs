@@ -2,7 +2,7 @@
 //! [`SourceFile::code`] with path-based scoping; `run_all` applies
 //! suppressions and returns the merged, sorted finding list.
 //!
-//! The five lints (contracts documented in DESIGN.md §11):
+//! The six lints (contracts documented in DESIGN.md §11 and §12):
 //!
 //! | lint              | contract                                              |
 //! |-------------------|-------------------------------------------------------|
@@ -16,6 +16,9 @@
 //! |                   | raw `eprintln!`/`println!`                            |
 //! | `mup-coverage`    | every `Role` variant maps through `abc_for`, and      |
 //! |                   | `model/` only uses declared roles                     |
+//! | `metric-names`    | metric registrations take static `mutransfer_`-prefixed |
+//! |                   | snake_case names; record sites in serve/ and the      |
+//! |                   | native runtime never build strings (PR-9, §12)        |
 //!
 //! Plus the meta-lint `suppression` (reason-less `mutlint: allow` —
 //! cannot itself be suppressed).
@@ -31,6 +34,7 @@ pub const LINTS: &[&str] = &[
     "no-panic-serve",
     "bus-only-output",
     "mup-coverage",
+    "metric-names",
     "suppression",
 ];
 
@@ -69,6 +73,7 @@ fn file_passes(sf: &SourceFile, out: &mut Vec<Finding>) {
     atomic_write(sf, out);
     no_panic_serve(sf, out);
     bus_only_output(sf, out);
+    metric_names(sf, out);
 }
 
 /// Emit one finding, honoring same-line / line-above suppressions.
@@ -246,6 +251,87 @@ fn bus_only_output(sf: &SourceFile, out: &mut Vec<Finding>) {
         {
             emit(sf, out, "bus-only-output", t.line,
                 format!("{}! bypasses the event bus; emit an Event via an EventSink", t.text));
+        }
+    }
+}
+
+// ----------------------------------------------------------- metric-names
+
+/// Record sites that are allowed to appear between a `metrics::` head and
+/// the end of its statement must not allocate: per-request `format!` /
+/// `to_string` at a hot counter defeats the "observability is nearly
+/// free" contract (DESIGN.md §12).
+const METRIC_HOT_SCOPES: &[&str] = &["rust/src/serve/", "rust/src/runtime/native/"];
+
+/// PR-9 contract, two halves.  (1) Everywhere: `Counter::new` /
+/// `Gauge::new` / `Histogram::new` take a *static string literal* name
+/// that is `mutransfer_`-prefixed snake_case — the Prometheus page is
+/// greppable and collision-free by construction.  (2) In the serve and
+/// native-runtime hot paths: no string building (`format!`, `to_string`,
+/// `to_owned`, `String::from`) inside a `metrics::…` statement — record
+/// sites stay allocation-free.
+fn metric_names(sf: &SourceFile, out: &mut Vec<Finding>) {
+    if !sf.rel.starts_with("rust/src/") {
+        return;
+    }
+    let hot = METRIC_HOT_SCOPES.iter().any(|p| sf.rel.starts_with(p));
+    let code = &sf.code;
+    for (i, t) in code.iter().enumerate() {
+        if sf.in_test(t.line) {
+            continue;
+        }
+        // (1) registration sites, project-wide
+        if matches!(t.text.as_str(), "Counter" | "Gauge" | "Histogram")
+            && t.kind == TokKind::Ident
+            && code.get(i + 1).is_some_and(|n| is_punct(n, "::"))
+            && code.get(i + 2).is_some_and(|n| is_ident(n, "new"))
+            && code.get(i + 3).is_some_and(|n| is_punct(n, "("))
+        {
+            match code.get(i + 4) {
+                Some(arg) if arg.kind == TokKind::Str => {
+                    let name = arg.text.trim_matches('"');
+                    let ok = name.starts_with("mutransfer_")
+                        && name.bytes().all(|b| matches!(b, b'a'..=b'z' | b'0'..=b'9' | b'_'));
+                    if !ok {
+                        emit(sf, out, "metric-names", arg.line,
+                            format!("metric name {} must be mutransfer_-prefixed snake_case \
+                                     ([a-z0-9_] only)", arg.text));
+                    }
+                }
+                _ => emit(sf, out, "metric-names", t.line,
+                    format!("{}::new needs a static string-literal name; a computed \
+                             name defeats the static registry", t.text)),
+            }
+        }
+        // (2) allocation-free record sites in the hot scopes
+        if hot && is_ident(t, "metrics") && code.get(i + 1).is_some_and(|n| is_punct(n, "::")) {
+            let mut depth = 0i32;
+            for j in (i + 2)..code.len().min(i + 202) {
+                let tj = &code[j];
+                if tj.kind == TokKind::Punct {
+                    match tj.text.as_str() {
+                        "(" | "[" | "{" => depth += 1,
+                        ")" | "]" | "}" => depth -= 1,
+                        "," | ";" if depth == 0 => break,
+                        _ => {}
+                    }
+                    if depth < 0 {
+                        break;
+                    }
+                    continue;
+                }
+                let alloc = (is_ident(tj, "format")
+                        && code.get(j + 1).is_some_and(|n| is_punct(n, "!")))
+                    || is_ident(tj, "to_string")
+                    || is_ident(tj, "to_owned")
+                    || is_path(code, j, "String", "from");
+                if alloc {
+                    emit(sf, out, "metric-names", tj.line,
+                        format!("{} inside a metrics record statement allocates per \
+                                 event; record with static names and integer/float \
+                                 values only", tj.text));
+                }
+            }
         }
     }
 }
@@ -444,6 +530,36 @@ mod tests {
         assert_eq!(unsuppressed("rust/src/bin/mutlint.rs", bad).len(), 0);
         assert_eq!(unsuppressed("rust/src/serve/events.rs", bad).len(), 0);
         assert_eq!(unsuppressed("rust/tests/serve_e2e.rs", bad).len(), 0);
+    }
+
+    #[test]
+    fn metric_names_prefix_literal_and_hot_path_alloc() {
+        // bad prefix / bad charset / computed name — flagged anywhere in src
+        let bad_prefix = "static C: Counter = Counter::new(\"requests_total\", \"h\");";
+        assert_eq!(unsuppressed("rust/src/obs/metrics.rs", bad_prefix).len(), 1);
+        let bad_chars = "static C: Gauge = Gauge::new(\"mutransfer_Conns\", \"h\");";
+        assert_eq!(unsuppressed("rust/src/obs/metrics.rs", bad_chars).len(), 1);
+        let dynamic = "fn f(n: &str) { let h = Histogram::new(name_for(n), \"h\"); }";
+        assert_eq!(unsuppressed("rust/src/obs/metrics.rs", dynamic).len(), 1);
+        let ok = "static C: Counter = Counter::new(\"mutransfer_http_sheds_total\", \"h\");";
+        assert_eq!(unsuppressed("rust/src/obs/metrics.rs", ok).len(), 0);
+        // tests may register scratch metrics under any name
+        let in_test = "#[cfg(test)]\nmod tests { \
+                       static C: Counter = Counter::new(\"scratch\", \"h\"); }";
+        assert_eq!(unsuppressed("rust/src/obs/metrics.rs", in_test).len(), 0);
+
+        // record sites in serve/ and runtime/native/ must not build strings
+        let alloc = "fn f(r: &str) { metrics::route_by_name(format!(\"{r}\")).hits(); }";
+        assert_eq!(unsuppressed("rust/src/serve/api.rs", alloc).len(), 1);
+        assert_eq!(unsuppressed("rust/src/runtime/native/tensor.rs", alloc).len(), 1);
+        // same code outside the hot scopes is fine
+        assert_eq!(unsuppressed("rust/src/train/mod.rs", alloc).len(), 0);
+        // allocation in the same fn but a *different* statement is fine
+        let ok2 = "fn f(n: u64) { metrics::HTTP_SHEDS.add(n); let s = n.to_string(); }";
+        assert_eq!(unsuppressed("rust/src/serve/api.rs", ok2).len(), 0);
+        // depth tracking: a comma inside the call does not end the scan
+        let alloc2 = "fn f() { metrics::X.set(g(1, 2.to_string().len() as i64)); }";
+        assert_eq!(unsuppressed("rust/src/serve/api.rs", alloc2).len(), 1);
     }
 
     #[test]

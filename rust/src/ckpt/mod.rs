@@ -187,6 +187,8 @@ impl Snapshot {
 
     /// Serialize + atomically publish (tmp-file-then-rename).
     pub fn save(&self, path: &Path) -> Result<()> {
+        let _sp = crate::obs::trace::span("ckpt_publish");
+        let t0 = std::time::Instant::now();
         let pr = &self.progress;
         let mut secs = vec![
             Section::raw(SEC_VARIANT, self.variant.as_bytes().to_vec()),
@@ -223,8 +225,10 @@ impl Snapshot {
                 data,
             ));
         }
-        format::write_file(path, &secs)
-            .with_context(|| format!("writing checkpoint {}", path.display()))
+        let out = format::write_file(path, &secs)
+            .with_context(|| format!("writing checkpoint {}", path.display()));
+        crate::obs::metrics::CKPT_PUBLISH.observe_since(t0);
+        out
     }
 
     /// Read + fully validate a checkpoint file (magic, version, CRCs,

@@ -30,6 +30,10 @@
 //!    a service: a typed event bus every layer emits progress into, and a
 //!    `mutransfer serve` daemon with a durable job registry, REST/SSE API
 //!    and `GET /hp` — tune once on a proxy, serve the HPs to any scale.
+//!    [`obs`] threads low-overhead observability through all of it:
+//!    a lock-sparse metrics registry (`GET /metrics`), opt-in Chrome
+//!    trace spans, and live μ-coordinate telemetry (`Event::CoordStats`,
+//!    `GET /jobs/:id/metrics`).
 //!
 //! Python never runs at run time, and by default never at build time
 //! either: `cargo test -q` exercises the whole verification story (golden
@@ -44,6 +48,7 @@ pub mod exp;
 pub mod init;
 pub mod model;
 pub mod mup;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod serve;

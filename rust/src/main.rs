@@ -44,6 +44,8 @@ const USAGE: &str = "usage: mutransfer <exp|train|transfer|coord-check|list-arti
   train               --variant NAME --param sp|mup|umup --lr F --steps N [--base-width W]
                       [--base-depth L --base-batch B]  (depth/batch transfer axes)
                       [--checkpoint FILE --checkpoint-every N]  (auto-resumes from FILE)
+                      [--trace-out FILE]  (Chrome trace-event dump of the run's spans)
+                      [--coords]  (live mu-coordinate telemetry lines on stderr)
   transfer            --proxy NAME --target NAME --base-width W --samples N --steps N --target-steps N [--workers N]
                       [--param sp|mup|umup] [--base-depth L --base-batch B]
                       [--tuner random|grid|sha [--eta K --rung0 R]]
@@ -64,11 +66,14 @@ const USAGE: &str = "usage: mutransfer <exp|train|transfer|coord-check|list-arti
                       fairly across running jobs (default: all cores)
                       [--max-conns N]     accepted-connection cap (default 1024)
                       [--cache-mb N]      results byte-cache budget (default 32)
+                      [--trace-dir DIR]   dump DIR/serve-trace.json (Chrome
+                      trace-event format) on graceful shutdown
   submit              --addr A [--name S --kind sweep|transfer] + transfer flags;
                       prints the new job id
   status              --addr A [JOB]     list jobs / show one job
   results             --addr A JOB       print a done job's canonical results JSON
-  watch               --addr A JOB       stream a job's events (SSE) to completion
+  watch               --addr A JOB [--coords]  stream a job's events (SSE) to
+                      completion; --coords adds live mu-coordinate scale lines
   hp                  --addr A [--width W --depth L --batch B]  best transferred
                       HPs from any completed sweep (the muTransfer question, as
                       an endpoint; dims are echoed — muP makes the answer
@@ -147,6 +152,8 @@ fn real_main() -> Result<()> {
                 c.every = ckpt_every;
                 c
             });
+            let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+            let show_coords = args.flag("coords");
             args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
             let rt = Runtime::new(&artifacts)?;
             let v = rt.manifest().get(&variant)?;
@@ -165,7 +172,30 @@ fn real_main() -> Result<()> {
                     eprintln!("resuming from checkpoint {}", c.path.display());
                 }
             }
-            let r = train_run_ckpt(&rt, &spec, data.as_ref(), ckpt.as_ref())?;
+            // Telemetry stays strictly opt-in on the offline CLI so the
+            // default stdout/stderr bytes are unchanged (DESIGN.md §12).
+            if trace_out.is_some() {
+                mutransfer::obs::trace::enable();
+            }
+            let r = if show_coords {
+                mutransfer::obs::coords::set_enabled(true);
+                let sink = CoordStderr(serve::StderrSink::quiet());
+                mutransfer::train::run_ckpt_with(
+                    &rt,
+                    &spec,
+                    data.as_ref(),
+                    ckpt.as_ref(),
+                    &sink,
+                    &variant,
+                )?
+            } else {
+                train_run_ckpt(&rt, &spec, data.as_ref(), ckpt.as_ref())?
+            };
+            if let Some(p) = &trace_out {
+                let n = mutransfer::obs::trace::write_chrome(p)?;
+                mutransfer::obs::trace::disable();
+                eprintln!("trace: {n} span(s) -> {}", p.display());
+            }
             println!(
                 "variant={variant} scheme={scheme} lr={lr:.3e} steps={} diverged={} final_train={:.4} best_val={:.4} ({:.2}s, {:.2} GFLOPs)",
                 r.steps_done,
@@ -306,7 +336,11 @@ fn real_main() -> Result<()> {
                 max_conns: args.usize_or("max-conns", 1024),
                 cache_bytes: args.usize_or("cache-mb", 32).saturating_mul(1 << 20),
             };
+            let trace_dir = args.get("trace-dir").map(std::path::PathBuf::from);
             args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            if trace_dir.is_some() {
+                mutransfer::obs::trace::enable();
+            }
             let daemon =
                 serve::Daemon::start_cfg(&addr, &state_dir, Some(artifacts.clone()), cfg)?;
             println!(
@@ -318,6 +352,15 @@ fn real_main() -> Result<()> {
             use std::io::Write as _;
             std::io::stdout().flush().ok(); // scripts wait on this line
             daemon.join();
+            // Reached on graceful shutdown only (SIGKILL'd daemons lose
+            // the buffer — spans are in-memory by design, DESIGN.md §12).
+            if let Some(d) = &trace_dir {
+                std::fs::create_dir_all(d)
+                    .with_context(|| format!("create --trace-dir {}", d.display()))?;
+                let p = d.join("serve-trace.json");
+                let n = mutransfer::obs::trace::write_chrome(&p)?;
+                eprintln!("trace: {n} span(s) -> {}", p.display());
+            }
         }
         "submit" => {
             let addr = args.str_or("addr", "127.0.0.1:7077");
@@ -394,6 +437,7 @@ fn real_main() -> Result<()> {
                 .get(1)
                 .context("watch needs a job id (see `mutransfer status`)")?
                 .clone();
+            let show_coords = args.flag("coords");
             args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
             let mut terminal: Option<String> = None;
             serve::http::sse(&addr, &format!("/jobs/{id}/events"), |_, data| {
@@ -423,6 +467,13 @@ fn real_main() -> Result<()> {
                         println!("sha rung @{budget} steps: promoted {promoted}/{survivors}")
                     }
                     serve::Event::Warning { msg, .. } => println!("warning: {msg}"),
+                    serve::Event::CoordStats { key, step, groups } if show_coords => {
+                        for (name, w_rms, upd_rms) in groups {
+                            println!(
+                                "coords @{step} {key}/{name}: w_rms={w_rms:.3e} upd_rms={upd_rms:.3e}"
+                            );
+                        }
+                    }
                     _ => {}
                 }
                 true
@@ -519,6 +570,23 @@ fn parse_job_spec(args: &Args, kind: &str) -> Result<JobSpec> {
         base_batch: args.usize_or("base-batch", d.base_batch),
     }
     .validated()
+}
+
+/// Sink for `train --coords`: prints one stderr line per sampled
+/// parameter group on top of the quiet default (warnings only).  The
+/// inner [`StderrSink`] counts the event for `/metrics`; forwarding
+/// wrappers must not count again (see `serve::events::count_event`).
+struct CoordStderr(serve::StderrSink);
+
+impl serve::EventSink for CoordStderr {
+    fn emit(&self, ev: &serve::Event) {
+        if let serve::Event::CoordStats { step, groups, .. } = ev {
+            for (name, w_rms, upd_rms) in groups {
+                eprintln!("coords @{step} {name}: w_rms={w_rms:.3e} upd_rms={upd_rms:.3e}");
+            }
+        }
+        self.0.emit(ev);
+    }
 }
 
 fn parse_scheme(

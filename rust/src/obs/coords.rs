@@ -1,0 +1,212 @@
+//! Live μ-coordinate telemetry (DESIGN.md §12).
+//!
+//! The paper's correctness instrument — the coordinate check — says
+//! per-coordinate scales stay O(1) in width under μP while SP blows up
+//! (Tensor Programs V §4; Lingle arXiv 2404.05728 shows the failure is
+//! usually *silent*).  `coordcheck/` runs that offline on dedicated
+//! `__coord` probe variants; this module makes a width-normalized slice
+//! of the same signal available **while a trial trains**:
+//!
+//! * `w_rms` — RMS of each parameter tensor (for unit-variance inputs
+//!   this tracks the activation scale that tensor produces, the u-μP
+//!   unit-scaling argument from arXiv 2407.17465);
+//! * `upd_rms` — RMS(Δparam) · √fan_in, the same normalization
+//!   `coordcheck::growth_exponents` fits: flat-or-shrinking across
+//!   widths under μP, growing like √fan_in under SP-with-global-LR.
+//!
+//! Sampling is read-only (`session.param(idx)` copies) every
+//! [`SAMPLE_EVERY`] steps, so the training trajectory stays bitwise
+//! identical with telemetry on or off; the ≤ 2% overhead budget is
+//! gated by `benches/obs_overhead.rs`.  Samples are emitted as
+//! [`crate::serve::events::Event::CoordStats`] on the job's event bus,
+//! ring-buffered per job by the daemon's registry, and served at
+//! `GET /jobs/:id/metrics`.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use crate::runtime::manifest::ParamInfo;
+use crate::stats::rms;
+use crate::util::json::{jnum, jstr, Json};
+
+/// Off by default: offline `train`/`transfer` runs sample only when the
+/// caller opts in; the serve daemon enables it at startup so every job
+/// has live telemetry.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Sample cadence in optimizer steps.  Amortizes the two `param(idx)`
+/// snapshots a sample needs; step 0 is always sampled so short trials
+/// still report.
+pub const SAMPLE_EVERY: usize = 8;
+
+/// Per-job ring capacity in the daemon registry: with [`SAMPLE_EVERY`]=8
+/// this retains the trailing ~2k steps of a live job.
+pub const RING_CAP: usize = 256;
+
+/// Should this step be sampled?  (Telemetry off ⇒ never.)
+#[inline]
+pub fn sample_step(step: usize) -> bool {
+    enabled() && step % SAMPLE_EVERY == 0
+}
+
+/// One parameter group's coordinate-scale stats at one step.
+#[derive(Debug, Clone)]
+pub struct GroupStat {
+    pub name: String,
+    /// RMS of the tensor itself (activation-scale proxy).
+    pub w_rms: f64,
+    /// RMS(Δparam) · √fan_in — the coordcheck normalization.
+    pub upd_rms: f64,
+}
+
+/// Compute per-tensor stats from before/after parameter snapshots.
+/// Length mismatches (a backend declining some tensor) drop just that
+/// tensor rather than failing the step.
+pub fn group_stats(params: &[ParamInfo], before: &[Vec<f32>], after: &[Vec<f32>]) -> Vec<GroupStat> {
+    let mut out = Vec::with_capacity(params.len());
+    for (i, info) in params.iter().enumerate() {
+        let (Some(b), Some(a)) = (before.get(i), after.get(i)) else { continue };
+        if b.len() != a.len() || a.is_empty() {
+            continue;
+        }
+        let delta: Vec<f32> = a.iter().zip(b.iter()).map(|(x, y)| x - y).collect();
+        out.push(GroupStat {
+            name: info.name.clone(),
+            w_rms: rms(a),
+            upd_rms: rms(&delta) * (info.fan_in.max(1) as f64).sqrt(),
+        });
+    }
+    out
+}
+
+/// The scalar scale-growth signal for one sample: the largest normalized
+/// update scale across groups.  Fit against width via
+/// `stats::growth_exponent` this is ≈ +0.5 for SP (global LR) and ≤ 0
+/// for μP — the acceptance test in `rust/tests/obs.rs` pins both.  A
+/// NaN group (diverged trial) wins the max via `stats::nan_last` —
+/// divergence must never be masked by a finite sibling.
+pub fn scale_signal(groups: &[GroupStat]) -> f64 {
+    groups
+        .iter()
+        .map(|g| g.upd_rms)
+        .max_by(crate::stats::nan_last)
+        .unwrap_or(0.0)
+}
+
+/// Wire format of one sample (shared by `Event::CoordStats` and
+/// `GET /jobs/:id/metrics`):
+/// `{"step":N,"groups":[{"name":…,"w_rms":…,"upd_rms":…},…]}`.
+pub fn sample_json(step: usize, groups: &[GroupStat]) -> Json {
+    Json::from_pairs(vec![
+        ("step", jnum(step as f64)),
+        (
+            "groups",
+            Json::Arr(
+                groups
+                    .iter()
+                    .map(|g| {
+                        Json::from_pairs(vec![
+                            ("name", jstr(&g.name)),
+                            ("w_rms", jnum(g.w_rms)),
+                            ("upd_rms", jnum(g.upd_rms)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Fixed-capacity ring of samples (oldest evicted first); the registry
+/// keeps one per live job.
+#[derive(Debug, Default)]
+pub struct CoordRing {
+    buf: VecDeque<Json>,
+}
+
+impl CoordRing {
+    pub fn push(&mut self, sample: Json) {
+        if self.buf.len() >= RING_CAP {
+            self.buf.pop_front();
+        }
+        self.buf.push_back(sample);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.buf.iter().cloned().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mup::Role;
+
+    fn info(name: &str, fan_in: usize, numel: usize) -> ParamInfo {
+        ParamInfo {
+            name: name.into(),
+            shape: vec![numel],
+            role: Role::Hidden,
+            fan_in,
+            fan_out: 1,
+            init: "normal".into(),
+        }
+    }
+
+    #[test]
+    fn group_stats_math_and_mismatch_tolerance() {
+        let params = vec![info("w", 4, 2), info("b", 1, 2), info("gone", 4, 2)];
+        let before = vec![vec![1.0f32, 1.0], vec![0.0, 0.0]];
+        let after = vec![vec![1.5f32, 0.5], vec![3.0, 4.0]];
+        let g = group_stats(&params, &before, &after);
+        assert_eq!(g.len(), 2, "missing third snapshot drops just that tensor");
+        // w: delta = [0.5, -0.5] -> rms 0.5, * sqrt(4) = 1.0
+        assert!((g[0].upd_rms - 1.0).abs() < 1e-12, "{}", g[0].upd_rms);
+        // after [1.5, 0.5] -> rms sqrt((2.25+0.25)/2) = sqrt(1.25)
+        assert!((g[0].w_rms - 1.25f64.sqrt()).abs() < 1e-12);
+        // b: delta rms = sqrt((9+16)/2), fan_in 1
+        assert!((g[1].upd_rms - 12.5f64.sqrt()).abs() < 1e-12);
+        assert!((scale_signal(&g) - 12.5f64.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ring_evicts_oldest() {
+        let mut r = CoordRing::default();
+        for i in 0..(RING_CAP + 10) {
+            r.push(sample_json(i, &[]));
+        }
+        assert_eq!(r.len(), RING_CAP);
+        let arr = r.to_json();
+        let first = arr.as_arr().unwrap()[0].get("step").unwrap().as_f64().unwrap();
+        assert_eq!(first as usize, 10, "oldest 10 evicted");
+    }
+
+    #[test]
+    fn sample_json_shape() {
+        let g = vec![GroupStat { name: "block0.wq".into(), w_rms: 0.5, upd_rms: 0.25 }];
+        let j = sample_json(40, &g);
+        let s = j.to_string();
+        let back = crate::util::json::parse(&s).unwrap();
+        assert_eq!(back.get("step").unwrap().as_f64().unwrap(), 40.0);
+        let groups = back.get("groups").unwrap().as_arr().unwrap();
+        assert_eq!(groups[0].get("name").unwrap().as_str().unwrap(), "block0.wq");
+        assert_eq!(groups[0].get("upd_rms").unwrap().as_f64().unwrap(), 0.25);
+    }
+}

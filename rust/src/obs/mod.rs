@@ -1,0 +1,20 @@
+//! `mutobs` — low-overhead observability for train + serve (DESIGN.md
+//! §12).
+//!
+//! Three independent facilities share one design rule: *disabled or idle
+//! telemetry costs (at most) a relaxed atomic load per site*, gated by
+//! `benches/obs_overhead.rs` at ≤ 2% train-step overhead.
+//!
+//! * [`metrics`] — always-on lock-sparse counters/gauges/histograms with
+//!   static `mutransfer_`-prefixed names (the `metric-names` lint),
+//!   rendered as Prometheus text at `GET /metrics` and JSON at
+//!   `GET /debug/metrics`;
+//! * [`trace`] — opt-in hierarchical spans dumped as Chrome trace-event
+//!   JSON (`train --trace-out`, `serve --trace-dir`);
+//! * [`coords`] — opt-in live μ-coordinate telemetry: width-normalized
+//!   per-tensor scale stats sampled during training, emitted as
+//!   `Event::CoordStats`, served at `GET /jobs/:id/metrics`.
+
+pub mod coords;
+pub mod metrics;
+pub mod trace;

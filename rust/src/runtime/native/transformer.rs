@@ -141,6 +141,7 @@ impl TfmSession {
         scale: f32,
         want_alog: bool,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let _sp = crate::obs::trace::span("attn_fwd");
         let c = &self.cfg;
         let (bsz, s, d, da, nh, dh) = (c.batch, c.seq, c.d_model, c.d_attn(), c.n_head, c.d_head);
         let rows = bsz * s;
@@ -204,6 +205,7 @@ impl TfmSession {
         cache: &BlockCache,
         grads: &mut [Vec<f32>],
     ) -> Vec<f32> {
+        let _sp = crate::obs::trace::span("attn_bwd");
         let c = &self.cfg;
         let (bsz, s, d, da, nh, dh) = (c.batch, c.seq, c.d_model, c.d_attn(), c.n_head, c.d_head);
         let rows = bsz * s;

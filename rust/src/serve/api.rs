@@ -9,8 +9,11 @@
 //! | GET    | /jobs/:id/journal     | 200 / 404         | last trial records, NDJSON |
 //! | DELETE | /jobs/:id             | 200 / 404 / 409   | `{"id","state"}`           |
 //! | GET    | /jobs/:id/events      | 200 / 404 (SSE)   | `id:`/`data:` event frames |
+//! | GET    | /jobs/:id/metrics     | 200 / 404         | μ-coordinate samples       |
 //! | GET    | /hp?width=&depth=&batch= | 200 / 400 / 404 | best transferred HPs     |
-//! | GET    | /healthz              | 200               | `{"ok":true}`              |
+//! | GET    | /healthz              | 200 / 503         | uptime, job counts, slots  |
+//! | GET    | /metrics              | 200               | Prometheus text exposition |
+//! | GET    | /debug/metrics        | 200               | same registry, as JSON     |
 //!
 //! `GET /hp` query params are each optional and echoed back (μP transfer
 //! makes the answer shape-independent); an *unparseable* value
@@ -28,14 +31,42 @@
 //! string escaping, surrogate pairs included — `util::json` round-trip
 //! tests pin it).  Unknown paths are 404, known paths with the wrong
 //! method 405.
+//!
+//! Every dispatch records a per-route request count and latency
+//! histogram into [`crate::obs::metrics`]; `GET /healthz` answers 503
+//! when an executor thread has died (the registry would accept jobs it
+//! can never run).
 
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::daemon::{CancelOutcome, JobSpec, Registry};
 use super::http::{self, error_json, Request};
+use crate::obs::metrics;
 use crate::util::json::{self, jstr, Json};
+
+/// Classify a request onto one of the static route labels in
+/// [`metrics::ROUTES`].  Unknown shapes map to `other` — never a
+/// dynamically built label, so the metric cardinality stays fixed (the
+/// `metric-names` lint enforces the same rule at record sites).
+fn route_idx(method: &str, segs: &[&str]) -> usize {
+    match (method, segs) {
+        (_, ["healthz"]) => metrics::ROUTE_HEALTHZ,
+        (_, ["metrics"]) => metrics::ROUTE_METRICS,
+        (_, ["debug", "metrics"]) => metrics::ROUTE_DEBUG_METRICS,
+        ("POST", ["jobs"]) => metrics::ROUTE_JOBS_CREATE,
+        (_, ["jobs"]) => metrics::ROUTE_JOBS_LIST,
+        ("DELETE", ["jobs", _]) => metrics::ROUTE_JOB_DELETE,
+        (_, ["jobs", _]) => metrics::ROUTE_JOB_GET,
+        (_, ["jobs", _, "results"]) => metrics::ROUTE_JOB_RESULTS,
+        (_, ["jobs", _, "journal"]) => metrics::ROUTE_JOB_JOURNAL,
+        (_, ["jobs", _, "events"]) => metrics::ROUTE_JOB_EVENTS,
+        (_, ["jobs", _, "metrics"]) => metrics::ROUTE_JOB_METRICS,
+        (_, ["hp"]) => metrics::ROUTE_HP,
+        _ => metrics::ROUTE_OTHER,
+    }
+}
 
 /// Dispatch one request; returns whether the connection may be reused
 /// (SSE streams and malformed exchanges always close).  `stop` is the
@@ -48,19 +79,30 @@ pub fn handle(
     stop: &AtomicBool,
 ) -> bool {
     let keep = req.keep_alive();
+    let t0 = Instant::now();
+    let _sp = crate::obs::trace::span("http_handle");
     let segs: Vec<&str> = req
         .path
         .trim_matches('/')
         .split('/')
         .filter(|s| !s.is_empty())
         .collect();
+    let idx = route_idx(req.method.as_str(), segs.as_slice());
     let ok = match (req.method.as_str(), segs.as_slice()) {
-        ("GET", ["healthz"]) => http::respond_json(
+        ("GET", ["healthz"]) => {
+            let (body, healthy) = reg.health();
+            http::respond_json(w, if healthy { 200 } else { 503 }, &body, keep)
+        }
+        ("GET", ["metrics"]) => http::respond(
             w,
             200,
-            &Json::from_pairs(vec![("ok", Json::Bool(true))]),
+            "text/plain; version=0.0.4",
+            metrics::render_prometheus().as_bytes(),
             keep,
         ),
+        ("GET", ["debug", "metrics"]) => {
+            http::respond_json(w, 200, &metrics::render_json(), keep)
+        }
         ("POST", ["jobs"]) => match json::parse(&req.body)
             .map_err(|e| e.to_string())
             .and_then(|j| JobSpec::from_json(&j).map_err(|e| format!("{e:#}")))
@@ -185,7 +227,22 @@ pub fn handle(
             }
             Err(e) => http::respond_json(w, 500, &error_json(500, &format!("{e:#}")), keep),
         },
-        ("GET", ["jobs", id, "events"]) => return stream_events(reg, req, id, w, stop),
+        ("GET", ["jobs", id, "events"]) => {
+            let r = stream_events(reg, req, id, w, stop);
+            // SSE latency is the stream's lifetime — recorded under its
+            // own route label so it cannot skew the request histograms.
+            metrics::route(idx).record(t0);
+            return r;
+        }
+        ("GET", ["jobs", id, "metrics"]) => match reg.coord_metrics(id) {
+            Some(samples) => http::respond_json(
+                w,
+                200,
+                &Json::from_pairs(vec![("id", jstr(id)), ("samples", samples)]),
+                keep,
+            ),
+            None => http::respond_json(w, 404, &error_json(404, "no such job"), keep),
+        },
         ("GET", ["hp"]) => {
             // strict parse: a present-but-malformed dimension is a 400.
             // The old `.and_then(|v| v.parse().ok())` silently collapsed
@@ -217,12 +274,14 @@ pub fn handle(
         }
         // known resources, wrong method
         (_, ["jobs"]) | (_, ["jobs", _]) | (_, ["jobs", _, "results"])
-        | (_, ["jobs", _, "journal"]) | (_, ["jobs", _, "events"]) | (_, ["hp"])
-        | (_, ["healthz"]) => {
+        | (_, ["jobs", _, "journal"]) | (_, ["jobs", _, "events"])
+        | (_, ["jobs", _, "metrics"]) | (_, ["hp"]) | (_, ["healthz"])
+        | (_, ["metrics"]) | (_, ["debug", "metrics"]) => {
             http::respond_json(w, 405, &error_json(405, "method not allowed"), keep)
         }
         _ => http::respond_json(w, 404, &error_json(404, "no such route"), keep),
     };
+    metrics::route(idx).record(t0);
     ok.is_ok() && keep
 }
 
@@ -254,6 +313,7 @@ fn stream_events(
     if http::sse_headers(w).is_err() {
         return false;
     }
+    let _sub = metrics::SSE_SUBSCRIBERS.guard();
     loop {
         match rx.recv_timeout(Duration::from_millis(500)) {
             Ok((seq, ev)) => {

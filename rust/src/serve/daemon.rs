@@ -35,6 +35,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::model::BaseShape;
 use crate::mup::{Optimizer, Scheme};
+use crate::obs::coords::{self, CoordRing};
+use crate::obs::metrics;
 use crate::runtime::Runtime;
 use crate::serve::events::{Event, EventBus, EventSink, StderrSink};
 use crate::sweep::Sweep;
@@ -444,9 +446,17 @@ impl ResultCache {
         let mut c = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         c.clock += 1;
         let now = c.clock;
-        let e = c.entries.get_mut(id)?;
-        e.tick = now;
-        Some(e.bytes.clone())
+        match c.entries.get_mut(id) {
+            Some(e) => {
+                e.tick = now;
+                metrics::CACHE_HITS.inc();
+                Some(e.bytes.clone())
+            }
+            None => {
+                metrics::CACHE_MISSES.inc();
+                None
+            }
+        }
     }
 
     fn put(&self, id: &str, bytes: Arc<Vec<u8>>) {
@@ -470,8 +480,10 @@ impl ResultCache {
             let Some(k) = victim else { break };
             if let Some(e) = c.entries.remove(&k) {
                 c.total -= e.bytes.len();
+                metrics::CACHE_EVICTIONS.inc();
             }
         }
+        metrics::CACHE_BYTES.set(c.total as i64);
     }
 
     fn invalidate(&self, id: &str) {
@@ -479,6 +491,7 @@ impl ResultCache {
         if let Some(e) = c.entries.remove(id) {
             c.total -= e.bytes.len();
         }
+        metrics::CACHE_BYTES.set(c.total as i64);
     }
 }
 
@@ -491,6 +504,17 @@ pub struct Registry {
     inner: Mutex<RegInner>,
     work: Condvar,
     cache: ResultCache,
+    /// daemon start time — `GET /healthz` uptime
+    started: Instant,
+    /// executor slots the daemon spawned / still alive: `healthz` answers
+    /// 503 when `live < expected` (the registry would accept jobs it can
+    /// never run).  Bare registries (tests, CLI) leave both at 0.
+    exec_expected: AtomicUsize,
+    exec_live: AtomicUsize,
+    /// per-live-job ring of μ-coordinate samples ([`coords::RING_CAP`]);
+    /// drained to `coords.json` at `finish` so `GET /jobs/:id/metrics`
+    /// answers for terminal jobs too
+    coords: Mutex<BTreeMap<String, CoordRing>>,
 }
 
 impl Registry {
@@ -578,6 +602,10 @@ impl Registry {
             inner: Mutex::new(RegInner { jobs, queue, next_id }),
             work: Condvar::new(),
             cache: ResultCache::new(cache_bytes),
+            started: Instant::now(),
+            exec_expected: AtomicUsize::new(0),
+            exec_live: AtomicUsize::new(0),
+            coords: Mutex::new(BTreeMap::new()),
         }))
     }
 
@@ -644,6 +672,7 @@ impl Registry {
             );
             inner.queue.push_back(id.clone());
         }
+        metrics::JOBS_SUBMITTED.inc();
         self.work.notify_all();
         Ok(id)
     }
@@ -699,6 +728,15 @@ impl Registry {
             st.set("error", jstr(e));
         }
         write_atomic(&dir.join("state.json"), st.to_string().as_bytes())?;
+        // drain the live coord ring to disk: telemetry is best-effort, so
+        // a failed write must not fail the job's terminal transition
+        let ring = {
+            let mut m = self.coords.lock().unwrap_or_else(|e| e.into_inner());
+            m.remove(id)
+        };
+        if let Some(r) = ring {
+            let _ = write_atomic(&dir.join("coords.json"), r.to_json().to_string().as_bytes());
+        }
         let mut inner = self.lock();
         if let Some(entry) = inner.jobs.get_mut(id) {
             entry.state = state;
@@ -745,6 +783,10 @@ impl Registry {
                 // errors, the cache must not keep serving a job the
                 // registry no longer knows
                 self.cache.invalidate(id);
+                self.coords
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner())
+                    .remove(id);
                 std::fs::remove_dir_all(self.job_dir(id))
                     .with_context(|| format!("removing job dir for {id}"))?;
                 Ok(CancelOutcome::Deleted)
@@ -801,6 +843,78 @@ impl Registry {
 
     pub fn bus(&self, id: &str) -> Option<Arc<EventBus>> {
         self.lock().jobs.get(id).map(|e| e.bus.clone())
+    }
+
+    /// `GET /healthz` body + verdict.  Unhealthy (503) iff executor
+    /// threads have died: `live < expected` means queued jobs may wait
+    /// forever, which a load balancer must see.  Job counts come from the
+    /// same lock every other view takes; gauges are read lock-free.
+    pub fn health(&self) -> (Json, bool) {
+        let (queued, running, terminal) = {
+            let inner = self.lock();
+            let mut q = 0usize;
+            let mut r = 0usize;
+            let mut t = 0usize;
+            for e in inner.jobs.values() {
+                match e.state {
+                    JobState::Queued => q += 1,
+                    JobState::Running => r += 1,
+                    _ => t += 1,
+                }
+            }
+            (q, r, t)
+        };
+        let expected = self.exec_expected.load(Ordering::SeqCst);
+        let live = self.exec_live.load(Ordering::SeqCst);
+        let healthy = live >= expected;
+        let body = Json::from_pairs(vec![
+            ("ok", Json::Bool(healthy)),
+            ("version", jstr(env!("CARGO_PKG_VERSION"))),
+            ("uptime_secs", jnum(self.started.elapsed().as_secs() as f64)),
+            (
+                "jobs",
+                Json::from_pairs(vec![
+                    ("queued", jnum(queued as f64)),
+                    ("running", jnum(running as f64)),
+                    ("terminal", jnum(terminal as f64)),
+                ]),
+            ),
+            (
+                "exec",
+                Json::from_pairs(vec![
+                    ("expected", jnum(expected as f64)),
+                    ("live", jnum(live as f64)),
+                    ("busy", jnum(metrics::EXEC_SLOTS_BUSY.get() as f64)),
+                ]),
+            ),
+        ]);
+        (body, healthy)
+    }
+
+    /// Ring-buffer one μ-coordinate sample for a live job (called by the
+    /// executor's [`CoordCapture`] sink).
+    pub fn record_coords(&self, id: &str, sample: Json) {
+        let mut m = self.coords.lock().unwrap_or_else(|e| e.into_inner());
+        m.entry(id.to_string()).or_default().push(sample);
+    }
+
+    /// `GET /jobs/:id/metrics`: the live ring when the job is running,
+    /// else the `coords.json` persisted at finish.  `None` = unknown job;
+    /// a known job with no telemetry answers an empty array, not a 404 —
+    /// "no samples yet" and "no such job" are different facts.
+    pub fn coord_metrics(&self, id: &str) -> Option<Json> {
+        {
+            let m = self.coords.lock().unwrap_or_else(|e| e.into_inner());
+            if let Some(r) = m.get(id) {
+                if !r.is_empty() {
+                    return Some(r.to_json());
+                }
+            }
+        }
+        self.state(id)?;
+        let text = std::fs::read_to_string(self.job_dir(id).join("coords.json"))
+            .unwrap_or_default();
+        Some(json::parse(&text).unwrap_or(Json::Arr(Vec::new())))
     }
 
     /// Raw `results.json` bytes for a `done` job (`None` = not done yet
@@ -901,6 +1015,45 @@ fn repair_torn_first_append(path: &Path) {
     }
 }
 
+/// Executor-side sink wrapper: forwards every event to the job's bus and
+/// additionally ring-buffers `CoordStats` samples in the registry, so
+/// `GET /jobs/:id/metrics` answers from memory while the job is live.
+/// Warning counting happens in the wrapped sink (`count_event`); this
+/// wrapper must never count, or forwarded warnings would double.
+struct CoordCapture {
+    id: String,
+    reg: Arc<Registry>,
+    inner: Arc<dyn EventSink>,
+}
+
+impl EventSink for CoordCapture {
+    fn emit(&self, ev: &Event) {
+        if let Event::CoordStats { step, groups, .. } = ev {
+            let gs: Vec<coords::GroupStat> = groups
+                .iter()
+                .map(|(name, w_rms, upd_rms)| coords::GroupStat {
+                    name: name.clone(),
+                    w_rms: *w_rms,
+                    upd_rms: *upd_rms,
+                })
+                .collect();
+            self.reg.record_coords(&self.id, coords::sample_json(*step, &gs));
+        }
+        self.inner.emit(ev);
+    }
+}
+
+/// Decrements the registry's live-executor count when an executor thread
+/// exits — normally *or* by unwind, so a panicked slot flips `healthz`
+/// to 503 instead of leaving a zombie-healthy daemon.
+struct ExecLive(Arc<Registry>);
+
+impl Drop for ExecLive {
+    fn drop(&mut self) {
+        self.0.exec_live.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
 /// Execute one job through the existing sweep/transfer machinery, with
 /// the job's event bus as the sink.  Pure function of (spec, job dir):
 /// results are the canonical [`crate::transfer::TransferOutcome::to_json`]
@@ -996,6 +1149,7 @@ impl ConnPool {
     fn release(&self, conn: Conn) {
         drop(conn);
         self.active.fetch_sub(1, Ordering::SeqCst);
+        metrics::HTTP_OPEN_CONNS.dec();
     }
 }
 
@@ -1177,14 +1331,24 @@ impl Daemon {
             cfg.worker_budget
         };
         let budget = pool::FairBudget::new(budget_total);
+        // live μ-coordinate telemetry is on for every daemon-run job
+        // (offline CLI runs stay opt-in, keeping their output byte-stable)
+        coords::set_enabled(true);
+        let slots = cfg.exec_slots.max(1);
+        registry.exec_expected.store(slots, Ordering::SeqCst);
+        metrics::EXEC_SLOTS_TOTAL.set(slots as i64);
         let mut executors = Vec::new();
-        for slot in 0..cfg.exec_slots.max(1) {
+        for slot in 0..slots {
             let reg = registry.clone();
             let stop = stop.clone();
             let artifacts = artifacts.clone();
             let budget = budget.clone();
             let log = log.clone();
+            reg.exec_live.fetch_add(1, Ordering::SeqCst);
             executors.push(std::thread::spawn(move || {
+                // counted live before spawn (not inside the thread) so a
+                // healthz probe racing startup never sees live < expected
+                let _live = ExecLive(reg.clone());
                 // each slot owns its Runtime: backends need not be Sync.
                 // Daemon::start already validated the artifacts path; if
                 // it became unloadable since, say so instead of degrading
@@ -1208,8 +1372,15 @@ impl Daemon {
                         Some(b) => b,
                         None => Arc::new(crate::serve::events::NullSink),
                     };
+                    let bus: Arc<dyn EventSink> = Arc::new(CoordCapture {
+                        id: id.clone(),
+                        reg: reg.clone(),
+                        inner: bus,
+                    });
                     let lease = Arc::new(budget.lease());
+                    let busy = metrics::EXEC_SLOTS_BUSY.guard();
                     let outcome = run_job(&rt, &dir, &spec, bus, Some(lease));
+                    drop(busy);
                     match &outcome {
                         Ok(_) => log.emit(&Event::server_log(format!("[serve] job {id} done"))),
                         Err(e) => log.emit(&Event::server_log(format!(
@@ -1245,6 +1416,7 @@ impl Daemon {
                 if acc_pool.active.load(Ordering::SeqCst) >= acc_pool.max_conns {
                     // full house: a one-line 503 + close, never a new
                     // thread and never a silent drop
+                    metrics::HTTP_SHEDS.inc();
                     let mut s = stream;
                     let _ = crate::serve::http::respond_overload(&mut s);
                     continue;
@@ -1252,6 +1424,7 @@ impl Daemon {
                 stream.set_nodelay(true).ok();
                 let Ok(read_half) = stream.try_clone() else { continue };
                 acc_pool.active.fetch_add(1, Ordering::SeqCst);
+                metrics::HTTP_OPEN_CONNS.inc();
                 acc_pool.push(Conn {
                     reader: BufReader::new(read_half),
                     writer: stream,
@@ -1611,6 +1784,57 @@ mod tests {
         assert!(reg.cache.inner.lock().unwrap().entries.is_empty());
         // still served, straight from disk
         assert!(reg.results_bytes(&id, true).is_some());
+    }
+
+    #[test]
+    fn health_counts_jobs_and_bare_registry_is_healthy() {
+        let dir = tmpdir("health");
+        let reg = Registry::open(&dir).unwrap();
+        let (body, healthy) = reg.health();
+        assert!(healthy, "no executors expected => healthy");
+        assert_eq!(body.req("ok"), &Json::Bool(true));
+        assert_eq!(body.req("version").as_str().unwrap(), env!("CARGO_PKG_VERSION"));
+        let a = reg.submit(JobSpec::default()).unwrap();
+        let b = reg.submit(JobSpec::default()).unwrap();
+        reg.finish(&b, Err(anyhow::anyhow!("boom"))).unwrap();
+        let (body, _) = reg.health();
+        let jobs = body.req("jobs");
+        assert_eq!(jobs.req("queued").as_usize().unwrap(), 1);
+        assert_eq!(jobs.req("terminal").as_usize().unwrap(), 1);
+        // a dead executor flips the verdict to 503
+        reg.exec_expected.store(2, Ordering::SeqCst);
+        reg.exec_live.store(1, Ordering::SeqCst);
+        let (body, healthy) = reg.health();
+        assert!(!healthy, "live < expected must be unhealthy");
+        assert_eq!(body.req("exec").req("expected").as_usize().unwrap(), 2);
+        let _ = a;
+    }
+
+    #[test]
+    fn coord_ring_lives_in_memory_then_persists_at_finish() {
+        let dir = tmpdir("coordring");
+        let reg = Registry::open(&dir).unwrap();
+        let id = reg.submit(JobSpec::default()).unwrap();
+        assert_eq!(
+            reg.coord_metrics(&id),
+            Some(Json::Arr(Vec::new())),
+            "known job without samples answers empty, not 404"
+        );
+        assert!(reg.coord_metrics("j999999").is_none(), "unknown job is None");
+        let g = vec![coords::GroupStat { name: "w".into(), w_rms: 0.5, upd_rms: 0.25 }];
+        reg.record_coords(&id, coords::sample_json(0, &g));
+        reg.record_coords(&id, coords::sample_json(8, &g));
+        let live = reg.coord_metrics(&id).unwrap();
+        assert_eq!(live.as_arr().unwrap().len(), 2);
+        reg.finish(&id, Ok(Json::obj())).unwrap();
+        // ring drained to coords.json; the route now answers from disk
+        assert!(reg.job_dir(&id).join("coords.json").exists());
+        let disk = reg.coord_metrics(&id).unwrap();
+        assert_eq!(disk, live, "persisted samples must match the live ring");
+        assert_eq!(
+            disk.as_arr().unwrap()[1].req("step").as_usize().unwrap(),
+            8
+        );
     }
 
     #[test]

@@ -21,6 +21,7 @@
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Mutex;
 
+use crate::obs::metrics;
 use crate::util::json::{jnum, jstr, Json};
 
 /// One progress event from the tuning stack.  `key` fields name the trial
@@ -60,6 +61,15 @@ pub enum Event {
     /// bus.  [`StderrSink`] prints `msg` verbatim so daemon stderr stays
     /// byte-identical; bus subscribers see it as a typed event.
     ServerLog { msg: String },
+    /// live μ-coordinate telemetry sample (DESIGN.md §12): per-tensor
+    /// `(name, w_rms, upd_rms)` where `upd_rms` is RMS(Δparam)·√fan_in —
+    /// the width-normalized coordcheck signal, sampled every
+    /// [`crate::obs::coords::SAMPLE_EVERY`] steps while a trial trains
+    CoordStats {
+        key: String,
+        step: usize,
+        groups: Vec<(String, f64, f64)>,
+    },
 }
 
 impl Event {
@@ -131,6 +141,26 @@ impl Event {
                 ("type", jstr("server_log")),
                 ("msg", jstr(msg)),
             ]),
+            Event::CoordStats { key, step, groups } => Json::from_pairs(vec![
+                ("type", jstr("coord_stats")),
+                ("key", jstr(key)),
+                ("step", jnum(*step as f64)),
+                (
+                    "groups",
+                    Json::Arr(
+                        groups
+                            .iter()
+                            .map(|(name, w, u)| {
+                                Json::from_pairs(vec![
+                                    ("name", jstr(name)),
+                                    ("w_rms", jnum(*w)),
+                                    ("upd_rms", jnum(*u)),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+            ]),
         }
     }
 
@@ -173,6 +203,25 @@ impl Event {
                 msg: s("msg")?,
             }),
             "server_log" => Some(Event::ServerLog { msg: s("msg")? }),
+            "coord_stats" => Some(Event::CoordStats {
+                key: s("key")?,
+                step: u("step"),
+                groups: j
+                    .get("groups")
+                    .and_then(|g| g.as_arr())
+                    .map(|arr| {
+                        arr.iter()
+                            .filter_map(|g| {
+                                Some((
+                                    g.get("name")?.as_str()?.to_string(),
+                                    g.get("w_rms").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
+                                    g.get("upd_rms").and_then(|v| v.as_f64()).unwrap_or(f64::NAN),
+                                ))
+                            })
+                            .collect()
+                    })
+                    .unwrap_or_default(),
+            }),
             _ => None,
         }
     }
@@ -197,7 +246,10 @@ impl StderrSink {
         StderrSink { progress }
     }
 
-    /// Warnings only — what the bare train driver used to print.
+    /// Warnings only — what the bare train driver used to print.  Even a
+    /// quiet sink still counts every warning into the metrics registry
+    /// (`mutransfer_warnings_total`), so anomalies that never reach a
+    /// terminal remain visible at `GET /metrics`.
     pub fn quiet() -> StderrSink {
         StderrSink { progress: false }
     }
@@ -205,6 +257,7 @@ impl StderrSink {
 
 impl EventSink for StderrSink {
     fn emit(&self, ev: &Event) {
+        count_event(ev);
         match ev {
             Event::Warning { msg, .. } => eprintln!("warning: {msg}"),
             // daemon ops lines printed unconditionally before the bus
@@ -227,11 +280,25 @@ impl EventSink for StderrSink {
     }
 }
 
-/// Swallow everything (benches that only want the numbers).
+/// Every sink — including the quiet/null ones — feeds the metrics
+/// registry, so a swallowed `Event::Warning` still shows up in
+/// `mutransfer_warnings_total` at `GET /metrics` even when no sink
+/// prints or retains it.  (The bus counts via its own `emit`; wrapper
+/// sinks that *forward* to another sink must not call this again.)
+fn count_event(ev: &Event) {
+    if let Event::Warning { .. } = ev {
+        metrics::WARNINGS.inc();
+    }
+}
+
+/// Swallow everything (benches that only want the numbers) — except the
+/// warning count, which no sink may drop.
 pub struct NullSink;
 
 impl EventSink for NullSink {
-    fn emit(&self, _: &Event) {}
+    fn emit(&self, ev: &Event) {
+        count_event(ev);
+    }
 }
 
 /// Capture events in memory — unit tests and the bench harness.
@@ -328,6 +395,8 @@ impl EventBus {
 
 impl EventSink for EventBus {
     fn emit(&self, ev: &Event) {
+        count_event(ev);
+        metrics::BUS_EVENTS.inc();
         let mut b = self.inner.lock().unwrap_or_else(|e| e.into_inner());
         if b.closed {
             return;
@@ -371,6 +440,14 @@ mod tests {
             Event::SweepDone { total: 12 },
             Event::warning("k", "ignoring checkpoint /x: bad magic"),
             Event::server_log("[serve] job j-1 started on slot 0"),
+            Event::CoordStats {
+                key: "k".into(),
+                step: 16,
+                groups: vec![
+                    ("block0.wq".into(), 0.5, 0.25),
+                    ("unembed".into(), 1.0, 0.125),
+                ],
+            },
         ];
         for c in cases {
             let j = crate::util::json::parse(&c.to_json().to_string()).unwrap();
@@ -417,6 +494,22 @@ mod tests {
         let rx2 = bus.subscribe(0);
         assert_eq!(rx2.recv().unwrap(), (1, ev("a")));
         assert!(rx2.recv().is_err());
+    }
+
+    #[test]
+    fn quiet_and_null_sinks_still_count_warnings() {
+        // Delta-based: the registry is process-global and other tests may
+        // emit warnings concurrently, so assert growth, not equality.
+        let before = metrics::WARNINGS.get();
+        NullSink.emit(&Event::warning("k", "dropped on the floor"));
+        let bus = EventBus::new();
+        bus.emit(&Event::warning("k", "onto the bus"));
+        // progress events do not count as warnings
+        NullSink.emit(&ev("not-a-warning"));
+        assert!(
+            metrics::WARNINGS.get() >= before + 2,
+            "quiet sinks must count warnings into mutransfer_warnings_total"
+        );
     }
 
     #[test]

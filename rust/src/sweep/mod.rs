@@ -81,6 +81,8 @@ fn ckpt_file_name(id: &str) -> String {
 /// crash can tear at most the final line, which `with_journal` recovers
 /// from by truncating back to the last complete record.
 fn append_line(path: &Path, line: &str) -> Result<()> {
+    let _sp = crate::obs::trace::span("journal_fsync");
+    let t0 = std::time::Instant::now();
     let mut f = std::fs::OpenOptions::new()
         .create(true)
         .append(true)
@@ -89,6 +91,7 @@ fn append_line(path: &Path, line: &str) -> Result<()> {
     bytes.push(b'\n');
     f.write_all(&bytes)?;
     f.sync_data()?;
+    crate::obs::metrics::JOURNAL_FSYNC.observe_since(t0);
     Ok(())
 }
 
@@ -627,12 +630,15 @@ impl<'rt> Sweep<'rt> {
                         // truncates away on resume.
                         let mut guard = journal.lock().unwrap_or_else(|e| e.into_inner());
                         if let Some(f) = guard.as_mut() {
+                            let _sp = crate::obs::trace::span("journal_fsync");
+                            let jt0 = std::time::Instant::now();
                             let mut bytes = result.to_json().to_string().into_bytes();
                             bytes.push(b'\n');
                             f.write_all(&bytes)
                                 .with_context(|| format!("journaling job {}", result.key))?;
                             f.sync_data()
                                 .with_context(|| format!("syncing journal for {}", result.key))?;
+                            crate::obs::metrics::JOURNAL_FSYNC.observe_since(jt0);
                         }
                     }
                     let k = finished.fetch_add(1, Ordering::SeqCst) + 1;

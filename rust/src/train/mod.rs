@@ -14,6 +14,7 @@ use crate::data::{DataSource, Split};
 use crate::init;
 use crate::model::BaseShape;
 use crate::mup::{HyperParams, Optimizer, Parametrization, ScaleAxes};
+use crate::obs::{coords, metrics, trace};
 use crate::runtime::session::{validate_init, StepInputs};
 use crate::runtime::{BackendSession, Runtime, SessionCore, Variant};
 use crate::serve::events::{Event, EventSink, StderrSink};
@@ -514,7 +515,34 @@ fn drive<S: BackendSession + ?Sized>(
             hp_vec: *hp_v,
         };
         let batch = data.batch(Split::Train, step);
-        let loss = core.step(&batch, &inputs)? as f64;
+        // μ-coordinate telemetry (opt-in, see obs::coords): read-only
+        // param snapshots around the step — the trajectory stays bitwise
+        // identical with sampling on or off
+        let coord_before = if coords::sample_step(step) {
+            Some(snapshot_params(core))
+        } else {
+            None
+        };
+        let t_step = std::time::Instant::now();
+        let loss = {
+            let _sp = trace::span("train_step");
+            core.step(&batch, &inputs)? as f64
+        };
+        metrics::STEP_LATENCY.observe_since(t_step);
+        metrics::TRAIN_STEPS.inc();
+        if let Some(before) = coord_before {
+            let after = snapshot_params(core);
+            let groups = coords::group_stats(&core.variant.params, &before, &after);
+            metrics::COORD_SAMPLES.inc();
+            sink.emit(&Event::CoordStats {
+                key: key.to_string(),
+                step,
+                groups: groups
+                    .iter()
+                    .map(|g| (g.name.clone(), g.w_rms, g.upd_rms))
+                    .collect(),
+            });
+        }
         result.flops += flops_per_step;
         result.train_losses.push(loss);
         result.steps_done = step + 1;
@@ -578,6 +606,15 @@ fn drive<S: BackendSession + ?Sized>(
     }
     result.wall_secs = t0.elapsed().as_secs_f64();
     Ok(result)
+}
+
+/// Host-side copy of every parameter tensor (coord telemetry).  A tensor
+/// the backend declines comes back empty, and `coords::group_stats` drops
+/// it rather than failing the step.
+fn snapshot_params<S: BackendSession + ?Sized>(core: &SessionCore<S>) -> Vec<Vec<f32>> {
+    (0..core.variant.params.len())
+        .map(|i| core.param(i).unwrap_or_default())
+        .collect()
 }
 
 fn eval<S: BackendSession + ?Sized>(

@@ -18,6 +18,8 @@ use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::obs::metrics;
+
 /// Test-only schedule perturbation: seeded yield/sleep injection at the
 /// interleaving-sensitive points of [`FairBudget`] (acquire entry, grant,
 /// permit/lease release).  Production code pays one relaxed atomic load
@@ -248,6 +250,7 @@ impl Drop for WaitGuard<'_> {
             h.1 = h.1.saturating_sub(1);
         }
         drop(st);
+        metrics::BUDGET_WAITING.dec();
         self.budget.freed.notify_all();
     }
 }
@@ -271,6 +274,7 @@ impl BudgetLease {
         if let Some(h) = st.holders.get_mut(&self.id) {
             h.1 += 1;
             wait.armed = true;
+            metrics::BUDGET_WAITING.inc();
         }
         loop {
             let holders = st.holders.len().max(1);
@@ -282,9 +286,13 @@ impl BudgetLease {
                 .any(|(id, (_, w))| *id != self.id && *w > 0);
             if st.used_total < b.total && (mine < share || !others_waiting) {
                 st.used_total += 1;
+                metrics::BUDGET_OUTSTANDING.inc();
                 if let Some(h) = st.holders.get_mut(&self.id) {
                     h.0 += 1;
                     h.1 = h.1.saturating_sub(1);
+                }
+                if wait.armed {
+                    metrics::BUDGET_WAITING.dec();
                 }
                 wait.armed = false;
                 drop(st);
@@ -329,6 +337,7 @@ impl Drop for BudgetPermit {
         perturb::point("permit-drop");
         let mut st = self.budget.inner.lock().unwrap_or_else(|e| e.into_inner());
         st.used_total = st.used_total.saturating_sub(1);
+        metrics::BUDGET_OUTSTANDING.dec();
         if let Some(h) = st.holders.get_mut(&self.holder) {
             h.0 = h.0.saturating_sub(1);
         }

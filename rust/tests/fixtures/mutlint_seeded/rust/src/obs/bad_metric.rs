@@ -1,0 +1,4 @@
+//! Seeded mutlint fixture (never compiled): a metric registered outside
+//! the mutransfer_ namespace.
+
+pub static REQS: Counter = Counter::new("requests_total", "count");

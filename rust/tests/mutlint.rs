@@ -48,7 +48,7 @@ fn tree_runs_clean_including_mutlint_itself() {
 fn seeded_fixture_produces_exactly_the_expected_findings() {
     let root = repo_root().join("rust/tests/fixtures/mutlint_seeded");
     let files = load_tree(&root).expect("reading the fixture tree");
-    assert_eq!(files.len(), 5, "fixture tree layout changed");
+    assert_eq!(files.len(), 6, "fixture tree layout changed");
 
     let findings = passes::run_all(&files);
     let got: Vec<(String, u32, &str, bool)> = findings
@@ -60,10 +60,12 @@ fn seeded_fixture_produces_exactly_the_expected_findings() {
     // reason-less one in sweep/bad_suppress.rs failing to suppress
     let expect: Vec<(String, u32, &str, bool)> = vec![
         ("rust/src/mup/rules.rs".into(), 7, "mup-coverage", false),
+        ("rust/src/obs/bad_metric.rs".into(), 4, "metric-names", false),
         ("rust/src/serve/bad.rs".into(), 5, "atomic-write", false),
         ("rust/src/serve/bad.rs".into(), 6, "bus-only-output", false),
         ("rust/src/serve/bad.rs".into(), 7, "no-panic-serve", false),
         ("rust/src/serve/bad.rs".into(), 9, "no-panic-serve", true),
+        ("rust/src/serve/bad.rs".into(), 14, "metric-names", false),
         ("rust/src/sweep/bad_suppress.rs".into(), 4, "suppression", false),
         ("rust/src/sweep/bad_suppress.rs".into(), 5, "nan-cmp", false),
         ("rust/src/train/bad.rs".into(), 4, "nan-cmp", false),

@@ -1,0 +1,157 @@
+//! Observability acceptance tests (DESIGN.md §12):
+//!
+//! 1. **Coordinate telemetry has teeth** — the live `upd_rms · √fan_in`
+//!    signal emitted as `Event::CoordStats` reproduces the paper's
+//!    coord-check verdict from inside an ordinary training run: under SP
+//!    with a global learning rate the scale grows with width (exponent
+//!    ≈ +0.5), under μP it stays flat.  This is the "silent transfer
+//!    failure becomes a visible dashboard line" story.
+//! 2. **The Prometheus page is real** — `render_prometheus()` exposes
+//!    the full static registry (≥ 12 distinct `mutransfer_` series) in
+//!    conformant exposition format.
+//! 3. **Trace spans cover the train path** — a traced run dumps Chrome
+//!    trace-event JSON containing the `train_step` and `gemm` spans.
+
+use mutransfer::data::source_for;
+use mutransfer::model::BaseShape;
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization, Scheme};
+use mutransfer::obs::{coords, metrics, trace};
+use mutransfer::runtime::Runtime;
+use mutransfer::serve::events::CollectSink;
+use mutransfer::serve::Event;
+use mutransfer::stats;
+use mutransfer::train::{run_ckpt_with, RunSpec};
+
+const WIDTHS: [usize; 2] = [32, 128];
+const STEPS: usize = 9; // samples at step 0 and step 8 (SAMPLE_EVERY = 8)
+
+/// Train one width for a few steps with telemetry on and return the
+/// scale signal of the *last* CoordStats sample.
+fn last_scale_signal(rt: &Runtime, scheme: Scheme, width: usize) -> f64 {
+    let par = Parametrization::new(scheme, Optimizer::Adam);
+    let base = match scheme {
+        Scheme::Sp => BaseShape::SameAsTarget,
+        _ => BaseShape::Tfm { d_model: 32, n_head: 4, d_head: 8, d_ffn: 128 },
+    };
+    let hp = HyperParams { lr: 2f64.powi(-7), ..HyperParams::default() };
+    let variant = format!("tfm_post_w{width}_d2");
+    let mut spec = RunSpec::new(&variant, par, hp, base);
+    spec.steps = STEPS;
+    spec.seed = 3;
+    let v = rt.manifest().get(&variant).unwrap();
+    let data = source_for(v, 11);
+    let sink = CollectSink::default();
+    coords::set_enabled(true);
+    run_ckpt_with(rt, &spec, data.as_ref(), None, &sink, &variant).unwrap();
+    let samples: Vec<(usize, Vec<coords::GroupStat>)> = sink
+        .take()
+        .into_iter()
+        .filter_map(|ev| match ev {
+            Event::CoordStats { step, groups, .. } => Some((
+                step,
+                groups
+                    .into_iter()
+                    .map(|(name, w_rms, upd_rms)| coords::GroupStat { name, w_rms, upd_rms })
+                    .collect(),
+            )),
+            _ => None,
+        })
+        .collect();
+    assert_eq!(
+        samples.len(),
+        2,
+        "expected samples at steps 0 and 8 of a {STEPS}-step run: {:?}",
+        samples.iter().map(|(s, _)| *s).collect::<Vec<_>>()
+    );
+    assert_eq!(samples[1].0, 8);
+    assert!(!samples[1].1.is_empty(), "sample carries per-group stats");
+    coords::scale_signal(&samples[1].1)
+}
+
+/// SP's normalized update scale grows ≈ √width; μP's stays flat.  The
+/// same growth-exponent fit `coordcheck` uses, but fed from the live
+/// telemetry stream an operator would see at `GET /jobs/:id/metrics`.
+#[test]
+fn coord_telemetry_separates_sp_from_mup() {
+    let rt = Runtime::native();
+    let w: Vec<f64> = WIDTHS.iter().map(|&x| x as f64).collect();
+    let sp: Vec<f64> = WIDTHS.iter().map(|&x| last_scale_signal(&rt, Scheme::Sp, x)).collect();
+    let mup: Vec<f64> = WIDTHS.iter().map(|&x| last_scale_signal(&rt, Scheme::Mup, x)).collect();
+    assert!(sp.iter().chain(&mup).all(|v| v.is_finite() && *v > 0.0), "sp {sp:?} mup {mup:?}");
+    let e_sp = stats::growth_exponent(&w, &sp);
+    let e_mup = stats::growth_exponent(&w, &mup);
+    assert!(e_sp > 0.2, "SP scale signal must grow with width: exponent {e_sp} ({sp:?})");
+    assert!(e_mup < 0.1, "μP scale signal must stay flat: exponent {e_mup} ({mup:?})");
+}
+
+/// The acceptance bar from ISSUE 9: the /metrics page carries at least
+/// 12 distinct registered series, all in the mutransfer_ namespace.
+#[test]
+fn prometheus_page_serves_the_core_series() {
+    let page = metrics::render_prometheus();
+    let declared: Vec<&str> = page
+        .lines()
+        .filter_map(|l| l.strip_prefix("# TYPE "))
+        .filter_map(|l| l.split(' ').next())
+        .collect();
+    assert!(declared.len() >= 12, "only {} series: {declared:?}", declared.len());
+    assert!(declared.iter().all(|n| n.starts_with("mutransfer_")), "{declared:?}");
+    for must in [
+        "mutransfer_http_sheds_total",
+        "mutransfer_result_cache_hits_total",
+        "mutransfer_warnings_total",
+        "mutransfer_train_steps_total",
+        "mutransfer_exec_slots_busy",
+        "mutransfer_sse_subscribers",
+        "mutransfer_train_step_latency_seconds",
+    ] {
+        assert!(declared.contains(&must), "missing {must}: {declared:?}");
+    }
+}
+
+/// `--trace-out` plumbing end to end minus the CLI: enable, train a few
+/// steps, dump, and find the span taxonomy in the Chrome JSON.  (Other
+/// tests in this binary may add spans concurrently — assertions are
+/// presence-only.)
+#[test]
+fn trace_dump_covers_train_step_and_gemm() {
+    let dir = std::env::temp_dir().join("mutransfer_obs_trace");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+
+    let rt = Runtime::native();
+    let hp = HyperParams { lr: 2f64.powi(-7), ..HyperParams::default() };
+    let mut spec = RunSpec::new(
+        "tfm_post_w32_d2",
+        Parametrization::mup(Optimizer::Adam),
+        hp,
+        BaseShape::SameAsTarget,
+    );
+    spec.steps = 3;
+    spec.seed = 0;
+    let v = rt.manifest().get("tfm_post_w32_d2").unwrap();
+    let data = source_for(v, 7);
+
+    trace::enable();
+    let sink = CollectSink::default();
+    run_ckpt_with(&rt, &spec, data.as_ref(), None, &sink, "traced").unwrap();
+    let n = trace::write_chrome(&path).unwrap();
+    trace::disable();
+    assert!(n >= 3 + 3, "3 train_step spans + their gemms, got {n}");
+
+    let doc = mutransfer::util::json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    let events = doc.get("traceEvents").unwrap().as_arr().unwrap();
+    let names: Vec<&str> = events
+        .iter()
+        .filter_map(|e| e.get("name").and_then(|n| n.as_str()))
+        .collect();
+    for must in ["train_step", "gemm", "attn_fwd", "attn_bwd"] {
+        assert!(names.contains(&must), "span {must} missing from {names:?}");
+    }
+    // nesting metadata present: gemm spans sit below a train_step
+    assert!(events.iter().any(|e| {
+        e.get("name").and_then(|n| n.as_str()) == Some("gemm")
+            && e.get("args").and_then(|a| a.get("depth")).and_then(|d| d.as_f64())
+                .is_some_and(|d| d >= 1.0)
+    }));
+}
