@@ -7,6 +7,7 @@
 use std::time::Instant;
 
 use mutransfer::exp::{self, Scale};
+use mutransfer::report::perf::BenchDoc;
 use mutransfer::report::Reporter;
 use mutransfer::runtime::Runtime;
 
@@ -20,11 +21,16 @@ fn main() -> anyhow::Result<()> {
     // one representative per experiment family (full list: exp::ALL)
     let ids = ["tab8", "fig5", "fig1", "fig3", "fig7", "tab4", "tab12", "fig21"];
     println!("== fig_tables: experiment harness end-to-end (smoke scale) ==");
+    let mut doc = BenchDoc::new("fig_tables");
     for id in ids {
         let t0 = Instant::now();
         exp::run(id, &rt, &rep, &scale)?;
-        println!("{id:<8} {:.2} s", t0.elapsed().as_secs_f64());
+        let secs = t0.elapsed().as_secs_f64();
+        println!("{id:<8} {secs:.2} s");
+        doc.row(&format!("exp_{id}_s"), secs, "s", false);
     }
     println!("all harnesses OK");
+    let p = doc.finish()?;
+    println!("bench json -> {}", p.display());
     Ok(())
 }

@@ -15,6 +15,7 @@ use mutransfer::data::source_for;
 use mutransfer::model::BaseShape;
 use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
 use mutransfer::obs::coords;
+use mutransfer::report::perf::BenchDoc;
 use mutransfer::runtime::Runtime;
 use mutransfer::serve::events::CollectSink;
 use mutransfer::train::{run_ckpt_with, RunSpec};
@@ -71,6 +72,13 @@ fn main() -> anyhow::Result<()> {
         fmt_ns(m_on),
         overhead * 100.0,
     );
+
+    let mut doc = BenchDoc::new("obs_overhead");
+    doc.row("telemetry_off_step_ms", m_off / 1e6, "ms", false)
+        .row("telemetry_on_step_ms", m_on / 1e6, "ms", false)
+        .row("overhead_pct", overhead * 100.0, "pct", false);
+    let p = doc.finish()?;
+    println!("bench json -> {}", p.display());
 
     if overhead > 0.02 && std::env::var_os("OBS_OVERHEAD_NO_ASSERT").is_none() {
         eprintln!(

@@ -11,6 +11,7 @@ use mutransfer::data::{source_for, Split};
 use mutransfer::init;
 use mutransfer::model::BaseShape;
 use mutransfer::mup::{HyperParams, Optimizer, Parametrization, ScaleAxes};
+use mutransfer::report::perf::BenchDoc;
 use mutransfer::runtime::session::StepInputs;
 use mutransfer::runtime::{Runtime, TrainSession};
 use mutransfer::util::bench::{bench_print, fmt_ns};
@@ -76,5 +77,13 @@ fn main() -> anyhow::Result<()> {
         "\ncoordinator share of step (batch gen + full state readback bound): {coord_share:.1}%"
     );
     println!("(the in-step literal marshalling is bounded above by the readback number)");
+
+    let mut doc = BenchDoc::new("runtime_overhead");
+    doc.row("full_step_ms", full.median_ns / 1e6, "ms", false)
+        .row("batch_gen_ms", host.median_ns / 1e6, "ms", false)
+        .row("state_readback_ms", lit.median_ns / 1e6, "ms", false)
+        .row("coord_share_pct", coord_share, "pct", false);
+    let p = doc.finish()?;
+    println!("bench json -> {}", p.display());
     Ok(())
 }

@@ -20,6 +20,7 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use mutransfer::report::perf::BenchDoc;
 use mutransfer::serve::http::{self, Client};
 use mutransfer::serve::{Daemon, Event, JobKind, JobSpec, ServeConfig};
 use mutransfer::stats::percentile;
@@ -36,6 +37,7 @@ fn row(label: &str, value: String) {
 
 fn main() -> anyhow::Result<()> {
     let no_assert = std::env::var("SERVE_THROUGHPUT_NO_ASSERT").is_ok();
+    let mut bdoc = BenchDoc::new("serve_throughput");
     let dir = std::env::temp_dir().join("mutransfer_bench_serve");
     let _ = std::fs::remove_dir_all(&dir);
     std::fs::create_dir_all(&dir)?;
@@ -118,9 +120,12 @@ fn main() -> anyhow::Result<()> {
     let n = lat.len();
     let rps = n as f64 / secs;
     row(&format!("GET /jobs/:id x{CLIENTS} keep-alive"), format!("{rps:.0} req/s"));
+    bdoc.row("get_job_req_per_s", rps, "req/s", true);
     if n > 0 {
         row("  per-request latency p50", fmt_ns(percentile(&lat, 50.0)));
         row("  per-request latency p99", fmt_ns(percentile(&lat, 99.0)));
+        bdoc.row("get_job_latency_p50_us", percentile(&lat, 50.0) / 1e3, "us", false)
+            .row("get_job_latency_p99_us", percentile(&lat, 99.0) / 1e3, "us", false);
     }
     // the control plane must not collapse under the data plane
     if !no_assert {
@@ -169,6 +174,9 @@ fn main() -> anyhow::Result<()> {
     row("registry results read (uncached)", fmt_ns(uncached_ns));
     row("registry results read (cached)", fmt_ns(cached_ns));
     row("  cached speedup", format!("{speedup:.1}x"));
+    bdoc.row("results_read_uncached_us", uncached_ns / 1e3, "us", false)
+        .row("results_read_cached_us", cached_ns / 1e3, "us", false)
+        .row("results_cache_speedup", speedup, "x", true);
     if !no_assert {
         assert!(
             speedup >= 5.0,
@@ -209,7 +217,10 @@ fn main() -> anyhow::Result<()> {
     row("eager parse of results.json", fmt_ns(eager_ns));
     row("lazy extract of best_val_loss", fmt_ns(lazy_ns));
     row("  lazy speedup", format!("{:.1}x", eager_ns / lazy_ns.max(1.0)));
+    bdoc.row("lazy_extract_speedup", eager_ns / lazy_ns.max(1.0), "x", true);
 
     daemon.shutdown();
+    let p = bdoc.finish()?;
+    println!("bench json -> {}", p.display());
     Ok(())
 }

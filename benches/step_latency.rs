@@ -21,6 +21,7 @@ use mutransfer::init;
 use mutransfer::init::rng::det_fill;
 use mutransfer::model::BaseShape;
 use mutransfer::mup::{HyperParams, Optimizer, Parametrization, ScaleAxes};
+use mutransfer::report::perf::BenchDoc;
 use mutransfer::runtime::native::tensor::{self, naive};
 use mutransfer::runtime::session::StepInputs;
 use mutransfer::runtime::{Runtime, TrainSession};
@@ -29,6 +30,7 @@ use mutransfer::util::bench::{bench, bench_print, fmt_ns};
 fn main() -> anyhow::Result<()> {
     let rt = Runtime::new(&mutransfer::artifacts_dir())?;
     let budget = Duration::from_secs(3);
+    let mut doc = BenchDoc::new("step_latency");
 
     println!("== step_latency: blocked vs naive GEMM at train-step shapes ==");
     // rows = batch·seq = 16·32 for every registry transformer; the three
@@ -106,6 +108,7 @@ fn main() -> anyhow::Result<()> {
         let geomean =
             (log_speedups.iter().sum::<f64>() / log_speedups.len() as f64).exp();
         println!("  -> d_model {dm}: geomean kernel speedup {geomean:.2}x (bar: 2.00x)");
+        doc.row(&format!("kernel_geomean_speedup_d{dm}"), geomean, "x", true);
         if geomean < 2.0 {
             below_bar.push((dm, geomean));
         }
@@ -155,6 +158,10 @@ fn main() -> anyhow::Result<()> {
     println!("\nwidth, median_step_ms, effective_gflops");
     for (w, ns, g) in results {
         println!("{w}, {:.2}, {:.2}", ns / 1e6, g);
+        doc.row(&format!("step_ms_w{w}"), ns / 1e6, "ms", false);
+        doc.row(&format!("gflops_w{w}"), g, "gflops", true);
     }
+    let p = doc.finish()?;
+    println!("bench json -> {}", p.display());
     Ok(())
 }

@@ -14,6 +14,7 @@ use std::time::Instant;
 use mutransfer::init::rng::Rng;
 use mutransfer::model::BaseShape;
 use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::report::perf::BenchDoc;
 use mutransfer::runtime::Runtime;
 use mutransfer::sweep::{Job, Sweep};
 use mutransfer::train::RunSpec;
@@ -60,6 +61,7 @@ fn main() -> anyhow::Result<()> {
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     println!("sweep throughput: {} trials, {} cores", js.len(), cores);
 
+    let mut doc = BenchDoc::new("sweep_throughput");
     let mut secs_at = Vec::new();
     for workers in [1usize, 2, 4] {
         // fresh journal per config: every run executes every trial
@@ -71,16 +73,17 @@ fn main() -> anyhow::Result<()> {
             .run(&js)?;
         let secs = t0.elapsed().as_secs_f64();
         assert_eq!(r.len(), js.len());
-        println!(
-            "  workers={workers}: {secs:.2}s -> {:.1} trials/min",
-            js.len() as f64 / secs * 60.0
-        );
+        let tpm = js.len() as f64 / secs * 60.0;
+        println!("  workers={workers}: {secs:.2}s -> {tpm:.1} trials/min");
+        doc.row(&format!("trials_per_min_w{workers}"), tpm, "trials/min", true);
         secs_at.push((workers, secs));
     }
 
     let seq = secs_at[0].1;
     for &(w, secs) in &secs_at[1..] {
-        println!("  speedup at {w} workers: {:.2}x", seq / secs);
+        let sp = seq / secs;
+        println!("  speedup at {w} workers: {sp:.2}x");
+        doc.row(&format!("speedup_w{w}"), sp, "x", true);
     }
     let speedup4 = seq / secs_at[2].1;
     if cores >= 4 {
@@ -91,5 +94,7 @@ fn main() -> anyhow::Result<()> {
     } else {
         println!("  ({cores} cores: skipping the >1.5x @ 4 workers assertion)");
     }
+    let p = doc.finish()?;
+    println!("bench json -> {}", p.display());
     Ok(())
 }

@@ -10,6 +10,7 @@ use std::time::Instant;
 use mutransfer::init::rng::Rng;
 use mutransfer::model::BaseShape;
 use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::report::perf::BenchDoc;
 use mutransfer::report::Reporter;
 use mutransfer::runtime::Runtime;
 use mutransfer::sweep::{Job, Sweep};
@@ -53,15 +54,18 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
+    let mut doc = BenchDoc::new("tuning_throughput");
     let t0 = Instant::now();
     let mut sweep = Sweep::new(&rt).with_journal(&journal)?;
     let r1 = sweep.run(&jobs)?;
     let cold = t0.elapsed().as_secs_f64();
+    let cold_tpm = r1.len() as f64 / cold * 60.0;
     println!(
-        "cold sweep: {} trials x 10 steps in {cold:.2}s -> {:.1} trials/min (w32 proxy)",
+        "cold sweep: {} trials x 10 steps in {cold:.2}s -> {cold_tpm:.1} trials/min (w32 proxy)",
         r1.len(),
-        r1.len() as f64 / cold * 60.0
     );
+    doc.row("cold_sweep_s", cold, "s", false)
+        .row("cold_trials_per_min", cold_tpm, "trials/min", true);
 
     // journal resume: everything cached, should be ~instant
     let t1 = Instant::now();
@@ -71,6 +75,8 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(r1.len(), r2.len());
     println!("journal resume: {warm:.3}s (cold/warm speedup {:.0}x)", cold / warm.max(1e-9));
     assert!(warm < cold / 5.0, "journal resume should be much faster");
+    doc.row("journal_resume_s", warm, "s", false)
+        .row("resume_speedup", cold / warm.max(1e-9), "x", true);
 
     // ---- SHA vs random at equal per-trial final budget -----------------
     // Same 8 log-spaced LR candidates, same 24-step final budget.  Random
@@ -150,5 +156,11 @@ fn main() -> anyhow::Result<()> {
         "SHA must execute strictly fewer train steps ({} vs {rand_steps})",
         sha.total_steps
     );
+    doc.row("random_wall_s", rand_secs, "s", false)
+        .row("sha_wall_s", sha_secs, "s", false)
+        .row("random_train_steps", rand_steps as f64, "steps", false)
+        .row("sha_train_steps", sha.total_steps as f64, "steps", false);
+    let p = doc.finish()?;
+    println!("bench json -> {}", p.display());
     Ok(())
 }

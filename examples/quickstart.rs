@@ -61,6 +61,28 @@
 //! # trace.json is Chrome trace-event format: open chrome://tracing (or
 //! # https://ui.perfetto.dev) to see train_step > gemm/attn span nesting
 //! ```
+//!
+//! # Perf attribution & bench trajectory (profiler, bench-diff) — DESIGN.md §13
+//!
+//! ```text
+//! # where does a step's time go?  Phase shares (gemm / attn / optimizer
+//! # / …) summing to ~100%, per-GEMM-shape achieved GFLOP/s against a
+//! # machine-measured roofline, and a span-FLOPs vs model/flops.rs
+//! # cross-check — as text tables plus a schema-versioned JSON document
+//! mutransfer profile --variant tfm_post_w256 --steps 20
+//!
+//! # the same aggregation inside any training run, or daemon-wide
+//! mutransfer train --variant tfm_post_w64_d2 --steps 60 --profile-out prof.json
+//! curl http://127.0.0.1:7077/debug/profile        # since boot, per exec slot
+//! mutransfer watch --addr 127.0.0.1:7077 --profile $id
+//!
+//! # did this commit make anything slower?  Every bench also writes
+//! # BENCH_<name>.json (BENCH_OUT_DIR, default results/bench/);
+//! # bench-diff exits nonzero when a lower-is-better row regresses >10%
+//! # on the same machine fingerprint
+//! BENCH_OUT_DIR=after cargo bench --bench step_latency
+//! mutransfer bench-diff benches/baseline after
+//! ```
 
 use mutransfer::data::source_for;
 use mutransfer::model::BaseShape;

@@ -39,12 +39,13 @@ fn main() {
     }
 }
 
-const USAGE: &str = "usage: mutransfer <exp|train|transfer|coord-check|list-artifacts|journal-canon|serve|submit|status|results|watch|hp> [flags]
+const USAGE: &str = "usage: mutransfer <exp|train|transfer|coord-check|list-artifacts|journal-canon|serve|submit|status|results|watch|hp|profile|bench-diff> [flags]
   exp <id>|all        --preset ci|paper|smoke [--workers N]
   train               --variant NAME --param sp|mup|umup --lr F --steps N [--base-width W]
                       [--base-depth L --base-batch B]  (depth/batch transfer axes)
                       [--checkpoint FILE --checkpoint-every N]  (auto-resumes from FILE)
                       [--trace-out FILE]  (Chrome trace-event dump of the run's spans)
+                      [--profile-out FILE]  (perf-attribution JSON for the run, §13)
                       [--coords]  (live mu-coordinate telemetry lines on stderr)
   transfer            --proxy NAME --target NAME --base-width W --samples N --steps N --target-steps N [--workers N]
                       [--param sp|mup|umup] [--base-depth L --base-batch B]
@@ -72,8 +73,20 @@ const USAGE: &str = "usage: mutransfer <exp|train|transfer|coord-check|list-arti
                       prints the new job id
   status              --addr A [JOB]     list jobs / show one job
   results             --addr A JOB       print a done job's canonical results JSON
-  watch               --addr A JOB [--coords]  stream a job's events (SSE) to
-                      completion; --coords adds live mu-coordinate scale lines
+  watch               --addr A JOB [--coords] [--profile]  stream a job's events
+                      (SSE) to completion; --coords adds live mu-coordinate scale
+                      lines (replays history past the ring via ?after= paging);
+                      --profile polls /debug/profile for phase-share lines
+  profile             --variant NAME --steps N [--param sp|mup|umup --lr F
+                      --base-width W --out FILE]  run N profiled steps and emit
+                      the perf-attribution report (JSON + aligned tables):
+                      per-phase self-time shares, per-GEMM-shape GFLOP/s vs the
+                      measured roofline, span-FLOPs vs model/flops.rs agreement
+  bench-diff OLD NEW  compare two BENCH_*.json docs (or two directories of
+                      them); exits nonzero when a lower-is-better row regresses
+                      >10% (--threshold PCT; BENCH_DIFF_NO_ASSERT=1 reports
+                      only; machine mismatch is report-only unless
+                      BENCH_DIFF_FORCE=1)
   hp                  --addr A [--width W --depth L --batch B]  best transferred
                       HPs from any completed sweep (the muTransfer question, as
                       an endpoint; dims are echoed — muP makes the answer
@@ -153,6 +166,7 @@ fn real_main() -> Result<()> {
                 c
             });
             let trace_out = args.get("trace-out").map(std::path::PathBuf::from);
+            let profile_out = args.get("profile-out").map(std::path::PathBuf::from);
             let show_coords = args.flag("coords");
             args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
             let rt = Runtime::new(&artifacts)?;
@@ -177,6 +191,10 @@ fn real_main() -> Result<()> {
             if trace_out.is_some() {
                 mutransfer::obs::trace::enable();
             }
+            if profile_out.is_some() {
+                mutransfer::obs::profile::reset();
+                mutransfer::obs::profile::enable();
+            }
             let r = if show_coords {
                 mutransfer::obs::coords::set_enabled(true);
                 let sink = CoordStderr(serve::StderrSink::quiet());
@@ -195,6 +213,19 @@ fn real_main() -> Result<()> {
                 let n = mutransfer::obs::trace::write_chrome(p)?;
                 mutransfer::obs::trace::disable();
                 eprintln!("trace: {n} span(s) -> {}", p.display());
+            }
+            if let Some(p) = &profile_out {
+                mutransfer::obs::profile::disable();
+                let snap = mutransfer::obs::profile::snapshot();
+                let peak = mutransfer::obs::profile::measured_peak_flops();
+                let ctx = mutransfer::report::perf::ProfileCtx {
+                    variant: Some(v),
+                    steps: Some(r.steps_done),
+                    peak_flops: peak,
+                };
+                let rep = mutransfer::report::perf::profile_report(&snap, &ctx);
+                mutransfer::util::fsio::write_atomic(p, rep.json.to_string().as_bytes())?;
+                eprintln!("profile: attribution -> {}", p.display());
             }
             println!(
                 "variant={variant} scheme={scheme} lr={lr:.3e} steps={} diverged={} final_train={:.4} best_val={:.4} ({:.2}s, {:.2} GFLOPs)",
@@ -438,9 +469,65 @@ fn real_main() -> Result<()> {
                 .context("watch needs a job id (see `mutransfer status`)")?
                 .clone();
             let show_coords = args.flag("coords");
+            let show_profile = args.flag("profile");
             args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            // --coords replays the job's full persisted history first
+            // (?after= paging escapes the 256-sample live ring), then the
+            // SSE stream takes over with live samples
+            if show_coords {
+                let mut after = 0u64;
+                loop {
+                    let Ok((200, body)) = serve::http::rpc(
+                        &addr,
+                        "GET",
+                        &format!("/jobs/{id}/metrics?after={after}"),
+                        None,
+                    ) else {
+                        break;
+                    };
+                    let Ok(j) = json::parse(&body) else { break };
+                    let samples = j.get("samples").and_then(|s| s.as_arr()).unwrap_or(&[]);
+                    for s in samples {
+                        let step = s.get("step").and_then(|x| x.as_usize()).unwrap_or(0);
+                        for g in s.get("groups").and_then(|x| x.as_arr()).unwrap_or(&[]) {
+                            let name = g.get("name").and_then(|x| x.as_str()).unwrap_or("?");
+                            let w_rms = g.get("w_rms").and_then(|x| x.as_f64()).unwrap_or(f64::NAN);
+                            let upd_rms =
+                                g.get("upd_rms").and_then(|x| x.as_f64()).unwrap_or(f64::NAN);
+                            println!(
+                                "coords @{step} {name}: w_rms={w_rms:.3e} upd_rms={upd_rms:.3e}"
+                            );
+                        }
+                    }
+                    match j.get("next_after").and_then(|n| n.as_f64()) {
+                        Some(n) if !samples.is_empty() => after = n as u64,
+                        _ => break,
+                    }
+                }
+            }
             let mut terminal: Option<String> = None;
+            let mut last_profile = std::time::Instant::now();
             serve::http::sse(&addr, &format!("/jobs/{id}/events"), |_, data| {
+                if show_profile && last_profile.elapsed().as_secs() >= 5 {
+                    last_profile = std::time::Instant::now();
+                    if let Ok((200, body)) = serve::http::rpc(&addr, "GET", "/debug/profile", None)
+                    {
+                        if let Ok(j) = json::parse(&body) {
+                            let phases = j.get("phases").and_then(|p| p.as_arr()).unwrap_or(&[]);
+                            let parts: Vec<String> = phases
+                                .iter()
+                                .filter_map(|p| {
+                                    let name = p.get("name")?.as_str()?;
+                                    let share = p.get("share_pct")?.as_f64()?;
+                                    (share >= 0.05).then(|| format!("{name} {share:.1}%"))
+                                })
+                                .collect();
+                            if !parts.is_empty() {
+                                println!("profile: {}", parts.join("  "));
+                            }
+                        }
+                    }
+                }
                 let Ok(j) = json::parse(data) else { return true };
                 let Some(ev) = serve::Event::from_json(&j) else { return true };
                 match &ev {
@@ -519,9 +606,141 @@ fn real_main() -> Result<()> {
                 );
             }
         }
+        "profile" => {
+            let want = args.str_or("variant", "tfm_post_w64_d2");
+            let scheme = {
+                let alias = args.str_or("scheme", "mup");
+                args.str_or("param", &alias)
+            };
+            let steps = args.usize_or("steps", 20);
+            let seed = args.u64_or("seed", 0);
+            let base_width = args.usize_or("base-width", 0);
+            let lr = args.f64_or("lr", HyperParams::default().lr);
+            let out = args.get("out").map(std::path::PathBuf::from);
+            args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let rt = Runtime::new(&artifacts)?;
+            let variant = resolve_variant(rt.manifest(), &want)?;
+            let v = rt.manifest().get(&variant)?;
+            let opt = if v.opt == "adam" { Optimizer::Adam } else { Optimizer::Sgd };
+            let (par, base) = parse_scheme(&scheme, opt, v, base_width)?;
+            let hp = HyperParams { lr, ..HyperParams::default() };
+            let mut spec = RunSpec::new(&variant, par, hp, base);
+            spec.steps = steps;
+            spec.seed = seed;
+            // no eval inside the window: eval forward passes issue GEMMs
+            // outside the per-train-step inventory, which would skew the
+            // span-FLOPs vs model/flops.rs agreement check past its 1% band
+            spec.eval_every = 0;
+            let data = mutransfer::data::source_for(v, seed);
+            // roofline first: the FMA microbench must not sit inside the
+            // profiled window
+            let peak = mutransfer::obs::profile::measured_peak_flops();
+            mutransfer::obs::profile::reset();
+            mutransfer::obs::profile::enable();
+            let r = train_run_ckpt(&rt, &spec, data.as_ref(), None)?;
+            mutransfer::obs::profile::disable();
+            let snap = mutransfer::obs::profile::snapshot();
+            let ctx = mutransfer::report::perf::ProfileCtx {
+                variant: Some(v),
+                steps: Some(r.steps_done),
+                peak_flops: peak,
+            };
+            let rep = mutransfer::report::perf::profile_report(&snap, &ctx);
+            let out = out.unwrap_or_else(|| results.join(format!("profile_{variant}.json")));
+            if let Some(d) = out.parent() {
+                std::fs::create_dir_all(d)
+                    .with_context(|| format!("creating {}", d.display()))?;
+            }
+            mutransfer::util::fsio::write_atomic(&out, rep.json.to_string().as_bytes())?;
+            print!("{}", rep.text);
+            println!("json      : {}", out.display());
+        }
+        "bench-diff" => {
+            let old_p = std::path::PathBuf::from(
+                args.positional
+                    .get(1)
+                    .context("bench-diff needs OLD and NEW (BENCH_*.json files or directories)")?,
+            );
+            let new_p = std::path::PathBuf::from(
+                args.positional
+                    .get(2)
+                    .context("bench-diff needs OLD and NEW (BENCH_*.json files or directories)")?,
+            );
+            let threshold = args.f64_or("threshold", 10.0);
+            args.reject_unknown().map_err(|e| anyhow::anyhow!(e))?;
+            let pairs: Vec<(std::path::PathBuf, std::path::PathBuf)> =
+                if old_p.is_dir() && new_p.is_dir() {
+                    let mut names: Vec<String> = std::fs::read_dir(&old_p)
+                        .with_context(|| format!("reading {}", old_p.display()))?
+                        .filter_map(|e| e.ok())
+                        .filter_map(|e| e.file_name().into_string().ok())
+                        .filter(|n| n.starts_with("BENCH_") && n.ends_with(".json"))
+                        .collect();
+                    names.sort();
+                    names.iter().map(|n| (old_p.join(n), new_p.join(n))).collect()
+                } else {
+                    vec![(old_p.clone(), new_p.clone())]
+                };
+            if pairs.is_empty() {
+                bail!("no BENCH_*.json documents under {}", old_p.display());
+            }
+            let load = |p: &std::path::Path| -> Result<json::Json> {
+                let text = std::fs::read_to_string(p)
+                    .with_context(|| format!("reading {}", p.display()))?;
+                json::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", p.display()))
+            };
+            let no_assert = std::env::var("BENCH_DIFF_NO_ASSERT").as_deref() == Ok("1");
+            let force = std::env::var("BENCH_DIFF_FORCE").as_deref() == Ok("1");
+            let mut gated = 0usize;
+            for (op, np) in &pairs {
+                if !np.exists() {
+                    println!("bench-diff: {} has no counterpart (skipped)", op.display());
+                    continue;
+                }
+                let d = mutransfer::report::perf::bench_diff(&load(op)?, &load(np)?, threshold);
+                print!("{}", d.render());
+                if d.machine_match || force {
+                    gated += d.gate_failures().len();
+                }
+            }
+            if gated > 0 && !no_assert {
+                bail!(
+                    "{gated} row(s) regressed more than {threshold}% \
+                     (BENCH_DIFF_NO_ASSERT=1 to report without failing)"
+                );
+            }
+        }
         _ => bail!("{USAGE}"),
     }
     Ok(())
+}
+
+/// Lenient registry lookup for `profile`: exact name, then `<name>_d2`
+/// (the registry's default-depth suffix), then a unique prefix match.
+fn resolve_variant(
+    man: &mutransfer::runtime::manifest::Manifest,
+    want: &str,
+) -> Result<String> {
+    if man.get(want).is_ok() {
+        return Ok(want.to_string());
+    }
+    let with_depth = format!("{want}_d2");
+    if man.get(&with_depth).is_ok() {
+        return Ok(with_depth);
+    }
+    let names = man.names();
+    let hits: Vec<&&str> = names.iter().filter(|n| n.starts_with(want)).collect();
+    match hits.as_slice() {
+        [one] => Ok(one.to_string()),
+        [] => bail!(
+            "variant {want} not in the registry (no exact, _d2, or prefix match); \
+             see `mutransfer list-artifacts`"
+        ),
+        many => bail!(
+            "variant {want} is ambiguous: {}",
+            many.iter().map(|n| n.to_string()).collect::<Vec<_>>().join(", ")
+        ),
+    }
 }
 
 /// Parse the transfer-shaped flag set into a serve [`JobSpec`] — one

@@ -4,12 +4,147 @@
 //!
 //! Uses the standard 6·N·D estimate (fwd 2ND + bwd 4ND) for token models;
 //! the optimizer update adds O(N) per step, negligible at our D.
+//!
+//! Two tiers share this module (DESIGN.md §13):
+//!
+//! * the 6·N·D *budget estimate* (`training_flops`, `speedups`) — the
+//!   paper's tuning-cost currency;
+//! * the *exact GEMM inventory* ([`gemm_shapes`] / [`step_gemm_flops`] /
+//!   [`flops_for_shape`]) — the profiler's single accounting source.
+//!   The inventory enumerates precisely the kernel invocations that
+//!   carry a `gemm` trace span (attention's fused softmax·V context is a
+//!   fused kernel, not a GEMM span, and is deliberately absent), so the
+//!   span-summed FLOPs of a profiled step must agree with
+//!   `step_gemm_flops` exactly — `rust/tests/profile.rs` pins ≤ 1%.
 
+use crate::model::{MlpConfig, ResMlpConfig, TfmConfig};
+use crate::runtime::manifest::Arch;
 use crate::runtime::Variant;
 
 /// FLOPs for `steps` optimizer steps on a variant.
 pub fn training_flops(v: &Variant, steps: usize) -> f64 {
     v.flops_per_step() * steps as f64
+}
+
+/// FLOPs of one `c(m,n) += a(m,k)·b(k,n)`-shaped contraction — 2·m·k·n
+/// (one multiply + one add per inner element).  `(m, k, n)` are the
+/// *effective* output-rows / contraction / output-cols extents, the same
+/// normalization `trace::span_mnk` records for every kernel transpose
+/// layout; this helper is the one place FLOPs-per-shape is defined.
+#[inline]
+pub fn flops_for_shape(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}
+
+/// One GEMM shape a train step issues, with its invocation count.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GemmShape {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub count: usize,
+}
+
+impl GemmShape {
+    pub fn flops(&self) -> f64 {
+        self.count as f64 * flops_for_shape(self.m, self.k, self.n)
+    }
+}
+
+fn push(out: &mut Vec<GemmShape>, m: usize, k: usize, n: usize, count: usize) {
+    if count == 0 {
+        return;
+    }
+    if let Some(g) = out.iter_mut().find(|g| g.m == m && g.k == k && g.n == n) {
+        g.count += count;
+    } else {
+        out.push(GemmShape { m, k, n, count });
+    }
+}
+
+/// The exact GEMM inventory of ONE optimizer step (forward + backward),
+/// mirroring the kernel call sites in `runtime/native/{transformer,
+/// mlp}.rs` one for one.  Shapes are deduplicated with counts; order is
+/// descending FLOPs is NOT guaranteed — sort at the presentation layer.
+pub fn gemm_shapes(v: &Variant) -> Vec<GemmShape> {
+    let mut out = Vec::new();
+    match v.arch {
+        Arch::Transformer => {
+            let c = TfmConfig::from_variant(v);
+            let (d, da, f, vo, s, dh) = (
+                c.d_model,
+                c.d_attn(),
+                c.d_ffn,
+                c.vocab,
+                c.seq,
+                c.d_head,
+            );
+            let rows = c.batch * s;
+            let nbh = c.batch * c.n_head;
+            let l = c.n_layer;
+            // attention forward: q/k/v projections, per-head score
+            // panels (softmax·V context is fused, not a GEMM), output
+            // projection
+            push(&mut out, rows, d, da, 3 * l);
+            push(&mut out, s, dh, s, nbh * l);
+            push(&mut out, rows, da, d, l);
+            // FFN forward
+            push(&mut out, rows, d, f, l);
+            push(&mut out, rows, f, d, l);
+            // unembed forward + backward
+            push(&mut out, rows, d, vo, 1);
+            push(&mut out, d, rows, vo, 1);
+            push(&mut out, rows, vo, d, 1);
+            // attention backward: WO grad + dmerged, per-head panels
+            // (dprob, dV-grad, dQ, dK), then q/k/v weight + input grads
+            push(&mut out, da, rows, d, l);
+            push(&mut out, rows, d, da, l);
+            push(&mut out, s, dh, s, nbh * l);
+            push(&mut out, s, s, dh, 3 * nbh * l);
+            push(&mut out, d, rows, da, 3 * l);
+            push(&mut out, rows, da, d, 3 * l);
+            // FFN backward: W2 grad, du, W1 grad, dh
+            push(&mut out, f, rows, d, l);
+            push(&mut out, rows, d, f, l);
+            push(&mut out, d, rows, f, l);
+            push(&mut out, rows, f, d, l);
+        }
+        Arch::Mlp => {
+            let c = MlpConfig::from_variant(v);
+            let (b, din, n, co) = (c.batch, c.d_in, c.width, c.d_out);
+            // forward
+            push(&mut out, b, din, n, 1);
+            push(&mut out, b, n, n, 1);
+            push(&mut out, b, n, co, 1);
+            // backward
+            push(&mut out, n, b, co, 1); // w3 grad
+            push(&mut out, b, co, n, 1); // du2
+            push(&mut out, n, b, n, 1); // w2 grad
+            push(&mut out, b, n, n, 1); // du1
+            push(&mut out, din, b, n, 1); // w1 grad
+        }
+        Arch::ResMlp => {
+            let c = ResMlpConfig::from_variant(v);
+            let (b, din, n, co, nb) = (c.batch, c.d_in, c.width, c.d_out, c.n_block);
+            // forward: w_in, per-block w1/w2, w_out
+            push(&mut out, b, din, n, 1);
+            push(&mut out, b, n, n, 2 * nb);
+            push(&mut out, b, n, co, 1);
+            // backward: w_out grad, dhf, per-block (w2 grad, du, w1
+            // grad, dz), w_in grad
+            push(&mut out, n, b, co, 1);
+            push(&mut out, b, co, n, 1);
+            push(&mut out, n, b, n, 2 * nb);
+            push(&mut out, b, n, n, 2 * nb);
+            push(&mut out, din, b, n, 1);
+        }
+    }
+    out
+}
+
+/// Exact GEMM FLOPs of one optimizer step — Σ over [`gemm_shapes`].
+pub fn step_gemm_flops(v: &Variant) -> f64 {
+    gemm_shapes(v).iter().map(|g| g.flops()).sum()
 }
 
 /// The Appendix F.4 cost ratio:
@@ -90,5 +225,52 @@ mod tests {
         let train = training_flops(&target, 1000);
         let r = tuning_cost_ratio(search, train);
         assert!(r > 0.0 && r < 1.5, "r={r}");
+    }
+
+    #[test]
+    fn shape_flops_is_2mkn() {
+        assert_eq!(flops_for_shape(3, 5, 7), 2.0 * 3.0 * 5.0 * 7.0);
+        let g = GemmShape { m: 4, k: 2, n: 8, count: 3 };
+        assert_eq!(g.flops(), 3.0 * flops_for_shape(4, 2, 8));
+    }
+
+    #[test]
+    fn gemm_inventory_tracks_the_6nd_estimate() {
+        // The exact inventory and the 6·N·D budget estimate measure
+        // different things (6ND counts embedding params that never hit a
+        // GEMM; the inventory adds attention panels that aren't
+        // param-proportional) but must stay the same order of magnitude
+        // and scale together with width.
+        for d in [64usize, 256] {
+            let v = variant(d);
+            let exact = step_gemm_flops(&v);
+            let est = v.flops_per_step();
+            assert!(exact > 0.0);
+            let ratio = exact / est;
+            assert!(
+                (0.2..5.0).contains(&ratio),
+                "d={d}: exact {exact:.3e} vs 6ND {est:.3e} (ratio {ratio:.2})"
+            );
+        }
+        let r = step_gemm_flops(&variant(256)) / step_gemm_flops(&variant(64));
+        assert!(r > 8.0, "GEMM FLOPs must grow ~quadratically in width, got {r:.1}x");
+    }
+
+    #[test]
+    fn gemm_inventory_dedupes_with_counts() {
+        let v = variant(64);
+        let shapes = gemm_shapes(&v);
+        let mut seen = std::collections::BTreeSet::new();
+        for g in &shapes {
+            assert!(g.count > 0);
+            assert!(seen.insert((g.m, g.k, g.n)), "duplicate shape {g:?}");
+        }
+        // qkv fwd (rows, d, da) appears for both layers under one entry
+        let rows = 16 * 32;
+        let qkv = shapes
+            .iter()
+            .find(|g| g.m == rows && g.k == 64 && g.n == 64)
+            .expect("qkv projection shape present");
+        assert!(qkv.count >= 6, "3 proj x 2 layers folded: {qkv:?}");
     }
 }

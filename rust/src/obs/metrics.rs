@@ -227,8 +227,9 @@ pub const ROUTE_JOB_EVENTS: usize = 8;
 pub const ROUTE_JOB_METRICS: usize = 9;
 pub const ROUTE_JOB_DELETE: usize = 10;
 pub const ROUTE_HP: usize = 11;
-pub const ROUTE_OTHER: usize = 12;
-pub const NROUTES: usize = 13;
+pub const ROUTE_DEBUG_PROFILE: usize = 12;
+pub const ROUTE_OTHER: usize = 13;
+pub const NROUTES: usize = 14;
 
 pub static ROUTES: [Route; NROUTES] = [
     Route::new("healthz"),
@@ -243,6 +244,7 @@ pub static ROUTES: [Route; NROUTES] = [
     Route::new("job_metrics"),
     Route::new("job_delete"),
     Route::new("hp"),
+    Route::new("debug_profile"),
     Route::new("other"),
 ];
 
@@ -291,6 +293,10 @@ pub static BUS_EVENTS: Counter = Counter::new(
     "mutransfer_bus_events_total",
     "events published onto per-job event buses",
 );
+pub static TRACE_DROPPED: Counter = Counter::new(
+    "mutransfer_trace_dropped_total",
+    "trace spans dropped because the bounded span buffer was full",
+);
 
 pub static HTTP_OPEN_CONNS: Gauge = Gauge::new(
     "mutransfer_http_open_conns",
@@ -320,6 +326,10 @@ pub static CACHE_BYTES: Gauge = Gauge::new(
     "mutransfer_result_cache_bytes",
     "bytes resident in the terminal-results cache",
 );
+pub static TRACE_BUF_HWM: Gauge = Gauge::new(
+    "mutransfer_trace_buffer_hwm",
+    "high-water mark of the bounded trace span buffer (cap: trace::MAX_EVENTS)",
+);
 
 pub static STEP_LATENCY: Histogram = Histogram::new(
     "mutransfer_train_step_latency_seconds",
@@ -334,7 +344,7 @@ pub static CKPT_PUBLISH: Histogram = Histogram::new(
     "wall time of one checkpoint serialize + atomic publish",
 );
 
-static COUNTERS: [&Counter; 9] = [
+static COUNTERS: [&Counter; 10] = [
     &HTTP_SHEDS,
     &CACHE_HITS,
     &CACHE_MISSES,
@@ -344,9 +354,10 @@ static COUNTERS: [&Counter; 9] = [
     &JOBS_SUBMITTED,
     &COORD_SAMPLES,
     &BUS_EVENTS,
+    &TRACE_DROPPED,
 ];
 
-static GAUGES: [&Gauge; 7] = [
+static GAUGES: [&Gauge; 8] = [
     &HTTP_OPEN_CONNS,
     &SSE_SUBSCRIBERS,
     &EXEC_SLOTS_BUSY,
@@ -354,6 +365,7 @@ static GAUGES: [&Gauge; 7] = [
     &BUDGET_OUTSTANDING,
     &BUDGET_WAITING,
     &CACHE_BYTES,
+    &TRACE_BUF_HWM,
 ];
 
 static HISTOGRAMS: [&Histogram; 3] = [&STEP_LATENCY, &JOURNAL_FSYNC, &CKPT_PUBLISH];

@@ -13,8 +13,12 @@
 //!   JSON (`train --trace-out`, `serve --trace-dir`);
 //! * [`coords`] — opt-in live μ-coordinate telemetry: width-normalized
 //!   per-tensor scale stats sampled during training, emitted as
-//!   `Event::CoordStats`, served at `GET /jobs/:id/metrics`.
+//!   `Event::CoordStats`, served at `GET /jobs/:id/metrics`;
+//! * [`profile`] — streaming perf attribution folded from the trace
+//!   spans (self/child time per kind, per-GEMM-shape GFLOP/s), served
+//!   at `GET /debug/profile` and by `mutransfer profile` (§13).
 
 pub mod coords;
 pub mod metrics;
+pub mod profile;
 pub mod trace;

@@ -1,0 +1,339 @@
+//! Always-available perf-attribution aggregator (DESIGN.md §13).
+//!
+//! [`trace`](crate::obs::trace) spans are the raw signal; this module
+//! folds them — *streaming, as each span closes* — into a bounded
+//! aggregate instead of a bounded raw buffer, so attribution can stay
+//! enabled for an entire daemon lifetime (`GET /debug/profile`) or a
+//! profiled CLI run (`mutransfer profile`, `train --profile-out`)
+//! without ever dropping data.
+//!
+//! Two views share one pass:
+//!
+//! * **per span kind, per thread** — count, total (inclusive) time and
+//!   *self* time (total − direct children, computed streaming by the
+//!   span guards).  Self times of all kinds partition the span-covered
+//!   wall time exactly, which is what makes the phase-share table sum
+//!   to ~100% by construction;
+//! * **per GEMM shape** — count, total time, and FLOPs from
+//!   `model::flops::flops_for_shape` (the single accounting source),
+//!   giving achieved GFLOP/s per (m, k, n).
+//!
+//! Cost model: span guards fold into a *thread-local* map and flush to
+//! the global mutex only when the thread's root span closes (once per
+//! train step / HTTP request), so enabling the profiler adds no
+//! per-GEMM lock traffic.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::model::flops::flops_for_shape;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static TID_SEQ: AtomicU64 = AtomicU64::new(1);
+
+/// Per-(kind, thread) accumulator.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct KindStat {
+    pub count: u64,
+    pub total_ns: u64,
+    pub self_ns: u64,
+}
+
+/// Per-GEMM-shape accumulator; `flops` comes from `flops_for_shape` so
+/// utilization math can never drift from `model/flops.rs`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ShapeStat {
+    pub count: u64,
+    pub total_ns: u64,
+    pub flops: f64,
+}
+
+#[derive(Default)]
+struct LocalAgg {
+    kinds: BTreeMap<&'static str, KindStat>,
+    shapes: BTreeMap<(u32, u32, u32), ShapeStat>,
+}
+
+/// One profiled thread's slice of the global aggregate.
+#[derive(Debug, Clone, Default)]
+pub struct ThreadStats {
+    pub label: Option<String>,
+    pub kinds: BTreeMap<&'static str, KindStat>,
+}
+
+#[derive(Default)]
+struct State {
+    threads: BTreeMap<u64, ThreadStats>,
+    shapes: BTreeMap<(u32, u32, u32), ShapeStat>,
+    labels: BTreeMap<u64, String>,
+}
+
+static STATE: Mutex<Option<State>> = Mutex::new(None);
+
+thread_local! {
+    static LOCAL: RefCell<LocalAgg> = RefCell::new(LocalAgg::default());
+    static PTID: RefCell<(u64, Option<String>)> = const { RefCell::new((0, None)) };
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Start aggregating (keeps any existing aggregate; use [`reset`] for a
+/// clean window).
+pub fn enable() {
+    {
+        let mut g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+        if g.is_none() {
+            *g = Some(State::default());
+        }
+    }
+    ENABLED.store(true, Ordering::Relaxed);
+    crate::obs::trace::sync_active();
+}
+
+pub fn disable() {
+    ENABLED.store(false, Ordering::Relaxed);
+    crate::obs::trace::sync_active();
+}
+
+/// Clear the aggregate (global and not-yet-flushed local residue is
+/// dropped on next flush by the epoch below being irrelevant: locals
+/// flush at root-span close, so call `reset` only between runs).
+pub fn reset() {
+    let mut g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    let labels = g.as_ref().map(|s| s.labels.clone()).unwrap_or_default();
+    *g = Some(State { labels, ..State::default() });
+}
+
+/// Name the calling thread in profile output (executor slots, pool
+/// workers).  Sticky across [`reset`].
+pub fn label_current_thread(label: &str) {
+    PTID.with(|p| p.borrow_mut().1 = Some(label.to_string()));
+    let tid = local_tid();
+    let mut g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    let st = g.get_or_insert_with(State::default);
+    st.labels.insert(tid, label.to_string());
+    if let Some(t) = st.threads.get_mut(&tid) {
+        t.label = Some(label.to_string());
+    }
+}
+
+fn local_tid() -> u64 {
+    PTID.with(|p| {
+        let mut b = p.borrow_mut();
+        if b.0 == 0 {
+            b.0 = TID_SEQ.fetch_add(1, Ordering::Relaxed);
+        }
+        b.0
+    })
+}
+
+/// Fold one completed span (called by `trace::SpanGuard::drop`).
+/// `depth == 1` means the thread's root span just closed — flush the
+/// thread-local aggregate into the global state.
+pub(crate) fn record(
+    name: &'static str,
+    args: [u32; 3],
+    dur_ns: u64,
+    self_ns: u64,
+    depth: u32,
+) {
+    LOCAL.with(|l| {
+        let mut l = l.borrow_mut();
+        let k = l.kinds.entry(name).or_default();
+        k.count += 1;
+        k.total_ns += dur_ns;
+        k.self_ns += self_ns;
+        if args != [0; 3] {
+            let s = l.shapes.entry((args[0], args[1], args[2])).or_default();
+            s.count += 1;
+            s.total_ns += dur_ns;
+            s.flops += flops_for_shape(args[0] as usize, args[1] as usize, args[2] as usize);
+        }
+    });
+    if depth == 1 {
+        flush_local();
+    }
+}
+
+fn flush_local() {
+    let agg = LOCAL.with(|l| std::mem::take(&mut *l.borrow_mut()));
+    if agg.kinds.is_empty() && agg.shapes.is_empty() {
+        return;
+    }
+    let tid = local_tid();
+    let label = PTID.with(|p| p.borrow().1.clone());
+    let mut g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    let st = g.get_or_insert_with(State::default);
+    let t = st.threads.entry(tid).or_default();
+    if t.label.is_none() {
+        t.label = label.or_else(|| st.labels.get(&tid).cloned());
+    }
+    for (name, ks) in agg.kinds {
+        let dst = t.kinds.entry(name).or_default();
+        dst.count += ks.count;
+        dst.total_ns += ks.total_ns;
+        dst.self_ns += ks.self_ns;
+    }
+    for (shape, ss) in agg.shapes {
+        let dst = st.shapes.entry(shape).or_default();
+        dst.count += ss.count;
+        dst.total_ns += ss.total_ns;
+        dst.flops += ss.flops;
+    }
+}
+
+/// Point-in-time copy of the aggregate.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    /// (tid, stats) sorted by tid.
+    pub threads: Vec<(u64, ThreadStats)>,
+    /// ((m, k, n), stats) sorted by shape.
+    pub shapes: Vec<((u32, u32, u32), ShapeStat)>,
+}
+
+impl Snapshot {
+    /// Kind stats summed across threads.
+    pub fn kinds_merged(&self) -> BTreeMap<&'static str, KindStat> {
+        let mut out: BTreeMap<&'static str, KindStat> = BTreeMap::new();
+        for (_, t) in &self.threads {
+            for (name, ks) in &t.kinds {
+                let dst = out.entry(name).or_default();
+                dst.count += ks.count;
+                dst.total_ns += ks.total_ns;
+                dst.self_ns += ks.self_ns;
+            }
+        }
+        out
+    }
+
+    /// Span-attributed GEMM FLOPs in the window.
+    pub fn gemm_flops(&self) -> f64 {
+        self.shapes.iter().map(|(_, s)| s.flops).sum()
+    }
+}
+
+pub fn snapshot() -> Snapshot {
+    let g = STATE.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(st) = g.as_ref() else { return Snapshot::default() };
+    Snapshot {
+        threads: st
+            .threads
+            .iter()
+            .map(|(tid, t)| {
+                let mut t = t.clone();
+                if t.label.is_none() {
+                    t.label = st.labels.get(tid).cloned();
+                }
+                (*tid, t)
+            })
+            .collect(),
+        shapes: st.shapes.iter().map(|(k, v)| (*k, *v)).collect(),
+    }
+}
+
+// --------------------------------------------------------------- roofline
+
+/// Machine-measured scalar f32 FMA peak, in FLOP/s, for one core — the
+/// roofline that turns achieved GFLOP/s into a utilization *fraction*.
+/// Eight independent accumulator chains hide the FMA latency, all data
+/// stays in registers, and the best of `trials` timed windows is taken
+/// (interference only ever slows a window down).  "Scalar" is nominal:
+/// whatever the compiler does to this plain loop is exactly what it does
+/// to the blocked kernels' inner loops, so the ratio is honest.
+pub fn measured_peak_flops() -> f64 {
+    const CHAINS: usize = 8;
+    const ITERS: usize = 200_000;
+    let mut best = 0f64;
+    for trial in 0..3 {
+        let mut acc = [1.0f32 + trial as f32 * 0.25; CHAINS];
+        let m = 1.000_000_1f32;
+        let a = 1e-9f32;
+        let t0 = Instant::now();
+        for _ in 0..ITERS {
+            for c in acc.iter_mut() {
+                *c = c.mul_add(m, a);
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        std::hint::black_box(acc);
+        // 2 FLOPs per mul_add per chain
+        let flops = (2 * CHAINS * ITERS) as f64 / secs.max(1e-12);
+        if flops.total_cmp(&best).is_gt() {
+            best = flops;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::trace;
+
+    /// Sequential lifecycle test (the enable flags are process-global).
+    #[test]
+    fn aggregates_self_time_and_shapes() {
+        reset();
+        enable();
+        label_current_thread("test-thread");
+        {
+            let _root = trace::span("prof_test_root");
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            {
+                let _g = trace::span_mnk("prof_test_gemm", 4, 8, 2);
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+            {
+                let _g = trace::span_mnk("prof_test_gemm", 4, 8, 2);
+            }
+        }
+        disable();
+        let snap = snapshot();
+        let kinds = snap.kinds_merged();
+        let root = kinds["prof_test_root"];
+        let gemm = kinds["prof_test_gemm"];
+        assert_eq!(root.count, 1);
+        assert_eq!(gemm.count, 2);
+        // parent self excludes children; totals nest
+        assert!(root.total_ns >= gemm.total_ns);
+        assert!(root.self_ns <= root.total_ns - gemm.total_ns + 1_000_000);
+        // self times partition the root total (exact up to clock reads)
+        let self_sum: u64 = kinds.values().map(|k| k.self_ns).sum();
+        let drift = root.total_ns.abs_diff(self_sum);
+        assert!(
+            drift < root.total_ns / 50 + 50_000,
+            "self-time partition drift {drift}ns of {}ns",
+            root.total_ns
+        );
+        // shapes carry flops from the shared helper
+        let (&shape, stat) = snap
+            .shapes
+            .iter()
+            .map(|(s, v)| (s, v))
+            .find(|(s, _)| **s == (4, 8, 2))
+            .expect("gemm shape aggregated");
+        assert_eq!(shape, (4, 8, 2));
+        assert_eq!(stat.count, 2);
+        assert_eq!(stat.flops, 2.0 * flops_for_shape(4, 8, 2));
+        // thread label survives into the snapshot
+        assert!(snap
+            .threads
+            .iter()
+            .any(|(_, t)| t.label.as_deref() == Some("test-thread")));
+        reset();
+        assert!(snapshot().threads.is_empty());
+    }
+
+    #[test]
+    fn peak_measurement_is_positive_and_stable() {
+        let p = measured_peak_flops();
+        assert!(p > 1e6, "peak {p} implausibly low");
+        assert!(p < 1e13, "peak {p} implausibly high for one scalar core");
+    }
+}

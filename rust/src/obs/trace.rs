@@ -1,5 +1,6 @@
 //! Hierarchical trace spans with a Chrome trace-event dump (DESIGN.md
-//! §12).
+//! §12) and a streaming feed into the [`profile`](crate::obs::profile)
+//! aggregator (§13).
 //!
 //! Tracing is a debugging mode, off by default.  The disabled fast path
 //! of [`span`] is one relaxed atomic load and a `None` — no clock read,
@@ -9,13 +10,22 @@
 //!
 //! When enabled (`mutransfer train --trace-out FILE`, `serve
 //! --trace-dir DIR`), each completed span pushes one record (static
-//! name, thread id, depth, start, duration) onto a bounded global
-//! buffer; [`write_chrome`] dumps them as Chrome trace-event JSON
-//! (`"ph":"X"` complete events) loadable in `chrome://tracing` or
-//! Perfetto.  Nesting is carried by per-thread depth counters plus the
-//! natural containment of `ts`/`dur` on one `tid`.
+//! name, thread id, depth, start, duration, optional m·k·n args) onto a
+//! bounded global buffer; [`write_chrome`] dumps them as Chrome
+//! trace-event JSON (`"ph":"X"` complete events) loadable in
+//! `chrome://tracing` or Perfetto.  Nesting is carried by per-thread
+//! depth counters plus the natural containment of `ts`/`dur` on one
+//! `tid`.
+//!
+//! The same guards also drive the profiler: when
+//! [`profile::enabled`](crate::obs::profile::enabled) a completed span
+//! folds (total time, *self* time = total − direct children, FLOPs for
+//! GEMM shapes) into the per-thread aggregate without touching the
+//! bounded raw buffer, so attribution can stay on for a whole daemon
+//! lifetime.  Self time is computed streaming via a per-thread stack of
+//! child-duration accumulators — no post-processing pass over raw spans.
 
-use std::cell::Cell;
+use std::cell::{Cell, RefCell};
 use std::path::Path;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -23,17 +33,25 @@ use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::obs::{metrics, profile};
 use crate::util::fsio;
 use crate::util::json::{jnum, jstr, Json};
 
 static ENABLED: AtomicBool = AtomicBool::new(false);
+/// `ENABLED || profile::enabled()` — the one load on the disabled fast
+/// path.  Kept coherent by [`sync_active`].
+static ACTIVE: AtomicBool = AtomicBool::new(false);
 static TID_SEQ: AtomicU64 = AtomicU64::new(1);
 static DROPPED: AtomicU64 = AtomicU64::new(0);
 
 /// Bounded so a runaway traced loop degrades to dropped spans, not OOM.
-const MAX_EVENTS: usize = 1 << 18;
+/// Overflow is *not* silent: every dropped span increments
+/// `mutransfer_trace_dropped_total` and the buffer's high-water mark is
+/// exported as `mutransfer_trace_buffer_hwm` (DESIGN.md §12).
+pub const MAX_EVENTS: usize = 1 << 18;
 
-/// One completed span.
+/// One completed span.  `args` is `[m, k, n]` for GEMM spans recorded
+/// via [`span_mnk`] (FLOPs = 2·m·k·n), `[0, 0, 0]` otherwise.
 #[derive(Debug, Clone)]
 pub struct SpanRec {
     pub name: &'static str,
@@ -41,6 +59,7 @@ pub struct SpanRec {
     pub depth: u32,
     pub start: Instant,
     pub dur_ns: u64,
+    pub args: [u32; 3],
 }
 
 static STORE: Mutex<Vec<SpanRec>> = Mutex::new(Vec::new());
@@ -48,6 +67,9 @@ static STORE: Mutex<Vec<SpanRec>> = Mutex::new(Vec::new());
 thread_local! {
     static TID: Cell<u64> = const { Cell::new(0) };
     static DEPTH: Cell<u32> = const { Cell::new(0) };
+    // Per-open-span accumulator of direct-child durations; the top entry
+    // belongs to the innermost open span on this thread.
+    static CHILD_NS: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
 }
 
 fn tid() -> u64 {
@@ -57,6 +79,15 @@ fn tid() -> u64 {
         }
         t.get()
     })
+}
+
+/// Recompute the combined fast-path flag; called by trace and profile
+/// enable/disable.
+pub(crate) fn sync_active() {
+    ACTIVE.store(
+        ENABLED.load(Ordering::Relaxed) || profile::enabled(),
+        Ordering::Relaxed,
+    );
 }
 
 #[inline]
@@ -70,12 +101,14 @@ pub fn enable() {
     g.clear();
     DROPPED.store(0, Ordering::Relaxed);
     ENABLED.store(true, Ordering::Relaxed);
+    sync_active();
 }
 
 /// Stop collecting; already-recorded spans stay buffered for [`take`] /
 /// [`write_chrome`].
 pub fn disable() {
     ENABLED.store(false, Ordering::Relaxed);
+    sync_active();
 }
 
 /// Drain the span buffer.  Returns `(spans, dropped_count)`.
@@ -85,21 +118,38 @@ pub fn take() -> (Vec<SpanRec>, u64) {
     (spans, DROPPED.swap(0, Ordering::Relaxed))
 }
 
-/// RAII span guard: records on drop when tracing is enabled.  The name
-/// must be a static literal — the `metric-names` lint keeps record sites
-/// in serve/ and runtime/native/ free of string allocation.
+/// RAII span guard: records on drop when tracing or profiling is
+/// enabled.  The name must be a static literal — the `metric-names`
+/// lint keeps record sites in serve/ and runtime/native/ free of string
+/// allocation.
 pub struct SpanGuard {
     name: &'static str,
+    args: [u32; 3],
     start: Option<Instant>,
 }
 
 #[inline]
 pub fn span(name: &'static str) -> SpanGuard {
-    if !ENABLED.load(Ordering::Relaxed) {
-        return SpanGuard { name, start: None };
+    span_mnk(name, 0, 0, 0)
+}
+
+/// A span carrying GEMM shape args; the profiler attributes
+/// `2·m·k·n` FLOPs to it (`model::flops::flops_for_shape`, the one
+/// accounting source).  `(m, k, n)` are the *effective* output-rows /
+/// contraction / output-cols extents, whatever the kernel's transpose
+/// layout.
+#[inline]
+pub fn span_mnk(name: &'static str, m: usize, k: usize, n: usize) -> SpanGuard {
+    if !ACTIVE.load(Ordering::Relaxed) {
+        return SpanGuard { name, args: [0; 3], start: None };
     }
     DEPTH.with(|d| d.set(d.get() + 1));
-    SpanGuard { name, start: Some(Instant::now()) }
+    CHILD_NS.with(|c| c.borrow_mut().push(0));
+    SpanGuard {
+        name,
+        args: [m as u32, k as u32, n as u32],
+        start: Some(Instant::now()),
+    }
 }
 
 impl Drop for SpanGuard {
@@ -111,14 +161,43 @@ impl Drop for SpanGuard {
             d.set(v.saturating_sub(1));
             v
         });
+        // Streaming self-time: pop this span's child accumulator and
+        // charge our total duration to the parent's (if any).
+        let child_ns = CHILD_NS.with(|c| {
+            let mut st = c.borrow_mut();
+            let mine = st.pop().unwrap_or(0);
+            if let Some(parent) = st.last_mut() {
+                *parent += dur_ns;
+            }
+            mine
+        });
+        let self_ns = dur_ns.saturating_sub(child_ns);
+        if profile::enabled() {
+            profile::record(self.name, self.args, dur_ns, self_ns, depth);
+        }
+        if !ENABLED.load(Ordering::Relaxed) {
+            return;
+        }
         // disable() between span() and drop: the record is still taken —
         // a half-open trace window keeps its in-flight spans.
         let mut g = STORE.lock().unwrap_or_else(|e| e.into_inner());
         if g.len() >= MAX_EVENTS {
             DROPPED.fetch_add(1, Ordering::Relaxed);
+            metrics::TRACE_DROPPED.inc();
             return;
         }
-        g.push(SpanRec { name: self.name, tid: tid(), depth, start: t0, dur_ns });
+        g.push(SpanRec {
+            name: self.name,
+            tid: tid(),
+            depth,
+            start: t0,
+            dur_ns,
+            args: self.args,
+        });
+        let hwm = metrics::TRACE_BUF_HWM.get();
+        if (g.len() as i64) > hwm {
+            metrics::TRACE_BUF_HWM.set(g.len() as i64);
+        }
     }
 }
 
@@ -142,7 +221,13 @@ pub fn write_chrome(path: &Path) -> Result<usize> {
                 ("ts", jnum(ts)),
                 ("dur", jnum(s.dur_ns as f64 / 1e3)),
             ]);
-            j.set("args", Json::from_pairs(vec![("depth", jnum(s.depth as f64))]));
+            let mut args = Json::from_pairs(vec![("depth", jnum(s.depth as f64))]);
+            if s.args != [0; 3] {
+                args.set("m", jnum(s.args[0] as f64));
+                args.set("k", jnum(s.args[1] as f64));
+                args.set("n", jnum(s.args[2] as f64));
+            }
+            j.set("args", args);
             j
         })
         .collect();
@@ -173,7 +258,7 @@ mod tests {
             let _outer = span("obs_test_outer");
             std::thread::sleep(std::time::Duration::from_millis(2));
             {
-                let _inner = span("obs_test_inner");
+                let _inner = span_mnk("obs_test_inner", 3, 4, 5);
                 std::thread::sleep(std::time::Duration::from_millis(1));
             }
         }
@@ -207,5 +292,10 @@ mod tests {
         let odep = outer.get("args").unwrap().get("depth").unwrap().as_f64().unwrap();
         let idep = inner.get("args").unwrap().get("depth").unwrap().as_f64().unwrap();
         assert!(idep > odep, "inner depth {idep} must exceed outer {odep}");
+        // shape args survive the dump; plain spans carry none
+        let ia = inner.get("args").unwrap();
+        assert_eq!(ia.get("m").unwrap().as_f64().unwrap(), 3.0);
+        assert_eq!(ia.get("n").unwrap().as_f64().unwrap(), 5.0);
+        assert!(outer.get("args").unwrap().get("m").is_none());
     }
 }

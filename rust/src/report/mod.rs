@@ -7,6 +7,8 @@
 //! reports results too, and a SIGKILLed daemon must never leave a torn
 //! CSV/JSON artifact behind for a reader to trip over.
 
+pub mod perf;
+
 use std::path::PathBuf;
 
 use anyhow::Result;

@@ -1,0 +1,623 @@
+//! Perf-attribution reports and the machine-readable bench trajectory
+//! (DESIGN.md §13).
+//!
+//! Two halves, one file, because they share the same contract — *numbers
+//! leave the process as schema-versioned JSON first, human text second*:
+//!
+//! * [`profile_report`] renders an [`obs::profile`](crate::obs::profile)
+//!   snapshot into (a) a JSON document and (b) aligned text tables:
+//!   per-phase self-time shares (summing to ~100% by construction),
+//!   per-GEMM-shape achieved GFLOP/s against the machine-measured
+//!   roofline, per-thread attribution, and the span-FLOPs vs
+//!   `model::flops::step_gemm_flops` cross-check;
+//! * [`BenchDoc`] is the shared writer every `benches/*.rs` routes its
+//!   headline rows through — `BENCH_<name>.json` under `BENCH_OUT_DIR`
+//!   (default `results/bench/`) with commit/date/machine stamps — and
+//!   [`bench_diff`] compares two such documents, flagging >threshold
+//!   regressions so CI can gate on the trajectory.
+//!
+//! Gate policy: only `higher_is_better=false` rows (latencies,
+//! overheads) fail the gate; throughput-style rows are report-only
+//! because their noise floor on shared runners drowns a 10% band.
+//! A machine-fingerprint mismatch downgrades the whole diff to
+//! report-only (the caller honors `BENCH_DIFF_FORCE=1` to re-arm it).
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::model::flops;
+use crate::obs::profile::Snapshot;
+use crate::runtime::Variant;
+use crate::util::fsio::write_atomic;
+use crate::util::json::{jnum, jstr, Json};
+use crate::util::table::Table;
+
+/// Schema version stamped into every profile and bench document.
+pub const SCHEMA_VERSION: f64 = 1.0;
+
+/// The named attribution phases, in display order.  Every other span
+/// kind's self time folds into `other`, so the shares always cover 100%
+/// of span-attributed wall time.
+pub const PHASES: &[&str] = &[
+    "gemm",
+    "attn_fwd",
+    "attn_bwd",
+    "optimizer",
+    "eval",
+    "ckpt_publish",
+    "journal_fsync",
+];
+
+/// Context the snapshot itself cannot know: what ran, for how many
+/// steps, and the machine roofline to normalize GFLOP/s against.
+pub struct ProfileCtx<'a> {
+    /// Variant profiled, when the window covered exactly one (the
+    /// `profile` subcommand); `None` for daemon-wide aggregates.
+    pub variant: Option<&'a Variant>,
+    /// Profiled optimizer steps in the window, when known.
+    pub steps: Option<usize>,
+    /// `profile::measured_peak_flops()`, or 0.0 to skip utilization.
+    pub peak_flops: f64,
+}
+
+pub struct ProfileReport {
+    pub json: Json,
+    pub text: String,
+}
+
+fn ms(ns: u64) -> String {
+    format!("{:.3}", ns as f64 / 1e6)
+}
+
+/// Fold a profile snapshot into the §13 report (JSON + text tables).
+pub fn profile_report(snap: &Snapshot, ctx: &ProfileCtx) -> ProfileReport {
+    let kinds = snap.kinds_merged();
+    let total_self_ns: u64 = kinds.values().map(|k| k.self_ns).sum();
+    let share = |self_ns: u64| -> f64 {
+        if total_self_ns == 0 {
+            0.0
+        } else {
+            100.0 * self_ns as f64 / total_self_ns as f64
+        }
+    };
+
+    // ---- phase shares (named phases + "other" = 100%) ------------------
+    let mut phase_rows: Vec<(String, u64, u64, u64)> = Vec::new();
+    let mut named_self = 0u64;
+    for &p in PHASES {
+        let k = kinds.get(p).copied().unwrap_or_default();
+        named_self += k.self_ns;
+        phase_rows.push((p.to_string(), k.count, k.total_ns, k.self_ns));
+    }
+    let other_self = total_self_ns.saturating_sub(named_self);
+    let other_count: u64 = kinds
+        .iter()
+        .filter(|(name, _)| !PHASES.contains(name))
+        .map(|(_, k)| k.count)
+        .sum();
+    phase_rows.push(("other".to_string(), other_count, other_self, other_self));
+
+    let mut jphases = Vec::new();
+    let title = match (ctx.variant, ctx.steps) {
+        (Some(v), Some(s)) => format!("perf attribution: {} ({s} steps)", v.name),
+        (Some(v), None) => format!("perf attribution: {}", v.name),
+        _ => "perf attribution".to_string(),
+    };
+    let mut tphases = Table::new(&title, &["phase", "spans", "self ms", "share %"]);
+    for (name, count, total_ns, self_ns) in &phase_rows {
+        jphases.push(Json::from_pairs(vec![
+            ("name", jstr(name)),
+            ("count", jnum(*count as f64)),
+            ("total_ns", jnum(*total_ns as f64)),
+            ("self_ns", jnum(*self_ns as f64)),
+            ("share_pct", jnum(share(*self_ns))),
+        ]));
+        tphases.row(vec![
+            name.clone(),
+            count.to_string(),
+            ms(*self_ns),
+            format!("{:.1}", share(*self_ns)),
+        ]);
+    }
+
+    // ---- raw kinds (full taxonomy, for drill-down) ---------------------
+    let mut jkinds = Vec::new();
+    let mut kind_rows: Vec<_> = kinds.iter().collect();
+    kind_rows.sort_by(|a, b| b.1.self_ns.cmp(&a.1.self_ns).then(a.0.cmp(b.0)));
+    for (name, k) in &kind_rows {
+        jkinds.push(Json::from_pairs(vec![
+            ("name", jstr(name)),
+            ("count", jnum(k.count as f64)),
+            ("total_ns", jnum(k.total_ns as f64)),
+            ("self_ns", jnum(k.self_ns as f64)),
+        ]));
+    }
+
+    // ---- per-GEMM-shape GFLOP/s vs the roofline ------------------------
+    let mut shape_rows: Vec<_> = snap.shapes.iter().collect();
+    shape_rows.sort_by(|a, b| b.1.total_ns.cmp(&a.1.total_ns).then(a.0.cmp(&b.0)));
+    let mut jshapes = Vec::new();
+    let mut tshapes = Table::new(
+        "gemm shapes (m, k, n effective)",
+        &["m", "k", "n", "calls", "time ms", "GFLOP/s", "% peak"],
+    );
+    for ((m, k, n), s) in &shape_rows {
+        let secs = s.total_ns as f64 / 1e9;
+        let gflops = if secs > 0.0 { s.flops / secs / 1e9 } else { 0.0 };
+        let util = if ctx.peak_flops > 0.0 {
+            100.0 * gflops * 1e9 / ctx.peak_flops
+        } else {
+            0.0
+        };
+        jshapes.push(Json::from_pairs(vec![
+            ("m", jnum(*m as f64)),
+            ("k", jnum(*k as f64)),
+            ("n", jnum(*n as f64)),
+            ("count", jnum(s.count as f64)),
+            ("total_ns", jnum(s.total_ns as f64)),
+            ("flops", jnum(s.flops)),
+            ("gflops", jnum(gflops)),
+            ("util_pct", jnum(util)),
+        ]));
+        tshapes.row(vec![
+            m.to_string(),
+            k.to_string(),
+            n.to_string(),
+            s.count.to_string(),
+            ms(s.total_ns),
+            format!("{gflops:.2}"),
+            format!("{util:.1}"),
+        ]);
+    }
+
+    // ---- per-thread / executor-slot attribution ------------------------
+    let mut jthreads = Vec::new();
+    let mut tthreads = Table::new("threads", &["tid", "label", "spans", "self ms"]);
+    for (tid, t) in &snap.threads {
+        let spans: u64 = t.kinds.values().map(|k| k.count).sum();
+        let self_ns: u64 = t.kinds.values().map(|k| k.self_ns).sum();
+        let label = t.label.clone().unwrap_or_default();
+        jthreads.push(Json::from_pairs(vec![
+            ("tid", jnum(*tid as f64)),
+            ("label", jstr(&label)),
+            ("spans", jnum(spans as f64)),
+            ("self_ns", jnum(self_ns as f64)),
+        ]));
+        tthreads.row(vec![tid.to_string(), label, spans.to_string(), ms(self_ns)]);
+    }
+
+    // ---- FLOPs cross-check against model/flops.rs ----------------------
+    let span_flops = snap.gemm_flops();
+    let expected = match (ctx.variant, ctx.steps) {
+        (Some(v), Some(steps)) => Some(flops::step_gemm_flops(v) * steps as f64),
+        _ => None,
+    };
+    let agreement = expected.map(|e| if e > 0.0 { 100.0 * span_flops / e } else { 0.0 });
+    let gemm_time_ns = kinds.get("gemm").map(|k| k.total_ns).unwrap_or(0);
+    let achieved = if gemm_time_ns > 0 {
+        span_flops / (gemm_time_ns as f64 / 1e9)
+    } else {
+        0.0
+    };
+    let mut gemm = Json::from_pairs(vec![
+        ("span_flops", jnum(span_flops)),
+        ("achieved_gflops", jnum(achieved / 1e9)),
+        ("peak_gflops", jnum(ctx.peak_flops / 1e9)),
+    ]);
+    if let Some(e) = expected {
+        gemm.set("expected_flops", jnum(e));
+    }
+    if let Some(a) = agreement {
+        gemm.set("agreement_pct", jnum(a));
+    }
+
+    let mut json = Json::from_pairs(vec![
+        ("schema_version", jnum(SCHEMA_VERSION)),
+        ("total_self_ns", jnum(total_self_ns as f64)),
+        ("phases", Json::Arr(jphases)),
+        ("kinds", Json::Arr(jkinds)),
+        ("shapes", Json::Arr(jshapes)),
+        ("threads", Json::Arr(jthreads)),
+        ("gemm", gemm),
+    ]);
+    if let Some(v) = ctx.variant {
+        json.set("variant", jstr(&v.name));
+    }
+    if let Some(s) = ctx.steps {
+        json.set("steps", jnum(s as f64));
+    }
+
+    let mut text = tphases.render();
+    if !shape_rows.is_empty() {
+        text.push('\n');
+        text.push_str(&tshapes.render());
+    }
+    if snap.threads.len() > 1 {
+        text.push('\n');
+        text.push_str(&tthreads.render());
+    }
+    text.push('\n');
+    if ctx.peak_flops > 0.0 {
+        text.push_str(&format!(
+            "roofline  : {:.2} GFLOP/s scalar-FMA peak (measured), gemm achieved {:.2} GFLOP/s\n",
+            ctx.peak_flops / 1e9,
+            achieved / 1e9,
+        ));
+    }
+    text.push_str(&format!("gemm flops: {span_flops:.3e} span-attributed"));
+    if let (Some(e), Some(a)) = (expected, agreement) {
+        text.push_str(&format!(" vs {e:.3e} model/flops.rs inventory ({a:.1}% agreement)"));
+    }
+    text.push('\n');
+
+    ProfileReport { json, text }
+}
+
+// ------------------------------------------------------------- bench docs
+
+/// Env-derived commit / date stamps (CI injects `GITHUB_SHA`; local runs
+/// can set `MUTRANSFER_COMMIT` / `MUTRANSFER_DATE`, else "unknown" — the
+/// doc stays byte-deterministic for a given env).
+fn env_stamp(keys: &[&str]) -> String {
+    for k in keys {
+        if let Ok(v) = std::env::var(k) {
+            if !v.is_empty() {
+                return v;
+            }
+        }
+    }
+    "unknown".to_string()
+}
+
+/// The host identity a bench number is only comparable within.
+pub fn machine_fingerprint() -> Json {
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    Json::from_pairs(vec![
+        ("arch", jstr(std::env::consts::ARCH)),
+        ("os", jstr(std::env::consts::OS)),
+        ("cores", jnum(cores as f64)),
+    ])
+}
+
+/// Where `BENCH_<name>.json` documents land: `BENCH_OUT_DIR` or
+/// `results/bench/`.
+pub fn bench_out_dir() -> PathBuf {
+    match std::env::var("BENCH_OUT_DIR") {
+        Ok(d) if !d.is_empty() => PathBuf::from(d),
+        _ => crate::results_dir().join("bench"),
+    }
+}
+
+/// One named measurement in a bench document.
+pub struct BenchRow {
+    pub name: String,
+    pub value: f64,
+    pub unit: String,
+    pub higher_is_better: bool,
+}
+
+/// The shared machine-readable writer every `benches/*.rs` routes its
+/// headline rows through (schema in DESIGN.md §13).
+pub struct BenchDoc {
+    bench: String,
+    rows: Vec<BenchRow>,
+}
+
+impl BenchDoc {
+    pub fn new(bench: &str) -> BenchDoc {
+        BenchDoc { bench: bench.to_string(), rows: Vec::new() }
+    }
+
+    /// Append a named row.  `higher_is_better=false` rows (latencies,
+    /// overhead percentages) are the ones `bench_diff` gates on.
+    pub fn row(&mut self, name: &str, value: f64, unit: &str, higher_is_better: bool) -> &mut Self {
+        self.rows.push(BenchRow {
+            name: name.to_string(),
+            value,
+            unit: unit.to_string(),
+            higher_is_better,
+        });
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| {
+                Json::from_pairs(vec![
+                    ("name", jstr(&r.name)),
+                    ("value", jnum(r.value)),
+                    ("unit", jstr(&r.unit)),
+                    ("higher_is_better", Json::Bool(r.higher_is_better)),
+                ])
+            })
+            .collect();
+        Json::from_pairs(vec![
+            ("schema_version", jnum(SCHEMA_VERSION)),
+            ("bench", jstr(&self.bench)),
+            ("commit", jstr(&env_stamp(&["MUTRANSFER_COMMIT", "GITHUB_SHA"]))),
+            ("date", jstr(&env_stamp(&["MUTRANSFER_DATE", "SOURCE_DATE_EPOCH"]))),
+            ("machine", machine_fingerprint()),
+            ("rows", Json::Arr(rows)),
+        ])
+    }
+
+    /// Atomic-publish `BENCH_<name>.json` into [`bench_out_dir`],
+    /// returning the path written.
+    pub fn finish(&self) -> Result<PathBuf> {
+        let dir = bench_out_dir();
+        std::fs::create_dir_all(&dir)
+            .with_context(|| format!("creating bench dir {}", dir.display()))?;
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        write_atomic(&path, self.to_json().to_string().as_bytes())?;
+        Ok(path)
+    }
+}
+
+// ------------------------------------------------------------- bench diff
+
+/// One row's old-vs-new comparison.
+pub struct DiffRow {
+    pub name: String,
+    pub unit: String,
+    pub old: f64,
+    pub new: f64,
+    /// Percent change new vs old, signed (positive = value went up).
+    pub delta_pct: f64,
+    pub higher_is_better: bool,
+    /// Moved more than the threshold in this row's *bad* direction.
+    pub regressed: bool,
+}
+
+pub struct BenchDiff {
+    pub bench: String,
+    /// Machine fingerprints agree (arch + os + cores); on mismatch the
+    /// caller downgrades to report-only unless `BENCH_DIFF_FORCE=1`.
+    pub machine_match: bool,
+    pub threshold_pct: f64,
+    pub rows: Vec<DiffRow>,
+    /// Row names present in only one of the two documents.
+    pub missing: Vec<String>,
+}
+
+impl BenchDiff {
+    /// Rows that fail the gate: `higher_is_better=false` rows past the
+    /// threshold (throughput rows report but never gate — §13).
+    pub fn gate_failures(&self) -> Vec<&DiffRow> {
+        self.rows.iter().filter(|r| r.regressed && !r.higher_is_better).collect()
+    }
+
+    pub fn render(&self) -> String {
+        let mut t = Table::new(
+            &format!("bench-diff: {} (gate >{:.0}% on lower-is-better rows)", self.bench, self.threshold_pct),
+            &["row", "old", "new", "delta %", "dir", "verdict"],
+        );
+        for r in &self.rows {
+            t.row(vec![
+                format!("{} [{}]", r.name, r.unit),
+                format!("{:.4}", r.old),
+                format!("{:.4}", r.new),
+                format!("{:+.1}", r.delta_pct),
+                if r.higher_is_better { "up".into() } else { "down".into() },
+                if r.regressed {
+                    if r.higher_is_better { "regressed (report-only)".into() } else { "REGRESSED".into() }
+                } else {
+                    "ok".to_string()
+                },
+            ]);
+        }
+        let mut out = t.render();
+        for m in &self.missing {
+            out.push_str(&format!("  (row {m:?} present in only one document)\n"));
+        }
+        if !self.machine_match {
+            out.push_str("  machine fingerprints differ: diff is report-only (BENCH_DIFF_FORCE=1 to gate anyway)\n");
+        }
+        out
+    }
+}
+
+fn rows_by_name(doc: &Json) -> Vec<(String, f64, String, bool)> {
+    let mut out = Vec::new();
+    let Some(rows) = doc.get("rows").and_then(|r| r.as_arr()) else {
+        return out;
+    };
+    for r in rows {
+        let (Some(name), Some(value)) = (
+            r.get("name").and_then(|v| v.as_str()),
+            r.get("value").and_then(|v| v.as_f64()),
+        ) else {
+            continue;
+        };
+        let unit = r.get("unit").and_then(|v| v.as_str()).unwrap_or("").to_string();
+        let hib = r.get("higher_is_better").and_then(|v| v.as_bool()).unwrap_or(false);
+        out.push((name.to_string(), value, unit, hib));
+    }
+    out
+}
+
+/// Compare two [`BenchDoc`] JSON documents row by row.  A row regresses
+/// when it moves more than `threshold_pct` in its bad direction (up for
+/// latency-like rows, down for throughput-like rows).
+pub fn bench_diff(old: &Json, new: &Json, threshold_pct: f64) -> BenchDiff {
+    let bench = new
+        .get("bench")
+        .and_then(|b| b.as_str())
+        .or_else(|| old.get("bench").and_then(|b| b.as_str()))
+        .unwrap_or("?")
+        .to_string();
+    let machine_match = match (old.get("machine"), new.get("machine")) {
+        (Some(a), Some(b)) => a == b,
+        _ => false,
+    };
+    let old_rows = rows_by_name(old);
+    let new_rows = rows_by_name(new);
+    let mut rows = Vec::new();
+    let mut missing = Vec::new();
+    for (name, old_v, unit, hib) in &old_rows {
+        let Some((_, new_v, _, _)) = new_rows.iter().find(|(n, ..)| n == name) else {
+            missing.push(name.clone());
+            continue;
+        };
+        let delta_pct = if old_v.abs() > 0.0 {
+            100.0 * (new_v - old_v) / old_v.abs()
+        } else if *new_v == 0.0 {
+            0.0
+        } else {
+            f64::INFINITY
+        };
+        let regressed = if *hib {
+            delta_pct < -threshold_pct
+        } else {
+            delta_pct > threshold_pct
+        };
+        rows.push(DiffRow {
+            name: name.clone(),
+            unit: unit.clone(),
+            old: *old_v,
+            new: *new_v,
+            delta_pct,
+            higher_is_better: *hib,
+            regressed,
+        });
+    }
+    for (name, ..) in &new_rows {
+        if !old_rows.iter().any(|(n, ..)| n == name) {
+            missing.push(name.clone());
+        }
+    }
+    BenchDiff { bench, machine_match, threshold_pct, rows, missing }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::profile::{KindStat, ShapeStat, ThreadStats};
+
+    fn synthetic_snapshot() -> Snapshot {
+        let mut kinds = std::collections::BTreeMap::new();
+        kinds.insert("gemm", KindStat { count: 12, total_ns: 6_000_000, self_ns: 6_000_000 });
+        kinds.insert("optimizer", KindStat { count: 2, total_ns: 1_000_000, self_ns: 1_000_000 });
+        kinds.insert(
+            "train_step",
+            KindStat { count: 2, total_ns: 10_000_000, self_ns: 3_000_000 },
+        );
+        let threads = vec![(
+            1u64,
+            ThreadStats { label: Some("exec-0".into()), kinds },
+        )];
+        let shapes = vec![(
+            (64u32, 64u32, 64u32),
+            ShapeStat {
+                count: 12,
+                total_ns: 6_000_000,
+                flops: 12.0 * crate::model::flops::flops_for_shape(64, 64, 64),
+            },
+        )];
+        Snapshot { threads, shapes }
+    }
+
+    #[test]
+    fn shares_sum_to_100() {
+        let snap = synthetic_snapshot();
+        let r = profile_report(&snap, &ProfileCtx { variant: None, steps: None, peak_flops: 1e9 });
+        let phases = r.json.req("phases").as_arr().unwrap();
+        let sum: f64 = phases
+            .iter()
+            .map(|p| p.req("share_pct").as_f64().unwrap())
+            .sum();
+        assert!((sum - 100.0).abs() < 1.0, "shares sum {sum}");
+        // "other" absorbs the train_step self time
+        let other = phases.iter().find(|p| p.req("name").as_str() == Some("other")).unwrap();
+        assert!(other.req("share_pct").as_f64().unwrap() > 0.0);
+        // shape carries a positive GFLOP/s and flops from the shared helper
+        let sh = &r.json.req("shapes").as_arr().unwrap()[0];
+        assert!(sh.req("gflops").as_f64().unwrap() > 0.0);
+        assert_eq!(
+            sh.req("flops").as_f64().unwrap(),
+            12.0 * crate::model::flops::flops_for_shape(64, 64, 64)
+        );
+        assert!(r.text.contains("gemm"));
+    }
+
+    #[test]
+    fn profile_json_roundtrips() {
+        let snap = synthetic_snapshot();
+        let r = profile_report(&snap, &ProfileCtx { variant: None, steps: Some(2), peak_flops: 0.0 });
+        let back = crate::util::json::parse(&r.json.to_string()).unwrap();
+        assert_eq!(back.req("schema_version").as_f64(), Some(1.0));
+        assert_eq!(back.req("steps").as_usize(), Some(2));
+        assert_eq!(back, r.json);
+    }
+
+    #[test]
+    fn bench_doc_schema_and_diff_gate() {
+        let mut old = BenchDoc::new("unit_test");
+        old.row("step_ms", 10.0, "ms", false).row("throughput", 100.0, "req_s", true);
+        let oldj = crate::util::json::parse(&old.to_json().to_string()).unwrap();
+        assert_eq!(oldj.req("bench").as_str(), Some("unit_test"));
+        assert_eq!(oldj.req("schema_version").as_f64(), Some(1.0));
+        assert!(oldj.req("machine").get("arch").is_some());
+
+        // 20% slowdown on a lower-is-better row must gate
+        let mut slow = BenchDoc::new("unit_test");
+        slow.row("step_ms", 12.0, "ms", false).row("throughput", 100.0, "req_s", true);
+        let d = bench_diff(&oldj, &slow.to_json(), 10.0);
+        assert!(d.machine_match);
+        assert_eq!(d.gate_failures().len(), 1);
+        assert_eq!(d.gate_failures()[0].name, "step_ms");
+        assert!(d.render().contains("REGRESSED"));
+
+        // 20% throughput drop reports but never gates
+        let mut tput = BenchDoc::new("unit_test");
+        tput.row("step_ms", 10.0, "ms", false).row("throughput", 80.0, "req_s", true);
+        let d = bench_diff(&oldj, &tput.to_json(), 10.0);
+        assert!(d.gate_failures().is_empty());
+        assert!(d.rows.iter().any(|r| r.regressed && r.higher_is_better));
+
+        // within-band moves pass
+        let mut ok = BenchDoc::new("unit_test");
+        ok.row("step_ms", 10.5, "ms", false).row("throughput", 97.0, "req_s", true);
+        let d = bench_diff(&oldj, &ok.to_json(), 10.0);
+        assert!(d.gate_failures().is_empty());
+        assert!(d.missing.is_empty());
+    }
+
+    #[test]
+    fn bench_diff_flags_machine_mismatch_and_missing_rows() {
+        let mut a = BenchDoc::new("unit_test");
+        a.row("x", 1.0, "ms", false);
+        let mut aj = a.to_json();
+        aj.set("machine", Json::from_pairs(vec![("arch", jstr("other-arch"))]));
+        let mut b = BenchDoc::new("unit_test");
+        b.row("y", 2.0, "ms", false);
+        let d = bench_diff(&aj, &b.to_json(), 10.0);
+        assert!(!d.machine_match);
+        assert_eq!(d.missing.len(), 2);
+        assert!(d.render().contains("report-only"));
+    }
+
+    #[test]
+    fn bench_doc_finish_writes_under_out_dir() {
+        let dir = std::env::temp_dir().join("mutransfer_bench_doc_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        // env var is process-global: restore to keep other tests honest
+        let prev = std::env::var("BENCH_OUT_DIR").ok();
+        std::env::set_var("BENCH_OUT_DIR", &dir);
+        let mut doc = BenchDoc::new("finish_test");
+        doc.row("v", 3.0, "ms", false);
+        let path = doc.finish().unwrap();
+        match prev {
+            Some(p) => std::env::set_var("BENCH_OUT_DIR", p),
+            None => std::env::remove_var("BENCH_OUT_DIR"),
+        }
+        assert_eq!(path, dir.join("BENCH_finish_test.json"));
+        let s = std::fs::read_to_string(&path).unwrap();
+        let j = crate::util::json::parse(&s).unwrap();
+        assert_eq!(j.req("rows").as_arr().unwrap().len(), 1);
+        assert!(!dir.join(".BENCH_finish_test.json.tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -290,6 +290,7 @@ impl BackendSession for SgdNetSession {
         let (x, y) = self.batch(data)?;
         let (loss, grads) = self.fwd_bwd(&x, &y, hp_vec, true);
         let grads = grads.expect("train step computes grads");
+        let _sp = crate::obs::trace::span("optimizer");
         let (momentum, wd) = (hp_vec[1], hp_vec[2]);
         for i in 0..self.params.len() {
             let gm = if gmul.is_empty() { 1.0 } else { gmul[i] };

@@ -208,7 +208,7 @@ pub fn mm_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: usize
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    let _sp = crate::obs::trace::span("gemm");
+    let _sp = crate::obs::trace::span_mnk("gemm", m, k, n);
     PACK_PANEL.with(|pp| {
         let mut panel = pp.borrow_mut();
         for k0 in (0..k).step_by(KC) {
@@ -235,7 +235,8 @@ pub fn mm_tn_into(c: &mut [f32], a: &[f32], b: &[f32], k: usize, m: usize, n: us
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
     debug_assert_eq!(c.len(), m * n);
-    let _sp = crate::obs::trace::span("gemm");
+    // effective output-rows/contraction/output-cols — FLOPs = 2·m·k·n
+    let _sp = crate::obs::trace::span_mnk("gemm", m, k, n);
     PACK_AT.with(|pa| {
         PACK_PANEL.with(|pp| {
             let mut at = pa.borrow_mut();
@@ -266,7 +267,7 @@ pub fn mm_nt_into(c: &mut [f32], a: &[f32], b: &[f32], m: usize, k: usize, n: us
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
     debug_assert_eq!(c.len(), m * n);
-    let _sp = crate::obs::trace::span("gemm");
+    let _sp = crate::obs::trace::span_mnk("gemm", m, k, n);
     PACK_PANEL.with(|pp| {
         let mut panel = pp.borrow_mut();
         for k0 in (0..k).step_by(KC) {

@@ -553,6 +553,7 @@ impl BackendSession for TfmSession {
             Vec::new()
         };
         let grads = self.backward(&fwd, hp_vec);
+        let _sp = crate::obs::trace::span("optimizer");
         let (b1, b2, eps, wd, t) = (hp_vec[3], hp_vec[4], hp_vec[5], hp_vec[6], hp_vec[7]);
         for i in 0..self.params.len() {
             let gm = if gmul.is_empty() { 1.0 } else { gmul[i] };

@@ -9,11 +9,18 @@
 //! | GET    | /jobs/:id/journal     | 200 / 404         | last trial records, NDJSON |
 //! | DELETE | /jobs/:id             | 200 / 404 / 409   | `{"id","state"}`           |
 //! | GET    | /jobs/:id/events      | 200 / 404 (SSE)   | `id:`/`data:` event frames |
-//! | GET    | /jobs/:id/metrics     | 200 / 404         | μ-coordinate samples       |
+//! | GET    | /jobs/:id/metrics     | 200 / 400 / 404   | μ-coordinate samples       |
 //! | GET    | /hp?width=&depth=&batch= | 200 / 400 / 404 | best transferred HPs     |
 //! | GET    | /healthz              | 200 / 503         | uptime, job counts, slots  |
 //! | GET    | /metrics              | 200               | Prometheus text exposition |
 //! | GET    | /debug/metrics        | 200               | same registry, as JSON     |
+//! | GET    | /debug/profile        | 200               | perf attribution since boot|
+//!
+//! `GET /jobs/:id/metrics` without query params answers the live ring
+//! (last 256 samples) or the final `coords.json`; `?after=N` pages the
+//! full persisted NDJSON history from step `N` inclusive — a full page
+//! carries `next_after`, the cursor for the next call (how
+//! `mutransfer watch --coords` replays history past the ring cap).
 //!
 //! `GET /hp` query params are each optional and echoed back (μP transfer
 //! makes the answer shape-independent); an *unparseable* value
@@ -55,6 +62,7 @@ fn route_idx(method: &str, segs: &[&str]) -> usize {
         (_, ["healthz"]) => metrics::ROUTE_HEALTHZ,
         (_, ["metrics"]) => metrics::ROUTE_METRICS,
         (_, ["debug", "metrics"]) => metrics::ROUTE_DEBUG_METRICS,
+        (_, ["debug", "profile"]) => metrics::ROUTE_DEBUG_PROFILE,
         ("POST", ["jobs"]) => metrics::ROUTE_JOBS_CREATE,
         (_, ["jobs"]) => metrics::ROUTE_JOBS_LIST,
         ("DELETE", ["jobs", _]) => metrics::ROUTE_JOB_DELETE,
@@ -66,6 +74,13 @@ fn route_idx(method: &str, segs: &[&str]) -> usize {
         (_, ["hp"]) => metrics::ROUTE_HP,
         _ => metrics::ROUTE_OTHER,
     }
+}
+
+/// The scalar-FMA roofline, measured once per process — the microbench
+/// burns a few milliseconds, fine at boot-or-first-poll, not per poll.
+fn peak_cached() -> f64 {
+    static PEAK: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
+    *PEAK.get_or_init(crate::obs::profile::measured_peak_flops)
 }
 
 /// Dispatch one request; returns whether the connection may be reused
@@ -102,6 +117,18 @@ pub fn handle(
         ),
         ("GET", ["debug", "metrics"]) => {
             http::respond_json(w, 200, &metrics::render_json(), keep)
+        }
+        ("GET", ["debug", "profile"]) => {
+            // perf attribution aggregated since boot (profile::enable()
+            // at daemon start), with per-executor-slot thread labels
+            let snap = crate::obs::profile::snapshot();
+            let ctx = crate::report::perf::ProfileCtx {
+                variant: None,
+                steps: None,
+                peak_flops: peak_cached(),
+            };
+            let rep = crate::report::perf::profile_report(&snap, &ctx);
+            http::respond_json(w, 200, &rep.json, keep)
         }
         ("POST", ["jobs"]) => match json::parse(&req.body)
             .map_err(|e| e.to_string())
@@ -234,14 +261,35 @@ pub fn handle(
             metrics::route(idx).record(t0);
             return r;
         }
-        ("GET", ["jobs", id, "metrics"]) => match reg.coord_metrics(id) {
-            Some(samples) => http::respond_json(
-                w,
-                200,
-                &Json::from_pairs(vec![("id", jstr(id)), ("samples", samples)]),
-                keep,
-            ),
-            None => http::respond_json(w, 404, &error_json(404, "no such job"), keep),
+        ("GET", ["jobs", id, "metrics"]) => match req.query.get("after") {
+            // ?after=N pages the full persisted history (coords.ndjson)
+            // from step N inclusive; without it, the live ring / final
+            // coords.json snapshot answers as before.  Same strictness
+            // rule as /hp: a malformed cursor is a 400, not the default.
+            Some(v) => match v.parse::<u64>() {
+                Ok(after) => match reg.coord_page(id, after) {
+                    Some(page) => http::respond_json(w, 200, &page, keep),
+                    None => http::respond_json(w, 404, &error_json(404, "no such job"), keep),
+                },
+                Err(_) => http::respond_json(
+                    w,
+                    400,
+                    &error_json(
+                        400,
+                        &format!("query param after must be a non-negative integer, got {v:?}"),
+                    ),
+                    keep,
+                ),
+            },
+            None => match reg.coord_metrics(id) {
+                Some(samples) => http::respond_json(
+                    w,
+                    200,
+                    &Json::from_pairs(vec![("id", jstr(id)), ("samples", samples)]),
+                    keep,
+                ),
+                None => http::respond_json(w, 404, &error_json(404, "no such job"), keep),
+            },
         },
         ("GET", ["hp"]) => {
             // strict parse: a present-but-malformed dimension is a 400.
@@ -276,7 +324,7 @@ pub fn handle(
         (_, ["jobs"]) | (_, ["jobs", _]) | (_, ["jobs", _, "results"])
         | (_, ["jobs", _, "journal"]) | (_, ["jobs", _, "events"])
         | (_, ["jobs", _, "metrics"]) | (_, ["hp"]) | (_, ["healthz"])
-        | (_, ["metrics"]) | (_, ["debug", "metrics"]) => {
+        | (_, ["metrics"]) | (_, ["debug", "metrics"]) | (_, ["debug", "profile"]) => {
             http::respond_json(w, 405, &error_json(405, "method not allowed"), keep)
         }
         _ => http::respond_json(w, 404, &error_json(404, "no such route"), keep),

@@ -894,6 +894,21 @@ impl Registry {
     /// Ring-buffer one μ-coordinate sample for a live job (called by the
     /// executor's [`CoordCapture`] sink).
     pub fn record_coords(&self, id: &str, sample: Json) {
+        // Full-history append: the in-memory ring caps at
+        // [`coords::RING_CAP`], so `GET /jobs/:id/metrics?after=` pages
+        // over this NDJSON file instead.  Line-framed append-only
+        // telemetry is best-effort by design — the paging reader skips a
+        // torn tail, and rewriting the whole file per sample would turn
+        // O(1) appends into O(n²) churn.
+        // mutlint: allow(atomic-write, "append-only NDJSON telemetry log; paging readers skip torn tails, durable artifacts all stay on write_atomic")
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.job_dir(id).join("coords.ndjson"))
+        {
+            use std::io::Write as _;
+            let _ = writeln!(f, "{}", sample.to_string());
+        }
         let mut m = self.coords.lock().unwrap_or_else(|e| e.into_inner());
         m.entry(id.to_string()).or_default().push(sample);
     }
@@ -915,6 +930,43 @@ impl Registry {
         let text = std::fs::read_to_string(self.job_dir(id).join("coords.json"))
             .unwrap_or_default();
         Some(json::parse(&text).unwrap_or(Json::Arr(Vec::new())))
+    }
+
+    /// `GET /jobs/:id/metrics?after=N`: one page of the *full* persisted
+    /// coordinate history (`coords.ndjson`), starting at step `after`
+    /// inclusive — the ring above forgets anything older than
+    /// [`coords::RING_CAP`] samples, this file does not.  At most
+    /// `RING_CAP` samples per page; a full page carries `next_after`
+    /// (the cursor for the next call), a short one is the end of history
+    /// so far.  Torn tail lines (a crash mid-append) are skipped, never
+    /// an error.  `None` = unknown job.
+    pub fn coord_page(&self, id: &str, after: u64) -> Option<Json> {
+        self.state(id)?;
+        let text = std::fs::read_to_string(self.job_dir(id).join("coords.ndjson"))
+            .unwrap_or_default();
+        let mut samples = Vec::new();
+        let mut last_step = 0u64;
+        let mut full = false;
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let Ok(j) = json::parse(line) else { continue };
+            let Some(step) = j.get("step").and_then(|s| s.as_f64()) else { continue };
+            let step = step as u64;
+            if step < after {
+                continue;
+            }
+            if samples.len() >= coords::RING_CAP {
+                full = true;
+                break;
+            }
+            last_step = last_step.max(step);
+            samples.push(j);
+        }
+        let mut out =
+            Json::from_pairs(vec![("id", jstr(id)), ("samples", Json::Arr(samples))]);
+        if full {
+            out.set("next_after", jnum((last_step + 1) as f64));
+        }
+        Some(out)
     }
 
     /// Raw `results.json` bytes for a `done` job (`None` = not done yet
@@ -1334,6 +1386,9 @@ impl Daemon {
         // live μ-coordinate telemetry is on for every daemon-run job
         // (offline CLI runs stay opt-in, keeping their output byte-stable)
         coords::set_enabled(true);
+        // perf attribution aggregates for the daemon's whole lifetime —
+        // streaming fold, bounded state — served at GET /debug/profile
+        crate::obs::profile::enable();
         let slots = cfg.exec_slots.max(1);
         registry.exec_expected.store(slots, Ordering::SeqCst);
         metrics::EXEC_SLOTS_TOTAL.set(slots as i64);
@@ -1349,6 +1404,8 @@ impl Daemon {
                 // counted live before spawn (not inside the thread) so a
                 // healthz probe racing startup never sees live < expected
                 let _live = ExecLive(reg.clone());
+                // per-slot attribution in GET /debug/profile
+                crate::obs::profile::label_current_thread(&format!("exec-{slot}"));
                 // each slot owns its Runtime: backends need not be Sync.
                 // Daemon::start already validated the artifacts path; if
                 // it became unloadable since, say so instead of degrading

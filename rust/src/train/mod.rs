@@ -623,6 +623,7 @@ fn eval<S: BackendSession + ?Sized>(
     data: &dyn DataSource,
     hp_v: &[f32; 8],
 ) -> Result<f64> {
+    let _sp = trace::span("eval");
     let mut acc = 0.0;
     for b in 0..spec.eval_batches {
         let batch = data.batch(Split::Val, b);

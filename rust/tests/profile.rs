@@ -1,0 +1,133 @@
+//! Perf-attribution profiler acceptance tests (DESIGN.md §13):
+//!
+//! 1. **Attribution is deterministic** — two identical profiled runs
+//!    produce identical span counts, identical GEMM shape inventories,
+//!    and bitwise-identical span-attributed FLOPs (timings differ, the
+//!    *attribution structure* cannot).
+//! 2. **One FLOPs accounting source** — span-summed GEMM FLOPs over the
+//!    window equal `steps × model::flops::step_gemm_flops` within 1%.
+//! 3. **The report is conformant** — phase shares sum to 100±1%,
+//!    per-shape GFLOP/s is populated, and the JSON document survives a
+//!    parse round-trip.
+//!
+//! The profiler enable flag and aggregate are process-global, so this
+//! binary holds a single test function (the unit tests in
+//! `obs/profile.rs` run in a different process).
+
+use mutransfer::data::source_for;
+use mutransfer::model::flops;
+use mutransfer::model::BaseShape;
+use mutransfer::mup::{HyperParams, Optimizer, Parametrization};
+use mutransfer::obs::profile;
+use mutransfer::report::perf::{profile_report, ProfileCtx};
+use mutransfer::runtime::Runtime;
+use mutransfer::train::{run, RunSpec};
+
+const VARIANT: &str = "tfm_post_w32_d2";
+const STEPS: usize = 4;
+
+fn profiled_run(rt: &Runtime) -> (profile::Snapshot, usize) {
+    let hp = HyperParams { lr: 2f64.powi(-7), ..HyperParams::default() };
+    let mut spec = RunSpec::new(
+        VARIANT,
+        Parametrization::mup(Optimizer::Adam),
+        hp,
+        BaseShape::SameAsTarget,
+    );
+    spec.steps = STEPS;
+    spec.seed = 7;
+    // no eval in the window: eval forward passes issue GEMMs outside the
+    // per-train-step inventory the cross-check below compares against
+    spec.eval_every = 0;
+    let v = rt.manifest().get(VARIANT).unwrap();
+    let data = source_for(v, 13);
+    profile::reset();
+    profile::enable();
+    let r = run(rt, &spec, data.as_ref()).unwrap();
+    profile::disable();
+    (profile::snapshot(), r.steps_done)
+}
+
+#[test]
+fn profiled_run_attribution_is_deterministic_and_consistent() {
+    let rt = Runtime::native();
+    let v = rt.manifest().get(VARIANT).unwrap().clone();
+
+    let (snap1, steps1) = profiled_run(&rt);
+    let (snap2, steps2) = profiled_run(&rt);
+    assert_eq!(steps1, STEPS);
+    assert_eq!(steps2, STEPS);
+
+    // ---- determinism: same seed, same attribution structure ------------
+    let k1 = snap1.kinds_merged();
+    let k2 = snap2.kinds_merged();
+    assert_eq!(
+        k1.keys().collect::<Vec<_>>(),
+        k2.keys().collect::<Vec<_>>(),
+        "span kind taxonomy must match run to run"
+    );
+    for (name, a) in &k1 {
+        let b = k2.get(*name).copied().unwrap();
+        assert_eq!(a.count, b.count, "span count for {name}");
+    }
+    let structure = |s: &profile::Snapshot| -> Vec<((u32, u32, u32), u64, u64)> {
+        s.shapes
+            .iter()
+            .map(|(shape, st)| (*shape, st.count, st.flops.to_bits()))
+            .collect()
+    };
+    assert_eq!(
+        structure(&snap1),
+        structure(&snap2),
+        "gemm shape inventory must be bitwise deterministic"
+    );
+    assert_eq!(snap1.gemm_flops().to_bits(), snap2.gemm_flops().to_bits());
+
+    // the train path is covered
+    assert!(k1.contains_key("train_step"), "kinds: {:?}", k1.keys());
+    assert!(k1.contains_key("gemm"));
+    assert!(k1.contains_key("optimizer"));
+    assert!(!snap1.shapes.is_empty());
+
+    // ---- single FLOPs source: spans vs model/flops.rs within 1% --------
+    let expected = flops::step_gemm_flops(&v) * STEPS as f64;
+    let got = snap1.gemm_flops();
+    let rel = (got - expected).abs() / expected;
+    assert!(
+        rel < 0.01,
+        "span-attributed {got:.3e} FLOPs vs {expected:.3e} from the inventory ({:.2}% apart)",
+        rel * 100.0
+    );
+
+    // ---- report conformance --------------------------------------------
+    let ctx = ProfileCtx {
+        variant: Some(&v),
+        steps: Some(steps1),
+        peak_flops: profile::measured_peak_flops(),
+    };
+    let rep = profile_report(&snap1, &ctx);
+    let phases = rep.json.req("phases").as_arr().unwrap();
+    let sum: f64 = phases
+        .iter()
+        .map(|p| p.req("share_pct").as_f64().unwrap())
+        .sum();
+    assert!((sum - 100.0).abs() <= 1.0, "phase shares sum to {sum}%");
+    let shapes = rep.json.req("shapes").as_arr().unwrap();
+    assert!(!shapes.is_empty());
+    assert!(
+        shapes.iter().all(|s| s.req("gflops").as_f64().unwrap() > 0.0),
+        "every shape row carries an achieved GFLOP/s"
+    );
+    let agreement = rep.json.req("gemm").req("agreement_pct").as_f64().unwrap();
+    assert!(
+        (agreement - 100.0).abs() <= 1.0,
+        "recorded agreement {agreement}% out of band"
+    );
+    assert!(rep.json.req("gemm").req("peak_gflops").as_f64().unwrap() > 0.0);
+
+    // JSON round-trips through the in-tree parser unchanged
+    let back = mutransfer::util::json::parse(&rep.json.to_string()).unwrap();
+    assert_eq!(back, rep.json);
+
+    profile::reset();
+}
